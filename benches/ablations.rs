@@ -1,0 +1,75 @@
+//! Ablations over the design choices DESIGN.md calls out, on the
+//! Assumption-1 synthetic problem (fast, PJRT-free):
+//!
+//!   1. deterministic-nearest log quant + EF (the paper)  vs
+//!      unbiased stochastic log quant, no EF               vs
+//!      QSGD uniform levels, no EF          — same bit-width each;
+//!   2. error feedback on/off for the biased quantizer;
+//!   3. quantization codebook: log (power-of-two) vs uniform levels.
+//!
+//!   cargo bench --bench ablations
+
+use qadam::optim::{LrSchedule, QAdamEf, ThetaSchedule, WorkerOpt};
+use qadam::ps::transport::LocalBus;
+use qadam::ps::worker::{SimGradSource, Worker};
+use qadam::ps::ParameterServer;
+use qadam::quant::{Compressor, LogQuant, Qsgd, StochasticLogQuant};
+use qadam::sim::StochasticProblem;
+
+const DIM: usize = 256;
+const STEPS: u64 = 800;
+
+fn run(label: &str, comp: Box<dyn Compressor>, ef: bool) -> (f32, f64) {
+    let problem = StochasticProblem::with_offgrid_minimum(DIM, 0.3, 7);
+    let bits = comp.bits_per_element();
+    let mut ps = ParameterServer::new(problem.x0(), None);
+    let mut ws: Vec<Worker> = (0..4)
+        .map(|i| {
+            let opt = QAdamEf::new(
+                DIM,
+                match comp.codec() {
+                    qadam::quant::CodecId::Qsgd => Box::new(Qsgd::new(3)) as Box<dyn Compressor>,
+                    _ if comp.name().contains("stochastic") => Box::new(StochasticLogQuant::new(2)),
+                    _ => Box::new(LogQuant::new(2)),
+                },
+                ef,
+                LrSchedule::InvSqrt { alpha: 0.5 },
+                ThetaSchedule::Anneal { theta: 0.9 },
+                0.9,
+                1e-8,
+            );
+            Worker::new(i, Box::new(opt), Box::new(SimGradSource { problem: problem.clone() }), 11)
+        })
+        .collect();
+    let bus = LocalBus::default();
+    let mut tail = 0.0f64;
+    let mut cnt = 0;
+    for t in 1..=STEPS {
+        let replies = {
+            let (b, _) = ps.broadcast(4);
+            bus.round(&b, &mut ws).unwrap()
+        };
+        ps.apply(&replies).unwrap();
+        if t >= STEPS / 2 {
+            tail += problem.grad_norm_sq(ps.master()) as f64;
+            cnt += 1;
+        }
+    }
+    let g = (tail / cnt as f64) as f32;
+    println!("{label:<44} tail E||∇f||² = {g:.3e}   ({bits:.0} bits/elem)");
+    (g, bits)
+}
+
+fn main() {
+    println!("== ablations (dim {DIM}, 4 workers, {STEPS} steps) ==");
+    println!("-- biased-vs-unbiased at equal bits (3b) --");
+    let (det_ef, _) = run("log levels, deterministic nearest + EF (paper)", Box::new(LogQuant::new(2)), true);
+    let (stoch, _) = run("log levels, stochastic rounding, no EF", Box::new(StochasticLogQuant::new(2)), false);
+    let (qsgd, _) = run("uniform levels (QSGD-3), stochastic, no EF", Box::new(Qsgd::new(3)), false);
+    println!("-- error-feedback ablation (biased quantizer) --");
+    let (noef, _) = run("log levels, deterministic nearest, NO EF", Box::new(LogQuant::new(2)), false);
+    println!();
+    println!("paper choice vs unbiased-stochastic: {det_ef:.3e} vs {stoch:.3e} (lower is better)");
+    println!("paper choice vs QSGD uniform:        {det_ef:.3e} vs {qsgd:.3e}");
+    println!("EF on vs off:                        {det_ef:.3e} vs {noef:.3e}");
+}

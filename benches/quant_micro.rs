@@ -1,0 +1,59 @@
+//! Micro-benchmarks for the communication hot path: quantize, pack,
+//! decode for every codec, plus wire serialization.
+//!
+//!   cargo bench --bench quant_micro
+
+use qadam::quant::{seeded_rng, Blockwise, Compressor, Identity, LogQuant, TernGrad, WQuant};
+use qadam::util::bench::run;
+use qadam::util::DetRng;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = DetRng::seed_stream(seed, 0);
+    (0..n).map(|_| r.gen_normal() * 0.01).collect()
+}
+
+fn main() {
+    println!("== quant_micro (sizes: 64Ki and 1Mi f32) ==");
+    for &n in &[1usize << 16, 1 << 20] {
+        let u = randv(n, 1);
+        let bytes = n * 4;
+        let mut q = vec![0.0f32; n];
+
+        for (name, comp) in [
+            ("logquant kg=2", Box::new(LogQuant::new(2)) as Box<dyn Compressor>),
+            ("logquant kg=8", Box::new(LogQuant::new(8))),
+            ("terngrad", Box::new(TernGrad)),
+            ("blockwise 4096", Box::new(Blockwise::new(4096))),
+            ("wquant kx=6", Box::new(WQuant::new(6))),
+            ("identity", Box::new(Identity)),
+        ] {
+            let mut rng = seeded_rng(0, 0);
+            let label = format!("{name} compress n={n}");
+            run(&label, Some(bytes), || {
+                let msg = comp.compress_into(&u, &mut q, &mut rng);
+                std::hint::black_box(msg.wire_bytes());
+            });
+            let mut rng = seeded_rng(0, 0);
+            let msg = comp.compress_into(&u, &mut q, &mut rng);
+            let mut out = vec![0.0f32; n];
+            let label = format!("{name} decompress n={n}");
+            run(&label, Some(bytes), || {
+                comp.decompress(&msg, &mut out);
+                std::hint::black_box(out[0]);
+            });
+        }
+
+        // wire serialization roundtrip
+        let lq = LogQuant::new(2);
+        let mut rng = seeded_rng(0, 0);
+        let msg = lq.compress_into(&u, &mut q, &mut rng);
+        run(&format!("wire to_bytes n={n}"), Some(msg.wire_bytes()), || {
+            std::hint::black_box(msg.to_bytes().len());
+        });
+        let b = msg.to_bytes();
+        run(&format!("wire from_bytes n={n}"), Some(b.len()), || {
+            std::hint::black_box(qadam::quant::WireMsg::from_bytes(&b).unwrap().n);
+        });
+        println!();
+    }
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench table2` regenerates Table 2 (ResNet-101 /
+//! CIFAR100 stand-in). Budget via QADAM_BENCH_STEPS (default 96 —
+//! orderings stable; EXPERIMENTS.md records the longer runs from
+//! examples/table_sweep.rs).
+
+fn main() {
+    let steps: u64 =
+        std::env::var("QADAM_BENCH_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(96);
+    qadam::coordinator::tables::run_table("table2", steps, 4, "results").unwrap();
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench table3` regenerates Table 3 (VGG16 / CIFAR10
+//! stand-in). See table2.rs.
+
+fn main() {
+    let steps: u64 =
+        std::env::var("QADAM_BENCH_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(96);
+    qadam::coordinator::tables::run_table("table3", steps, 4, "results").unwrap();
+}

@@ -1,0 +1,75 @@
+//! Worker-step benchmarks: the per-iteration cost of Alg. 3 on each
+//! engine, plus the PJRT model gradient (the other per-round cost).
+//!
+//!   cargo bench --bench worker_step
+
+use qadam::data::{Dataset, SyntheticVector, SyntheticVision};
+use qadam::models::{artifacts_dir, Manifest};
+use qadam::optim::{LrSchedule, QAdamEf, WorkerOpt};
+use qadam::quant::seeded_rng;
+use qadam::runtime::kernel::PjrtQAdam;
+use qadam::runtime::{KernelQAdam, ModelRuntime, Runtime};
+use qadam::util::bench::run;
+use qadam::util::DetRng;
+use std::rc::Rc;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = DetRng::seed_stream(seed, 0);
+    (0..n).map(|_| r.gen_normal() * 0.01).collect()
+}
+
+fn main() {
+    println!("== worker_step ==");
+    // Native fused QAdam step at model-scale dims.
+    for &n in &[1usize << 16, 1 << 20, 3_257_856] {
+        let g = randv(n, 3);
+        let mut opt = QAdamEf::paper_default(n, 2, LrSchedule::Const { alpha: 1e-3 });
+        let mut rng = seeded_rng(0, 0);
+        let mut t = 0u64;
+        run(&format!("native qadam step dim={n}"), Some(n * 4), || {
+            t += 1;
+            std::hint::black_box(opt.step(&g, t, 0, &mut rng).wire_bytes());
+        });
+    }
+
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+
+    // Pallas kernel step via PJRT.
+    let kernel = Rc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
+    for &n in &[1usize << 16, 1 << 20] {
+        let g = randv(n, 3);
+        let mut opt = PjrtQAdam::new(kernel.clone(), n, 2, LrSchedule::Const { alpha: 1e-3 });
+        let mut rng = seeded_rng(0, 0);
+        let mut t = 0u64;
+        run(&format!("pjrt qadam step dim={n}"), Some(n * 4), || {
+            t += 1;
+            std::hint::black_box(opt.step(&g, t, 0, &mut rng).wire_bytes());
+        });
+    }
+
+    // Model gradient graphs (per-round worker compute).
+    {
+        let model = ModelRuntime::load(&rt, &dir, &manifest, "mlp").unwrap();
+        let data = SyntheticVector::new(64, 10, 0);
+        let flat = model.init_flat(0);
+        let batch = data.train_batch(0, 0, model.meta.train_x.shape[0]);
+        run("pjrt grad mlp (batch 16)", None, || {
+            std::hint::black_box(model.loss_grad(&flat, &batch).unwrap().0);
+        });
+    }
+    {
+        let model = ModelRuntime::load(&rt, &dir, &manifest, "vgg_sim").unwrap();
+        let data = SyntheticVision::cifar10_sim(0);
+        let flat = model.init_flat(0);
+        let batch = data.train_batch(0, 0, model.meta.train_x.shape[0]);
+        run("pjrt grad vgg_sim (batch 16)", None, || {
+            std::hint::black_box(model.loss_grad(&flat, &batch).unwrap().0);
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Regenerate the paper's evaluation artifacts:
+//!
+//!   table2 — Test accuracy vs Comm vs Size on the CIFAR100 stand-in
+//!            (resnet_sim), QADAM vs TernGrad vs Zheng[44] vs WQuan.
+//!   table3 — the same grid on the CIFAR10 stand-in (vgg_sim).
+//!   fig3 / fig4 — the corresponding training curves (CSV per run).
+//!
+//!   cargo run --release --example table_sweep -- table3 \
+//!       [--steps N] [--workers N] [--outdir results/]
+//!
+//! `--steps` defaults to a CPU-budget 192; pass more for tighter
+//! accuracy estimates (the orderings are stable from ~150 steps).
+
+use anyhow::Result;
+use qadam::coordinator::tables::run_table;
+use qadam::util::Args;
+
+fn main() -> Result<()> {
+    let a = Args::parse_env()?;
+    let which = a.subcommand.clone().unwrap_or_else(|| "table3".into());
+    let steps = a.get("steps", 192u64)?;
+    let workers = a.get("workers", 4usize)?;
+    let outdir = a.get_str("outdir", "results");
+    a.reject_unknown()?;
+    run_table(&which, steps, workers, &outdir)?;
+    Ok(())
+}

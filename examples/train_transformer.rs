@@ -1,0 +1,74 @@
+//! End-to-end driver (the mandated validation run): train a transformer
+//! LM on a synthetic Markov corpus with the full three-layer system —
+//! Rust parameter server + workers, PJRT-executed JAX fwd/bwd graphs,
+//! log-quantized Adam updates with error feedback — and log the loss
+//! curve.
+//!
+//!   cargo run --release --example train_transformer -- \
+//!       [--model transformer_small|transformer] [--steps N] [--workers N]
+//!       [--kg K] [--kx K] [--alpha A] [--engine native|pjrt] [--csv PATH]
+//!
+//! Defaults are sized so the run finishes in a few minutes on a laptop
+//! CPU while showing an unambiguous loss drop; `--model transformer`
+//! runs the 3.3M-parameter config.
+
+use qadam::coordinator::config::{Engine, ExperimentConfig, Method};
+use qadam::coordinator::Trainer;
+use qadam::optim::LrSchedule;
+use qadam::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse_env()?;
+    let model = a.get_str("model", "transformer_small");
+    let steps = a.get("steps", 1500u64)?;
+    let workers = a.get("workers", 4usize)?;
+    let kg: Option<u32> = Some(a.get("kg", 2u32)?);
+    let kx: Option<u32> = a.opt("kx")?;
+    let alpha = a.get("alpha", 3e-3f32)?;
+    let engine = match a.get_str("engine", "native").as_str() {
+        "pjrt" | "pjrt_kernel" => Engine::PjrtKernel,
+        _ => Engine::Native,
+    };
+    let csv = a.get_str("csv", "results/train_transformer.csv");
+    a.reject_unknown()?;
+
+    let cfg = ExperimentConfig {
+        model: model.clone(),
+        dataset: "text".into(),
+        method: Method::QAdam { kg, error_feedback: true },
+        kx,
+        workers,
+        batch: 8,
+        steps,
+        steps_per_epoch: 200,
+        lr: LrSchedule::ExpDecay { alpha, half_every: 4 },
+        engine,
+        seed: 0,
+        eval_every: (steps / 12).max(25),
+        eval_batches: 2,
+    };
+    let t0 = std::time::Instant::now();
+    let mut tr = Trainer::new(cfg)?;
+    let summary = tr.run()?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    println!("\n=== loss curve (t, train_loss, next-token acc) ===");
+    for r in &tr.log.rows {
+        println!("  t={:>5}  loss={:.4}  acc={:.2}%", r.t, r.train_loss, 100.0 * r.test_acc);
+    }
+    let first = tr.log.rows.first().map(|r| r.train_loss).unwrap_or(f32::NAN);
+    println!("\n{}", summary.table_row());
+    println!(
+        "loss {:.3} -> {:.3} over {} steps ({} workers, {:.0}s, {:.2} steps/s)",
+        first,
+        summary.final_loss,
+        steps,
+        workers,
+        secs,
+        steps as f64 / secs
+    );
+    let p = std::path::PathBuf::from(csv);
+    tr.log.write_csv(&p)?;
+    println!("curve written to {}", p.display());
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT exporter: lower every L2/L1 graph to HLO *text* + manifest.json.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Exports (all under ``artifacts/``):
+
+  grad_<model>.hlo.txt   (*params, x, y) -> (loss, *grads)
+  eval_<model>.hlo.txt   (*params, x)    -> (logits,)
+  qadam_step.hlo.txt     fused Pallas worker step over a flat CHUNK
+                         (m, v, g, e, alpha, beta, theta, eps, qlo)
+                         -> (m1, v1, qdelta, e1)
+  adam_step.hlo.txt      unquantized baseline step -> (m1, v1, delta)
+  wquant.hlo.txt         server weight quantizer (x, kx) -> (qx,)
+  manifest.json          shapes / param order / chunk metadata for rust
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+        (the Makefile drives this; it is a no-op for unchanged inputs
+        because make checks the timestamps.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile.kernels import qadam
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _shape_struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.int32 if dtype == "i32"
+                                else jnp.float32)
+
+
+def export_model(spec, outdir, manifest, selected):
+    entry = {
+        "params": [{"name": p.name, "shape": list(p.shape)}
+                   for p in spec.params],
+        "total_params": spec.total_params,
+        "train_x": {"shape": list(spec.train_x[0]), "dtype": spec.train_x[1]},
+        "train_y": {"shape": list(spec.train_y[0]), "dtype": spec.train_y[1]},
+        "eval_x": {"shape": list(spec.eval_x[0]), "dtype": spec.eval_x[1]},
+        "num_classes": spec.num_classes,
+        "kind": spec.kind,
+        "grad_artifact": f"grad_{spec.name}.hlo.txt",
+        "eval_artifact": f"eval_{spec.name}.hlo.txt",
+    }
+    manifest["models"][spec.name] = entry
+    if not selected:
+        return
+    params_struct = [_shape_struct(p.shape, "f32") for p in spec.params]
+    x = _shape_struct(*spec.train_x)
+    y = _shape_struct(*spec.train_y)
+    ex = _shape_struct(*spec.eval_x)
+
+    lowered = jax.jit(spec.grad_fn()).lower(*params_struct, x, y)
+    path = os.path.join(outdir, entry["grad_artifact"])
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"  {entry['grad_artifact']:32s} params={spec.total_params}")
+
+    lowered = jax.jit(spec.eval_fn()).lower(*params_struct, ex)
+    with open(os.path.join(outdir, entry["eval_artifact"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def export_optimizer(outdir, manifest):
+    chunk = qadam.CHUNK
+    vec = jax.ShapeDtypeStruct((chunk,), jnp.float32)
+    scal = jax.ShapeDtypeStruct((), jnp.float32)
+
+    lowered = jax.jit(qadam.qadam_step).lower(
+        vec, vec, vec, vec, scal, scal, scal, scal, scal)
+    with open(os.path.join(outdir, "qadam_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(qadam.adam_step).lower(
+        vec, vec, vec, scal, scal, scal, scal)
+    with open(os.path.join(outdir, "adam_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(qadam.wquant).lower(vec, scal)
+    with open(os.path.join(outdir, "wquant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    manifest["optimizer"] = {
+        "chunk": chunk,
+        "qadam_artifact": "qadam_step.hlo.txt",
+        "qadam_scalars": ["alpha", "beta", "theta", "eps", "qlo"],
+        "adam_artifact": "adam_step.hlo.txt",
+        "adam_scalars": ["alpha", "beta", "theta", "eps"],
+        "wquant_artifact": "wquant.hlo.txt",
+        "wquant_scalars": ["kx"],
+    }
+    print(f"  qadam_step/adam_step/wquant     chunk={chunk}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma list of models to lower, or 'all'/'none'. "
+                         "Manifest always covers all models.")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    wanted = (set(model_lib.MODELS) if args.models == "all"
+              else set() if args.models == "none"
+              else set(args.models.split(",")))
+    unknown = wanted - set(model_lib.MODELS)
+    if unknown:
+        raise SystemExit(f"unknown models: {sorted(unknown)}")
+
+    manifest = {"models": {}, "optimizer": {}}
+    print("AOT export:")
+    for name, spec in model_lib.MODELS.items():
+        export_model(spec, args.out, manifest, name in wanted)
+    export_optimizer(args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  manifest.json ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

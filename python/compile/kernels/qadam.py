@@ -1,0 +1,187 @@
+"""L1 Pallas kernels: the fused quantized-Adam worker step.
+
+The per-worker hot spot of the paper (Alg. 1 lines 3-6 / Alg. 3 lines 4-7)
+is a fused element-wise chain over the whole parameter vector:
+
+    v' = theta*v + (1-theta) g^2
+    m' = beta*m  + (1-beta)  g
+    u  = alpha * m'/sqrt(v'+eps) + e        (error-feedback add)
+    s  = ||u||_inf                           (global reduction)
+    qdelta = Q_g(u; s, k_g)                  (log-level quantization)
+    e' = u - qdelta                          (new error)
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the flat chunk is reshaped
+to (rows, 128) and tiled into (8, 128) VMEM blocks via BlockSpec — the
+VPU-native tile.  The ∞-norm is a two-pass scheme: pass 1 fuses the
+moment/update math and emits per-block partial maxima; the scalar max and
+the quantization pass run next.  Everything is lowered with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); the
+BlockSpec structure is what carries over to a real TPU build.
+
+All hyperparameters are runtime scalars (f32[1,1] operands in SMEM-style
+blocks) so a single AOT artifact serves every (alpha_t, theta_t, beta,
+eps, k_g) configuration.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU-native tile: 8 sublanes x 128 lanes.
+LANES = 128
+SUBLANES = 8
+BLOCK = (SUBLANES, LANES)
+# Default flat chunk the Rust runtime feeds per pallas_call: 64Ki f32 = 256 KiB
+# per tensor; 5 live tensors/block stay far under a ~16 MiB VMEM budget.
+CHUNK = 65536
+
+_scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+_block_spec = pl.BlockSpec(BLOCK, lambda i: (i, 0))
+
+
+def _moments_kernel(beta_ref, theta_ref, alpha_ref, eps_ref,
+                    m_ref, v_ref, g_ref, e_ref,
+                    m1_ref, v1_ref, u_ref, smax_ref):
+    """Pass 1: fused moment update + update direction + per-block |u| max."""
+    beta = beta_ref[0, 0]
+    theta = theta_ref[0, 0]
+    alpha = alpha_ref[0, 0]
+    eps = eps_ref[0, 0]
+    g = g_ref[...]
+    m1 = beta * m_ref[...] + (1.0 - beta) * g
+    v1 = theta * v_ref[...] + (1.0 - theta) * g * g
+    u = alpha * m1 * jax.lax.rsqrt(v1 + eps) + e_ref[...]
+    m1_ref[...] = m1
+    v1_ref[...] = v1
+    u_ref[...] = u
+    smax_ref[0, 0] = jnp.max(jnp.abs(u))
+
+
+def _quantize_kernel(s_ref, qlo_ref, u_ref, q_ref, e1_ref):
+    """Pass 2: log-level quantization of u at global scale s + new error.
+
+    Same closed form as ``ref.ref_log_quantize`` — nearest power-of-two
+    level in linear distance, ties up, zero below the 0/qlo midpoint.
+    """
+    s = s_ref[0, 0]
+    qlo = qlo_ref[0, 0]
+    u = u_ref[...]
+    safe_s = jnp.where(s > 0.0, s, 1.0)
+    a = jnp.minimum(jnp.abs(u) / safe_s, 1.0)
+    loga = jnp.log2(jnp.maximum(a, 1e-38))
+    m = jnp.clip(jnp.floor(loga), jnp.log2(qlo), 0.0)
+    base = jnp.exp2(m)
+    q = jnp.where(a < 1.5 * base, base, jnp.minimum(2.0 * base, 1.0))
+    q = jnp.where(a < 0.5 * qlo, 0.0, q)
+    qdelta = jnp.sign(u) * q * s
+    q_ref[...] = qdelta
+    e1_ref[...] = u - qdelta
+
+
+def _wquant_kernel(kx_ref, x_ref, o_ref):
+    """Server-side uniform weight quantizer Q_x (see ref.ref_wquant)."""
+    kx = kx_ref[0, 0]
+    y = jnp.clip(2.0 * x_ref[...], -1.0, 1.0) * kx
+    r = jnp.sign(y) * jnp.floor(jnp.abs(y) + 0.5)
+    o_ref[...] = 0.5 * r / kx
+
+
+def _as_tiles(x: jnp.ndarray) -> jnp.ndarray:
+    n = x.size
+    if n % (SUBLANES * LANES) != 0:
+        raise ValueError(f"flat size {n} not a multiple of {SUBLANES * LANES}")
+    return x.reshape(n // LANES, LANES)
+
+
+def _scal(x) -> jnp.ndarray:
+    return jnp.asarray(x, jnp.float32).reshape(1, 1)
+
+
+def qadam_moments(m, v, g, e, alpha, beta, theta, eps):
+    """Pallas pass 1 over a flat f32 vector. Returns (m1, v1, u, s)."""
+    n = m.size
+    grid = (n // (SUBLANES * LANES),)
+    tiles = _as_tiles(m).shape
+    out_shapes = (
+        jax.ShapeDtypeStruct(tiles, jnp.float32),
+        jax.ShapeDtypeStruct(tiles, jnp.float32),
+        jax.ShapeDtypeStruct(tiles, jnp.float32),
+        jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+    )
+    m1, v1, u, smax = pl.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[_scalar_spec] * 4 + [_block_spec] * 4,
+        out_specs=(
+            _block_spec, _block_spec, _block_spec,
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,
+    )(_scal(beta), _scal(theta), _scal(alpha), _scal(eps),
+      _as_tiles(m), _as_tiles(v), _as_tiles(g), _as_tiles(e))
+    s = jnp.max(smax)
+    return m1.reshape(n), v1.reshape(n), u.reshape(n), s
+
+
+def log_quantize(u, s, qlo):
+    """Pallas pass 2 over a flat f32 vector. Returns (qdelta, e1)."""
+    n = u.size
+    grid = (n // (SUBLANES * LANES),)
+    tiles = _as_tiles(u).shape
+    qdelta, e1 = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[_scalar_spec, _scalar_spec, _block_spec],
+        out_specs=(_block_spec, _block_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(tiles, jnp.float32),
+            jax.ShapeDtypeStruct(tiles, jnp.float32),
+        ),
+        interpret=True,
+    )(_scal(s), _scal(qlo), _as_tiles(u))
+    return qdelta.reshape(n), e1.reshape(n)
+
+
+def wquant(x, kx):
+    """Pallas uniform weight quantizer over a flat f32 vector."""
+    n = x.size
+    grid = (n // (SUBLANES * LANES),)
+    tiles = _as_tiles(x).shape
+    out = pl.pallas_call(
+        _wquant_kernel,
+        grid=grid,
+        in_specs=[_scalar_spec, _block_spec],
+        out_specs=_block_spec,
+        out_shape=jax.ShapeDtypeStruct(tiles, jnp.float32),
+        interpret=True,
+    )(_scal(kx), _as_tiles(x))
+    return out.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def qadam_step(m, v, g, e, alpha, beta, theta, eps, qlo):
+    """Fused quantized-Adam worker step over a flat chunk.
+
+    This is the function AOT-exported as ``artifacts/qadam_step.hlo.txt``
+    and executed by the Rust worker on its flattened gradient.  The scale
+    granularity is the chunk (per-chunk ∞-norm) — see DESIGN.md: per-chunk
+    scaling preserves the Assumption-2 contraction with the same
+    ``delta_g`` and is the standard practical choice.
+
+    Returns ``(m1, v1, qdelta, e1)``.
+    """
+    m1, v1, u, s = qadam_moments(m, v, g, e, alpha, beta, theta, eps)
+    qdelta, e1 = log_quantize(u, s, qlo)
+    return m1, v1, qdelta, e1
+
+
+def adam_step(m, v, g, alpha, beta, theta, eps):
+    """Unquantized fused Adam step (baseline artifact): (m1, v1, delta)."""
+    m1, v1, u0, _ = qadam_moments(m, v, g, jnp.zeros_like(m),
+                                  alpha, beta, theta, eps)
+    return m1, v1, u0

@@ -1,0 +1,99 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+Every function here is the *reference semantics* of a kernel in
+``qadam.py`` and of the matching Rust implementation in
+``rust/src/quant``.  pytest (``python/tests``) asserts the Pallas kernels
+against these, and the Rust unit tests pin the same closed-form math, so
+all three layers agree bit-for-bit (modulo f32 rounding of transcendental
+``log2``, which both sides compute the same way).
+
+Quantizer definitions (paper §5.1):
+
+* Gradient quantizer ``Q_g`` — logarithmic (power-of-two) levels scaled by
+  the ∞-norm::
+
+      Q_g(g) = ||g||_inf * argmin_{ghat in G^d} || g/||g||_inf - ghat ||
+      G = {-1, ..., -2^{-k_g}, 0, 2^{-k_g}, 2^{-k_g+1}, ..., 1}
+
+  Nearest-level in linear distance; ties round *up* (toward the larger
+  magnitude level).  The zero/smallest-level boundary is the midpoint
+  ``2^{-(k_g+1)}``.
+
+* Weight quantizer ``Q_x`` — uniform grid scaled by 0.5::
+
+      Q_x(x) = 0.5 * argmin_{xhat in X} || 2x - xhat ||
+      X = { i / 2^{k_x} : i = -2^{k_x}, ..., 2^{k_x} }
+
+  i.e. clamp ``2x`` to [-1, 1], round to the nearest multiple of
+  ``2^{-k_x}`` (round-half-away-from-zero, matching the Rust side), halve.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_log_quantize(u: jnp.ndarray, qlo) -> jnp.ndarray:
+    """Q_g: quantize ``u`` onto ∞-norm-scaled power-of-two levels.
+
+    ``qlo`` is the smallest positive level ``2^{-k_g}`` (a float, so a
+    single artifact serves every ``k_g``).  Returns the quantized vector
+    (same shape/dtype).  A zero input maps to zero output.
+    """
+    s = jnp.max(jnp.abs(u))
+    # Avoid 0/0; if s == 0 every element is 0 and the final `where` kills it.
+    safe_s = jnp.where(s > 0.0, s, 1.0)
+    a = jnp.abs(u) / safe_s  # in [0, 1]
+    a = jnp.minimum(a, 1.0)
+    # Exponent of the level just below |y|:  m = floor(log2(a)), clamped so
+    # base = 2^m lies in [qlo, 1].
+    loga = jnp.log2(jnp.maximum(a, 1e-38))
+    m = jnp.clip(jnp.floor(loga), jnp.log2(qlo), 0.0)
+    base = jnp.exp2(m)
+    # Nearest of {base, 2*base} in linear distance; tie -> upper.
+    q = jnp.where(a < 1.5 * base, base, jnp.minimum(2.0 * base, 1.0))
+    # Zero region: below the 0 / qlo midpoint.
+    q = jnp.where(a < 0.5 * qlo, 0.0, q)
+    return (jnp.sign(u) * q * s).astype(u.dtype)
+
+
+def ref_wquant(x: jnp.ndarray, kx) -> jnp.ndarray:
+    """Q_x: uniform weight quantizer.
+
+    ``kx`` is passed as the number of fractional levels ``2^{k_x}``
+    (e.g. kx=16.0 for k_x=4) so it can be a runtime scalar.
+    Round-half-away-from-zero to match Rust's ``f32::round``.
+    """
+    y = jnp.clip(2.0 * x, -1.0, 1.0) * kx
+    # jnp.round is round-half-to-even; emulate round-half-away-from-zero.
+    r = jnp.sign(y) * jnp.floor(jnp.abs(y) + 0.5)
+    return (0.5 * r / kx).astype(x.dtype)
+
+
+def ref_adam_moments(m, v, g, beta, theta):
+    """One step of the moment recursions (Alg. 1 lines 3-4)."""
+    m1 = beta * m + (1.0 - beta) * g
+    v1 = theta * v + (1.0 - theta) * g * g
+    return m1, v1
+
+
+def ref_qadam_step(m, v, g, e, alpha, beta, theta, eps, qlo):
+    """Full fused worker step (Alg. 1 lines 3-6 / Alg. 3 lines 4-7).
+
+    Returns ``(m1, v1, qdelta, e1)`` where ``qdelta`` is the quantized
+    update to ship to the server and ``e1`` the new error-feedback state.
+    The update direction uses the paper's sign convention:
+    ``u = alpha * m1 / sqrt(v1 + eps) + e`` and the server applies
+    ``x <- x - qdelta``.
+    """
+    m1, v1 = ref_adam_moments(m, v, g, beta, theta)
+    u = alpha * m1 / jnp.sqrt(v1 + eps) + e
+    qdelta = ref_log_quantize(u, qlo)
+    e1 = u - qdelta
+    return m1, v1, qdelta, e1
+
+
+def ref_adam_step(m, v, g, alpha, beta, theta, eps):
+    """Unquantized generic-Adam direction (baseline): returns (m1, v1, delta)."""
+    m1, v1 = ref_adam_moments(m, v, g, beta, theta)
+    return m1, v1, alpha * m1 / jnp.sqrt(v1 + eps)

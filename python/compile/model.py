@@ -1,0 +1,335 @@
+"""L2: JAX model definitions whose fwd/bwd graphs are AOT-exported.
+
+Paper workloads and their CPU-scale stand-ins (DESIGN.md §Substitutions):
+
+* ``mlp``          — 2-layer MLP on 64-d feature vectors (quickstart /
+                     convergence-theory checks).
+* ``vgg_sim``      — small VGG-style conv net, 10 classes, 32x32x3
+                     (stands in for VGG16/CIFAR10, Table 3 / Fig 4).
+* ``resnet_sim``   — deeper residual conv net, 20 classes, 32x32x3
+                     (stands in for ResNet-101/CIFAR100, Table 2 / Fig 3).
+* ``transformer``  — causal char-level transformer LM (the mandated
+                     end-to-end workload, examples/train_transformer.rs).
+* ``transformer_small`` — 2-layer variant for tests.
+
+Every model is a pure function over an *ordered list* of f32 parameter
+arrays.  The order is the contract with the Rust side: ``aot.py`` writes
+it to ``artifacts/manifest.json`` and ``rust/src/models`` flattens /
+unflattens PS tensors in exactly that order.
+
+Exported graphs per model (see aot.py):
+  grad_<name>.hlo.txt : (*params, x, y) -> (loss, *grads)
+  eval_<name>.hlo.txt : (*params, x)    -> logits
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A model with a fixed (batch-static) train/eval configuration."""
+
+    name: str
+    params: List[ParamSpec]
+    apply: Callable  # (params, x) -> logits
+    # Input specs (without params): train takes (x, y), eval takes (x,).
+    train_x: Tuple[Tuple[int, ...], str]
+    train_y: Tuple[Tuple[int, ...], str]
+    eval_x: Tuple[Tuple[int, ...], str]
+    num_classes: int
+    kind: str  # "classifier" | "lm"
+
+    @property
+    def total_params(self) -> int:
+        return sum(p.size for p in self.params)
+
+    def init(self, seed: int = 0) -> List[jnp.ndarray]:
+        """He-style init, deterministic in ``seed``."""
+        rng = np.random.default_rng(seed)
+        out = []
+        for p in self.params:
+            if p.name.endswith("_b") or "_bias" in p.name:
+                out.append(jnp.zeros(p.shape, jnp.float32))
+            elif "emb" in p.name:
+                out.append(jnp.asarray(
+                    rng.normal(0, 0.02, p.shape), jnp.float32))
+            elif "_scale" in p.name:
+                out.append(jnp.ones(p.shape, jnp.float32))
+            else:
+                fan_in = int(np.prod(p.shape[:-1])) or 1
+                std = float(np.sqrt(2.0 / fan_in))
+                out.append(jnp.asarray(
+                    rng.normal(0, std, p.shape), jnp.float32))
+        return out
+
+    def loss(self, params, x, y):
+        logits = self.apply(params, x)
+        if self.kind == "lm":
+            logits = logits.reshape(-1, logits.shape[-1])
+            y = y.reshape(-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)
+        return jnp.mean(nll)
+
+    def grad_fn(self):
+        def f(*args):
+            params = list(args[: len(self.params)])
+            x, y = args[len(self.params)], args[len(self.params) + 1]
+            loss, grads = jax.value_and_grad(self.loss)(params, x, y)
+            return (loss, *grads)
+        return f
+
+    def eval_fn(self):
+        def f(*args):
+            params = list(args[: len(self.params)])
+            x = args[len(self.params)]
+            return (self.apply(params, x),)
+        return f
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _make_mlp(name: str, d_in: int, hidden: Sequence[int], n_cls: int,
+              batch: int, eval_batch: int) -> ModelSpec:
+    dims = [d_in, *hidden, n_cls]
+    specs = []
+    for i in range(len(dims) - 1):
+        specs.append(ParamSpec(f"fc{i}_w", (dims[i], dims[i + 1])))
+        specs.append(ParamSpec(f"fc{i}_b", (dims[i + 1],)))
+
+    n_layers = len(dims) - 1
+
+    def apply(params, x):
+        h = x
+        for i in range(n_layers):
+            w, b = params[2 * i], params[2 * i + 1]
+            h = h @ w + b
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return ModelSpec(
+        name=name, params=specs, apply=apply,
+        train_x=((batch, d_in), "f32"), train_y=((batch,), "i32"),
+        eval_x=((eval_batch, d_in), "f32"),
+        num_classes=n_cls, kind="classifier",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Conv nets
+# ---------------------------------------------------------------------------
+
+def _conv(x, w, b, stride: int = 1):
+    """NHWC conv3x3 (or wxw) + bias, SAME padding."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _make_vgg_sim(batch: int, eval_batch: int) -> ModelSpec:
+    """Small VGG-style net: [32,32]x2 pool [64,64] pool [128] pool fc."""
+    chans = [(3, 32), (32, 32), (32, 64), (64, 64), (64, 128)]
+    pools_after = {1, 3, 4}  # pool after conv index
+    n_cls = 10
+    specs = []
+    for i, (ci, co) in enumerate(chans):
+        specs.append(ParamSpec(f"conv{i}_w", (3, 3, ci, co)))
+        specs.append(ParamSpec(f"conv{i}_b", (co,)))
+    # After 3 pools: 32 -> 16 -> 8 -> 4 spatial, 128 channels.
+    specs.append(ParamSpec("fc0_w", (4 * 4 * 128, 256)))
+    specs.append(ParamSpec("fc0_b", (256,)))
+    specs.append(ParamSpec("fc1_w", (256, n_cls)))
+    specs.append(ParamSpec("fc1_b", (n_cls,)))
+
+    def apply(params, x):
+        h = x
+        idx = 0
+        for i in range(len(chans)):
+            h = jax.nn.relu(_conv(h, params[idx], params[idx + 1]))
+            idx += 2
+            if i in pools_after:
+                h = jax.lax.reduce_window(
+                    h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                    "VALID")
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params[idx] + params[idx + 1])
+        return h @ params[idx + 2] + params[idx + 3]
+
+    return ModelSpec(
+        name="vgg_sim", params=specs, apply=apply,
+        train_x=((batch, 32, 32, 3), "f32"), train_y=((batch,), "i32"),
+        eval_x=((eval_batch, 32, 32, 3), "f32"),
+        num_classes=n_cls, kind="classifier",
+    )
+
+
+def _make_resnet_sim(batch: int, eval_batch: int) -> ModelSpec:
+    """Residual conv net: stem + 3 stages x 2 residual blocks, 20 classes."""
+    n_cls = 20
+    stages = [32, 64, 128]
+    specs = [ParamSpec("stem_w", (3, 3, 3, stages[0])),
+             ParamSpec("stem_b", (stages[0],))]
+    for s, ch in enumerate(stages):
+        cin = stages[s - 1] if s > 0 else stages[0]
+        # downsample conv (stride 2) when changing stage (except stage 0)
+        if s > 0:
+            specs.append(ParamSpec(f"s{s}_down_w", (1, 1, cin, ch)))
+            specs.append(ParamSpec(f"s{s}_down_b", (ch,)))
+        for b in range(2):
+            specs.append(ParamSpec(f"s{s}b{b}_c0_w", (3, 3, ch, ch)))
+            specs.append(ParamSpec(f"s{s}b{b}_c0_b", (ch,)))
+            specs.append(ParamSpec(f"s{s}b{b}_c1_w", (3, 3, ch, ch)))
+            specs.append(ParamSpec(f"s{s}b{b}_c1_b", (ch,)))
+    specs.append(ParamSpec("fc_w", (stages[-1], n_cls)))
+    specs.append(ParamSpec("fc_b", (n_cls,)))
+
+    def apply(params, x):
+        it = iter(range(len(params)))
+        nxt = lambda: params[next(it)]
+        h = jax.nn.relu(_conv(x, nxt(), nxt()))
+        for s in range(len(stages)):
+            if s > 0:
+                h = _conv(h, nxt(), nxt(), stride=2)
+            for _ in range(2):
+                # Fixup-style 0.25 branch scale: the net has no
+                # normalization layers, so unscaled residual sums blow the
+                # logit scale up (~15 std at init) and freeze training.
+                r = h
+                h = jax.nn.relu(_conv(h, nxt(), nxt()))
+                h = _conv(h, nxt(), nxt())
+                h = jax.nn.relu(0.25 * h + r)
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        return 0.25 * (h @ nxt()) + nxt()
+
+    return ModelSpec(
+        name="resnet_sim", params=specs, apply=apply,
+        train_x=((batch, 32, 32, 3), "f32"), train_y=((batch,), "i32"),
+        eval_x=((eval_batch, 32, 32, 3), "f32"),
+        num_classes=n_cls, kind="classifier",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+def _make_transformer(name: str, vocab: int, d_model: int, n_head: int,
+                      n_layer: int, seq: int, batch: int,
+                      eval_batch: int) -> ModelSpec:
+    d_ff = 4 * d_model
+    specs = [ParamSpec("tok_emb", (vocab, d_model)),
+             ParamSpec("pos_emb", (seq, d_model))]
+    for l in range(n_layer):
+        specs += [
+            ParamSpec(f"l{l}_ln1_scale", (d_model,)),
+            ParamSpec(f"l{l}_ln1_b", (d_model,)),
+            ParamSpec(f"l{l}_attn_qkv_w", (d_model, 3 * d_model)),
+            ParamSpec(f"l{l}_attn_qkv_b", (3 * d_model,)),
+            ParamSpec(f"l{l}_attn_out_w", (d_model, d_model)),
+            ParamSpec(f"l{l}_attn_out_b", (d_model,)),
+            ParamSpec(f"l{l}_ln2_scale", (d_model,)),
+            ParamSpec(f"l{l}_ln2_b", (d_model,)),
+            ParamSpec(f"l{l}_mlp_in_w", (d_model, d_ff)),
+            ParamSpec(f"l{l}_mlp_in_b", (d_ff,)),
+            ParamSpec(f"l{l}_mlp_out_w", (d_ff, d_model)),
+            ParamSpec(f"l{l}_mlp_out_b", (d_model,)),
+        ]
+    specs += [ParamSpec("lnf_scale", (d_model,)), ParamSpec("lnf_b", (d_model,))]
+    # Weight-tied output head (reuses tok_emb) keeps the param list small
+    # and matches the standard small-LM recipe.
+
+    head_dim = d_model // n_head
+    assert head_dim * n_head == d_model
+
+    def layernorm(x, scale, b):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + b
+
+    def apply(params, x):
+        it = iter(range(len(params)))
+        nxt = lambda: params[next(it)]
+        tok_emb = nxt()
+        pos_emb = nxt()
+        B, T = x.shape
+        h = tok_emb[x] + pos_emb[None, :T, :]
+        mask = jnp.tril(jnp.ones((T, T), jnp.float32))
+        neg = jnp.float32(-1e9)
+        for _ in range(n_layer):
+            ln1s, ln1b = nxt(), nxt()
+            qkv_w, qkv_b = nxt(), nxt()
+            out_w, out_b = nxt(), nxt()
+            ln2s, ln2b = nxt(), nxt()
+            mi_w, mi_b = nxt(), nxt()
+            mo_w, mo_b = nxt(), nxt()
+
+            a = layernorm(h, ln1s, ln1b)
+            qkv = a @ qkv_w + qkv_b
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+
+            def heads(t):
+                return t.reshape(B, T, n_head, head_dim).transpose(0, 2, 1, 3)
+
+            q, k, v = heads(q), heads(k), heads(v)
+            att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(
+                jnp.float32(head_dim))
+            att = jnp.where(mask[None, None] > 0, att, neg)
+            att = jax.nn.softmax(att, axis=-1)
+            o = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, d_model)
+            h = h + o @ out_w + out_b
+
+            a = layernorm(h, ln2s, ln2b)
+            h = h + jax.nn.gelu(a @ mi_w + mi_b) @ mo_w + mo_b
+
+        h = layernorm(h, nxt(), nxt())
+        return h @ tok_emb.T  # tied head
+
+    return ModelSpec(
+        name=name, params=specs, apply=apply,
+        train_x=((batch, seq), "i32"), train_y=((batch, seq), "i32"),
+        eval_x=((eval_batch, seq), "i32"),
+        num_classes=vocab, kind="lm",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry — per-worker batch 16 matches the paper's setup (8 workers x 16).
+# ---------------------------------------------------------------------------
+
+def build_registry() -> dict:
+    return {
+        "mlp": _make_mlp("mlp", d_in=64, hidden=[256, 256], n_cls=10,
+                         batch=16, eval_batch=256),
+        "vgg_sim": _make_vgg_sim(batch=16, eval_batch=256),
+        "resnet_sim": _make_resnet_sim(batch=16, eval_batch=256),
+        "transformer": _make_transformer(
+            "transformer", vocab=256, d_model=256, n_head=8, n_layer=4,
+            seq=128, batch=8, eval_batch=32),
+        "transformer_small": _make_transformer(
+            "transformer_small", vocab=64, d_model=64, n_head=4, n_layer=2,
+            seq=32, batch=8, eval_batch=32),
+    }
+
+
+MODELS = build_registry()

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Allow running `pytest python/tests/` from the repo root: the tests
+# import the `compile` package that lives next to this file.
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,155 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and value regimes; every assertion is
+``assert_allclose`` against ``compile.kernels.ref``.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels import qadam, ref
+
+TILE = qadam.SUBLANES * qadam.LANES  # 1024
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25)
+hypothesis.settings.load_profile("ci")
+
+
+def rng_vec(seed, n, scale=1.0, loc=0.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(loc + scale * r.standard_normal(n), jnp.float32)
+
+
+# -- strategies -------------------------------------------------------------
+
+sizes = st.sampled_from([TILE, 2 * TILE, 8 * TILE])
+kgs = st.integers(min_value=1, max_value=8)
+kxs = st.integers(min_value=1, max_value=8)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+scales = st.sampled_from([1e-6, 1e-2, 1.0, 1e3])
+
+
+# -- log quantizer ----------------------------------------------------------
+
+@given(seeds, sizes, kgs, scales)
+def test_log_quantize_matches_ref(seed, n, kg, scale):
+    u = rng_vec(seed, n, scale)
+    qlo = jnp.float32(2.0 ** -kg)
+    s = jnp.max(jnp.abs(u))
+    got_q, got_e = qadam.log_quantize(u, s, qlo)
+    want_q = ref.ref_log_quantize(u, qlo)
+    assert_allclose(np.asarray(got_q), np.asarray(want_q), rtol=1e-6,
+                    atol=scale * 1e-7)
+    assert_allclose(np.asarray(got_e), np.asarray(u - want_q), rtol=1e-5,
+                    atol=scale * 1e-6)
+
+
+def test_log_quantize_zero_vector():
+    u = jnp.zeros(TILE, jnp.float32)
+    q, e = qadam.log_quantize(u, jnp.float32(0.0), jnp.float32(0.25))
+    assert np.all(np.asarray(q) == 0.0)
+    assert np.all(np.asarray(e) == 0.0)
+
+
+def test_log_quantize_levels_are_powers_of_two():
+    u = rng_vec(3, 4 * TILE)
+    kg = 4
+    q = np.asarray(ref.ref_log_quantize(u, 2.0 ** -kg))
+    s = float(np.max(np.abs(np.asarray(u))))
+    lv = np.abs(q) / s
+    nonzero = lv[lv > 0]
+    exps = np.log2(nonzero)
+    assert_allclose(exps, np.round(exps), atol=1e-5)
+    assert exps.min() >= -kg - 1e-5 and exps.max() <= 1e-5
+
+
+@given(seeds, kgs)
+def test_log_quantize_contraction(seed, kg):
+    """Assumption 2: ||u - Q_g(u)|| <= (1 - delta_g) ||u|| with delta_g > 0."""
+    u = rng_vec(seed, TILE)
+    q = np.asarray(ref.ref_log_quantize(u, 2.0 ** -kg))
+    un = np.asarray(u)
+    err = np.linalg.norm(un - q)
+    assert err <= (1.0 - 2.0 ** -(kg + 2)) * np.linalg.norm(un) + 1e-6
+
+
+# -- weight quantizer -------------------------------------------------------
+
+@given(seeds, sizes, kxs, st.sampled_from([0.05, 0.3, 1.5]))
+def test_wquant_matches_ref(seed, n, kx, scale):
+    x = rng_vec(seed, n, scale)
+    kxf = jnp.float32(2.0 ** kx)
+    got = qadam.wquant(x, kxf)
+    want = ref.ref_wquant(x, kxf)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=1e-7)
+
+
+@given(seeds, kxs)
+def test_wquant_bounded_error(seed, kx):
+    """Assumption 3: ||x - Q_x(x)||_inf <= grid step/2 inside the grid range."""
+    x = jnp.clip(rng_vec(seed, TILE, 0.2), -0.5, 0.5)  # grid range
+    q = np.asarray(ref.ref_wquant(x, 2.0 ** kx))
+    step = 0.5 * 2.0 ** -kx
+    assert np.max(np.abs(np.asarray(x) - q)) <= step / 2 + 1e-7
+    # grid membership: 2*q must be integer multiples of 2^-kx
+    mult = 2.0 * q * (2.0 ** kx)
+    assert_allclose(mult, np.round(mult), atol=1e-5)
+
+
+def test_wquant_idempotent():
+    x = rng_vec(11, TILE, 0.2)
+    q1 = ref.ref_wquant(x, 16.0)
+    q2 = ref.ref_wquant(q1, 16.0)
+    assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-7)
+
+
+# -- fused qadam step -------------------------------------------------------
+
+@given(seeds, sizes, kgs)
+def test_qadam_step_matches_ref(seed, n, kg):
+    m = rng_vec(seed, n, 0.1)
+    v = jnp.abs(rng_vec(seed + 1, n, 0.01))
+    g = rng_vec(seed + 2, n)
+    e = rng_vec(seed + 3, n, 0.001)
+    hp = dict(alpha=jnp.float32(1e-3), beta=jnp.float32(0.99),
+              theta=jnp.float32(0.999), eps=jnp.float32(1e-5),
+              qlo=jnp.float32(2.0 ** -kg))
+    got = qadam.qadam_step(m, v, g, e, **hp)
+    want = ref.ref_qadam_step(m, v, g, e, **hp)
+    for a, b, name in zip(got, want, ["m1", "v1", "qdelta", "e1"]):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7,
+                        err_msg=name)
+
+
+def test_qadam_step_error_feedback_identity():
+    """qdelta + e1 must equal the pre-quantization update u exactly."""
+    n = 2 * TILE
+    m, v = rng_vec(0, n, 0.1), jnp.abs(rng_vec(1, n, 0.01))
+    g, e = rng_vec(2, n), rng_vec(3, n, 0.001)
+    m1, v1, qd, e1 = qadam.qadam_step(
+        m, v, g, e, jnp.float32(1e-3), jnp.float32(0.99),
+        jnp.float32(0.999), jnp.float32(1e-5), jnp.float32(0.25))
+    u = np.asarray(1e-3 * m1 / jnp.sqrt(v1 + 1e-5) + e)
+    assert_allclose(np.asarray(qd) + np.asarray(e1), u, rtol=1e-6, atol=1e-8)
+
+
+def test_adam_step_matches_ref():
+    n = TILE
+    m, v, g = rng_vec(0, n, 0.1), jnp.abs(rng_vec(1, n, 0.01)), rng_vec(2, n)
+    hp = dict(alpha=jnp.float32(1e-3), beta=jnp.float32(0.99),
+              theta=jnp.float32(0.999), eps=jnp.float32(1e-5))
+    got = qadam.adam_step(m, v, g, **hp)
+    want = ref.ref_adam_step(m, v, g, **hp)
+    for a, b in zip(got, want):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-8)
+
+
+def test_chunk_is_tile_aligned():
+    assert qadam.CHUNK % TILE == 0

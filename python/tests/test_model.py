@@ -1,0 +1,103 @@
+"""L2 model graphs: shapes, gradients, loss decrease sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def models():
+    return model_lib.MODELS
+
+
+SMALL = ["mlp", "vgg_sim", "resnet_sim", "transformer_small"]
+
+
+def _example_batch(spec, seed=0):
+    r = np.random.default_rng(seed)
+    xs, xd = spec.train_x
+    ys, _ = spec.train_y
+    if xd == "i32":
+        x = jnp.asarray(r.integers(0, spec.num_classes, xs), jnp.int32)
+    else:
+        x = jnp.asarray(r.standard_normal(xs), jnp.float32)
+    y = jnp.asarray(r.integers(0, spec.num_classes, ys), jnp.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_grad_fn_shapes(models, name):
+    spec = models[name]
+    params = spec.init(0)
+    assert [tuple(p.shape) for p in params] == [p.shape for p in spec.params]
+    x, y = _example_batch(spec)
+    out = spec.grad_fn()(*params, x, y)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert len(grads) == len(params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_eval_fn_logits(models, name):
+    spec = models[name]
+    params = spec.init(0)
+    r = np.random.default_rng(1)
+    xs, xd = spec.eval_x
+    if xd == "i32":
+        x = jnp.asarray(r.integers(0, spec.num_classes, xs), jnp.int32)
+    else:
+        x = jnp.asarray(r.standard_normal(xs), jnp.float32)
+    (logits,) = spec.eval_fn()(*params, x)
+    if spec.kind == "lm":
+        assert logits.shape == (*xs, spec.num_classes)
+    else:
+        assert logits.shape == (xs[0], spec.num_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+@pytest.mark.parametrize("name", ["mlp", "transformer_small"])
+def test_loss_decreases_under_qadam(models, name):
+    """A few full QAdam-EF steps (via the jnp reference) reduce the loss —
+    the end-to-end L1+L2 composition sanity check."""
+    spec = models[name]
+    params = spec.init(0)
+    x, y = _example_batch(spec)
+    grad = jax.jit(spec.grad_fn())
+
+    flat = jnp.concatenate([p.reshape(-1) for p in params])
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    e = jnp.zeros_like(flat)
+
+    def unflatten(f):
+        out, off = [], 0
+        for p in spec.params:
+            out.append(f[off:off + p.size].reshape(p.shape))
+            off += p.size
+        return out
+
+    losses = []
+    for t in range(1, 16):
+        outs = grad(*unflatten(flat), x, y)
+        losses.append(float(outs[0]))
+        gflat = jnp.concatenate([g.reshape(-1) for g in outs[1:]])
+        m, v, qd, e = ref.ref_qadam_step(
+            m, v, gflat, e, jnp.float32(1e-2), jnp.float32(0.9),
+            jnp.float32(1 - 0.1 / t), jnp.float32(1e-5), jnp.float32(0.25))
+        flat = flat - qd
+    assert losses[-1] < losses[0], losses
+
+
+def test_total_params_counts(models):
+    # Pin the rough scale so the manifest/rust side can rely on it.
+    assert models["mlp"].total_params == 64 * 256 + 256 + 256 * 256 + 256 + 256 * 10 + 10
+    assert models["transformer"].total_params > 3_000_000
+    assert models["resnet_sim"].total_params > 500_000

@@ -1,0 +1,240 @@
+//! Checkpointing: binary snapshots of the parameter-server state
+//! (master weights + step) and, when available, per-worker optimizer
+//! state (m, v, e) — enough to resume training or to serve/evaluate the
+//! model without rerunning.
+//!
+//! Format (little-endian):
+//! ```text
+//!   magic "QADMCKPT" (8)  version u32  step u64
+//!   model_name: len u32 + utf8
+//!   dim u64, x: dim f32
+//!   nworkers u32; per worker: flags u8 (1 = has m/v/e), then 3*dim f32
+//!   crc32 of everything above (simple polynomial, self-contained)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"QADMCKPT";
+const VERSION: u32 = 1;
+
+#[derive(Clone, Debug, Default)]
+pub struct WorkerState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub e: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: u64,
+    pub x: Vec<f32>,
+    pub workers: Vec<Option<WorkerState>>,
+}
+
+/// Tiny self-contained CRC32 (IEEE polynomial, bitwise — checkpoints
+/// are written once per eval cadence, not per step).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xffff_ffffu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let m = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & m);
+        }
+    }
+    !crc
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f32s(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
+    if b.len() < *off + n * 4 {
+        bail!("checkpoint truncated");
+    }
+    let out = b[*off..*off + n * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    *off += n * 4;
+    Ok(out)
+}
+
+impl Checkpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let dim = self.x.len();
+        let mut buf = Vec::with_capacity(64 + dim * 4 * (1 + 3 * self.workers.len()));
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.model.len() as u32).to_le_bytes());
+        buf.extend_from_slice(self.model.as_bytes());
+        buf.extend_from_slice(&(dim as u64).to_le_bytes());
+        put_f32s(&mut buf, &self.x);
+        buf.extend_from_slice(&(self.workers.len() as u32).to_le_bytes());
+        for w in &self.workers {
+            match w {
+                None => buf.push(0),
+                Some(ws) => {
+                    buf.push(1);
+                    put_f32s(&mut buf, &ws.m);
+                    put_f32s(&mut buf, &ws.v);
+                    put_f32s(&mut buf, &ws.e);
+                }
+            }
+        }
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        if b.len() < 8 + 4 + 8 + 4 + 8 + 4 + 4 {
+            bail!("checkpoint too short");
+        }
+        let (body, tail) = b.split_at(b.len() - 4);
+        let want = u32::from_le_bytes(tail.try_into().unwrap());
+        if crc32(body) != want {
+            bail!("checkpoint CRC mismatch");
+        }
+        if &body[..8] != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let mut off = 8usize;
+        let rd_u32 = |b: &[u8], off: &mut usize| -> u32 {
+            let v = u32::from_le_bytes(b[*off..*off + 4].try_into().unwrap());
+            *off += 4;
+            v
+        };
+        let rd_u64 = |b: &[u8], off: &mut usize| -> u64 {
+            let v = u64::from_le_bytes(b[*off..*off + 8].try_into().unwrap());
+            *off += 8;
+            v
+        };
+        let version = rd_u32(body, &mut off);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = rd_u64(body, &mut off);
+        let name_len = rd_u32(body, &mut off) as usize;
+        if body.len() < off + name_len {
+            bail!("checkpoint truncated (name)");
+        }
+        let model = String::from_utf8(body[off..off + name_len].to_vec())?;
+        off += name_len;
+        let dim = rd_u64(body, &mut off) as usize;
+        let x = get_f32s(body, &mut off, dim)?;
+        let nworkers = rd_u32(body, &mut off) as usize;
+        let mut workers = Vec::with_capacity(nworkers);
+        for _ in 0..nworkers {
+            if body.len() <= off {
+                bail!("checkpoint truncated (worker flag)");
+            }
+            let flag = body[off];
+            off += 1;
+            workers.push(match flag {
+                0 => None,
+                1 => Some(WorkerState {
+                    m: get_f32s(body, &mut off, dim)?,
+                    v: get_f32s(body, &mut off, dim)?,
+                    e: get_f32s(body, &mut off, dim)?,
+                }),
+                f => bail!("bad worker flag {f}"),
+            });
+        }
+        Ok(Checkpoint { model, step, x, workers })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?; // atomic replace
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            model: "mlp".into(),
+            step: 123,
+            x: (0..37).map(|i| i as f32 * 0.5).collect(),
+            workers: vec![
+                None,
+                Some(WorkerState {
+                    m: vec![1.0; 37],
+                    v: vec![2.0; 37],
+                    e: vec![-0.5; 37],
+                }),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        let b = c.to_bytes();
+        let back = Checkpoint::from_bytes(&b).unwrap();
+        assert_eq!(back.model, "mlp");
+        assert_eq!(back.step, 123);
+        assert_eq!(back.x, c.x);
+        assert!(back.workers[0].is_none());
+        assert_eq!(back.workers[1].as_ref().unwrap().e, vec![-0.5; 37]);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = sample();
+        let mut b = c.to_bytes();
+        let mid = b.len() / 2;
+        b[mid] ^= 0x40;
+        assert!(Checkpoint::from_bytes(&b).is_err());
+        // truncation
+        let b2 = c.to_bytes();
+        assert!(Checkpoint::from_bytes(&b2[..b2.len() - 9]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_atomic() {
+        let dir = std::env::temp_dir().join(format!("qadam_ckpt_{}", std::process::id()));
+        let p = dir.join("a.ckpt");
+        let c = sample();
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.x, c.x);
+        assert!(!p.with_extension("tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // IEEE CRC32 of "123456789" is 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+    }
+}

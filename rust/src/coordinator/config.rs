@@ -1,0 +1,135 @@
+//! Experiment configuration (JSON-serializable; drives CLI, examples
+//! and benches).
+
+use crate::optim::LrSchedule;
+
+/// Which training method a run uses (rows of Tables 2–3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// The paper: quantized generic Adam + error feedback. `kg = None`
+    /// means no gradient quantization (fp32 uplink).
+    QAdam { kg: Option<u32>, error_feedback: bool },
+    /// TernGrad baseline (unbiased stochastic ternary, SGD).
+    TernGrad,
+    /// Zheng et al. [44] baseline (blockwise sign momentum SGD + EF).
+    Blockwise { block: usize, momentum: f32 },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::QAdam { kg: None, .. } => "qadam-fp32".into(),
+            Method::QAdam { kg: Some(k), error_feedback: true } => format!("qadam-kg{k}"),
+            Method::QAdam { kg: Some(k), error_feedback: false } => format!("qadam-kg{k}-noef"),
+            Method::TernGrad => "terngrad".into(),
+            Method::Blockwise { .. } => "blockwise".into(),
+        }
+    }
+}
+
+/// Which engine computes the QAdam worker step.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum Engine {
+    /// Pure-Rust fused loop (fast on CPU; used by baselines always).
+    #[default]
+    Native,
+    /// The AOT Pallas kernel through PJRT (the paper's L1 hot path).
+    PjrtKernel,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Model name from artifacts/manifest.json (e.g. "vgg_sim").
+    pub model: String,
+    /// Dataset: "cifar10_sim" | "cifar100_sim" | "text".
+    pub dataset: String,
+    pub method: Method,
+    /// Weight quantization level for broadcast (None = fp32 weights).
+    pub kx: Option<u32>,
+    pub workers: usize,
+    /// Per-worker batch size (must match the AOT-lowered train batch).
+    pub batch: usize,
+    pub steps: u64,
+    /// Steps per "epoch" for LR decay / eval cadence.
+    pub steps_per_epoch: u64,
+    pub lr: LrSchedule,
+    pub engine: Engine,
+    pub seed: u64,
+    /// Evaluate every this many steps (0 = only at the end).
+    pub eval_every: u64,
+    /// How many eval batches per evaluation.
+    pub eval_batches: usize,
+}
+
+impl ExperimentConfig {
+    /// Paper-style defaults for the Table-3 stand-in (vgg_sim/CIFAR10-sim).
+    pub fn table3_default() -> Self {
+        Self {
+            model: "vgg_sim".into(),
+            dataset: "cifar10_sim".into(),
+            method: Method::QAdam { kg: Some(2), error_feedback: true },
+            kx: None,
+            workers: crate::defaults::WORKERS,
+            batch: crate::defaults::BATCH,
+            steps: 400,
+            steps_per_epoch: 64,
+            lr: LrSchedule::ExpDecay { alpha: crate::defaults::ALPHA, half_every: 50 },
+            engine: Engine::Native,
+            seed: 0,
+            eval_every: 64,
+            eval_batches: 4,
+        }
+    }
+
+    /// Table-2 stand-in (resnet_sim/CIFAR100-sim).
+    pub fn table2_default() -> Self {
+        Self {
+            model: "resnet_sim".into(),
+            dataset: "cifar100_sim".into(),
+            ..Self::table3_default()
+        }
+    }
+
+    pub fn epoch_of(&self, t: u64) -> u64 {
+        (t - 1) / self.steps_per_epoch.max(1)
+    }
+
+    pub fn run_label(&self) -> String {
+        let kx = match self.kx {
+            Some(k) => format!("-kx{k}"),
+            None => String::new(),
+        };
+        format!("{}-{}{}", self.model, self.method.label(), kx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_consistent() {
+        let c = ExperimentConfig::table2_default();
+        assert_eq!(c.model, "resnet_sim");
+        assert_eq!(c.dataset, "cifar100_sim");
+        assert_eq!(c.workers, 8);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Method::QAdam { kg: Some(2), error_feedback: true }.label(), "qadam-kg2");
+        assert_eq!(Method::QAdam { kg: None, error_feedback: false }.label(), "qadam-fp32");
+        let mut c = ExperimentConfig::table3_default();
+        c.kx = Some(6);
+        assert_eq!(c.run_label(), "vgg_sim-qadam-kg2-kx6");
+    }
+
+    #[test]
+    fn epoch_boundaries() {
+        let mut c = ExperimentConfig::table3_default();
+        c.steps_per_epoch = 10;
+        assert_eq!(c.epoch_of(1), 0);
+        assert_eq!(c.epoch_of(10), 0);
+        assert_eq!(c.epoch_of(11), 1);
+    }
+}

@@ -1,0 +1,104 @@
+//! Per-run metrics: training-loss / accuracy curves (the data behind
+//! Figures 3–4) and cumulative communication (Tables 2–3 columns).
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub t: u64,
+    pub epoch: u64,
+    pub train_loss: f32,
+    pub test_acc: f32,
+    /// MB sent worker→server per round per worker, measured.
+    pub up_mb_per_round: f64,
+    /// MB sent server→worker per round per worker, measured.
+    pub down_mb_per_round: f64,
+    pub residual_norm: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub label: String,
+    pub rows: Vec<Row>,
+}
+
+impl MetricsLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    pub fn last_acc(&self) -> Option<f32> {
+        self.rows.last().map(|r| r.test_acc)
+    }
+
+    pub fn best_acc(&self) -> Option<f32> {
+        self.rows.iter().map(|r| r.test_acc).reduce(f32::max)
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm")?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{},{},{:.6},{:.6},{}",
+                r.t, r.epoch, r.train_loss, r.test_acc, r.up_mb_per_round, r.down_mb_per_round, r.residual_norm
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut log = MetricsLog::new("test");
+        log.push(Row {
+            t: 1,
+            epoch: 0,
+            train_loss: 2.5,
+            test_acc: 0.1,
+            up_mb_per_round: 0.5,
+            down_mb_per_round: 1.0,
+            residual_norm: 0.01,
+        });
+        let dir = std::env::temp_dir().join("qadam_metrics_test");
+        let p = dir.join("m.csv");
+        log.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("t,epoch,"));
+        assert_eq!(s.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn best_acc() {
+        let mut log = MetricsLog::new("x");
+        for (i, a) in [0.1f32, 0.5, 0.3].iter().enumerate() {
+            log.push(Row {
+                t: i as u64,
+                epoch: 0,
+                train_loss: 0.0,
+                test_acc: *a,
+                up_mb_per_round: 0.0,
+                down_mb_per_round: 0.0,
+                residual_norm: 0.0,
+            });
+        }
+        assert_eq!(log.best_acc(), Some(0.5));
+        assert_eq!(log.last_acc(), Some(0.3));
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment configuration, the synchronous training driver, and
+//! metrics logging — the launcher layer a user actually touches.
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod tables;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use config::{ExperimentConfig, Method};
+pub use metrics::{MetricsLog, Row};
+pub use trainer::{RunSummary, Trainer};

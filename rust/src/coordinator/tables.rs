@@ -1,0 +1,123 @@
+//! The Tables 2–3 / Figures 3–4 experiment grid — shared by
+//! `examples/table_sweep.rs` and the `table2`/`table3` benches so
+//! `cargo bench` regenerates the paper tables from the same code path.
+
+use super::config::{Engine, ExperimentConfig, Method};
+use super::metrics::MetricsLog;
+use super::trainer::{RunSummary, Trainer};
+use crate::optim::LrSchedule;
+use anyhow::{bail, Result};
+
+pub struct RowSpec {
+    pub name: &'static str,
+    pub method: Method,
+    pub kx: Option<u32>,
+    /// post-training weight quantization level (the WQuan rows).
+    pub post_kx: Option<u32>,
+}
+
+/// The row grid of Tables 2–3: gradient-quantization block (Comm column
+/// varies), weight-quantization block incl. post-hoc WQuan (Size column
+/// varies), and the combined block. The no-EF ablation row is ours (the
+/// paper motivates EF but does not table it).
+pub fn rows() -> Vec<RowSpec> {
+    let q = |kg| Method::QAdam { kg, error_feedback: true };
+    vec![
+        RowSpec { name: "QADAM fp32", method: q(None), kx: None, post_kx: None },
+        RowSpec { name: "QADAM kg=2 (3bit)", method: q(Some(2)), kx: None, post_kx: None },
+        RowSpec { name: "QADAM kg=0 (2bit)", method: q(Some(0)), kx: None, post_kx: None },
+        RowSpec {
+            name: "QADAM kg=2 no-EF",
+            method: Method::QAdam { kg: Some(2), error_feedback: false },
+            kx: None,
+            post_kx: None,
+        },
+        RowSpec { name: "TernGrad", method: Method::TernGrad, kx: None, post_kx: None },
+        RowSpec {
+            name: "Zheng et al.[44]",
+            method: Method::Blockwise { block: 4096, momentum: 0.9 },
+            kx: None,
+            post_kx: None,
+        },
+        RowSpec { name: "QADAM kx=14 (16bit)", method: q(None), kx: Some(14), post_kx: None },
+        RowSpec { name: "QADAM kx=6  (8bit)", method: q(None), kx: Some(6), post_kx: None },
+        RowSpec { name: "WQuan kx=14", method: q(None), kx: None, post_kx: Some(14) },
+        RowSpec { name: "WQuan kx=6", method: q(None), kx: None, post_kx: Some(6) },
+        RowSpec { name: "QADAM kg=2 kx=14", method: q(Some(2)), kx: Some(14), post_kx: None },
+        RowSpec { name: "QADAM kg=0 kx=14", method: q(Some(0)), kx: Some(14), post_kx: None },
+        RowSpec { name: "QADAM kg=2 kx=6", method: q(Some(2)), kx: Some(6), post_kx: None },
+        RowSpec { name: "QADAM kg=0 kx=6", method: q(Some(0)), kx: Some(6), post_kx: None },
+    ]
+}
+
+/// Model/dataset selection for a table/figure id.
+pub fn workload(which: &str) -> Result<(&'static str, &'static str, &'static str)> {
+    Ok(match which {
+        "table2" | "fig3" => ("resnet_sim", "cifar100_sim", "Table 2 (ResNet-101/CIFAR100 stand-in)"),
+        "table3" | "fig4" => ("vgg_sim", "cifar10_sim", "Table 3 (VGG16/CIFAR10 stand-in)"),
+        other => bail!("unknown target '{other}' (table2|table3|fig3|fig4)"),
+    })
+}
+
+/// Run the whole grid; prints the paper-style table, writes the summary
+/// CSV (plus per-run curve CSVs when `which` is a fig), returns the
+/// summaries.
+pub fn run_table(which: &str, steps: u64, workers: usize, outdir: &str) -> Result<Vec<(String, RunSummary)>> {
+    let (model, dataset, title) = workload(which)?;
+    let curves = which.starts_with("fig");
+    std::fs::create_dir_all(outdir)?;
+
+    println!("=== {title}: {steps} steps x {workers} workers ===");
+    println!("{:<22} {:>9} {:>12} {:>10}", "Method", "Test Acc", "Comm MB/it", "Size MB");
+    let mut summary_csv = String::from("method,acc,comm_mb_per_iter,size_mb,fp32_mb\n");
+    let mut out = Vec::new();
+    for row in rows() {
+        let cfg = ExperimentConfig {
+            model: model.into(),
+            dataset: dataset.into(),
+            method: row.method,
+            kx: row.kx,
+            workers,
+            batch: 16,
+            steps,
+            steps_per_epoch: 64,
+            lr: LrSchedule::ExpDecay { alpha: 1e-3, half_every: 50 },
+            engine: Engine::Native,
+            seed: 0,
+            eval_every: if curves { 32 } else { 0 },
+            eval_batches: if curves { 2 } else { 4 },
+        };
+        let mut tr = Trainer::new(cfg)?;
+        let mut s = tr.run()?;
+        if let Some(pkx) = row.post_kx {
+            s.final_acc = tr.eval_post_quantized(pkx)?;
+            s.model_size_mb =
+                s.model_size_fp32_mb * crate::quant::WQuant::new(pkx).code_bits() as f64 / 32.0;
+        }
+        println!(
+            "{:<22} {:>8.2}% {:>12.4} {:>10.4}",
+            row.name,
+            100.0 * s.final_acc,
+            s.comm_mb_per_iter,
+            s.model_size_mb
+        );
+        summary_csv.push_str(&format!(
+            "{},{},{:.6},{:.6},{:.6}\n",
+            row.name, s.final_acc, s.comm_mb_per_iter, s.model_size_mb, s.model_size_fp32_mb
+        ));
+        if curves {
+            let mut log = MetricsLog::new(row.name);
+            log.rows = tr.log.rows.clone();
+            let fname = format!(
+                "{outdir}/{which}_{}.csv",
+                row.name.replace([' ', '.', '[', ']', '='], "_")
+            );
+            log.write_csv(std::path::Path::new(&fname))?;
+        }
+        out.push((row.name.to_string(), s));
+    }
+    let path = format!("{outdir}/{which}_summary.csv");
+    std::fs::write(&path, summary_csv)?;
+    println!("\nsummary written to {path}");
+    Ok(out)
+}

@@ -1,0 +1,282 @@
+//! The synchronous training driver: server + N workers + dataset +
+//! PJRT model graphs, one process, byte-accurate comm accounting.
+
+use super::config::{Engine, ExperimentConfig, Method};
+use super::metrics::{MetricsLog, Row};
+use crate::data::{Dataset, SyntheticText, SyntheticVector, SyntheticVision};
+use crate::models::{artifacts_dir, Manifest};
+use crate::optim::{BlockwiseSgdEf, LrSchedule, QAdamEf, TernGradSgd, WorkerOpt};
+use crate::ps::transport::LocalBus;
+use crate::ps::worker::{ModelGradSource, Worker};
+use crate::ps::ParameterServer;
+use crate::runtime::kernel::PjrtQAdam;
+use crate::runtime::{KernelQAdam, ModelRuntime, Runtime};
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub label: String,
+    pub final_acc: f32,
+    pub best_acc: f32,
+    pub final_loss: f32,
+    /// Measured uplink MB per iteration per worker (Comm column).
+    pub comm_mb_per_iter: f64,
+    /// Analytic model size in MB at the broadcast precision (Size column).
+    pub model_size_mb: f64,
+    /// fp32 model size in MB for the ratio.
+    pub model_size_fp32_mb: f64,
+    pub steps: u64,
+}
+
+impl RunSummary {
+    /// Paper-style table row.
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<28} acc={:.2}% comm={:.3}MB/iter size={:.3}MB (fp32 {:.3}MB)",
+            self.label,
+            100.0 * self.final_acc,
+            self.comm_mb_per_iter,
+            self.model_size_mb,
+            self.model_size_fp32_mb
+        )
+    }
+}
+
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    ps: ParameterServer,
+    workers: Vec<Worker>,
+    bus: LocalBus,
+    model: Rc<ModelRuntime>,
+    data: Arc<dyn Dataset>,
+    pub log: MetricsLog,
+}
+
+fn make_dataset(cfg: &ExperimentConfig, seq: usize, vocab: usize) -> Result<Arc<dyn Dataset>> {
+    Ok(match cfg.dataset.as_str() {
+        "cifar10_sim" => Arc::new(SyntheticVision::cifar10_sim(cfg.seed)),
+        "cifar100_sim" => Arc::new(SyntheticVision::cifar100_sim(cfg.seed)),
+        "vector" => Arc::new(SyntheticVector::new(seq.max(1), vocab.max(2), cfg.seed)),
+        "text" => Arc::new(SyntheticText::new(vocab, seq, cfg.seed)),
+        other => return Err(anyhow!("unknown dataset '{other}'")),
+    })
+}
+
+fn make_opt(
+    cfg: &ExperimentConfig,
+    dim: usize,
+    kernel: Option<&Rc<KernelQAdam>>,
+) -> Result<Box<dyn WorkerOpt>> {
+    Ok(match cfg.method {
+        Method::QAdam { kg, error_feedback } => match (kg, cfg.engine) {
+            (Some(k), Engine::PjrtKernel) => {
+                let kernel = kernel.ok_or_else(|| anyhow!("pjrt engine needs the qadam kernel"))?;
+                if !error_feedback {
+                    return Err(anyhow!("the AOT kernel always applies error feedback; use engine=native for the no-EF ablation"));
+                }
+                Box::new(PjrtQAdam::new(kernel.clone(), dim, k, cfg.lr))
+            }
+            (Some(k), Engine::Native) => Box::new(QAdamEf::new(
+                dim,
+                Box::new(crate::quant::LogQuant::new(k)),
+                error_feedback,
+                cfg.lr,
+                crate::optim::ThetaSchedule::Const { theta: crate::defaults::THETA },
+                crate::defaults::BETA,
+                crate::defaults::EPS,
+            )),
+            (None, _) => Box::new(QAdamEf::full_precision(dim, cfg.lr)),
+        },
+        Method::TernGrad => Box::new(TernGradSgd::new(dim, terngrad_lr(cfg.lr))),
+        Method::Blockwise { block, momentum } => {
+            Box::new(BlockwiseSgdEf::new(dim, momentum, block, sgd_lr(cfg.lr)))
+        }
+    })
+}
+
+/// The paper tunes baseline SGD-family LRs separately (its grid:
+/// {0.1, 0.05, 0.01} vs Adam's 1e-3). When the config carries an
+/// Adam-scaled LR, rescale to the SGD grid, preserving the decay shape.
+/// The x30 factor is our grid-search winner at the CPU step budget
+/// (x100 = the paper's 0.1 diverges within 128 steps on the sim
+/// workloads; see EXPERIMENTS.md).
+fn sgd_lr(lr: LrSchedule) -> LrSchedule {
+    match lr {
+        LrSchedule::ExpDecay { alpha, half_every } if alpha <= 0.01 => {
+            LrSchedule::ExpDecay { alpha: alpha * 30.0, half_every }
+        }
+        other => other,
+    }
+}
+
+fn terngrad_lr(lr: LrSchedule) -> LrSchedule {
+    sgd_lr(lr)
+}
+
+impl Trainer {
+    pub fn new(mut cfg: ExperimentConfig) -> Result<Self> {
+        let artifacts = artifacts_dir();
+        let manifest = Manifest::load(&artifacts)?;
+        let rt = Runtime::cpu()?;
+        let model = Rc::new(ModelRuntime::load(&rt, &artifacts, &manifest, &cfg.model)?);
+        // Per-worker batch is baked into the AOT graph.
+        let aot_batch = model.meta.train_x.shape[0];
+        if cfg.batch != aot_batch {
+            eprintln!("[trainer] batch {} -> {} (AOT graph batch)", cfg.batch, aot_batch);
+            cfg.batch = aot_batch;
+        }
+        // For "lm": (vocab, seq). For "vector": (classes, feature dim).
+        let (vocab, seq) = match model.meta.kind.as_str() {
+            "lm" => (model.meta.num_classes, model.meta.train_x.shape[1]),
+            _ => (model.meta.num_classes, model.meta.train_x.shape[1..].iter().product()),
+        };
+        let data = make_dataset(&cfg, seq, vocab)?;
+        // Per-sample feature count must match the AOT graph input.
+        let model_feats: usize = model.meta.train_x.shape[1..].iter().product();
+        let data_feats = match data.train_batch(0, 0, 1) {
+            crate::data::Batch::Vision { x, .. } => x.len(),
+            crate::data::Batch::Text { x, .. } => x.len(),
+        };
+        if data_feats != model_feats {
+            return Err(anyhow!(
+                "dataset '{}' produces {} features/sample but model '{}' expects {:?} — pick a matching dataset",
+                cfg.dataset, data_feats, cfg.model, &model.meta.train_x.shape[1..]
+            ));
+        }
+        if model.meta.kind == "classifier" && data.num_classes() != model.meta.num_classes {
+            return Err(anyhow!(
+                "dataset classes {} != model classes {}",
+                data.num_classes(),
+                model.meta.num_classes
+            ));
+        }
+        let dim = model.dim();
+        let kernel = match (cfg.engine, &cfg.method) {
+            (Engine::PjrtKernel, Method::QAdam { kg: Some(_), .. }) => {
+                Some(Rc::new(KernelQAdam::load(&rt, &artifacts, &manifest)?))
+            }
+            _ => None,
+        };
+        let ps = ParameterServer::new(model.init_flat(cfg.seed), cfg.kx);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let opt = make_opt(&cfg, dim, kernel.as_ref())?;
+            let src = ModelGradSource { model: model.clone(), data: data.clone(), batch: cfg.batch };
+            workers.push(Worker::new(i as u32, opt, Box::new(src), cfg.seed ^ 0x5a5a));
+        }
+        let log = MetricsLog::new(cfg.run_label());
+        Ok(Self { cfg, ps, workers, bus: LocalBus::default(), model, data, log })
+    }
+
+    /// Model size at broadcast precision, MB.
+    fn model_size_mb(&self) -> (f64, f64) {
+        let fp32 = self.model.dim() as f64 * 4.0 / 1e6;
+        let quant = match self.cfg.kx {
+            Some(kx) => {
+                self.model.dim() as f64 * crate::quant::WQuant::new(kx).code_bits() as f64 / 8.0 / 1e6
+            }
+            None => fp32,
+        };
+        (quant, fp32)
+    }
+
+    fn eval(&mut self) -> Result<f32> {
+        let w = self.ps.output_weights().to_vec();
+        self.model.accuracy(&w, self.data.as_ref(), self.cfg.eval_batches)
+    }
+
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let mut last_loss = f32::NAN;
+        let start = self.ps.step() + 1; // continues after a restore
+        for t in start..=self.cfg.steps {
+            let epoch = self.cfg.epoch_of(t);
+            let replies = {
+                let (b, _w) = self.ps.broadcast_at_epoch(self.workers.len(), epoch);
+                self.bus.round(&b, &mut self.workers)?
+            };
+            last_loss = self.ps.apply(&replies)?;
+            let do_eval = self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0;
+            if do_eval || t == self.cfg.steps {
+                let acc = self.eval()?;
+                let s = &self.ps.stats;
+                self.log.push(Row {
+                    t,
+                    epoch,
+                    train_loss: last_loss,
+                    test_acc: acc,
+                    up_mb_per_round: s.up_mb_per_round_per_worker(self.workers.len()),
+                    down_mb_per_round: s.down_mb_per_round_per_worker(self.workers.len()),
+                    residual_norm: self.workers[0].residual_norm(),
+                });
+                eprintln!(
+                    "[{}] t={t} epoch={epoch} loss={last_loss:.4} acc={:.2}%",
+                    self.log.label,
+                    100.0 * acc
+                );
+            }
+        }
+        let (size_mb, fp32_mb) = self.model_size_mb();
+        Ok(RunSummary {
+            label: self.log.label.clone(),
+            final_acc: self.log.last_acc().unwrap_or(0.0),
+            best_acc: self.log.best_acc().unwrap_or(0.0),
+            final_loss: last_loss,
+            comm_mb_per_iter: self.ps.stats.up_mb_per_round_per_worker(self.workers.len()),
+            model_size_mb: size_mb,
+            model_size_fp32_mb: fp32_mb,
+            steps: self.cfg.steps,
+        })
+    }
+
+    /// Snapshot the current training state (weights + step + worker
+    /// optimizer states when available).
+    pub fn checkpoint(&self) -> super::checkpoint::Checkpoint {
+        super::checkpoint::Checkpoint {
+            model: self.cfg.model.clone(),
+            step: self.ps.step(),
+            x: self.ps.master().to_vec(),
+            workers: self
+                .workers
+                .iter()
+                .map(|w| {
+                    w.opt_state().map(|(m, v, e)| super::checkpoint::WorkerState { m, v, e })
+                })
+                .collect(),
+        }
+    }
+
+    /// Resume from a checkpoint written by [`Trainer::checkpoint`].
+    pub fn restore(&mut self, ckpt: &super::checkpoint::Checkpoint) -> Result<()> {
+        if ckpt.model != self.cfg.model {
+            return Err(anyhow!("checkpoint is for model '{}', trainer runs '{}'", ckpt.model, self.cfg.model));
+        }
+        if ckpt.x.len() != self.model.dim() {
+            return Err(anyhow!("checkpoint dim {} != model dim {}", ckpt.x.len(), self.model.dim()));
+        }
+        self.ps.restore(&ckpt.x, ckpt.step);
+        for (w, ws) in self.workers.iter_mut().zip(&ckpt.workers) {
+            if let Some(ws) = ws {
+                w.opt_restore(&ws.m, &ws.v, &ws.e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate arbitrary weights (e.g. from a checkpoint) on the
+    /// configured dataset.
+    pub fn eval_weights(&self, w: &[f32]) -> Result<f32> {
+        self.model.accuracy(w, self.data.as_ref(), self.cfg.eval_batches)
+    }
+
+    /// Post-training weight quantization (the paper's **WQuan** rows):
+    /// train at full precision, then quantize the final weights and
+    /// re-evaluate.
+    pub fn eval_post_quantized(&mut self, kx: u32) -> Result<f32> {
+        let wq = crate::quant::WQuant::new(kx);
+        let mut q = vec![0.0f32; self.ps.dim()];
+        wq.quantize_into(&self.ps.master().to_vec(), &mut q);
+        self.model.accuracy(&q, self.data.as_ref(), self.cfg.eval_batches)
+    }
+}

@@ -1,0 +1,40 @@
+//! Synthetic datasets — the CPU-scale stand-ins for CIFAR10/100 and the
+//! LM corpus (DESIGN.md §Substitutions).
+
+pub mod text;
+pub mod vector;
+pub mod vision;
+
+pub use text::SyntheticText;
+pub use vector::SyntheticVector;
+pub use vision::SyntheticVision;
+
+/// A minibatch as the flat buffers the PJRT graphs consume.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// (x f32 [B, ...flattened], y i32 [B])
+    Vision { x: Vec<f32>, y: Vec<i32> },
+    /// (tokens i32 [B, T], targets i32 [B, T])
+    Text { x: Vec<i32>, y: Vec<i32> },
+}
+
+impl Batch {
+    pub fn labels(&self) -> &[i32] {
+        match self {
+            Batch::Vision { y, .. } | Batch::Text { y, .. } => y,
+        }
+    }
+}
+
+/// Common dataset interface: deterministic, shardable by worker.
+pub trait Dataset: Send + Sync {
+    /// Training batch for (worker, step). Deterministic in all args.
+    fn train_batch(&self, worker: usize, step: u64, batch: usize) -> Batch;
+    /// Fixed held-out evaluation batch `idx` of size `batch`.
+    fn eval_batch(&self, idx: usize, batch: usize) -> Batch;
+    /// Number of eval batches available at this size.
+    fn eval_batches(&self, batch: usize) -> usize;
+    fn num_classes(&self) -> usize;
+    /// Samples per epoch across all workers (defines epoch boundaries).
+    fn train_size(&self) -> usize;
+}

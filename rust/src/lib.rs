@@ -1,0 +1,52 @@
+//! # QAdam-EF — Quantized Adam with Error Feedback
+//!
+//! Reproduction of *"Quantized Adam with Error Feedback"* (Chen, Shen,
+//! Huang, Liu; 2020): a parameter-server distributed Adam with
+//! gradient quantization (log levels, ∞-norm scaled), weight
+//! quantization (uniform grid), and worker-side error feedback.
+//!
+//! Layering (see DESIGN.md):
+//!
+//! * [`quant`] — compressors (`Q_g`, `Q_x`, TernGrad, blockwise-EF),
+//!   bit-packing wire codecs, error-feedback state.
+//! * [`optim`] — worker-side optimizers: QAdam-EF (Alg. 1/3), plain
+//!   Adam, TernGrad-SGD and blockwise-momentum-SGD baselines.
+//! * [`models`] — the `artifacts/manifest.json` contract with the JAX
+//!   layer: parameter layouts, flatten/unflatten.
+//! * [`data`] — synthetic vision / text datasets (CIFAR stand-ins).
+//! * [`runtime`] — PJRT CPU runtime: loads `artifacts/*.hlo.txt`
+//!   (model fwd/bwd graphs and the fused Pallas QAdam step kernel)
+//!   and executes them from the request path. Python is never needed
+//!   at run time.
+//! * [`ps`] — the parameter-server system: server (Alg. 2), worker
+//!   (Alg. 3), transports (in-proc / TCP), protocol + byte accounting.
+//! * [`coordinator`] — experiment configs, the synchronous training
+//!   driver, metrics/CSV logging.
+//! * [`sim`] — synthetic stochastic nonconvex problems for the
+//!   convergence-theory checks (Theorems 3.1–3.3).
+
+pub mod coordinator;
+pub mod data;
+pub mod models;
+pub mod optim;
+pub mod ps;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Paper-default hyperparameters (§5.1).
+pub mod defaults {
+    /// Momentum parameter β (paper: 0.99).
+    pub const BETA: f32 = 0.99;
+    /// EMA parameter θ for the second moment (paper: 0.999).
+    pub const THETA: f32 = 0.999;
+    /// Adaptivity floor ε (paper: 1e-5).
+    pub const EPS: f32 = 1e-5;
+    /// Starting base learning rate (paper: 1e-3 by grid search).
+    pub const ALPHA: f32 = 1e-3;
+    /// Number of workers (paper: 8).
+    pub const WORKERS: usize = 8;
+    /// Per-worker batch size (paper: 16).
+    pub const BATCH: usize = 16;
+}

@@ -1,0 +1,263 @@
+//! `qadam` — CLI launcher for the QAdam-EF parameter-server system.
+//!
+//! Subcommands:
+//!   train   single-process training (in-proc PS + N workers, PJRT graphs)
+//!   eval    evaluate a checkpoint (optionally after weight quantization)
+//!   serve   TCP parameter server (pair with `worker` processes)
+//!   worker  TCP worker process
+//!   info    inspect artifacts/manifest.json
+//!
+//! Examples:
+//!   qadam train --model vgg_sim --dataset cifar10_sim --kg 2 --steps 200
+//!   qadam train --model resnet_sim --dataset cifar100_sim --method terngrad
+//!   qadam serve --addr 127.0.0.1:7777 --workers 2 &
+//!   qadam worker --addr 127.0.0.1:7777 --id 0 & qadam worker --id 1
+
+use anyhow::{anyhow, bail, Result};
+use qadam::coordinator::config::Engine;
+use qadam::coordinator::{ExperimentConfig, Method, Trainer};
+use qadam::models::{artifacts_dir, Manifest};
+use qadam::optim::LrSchedule;
+use qadam::util::Args;
+
+const USAGE: &str = "\
+qadam — Quantized Adam with Error Feedback (paper reproduction)
+
+USAGE: qadam <train|serve|worker|info> [flags]
+
+train flags:
+  --model NAME          manifest model (default vgg_sim)
+  --dataset NAME        cifar10_sim | cifar100_sim | text (default cifar10_sim)
+  --method NAME         qadam | terngrad | blockwise (default qadam)
+  --kg K                gradient quantization levels (omit = fp32 gradients)
+  --no-ef               disable error feedback (ablation)
+  --kx K                weight quantization level (omit = fp32 weights)
+  --block N             blockwise baseline block size (default 4096)
+  --engine E            native | pjrt_kernel (default native)
+  --workers N           number of workers (default 8)
+  --steps N             training steps (default 200)
+  --steps-per-epoch N   epoch length for LR decay (default 64)
+  --alpha A             base learning rate (default 1e-3)
+  --seed S              rng seed (default 0)
+  --eval-every N        evaluation cadence (default 50)
+  --eval-batches N      eval batches per evaluation (default 4)
+  --csv PATH            write the metrics curve CSV
+  --save-ckpt PATH      write a checkpoint at the end of training
+  --resume PATH         resume from a checkpoint
+
+eval flags:
+  --ckpt PATH --model NAME --dataset NAME [--post-kx K] [--eval-batches N]
+
+serve flags:  --addr A --workers N --dim D --steps N [--kx K]
+worker flags: --addr A --id I --dim D --method M [--kg K] [--alpha A]
+";
+
+fn parse_method(a: &Args) -> Result<(Method, Option<u32>, Engine)> {
+    let kg: Option<u32> = a.opt("kg")?;
+    let kx: Option<u32> = a.opt("kx")?;
+    let method = match a.get_str("method", "qadam").as_str() {
+        "qadam" => Method::QAdam { kg, error_feedback: !a.flag("no_ef") },
+        "terngrad" => Method::TernGrad,
+        "blockwise" => Method::Blockwise { block: a.get("block", 4096usize)?, momentum: 0.9 },
+        other => bail!("unknown method '{other}'"),
+    };
+    let engine = match a.get_str("engine", "native").as_str() {
+        "native" => Engine::Native,
+        "pjrt_kernel" | "pjrt" => Engine::PjrtKernel,
+        other => bail!("unknown engine '{other}'"),
+    };
+    Ok((method, kx, engine))
+}
+
+fn build_sim_opt(m: Method, dim: usize, lr: LrSchedule) -> Box<dyn qadam::optim::WorkerOpt> {
+    use qadam::optim::{BlockwiseSgdEf, QAdamEf, TernGradSgd};
+    match m {
+        Method::QAdam { kg: Some(k), error_feedback } => Box::new(QAdamEf::new(
+            dim,
+            Box::new(qadam::quant::LogQuant::new(k)),
+            error_feedback,
+            lr,
+            qadam::optim::ThetaSchedule::Const { theta: qadam::defaults::THETA },
+            qadam::defaults::BETA,
+            qadam::defaults::EPS,
+        )),
+        Method::QAdam { kg: None, .. } => Box::new(QAdamEf::full_precision(dim, lr)),
+        Method::TernGrad => Box::new(TernGradSgd::new(dim, lr)),
+        Method::Blockwise { block, momentum } => Box::new(BlockwiseSgdEf::new(dim, momentum, block, lr)),
+    }
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let (method, kx, engine) = parse_method(a)?;
+    let cfg = ExperimentConfig {
+        model: a.get_str("model", "vgg_sim"),
+        dataset: a.get_str("dataset", "cifar10_sim"),
+        method,
+        kx,
+        workers: a.get("workers", qadam::defaults::WORKERS)?,
+        batch: qadam::defaults::BATCH,
+        steps: a.get("steps", 200u64)?,
+        steps_per_epoch: a.get("steps_per_epoch", 64u64)?,
+        lr: LrSchedule::ExpDecay { alpha: a.get("alpha", 1e-3f32)?, half_every: 50 },
+        engine,
+        seed: a.get("seed", 0u64)?,
+        eval_every: a.get("eval_every", 50u64)?,
+        eval_batches: a.get("eval_batches", 4usize)?,
+    };
+    let csv: Option<String> = a.opt("csv")?;
+    let save_ckpt: Option<String> = a.opt("save_ckpt")?;
+    let resume: Option<String> = a.opt("resume")?;
+    a.reject_unknown()?;
+    let mut tr = Trainer::new(cfg)?;
+    if let Some(p) = resume {
+        let ckpt = qadam::coordinator::Checkpoint::load(std::path::Path::new(&p))?;
+        tr.restore(&ckpt)?;
+        println!("resumed from {p} at step {}", ckpt.step);
+    }
+    let summary = tr.run()?;
+    if let Some(p) = save_ckpt {
+        let p = std::path::PathBuf::from(p);
+        tr.checkpoint().save(&p)?;
+        println!("checkpoint written to {}", p.display());
+    }
+    println!("{}", summary.table_row());
+    if let Some(p) = csv {
+        let p = std::path::PathBuf::from(p);
+        tr.log.write_csv(&p)?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    use qadam::ps::transport::TcpServer;
+    use qadam::ps::ParameterServer;
+    let addr = a.get_str("addr", "127.0.0.1:7777");
+    let workers = a.get("workers", 2usize)?;
+    let dim = a.get("dim", 64usize)?;
+    let steps = a.get("steps", 200u64)?;
+    let kx: Option<u32> = a.opt("kx")?;
+    a.reject_unknown()?;
+    let mut srv = TcpServer::bind_and_accept(&addr, workers)?;
+    let problem = qadam::sim::StochasticProblem::new(dim, 0.05, 1);
+    let mut ps = ParameterServer::new(problem.x0(), kx);
+    for t in 1..=steps {
+        let replies = {
+            let (b, _) = ps.broadcast(workers);
+            srv.round(&b)?
+        };
+        let loss = ps.apply(&replies)?;
+        if t % 50 == 0 || t == steps {
+            println!(
+                "[server] t={t} loss={loss:.5} |grad|^2={:.6} up={}B down={}B",
+                problem.grad_norm_sq(ps.master()),
+                ps.stats.up_bytes,
+                ps.stats.down_bytes
+            );
+        }
+    }
+    srv.shutdown()?;
+    println!(
+        "[server] done: {:.4} MB up, {:.4} MB down over {} rounds",
+        ps.stats.up_bytes as f64 / 1e6,
+        ps.stats.down_bytes as f64 / 1e6,
+        ps.stats.rounds
+    );
+    Ok(())
+}
+
+fn cmd_worker(a: &Args) -> Result<()> {
+    use qadam::ps::transport::tcp_worker_loop;
+    use qadam::ps::worker::{SimGradSource, Worker};
+    let addr = a.get_str("addr", "127.0.0.1:7777");
+    let id = a.get("id", 0u32)?;
+    let dim = a.get("dim", 64usize)?;
+    let alpha = a.get("alpha", 0.01f32)?;
+    let (m, _kx, _engine) = parse_method(a)?;
+    a.reject_unknown()?;
+    let src = SimGradSource { problem: qadam::sim::StochasticProblem::new(dim, 0.05, 1) };
+    let opt = build_sim_opt(m, dim, LrSchedule::Const { alpha });
+    let mut w = Worker::new(id, opt, Box::new(src), 7);
+    let rounds = tcp_worker_loop(&addr, &mut w)?;
+    println!("[worker {id}] served {rounds} rounds ({})", w.opt_name());
+    Ok(())
+}
+
+fn cmd_eval(a: &Args) -> Result<()> {
+    use qadam::coordinator::config::{Engine, ExperimentConfig, Method};
+    let ckpt_path = a.get_str("ckpt", "");
+    if ckpt_path.is_empty() {
+        bail!("--ckpt PATH required");
+    }
+    let ckpt = qadam::coordinator::Checkpoint::load(std::path::Path::new(&ckpt_path))?;
+    let cfg = ExperimentConfig {
+        model: a.get_str("model", &ckpt.model),
+        dataset: a.get_str("dataset", "vector"),
+        method: Method::QAdam { kg: None, error_feedback: false },
+        kx: None,
+        workers: 1,
+        batch: qadam::defaults::BATCH,
+        steps: 0,
+        steps_per_epoch: 1,
+        lr: LrSchedule::Const { alpha: 0.0 },
+        engine: Engine::Native,
+        seed: a.get("seed", 0u64)?,
+        eval_every: 0,
+        eval_batches: a.get("eval_batches", 4usize)?,
+    };
+    let post_kx: Option<u32> = a.opt("post_kx")?;
+    a.reject_unknown()?;
+    let tr = Trainer::new(cfg)?;
+    let acc = match post_kx {
+        None => tr.eval_weights(&ckpt.x)?,
+        Some(kx) => {
+            let wq = qadam::quant::WQuant::new(kx);
+            let mut q = vec![0.0f32; ckpt.x.len()];
+            wq.quantize_into(&ckpt.x, &mut q);
+            tr.eval_weights(&q)?
+        }
+    };
+    println!(
+        "checkpoint {} (model {}, step {}): accuracy {:.2}%{}",
+        ckpt_path,
+        ckpt.model,
+        ckpt.step,
+        100.0 * acc,
+        post_kx.map(|k| format!(" at kx={k} weights")).unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = artifacts_dir();
+    let m = Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!("optimizer kernel: {} (chunk {})", m.optimizer.qadam_artifact, m.optimizer.chunk);
+    for (name, meta) in &m.models {
+        println!(
+            "  {:<20} {:>9} params  {:>2} tensors  train_x={:?} ({})",
+            name,
+            meta.total_params,
+            meta.params.len(),
+            meta.train_x.shape,
+            meta.kind
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}'\n{USAGE}")),
+    }
+}

@@ -1,0 +1,240 @@
+//! The `artifacts/manifest.json` contract with the JAX layer.
+//!
+//! `python/compile/aot.py` writes, for every model, the ordered
+//! parameter list (names + shapes), the train/eval input specs and the
+//! artifact file names; plus the optimizer-kernel metadata (chunk size,
+//! scalar order). This module parses it and provides the flat ⇄
+//! per-parameter layout used everywhere on the Rust side.
+
+use crate::util::json::{parse, Value};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelMeta>,
+    pub optimizer: OptimizerMeta,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub params: Vec<ParamMeta>,
+    pub total_params: usize,
+    pub train_x: TensorSpec,
+    pub train_y: TensorSpec,
+    pub eval_x: TensorSpec,
+    pub num_classes: usize,
+    pub kind: String, // "classifier" | "lm"
+    pub grad_artifact: String,
+    pub eval_artifact: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamMeta {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OptimizerMeta {
+    pub chunk: usize,
+    pub qadam_artifact: String,
+    pub qadam_scalars: Vec<String>,
+    pub adam_artifact: String,
+    pub adam_scalars: Vec<String>,
+    pub wquant_artifact: String,
+    pub wquant_scalars: Vec<String>,
+}
+
+fn tensor_spec(v: &Value) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        shape: v.get("shape")?.usize_arr()?,
+        dtype: v.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+fn str_arr(v: &Value) -> Result<Vec<String>> {
+    v.as_arr()?.iter().map(|s| Ok(s.as_str()?.to_string())).collect()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let p = artifacts_dir.join("manifest.json");
+        let s = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {} — run `make artifacts` first", p.display()))?;
+        Self::from_json(&s).context("parsing manifest.json")
+    }
+
+    pub fn from_json(s: &str) -> Result<Self> {
+        let v = parse(s)?;
+        let mut models = BTreeMap::new();
+        for (name, mv) in v.get("models")?.as_obj()? {
+            let params = mv
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|pv| {
+                    Ok(ParamMeta {
+                        name: pv.get("name")?.as_str()?.to_string(),
+                        shape: pv.get("shape")?.usize_arr()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    params,
+                    total_params: mv.get("total_params")?.as_usize()?,
+                    train_x: tensor_spec(mv.get("train_x")?)?,
+                    train_y: tensor_spec(mv.get("train_y")?)?,
+                    eval_x: tensor_spec(mv.get("eval_x")?)?,
+                    num_classes: mv.get("num_classes")?.as_usize()?,
+                    kind: mv.get("kind")?.as_str()?.to_string(),
+                    grad_artifact: mv.get("grad_artifact")?.as_str()?.to_string(),
+                    eval_artifact: mv.get("eval_artifact")?.as_str()?.to_string(),
+                },
+            );
+        }
+        let o = v.get("optimizer")?;
+        let optimizer = OptimizerMeta {
+            chunk: o.get("chunk")?.as_usize()?,
+            qadam_artifact: o.get("qadam_artifact")?.as_str()?.to_string(),
+            qadam_scalars: str_arr(o.get("qadam_scalars")?)?,
+            adam_artifact: o.get("adam_artifact")?.as_str()?.to_string(),
+            adam_scalars: str_arr(o.get("adam_scalars")?)?,
+            wquant_artifact: o.get("wquant_artifact")?.as_str()?.to_string(),
+            wquant_scalars: str_arr(o.get("wquant_scalars")?)?,
+        };
+        Ok(Manifest { models, optimizer })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("model '{}' not in manifest (have: {:?})", name, self.models.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+/// Byte/offset layout of the flattened parameter vector: parameters are
+/// concatenated in manifest order (the same order as the HLO graph's
+/// leading arguments).
+#[derive(Clone, Debug)]
+pub struct ParamLayout {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub offsets: Vec<usize>, // len = nparams + 1
+}
+
+impl ParamLayout {
+    pub fn from_meta(meta: &ModelMeta) -> Self {
+        let mut offsets = Vec::with_capacity(meta.params.len() + 1);
+        let mut off = 0;
+        for p in &meta.params {
+            offsets.push(off);
+            off += p.size();
+        }
+        offsets.push(off);
+        debug_assert_eq!(off, meta.total_params);
+        Self {
+            names: meta.params.iter().map(|p| p.name.clone()).collect(),
+            shapes: meta.params.iter().map(|p| p.shape.clone()).collect(),
+            offsets,
+        }
+    }
+
+    pub fn nparams(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn total(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Slice of parameter `i` inside a flat vector.
+    pub fn slice<'a>(&self, flat: &'a [f32], i: usize) -> &'a [f32] {
+        &flat[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    pub fn slice_mut<'a>(&self, flat: &'a mut [f32], i: usize) -> &'a mut [f32] {
+        &mut flat[self.offsets[i]..self.offsets[i + 1]]
+    }
+}
+
+/// Where the artifacts live; resolves relative to the repo root by
+/// default (`QADAM_ARTIFACTS` overrides).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("QADAM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // crate root = CARGO_MANIFEST_DIR at build time; fall back to cwd.
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    Path::new(&root).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_meta() -> ModelMeta {
+        ModelMeta {
+            params: vec![
+                ParamMeta { name: "w0".into(), shape: vec![4, 3] },
+                ParamMeta { name: "b0".into(), shape: vec![3] },
+                ParamMeta { name: "w1".into(), shape: vec![3, 2] },
+            ],
+            total_params: 21,
+            train_x: TensorSpec { shape: vec![8, 4], dtype: "f32".into() },
+            train_y: TensorSpec { shape: vec![8], dtype: "i32".into() },
+            eval_x: TensorSpec { shape: vec![16, 4], dtype: "f32".into() },
+            num_classes: 2,
+            kind: "classifier".into(),
+            grad_artifact: "grad_x.hlo.txt".into(),
+            eval_artifact: "eval_x.hlo.txt".into(),
+        }
+    }
+
+    #[test]
+    fn layout_offsets() {
+        let l = ParamLayout::from_meta(&fake_meta());
+        assert_eq!(l.offsets, vec![0, 12, 15, 21]);
+        assert_eq!(l.total(), 21);
+        let flat: Vec<f32> = (0..21).map(|i| i as f32).collect();
+        assert_eq!(l.slice(&flat, 1), &[12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn manifest_parses_real_artifact() {
+        // Uses the real artifacts dir when present (CI runs after
+        // `make artifacts`); skips silently otherwise.
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("mlp"));
+        let mlp = m.model("mlp").unwrap();
+        let l = ParamLayout::from_meta(mlp);
+        assert_eq!(l.total(), mlp.total_params);
+        assert_eq!(m.optimizer.chunk % 1024, 0);
+        assert_eq!(m.optimizer.qadam_scalars, vec!["alpha", "beta", "theta", "eps", "qlo"]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Generic-Adam moment state and the fused native step (Alg. 1 lines
+//! 3–5). This is the pure-Rust mirror of the Pallas kernel in
+//! `python/compile/kernels/qadam.py`; the integration tests assert the
+//! two produce the same numbers through the PJRT runtime.
+
+/// First/second moment buffers of one worker.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl AdamState {
+    pub fn new(dim: usize) -> Self {
+        Self { m: vec![0.0; dim], v: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Fused moment update + update direction:
+    ///
+    /// ```text
+    ///   m <- beta*m + (1-beta) g
+    ///   v <- theta*v + (1-theta) g^2
+    ///   dir_i = alpha * m_i / sqrt(v_i + eps)
+    /// ```
+    ///
+    /// Single pass, no allocation — the worker hot loop.
+    pub fn step_into(
+        &mut self,
+        g: &[f32],
+        alpha: f32,
+        beta: f32,
+        theta: f32,
+        eps: f32,
+        dir: &mut [f32],
+    ) {
+        assert_eq!(g.len(), self.m.len());
+        assert_eq!(dir.len(), self.m.len());
+        let (b1, b2) = (1.0 - beta, 1.0 - theta);
+        for i in 0..g.len() {
+            let gi = g[i];
+            let m = beta * self.m[i] + b1 * gi;
+            let v = theta * self.v[i] + b2 * gi * gi;
+            self.m[i] = m;
+            self.v[i] = v;
+            dir[i] = alpha * m / (v + eps).sqrt();
+        }
+    }
+
+    /// Overwrite the moments (used by the PJRT path, where the Pallas
+    /// kernel owns the recursion).
+    pub fn set(&mut self, m: &[f32], v: &[f32]) {
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+    }
+}
+
+/// Plain momentum buffer for the SGD baselines: `p <- mu*p + g`.
+#[derive(Clone, Debug)]
+pub struct Momentum {
+    pub p: Vec<f32>,
+    pub mu: f32,
+}
+
+impl Momentum {
+    pub fn new(dim: usize, mu: f32) -> Self {
+        Self { p: vec![0.0; dim], mu }
+    }
+
+    pub fn step_into(&mut self, g: &[f32], lr: f32, dir: &mut [f32]) {
+        for i in 0..g.len() {
+            let p = self.mu * self.p[i] + g[i];
+            self.p[i] = p;
+            dir[i] = lr * p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_scalar_recursion() {
+        let mut st = AdamState::new(3);
+        let g1 = [1.0f32, -2.0, 0.5];
+        let g2 = [0.5f32, 1.0, -0.25];
+        let (alpha, beta, theta, eps) = (0.1, 0.9, 0.99, 1e-8);
+        let mut dir = vec![0.0; 3];
+        st.step_into(&g1, alpha, beta, theta, eps, &mut dir);
+        // t=1: m = 0.1*g, v = 0.01*g^2
+        for i in 0..3 {
+            let m = 0.1 * g1[i];
+            let v = 0.01 * g1[i] * g1[i];
+            assert!((st.m[i] - m).abs() < 1e-7);
+            assert!((st.v[i] - v).abs() < 1e-7);
+            assert!((dir[i] - alpha * m / (v + eps).sqrt()).abs() < 1e-6);
+        }
+        st.step_into(&g2, alpha, beta, theta, eps, &mut dir);
+        for i in 0..3 {
+            let m = 0.9 * (0.1 * g1[i]) + 0.1 * g2[i];
+            assert!((st.m[i] - m).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_gradient_decays_direction() {
+        let mut st = AdamState::new(1);
+        let mut dir = vec![0.0; 1];
+        st.step_into(&[1.0], 0.1, 0.9, 0.99, 1e-8, &mut dir);
+        let d1 = dir[0].abs();
+        for _ in 0..50 {
+            st.step_into(&[0.0], 0.1, 0.9, 0.99, 1e-8, &mut dir);
+        }
+        assert!(dir[0].abs() < 0.1 * d1);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut mo = Momentum::new(1, 0.9);
+        let mut dir = vec![0.0; 1];
+        for _ in 0..200 {
+            mo.step_into(&[1.0], 1.0, &mut dir);
+        }
+        // geometric limit 1/(1-0.9) = 10
+        assert!((dir[0] - 10.0).abs() < 0.1);
+    }
+}

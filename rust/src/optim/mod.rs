@@ -1,0 +1,24 @@
+//! Worker-side optimizers.
+//!
+//! The unifying contract ([`WorkerOpt`]) is the paper's Alg. 3: given
+//! the local stochastic gradient at the broadcast weights, produce the
+//! compressed update message `delta_t^(i)`; the server applies
+//! `x_{t+1} = x_t - mean_i decode(delta_t^(i))`
+//! (the paper's Alg. 2 line 4 with the descent sign made explicit).
+//!
+//! * [`QAdamEf`] — the paper's method (Alg. 1 / Alg. 3): generic Adam
+//!   moments + error feedback + any compressor (LogQuant by default).
+//!   Has both a pure-Rust fused hot loop and a PJRT/Pallas-backed
+//!   variant (see [`crate::runtime::KernelQAdam`]).
+//! * [`TernGradSgd`] — TernGrad baseline: quantize `lr * g` stochastically
+//!   (unbiased), no EF, no momentum (Wen et al. [39] base form).
+//! * [`BlockwiseSgdEf`] — Zheng et al. [44]: momentum SGD update,
+//!   blockwise sign compression, error feedback.
+
+pub mod adam;
+pub mod schedule;
+pub mod worker_opt;
+
+pub use adam::AdamState;
+pub use schedule::{LrSchedule, ThetaSchedule};
+pub use worker_opt::{BlockwiseSgdEf, QAdamEf, TernGradSgd, WorkerOpt};

@@ -1,0 +1,79 @@
+//! Hyperparameter schedules (Assumption 4 and the paper's §5.1 choices).
+
+/// Base learning rate α_t.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// α_t = α (constant).
+    Const { alpha: f32 },
+    /// α_t = α / sqrt(t) — Assumption 4 / Theorems 3.1–3.3.
+    InvSqrt { alpha: f32 },
+    /// α_t = α / sqrt(T) for a fixed horizon — Corollaries 3.1.1/3.2.1/3.3.1.
+    FixedHorizon { alpha: f32, horizon: u64 },
+    /// Halve every `half_every` epochs starting from α — the paper's
+    /// experimental choice (§5.1: halve every 50 epochs from 1e-3).
+    ExpDecay { alpha: f32, half_every: u64 },
+}
+
+impl LrSchedule {
+    /// `t` is the 1-based iteration, `epoch` the 0-based epoch.
+    pub fn at(&self, t: u64, epoch: u64) -> f32 {
+        match *self {
+            LrSchedule::Const { alpha } => alpha,
+            LrSchedule::InvSqrt { alpha } => alpha / (t.max(1) as f32).sqrt(),
+            LrSchedule::FixedHorizon { alpha, horizon } => alpha / (horizon.max(1) as f32).sqrt(),
+            LrSchedule::ExpDecay { alpha, half_every } => {
+                alpha * 0.5f32.powi((epoch / half_every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+/// Second-moment EMA parameter θ_t.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ThetaSchedule {
+    /// θ_t = θ (the paper's experimental choice, θ = 0.999).
+    Const { theta: f32 },
+    /// θ_t = 1 - θ/t — Assumption 4.
+    Anneal { theta: f32 },
+    /// θ_t = 1 - θ/T — the corollaries' fixed-horizon variant.
+    FixedHorizon { theta: f32, horizon: u64 },
+}
+
+impl ThetaSchedule {
+    pub fn at(&self, t: u64) -> f32 {
+        match *self {
+            ThetaSchedule::Const { theta } => theta,
+            ThetaSchedule::Anneal { theta } => 1.0 - theta / t.max(1) as f32,
+            ThetaSchedule::FixedHorizon { theta, horizon } => 1.0 - theta / horizon.max(1) as f32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invsqrt_matches_assumption4() {
+        let s = LrSchedule::InvSqrt { alpha: 0.1 };
+        assert_eq!(s.at(1, 0), 0.1);
+        assert!((s.at(4, 0) - 0.05).abs() < 1e-7);
+        assert!((s.at(100, 0) - 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    fn expdecay_halves() {
+        let s = LrSchedule::ExpDecay { alpha: 1e-3, half_every: 50 };
+        assert_eq!(s.at(1, 0), 1e-3);
+        assert_eq!(s.at(1, 49), 1e-3);
+        assert_eq!(s.at(1, 50), 5e-4);
+        assert_eq!(s.at(1, 150), 1.25e-4);
+    }
+
+    #[test]
+    fn theta_anneal() {
+        let s = ThetaSchedule::Anneal { theta: 0.1 };
+        assert!((s.at(1) - 0.9).abs() < 1e-7);
+        assert!((s.at(10) - 0.99).abs() < 1e-7);
+    }
+}

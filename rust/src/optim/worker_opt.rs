@@ -1,0 +1,314 @@
+//! The worker-side optimizer contract (Alg. 3) and its implementations.
+
+use super::adam::{AdamState, Momentum};
+use super::schedule::{LrSchedule, ThetaSchedule};
+use crate::quant::{Blockwise, Compressor, ErrorFeedback, Identity, LogQuant, TernGrad, WireMsg};
+use crate::util::DetRng;
+
+/// One worker's optimizer: consumes the local stochastic gradient at the
+/// broadcast weights and emits the compressed update message. The
+/// server applies `x <- x - mean_i decode(msg_i)`.
+pub trait WorkerOpt {
+    /// `t` is the 1-based global iteration; `epoch` drives ExpDecay.
+    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg;
+    fn name(&self) -> String;
+    /// Analytic uplink bits per model element (Comm column formula).
+    fn bits_per_element(&self) -> f64;
+    /// Residual norm (0 when EF is off) — for diagnostics.
+    fn residual_norm(&self) -> f32 {
+        0.0
+    }
+    /// Checkpointable optimizer state (m, v, e), when the optimizer has
+    /// one (QAdam family). Baselines return None (cold resume).
+    fn state(&self) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        None
+    }
+    /// Restore state saved by [`WorkerOpt::state`].
+    fn restore(&mut self, _m: &[f32], _v: &[f32], _e: &[f32]) {}
+}
+
+// ---------------------------------------------------------------------------
+// QAdam-EF — the paper's method
+// ---------------------------------------------------------------------------
+
+/// Quantized generic Adam with error feedback (Alg. 1 / Alg. 3),
+/// pure-Rust fused path.
+pub struct QAdamEf {
+    state: AdamState,
+    ef: ErrorFeedback,
+    comp: Box<dyn Compressor>,
+    pub lr: LrSchedule,
+    pub theta: ThetaSchedule,
+    pub beta: f32,
+    pub eps: f32,
+    dir: Vec<f32>,
+}
+
+impl QAdamEf {
+    pub fn new(
+        dim: usize,
+        comp: Box<dyn Compressor>,
+        ef_enabled: bool,
+        lr: LrSchedule,
+        theta: ThetaSchedule,
+        beta: f32,
+        eps: f32,
+    ) -> Self {
+        Self {
+            state: AdamState::new(dim),
+            ef: ErrorFeedback::new(dim, ef_enabled),
+            comp,
+            lr,
+            theta,
+            beta,
+            eps,
+            dir: vec![0.0; dim],
+        }
+    }
+
+    /// Paper defaults: LogQuant(kg), EF on, β=0.99, θ=0.999, ε=1e-5.
+    pub fn paper_default(dim: usize, kg: u32, lr: LrSchedule) -> Self {
+        Self::new(
+            dim,
+            Box::new(LogQuant::new(kg)),
+            true,
+            lr,
+            ThetaSchedule::Const { theta: crate::defaults::THETA },
+            crate::defaults::BETA,
+            crate::defaults::EPS,
+        )
+    }
+
+    /// Full-precision distributed Adam (Identity codec): the fp32 rows.
+    pub fn full_precision(dim: usize, lr: LrSchedule) -> Self {
+        Self::new(
+            dim,
+            Box::new(Identity),
+            false,
+            lr,
+            ThetaSchedule::Const { theta: crate::defaults::THETA },
+            crate::defaults::BETA,
+            crate::defaults::EPS,
+        )
+    }
+}
+
+impl WorkerOpt for QAdamEf {
+    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg {
+        let alpha = self.lr.at(t, epoch);
+        let theta = self.theta.at(t);
+        let mut dir = std::mem::take(&mut self.dir);
+        self.state.step_into(grad, alpha, self.beta, theta, self.eps, &mut dir);
+        let msg = self.ef.compress(&dir, self.comp.as_ref(), rng);
+        self.dir = dir;
+        msg
+    }
+
+    fn name(&self) -> String {
+        format!("qadam[{}{}]", self.comp.name(), if self.ef.enabled() { "+ef" } else { "" })
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        self.comp.bits_per_element()
+    }
+
+    fn residual_norm(&self) -> f32 {
+        self.ef.residual_norm()
+    }
+
+    fn state(&self) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        Some((self.state.m.clone(), self.state.v.clone(), self.ef.residual().to_vec()))
+    }
+
+    fn restore(&mut self, m: &[f32], v: &[f32], e: &[f32]) {
+        self.state.set(m, v);
+        self.ef.set_residual(e);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TernGrad baseline (Wen et al. [39])
+// ---------------------------------------------------------------------------
+
+/// TernGrad: workers send the unbiased stochastic ternary quantization
+/// of `lr_t * g`; no momentum, no error feedback (base algorithm).
+pub struct TernGradSgd {
+    comp: TernGrad,
+    pub lr: LrSchedule,
+    scaled: Vec<f32>,
+    q: Vec<f32>,
+}
+
+impl TernGradSgd {
+    pub fn new(dim: usize, lr: LrSchedule) -> Self {
+        Self { comp: TernGrad, lr, scaled: vec![0.0; dim], q: vec![0.0; dim] }
+    }
+}
+
+impl WorkerOpt for TernGradSgd {
+    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg {
+        let lr = self.lr.at(t, epoch);
+        for (s, &g) in self.scaled.iter_mut().zip(grad) {
+            *s = lr * g;
+        }
+        self.comp.compress_into(&self.scaled, &mut self.q, rng)
+    }
+
+    fn name(&self) -> String {
+        "terngrad".into()
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        self.comp.bits_per_element()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blockwise momentum SGD with EF (Zheng et al. [44])
+// ---------------------------------------------------------------------------
+
+/// Zheng et al.: momentum-SGD update, blockwise sign compression,
+/// error feedback.
+pub struct BlockwiseSgdEf {
+    mom: Momentum,
+    ef: ErrorFeedback,
+    comp: Blockwise,
+    pub lr: LrSchedule,
+    dir: Vec<f32>,
+}
+
+impl BlockwiseSgdEf {
+    pub fn new(dim: usize, mu: f32, block: usize, lr: LrSchedule) -> Self {
+        Self {
+            mom: Momentum::new(dim, mu),
+            ef: ErrorFeedback::new(dim, true),
+            comp: Blockwise::new(block),
+            lr,
+            dir: vec![0.0; dim],
+        }
+    }
+}
+
+impl WorkerOpt for BlockwiseSgdEf {
+    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg {
+        let lr = self.lr.at(t, epoch);
+        let mut dir = std::mem::take(&mut self.dir);
+        self.mom.step_into(grad, lr, &mut dir);
+        let msg = self.ef.compress(&dir, &self.comp, rng);
+        self.dir = dir;
+        msg
+    }
+
+    fn name(&self) -> String {
+        "blockwise-ef".into()
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        self.comp.bits_per_element()
+    }
+
+    fn residual_norm(&self) -> f32 {
+        self.ef.residual_norm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::seeded_rng;
+
+    fn quad_grad(x: &[f32]) -> Vec<f32> {
+        // f(x) = 0.5 ||x - 1||^2
+        x.iter().map(|&xi| xi - 1.0).collect()
+    }
+
+    fn run_opt(mut opt: Box<dyn WorkerOpt>, steps: u64) -> f32 {
+        // single-worker descent loop: x -= decode(msg)
+        let dim = 16;
+        let mut x = vec![0.0f32; dim];
+        let mut rng = seeded_rng(0, 0);
+        for t in 1..=steps {
+            let g = quad_grad(&x);
+            let msg = opt.step(&g, t, 0, &mut rng);
+            let mut delta = vec![0.0; dim];
+            crate::quant::decode_msg(&msg, &mut delta);
+            for i in 0..dim {
+                x[i] -= delta[i];
+            }
+        }
+        // final distance to optimum
+        x.iter().map(|&xi| (xi - 1.0) * (xi - 1.0)).sum::<f32>().sqrt()
+    }
+
+    #[test]
+    fn qadam_ef_converges_on_quadratic() {
+        // InvSqrt decay (Assumption 4) so the constant-step oscillation
+        // floor shrinks with t.
+        let opt = QAdamEf::paper_default(16, 2, LrSchedule::InvSqrt { alpha: 0.3 });
+        let d = run_opt(Box::new(opt), 800);
+        assert!(d < 0.2, "dist={d}");
+    }
+
+    #[test]
+    fn full_precision_adam_converges() {
+        let opt = QAdamEf::full_precision(16, LrSchedule::InvSqrt { alpha: 0.3 });
+        let d = run_opt(Box::new(opt), 800);
+        assert!(d < 0.15, "dist={d}");
+    }
+
+    #[test]
+    fn terngrad_converges_on_quadratic() {
+        let opt = TernGradSgd::new(16, LrSchedule::InvSqrt { alpha: 0.3 });
+        let d = run_opt(Box::new(opt), 800);
+        assert!(d < 0.3, "dist={d}");
+    }
+
+    #[test]
+    fn blockwise_converges_on_quadratic() {
+        let opt = BlockwiseSgdEf::new(16, 0.9, 8, LrSchedule::InvSqrt { alpha: 0.05 });
+        let d = run_opt(Box::new(opt), 800);
+        assert!(d < 0.3, "dist={d}");
+    }
+
+    #[test]
+    fn ef_residual_bounded_lemma_4_5() {
+        // Lemma 4.5's mechanism: ||e_t|| <= sum_i (1-delta)^(t-i+1) ||D_i||
+        // <= ((1-delta)/delta) max||D_i||, and ||D_t|| <= alpha_t sqrt(d)
+        // (since |m/sqrt(v+eps)| <= 1/sqrt(1-theta) is bounded). With a
+        // constant alpha the residual must stay bounded over time; with
+        // InvSqrt alpha it must shrink.
+        let run = |lr: LrSchedule, steps: u64| -> (f32, f32) {
+            let mut opt = QAdamEf::new(
+                16,
+                Box::new(LogQuant::new(0)),
+                true,
+                lr,
+                ThetaSchedule::Const { theta: 0.999 },
+                0.9,
+                1e-8,
+            );
+            let mut rng = seeded_rng(0, 0);
+            let mut mid = 0.0f32;
+            for t in 1..=steps {
+                // adversarial-ish heterogeneous gradients
+                let g: Vec<f32> = (0..16)
+                    .map(|i| ((t as f32 * 0.37 + i as f32).sin()) * (0.01 + i as f32 * 0.1))
+                    .collect();
+                opt.step(&g, t, 0, &mut rng);
+                if t == steps / 2 {
+                    mid = opt.residual_norm();
+                }
+            }
+            (mid, opt.residual_norm())
+        };
+        // constant alpha: bounded (end not much above mid)
+        let (mid_c, end_c) = run(LrSchedule::Const { alpha: 0.1 }, 1000);
+        assert!(end_c < 4.0 * mid_c.max(0.05), "const-alpha residual grew: mid={mid_c} end={end_c}");
+        // Cap from the lemma: ((1-delta)/delta) * max||D|| with delta >=
+        // 2^-(kg+2)=0.25 and ||D|| <= alpha*sqrt(d)*C; generous constant.
+        assert!(end_c <= 0.1 * 4.0 * 3.0 * 4.0, "end={end_c}");
+        // decaying alpha: residual shrinks with the step size
+        let (_, end_d) = run(LrSchedule::InvSqrt { alpha: 0.1 }, 1000);
+        assert!(end_d < end_c, "decayed residual {end_d} should be below constant-alpha {end_c}");
+    }
+}

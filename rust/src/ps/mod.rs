@@ -1,0 +1,25 @@
+//! The parameter-server system (paper Fig. 1, Algorithms 2–3).
+//!
+//! * [`server::ParameterServer`] — holds the full-precision master
+//!   weights, quantizes them for broadcast (`Q_x`), averages the
+//!   decoded worker deltas and applies `x ← x − mean δ` (Alg. 2; the
+//!   paper writes `+δ̂` with the descent sign folded into δ — we keep
+//!   the explicit minus).
+//! * [`worker::Worker`] — receives (quantized) weights, draws its data
+//!   shard, computes the local stochastic gradient (PJRT model graph or
+//!   a synthetic problem), runs its [`crate::optim::WorkerOpt`]
+//!   (Alg. 3) and replies with the compressed delta.
+//! * [`transport`] — how messages move: `LocalBus` (in-process,
+//!   deterministic, used by the trainer and benches) and a TCP
+//!   transport (length-prefixed frames) for the real multi-process
+//!   deployment demo.
+//! * [`protocol`] — the message types + byte accounting.
+
+pub mod protocol;
+pub mod server;
+pub mod transport;
+pub mod worker;
+
+pub use protocol::{CommStats, ToServer, ToWorker};
+pub use server::ParameterServer;
+pub use worker::{GradSource, SimGradSource, Worker};

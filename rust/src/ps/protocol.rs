@@ -1,0 +1,162 @@
+//! PS ⇄ worker message types, wire framing and byte accounting.
+
+use crate::quant::WireMsg;
+use anyhow::{anyhow, Result};
+
+/// Server → worker.
+#[derive(Clone, Debug)]
+pub enum ToWorker {
+    /// Broadcast of the (possibly Q_x-quantized) weights for step `t`.
+    Weights { t: u64, epoch: u64, msg: WireMsg },
+    Shutdown,
+}
+
+/// Worker → server.
+#[derive(Clone, Debug)]
+pub enum ToServer {
+    Delta { t: u64, worker: u32, loss: f32, msg: WireMsg },
+}
+
+impl ToWorker {
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            // t(8) + epoch(8) + payload
+            ToWorker::Weights { msg, .. } => 16 + msg.wire_bytes(),
+            ToWorker::Shutdown => 1,
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            ToWorker::Weights { t, epoch, msg } => {
+                let body = msg.to_bytes();
+                let mut out = Vec::with_capacity(17 + body.len());
+                out.push(1u8);
+                out.extend_from_slice(&t.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out.extend_from_slice(&body);
+                out
+            }
+            ToWorker::Shutdown => vec![0u8],
+        }
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        match b.first() {
+            Some(0) => Ok(ToWorker::Shutdown),
+            Some(1) => {
+                if b.len() < 17 {
+                    return Err(anyhow!("short Weights frame"));
+                }
+                let t = u64::from_le_bytes(b[1..9].try_into().unwrap());
+                let epoch = u64::from_le_bytes(b[9..17].try_into().unwrap());
+                let msg = WireMsg::from_bytes(&b[17..])?;
+                Ok(ToWorker::Weights { t, epoch, msg })
+            }
+            _ => Err(anyhow!("bad ToWorker tag")),
+        }
+    }
+}
+
+impl ToServer {
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            // t(8) + worker(4) + loss(4) + payload
+            ToServer::Delta { msg, .. } => 16 + msg.wire_bytes(),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            ToServer::Delta { t, worker, loss, msg } => {
+                let body = msg.to_bytes();
+                let mut out = Vec::with_capacity(16 + body.len());
+                out.extend_from_slice(&t.to_le_bytes());
+                out.extend_from_slice(&worker.to_le_bytes());
+                out.extend_from_slice(&loss.to_le_bytes());
+                out.extend_from_slice(&body);
+                out
+            }
+        }
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        if b.len() < 16 {
+            return Err(anyhow!("short Delta frame"));
+        }
+        let t = u64::from_le_bytes(b[0..8].try_into().unwrap());
+        let worker = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        let loss = f32::from_le_bytes(b[12..16].try_into().unwrap());
+        let msg = WireMsg::from_bytes(&b[16..])?;
+        Ok(ToServer::Delta { t, worker, loss, msg })
+    }
+}
+
+/// Cumulative traffic accounting, split by direction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Server → workers (weight broadcasts), all workers summed.
+    pub down_bytes: u64,
+    /// Workers → server (deltas), all workers summed.
+    pub up_bytes: u64,
+    pub rounds: u64,
+}
+
+impl CommStats {
+    pub fn up_mb_per_round_per_worker(&self, workers: usize) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.up_bytes as f64 / self.rounds as f64 / workers as f64 / 1e6
+    }
+
+    pub fn down_mb_per_round_per_worker(&self, workers: usize) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.down_bytes as f64 / self.rounds as f64 / workers as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{seeded_rng, Compressor, LogQuant};
+
+    fn sample_msg() -> WireMsg {
+        let u: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 7.0).collect();
+        let mut q = vec![0.0; 100];
+        LogQuant::new(2).compress_into(&u, &mut q, &mut seeded_rng(0, 0))
+    }
+
+    #[test]
+    fn toworker_roundtrip() {
+        let m = ToWorker::Weights { t: 42, epoch: 3, msg: sample_msg() };
+        let b = m.to_bytes();
+        match ToWorker::from_bytes(&b).unwrap() {
+            ToWorker::Weights { t, epoch, msg } => {
+                assert_eq!((t, epoch), (42, 3));
+                assert_eq!(msg.n, 100);
+            }
+            _ => panic!(),
+        }
+        assert!(matches!(ToWorker::from_bytes(&[0]).unwrap(), ToWorker::Shutdown));
+        assert!(ToWorker::from_bytes(&[9, 9]).is_err());
+    }
+
+    #[test]
+    fn toserver_roundtrip() {
+        let m = ToServer::Delta { t: 7, worker: 5, loss: 1.25, msg: sample_msg() };
+        let b = m.to_bytes();
+        let ToServer::Delta { t, worker, loss, msg } = ToServer::from_bytes(&b).unwrap();
+        assert_eq!((t, worker, loss), (7, 5, 1.25));
+        assert_eq!(msg.n, 100);
+    }
+
+    #[test]
+    fn comm_stats_rates() {
+        let s = CommStats { down_bytes: 16_000_000, up_bytes: 8_000_000, rounds: 10 };
+        assert!((s.up_mb_per_round_per_worker(8) - 0.1).abs() < 1e-9);
+        assert!((s.down_mb_per_round_per_worker(8) - 0.2).abs() < 1e-9);
+    }
+}

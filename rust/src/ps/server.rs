@@ -1,0 +1,204 @@
+//! The parameter server (Algorithm 2).
+//!
+//! Keeps the master weights `x_t` in full precision; broadcasts
+//! `Q_x(x_t)` (or raw fp32 when weight quantization is off); gathers
+//! the workers' compressed deltas, decodes and averages them, and
+//! applies `x_{t+1} = x_t − mean_i δ_t^{(i)}`.
+
+use super::protocol::{CommStats, ToServer, ToWorker};
+use crate::quant::{decode_msg, Compressor, Identity, WQuant, WireMsg};
+use anyhow::{anyhow, Result};
+
+pub struct ParameterServer {
+    /// Full-precision master weights.
+    x: Vec<f32>,
+    /// Weight quantizer for broadcast / final output (None = fp32).
+    wq: Option<WQuant>,
+    /// Scratch: quantized broadcast weights.
+    qx: Vec<f32>,
+    /// Scratch: decoded delta.
+    scratch: Vec<f32>,
+    pub stats: CommStats,
+    t: u64,
+}
+
+impl ParameterServer {
+    pub fn new(x0: Vec<f32>, kx: Option<u32>) -> Self {
+        let dim = x0.len();
+        Self {
+            qx: vec![0.0; dim],
+            scratch: vec![0.0; dim],
+            x: x0,
+            wq: kx.map(WQuant::new),
+            stats: CommStats::default(),
+            t: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn step(&self) -> u64 {
+        self.t
+    }
+
+    /// Master (full-precision) weights.
+    pub fn master(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Restore (weights, step) from a checkpoint.
+    pub fn restore(&mut self, x: &[f32], t: u64) {
+        assert_eq!(x.len(), self.x.len());
+        self.x.copy_from_slice(x);
+        self.t = t;
+    }
+
+    /// What an edge device stores/serves: Q_x(x) when quantizing,
+    /// else x (paper Alg. 2 "Output Q_x(x_t)").
+    pub fn output_weights(&mut self) -> &[f32] {
+        match self.wq {
+            Some(wq) => {
+                wq.quantize_into(&self.x, &mut self.qx);
+                &self.qx
+            }
+            None => &self.x,
+        }
+    }
+
+    /// Begin round `t+1`: produce the broadcast message and the weight
+    /// view workers must evaluate gradients at (Assumption 3: gradients
+    /// are taken at `Q_x(x_t)`).
+    pub fn broadcast(&mut self, nworkers: usize) -> (ToWorker, &[f32]) {
+        self.broadcast_at_epoch(nworkers, 0)
+    }
+
+    /// [`Self::broadcast`] with an explicit epoch tag (drives the
+    /// workers' ExpDecay schedules).
+    pub fn broadcast_at_epoch(&mut self, nworkers: usize, epoch: u64) -> (ToWorker, &[f32]) {
+        self.t += 1;
+        let msg: WireMsg = match self.wq {
+            Some(wq) => {
+                let mut rng = crate::quant::seeded_rng(0, self.t); // unused (deterministic codec)
+                let x = std::mem::take(&mut self.x);
+                let m = wq.compress_into(&x, &mut self.qx, &mut rng);
+                self.x = x;
+                m
+            }
+            None => {
+                let mut rng = crate::quant::seeded_rng(0, self.t);
+                let x = std::mem::take(&mut self.x);
+                let m = Identity.compress_into(&x, &mut self.qx, &mut rng);
+                self.x = x;
+                m
+            }
+        };
+        let tw = ToWorker::Weights { t: self.t, epoch, msg };
+        self.stats.down_bytes += (tw.wire_bytes() * nworkers) as u64;
+        (tw, &self.qx)
+    }
+
+    /// Gather + apply one synchronous round of deltas (Alg. 2 lines 3–4).
+    /// Returns the mean training loss reported by the workers.
+    pub fn apply(&mut self, deltas: &[ToServer]) -> Result<f32> {
+        if deltas.is_empty() {
+            return Err(anyhow!("no deltas to apply"));
+        }
+        let n = deltas.len() as f32;
+        let mut mean_loss = 0.0f32;
+        // accumulate mean decoded delta into scratch
+        let mut acc = vec![0.0f32; self.x.len()];
+        for d in deltas {
+            let ToServer::Delta { t, loss, msg, .. } = d;
+            if *t != self.t {
+                return Err(anyhow!("stale delta for t={t}, server at {}", self.t));
+            }
+            if msg.n != self.x.len() {
+                return Err(anyhow!("delta dim {} != model dim {}", msg.n, self.x.len()));
+            }
+            decode_msg(msg, &mut self.scratch);
+            for (a, &s) in acc.iter_mut().zip(&self.scratch) {
+                *a += s;
+            }
+            mean_loss += loss / n;
+            self.stats.up_bytes += d.wire_bytes() as u64;
+        }
+        let inv = 1.0 / n;
+        for (xi, &a) in self.x.iter_mut().zip(&acc) {
+            *xi -= inv * a;
+        }
+        self.stats.rounds += 1;
+        Ok(mean_loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{seeded_rng, CodecId, LogQuant};
+
+    fn delta_msg(u: &[f32], kg: u32) -> WireMsg {
+        let mut q = vec![0.0; u.len()];
+        LogQuant::new(kg).compress_into(u, &mut q, &mut seeded_rng(0, 0))
+    }
+
+    #[test]
+    fn applies_mean_of_decoded_deltas() {
+        let mut ps = ParameterServer::new(vec![1.0; 4], None);
+        let (_msg, w) = ps.broadcast(2);
+        assert_eq!(w, &[1.0; 4]);
+        // two workers send exact powers of two so quantization is exact
+        let d1 = delta_msg(&[0.5, 0.5, 1.0, 0.0], 2);
+        let d2 = delta_msg(&[1.0, 0.0, 1.0, 0.5], 2);
+        let loss = ps
+            .apply(&[
+                ToServer::Delta { t: 1, worker: 0, loss: 2.0, msg: d1 },
+                ToServer::Delta { t: 1, worker: 1, loss: 4.0, msg: d2 },
+            ])
+            .unwrap();
+        assert_eq!(loss, 3.0);
+        let want = [1.0 - 0.75, 1.0 - 0.25, 0.0, 1.0 - 0.25];
+        for (a, b) in ps.master().iter().zip(want) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn broadcast_quantizes_weights() {
+        let mut ps = ParameterServer::new(vec![0.13, -0.13, 0.0, 0.26], Some(2));
+        let (tw, w) = ps.broadcast(1);
+        assert_eq!(w, &[0.125, -0.125, 0.0, 0.25]);
+        match tw {
+            ToWorker::Weights { msg, .. } => assert_eq!(msg.codec, CodecId::WQuant),
+            _ => panic!(),
+        }
+        // master stays full precision
+        assert_eq!(ps.master(), &[0.13, -0.13, 0.0, 0.26]);
+        // output is quantized
+        assert_eq!(ps.output_weights(), &[0.125, -0.125, 0.0, 0.25]);
+    }
+
+    #[test]
+    fn rejects_stale_or_misshapen() {
+        let mut ps = ParameterServer::new(vec![0.0; 4], None);
+        ps.broadcast(1);
+        let bad_t = ToServer::Delta { t: 9, worker: 0, loss: 0.0, msg: delta_msg(&[0.0; 4], 1) };
+        assert!(ps.apply(&[bad_t]).is_err());
+        let bad_dim = ToServer::Delta { t: 1, worker: 0, loss: 0.0, msg: delta_msg(&[0.0; 3], 1) };
+        assert!(ps.apply(&[bad_dim]).is_err());
+        assert!(ps.apply(&[]).is_err());
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut ps = ParameterServer::new(vec![0.0; 64], Some(6));
+        let (tw, _) = ps.broadcast(8);
+        assert_eq!(ps.stats.down_bytes, (tw.wire_bytes() * 8) as u64);
+        let d = ToServer::Delta { t: 1, worker: 0, loss: 0.0, msg: delta_msg(&[0.0; 64], 2) };
+        let up = d.wire_bytes() as u64;
+        ps.apply(&[d]).unwrap();
+        assert_eq!(ps.stats.up_bytes, up);
+        assert_eq!(ps.stats.rounds, 1);
+    }
+}

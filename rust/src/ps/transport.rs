@@ -1,0 +1,240 @@
+//! Transports: how PS messages move between server and workers.
+//!
+//! * [`LocalBus`] — in-process, deterministic, zero-copy (messages are
+//!   passed by reference through the synchronous round loop). This is
+//!   the default engine for experiments and benches: the paper's
+//!   protocol is synchronous, so sequential execution is *semantically
+//!   exact*, and byte accounting uses the same wire encoding the TCP
+//!   path ships.
+//! * [`TcpServer`] / [`tcp_worker_loop`] — a real multi-process
+//!   deployment: length-prefixed frames over TCP, one blocking stream
+//!   per worker (run each worker as its own `qadam worker` process; see
+//!   `qadam serve --help`).
+
+use super::protocol::{ToServer, ToWorker};
+use anyhow::{anyhow, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let len = (payload.len() as u32).to_le_bytes();
+    stream.write_all(&len)?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 1 << 30 {
+        return Err(anyhow!("frame too large: {n}"));
+    }
+    let mut buf = vec![0u8; n];
+    stream.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ---------------------------------------------------------------------------
+// in-process bus
+// ---------------------------------------------------------------------------
+
+/// Deterministic in-process "network": the trainer broadcasts by calling
+/// each worker in worker-id order and gathers the replies. Kept as a
+/// type so tests/benches can interpose (e.g. drop or reorder messages).
+#[derive(Default)]
+pub struct LocalBus {
+    /// Optional fault injection: drop the delta of worker `w` at step `t`.
+    pub drop_deltas: Vec<(u64, u32)>,
+}
+
+impl LocalBus {
+    pub fn round(
+        &self,
+        broadcast: &ToWorker,
+        workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<ToServer>> {
+        let mut replies = Vec::with_capacity(workers.len());
+        for w in workers.iter_mut() {
+            if let Some(reply) = w.handle(broadcast)? {
+                let drop = match (&reply, broadcast) {
+                    (ToServer::Delta { t, worker, .. }, _) => {
+                        self.drop_deltas.iter().any(|&(dt, dw)| dt == *t && dw == *worker)
+                    }
+                };
+                if !drop {
+                    replies.push(reply);
+                }
+            }
+        }
+        Ok(replies)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP deployment
+// ---------------------------------------------------------------------------
+
+/// Server side of the TCP deployment: accepts `n` workers, then drives
+/// synchronous rounds (broadcast → gather).
+pub struct TcpServer {
+    streams: Vec<TcpStream>,
+}
+
+impl TcpServer {
+    pub fn bind_and_accept(addr: &str, nworkers: usize) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        eprintln!("[server] listening on {addr}, waiting for {nworkers} workers");
+        let mut streams = Vec::with_capacity(nworkers);
+        for i in 0..nworkers {
+            let (s, peer) = listener.accept()?;
+            s.set_nodelay(true)?;
+            eprintln!("[server] worker {i} connected from {peer}");
+            streams.push(s);
+        }
+        Ok(Self { streams })
+    }
+
+    pub fn nworkers(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// One synchronous round over TCP.
+    pub fn round(&mut self, broadcast: &ToWorker) -> Result<Vec<ToServer>> {
+        let payload = broadcast.to_bytes();
+        for s in &mut self.streams {
+            write_frame(s, &payload)?;
+        }
+        let mut replies = Vec::with_capacity(self.streams.len());
+        for s in &mut self.streams {
+            let buf = read_frame(s)?;
+            replies.push(ToServer::from_bytes(&buf)?);
+        }
+        Ok(replies)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let payload = ToWorker::Shutdown.to_bytes();
+        for s in &mut self.streams {
+            write_frame(s, &payload)?;
+        }
+        Ok(())
+    }
+}
+
+/// Worker side of the TCP deployment: connect and serve rounds until
+/// Shutdown. The closure maps each weight broadcast to a delta reply.
+pub fn tcp_worker_loop(
+    addr: &str,
+    worker: &mut super::worker::Worker,
+) -> Result<u64> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true)?;
+    let mut rounds = 0u64;
+    loop {
+        let buf = read_frame(&mut stream)?;
+        let msg = ToWorker::from_bytes(&buf)?;
+        match worker.handle(&msg)? {
+            None => return Ok(rounds),
+            Some(reply) => {
+                write_frame(&mut stream, &reply.to_bytes())?;
+                rounds += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{LrSchedule, QAdamEf};
+    use crate::ps::worker::{SimGradSource, Worker};
+    use crate::ps::ParameterServer;
+
+    fn mk_worker(id: u32, dim: usize) -> Worker {
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.05, 9) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.02 });
+        Worker::new(id, Box::new(opt), Box::new(src), 1)
+    }
+
+    #[test]
+    fn local_bus_synchronous_round() {
+        let dim = 16;
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+        let bus = LocalBus::default();
+        for _ in 0..5 {
+            let replies = {
+                let (b, _w) = ps.broadcast(workers.len());
+                bus.round(&b, &mut workers).unwrap()
+            };
+            assert_eq!(replies.len(), 4);
+            ps.apply(&replies).unwrap();
+        }
+        assert_eq!(ps.stats.rounds, 5);
+        assert!(ps.stats.up_bytes > 0 && ps.stats.down_bytes > 0);
+    }
+
+    #[test]
+    fn local_bus_fault_injection_drops_delta() {
+        let dim = 8;
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let bus = LocalBus { drop_deltas: vec![(1, 1)] };
+        let replies = {
+            let (b, _) = ps.broadcast(3);
+            bus.round(&b, &mut workers).unwrap()
+        };
+        assert_eq!(replies.len(), 2); // worker 1's delta dropped
+        ps.apply(&replies).unwrap(); // PS still makes progress on the rest
+    }
+
+    #[test]
+    fn tcp_roundtrip_two_workers() {
+        let dim = 16;
+        let addr = "127.0.0.1:0";
+        let listener = std::net::TcpListener::bind(addr).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener); // free the port for bind_and_accept (tiny race, test-only)
+
+        let addr2 = addr.clone();
+        let h1 = std::thread::spawn(move || {
+            let mut w = mk_worker(0, dim);
+            // retry until server is up
+            for _ in 0..100 {
+                match tcp_worker_loop(&addr2, &mut w) {
+                    Ok(r) => return r,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            }
+            panic!("worker 0 never connected");
+        });
+        let addr3 = addr.clone();
+        let h2 = std::thread::spawn(move || {
+            let mut w = mk_worker(1, dim);
+            for _ in 0..100 {
+                match tcp_worker_loop(&addr3, &mut w) {
+                    Ok(r) => return r,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            }
+            panic!("worker 1 never connected");
+        });
+
+        let mut srv = TcpServer::bind_and_accept(&addr, 2).unwrap();
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        for _ in 0..3 {
+            let (b, _) = ps.broadcast(2);
+            let replies = srv.round(&b).unwrap();
+            assert_eq!(replies.len(), 2);
+            ps.apply(&replies).unwrap();
+        }
+        srv.shutdown().unwrap();
+        assert_eq!(h1.join().unwrap(), 3);
+        assert_eq!(h2.join().unwrap(), 3);
+    }
+}

@@ -1,0 +1,160 @@
+//! The worker (Algorithm 3): receive weights → local stochastic
+//! gradient → worker optimizer (moments + EF + quantization) → delta.
+
+use super::protocol::{ToServer, ToWorker};
+use crate::data::Dataset;
+use crate::optim::WorkerOpt;
+use crate::quant::decode_msg;
+use anyhow::{anyhow, Result};
+use crate::util::DetRng;
+use std::sync::Arc;
+
+/// Where a worker's gradients come from: a PJRT model graph over a data
+/// shard, or a synthetic problem (theory checks).
+pub trait GradSource {
+    /// Stochastic gradient at `weights` for (worker, t). Returns
+    /// (loss, flat gradient).
+    fn loss_grad(&mut self, weights: &[f32], worker: usize, t: u64) -> Result<(f32, Vec<f32>)>;
+    fn dim(&self) -> usize;
+}
+
+/// Synthetic-problem gradient source (Theorems 3.1–3.3 checks).
+pub struct SimGradSource {
+    pub problem: crate::sim::StochasticProblem,
+}
+
+impl GradSource for SimGradSource {
+    fn loss_grad(&mut self, weights: &[f32], worker: usize, t: u64) -> Result<(f32, Vec<f32>)> {
+        let mut g = vec![0.0; weights.len()];
+        self.problem.stoch_grad_into(weights, t, worker as u64, &mut g);
+        Ok((self.problem.loss(weights), g))
+    }
+
+    fn dim(&self) -> usize {
+        self.problem.dim
+    }
+}
+
+/// PJRT model gradient source over a dataset shard.
+pub struct ModelGradSource {
+    pub model: std::rc::Rc<crate::runtime::ModelRuntime>,
+    pub data: Arc<dyn Dataset>,
+    pub batch: usize,
+}
+
+impl GradSource for ModelGradSource {
+    fn loss_grad(&mut self, weights: &[f32], worker: usize, t: u64) -> Result<(f32, Vec<f32>)> {
+        let batch = self.data.train_batch(worker, t, self.batch);
+        self.model.loss_grad(weights, &batch)
+    }
+
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+}
+
+pub struct Worker {
+    pub id: u32,
+    opt: Box<dyn WorkerOpt>,
+    src: Box<dyn GradSource>,
+    rng: DetRng,
+    /// decoded weight buffer
+    w: Vec<f32>,
+    pub last_loss: f32,
+}
+
+impl Worker {
+    pub fn new(id: u32, opt: Box<dyn WorkerOpt>, src: Box<dyn GradSource>, seed: u64) -> Self {
+        let dim = src.dim();
+        Self {
+            id,
+            opt,
+            src,
+            rng: crate::quant::seeded_rng(seed, 0x9e37_79b9 ^ id as u64),
+            w: vec![0.0; dim],
+            last_loss: f32::NAN,
+        }
+    }
+
+    pub fn opt_name(&self) -> String {
+        self.opt.name()
+    }
+
+    pub fn bits_per_element(&self) -> f64 {
+        self.opt.bits_per_element()
+    }
+
+    pub fn residual_norm(&self) -> f32 {
+        self.opt.residual_norm()
+    }
+
+    pub fn opt_state(&self) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.opt.state()
+    }
+
+    pub fn opt_restore(&mut self, m: &[f32], v: &[f32], e: &[f32]) {
+        self.opt.restore(m, v, e);
+    }
+
+    /// Process one broadcast; returns the delta reply.
+    pub fn handle(&mut self, msg: &ToWorker) -> Result<Option<ToServer>> {
+        match msg {
+            ToWorker::Shutdown => Ok(None),
+            ToWorker::Weights { t, epoch, msg } => {
+                if msg.n != self.w.len() {
+                    return Err(anyhow!("weights dim {} != worker dim {}", msg.n, self.w.len()));
+                }
+                decode_msg(msg, &mut self.w);
+                let (loss, grad) = self.src.loss_grad(&self.w, self.id as usize, *t)?;
+                self.last_loss = loss;
+                let delta = self.opt.step(&grad, *t, *epoch, &mut self.rng);
+                Ok(Some(ToServer::Delta { t: *t, worker: self.id, loss, msg: delta }))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{LrSchedule, QAdamEf};
+    use crate::quant::{CodecId, Compressor, Identity, WireMsg};
+
+    fn weights_msg(w: &[f32], t: u64) -> ToWorker {
+        let mut q = vec![0.0; w.len()];
+        let msg: WireMsg = Identity.compress_into(w, &mut q, &mut crate::quant::seeded_rng(0, 0));
+        ToWorker::Weights { t, epoch: 0, msg }
+    }
+
+    #[test]
+    fn worker_round_produces_delta() {
+        let dim = 8;
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.1, 1) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 });
+        let mut w = Worker::new(3, Box::new(opt), Box::new(src), 42);
+        let x = vec![1.0f32; dim];
+        let out = w.handle(&weights_msg(&x, 1)).unwrap().unwrap();
+        let ToServer::Delta { t, worker, loss, msg } = out;
+        assert_eq!((t, worker), (1, 3));
+        assert!(loss.is_finite());
+        assert_eq!(msg.codec, CodecId::LogQuant);
+        assert_eq!(msg.n, dim);
+    }
+
+    #[test]
+    fn shutdown_yields_none() {
+        let dim = 4;
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.0, 1) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 });
+        let mut w = Worker::new(0, Box::new(opt), Box::new(src), 0);
+        assert!(w.handle(&ToWorker::Shutdown).unwrap().is_none());
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(4, 0.0, 1) };
+        let opt = QAdamEf::paper_default(4, 2, LrSchedule::Const { alpha: 0.01 });
+        let mut w = Worker::new(0, Box::new(opt), Box::new(src), 0);
+        assert!(w.handle(&weights_msg(&[0.0; 5], 1)).is_err());
+    }
+}

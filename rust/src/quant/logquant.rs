@@ -1,0 +1,411 @@
+//! `Q_g` — the paper's gradient quantizer (§5.1).
+//!
+//! Levels are the signed powers of two scaled by the message ∞-norm:
+//!
+//! ```text
+//!   Q_g(g) = ||g||_inf * argmin_{ghat in G^d} || g/||g||_inf - ghat ||
+//!   G = {-1, ..., -2^{-k_g}, 0, 2^{-k_g}, 2^{-k_g+1}, ..., 1}
+//! ```
+//!
+//! Nearest level in *linear* distance; ties round up (to the larger
+//! magnitude); the zero region is `|y| < 2^{-(k_g+1)}` (midpoint between
+//! 0 and the smallest level). This is a **biased, deterministic**
+//! compressor: Assumption 2 holds with
+//! `||u - Q_g(u)|| <= (1 - delta_g) ||u||`, `delta_g > 0` (tested).
+//!
+//! `k_g = 0` degenerates to deterministic ternary `{-1, 0, 1}` — the
+//! 2-bit rows of Tables 2–3; `k_g = 2` gives 7 symbols — the 3-bit rows.
+//!
+//! Wire format: one f32 scale + `ceil(log2(2 k_g + 3))`-bit codes.
+//! Code map: `0 ⇒ 0`; `c in 1..=k_g+1 ⇒ level 2^(c - 1 - k_g)`; the sign
+//! is folded in by storing `signed_symbol + (k_g + 1)`.
+//!
+//! The hot path avoids `log2` entirely: for normal f32, the IEEE
+//! exponent field *is* `floor(log2(|y|))` and the mantissa-half test
+//! *is* the `|y| < 1.5·2^m` tie rule, so quantization is a few integer
+//! ops per element (exactly matching the Pallas kernel's
+//! `floor(log2())` form; see `python/compile/kernels/qadam.py`).
+
+use super::pack::{bits_for_symbols, unpack_into, Packed};
+use super::{CodecId, Compressor, WireMsg};
+use crate::util::DetRng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LogQuant {
+    /// Number of fractional levels: smallest positive level is 2^-kg.
+    pub kg: u32,
+}
+
+impl LogQuant {
+    pub fn new(kg: u32) -> Self {
+        assert!(kg <= 20, "kg={kg} out of range");
+        Self { kg }
+    }
+
+    /// Distinct symbols: 2*(kg+1) signed levels + zero.
+    pub fn symbols(&self) -> u32 {
+        2 * (self.kg + 1) + 1
+    }
+
+    pub fn code_bits(&self) -> u8 {
+        bits_for_symbols(self.symbols())
+    }
+
+    /// Quantize a single normalized magnitude `a = |u|/s` (0 <= a <= 1)
+    /// to its level exponent: returns `None` for the zero level, else
+    /// `m in [-kg, 0]` meaning level `2^m`.
+    #[inline]
+    pub fn level_exponent(&self, a: f32) -> Option<i32> {
+        let kg = self.kg as i32;
+        // zero region: a < 2^-(kg+1)
+        if a < f32::exp2(-(kg + 1) as f32) {
+            return None;
+        }
+        let bits = a.to_bits();
+        // floor(log2 a) for normals straight from the exponent field.
+        let mut m = ((bits >> 23) & 0xff) as i32 - 127;
+        // tie rule: upper level when mantissa >= 1.5 (a >= 1.5 * 2^m)
+        let frac_high = (bits & 0x7f_ffff) >= 0x40_0000;
+        if m < -kg {
+            // below the smallest level but above the zero midpoint:
+            // 2^-(kg+1) <= a < 2^-kg. Nearest is 2^-kg iff a >= 1.5*2^-(kg+1),
+            // i.e. frac_high at exponent -(kg+1); anything lower rounds to
+            // the smallest level only if >= midpoint, which the zero test
+            // already ensured... but the zero midpoint is 0.5*2^-kg =
+            // 2^-(kg+1), so everything here is closer to 2^-kg than to 0?
+            // Distance to 0 is a >= 2^-(kg+1); distance to 2^-kg is
+            // 2^-kg - a <= 2^-(kg+1). Ties at exactly 2^-(kg+1) go up.
+            m = -kg;
+            return Some(m);
+        }
+        if frac_high && m < 0 {
+            m += 1;
+        }
+        // a == 1.0 has m == 0 already; clamp for safety.
+        Some(m.min(0))
+    }
+
+    /// Quantize `u` into `q` and return (scale, codes).
+    /// `codes[i] = signed_symbol + (kg+1)` with signed_symbol in
+    /// [-(kg+1), kg+1]; 0-symbol encodes the zero level.
+    pub fn quantize(&self, u: &[f32], q: &mut [f32], codes: &mut Vec<u32>) -> f32 {
+        assert_eq!(u.len(), q.len());
+        codes.clear();
+        codes.reserve(u.len());
+        let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let bias = (self.kg + 1) as i32;
+        if s == 0.0 || !s.is_finite() {
+            q.fill(0.0);
+            codes.resize(u.len(), bias as u32);
+            return if s.is_finite() { s } else { f32::NAN };
+        }
+        let inv_s = 1.0 / s;
+        for (qi, &ui) in q.iter_mut().zip(u.iter()) {
+            let a = (ui.abs() * inv_s).min(1.0);
+            match self.level_exponent(a) {
+                None => {
+                    *qi = 0.0;
+                    codes.push(bias as u32);
+                }
+                Some(m) => {
+                    let level = f32::exp2(m as f32);
+                    let sym = (m + bias) * if ui < 0.0 { -1 } else { 1 };
+                    *qi = level * s * if ui < 0.0 { -1.0 } else { 1.0 };
+                    codes.push((sym + bias) as u32);
+                }
+            }
+        }
+        s
+    }
+
+    /// Decode one symbol given the scale.
+    #[inline]
+    fn decode_symbol(&self, code: u32, s: f32) -> f32 {
+        let bias = (self.kg + 1) as i32;
+        let sym = code as i32 - bias; // in [-(kg+1), kg+1]
+        if sym == 0 {
+            0.0
+        } else {
+            let m = sym.abs() - bias; // in [-kg, 0]
+            let level = f32::exp2(m as f32) * s;
+            if sym < 0 {
+                -level
+            } else {
+                level
+            }
+        }
+    }
+
+    /// Wire `param` for a multi-chunk (per-chunk-scale) LogQuant message:
+    /// low byte = k_g, high byte = log2(block). `block` must be a power
+    /// of two (the AOT kernel chunk is).
+    pub fn pjrt_param(&self, block: usize) -> u32 {
+        debug_assert!(block.is_power_of_two());
+        self.kg | ((block.trailing_zeros()) << 8)
+    }
+
+    /// Re-derive the wire codes from an *already quantized* vector (used
+    /// by the PJRT path, where the Pallas kernel produced `qdelta`).
+    /// `s` must be the quantization scale (`max|u|` of the pre-quant
+    /// vector == `max|qdelta|`, since the max element maps to level 1).
+    pub fn encode_quantized(&self, qdelta: &[f32], s: f32) -> Vec<u32> {
+        let bias = (self.kg + 1) as i32;
+        if s == 0.0 {
+            return vec![bias as u32; qdelta.len()];
+        }
+        let inv_s = 1.0 / s;
+        qdelta
+            .iter()
+            .map(|&qi| {
+                if qi == 0.0 {
+                    bias as u32
+                } else {
+                    let a = qi.abs() * inv_s;
+                    // a is exactly a power of two in [2^-kg, 1]
+                    let m = (((a.to_bits() >> 23) & 0xff) as i32 - 127).clamp(-(self.kg as i32), 0);
+                    let sym = (m + bias) * if qi < 0.0 { -1 } else { 1 };
+                    (sym + bias) as u32
+                }
+            })
+            .collect()
+    }
+}
+
+impl Compressor for LogQuant {
+    fn name(&self) -> &'static str {
+        "qadam-logquant"
+    }
+    fn codec(&self) -> CodecId {
+        CodecId::LogQuant
+    }
+
+    fn compress_into(&self, u: &[f32], q: &mut [f32], _rng: &mut DetRng) -> WireMsg {
+        // Fused quantize + encode + bit-pack: one pass over `u`, codes
+        // written straight into the packed words (no intermediate
+        // Vec<u32>; see EXPERIMENTS.md §Perf).
+        assert_eq!(u.len(), q.len());
+        let n = u.len();
+        let bits = self.code_bits() as usize;
+        let mut words = vec![0u64; (n * bits).div_ceil(64)];
+        let bias = (self.kg + 1) as i32;
+        let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        if s == 0.0 || !s.is_finite() {
+            q.fill(0.0);
+            // all-zero symbols: code = bias everywhere
+            let mut bitpos = 0usize;
+            for _ in 0..n {
+                let w = bitpos >> 6;
+                let off = bitpos & 63;
+                words[w] |= (bias as u64) << off;
+                if off + bits > 64 {
+                    words[w + 1] |= (bias as u64) >> (64 - off);
+                }
+                bitpos += bits;
+            }
+            return WireMsg {
+                codec: CodecId::LogQuant,
+                param: self.kg,
+                n,
+                scales: vec![if s.is_finite() { s } else { f32::NAN }],
+                codes: Some(Packed { bits: bits as u8, n, words }),
+                raw: vec![],
+            };
+        }
+        let inv_s = 1.0 / s;
+        let kg = self.kg as i32;
+        let zero_thresh = f32::exp2(-(kg + 1) as f32);
+        let mut bitpos = 0usize;
+        for (qi, &ui) in q.iter_mut().zip(u.iter()) {
+            let a = (ui.abs() * inv_s).min(1.0);
+            let (qv, code): (f32, u32) = if a < zero_thresh {
+                (0.0, bias as u32)
+            } else {
+                let b = a.to_bits();
+                let mut m = ((b >> 23) & 0xff) as i32 - 127;
+                if m < -kg {
+                    m = -kg;
+                } else if (b & 0x7f_ffff) >= 0x40_0000 && m < 0 {
+                    m += 1;
+                }
+                let m = m.min(0);
+                let level = f32::from_bits(((m + 127) as u32) << 23); // 2^m exactly
+                if ui < 0.0 {
+                    (-level * s, (bias - (m + bias)) as u32)
+                } else {
+                    (level * s, (bias + (m + bias)) as u32)
+                }
+            };
+            *qi = qv;
+            let w = bitpos >> 6;
+            let off = bitpos & 63;
+            words[w] |= (code as u64) << off;
+            if off + bits > 64 {
+                words[w + 1] |= (code as u64) >> (64 - off);
+            }
+            bitpos += bits;
+        }
+        WireMsg {
+            codec: CodecId::LogQuant,
+            param: self.kg,
+            n,
+            scales: vec![s],
+            codes: Some(Packed { bits: bits as u8, n, words }),
+            raw: vec![],
+        }
+    }
+
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
+        let p: &Packed = msg.codes.as_ref().expect("logquant msg has codes");
+        assert_eq!(out.len(), p.n);
+        let mut codes = vec![0u32; p.n];
+        unpack_into(p, &mut codes);
+        if msg.scales.len() == 1 {
+            let s = msg.scales[0];
+            for (o, c) in out.iter_mut().zip(codes) {
+                *o = self.decode_symbol(c, s);
+            }
+        } else {
+            // Multi-scale (per-chunk) message from the PJRT kernel path:
+            // block size is 2^(param >> 8) (see `pjrt_param`).
+            let block = 1usize << (msg.param >> 8);
+            for (i, (o, c)) in out.iter_mut().zip(codes).enumerate() {
+                *o = self.decode_symbol(c, msg.scales[i / block]);
+            }
+        }
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        self.code_bits() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::seeded_rng;
+
+    fn compress_roundtrip(u: &[f32], kg: u32) -> (Vec<f32>, WireMsg) {
+        let lq = LogQuant::new(kg);
+        let mut q = vec![0.0; u.len()];
+        let mut rng = seeded_rng(1, 2);
+        let msg = lq.compress_into(u, &mut q, &mut rng);
+        (q, msg)
+    }
+
+    #[test]
+    fn known_values_kg2() {
+        // s = 1.0; levels {0.25, 0.5, 1.0}; zero below 0.125.
+        let u = [1.0f32, 0.9, 0.6, 0.5, 0.4, 0.3, 0.25, 0.2, 0.126, 0.124, 0.0, -0.7];
+        let (q, _) = compress_roundtrip(&u, 2);
+        let want = [1.0, 1.0, 0.5, 0.5, 0.5, 0.25, 0.25, 0.25, 0.25, 0.0, 0.0, -0.5];
+        for (i, (&got, &w)) in q.iter().zip(want.iter()).enumerate() {
+            assert_eq!(got, w, "i={i} u={}", u[i]);
+        }
+    }
+
+    #[test]
+    fn ternary_when_kg0() {
+        let lq = LogQuant::new(0);
+        assert_eq!(lq.symbols(), 3);
+        assert_eq!(lq.code_bits(), 2);
+        let u = [2.0f32, 0.9, -1.5, 0.4]; // s=2: |y| = 1, .45, .75, .2
+        let (q, _) = compress_roundtrip(&u, 0);
+        // zero region is |y| < 0.5 (midpoint between 0 and level 1)
+        assert_eq!(q, [2.0, 0.0, -2.0, 0.0]);
+    }
+
+    #[test]
+    fn paper_comm_bit_widths() {
+        // 3-bit rows of Tables 2-3 are kg=2 (7 symbols), 2-bit rows kg=0.
+        assert_eq!(LogQuant::new(2).code_bits(), 3);
+        assert_eq!(LogQuant::new(0).code_bits(), 2);
+        // 162.9 MB * 3/32 = 15.27 MB (paper Table 2 row 2)
+        let mb = 162.9 * LogQuant::new(2).bits_per_element() / 32.0;
+        assert!((mb - 15.27).abs() < 0.01, "{mb}");
+        let mb = 162.9 * LogQuant::new(0).bits_per_element() / 32.0;
+        assert!((mb - 10.18).abs() < 0.01, "{mb}");
+    }
+
+    #[test]
+    fn zero_vector() {
+        let (q, msg) = compress_roundtrip(&[0.0; 16], 3);
+        assert!(q.iter().all(|&x| x == 0.0));
+        let mut out = vec![1.0; 16];
+        LogQuant::new(3).decompress(&msg, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn encode_quantized_matches_compress() {
+        let u: Vec<f32> = (0..257).map(|i| ((i * 37 % 101) as f32 - 50.0) / 13.0).collect();
+        let lq = LogQuant::new(2);
+        let mut q = vec![0.0; u.len()];
+        let mut codes = Vec::new();
+        let s = lq.quantize(&u, &mut q, &mut codes);
+        assert_eq!(lq.encode_quantized(&q, s), codes);
+    }
+
+    fn rand_vec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (((s >> 33) as i32 as f32) / (1u32 << 31) as f32) * scale
+            })
+            .collect()
+    }
+
+    /// Property: worker-local q == server-decoded values, across kg,
+    /// seeds and magnitudes.
+    #[test]
+    fn decode_identity_prop() {
+        for kg in 0u32..8 {
+            for &scale in &[1e-6f32, 1e-2, 1.0, 1e4] {
+                for seed in 0..4u64 {
+                    let u = rand_vec(seed, 300, scale);
+                    let lq = LogQuant::new(kg);
+                    let (q, msg) = compress_roundtrip(&u, kg);
+                    let mut out = vec![0.0; u.len()];
+                    lq.decompress(&msg, &mut out);
+                    assert_eq!(q, out, "kg={kg} scale={scale} seed={seed}");
+                }
+            }
+        }
+    }
+
+    /// Property (Assumption 2): ||u - Q(u)|| <= (1 - delta)||u||,
+    /// delta = 2^-(kg+2).
+    #[test]
+    fn contraction_assumption2_prop() {
+        for kg in 0u32..8 {
+            for seed in 0..8u64 {
+                let u = rand_vec(seed, 300, 1.0);
+                let (q, _) = compress_roundtrip(&u, kg);
+                let err: f32 =
+                    u.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+                let norm: f32 = u.iter().map(|a| a * a).sum::<f32>().sqrt();
+                let delta = f32::exp2(-((kg + 2) as f32));
+                assert!(err <= (1.0 - delta) * norm + 1e-5, "kg={kg} err={err} norm={norm}");
+            }
+        }
+    }
+
+    /// Property: every nonzero quantized magnitude is scale * 2^m with
+    /// m in [-kg, 0].
+    #[test]
+    fn levels_are_powers_of_two_prop() {
+        for seed in 0..8u64 {
+            let u = rand_vec(seed, 100, 1.0);
+            let (q, msg) = compress_roundtrip(&u, 4);
+            let scale = msg.scales[0];
+            for &qi in &q {
+                if qi != 0.0 && scale > 0.0 {
+                    let a = qi.abs() / scale;
+                    let l = a.log2();
+                    assert!((l - l.round()).abs() < 1e-5, "a={a}");
+                    assert!((-4.0 - 1e-5..=1e-5).contains(&l.round()));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,340 @@
+//! Quantizers / compressors and their wire format.
+//!
+//! The paper's two quantization operators plus the two experimental
+//! baselines, all behind one [`Compressor`] trait:
+//!
+//! * [`logquant::LogQuant`] — the paper's gradient quantizer `Q_g`
+//!   (∞-norm-scaled power-of-two levels, biased, deterministic).
+//! * [`wquant::WQuant`] — the paper's weight quantizer `Q_x`
+//!   (uniform grid, scale 0.5).
+//! * [`terngrad::TernGrad`] — Wen et al. [39]: unbiased stochastic
+//!   ternary (the unbiased baseline in Tables 2–3).
+//! * [`blockwise::Blockwise`] — Zheng et al. [44]: per-block
+//!   sign·mean(|block|) (the biased baseline in Tables 2–3).
+//! * [`Identity`] — full precision (the fp32 rows).
+//!
+//! [`WireMsg`] is the byte-accurate message each worker sends to the
+//! parameter server; `wire_bytes()` is what the Comm columns of
+//! Tables 2–3 measure.
+
+pub mod blockwise;
+pub mod error_feedback;
+pub mod logquant;
+pub mod pack;
+pub mod stochastic;
+pub mod terngrad;
+pub mod wquant;
+
+pub use blockwise::Blockwise;
+pub use error_feedback::ErrorFeedback;
+pub use logquant::LogQuant;
+pub use stochastic::{Qsgd, StochasticLogQuant};
+pub use terngrad::TernGrad;
+pub use wquant::WQuant;
+
+use crate::util::DetRng;
+
+/// Compressor family id — first wire byte, also used in configs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CodecId {
+    Identity = 0,
+    LogQuant = 1,
+    WQuant = 2,
+    TernGrad = 3,
+    Blockwise = 4,
+    Qsgd = 5,
+}
+
+impl CodecId {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(Self::Identity),
+            1 => Some(Self::LogQuant),
+            2 => Some(Self::WQuant),
+            3 => Some(Self::TernGrad),
+            4 => Some(Self::Blockwise),
+            5 => Some(Self::Qsgd),
+            _ => None,
+        }
+    }
+}
+
+/// A compressed tensor as it crosses the network.
+///
+/// Exactly one payload representation is populated:
+/// packed `codes` + `scales` for real quantizers, `raw` for
+/// [`Identity`]. `wire_bytes()` charges the header, the scales and the
+/// packed payload — nothing else.
+#[derive(Clone, Debug)]
+pub struct WireMsg {
+    pub codec: CodecId,
+    /// Codec parameter needed to decode: `k_g` for LogQuant, `k_x` for
+    /// WQuant, block size for Blockwise, 0 otherwise.
+    pub param: u32,
+    /// Element count of the original tensor.
+    pub n: usize,
+    /// Per-message (len 1) or per-block (len = nblocks) scales.
+    pub scales: Vec<f32>,
+    /// Packed codes (empty for Identity).
+    pub codes: Option<pack::Packed>,
+    /// Raw f32 payload (Identity only).
+    pub raw: Vec<f32>,
+}
+
+/// Fixed per-message header: codec(1) + bits(1) + param(4) + n(4) + nscales(4).
+pub const WIRE_HEADER_BYTES: usize = 14;
+
+impl WireMsg {
+    /// Bytes this message occupies on the wire — the quantity the
+    /// paper's Comm column measures (we also charge the tiny header).
+    pub fn wire_bytes(&self) -> usize {
+        let payload = match &self.codes {
+            Some(p) => p.payload_bytes(),
+            None => self.raw.len() * 4,
+        };
+        WIRE_HEADER_BYTES + self.scales.len() * 4 + payload
+    }
+
+    /// Serialize for the TCP transport (length-prefix added by caller).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let (bits, nwords) = match &self.codes {
+            Some(p) => (p.bits, p.words.len()),
+            None => (0u8, 0),
+        };
+        let mut out = Vec::with_capacity(
+            22 + self.scales.len() * 4 + nwords * 8 + self.raw.len() * 4,
+        );
+        out.push(self.codec as u8);
+        out.push(bits);
+        out.extend_from_slice(&self.param.to_le_bytes());
+        out.extend_from_slice(&(self.n as u32).to_le_bytes());
+        out.extend_from_slice(&(self.scales.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(nwords as u32).to_le_bytes());
+        out.extend_from_slice(&(self.raw.len() as u32).to_le_bytes());
+        for s in &self.scales {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        if let Some(p) = &self.codes {
+            for w in &p.words {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        for r in &self.raw {
+            out.extend_from_slice(&r.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`WireMsg::to_bytes`].
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<Self> {
+        use anyhow::anyhow;
+        if b.len() < 22 {
+            return Err(anyhow!("wire msg too short: {}", b.len()));
+        }
+        let codec = CodecId::from_u8(b[0]).ok_or_else(|| anyhow!("bad codec {}", b[0]))?;
+        let bits = b[1];
+        let rd = |i: usize| u32::from_le_bytes(b[i..i + 4].try_into().unwrap()) as usize;
+        let param = rd(2) as u32;
+        let n = rd(6);
+        let nscales = rd(10);
+        let nwords = rd(14);
+        let nraw = rd(18);
+        let need = 22 + nscales * 4 + nwords * 8 + nraw * 4;
+        if b.len() != need {
+            return Err(anyhow!("wire msg len {} != expected {}", b.len(), need));
+        }
+        let mut off = 22;
+        let mut scales = Vec::with_capacity(nscales);
+        for _ in 0..nscales {
+            scales.push(f32::from_le_bytes(b[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        let codes = if nwords > 0 || (bits > 0 && n > 0) {
+            let mut words = Vec::with_capacity(nwords);
+            for _ in 0..nwords {
+                words.push(u64::from_le_bytes(b[off..off + 8].try_into().unwrap()));
+                off += 8;
+            }
+            Some(pack::Packed { bits, n, words })
+        } else {
+            None
+        };
+        let mut raw = Vec::with_capacity(nraw);
+        for _ in 0..nraw {
+            raw.push(f32::from_le_bytes(b[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        Ok(WireMsg { codec, param, n, scales, codes, raw })
+    }
+}
+
+/// A (possibly stochastic) tensor compressor.
+///
+/// `compress_into` must satisfy the *decode identity*: the `q` it fills
+/// equals what `decompress` recovers from the returned message — this is
+/// what makes worker-side error feedback (`e' = u - q`) consistent with
+/// what the server applies.
+pub trait Compressor: Send {
+    fn name(&self) -> &'static str;
+    fn codec(&self) -> CodecId;
+    /// Quantize `u`; fill `q` with the dequantized values; return the
+    /// wire message. `rng` is only used by stochastic codecs.
+    fn compress_into(&self, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg;
+    /// Recover the dequantized tensor from a wire message.
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]);
+    /// Analytic bits per element (paper's Comm formula).
+    fn bits_per_element(&self) -> f64;
+    /// True for unbiased codecs (E[Q(u)] = u) — error feedback is not
+    /// needed (and not used by the corresponding baselines).
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+}
+
+/// Full-precision pass-through (the fp32 rows of Tables 2–3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+    fn codec(&self) -> CodecId {
+        CodecId::Identity
+    }
+    fn compress_into(&self, u: &[f32], q: &mut [f32], _rng: &mut DetRng) -> WireMsg {
+        q.copy_from_slice(u);
+        WireMsg { codec: CodecId::Identity, param: 0, n: u.len(), scales: vec![], codes: None, raw: u.to_vec() }
+    }
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
+        out.copy_from_slice(&msg.raw);
+    }
+    fn bits_per_element(&self) -> f64 {
+        32.0
+    }
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// Decode any wire message without out-of-band codec state — the
+/// parameter server's side of the contract. Dispatches on the embedded
+/// codec id + parameter.
+pub fn decode_msg(msg: &WireMsg, out: &mut [f32]) {
+    match msg.codec {
+        CodecId::Identity => Identity.decompress(msg, out),
+        CodecId::LogQuant => LogQuant::new(msg.param & 0xff).decompress(msg, out),
+        CodecId::WQuant => WQuant::new(msg.param).decompress(msg, out),
+        CodecId::TernGrad => TernGrad.decompress(msg, out),
+        CodecId::Blockwise => Blockwise::new(msg.param as usize).decompress(msg, out),
+        CodecId::Qsgd => Qsgd::new(msg.param).decompress(msg, out),
+    }
+}
+
+/// Deterministic per-(seed, worker, t) rng used across the system.
+pub fn seeded_rng(seed: u64, stream: u64) -> DetRng {
+    DetRng::seed_stream(seed, stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip_and_bytes() {
+        let u = vec![1.0f32, -2.5, 0.0, 3.25];
+        let mut q = vec![0.0; 4];
+        let mut rng = seeded_rng(0, 0);
+        let msg = Identity.compress_into(&u, &mut q, &mut rng);
+        assert_eq!(q, u);
+        assert_eq!(msg.wire_bytes(), WIRE_HEADER_BYTES + 16);
+        let mut out = vec![0.0; 4];
+        Identity.decompress(&msg, &mut out);
+        assert_eq!(out, u);
+    }
+
+    #[test]
+    fn wire_serialization_roundtrip() {
+        let msg = WireMsg {
+            codec: CodecId::LogQuant,
+            param: 2,
+            n: 5,
+            scales: vec![0.5, 1.5],
+            codes: Some(pack::pack(&[1, 2, 3, 4, 5], 3)),
+            raw: vec![],
+        };
+        let b = msg.to_bytes();
+        let back = WireMsg::from_bytes(&b).unwrap();
+        assert_eq!(back.codec, msg.codec);
+        assert_eq!(back.param, msg.param);
+        assert_eq!(back.n, msg.n);
+        assert_eq!(back.scales, msg.scales);
+        assert_eq!(back.codes, msg.codes);
+    }
+
+    #[test]
+    fn wire_rejects_garbage() {
+        assert!(WireMsg::from_bytes(&[1, 2, 3]).is_err());
+        let msg = WireMsg { codec: CodecId::Identity, param: 0, n: 1, scales: vec![], codes: None, raw: vec![1.0] };
+        let mut b = msg.to_bytes();
+        b.push(0); // length mismatch
+        assert!(WireMsg::from_bytes(&b).is_err());
+        b[0] = 99; // bad codec
+        assert!(WireMsg::from_bytes(&b[..b.len() - 1]).is_err());
+    }
+}
+
+#[cfg(test)]
+mod fuzz_tests {
+    use super::*;
+
+    /// from_bytes must never panic on arbitrary bytes — it feeds straight
+    /// off the TCP socket.
+    #[test]
+    fn wiremsg_from_bytes_never_panics() {
+        let mut rng = seeded_rng(1234, 0);
+        for trial in 0..2000u32 {
+            let len = (rng.gen_u32() % 200) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.gen_u32() & 0xff) as u8).collect();
+            let _ = WireMsg::from_bytes(&bytes); // Err is fine; panic is not
+            // also try structurally-plausible prefixes
+            if trial % 4 == 0 {
+                let mut b = bytes.clone();
+                if !b.is_empty() {
+                    b[0] %= 6; // valid codec ids
+                }
+                let _ = WireMsg::from_bytes(&b);
+            }
+        }
+    }
+
+    /// Mutated valid messages either fail cleanly or decode within the
+    /// advertised length (no OOB).
+    #[test]
+    fn wiremsg_mutation_safe() {
+        let u: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let mut q = vec![0.0; 64];
+        let mut rng = seeded_rng(5, 5);
+        let msg = LogQuant::new(2).compress_into(&u, &mut q, &mut rng);
+        let base = msg.to_bytes();
+        let mut mrng = seeded_rng(6, 6);
+        for _ in 0..500 {
+            let mut b = base.clone();
+            let i = (mrng.gen_u32() as usize) % b.len();
+            b[i] ^= 1 << (mrng.gen_u32() % 8);
+            if let Ok(m) = WireMsg::from_bytes(&b) {
+                if m.codec == CodecId::LogQuant
+                    && m.codes.as_ref().map(|p| p.n == 64 && p.bits >= 1).unwrap_or(false)
+                    && !m.scales.is_empty()
+                    && (m.param & 0xff) <= 20
+                    && m.codes.as_ref().unwrap().words.len() * 64
+                        >= 64 * m.codes.as_ref().unwrap().bits as usize
+                {
+                    let mut out = vec![0.0; 64];
+                    decode_msg(&m, &mut out); // must not panic
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Bit-packing codec: fixed-width unsigned codes ⇄ `u64` words.
+//!
+//! This is the byte-exact wire representation behind the paper's
+//! "Comm (MB/iteration)" columns: `n` codes of `bits` bits each are
+//! packed LSB-first into little-endian `u64` words with no per-element
+//! padding. A code may straddle a word boundary.
+//!
+//! The packer is on the hot path (every worker packs its whole update
+//! vector every iteration), so the inner loops are branch-light and the
+//! unpacker reads at most two words per code.
+
+/// Packed fixed-width codes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packed {
+    /// Bits per code, 1..=32.
+    pub bits: u8,
+    /// Number of codes.
+    pub n: usize,
+    /// LSB-first packed payload.
+    pub words: Vec<u64>,
+}
+
+impl Packed {
+    /// Payload size in bytes (ceil(n*bits/8)) — the number that goes on
+    /// the wire; whole trailing words are not charged.
+    pub fn payload_bytes(&self) -> usize {
+        (self.n * self.bits as usize).div_ceil(8)
+    }
+}
+
+/// Smallest width that can hold `nsymbols` distinct codes.
+pub fn bits_for_symbols(nsymbols: u32) -> u8 {
+    debug_assert!(nsymbols >= 1);
+    (32 - (nsymbols - 1).leading_zeros()).max(1) as u8
+}
+
+/// Pack `codes` (each `< 2^bits`) into words.
+pub fn pack(codes: &[u32], bits: u8) -> Packed {
+    debug_assert!((1..=32).contains(&bits));
+    let b = bits as usize;
+    let nwords = (codes.len() * b).div_ceil(64);
+    let mut words = vec![0u64; nwords];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(bits == 32 || c < (1u32 << bits));
+        let w = bitpos >> 6;
+        let off = bitpos & 63;
+        words[w] |= (c as u64) << off;
+        if off + b > 64 {
+            words[w + 1] |= (c as u64) >> (64 - off);
+        }
+        bitpos += b;
+    }
+    Packed { bits, n: codes.len(), words }
+}
+
+/// Unpack into a caller-provided buffer (len must equal `p.n`).
+pub fn unpack_into(p: &Packed, out: &mut [u32]) {
+    assert_eq!(out.len(), p.n);
+    let b = p.bits as usize;
+    let mask = if p.bits == 32 { u32::MAX } else { (1u32 << p.bits) - 1 };
+    let mut bitpos = 0usize;
+    for o in out.iter_mut() {
+        let w = bitpos >> 6;
+        let off = bitpos & 63;
+        let mut v = (p.words[w] >> off) as u32;
+        if off + b > 64 {
+            v |= (p.words[w + 1] << (64 - off)) as u32;
+        }
+        *o = v & mask;
+        bitpos += b;
+    }
+}
+
+/// Convenience allocating unpack.
+pub fn unpack(p: &Packed) -> Vec<u32> {
+    let mut out = vec![0u32; p.n];
+    unpack_into(p, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_for_symbols_table() {
+        assert_eq!(bits_for_symbols(1), 1);
+        assert_eq!(bits_for_symbols(2), 1);
+        assert_eq!(bits_for_symbols(3), 2); // TernGrad {-1,0,1}
+        assert_eq!(bits_for_symbols(7), 3); // k_g=2 log levels
+        assert_eq!(bits_for_symbols(9), 4);
+        assert_eq!(bits_for_symbols(257), 9);
+        assert_eq!(bits_for_symbols(1 << 16), 16);
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let codes: Vec<u32> = (0..100).map(|i| i % 7).collect();
+        let p = pack(&codes, 3);
+        assert_eq!(unpack(&p), codes);
+        assert_eq!(p.payload_bytes(), (100 * 3usize).div_ceil(8));
+    }
+
+    #[test]
+    fn straddles_word_boundary() {
+        // 13-bit codes guarantee straddles.
+        let codes: Vec<u32> = (0..64).map(|i| (i * 641) & 0x1fff).collect();
+        let p = pack(&codes, 13);
+        assert_eq!(unpack(&p), codes);
+    }
+
+    #[test]
+    fn empty() {
+        let p = pack(&[], 5);
+        assert_eq!(p.payload_bytes(), 0);
+        assert!(unpack(&p).is_empty());
+    }
+
+    /// Property: roundtrip for every width x many seeds/lengths.
+    #[test]
+    fn roundtrip_prop() {
+        for bits in 1u8..=32 {
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            for seed in 0u64..8 {
+                let n = 1 + ((seed as usize * 97 + bits as usize * 13) % 600);
+                let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+                let codes: Vec<u32> = (0..n)
+                    .map(|_| {
+                        s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                        ((s >> 33) as u32) & mask
+                    })
+                    .collect();
+                let p = pack(&codes, bits);
+                assert_eq!(unpack(&p), codes, "bits={bits} seed={seed}");
+                assert!(p.payload_bytes() <= p.words.len() * 8);
+            }
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Unbiased stochastic variants — the other side of the paper's
+//! biased-vs-unbiased design axis (§2.1, Table 1).
+//!
+//! * [`StochasticLogQuant`] — the same power-of-two codebook as the
+//!   paper's `Q_g`, but with *stochastic rounding* between adjacent
+//!   levels so that `E[Q(u)] = u` elementwise (for `|y| ≥ 2^-k_g`;
+//!   below the smallest level it randomizes between 0 and `2^-k_g`).
+//!   Used by the ablation bench to isolate what the paper's
+//!   deterministic-nearest + error-feedback choice buys over an
+//!   unbiased codec of the *same* bit-width.
+//! * [`Qsgd`] — QSGD-style uniform-level stochastic quantizer
+//!   (Alistarh et al.), the standard unbiased linear-grid comparator:
+//!   levels `{0, 1/L, …, 1}·‖u‖_inf` with stochastic rounding.
+//!
+//! Both are unbiased, so the baselines using them run without error
+//! feedback (mirroring TernGrad).
+
+use super::pack::{bits_for_symbols, pack, unpack_into};
+use super::{CodecId, Compressor, WireMsg};
+use crate::util::DetRng;
+
+/// Stochastic-rounding log quantizer (unbiased; same wire format as
+/// [`super::LogQuant`], reusing its codec id and symbol map).
+#[derive(Clone, Copy, Debug)]
+pub struct StochasticLogQuant {
+    pub kg: u32,
+}
+
+impl StochasticLogQuant {
+    pub fn new(kg: u32) -> Self {
+        assert!(kg <= 20);
+        Self { kg }
+    }
+
+    fn inner(&self) -> super::LogQuant {
+        super::LogQuant::new(self.kg)
+    }
+}
+
+impl Compressor for StochasticLogQuant {
+    fn name(&self) -> &'static str {
+        "logquant-stochastic"
+    }
+    fn codec(&self) -> CodecId {
+        CodecId::LogQuant // same decode map as LogQuant
+    }
+
+    fn compress_into(&self, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+        let kg = self.kg as i32;
+        let bias = (self.kg + 1) as i32;
+        let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mut codes = Vec::with_capacity(u.len());
+        if s == 0.0 {
+            q.fill(0.0);
+            codes.resize(u.len(), bias as u32);
+        } else {
+            let inv_s = 1.0 / s;
+            let lo = f32::exp2(-kg as f32);
+            for (qi, &ui) in q.iter_mut().zip(u) {
+                let a = (ui.abs() * inv_s).min(1.0);
+                let (level, m): (f32, i32) = if a < lo {
+                    // randomize between 0 and the smallest level with
+                    // p = a/lo so the expectation is a
+                    if rng.gen_f32() < a / lo {
+                        (lo, -kg)
+                    } else {
+                        (0.0, i32::MIN)
+                    }
+                } else {
+                    // bracket [2^m, 2^(m+1)); round up w.p. (a-low)/(low)
+                    let b = a.to_bits();
+                    let mm = (((b >> 23) & 0xff) as i32 - 127).clamp(-kg, 0);
+                    let low = f32::from_bits(((mm + 127) as u32) << 23);
+                    let hi_m = (mm + 1).min(0);
+                    let high = f32::from_bits(((hi_m + 127) as u32) << 23);
+                    if high > low && rng.gen_f32() < (a - low) / (high - low) {
+                        (high, hi_m)
+                    } else {
+                        (low, mm)
+                    }
+                };
+                if level == 0.0 {
+                    *qi = 0.0;
+                    codes.push(bias as u32);
+                } else {
+                    let sym = (m + bias) * if ui < 0.0 { -1 } else { 1 };
+                    *qi = level * s * if ui < 0.0 { -1.0 } else { 1.0 };
+                    codes.push((sym + bias) as u32);
+                }
+            }
+        }
+        WireMsg {
+            codec: CodecId::LogQuant,
+            param: self.kg,
+            n: u.len(),
+            scales: vec![s],
+            codes: Some(pack(&codes, self.inner().code_bits())),
+            raw: vec![],
+        }
+    }
+
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
+        self.inner().decompress(msg, out)
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        self.inner().code_bits() as f64
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// QSGD: uniform levels `{0, 1/levels, ..., 1}·‖u‖_inf`, stochastic
+/// rounding, sign carried separately in the symbol.
+#[derive(Clone, Copy, Debug)]
+pub struct Qsgd {
+    /// number of positive levels L (codebook size 2L+1).
+    pub levels: u32,
+}
+
+impl Qsgd {
+    pub fn new(levels: u32) -> Self {
+        assert!(levels >= 1 && levels <= 1 << 15);
+        Self { levels }
+    }
+
+    pub fn code_bits(&self) -> u8 {
+        bits_for_symbols(2 * self.levels + 1)
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+    fn codec(&self) -> CodecId {
+        CodecId::Qsgd
+    }
+
+    fn compress_into(&self, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+        let l = self.levels as f32;
+        let bias = self.levels as i32;
+        let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mut codes = Vec::with_capacity(u.len());
+        if s == 0.0 {
+            q.fill(0.0);
+            codes.resize(u.len(), bias as u32);
+        } else {
+            let inv_s = 1.0 / s;
+            for (qi, &ui) in q.iter_mut().zip(u) {
+                let a = (ui.abs() * inv_s).min(1.0) * l; // in [0, L]
+                let fl = a.floor();
+                let idx = fl as i32 + i32::from(rng.gen_f32() < a - fl);
+                let idx = idx.min(bias);
+                let val = idx as f32 / l * s;
+                if ui < 0.0 {
+                    *qi = -val;
+                    codes.push((bias - idx) as u32);
+                } else {
+                    *qi = val;
+                    codes.push((bias + idx) as u32);
+                }
+            }
+        }
+        WireMsg {
+            codec: CodecId::Qsgd,
+            param: self.levels,
+            n: u.len(),
+            scales: vec![s],
+            codes: Some(pack(&codes, self.code_bits())),
+            raw: vec![],
+        }
+    }
+
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("qsgd msg has codes");
+        assert_eq!(out.len(), p.n);
+        let s = msg.scales[0];
+        let bias = msg.param as i32;
+        let l = msg.param as f32;
+        let mut codes = vec![0u32; p.n];
+        unpack_into(p, &mut codes);
+        for (o, c) in out.iter_mut().zip(codes) {
+            *o = (c as i32 - bias) as f32 / l * s;
+        }
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        self.code_bits() as f64
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::seeded_rng;
+
+    fn mean_of_trials(comp: &dyn Compressor, u: &[f32], trials: u64) -> Vec<f64> {
+        let mut acc = vec![0.0f64; u.len()];
+        for t in 0..trials {
+            let mut q = vec![0.0; u.len()];
+            let mut rng = seeded_rng(99, t);
+            comp.compress_into(u, &mut q, &mut rng);
+            for (a, &qi) in acc.iter_mut().zip(&q) {
+                *a += qi as f64 / trials as f64;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn stochastic_log_is_unbiased() {
+        let u = vec![0.9f32, 0.5, 0.3, 0.11, 0.04, -0.6, -0.02, 1.0, 0.0];
+        let mean = mean_of_trials(&StochasticLogQuant::new(2), &u, 30_000);
+        for (m, &ui) in mean.iter().zip(&u) {
+            assert!((m - ui as f64).abs() < 0.015, "mean={m} u={ui}");
+        }
+    }
+
+    #[test]
+    fn qsgd_is_unbiased() {
+        let u = vec![0.9f32, 0.5, 0.3, 0.11, -0.6, -0.02, 1.0, 0.0];
+        let mean = mean_of_trials(&Qsgd::new(4), &u, 30_000);
+        for (m, &ui) in mean.iter().zip(&u) {
+            assert!((m - ui as f64).abs() < 0.015, "mean={m} u={ui}");
+        }
+    }
+
+    #[test]
+    fn stochastic_log_decode_identity_and_same_wire_format() {
+        let u: Vec<f32> = (0..200).map(|i| ((i * 37) % 101) as f32 / 50.0 - 1.0).collect();
+        let c = StochasticLogQuant::new(3);
+        let mut q = vec![0.0; u.len()];
+        let mut rng = seeded_rng(1, 1);
+        let msg = c.compress_into(&u, &mut q, &mut rng);
+        assert_eq!(msg.codec, CodecId::LogQuant);
+        let mut out = vec![0.0; u.len()];
+        crate::quant::decode_msg(&msg, &mut out);
+        assert_eq!(q, out);
+        // every value lies on the deterministic LogQuant codebook too
+        let s = msg.scales[0];
+        for &qi in &q {
+            if qi != 0.0 {
+                let e = (qi.abs() / s).log2();
+                assert!((e - e.round()).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_decode_identity_and_bits() {
+        let u: Vec<f32> = (0..333).map(|i| (i as f32 * 0.7).sin()).collect();
+        let c = Qsgd::new(4); // 9 symbols -> 4 bits
+        assert_eq!(c.code_bits(), 4);
+        let mut q = vec![0.0; u.len()];
+        let mut rng = seeded_rng(2, 2);
+        let msg = c.compress_into(&u, &mut q, &mut rng);
+        let mut out = vec![0.0; u.len()];
+        crate::quant::decode_msg(&msg, &mut out);
+        assert_eq!(q, out);
+    }
+
+    #[test]
+    fn qsgd_levels_are_uniform_grid() {
+        let u: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 37.0).collect();
+        let c = Qsgd::new(8);
+        let mut q = vec![0.0; u.len()];
+        let mut rng = seeded_rng(3, 3);
+        let msg = c.compress_into(&u, &mut q, &mut rng);
+        let s = msg.scales[0];
+        for &qi in &q {
+            let g = qi / s * 8.0;
+            assert!((g - g.round()).abs() < 1e-5, "g={g}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! TernGrad (Wen et al. [39]) — the *unbiased* ternary baseline of
+//! Tables 2–3.
+//!
+//! ```text
+//!   Q(g)_i = s * sign(g_i) * b_i,   s = ||g||_inf,
+//!   b_i ~ Bernoulli(|g_i| / s)
+//! ```
+//!
+//! `E[Q(g)] = g` (unbiasedness is what lets TernGrad converge without
+//! error feedback, at the price of extra variance — the effect the
+//! paper's experiments show as lower accuracy than QAdam+EF).
+//!
+//! Wire format: one f32 scale + 2-bit codes over `{-1, 0, +1}`.
+
+use super::pack::{pack, unpack_into};
+use super::{CodecId, Compressor, WireMsg};
+use crate::util::DetRng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TernGrad;
+
+impl Compressor for TernGrad {
+    fn name(&self) -> &'static str {
+        "terngrad"
+    }
+    fn codec(&self) -> CodecId {
+        CodecId::TernGrad
+    }
+
+    fn compress_into(&self, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+        let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mut codes = Vec::with_capacity(u.len());
+        if s == 0.0 {
+            q.fill(0.0);
+            codes.resize(u.len(), 1u32);
+        } else {
+            let inv_s = 1.0 / s;
+            for (qi, &ui) in q.iter_mut().zip(u) {
+                let p = ui.abs() * inv_s;
+                let hit = rng.gen_f32() < p;
+                if hit {
+                    if ui < 0.0 {
+                        *qi = -s;
+                        codes.push(0);
+                    } else {
+                        *qi = s;
+                        codes.push(2);
+                    }
+                } else {
+                    *qi = 0.0;
+                    codes.push(1);
+                }
+            }
+        }
+        WireMsg {
+            codec: CodecId::TernGrad,
+            param: 0,
+            n: u.len(),
+            scales: vec![s],
+            codes: Some(pack(&codes, 2)),
+            raw: vec![],
+        }
+    }
+
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("terngrad msg has codes");
+        assert_eq!(out.len(), p.n);
+        let s = msg.scales[0];
+        let mut codes = vec![0u32; p.n];
+        unpack_into(p, &mut codes);
+        for (o, c) in out.iter_mut().zip(codes) {
+            *o = match c {
+                0 => -s,
+                1 => 0.0,
+                _ => s,
+            };
+        }
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        2.0
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::seeded_rng;
+
+    #[test]
+    fn outputs_are_ternary_and_decode_identity() {
+        let u: Vec<f32> = (0..500).map(|i| ((i * 31 % 101) as f32 - 50.0) / 17.0).collect();
+        let mut q = vec![0.0; u.len()];
+        let mut rng = seeded_rng(7, 0);
+        let msg = TernGrad.compress_into(&u, &mut q, &mut rng);
+        let s = msg.scales[0];
+        for &qi in &q {
+            assert!(qi == 0.0 || qi == s || qi == -s);
+        }
+        let mut out = vec![0.0; u.len()];
+        TernGrad.decompress(&msg, &mut out);
+        assert_eq!(q, out);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // Average many independent quantizations; should approach u.
+        let u = vec![0.8f32, -0.3, 0.05, 0.0, 1.0, -1.0];
+        let mut acc = vec![0.0f64; u.len()];
+        let trials = 20_000;
+        for t in 0..trials {
+            let mut q = vec![0.0; u.len()];
+            let mut rng = seeded_rng(42, t);
+            TernGrad.compress_into(&u, &mut q, &mut rng);
+            for (a, &qi) in acc.iter_mut().zip(&q) {
+                *a += qi as f64;
+            }
+        }
+        for (a, &ui) in acc.iter().zip(&u) {
+            let mean = a / trials as f64;
+            assert!((mean - ui as f64).abs() < 0.02, "mean={mean} u={ui}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let u = vec![0.5f32, -0.25, 0.9];
+        let run = |seed| {
+            let mut q = vec![0.0; 3];
+            let mut rng = seeded_rng(seed, 3);
+            TernGrad.compress_into(&u, &mut q, &mut rng);
+            q
+        };
+        assert_eq!(run(5), run(5));
+    }
+
+    #[test]
+    fn zero_vector() {
+        let mut q = vec![1.0f32; 8];
+        let mut rng = seeded_rng(0, 0);
+        let msg = TernGrad.compress_into(&[0.0; 8], &mut q, &mut rng);
+        assert!(q.iter().all(|&x| x == 0.0));
+        assert_eq!(msg.scales[0], 0.0);
+    }
+}

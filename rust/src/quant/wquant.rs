@@ -1,0 +1,194 @@
+//! `Q_x` — the paper's weight quantizer (§5.1).
+//!
+//! ```text
+//!   Q_x(x) = 0.5 * argmin_{xhat in X} || 2x - xhat ||
+//!   X = { i / 2^{k_x} : i = -2^{k_x}, ..., 2^{k_x} }
+//! ```
+//!
+//! Uniform symmetric grid: clamp `2x` to `[-1, 1]`, round to the nearest
+//! multiple of `2^{-k_x}` (half away from zero, = `f32::round`), halve.
+//! The effective grid on weights is step `2^{-(k_x+1)}` over
+//! `[-0.5, 0.5]` — Assumption 3 holds inside that range with
+//! `||x - Q_x(x)||_inf <= 2^{-(k_x+2)}` (tested).
+//!
+//! Wire format: no scale (the grid is absolute), `k_x + 2`-bit codes
+//! `idx + 2^{k_x}` where `idx = round(clamp(2x,-1,1) * 2^{k_x})`.
+//! Paper's "Size" column: 162.9 MB fp32 → 81.44 MB at 16 bits
+//! (`k_x = 14`) → 40.72 MB at 8 bits (`k_x = 6`).
+
+use super::pack::{bits_for_symbols, pack, unpack_into};
+use super::{CodecId, Compressor, WireMsg};
+use crate::util::DetRng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct WQuant {
+    /// log2 of the number of positive fractional levels of the 2x grid.
+    pub kx: u32,
+}
+
+impl WQuant {
+    pub fn new(kx: u32) -> Self {
+        assert!(kx <= 22, "kx={kx} out of range");
+        Self { kx }
+    }
+
+    pub fn symbols(&self) -> u32 {
+        2 * (1 << self.kx) + 1
+    }
+
+    pub fn code_bits(&self) -> u8 {
+        bits_for_symbols(self.symbols())
+    }
+
+    /// The grid index of one weight: `round(clamp(2x,-1,1) * 2^kx)`.
+    #[inline]
+    pub fn index(&self, x: f32) -> i32 {
+        let scale = (1u32 << self.kx) as f32;
+        ((2.0 * x).clamp(-1.0, 1.0) * scale).round() as i32
+    }
+
+    /// Quantize one weight.
+    #[inline]
+    pub fn quantize_one(&self, x: f32) -> f32 {
+        let scale = (1u32 << self.kx) as f32;
+        0.5 * self.index(x) as f32 / scale
+    }
+
+    /// In-place quantization of a full weight vector (server hot path).
+    pub fn quantize_into(&self, x: &[f32], out: &mut [f32]) {
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o = self.quantize_one(xi);
+        }
+    }
+
+    /// Assumption 3 bound inside the representable range.
+    pub fn delta_x_per_coord(&self) -> f32 {
+        f32::exp2(-((self.kx + 2) as f32))
+    }
+}
+
+impl Compressor for WQuant {
+    fn name(&self) -> &'static str {
+        "wquant-uniform"
+    }
+    fn codec(&self) -> CodecId {
+        CodecId::WQuant
+    }
+
+    fn compress_into(&self, u: &[f32], q: &mut [f32], _rng: &mut DetRng) -> WireMsg {
+        let bias = 1i32 << self.kx;
+        let codes: Vec<u32> = u
+            .iter()
+            .zip(q.iter_mut())
+            .map(|(&xi, qi)| {
+                let idx = self.index(xi);
+                *qi = 0.5 * idx as f32 / bias as f32;
+                (idx + bias) as u32
+            })
+            .collect();
+        WireMsg {
+            codec: CodecId::WQuant,
+            param: self.kx,
+            n: u.len(),
+            scales: vec![],
+            codes: Some(pack(&codes, self.code_bits())),
+            raw: vec![],
+        }
+    }
+
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("wquant msg has codes");
+        assert_eq!(out.len(), p.n);
+        let bias = 1i32 << self.kx;
+        let mut codes = vec![0u32; p.n];
+        unpack_into(p, &mut codes);
+        for (o, c) in out.iter_mut().zip(codes) {
+            *o = 0.5 * (c as i32 - bias) as f32 / bias as f32;
+        }
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        self.code_bits() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::seeded_rng;
+
+    #[test]
+    fn known_values() {
+        let wq = WQuant::new(2); // grid on 2x: multiples of 0.25
+        assert_eq!(wq.quantize_one(0.0), 0.0);
+        assert_eq!(wq.quantize_one(0.13), 0.125); // 2x=.26 -> .25
+        assert_eq!(wq.quantize_one(0.19), 0.25); // 2x=.38 -> .5 (grid step .25)
+        assert_eq!(wq.quantize_one(-0.13), -0.125);
+        assert_eq!(wq.quantize_one(9.0), 0.5); // clamp
+        assert_eq!(wq.quantize_one(-9.0), -0.5);
+        // round half away from zero: 2x = 0.125 -> idx 0.5 -> 1
+        assert_eq!(wq.quantize_one(0.0625), 0.125);
+        assert_eq!(wq.quantize_one(-0.0625), -0.125);
+    }
+
+    #[test]
+    fn paper_size_bit_widths() {
+        assert_eq!(WQuant::new(14).code_bits(), 16);
+        assert_eq!(WQuant::new(6).code_bits(), 8);
+        let mb = 162.9 * WQuant::new(14).bits_per_element() / 32.0;
+        assert!((mb - 81.45).abs() < 0.01, "{mb}");
+    }
+
+    #[test]
+    fn idempotent() {
+        let wq = WQuant::new(4);
+        for i in -100..100 {
+            let x = i as f32 / 97.0;
+            let q = wq.quantize_one(x);
+            assert_eq!(wq.quantize_one(q), q, "x={x}");
+        }
+    }
+
+    fn rand_vec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                scale * ((s >> 33) as i32 as f32) / (1u32 << 31) as f32
+            })
+            .collect()
+    }
+
+    /// Property: worker-local q == server-decoded values.
+    #[test]
+    fn decode_identity_prop() {
+        for kx in 1u32..12 {
+            for seed in 0..6u64 {
+                let x = rand_vec(seed, 200, 1.0);
+                let wq = WQuant::new(kx);
+                let mut q = vec![0.0; x.len()];
+                let mut rng = seeded_rng(0, 0);
+                let msg = wq.compress_into(&x, &mut q, &mut rng);
+                let mut out = vec![0.0; x.len()];
+                wq.decompress(&msg, &mut out);
+                assert_eq!(q, out, "kx={kx} seed={seed}");
+            }
+        }
+    }
+
+    /// Property (Assumption 3): per-coordinate error bounded inside the
+    /// representable range.
+    #[test]
+    fn assumption3_bound_prop() {
+        for kx in 1u32..12 {
+            for seed in 0..6u64 {
+                let x = rand_vec(seed, 200, 0.5);
+                let wq = WQuant::new(kx);
+                let bound = wq.delta_x_per_coord();
+                for &xi in &x {
+                    assert!((xi - wq.quantize_one(xi)).abs() <= bound + 1e-7, "kx={kx}");
+                }
+            }
+        }
+    }
+}

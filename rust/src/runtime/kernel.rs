@@ -1,0 +1,192 @@
+//! The Pallas-backed fused QAdam step (L1 kernel, executed via PJRT).
+//!
+//! `qadam_step.hlo.txt` operates on one flat f32 chunk (default 64Ki):
+//! `(m, v, g, e, alpha, beta, theta, eps, qlo) → (m1, v1, qdelta, e1)`.
+//! This type loops the compiled kernel over the parameter vector in
+//! chunk-sized pieces (padding the tail with zeros — zeros are a fixed
+//! point of the whole chain, so padding is inert) and stitches results
+//! back into the caller's buffers.
+//!
+//! The quantization scale is per-chunk (`max|u|` of that chunk), which
+//! matches `python/compile/kernels/qadam.py` and DESIGN.md.
+
+use super::{literal_f32, literal_scalar, Graph, Runtime};
+use crate::models::Manifest;
+use anyhow::Result;
+use std::path::Path;
+
+pub struct KernelQAdam {
+    graph: Graph,
+    pub chunk: usize,
+}
+
+/// Scalar hyperparameters of one step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepScalars {
+    pub alpha: f32,
+    pub beta: f32,
+    pub theta: f32,
+    pub eps: f32,
+    /// smallest positive level 2^-kg.
+    pub qlo: f32,
+}
+
+impl KernelQAdam {
+    pub fn load(rt: &std::rc::Rc<Runtime>, artifacts: &Path, manifest: &Manifest) -> Result<Self> {
+        let graph = rt.load(&artifacts.join(&manifest.optimizer.qadam_artifact))?;
+        Ok(Self { graph, chunk: manifest.optimizer.chunk })
+    }
+
+    /// One fused step over the full flat vectors. `m`, `v`, `e` are
+    /// updated in place; the quantized delta is written to `qdelta`.
+    pub fn step(
+        &self,
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        e: &mut [f32],
+        s: StepScalars,
+        qdelta: &mut [f32],
+    ) -> Result<()> {
+        let n = m.len();
+        assert!(v.len() == n && g.len() == n && e.len() == n && qdelta.len() == n);
+        let c = self.chunk;
+        let mut pad = vec![0.0f32; c]; // scratch for the ragged tail
+        let mut off = 0;
+        while off < n {
+            let len = (n - off).min(c);
+            let run_chunk = |mc: &[f32], vc: &[f32], gc: &[f32], ec: &[f32]| -> Result<Vec<xla::Literal>> {
+                let inputs = vec![
+                    literal_f32(mc, &[c])?,
+                    literal_f32(vc, &[c])?,
+                    literal_f32(gc, &[c])?,
+                    literal_f32(ec, &[c])?,
+                    literal_scalar(s.alpha),
+                    literal_scalar(s.beta),
+                    literal_scalar(s.theta),
+                    literal_scalar(s.eps),
+                    literal_scalar(s.qlo),
+                ];
+                self.graph.run(&inputs)
+            };
+            let outs = if len == c {
+                run_chunk(&m[off..off + c], &v[off..off + c], &g[off..off + c], &e[off..off + c])?
+            } else {
+                // pad the tail chunk with zeros per buffer
+                let mut padded = |src: &[f32]| -> Vec<f32> {
+                    pad[..len].copy_from_slice(src);
+                    pad[len..].fill(0.0);
+                    pad.clone()
+                };
+                let (pm, pv, pg, pe) = (
+                    padded(&m[off..off + len]),
+                    padded(&v[off..off + len]),
+                    padded(&g[off..off + len]),
+                    padded(&e[off..off + len]),
+                );
+                run_chunk(&pm, &pv, &pg, &pe)?
+            };
+            debug_assert_eq!(outs.len(), 4);
+            let mut tmp = vec![0.0f32; c];
+            outs[0].copy_raw_to(&mut tmp)?;
+            m[off..off + len].copy_from_slice(&tmp[..len]);
+            outs[1].copy_raw_to(&mut tmp)?;
+            v[off..off + len].copy_from_slice(&tmp[..len]);
+            outs[2].copy_raw_to(&mut tmp)?;
+            qdelta[off..off + len].copy_from_slice(&tmp[..len]);
+            outs[3].copy_raw_to(&mut tmp)?;
+            e[off..off + len].copy_from_slice(&tmp[..len]);
+            off += len;
+        }
+        Ok(())
+    }
+}
+
+/// PJRT/Pallas-backed implementation of the paper's worker optimizer —
+/// the flagship hot path. Numerically mirrors
+/// [`crate::optim::QAdamEf`] (asserted by the integration tests) but the
+/// moment/quantization math runs inside the AOT-compiled Pallas kernel.
+pub struct PjrtQAdam {
+    kernel: std::rc::Rc<KernelQAdam>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    e: Vec<f32>,
+    qdelta: Vec<f32>,
+    lq: crate::quant::LogQuant,
+    pub lr: crate::optim::LrSchedule,
+    pub theta: crate::optim::ThetaSchedule,
+    pub beta: f32,
+    pub eps: f32,
+}
+
+impl PjrtQAdam {
+    pub fn new(
+        kernel: std::rc::Rc<KernelQAdam>,
+        dim: usize,
+        kg: u32,
+        lr: crate::optim::LrSchedule,
+    ) -> Self {
+        Self {
+            kernel,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            e: vec![0.0; dim],
+            qdelta: vec![0.0; dim],
+            lq: crate::quant::LogQuant::new(kg),
+            lr,
+            theta: crate::optim::ThetaSchedule::Const { theta: crate::defaults::THETA },
+            beta: crate::defaults::BETA,
+            eps: crate::defaults::EPS,
+        }
+    }
+}
+
+impl crate::optim::WorkerOpt for PjrtQAdam {
+    fn step(
+        &mut self,
+        grad: &[f32],
+        t: u64,
+        epoch: u64,
+        _rng: &mut crate::util::DetRng,
+    ) -> crate::quant::WireMsg {
+        let s = StepScalars {
+            alpha: self.lr.at(t, epoch),
+            beta: self.beta,
+            theta: self.theta.at(t),
+            eps: self.eps,
+            qlo: f32::exp2(-(self.lq.kg as f32)),
+        };
+        self.kernel
+            .step(&mut self.m, &mut self.v, grad, &mut self.e, s, &mut self.qdelta)
+            .expect("qadam kernel step");
+        // The wire message is rebuilt per chunk (per-chunk scale).
+        let chunk = self.kernel.chunk;
+        let mut scales = Vec::with_capacity(self.qdelta.len().div_ceil(chunk));
+        let mut codes: Vec<u32> = Vec::with_capacity(self.qdelta.len());
+        for piece in self.qdelta.chunks(chunk) {
+            let s = piece.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            scales.push(s);
+            codes.extend(self.lq.encode_quantized(piece, s));
+        }
+        crate::quant::WireMsg {
+            codec: crate::quant::CodecId::LogQuant,
+            param: if scales.len() > 1 { self.lq.pjrt_param(chunk) } else { self.lq.kg },
+            n: self.qdelta.len(),
+            scales,
+            codes: Some(crate::quant::pack::pack(&codes, self.lq.code_bits())),
+            raw: vec![],
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("qadam-pjrt[kg={}]", self.lq.kg)
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        self.lq.code_bits() as f64
+    }
+
+    fn residual_norm(&self) -> f32 {
+        self.e.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}

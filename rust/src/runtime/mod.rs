@@ -1,0 +1,88 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` and executes them on the
+//! CPU PJRT client. This is the only place the `xla` crate is touched;
+//! everything above works on flat `Vec<f32>` tensors.
+//!
+//! Interchange is HLO *text* (the jax side lowers StableHLO →
+//! XlaComputation → `as_hlo_text()`); `HloModuleProto::from_text_file`
+//! reassigns instruction ids, which sidesteps the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+
+pub mod kernel;
+pub mod model;
+
+pub use kernel::KernelQAdam;
+pub use model::ModelRuntime;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// Shared PJRT CPU client. One per process; graphs are compiled against
+/// it and share its thread pool.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Rc<Self>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Rc::new(Self { client }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Graph> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Graph { exe })
+    }
+}
+
+/// One compiled executable. All our graphs are lowered with
+/// `return_tuple=True`, so `run` unpacks the single tuple output.
+pub struct Graph {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Graph {
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let res = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = res[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// f32 vector -> rank-N literal with the given dims.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let v = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(v);
+    }
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    Ok(v.reshape(&d)?)
+}
+
+/// i32 vector -> rank-N literal.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let v = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(v);
+    }
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    Ok(v.reshape(&d)?)
+}
+
+/// f32 scalar literal (shape `f32[]`, matching a jax `()` operand).
+pub fn literal_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}

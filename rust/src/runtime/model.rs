@@ -1,0 +1,134 @@
+//! Model graph execution: `(params…, x, y) → (loss, grads…)` and
+//! `(params…, x) → logits`, over flat parameter vectors.
+
+use super::{literal_f32, literal_i32, Graph, Runtime};
+use crate::data::{Batch, Dataset};
+use crate::models::{Manifest, ModelMeta, ParamLayout};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+pub struct ModelRuntime {
+    pub meta: ModelMeta,
+    pub layout: ParamLayout,
+    grad: Graph,
+    eval: Graph,
+}
+
+impl ModelRuntime {
+    pub fn load(rt: &Rc<Runtime>, artifacts: &Path, manifest: &Manifest, model: &str) -> Result<Self> {
+        let meta = manifest.model(model)?.clone();
+        let grad = rt.load(&artifacts.join(&meta.grad_artifact))?;
+        let eval = rt.load(&artifacts.join(&meta.eval_artifact))?;
+        let layout = ParamLayout::from_meta(&meta);
+        Ok(Self { meta, layout, grad, eval })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.layout.total()
+    }
+
+    fn param_literals(&self, flat: &[f32]) -> Result<Vec<xla::Literal>> {
+        (0..self.layout.nparams())
+            .map(|i| literal_f32(self.layout.slice(flat, i), &self.layout.shapes[i]))
+            .collect()
+    }
+
+    /// Run the fwd/bwd graph at `flat` weights on `batch`.
+    /// Returns (loss, flat gradient).
+    pub fn loss_grad(&self, flat: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        assert_eq!(flat.len(), self.dim());
+        let mut inputs = self.param_literals(flat)?;
+        match batch {
+            Batch::Vision { x, y } => {
+                inputs.push(literal_f32(x, &self.meta.train_x.shape)?);
+                inputs.push(literal_i32(y, &self.meta.train_y.shape)?);
+            }
+            Batch::Text { x, y } => {
+                inputs.push(literal_i32(x, &self.meta.train_x.shape)?);
+                inputs.push(literal_i32(y, &self.meta.train_y.shape)?);
+            }
+        }
+        let outs = self.grad.run(&inputs)?;
+        if outs.len() != 1 + self.layout.nparams() {
+            return Err(anyhow!("grad graph returned {} outputs, want {}", outs.len(), 1 + self.layout.nparams()));
+        }
+        let loss = outs[0].get_first_element::<f32>()?;
+        let mut gflat = vec![0.0f32; self.dim()];
+        for (i, lit) in outs[1..].iter().enumerate() {
+            let dst = self.layout.slice_mut(&mut gflat, i);
+            lit.copy_raw_to(dst)?;
+        }
+        Ok((loss, gflat))
+    }
+
+    /// Logits for an eval batch (x only); returns the flat logits buffer.
+    pub fn logits(&self, flat: &[f32], batch: &Batch) -> Result<Vec<f32>> {
+        let mut inputs = self.param_literals(flat)?;
+        match batch {
+            Batch::Vision { x, .. } => inputs.push(literal_f32(x, &self.meta.eval_x.shape)?),
+            Batch::Text { x, .. } => inputs.push(literal_i32(x, &self.meta.eval_x.shape)?),
+        }
+        let outs = self.eval.run(&inputs)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Top-1 accuracy over `nbatches` deterministic eval batches.
+    /// For LM models this is next-token accuracy over all positions.
+    pub fn accuracy(&self, flat: &[f32], data: &dyn Dataset, nbatches: usize) -> Result<f32> {
+        let eval_b = self.meta.eval_x.shape[0];
+        let ncls = self.meta.num_classes;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let nb = nbatches.min(data.eval_batches(eval_b)).max(1);
+        for bi in 0..nb {
+            let batch = data.eval_batch(bi, eval_b);
+            let logits = self.logits(flat, &batch)?;
+            let labels = batch.labels();
+            let rows = logits.len() / ncls;
+            debug_assert_eq!(rows, labels.len());
+            for r in 0..rows {
+                let row = &logits[r * ncls..(r + 1) * ncls];
+                let mut best = 0usize;
+                for c in 1..ncls {
+                    if row[c] > row[best] {
+                        best = c;
+                    }
+                }
+                if best as i32 == labels[r] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total.max(1) as f32)
+    }
+
+    /// Deterministic parameter init matching `ModelSpec.init` on the
+    /// python side *in distribution* (not bit-identical — init lives on
+    /// the Rust side at run time; the python init is only used by the
+    /// python tests).
+    pub fn init_flat(&self, seed: u64) -> Vec<f32> {
+        let mut flat = vec![0.0f32; self.dim()];
+        let mut rng = crate::quant::seeded_rng(seed, 77);
+                for i in 0..self.layout.nparams() {
+            let name = self.layout.names[i].clone();
+            let shape = self.layout.shapes[i].clone();
+            let fan_in: usize = shape[..shape.len().saturating_sub(1)].iter().product::<usize>().max(1);
+            let dst = self.layout.slice_mut(&mut flat, i);
+            if name.ends_with("_b") || name.contains("_bias") {
+                // zeros
+            } else if name.contains("_scale") {
+                dst.fill(1.0);
+            } else {
+                let std = if name.contains("emb") { 0.02 } else { (2.0 / fan_in as f32).sqrt() };
+                for d in dst.iter_mut() {
+                    // Irwin-Hall(12) ~ N(0,1)
+                    let n: f32 = (0..12).map(|_| rng.gen_f32()).sum::<f32>() - 6.0;
+                    *d = std * n;
+                }
+            }
+        }
+        flat
+    }
+}

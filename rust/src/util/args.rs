@@ -1,0 +1,128 @@
+//! Tiny CLI flag parser: `prog subcommand --key value --flag`.
+//! No external dependencies (the crate builds offline).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// keys consumed so far (for unknown-flag detection)
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?
+                .replace('-', "_");
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.kv.insert(key, v);
+                }
+                _ => out.flags.push(key),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.seen.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt<T: FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.seen.borrow_mut().push(name.to_string());
+        match self.kv.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("bad value for --{name}: '{v}' ({e})")),
+        }
+    }
+
+    pub fn get<T: FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt(name)?.unwrap_or(default))
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.seen.borrow_mut().push(name.to_string());
+        self.kv.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Error on flags that no `get`/`opt`/`flag` call ever asked about.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_kv_and_flags() {
+        let a = args("train --model mlp --steps 50 --no-ef");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_str("model", "x"), "mlp");
+        assert_eq!(a.get::<u64>("steps", 0).unwrap(), 50);
+        assert!(a.flag("no_ef"));
+        assert!(!a.flag("other"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = args("run --kg abc");
+        assert!(a.get::<u32>("kg", 1).is_err());
+        assert_eq!(a.get::<u32>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = args("run --typo 3");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get::<u32>("typo", 0);
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn dashes_normalize() {
+        let a = args("x --eval-every 10");
+        assert_eq!(a.get::<u64>("eval_every", 0).unwrap(), 10);
+    }
+}

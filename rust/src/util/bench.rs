@@ -1,0 +1,79 @@
+//! Micro-benchmark harness for `benches/` (criterion is unavailable in
+//! the offline build, so `cargo bench` runs these `harness = false`
+//! binaries). Reports median / p10 / p90 wall time per iteration and a
+//! derived throughput.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self, bytes_per_iter: Option<usize>) {
+        let thr = bytes_per_iter
+            .map(|b| format!("  {:>8.2} MB/s", b as f64 / self.median_ns * 1e3))
+            .unwrap_or_default();
+        println!(
+            "{:<44} {:>10.1} ns/iter  (p10 {:>9.1}, p90 {:>9.1}, n={}){}",
+            self.name, self.median_ns, self.p10_ns, self.p90_ns, self.iters, thr
+        );
+    }
+}
+
+/// Time `f` adaptively: warm up, then run enough iterations to fill
+/// ~`target_ms` of wall time, collecting per-iteration samples.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    // warmup
+    let t0 = Instant::now();
+    let mut warm_iters = 0usize;
+    while t0.elapsed().as_millis() < (target_ms / 4).max(5) as u128 && warm_iters < 1_000_000 {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter_est = t0.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+    let samples_wanted = ((target_ms as f64 * 1e6) / per_iter_est.max(1.0)).clamp(10.0, 100_000.0) as usize;
+    let mut samples = Vec::with_capacity(samples_wanted);
+    for _ in 0..samples_wanted {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+    }
+}
+
+/// Convenience: bench and print with optional throughput bytes.
+pub fn run(name: &str, bytes_per_iter: Option<usize>, f: impl FnMut()) -> BenchResult {
+    let r = bench(name, 300, f);
+    r.print(bytes_per_iter);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", 10, || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.median_ns >= 0.0);
+        assert!(r.iters >= 10);
+        assert!(r.p10_ns <= r.p90_ns);
+    }
+}

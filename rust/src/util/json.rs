@@ -1,0 +1,256 @@
+//! Minimal JSON reader — just enough for `artifacts/manifest.json`
+//! (objects, arrays, strings, numbers, bools, null; no \u escapes
+//! beyond pass-through). Zero dependencies by design: the crate builds
+//! offline against only `xla` + `anyhow`.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key '{key}'")),
+            _ => bail!("not an object (looking for '{key}')"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Ok(m),
+            _ => bail!("not an object"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            _ => bail!("not an array"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("not a string"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Num(n) => Ok(*n as usize),
+            _ => bail!("not a number"),
+        }
+    }
+
+    pub fn usize_arr(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+pub fn parse(s: &str) -> Result<Value> {
+    let b = s.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        bail!("trailing garbage at byte {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("expected '{}' at byte {}", c as char, pos)
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => {
+            *pos += 1;
+            let mut m = BTreeMap::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b'}' {
+                *pos += 1;
+                return Ok(Value::Obj(m));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                let v = parse_value(b, pos)?;
+                m.insert(key, v);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Value::Obj(m));
+                    }
+                    _ => bail!("expected ',' or '}}' at byte {pos}"),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut a = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b']' {
+                *pos += 1;
+                return Ok(Value::Arr(a));
+            }
+            loop {
+                a.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Value::Arr(a));
+                    }
+                    _ => bail!("expected ',' or ']' at byte {pos}"),
+                }
+            }
+        }
+        b'"' => Ok(Value::Str(parse_string(b, pos)?)),
+        b't' => {
+            if b[*pos..].starts_with(b"true") {
+                *pos += 4;
+                Ok(Value::Bool(true))
+            } else {
+                bail!("bad literal at {pos}")
+            }
+        }
+        b'f' => {
+            if b[*pos..].starts_with(b"false") {
+                *pos += 5;
+                Ok(Value::Bool(false))
+            } else {
+                bail!("bad literal at {pos}")
+            }
+        }
+        b'n' => {
+            if b[*pos..].starts_with(b"null") {
+                *pos += 4;
+                Ok(Value::Null)
+            } else {
+                bail!("bad literal at {pos}")
+            }
+        }
+        _ => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let s = std::str::from_utf8(&b[start..*pos])?;
+            Ok(Value::Num(s.parse::<f64>().map_err(|e| anyhow!("bad number '{s}': {e}"))?))
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        bail!("expected string at byte {pos}");
+    }
+    *pos += 1;
+    let mut out = Vec::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(String::from_utf8(out)?);
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'n') => out.push(b'\n'),
+                    Some(b't') => out.push(b'\t'),
+                    Some(b'r') => out.push(b'\r'),
+                    Some(&c @ (b'"' | b'\\' | b'/')) => out.push(c),
+                    Some(b'u') => {
+                        // pass through \uXXXX as '?' — manifest never uses it
+                        *pos += 4;
+                        out.push(b'?');
+                    }
+                    _ => bail!("bad escape at byte {pos}"),
+                }
+                *pos += 1;
+            }
+            c => {
+                out.push(c);
+                *pos += 1;
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let s = r#"{
+          "models": {"mlp": {"params": [{"name": "w", "shape": [2, 3]}],
+                             "total_params": 6, "kind": "classifier"}},
+          "optimizer": {"chunk": 65536, "scalars": ["alpha", "beta"]}
+        }"#;
+        let v = parse(s).unwrap();
+        let mlp = v.get("models").unwrap().get("mlp").unwrap();
+        assert_eq!(mlp.get("total_params").unwrap().as_usize().unwrap(), 6);
+        let p0 = &mlp.get("params").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p0.get("name").unwrap().as_str().unwrap(), "w");
+        assert_eq!(p0.get("shape").unwrap().usize_arr().unwrap(), vec![2, 3]);
+        assert_eq!(
+            v.get("optimizer").unwrap().get("chunk").unwrap().as_usize().unwrap(),
+            65536
+        );
+    }
+
+    #[test]
+    fn scalars_and_literals() {
+        assert_eq!(parse("3.5").unwrap(), Value::Num(3.5));
+        assert_eq!(parse("-2e3").unwrap(), Value::Num(-2000.0));
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("\"a\\nb\"").unwrap(), Value::Str("a\nb".into()));
+        assert_eq!(parse("[]").unwrap(), Value::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Value::Obj(Default::default()));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("nul").is_err());
+    }
+}

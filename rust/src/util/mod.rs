@@ -1,0 +1,12 @@
+//! Self-contained utilities (this crate builds offline against only
+//! `xla` + `anyhow`): deterministic RNG, a minimal JSON reader for the
+//! artifact manifest, a tiny CLI-flag parser, and the micro-bench
+//! harness used by `benches/`.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use args::Args;
+pub use rng::DetRng;
