@@ -1,25 +1,88 @@
 //! Worker-step benchmarks: the per-iteration cost of Alg. 3 on each
-//! engine, plus the PJRT model gradient (the other per-round cost).
+//! engine, the sequential-vs-threaded scaling of a full synchronous
+//! round, plus the PJRT model gradient (the other per-round cost).
 //!
 //!   cargo bench --bench worker_step
 
 use qadam::data::{Dataset, SyntheticVector, SyntheticVision};
 use qadam::models::{artifacts_dir, Manifest};
 use qadam::optim::{LrSchedule, QAdamEf, WorkerOpt};
+use qadam::ps::transport::{LocalBus, ThreadedBus};
+use qadam::ps::worker::{SimGradSource, Worker};
+use qadam::ps::ParameterServer;
 use qadam::quant::seeded_rng;
 use qadam::runtime::kernel::PjrtQAdam;
 use qadam::runtime::{KernelQAdam, ModelRuntime, Runtime};
+use qadam::sim::StochasticProblem;
 use qadam::util::bench::run;
 use qadam::util::DetRng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
     let mut r = DetRng::seed_stream(seed, 0);
     (0..n).map(|_| r.gen_normal() * 0.01).collect()
 }
 
+/// Full synchronous rounds (broadcast → worker steps → decode/apply) on
+/// the sequential vs the threaded engine, across worker counts. Both
+/// engines compute bit-identical trajectories (asserted in
+/// `ps::transport` tests); this measures the wall-clock gap.
+fn round_scaling_bench() {
+    let dim = 1usize << 18;
+    let threads = qadam::util::par::available_threads();
+    println!(
+        "-- synchronous round, dim={dim}, kg=2, kx=6 ({threads} hw threads) --"
+    );
+    let x0: Vec<f32> = (0..dim).map(|i| 0.1 * (i as f32 * 0.013).sin()).collect();
+    let mk_workers = |n: usize| -> Vec<Worker> {
+        (0..n)
+            .map(|i| {
+                let src = SimGradSource { problem: StochasticProblem::new(dim, 0.05, 3) };
+                let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 1e-3 });
+                Worker::new(i as u32, Box::new(opt), Box::new(src), 7)
+            })
+            .collect()
+    };
+    for &nw in &[1usize, 2, 4, 8, 16] {
+        let seq = {
+            let mut workers = mk_workers(nw);
+            let mut ps = ParameterServer::new(x0.clone(), Some(6));
+            let bus = LocalBus::default();
+            run(&format!("round sequential workers={nw:>2}"), None, || {
+                let replies = {
+                    let (b, _) = ps.broadcast(nw);
+                    bus.round(&b, &mut workers).unwrap()
+                };
+                ps.apply(&replies).unwrap();
+            })
+        };
+        let thr = {
+            let mut workers = mk_workers(nw);
+            let mut ps = ParameterServer::with_shards(
+                x0.clone(),
+                Some(6),
+                qadam::ps::server::DEFAULT_BLOCK,
+                threads,
+            );
+            let bus = ThreadedBus::new();
+            run(&format!("round threaded   workers={nw:>2}"), None, || {
+                let replies = {
+                    let (b, _) = ps.broadcast(nw);
+                    bus.round(&b, &mut workers).unwrap()
+                };
+                ps.apply(&replies).unwrap();
+            })
+        };
+        println!(
+            "   -> threaded speedup at {nw:>2} workers: {:.2}x",
+            seq.median_ns / thr.median_ns
+        );
+    }
+}
+
 fn main() {
     println!("== worker_step ==");
+    round_scaling_bench();
     // Native fused QAdam step at model-scale dims.
     for &n in &[1usize << 16, 1 << 20, 3_257_856] {
         let g = randv(n, 3);
@@ -41,7 +104,7 @@ fn main() {
     let rt = Runtime::cpu().unwrap();
 
     // Pallas kernel step via PJRT.
-    let kernel = Rc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
+    let kernel = Arc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
     for &n in &[1usize << 16, 1 << 20] {
         let g = randv(n, 3);
         let mut opt = PjrtQAdam::new(kernel.clone(), n, 2, LrSchedule::Const { alpha: 1e-3 });

@@ -1,11 +1,11 @@
 //! Quickstart: train a small MLP with the paper's full stack —
-//! 8 workers, parameter server, log-level gradient quantization (k_g=2,
-//! 3 bits/coordinate), error feedback — and compare against full
-//! precision.
+//! 8 workers on the threaded round engine, parameter server, log-level
+//! gradient quantization (k_g=2, 3 bits/coordinate), error feedback —
+//! and compare against full precision.
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
-use qadam::coordinator::config::{Engine, ExperimentConfig, Method};
+use qadam::coordinator::config::{BusKind, Engine, ExperimentConfig, Method};
 use qadam::coordinator::Trainer;
 use qadam::optim::LrSchedule;
 
@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         steps_per_epoch: 40,
         lr: LrSchedule::ExpDecay { alpha: 2e-3, half_every: 50 },
         engine: Engine::Native,
+        bus: BusKind::Threaded,
         seed: 0,
         eval_every: 20,
         eval_batches: 4,

@@ -6,13 +6,14 @@
 //!
 //!   cargo run --release --example train_transformer -- \
 //!       [--model transformer_small|transformer] [--steps N] [--workers N]
-//!       [--kg K] [--kx K] [--alpha A] [--engine native|pjrt] [--csv PATH]
+//!       [--kg K] [--kx K] [--alpha A] [--engine native|pjrt]
+//!       [--bus sequential|threaded] [--csv PATH]
 //!
 //! Defaults are sized so the run finishes in a few minutes on a laptop
 //! CPU while showing an unambiguous loss drop; `--model transformer`
 //! runs the 3.3M-parameter config.
 
-use qadam::coordinator::config::{Engine, ExperimentConfig, Method};
+use qadam::coordinator::config::{BusKind, Engine, ExperimentConfig, Method};
 use qadam::coordinator::Trainer;
 use qadam::optim::LrSchedule;
 use qadam::util::Args;
@@ -29,6 +30,9 @@ fn main() -> anyhow::Result<()> {
         "pjrt" | "pjrt_kernel" => Engine::PjrtKernel,
         _ => Engine::Native,
     };
+    let bus_str = a.get_str("bus", "sequential");
+    let bus = BusKind::parse(&bus_str)
+        .ok_or_else(|| anyhow::anyhow!("unknown bus '{bus_str}' (sequential | threaded)"))?;
     let csv = a.get_str("csv", "results/train_transformer.csv");
     a.reject_unknown()?;
 
@@ -43,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         steps_per_epoch: 200,
         lr: LrSchedule::ExpDecay { alpha, half_every: 4 },
         engine,
+        bus,
         seed: 0,
         eval_every: (steps / 12).max(25),
         eval_batches: 2,

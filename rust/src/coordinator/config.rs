@@ -37,6 +37,40 @@ pub enum Engine {
     PjrtKernel,
 }
 
+/// How the synchronous round executes across workers — the transport
+/// engine ([`crate::ps::Transport`]). Both produce bit-identical
+/// trajectories; only wall-clock differs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BusKind {
+    /// `LocalBus`: one thread, workers stepped in worker-id order, and
+    /// a single-threaded parameter server. The seed behavior.
+    #[default]
+    Sequential,
+    /// `ThreadedBus`: one scoped thread per worker, plus the
+    /// block-sharded parameter server fanned out over all cores.
+    Threaded,
+}
+
+impl BusKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BusKind::Sequential => "sequential",
+            BusKind::Threaded => "threaded",
+        }
+    }
+
+    /// Parse a CLI flag value (the one place the accepted spellings
+    /// live); `None` for unknown values — callers should error, not
+    /// fall back silently.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sequential" | "seq" => Some(BusKind::Sequential),
+            "threaded" | "thr" => Some(BusKind::Threaded),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Model name from artifacts/manifest.json (e.g. "vgg_sim").
@@ -54,6 +88,9 @@ pub struct ExperimentConfig {
     pub steps_per_epoch: u64,
     pub lr: LrSchedule,
     pub engine: Engine,
+    /// Round transport: sequential reference engine or the parallel
+    /// sharded engine (bit-identical results).
+    pub bus: BusKind,
     pub seed: u64,
     /// Evaluate every this many steps (0 = only at the end).
     pub eval_every: u64,
@@ -75,6 +112,7 @@ impl ExperimentConfig {
             steps_per_epoch: 64,
             lr: LrSchedule::ExpDecay { alpha: crate::defaults::ALPHA, half_every: 50 },
             engine: Engine::Native,
+            bus: BusKind::default(),
             seed: 0,
             eval_every: 64,
             eval_batches: 4,
@@ -122,6 +160,16 @@ mod tests {
         let mut c = ExperimentConfig::table3_default();
         c.kx = Some(6);
         assert_eq!(c.run_label(), "vgg_sim-qadam-kg2-kx6");
+    }
+
+    #[test]
+    fn bus_kinds() {
+        assert_eq!(BusKind::default(), BusKind::Sequential);
+        assert_eq!(BusKind::Sequential.label(), "sequential");
+        assert_eq!(BusKind::Threaded.label(), "threaded");
+        assert_eq!(BusKind::parse("sequential"), Some(BusKind::Sequential));
+        assert_eq!(BusKind::parse("thr"), Some(BusKind::Threaded));
+        assert_eq!(BusKind::parse("threadd"), None); // typos error, never fall back
     }
 
     #[test]

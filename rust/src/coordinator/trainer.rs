@@ -1,18 +1,17 @@
 //! The synchronous training driver: server + N workers + dataset +
 //! PJRT model graphs, one process, byte-accurate comm accounting.
 
-use super::config::{Engine, ExperimentConfig, Method};
+use super::config::{BusKind, Engine, ExperimentConfig, Method};
 use super::metrics::{MetricsLog, Row};
 use crate::data::{Dataset, SyntheticText, SyntheticVector, SyntheticVision};
 use crate::models::{artifacts_dir, Manifest};
 use crate::optim::{BlockwiseSgdEf, LrSchedule, QAdamEf, TernGradSgd, WorkerOpt};
-use crate::ps::transport::LocalBus;
+use crate::ps::transport::{LocalBus, ThreadedBus, Transport};
 use crate::ps::worker::{ModelGradSource, Worker};
 use crate::ps::ParameterServer;
 use crate::runtime::kernel::PjrtQAdam;
 use crate::runtime::{KernelQAdam, ModelRuntime, Runtime};
 use anyhow::{anyhow, Result};
-use std::rc::Rc;
 use std::sync::Arc;
 
 #[derive(Clone, Debug)]
@@ -48,8 +47,8 @@ pub struct Trainer {
     pub cfg: ExperimentConfig,
     ps: ParameterServer,
     workers: Vec<Worker>,
-    bus: LocalBus,
-    model: Rc<ModelRuntime>,
+    bus: Box<dyn Transport>,
+    model: Arc<ModelRuntime>,
     data: Arc<dyn Dataset>,
     pub log: MetricsLog,
 }
@@ -67,7 +66,7 @@ fn make_dataset(cfg: &ExperimentConfig, seq: usize, vocab: usize) -> Result<Arc<
 fn make_opt(
     cfg: &ExperimentConfig,
     dim: usize,
-    kernel: Option<&Rc<KernelQAdam>>,
+    kernel: Option<&Arc<KernelQAdam>>,
 ) -> Result<Box<dyn WorkerOpt>> {
     Ok(match cfg.method {
         Method::QAdam { kg, error_feedback } => match (kg, cfg.engine) {
@@ -120,7 +119,7 @@ impl Trainer {
         let artifacts = artifacts_dir();
         let manifest = Manifest::load(&artifacts)?;
         let rt = Runtime::cpu()?;
-        let model = Rc::new(ModelRuntime::load(&rt, &artifacts, &manifest, &cfg.model)?);
+        let model = Arc::new(ModelRuntime::load(&rt, &artifacts, &manifest, &cfg.model)?);
         // Per-worker batch is baked into the AOT graph.
         let aot_batch = model.meta.train_x.shape[0];
         if cfg.batch != aot_batch {
@@ -155,11 +154,25 @@ impl Trainer {
         let dim = model.dim();
         let kernel = match (cfg.engine, &cfg.method) {
             (Engine::PjrtKernel, Method::QAdam { kg: Some(_), .. }) => {
-                Some(Rc::new(KernelQAdam::load(&rt, &artifacts, &manifest)?))
+                Some(Arc::new(KernelQAdam::load(&rt, &artifacts, &manifest)?))
             }
             _ => None,
         };
-        let ps = ParameterServer::new(model.init_flat(cfg.seed), cfg.kx);
+        // Engine selection: the threaded bus pairs with the sharded
+        // server so both halves of the round run parallel; both engines
+        // produce bit-identical trajectories (ps::transport parity tests).
+        let (bus, ps_threads): (Box<dyn Transport>, usize) = match cfg.bus {
+            BusKind::Sequential => (Box::new(LocalBus::default()), 1),
+            BusKind::Threaded => {
+                (Box::new(ThreadedBus::new()), crate::util::par::available_threads())
+            }
+        };
+        let ps = ParameterServer::with_shards(
+            model.init_flat(cfg.seed),
+            cfg.kx,
+            crate::ps::server::DEFAULT_BLOCK,
+            ps_threads,
+        );
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
             let opt = make_opt(&cfg, dim, kernel.as_ref())?;
@@ -167,7 +180,7 @@ impl Trainer {
             workers.push(Worker::new(i as u32, opt, Box::new(src), cfg.seed ^ 0x5a5a));
         }
         let log = MetricsLog::new(cfg.run_label());
-        Ok(Self { cfg, ps, workers, bus: LocalBus::default(), model, data, log })
+        Ok(Self { cfg, ps, workers, bus, model, data, log })
     }
 
     /// Model size at broadcast precision, MB.

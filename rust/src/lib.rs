@@ -18,8 +18,10 @@
 //!   (model fwd/bwd graphs and the fused Pallas QAdam step kernel)
 //!   and executes them from the request path. Python is never needed
 //!   at run time.
-//! * [`ps`] — the parameter-server system: server (Alg. 2), worker
-//!   (Alg. 3), transports (in-proc / TCP), protocol + byte accounting.
+//! * [`ps`] — the parameter-server system: sharded server (Alg. 2),
+//!   worker (Alg. 3), transports behind one [`ps::Transport`] round
+//!   contract (sequential / threaded in-proc, TCP), protocol + byte
+//!   accounting.
 //! * [`coordinator`] — experiment configs, the synchronous training
 //!   driver, metrics/CSV logging.
 //! * [`sim`] — synthetic stochastic nonconvex problems for the

@@ -14,7 +14,7 @@
 //!   qadam worker --addr 127.0.0.1:7777 --id 0 & qadam worker --id 1
 
 use anyhow::{anyhow, bail, Result};
-use qadam::coordinator::config::Engine;
+use qadam::coordinator::config::{BusKind, Engine};
 use qadam::coordinator::{ExperimentConfig, Method, Trainer};
 use qadam::models::{artifacts_dir, Manifest};
 use qadam::optim::LrSchedule;
@@ -34,6 +34,9 @@ train flags:
   --kx K                weight quantization level (omit = fp32 weights)
   --block N             blockwise baseline block size (default 4096)
   --engine E            native | pjrt_kernel (default native)
+  --bus B               sequential | threaded round engine (default
+                        sequential; threaded = one thread per worker +
+                        block-sharded server, bit-identical results)
   --workers N           number of workers (default 8)
   --steps N             training steps (default 200)
   --steps-per-epoch N   epoch length for LR decay (default 64)
@@ -69,6 +72,11 @@ fn parse_method(a: &Args) -> Result<(Method, Option<u32>, Engine)> {
     Ok((method, kx, engine))
 }
 
+fn parse_bus(a: &Args) -> Result<BusKind> {
+    let v = a.get_str("bus", "sequential");
+    BusKind::parse(&v).ok_or_else(|| anyhow!("unknown bus '{v}' (sequential | threaded)"))
+}
+
 fn build_sim_opt(m: Method, dim: usize, lr: LrSchedule) -> Box<dyn qadam::optim::WorkerOpt> {
     use qadam::optim::{BlockwiseSgdEf, QAdamEf, TernGradSgd};
     match m {
@@ -100,6 +108,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         steps_per_epoch: a.get("steps_per_epoch", 64u64)?,
         lr: LrSchedule::ExpDecay { alpha: a.get("alpha", 1e-3f32)?, half_every: 50 },
         engine,
+        bus: parse_bus(a)?,
         seed: a.get("seed", 0u64)?,
         eval_every: a.get("eval_every", 50u64)?,
         eval_batches: a.get("eval_batches", 4usize)?,
@@ -201,6 +210,7 @@ fn cmd_eval(a: &Args) -> Result<()> {
         steps_per_epoch: 1,
         lr: LrSchedule::Const { alpha: 0.0 },
         engine: Engine::Native,
+        bus: BusKind::Sequential,
         seed: a.get("seed", 0u64)?,
         eval_every: 0,
         eval_batches: a.get("eval_batches", 4usize)?,

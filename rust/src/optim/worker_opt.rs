@@ -8,7 +8,10 @@ use crate::util::DetRng;
 /// One worker's optimizer: consumes the local stochastic gradient at the
 /// broadcast weights and emits the compressed update message. The
 /// server applies `x <- x - mean_i decode(msg_i)`.
-pub trait WorkerOpt {
+///
+/// `Send` so a whole [`crate::ps::Worker`] can run on its own
+/// [`crate::ps::transport::ThreadedBus`] thread.
+pub trait WorkerOpt: Send {
     /// `t` is the 1-based global iteration; `epoch` drives ExpDecay.
     fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg;
     fn name(&self) -> String;

@@ -9,10 +9,11 @@
 //!   shard, computes the local stochastic gradient (PJRT model graph or
 //!   a synthetic problem), runs its [`crate::optim::WorkerOpt`]
 //!   (Alg. 3) and replies with the compressed delta.
-//! * [`transport`] — how messages move: `LocalBus` (in-process,
-//!   deterministic, used by the trainer and benches) and a TCP
-//!   transport (length-prefixed frames) for the real multi-process
-//!   deployment demo.
+//! * [`transport`] — how messages move, behind the [`Transport`] round
+//!   contract: `LocalBus` (in-process, sequential, deterministic),
+//!   `ThreadedBus` (in-process, one scoped thread per worker,
+//!   bit-identical to `LocalBus`) and a TCP transport (length-prefixed
+//!   frames) for the real multi-process deployment demo.
 //! * [`protocol`] — the message types + byte accounting.
 
 pub mod protocol;
@@ -22,4 +23,5 @@ pub mod worker;
 
 pub use protocol::{CommStats, ToServer, ToWorker};
 pub use server::ParameterServer;
+pub use transport::{LocalBus, ThreadedBus, Transport};
 pub use worker::{GradSource, SimGradSource, Worker};

@@ -1,13 +1,29 @@
-//! The parameter server (Algorithm 2).
+//! The parameter server (Algorithm 2), sharded.
 //!
 //! Keeps the master weights `x_t` in full precision; broadcasts
 //! `Q_x(x_t)` (or raw fp32 when weight quantization is off); gathers
 //! the workers' compressed deltas, decodes and averages them, and
 //! applies `x_{t+1} = x_t − mean_i δ_t^{(i)}`.
+//!
+//! **Sharding.** The server state is processed in fixed-size blocks
+//! (`block` coordinates each): delta decode, averaging, the apply, and
+//! the `Q_x` broadcast re-quantization all run one block per task,
+//! fanned out over `threads` scoped threads
+//! ([`crate::util::par::par_tasks`]). Every per-coordinate operation is
+//! independent and scales are indexed by global position
+//! ([`crate::quant::decode_msg_range`]), so the blocked result is
+//! **bit-identical** to the sequential one for any `(block, threads)` —
+//! asserted by the tests below. `threads = 1` (the [`Self::new`]
+//! default) keeps the seed behavior exactly.
 
 use super::protocol::{CommStats, ToServer, ToWorker};
-use crate::quant::{decode_msg, Compressor, Identity, WQuant, WireMsg};
+use crate::quant::{decode_msg_range, Compressor, Identity, WQuant, WireMsg};
+use crate::util::par::par_tasks;
 use anyhow::{anyhow, Result};
+
+/// Default shard width: matches the AOT kernel chunk (64Ki f32 = 256 KB
+/// per block buffer, comfortably L2-resident).
+pub const DEFAULT_BLOCK: usize = 1 << 16;
 
 pub struct ParameterServer {
     /// Full-precision master weights.
@@ -16,20 +32,37 @@ pub struct ParameterServer {
     wq: Option<WQuant>,
     /// Scratch: quantized broadcast weights.
     qx: Vec<f32>,
-    /// Scratch: decoded delta.
-    scratch: Vec<f32>,
+    /// Scratch: unpacked broadcast codes (WQuant path only).
+    codes: Vec<u32>,
+    /// Shard width in coordinates.
+    block: usize,
+    /// Worker threads for block-parallel passes (1 = sequential).
+    threads: usize,
     pub stats: CommStats,
     t: u64,
 }
 
 impl ParameterServer {
+    /// Sequential server (one thread, default block width) — the seed
+    /// behavior, still the default for single-process tools.
     pub fn new(x0: Vec<f32>, kx: Option<u32>) -> Self {
+        Self::with_shards(x0, kx, DEFAULT_BLOCK, 1)
+    }
+
+    /// Sharded server: state is processed `block` coordinates at a time
+    /// across up to `threads` threads. Bit-identical to [`Self::new`]
+    /// for every `(block, threads)` choice.
+    pub fn with_shards(x0: Vec<f32>, kx: Option<u32>, block: usize, threads: usize) -> Self {
+        assert!(block > 0, "shard block must be positive");
         let dim = x0.len();
+        let wq = kx.map(WQuant::new);
         Self {
             qx: vec![0.0; dim],
-            scratch: vec![0.0; dim],
+            codes: if wq.is_some() { vec![0; dim] } else { Vec::new() },
             x: x0,
-            wq: kx.map(WQuant::new),
+            wq,
+            block,
+            threads: threads.max(1),
             stats: CommStats::default(),
             t: 0,
         }
@@ -60,7 +93,11 @@ impl ParameterServer {
     pub fn output_weights(&mut self) -> &[f32] {
         match self.wq {
             Some(wq) => {
-                wq.quantize_into(&self.x, &mut self.qx);
+                let x = &self.x;
+                let tasks: Vec<(usize, &mut [f32])> = blocks(&mut self.qx, self.block);
+                par_tasks(self.threads, tasks, |(start, qc)| {
+                    wq.quantize_into(&x[start..start + qc.len()], qc);
+                });
                 &self.qx
             }
             None => &self.x,
@@ -78,20 +115,29 @@ impl ParameterServer {
     /// workers' ExpDecay schedules).
     pub fn broadcast_at_epoch(&mut self, nworkers: usize, epoch: u64) -> (ToWorker, &[f32]) {
         self.t += 1;
+        let n = self.x.len();
         let msg: WireMsg = match self.wq {
             Some(wq) => {
-                let mut rng = crate::quant::seeded_rng(0, self.t); // unused (deterministic codec)
-                let x = std::mem::take(&mut self.x);
-                let m = wq.compress_into(&x, &mut self.qx, &mut rng);
-                self.x = x;
-                m
+                // Block-parallel re-quantization: each task fills its
+                // slice of (qx, codes); the bit-pack stays serial (it is
+                // a cheap, memory-bound tail next to the float math).
+                let x = &self.x;
+                let block = self.block;
+                let tasks: Vec<(usize, &mut [f32], &mut [u32])> = self
+                    .qx
+                    .chunks_mut(block)
+                    .zip(self.codes.chunks_mut(block))
+                    .enumerate()
+                    .map(|(i, (qc, cc))| (i * block, qc, cc))
+                    .collect();
+                par_tasks(self.threads, tasks, |(start, qc, cc)| {
+                    wq.encode_into(&x[start..start + qc.len()], qc, cc);
+                });
+                wq.wire_msg(n, &self.codes)
             }
             None => {
-                let mut rng = crate::quant::seeded_rng(0, self.t);
-                let x = std::mem::take(&mut self.x);
-                let m = Identity.compress_into(&x, &mut self.qx, &mut rng);
-                self.x = x;
-                m
+                let mut rng = crate::quant::seeded_rng(0, self.t); // unused (Identity)
+                Identity.compress_into(&self.x, &mut self.qx, &mut rng)
             }
         };
         let tw = ToWorker::Weights { t: self.t, epoch, msg };
@@ -105,38 +151,58 @@ impl ParameterServer {
         if deltas.is_empty() {
             return Err(anyhow!("no deltas to apply"));
         }
-        let n = deltas.len() as f32;
-        let mut mean_loss = 0.0f32;
-        // accumulate mean decoded delta into scratch
-        let mut acc = vec![0.0f32; self.x.len()];
+        // Validate everything first, so a rejected round is fully
+        // side-effect-free: no weight movement, no accounting drift.
         for d in deltas {
-            let ToServer::Delta { t, loss, msg, .. } = d;
+            let ToServer::Delta { t, msg, .. } = d;
             if *t != self.t {
                 return Err(anyhow!("stale delta for t={t}, server at {}", self.t));
             }
             if msg.n != self.x.len() {
                 return Err(anyhow!("delta dim {} != model dim {}", msg.n, self.x.len()));
             }
-            decode_msg(msg, &mut self.scratch);
-            for (a, &s) in acc.iter_mut().zip(&self.scratch) {
-                *a += s;
-            }
+        }
+        let n = deltas.len() as f32;
+        let mut mean_loss = 0.0f32;
+        for d in deltas {
+            let ToServer::Delta { loss, .. } = d;
             mean_loss += loss / n;
             self.stats.up_bytes += d.wire_bytes() as u64;
         }
+        // Block-parallel decode + average + apply. Per coordinate the
+        // worker summation order is fixed (delta order == worker order),
+        // so this is bit-identical to the sequential pass.
         let inv = 1.0 / n;
-        for (xi, &a) in self.x.iter_mut().zip(&acc) {
-            *xi -= inv * a;
-        }
+        let tasks: Vec<(usize, &mut [f32])> = blocks(&mut self.x, self.block);
+        par_tasks(self.threads, tasks, |(start, xc)| {
+            let len = xc.len();
+            let mut scratch = vec![0.0f32; len];
+            let mut acc = vec![0.0f32; len];
+            for d in deltas {
+                let ToServer::Delta { msg, .. } = d;
+                decode_msg_range(msg, start, &mut scratch);
+                for (a, &s) in acc.iter_mut().zip(&scratch) {
+                    *a += s;
+                }
+            }
+            for (xi, &a) in xc.iter_mut().zip(&acc) {
+                *xi -= inv * a;
+            }
+        });
         self.stats.rounds += 1;
         Ok(mean_loss)
     }
 }
 
+/// Split a buffer into `(global offset, block)` tasks.
+fn blocks(buf: &mut [f32], block: usize) -> Vec<(usize, &mut [f32])> {
+    buf.chunks_mut(block).enumerate().map(|(i, c)| (i * block, c)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{seeded_rng, CodecId, LogQuant};
+    use crate::quant::{seeded_rng, CodecId, Compressor, LogQuant};
 
     fn delta_msg(u: &[f32], kg: u32) -> WireMsg {
         let mut q = vec![0.0; u.len()];
@@ -200,5 +266,62 @@ mod tests {
         ps.apply(&[d]).unwrap();
         assert_eq!(ps.stats.up_bytes, up);
         assert_eq!(ps.stats.rounds, 1);
+    }
+
+    /// Acceptance: the sharded server (any block/thread split, including
+    /// ragged tails) is bit-identical to the sequential one — weights,
+    /// broadcast messages and byte accounting — over many rounds and
+    /// mixed codecs.
+    #[test]
+    fn sharded_server_bit_identical_to_sequential() {
+        use crate::quant::{Blockwise, TernGrad};
+        let dim = 233; // prime-ish: every block width leaves a ragged tail
+        let mk_x0 = || (0..dim).map(|i| 0.2 * ((i as f32) * 0.31).sin()).collect::<Vec<f32>>();
+        let deltas_for = |t: u64| -> Vec<ToServer> {
+            let mut rng = seeded_rng(7, t);
+            let mk = |w: u32| -> Vec<f32> {
+                (0..dim).map(|i| 0.01 * ((i as f32 + w as f32 * 3.7 + t as f32).cos())).collect()
+            };
+            let mut q = vec![0.0; dim];
+            let m0 = LogQuant::new(2).compress_into(&mk(0), &mut q, &mut rng);
+            let m1 = TernGrad.compress_into(&mk(1), &mut q, &mut rng);
+            let m2 = Blockwise::new(13).compress_into(&mk(2), &mut q, &mut rng);
+            vec![
+                ToServer::Delta { t, worker: 0, loss: 1.0, msg: m0 },
+                ToServer::Delta { t, worker: 1, loss: 2.0, msg: m1 },
+                ToServer::Delta { t, worker: 2, loss: 3.0, msg: m2 },
+            ]
+        };
+        for &kx in &[None, Some(6u32)] {
+            let mut seq = ParameterServer::new(mk_x0(), kx);
+            let mut configs = vec![
+                ParameterServer::with_shards(mk_x0(), kx, 7, 4),
+                ParameterServer::with_shards(mk_x0(), kx, 64, 3),
+                ParameterServer::with_shards(mk_x0(), kx, 1024, 8),
+            ];
+            for t in 1u64..=20 {
+                let (b_seq, _) = seq.broadcast(3);
+                seq.apply(&deltas_for(t)).unwrap();
+                for ps in configs.iter_mut() {
+                    let (b, _) = ps.broadcast(3);
+                    assert_eq!(b.to_bytes(), b_seq.to_bytes(), "kx={kx:?} t={t}");
+                    ps.apply(&deltas_for(t)).unwrap();
+                    assert_eq!(ps.master(), seq.master(), "kx={kx:?} t={t}");
+                    assert_eq!(ps.stats.up_bytes, seq.stats.up_bytes);
+                    assert_eq!(ps.stats.down_bytes, seq.stats.down_bytes);
+                }
+            }
+        }
+    }
+
+    /// A failed apply must not move the weights, even with sharding.
+    #[test]
+    fn failed_apply_leaves_weights_untouched() {
+        let mut ps = ParameterServer::with_shards(vec![1.0; 32], None, 8, 4);
+        ps.broadcast(2);
+        let good = ToServer::Delta { t: 1, worker: 0, loss: 0.0, msg: delta_msg(&[0.5; 32], 2) };
+        let stale = ToServer::Delta { t: 7, worker: 1, loss: 0.0, msg: delta_msg(&[0.5; 32], 2) };
+        assert!(ps.apply(&[good, stale]).is_err());
+        assert_eq!(ps.master(), &[1.0; 32][..]);
     }
 }

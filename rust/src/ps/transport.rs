@@ -1,11 +1,18 @@
-//! Transports: how PS messages move between server and workers.
+//! Transports: how PS messages move between server and workers, behind
+//! the one [`Transport`] contract the trainer drives.
 //!
-//! * [`LocalBus`] — in-process, deterministic, zero-copy (messages are
-//!   passed by reference through the synchronous round loop). This is
-//!   the default engine for experiments and benches: the paper's
-//!   protocol is synchronous, so sequential execution is *semantically
-//!   exact*, and byte accounting uses the same wire encoding the TCP
-//!   path ships.
+//! * [`LocalBus`] — in-process, sequential, deterministic: workers are
+//!   stepped one after another in worker-id order. The paper's protocol
+//!   is synchronous, so sequential execution is *semantically exact*,
+//!   and byte accounting uses the same wire encoding the TCP path
+//!   ships. This is the reference engine every other transport must
+//!   match bit-for-bit.
+//! * [`ThreadedBus`] — in-process, parallel: each worker's local step
+//!   (gradient + optimizer + encode) runs on its own scoped thread, and
+//!   replies are merged in worker-id order. Because workers share no
+//!   mutable state and every per-worker computation is deterministic in
+//!   `(worker, t)`, the result is **bit-identical** to [`LocalBus`]
+//!   (asserted by the parity tests below); only wall-clock changes.
 //! * [`TcpServer`] / [`tcp_worker_loop`] — a real multi-process
 //!   deployment: length-prefixed frames over TCP, one blocking stream
 //!   per worker (run each worker as its own `qadam worker` process; see
@@ -20,27 +27,64 @@ use std::net::{TcpListener, TcpStream};
 // framing
 // ---------------------------------------------------------------------------
 
-pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+/// Hard cap on a single frame (1 GiB): anything larger is a corrupt or
+/// hostile length prefix, not a real message.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+pub fn write_frame<W: Write>(stream: &mut W, payload: &[u8]) -> Result<()> {
     let len = (payload.len() as u32).to_le_bytes();
     stream.write_all(&len)?;
     stream.write_all(payload)?;
     Ok(())
 }
 
-pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+pub fn read_frame<R: Read>(stream: &mut R) -> Result<Vec<u8>> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len)?;
     let n = u32::from_le_bytes(len) as usize;
-    if n > 1 << 30 {
+    if n > MAX_FRAME_BYTES {
         return Err(anyhow!("frame too large: {n}"));
     }
-    let mut buf = vec![0u8; n];
-    stream.read_exact(&mut buf)?;
+    // Grow while reading instead of trusting the prefix with one huge
+    // upfront allocation — a lying peer costs us at most what it sends.
+    let mut buf = Vec::with_capacity(n.min(1 << 20));
+    let read = stream.take(n as u64).read_to_end(&mut buf)?;
+    if read != n {
+        return Err(anyhow!("short frame: {read} of {n} bytes"));
+    }
     Ok(buf)
 }
 
 // ---------------------------------------------------------------------------
-// in-process bus
+// the round contract
+// ---------------------------------------------------------------------------
+
+/// One synchronous PS round (Alg. 2 line 2 + Alg. 3): broadcast the
+/// weights message to every worker, gather their delta replies.
+///
+/// Contract:
+/// * replies come back ordered by worker id (gather order never depends
+///   on scheduling), so the server's mean is summed in a fixed order
+///   and trajectories are reproducible bit-for-bit across transports;
+/// * a transport may drop replies (fault injection, lost frames) but
+///   must never reorder or duplicate them;
+/// * `workers` is the in-process worker set; transports whose workers
+///   live elsewhere (TCP) ignore it.
+pub trait Transport {
+    fn round(&mut self, broadcast: &ToWorker, workers: &mut [super::worker::Worker])
+        -> Result<Vec<ToServer>>;
+    /// Short engine name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Shared fault-injection filter: true if `reply` is scheduled to drop.
+fn drop_reply(drop_deltas: &[(u64, u32)], reply: &ToServer) -> bool {
+    let ToServer::Delta { t, worker, .. } = reply;
+    drop_deltas.iter().any(|&(dt, dw)| dt == *t && dw == *worker)
+}
+
+// ---------------------------------------------------------------------------
+// in-process buses
 // ---------------------------------------------------------------------------
 
 /// Deterministic in-process "network": the trainer broadcasts by calling
@@ -61,17 +105,99 @@ impl LocalBus {
         let mut replies = Vec::with_capacity(workers.len());
         for w in workers.iter_mut() {
             if let Some(reply) = w.handle(broadcast)? {
-                let drop = match (&reply, broadcast) {
-                    (ToServer::Delta { t, worker, .. }, _) => {
-                        self.drop_deltas.iter().any(|&(dt, dw)| dt == *t && dw == *worker)
-                    }
-                };
-                if !drop {
+                if !drop_reply(&self.drop_deltas, &reply) {
                     replies.push(reply);
                 }
             }
         }
         Ok(replies)
+    }
+}
+
+impl Transport for LocalBus {
+    fn round(
+        &mut self,
+        broadcast: &ToWorker,
+        workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<ToServer>> {
+        LocalBus::round(self, broadcast, workers)
+    }
+
+    fn name(&self) -> &'static str {
+        "local-sequential"
+    }
+}
+
+/// Parallel in-process bus: one scoped thread per worker, deterministic
+/// merge in worker-id order.
+///
+/// Each [`super::worker::Worker`] owns all of its mutable state (opt
+/// moments, EF residual, rng, decode buffer), gradient sources are
+/// deterministic in `(worker, t)`, and the merge order is fixed — so a
+/// `ThreadedBus` round is bit-identical to a [`LocalBus`] round over
+/// the same workers, just `min(nworkers, cores)` times faster on the
+/// worker-compute half of the round.
+#[derive(Default)]
+pub struct ThreadedBus {
+    /// Optional fault injection, same semantics as [`LocalBus`].
+    pub drop_deltas: Vec<(u64, u32)>,
+}
+
+impl ThreadedBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn round(
+        &self,
+        broadcast: &ToWorker,
+        workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<ToServer>> {
+        // Spawn in worker order, join in worker order: the gather is
+        // deterministic no matter how the OS schedules the threads.
+        let results: Vec<Result<Option<ToServer>>> = std::thread::scope(|s| {
+            let handles: Vec<_> =
+                workers.iter_mut().map(|w| s.spawn(move || w.handle(broadcast))).collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(i, h)| {
+                    h.join().unwrap_or_else(|payload| {
+                        // keep the diagnostic the sequential engine would
+                        // have printed
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into());
+                        Err(anyhow!("worker thread {i} panicked: {msg}"))
+                    })
+                })
+                .collect()
+        });
+        let mut replies = Vec::with_capacity(results.len());
+        for r in results {
+            if let Some(reply) = r? {
+                if !drop_reply(&self.drop_deltas, &reply) {
+                    replies.push(reply);
+                }
+            }
+        }
+        Ok(replies)
+    }
+}
+
+impl Transport for ThreadedBus {
+    fn round(
+        &mut self,
+        broadcast: &ToWorker,
+        workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<ToServer>> {
+        ThreadedBus::round(self, broadcast, workers)
+    }
+
+    fn name(&self) -> &'static str {
+        "local-threaded"
     }
 }
 
@@ -103,7 +229,11 @@ impl TcpServer {
         self.streams.len()
     }
 
-    /// One synchronous round over TCP.
+    /// One synchronous round over TCP. Replies are sorted by worker id
+    /// after the gather: connection-accept order races the workers'
+    /// startup, and the [`Transport`] contract requires the merge order
+    /// (and hence the server's float summation order) to be independent
+    /// of scheduling.
     pub fn round(&mut self, broadcast: &ToWorker) -> Result<Vec<ToServer>> {
         let payload = broadcast.to_bytes();
         for s in &mut self.streams {
@@ -114,6 +244,10 @@ impl TcpServer {
             let buf = read_frame(s)?;
             replies.push(ToServer::from_bytes(&buf)?);
         }
+        replies.sort_by_key(|r| {
+            let ToServer::Delta { worker, .. } = r;
+            *worker
+        });
         Ok(replies)
     }
 
@@ -123,6 +257,22 @@ impl TcpServer {
             write_frame(s, &payload)?;
         }
         Ok(())
+    }
+}
+
+impl Transport for TcpServer {
+    /// The in-process `workers` slice is ignored: this transport's
+    /// workers are remote processes.
+    fn round(
+        &mut self,
+        broadcast: &ToWorker,
+        _workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<ToServer>> {
+        TcpServer::round(self, broadcast)
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
     }
 }
 
@@ -191,6 +341,142 @@ mod tests {
         };
         assert_eq!(replies.len(), 2); // worker 1's delta dropped
         ps.apply(&replies).unwrap(); // PS still makes progress on the rest
+    }
+
+    /// drop_deltas is per-(step, worker): only the scheduled round loses
+    /// the delta, later rounds from the same worker go through, and the
+    /// surviving replies keep worker-id order.
+    #[test]
+    fn local_bus_drop_deltas_is_step_scoped_and_order_preserving() {
+        let dim = 8;
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+        let bus = LocalBus { drop_deltas: vec![(2, 0), (2, 3)] };
+        for t in 1u64..=3 {
+            let replies = {
+                let (b, _) = ps.broadcast(4);
+                bus.round(&b, &mut workers).unwrap()
+            };
+            let ids: Vec<u32> = replies
+                .iter()
+                .map(|r| {
+                    let ToServer::Delta { worker, .. } = r;
+                    *worker
+                })
+                .collect();
+            if t == 2 {
+                assert_eq!(ids, vec![1, 2]); // 0 and 3 dropped this round only
+            } else {
+                assert_eq!(ids, vec![0, 1, 2, 3]);
+            }
+            ps.apply(&replies).unwrap();
+        }
+    }
+
+    #[test]
+    fn threaded_bus_honors_drop_deltas() {
+        let dim = 8;
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let bus = ThreadedBus { drop_deltas: vec![(1, 2)] };
+        let replies = {
+            let (b, _) = ps.broadcast(3);
+            bus.round(&b, &mut workers).unwrap()
+        };
+        assert_eq!(replies.len(), 2);
+        let ids: Vec<u32> = replies
+            .iter()
+            .map(|r| {
+                let ToServer::Delta { worker, .. } = r;
+                *worker
+            })
+            .collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    /// Acceptance: ThreadedBus (+ sharded server) produces trajectories
+    /// bit-identical to LocalBus (+ sequential server) over ≥50 rounds,
+    /// checked at every round, with both gradient and weight
+    /// quantization in play.
+    #[test]
+    fn threaded_bus_bit_identical_to_local_bus() {
+        for &kx in &[None, Some(4u32)] {
+            let dim = 96;
+            let rounds = 60u64;
+            let x0: Vec<f32> = (0..dim).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
+            // reference: sequential bus, unsharded server
+            let mut ps_seq = ParameterServer::new(x0.clone(), kx);
+            let mut ws_seq: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+            let seq = LocalBus::default();
+            // candidate: threaded bus, sharded server (ragged block on purpose)
+            let mut ps_thr = ParameterServer::with_shards(x0, kx, 13, 4);
+            let mut ws_thr: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+            let thr = ThreadedBus::new();
+            for t in 1..=rounds {
+                let r_seq = {
+                    let (b, _) = ps_seq.broadcast(4);
+                    seq.round(&b, &mut ws_seq).unwrap()
+                };
+                ps_seq.apply(&r_seq).unwrap();
+                let r_thr = {
+                    let (b, _) = ps_thr.broadcast(4);
+                    thr.round(&b, &mut ws_thr).unwrap()
+                };
+                ps_thr.apply(&r_thr).unwrap();
+                assert_eq!(
+                    ps_seq.master(),
+                    ps_thr.master(),
+                    "kx={kx:?} diverged at round {t}"
+                );
+            }
+            assert_eq!(ps_seq.stats.up_bytes, ps_thr.stats.up_bytes);
+            assert_eq!(ps_seq.stats.down_bytes, ps_thr.stats.down_bytes);
+        }
+    }
+
+    #[test]
+    fn transport_trait_is_object_safe_across_engines() {
+        let dim = 8;
+        let mut ps = ParameterServer::new(vec![0.5; dim], None);
+        let mut workers: Vec<Worker> = (0..2).map(|i| mk_worker(i, dim)).collect();
+        let mut buses: Vec<Box<dyn Transport>> =
+            vec![Box::new(LocalBus::default()), Box::new(ThreadedBus::new())];
+        for bus in buses.iter_mut() {
+            let replies = {
+                let (b, _) = ps.broadcast(2);
+                bus.round(&b, &mut workers).unwrap()
+            };
+            assert_eq!(replies.len(), 2, "{}", bus.name());
+            ps.apply(&replies).unwrap();
+        }
+    }
+
+    #[test]
+    fn read_frame_rejects_oversized_length_prefix() {
+        // A length prefix just past the cap must be rejected before any
+        // allocation of that size is attempted.
+        let n = (MAX_FRAME_BYTES as u32) + 1;
+        let mut bytes = n.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 16]);
+        let mut cur = std::io::Cursor::new(bytes);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert!(err.to_string().contains("frame too large"), "{err}");
+
+        // exactly at the cap the length is accepted (then EOF errors out,
+        // which is fine — we only care the cap itself is inclusive)
+        let mut at_cap = std::io::Cursor::new((MAX_FRAME_BYTES as u32).to_le_bytes().to_vec());
+        let err = read_frame(&mut at_cap).unwrap_err();
+        assert!(!err.to_string().contains("frame too large"), "{err}");
+    }
+
+    #[test]
+    fn frame_roundtrip_over_any_io() {
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload).unwrap();
+        assert_eq!(wire.len(), 4 + payload.len());
+        let mut cur = std::io::Cursor::new(wire);
+        assert_eq!(read_frame(&mut cur).unwrap(), payload);
     }
 
     #[test]

@@ -11,7 +11,10 @@ use std::sync::Arc;
 
 /// Where a worker's gradients come from: a PJRT model graph over a data
 /// shard, or a synthetic problem (theory checks).
-pub trait GradSource {
+///
+/// `Send` so a whole [`Worker`] can run on its own
+/// [`super::transport::ThreadedBus`] thread.
+pub trait GradSource: Send {
     /// Stochastic gradient at `weights` for (worker, t). Returns
     /// (loss, flat gradient).
     fn loss_grad(&mut self, weights: &[f32], worker: usize, t: u64) -> Result<(f32, Vec<f32>)>;
@@ -37,7 +40,7 @@ impl GradSource for SimGradSource {
 
 /// PJRT model gradient source over a dataset shard.
 pub struct ModelGradSource {
-    pub model: std::rc::Rc<crate::runtime::ModelRuntime>,
+    pub model: Arc<crate::runtime::ModelRuntime>,
     pub data: Arc<dyn Dataset>,
     pub batch: usize,
 }

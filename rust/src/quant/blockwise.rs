@@ -16,7 +16,7 @@
 //! default block of 4096 the overhead is 1.008 bits/element — the
 //! paper's Comm columns for [44] round this to the same MB as 1-bit.
 
-use super::pack::{pack, unpack_into};
+use super::pack::{pack, unpack_range_into};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -78,10 +78,16 @@ impl Compressor for Blockwise {
     fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
         let p = msg.codes.as_ref().expect("blockwise msg has codes");
         assert_eq!(out.len(), p.n);
-        let mut codes = vec![0u32; p.n];
-        unpack_into(p, &mut codes);
-        for (i, (o, c)) in out.iter_mut().zip(codes).enumerate() {
-            let s = msg.scales[i / self.block];
+        self.decompress_range(msg, 0, out);
+    }
+
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("blockwise msg has codes");
+        let mut codes = vec![0u32; out.len()];
+        unpack_range_into(p, start, &mut codes);
+        for (j, (o, c)) in out.iter_mut().zip(codes).enumerate() {
+            // scales are indexed by the element's global position
+            let s = msg.scales[(start + j) / self.block];
             *o = if c == 0 { -s } else { s };
         }
     }

@@ -26,7 +26,7 @@
 //! ops per element (exactly matching the Pallas kernel's
 //! `floor(log2())` form; see `python/compile/kernels/qadam.py`).
 
-use super::pack::{bits_for_symbols, unpack_into, Packed};
+use super::pack::{bits_for_symbols, unpack_range_into, Packed};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -257,8 +257,13 @@ impl Compressor for LogQuant {
     fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
         let p: &Packed = msg.codes.as_ref().expect("logquant msg has codes");
         assert_eq!(out.len(), p.n);
-        let mut codes = vec![0u32; p.n];
-        unpack_into(p, &mut codes);
+        self.decompress_range(msg, 0, out);
+    }
+
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p: &Packed = msg.codes.as_ref().expect("logquant msg has codes");
+        let mut codes = vec![0u32; out.len()];
+        unpack_range_into(p, start, &mut codes);
         if msg.scales.len() == 1 {
             let s = msg.scales[0];
             for (o, c) in out.iter_mut().zip(codes) {
@@ -266,10 +271,11 @@ impl Compressor for LogQuant {
             }
         } else {
             // Multi-scale (per-chunk) message from the PJRT kernel path:
-            // block size is 2^(param >> 8) (see `pjrt_param`).
+            // block size is 2^(param >> 8) (see `pjrt_param`). Scales are
+            // indexed by the element's *global* position.
             let block = 1usize << (msg.param >> 8);
-            for (i, (o, c)) in out.iter_mut().zip(codes).enumerate() {
-                *o = self.decode_symbol(c, msg.scales[i / block]);
+            for (j, (o, c)) in out.iter_mut().zip(codes).enumerate() {
+                *o = self.decode_symbol(c, msg.scales[(start + j) / block]);
             }
         }
     }

@@ -183,6 +183,12 @@ pub trait Compressor: Send {
     fn compress_into(&self, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg;
     /// Recover the dequantized tensor from a wire message.
     fn decompress(&self, msg: &WireMsg, out: &mut [f32]);
+    /// Decode only elements `[start, start + out.len())` of the message.
+    /// Every codec is fixed-width with positionally-indexed scales, so
+    /// any range decodes independently of the rest — the property the
+    /// sharded parameter server uses to decode block-parallel. Must be
+    /// bit-identical to the matching slice of [`Compressor::decompress`].
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]);
     /// Analytic bits per element (paper's Comm formula).
     fn bits_per_element(&self) -> f64;
     /// True for unbiased codecs (E[Q(u)] = u) — error feedback is not
@@ -210,6 +216,9 @@ impl Compressor for Identity {
     fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
         out.copy_from_slice(&msg.raw);
     }
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        out.copy_from_slice(&msg.raw[start..start + out.len()]);
+    }
     fn bits_per_element(&self) -> f64 {
         32.0
     }
@@ -229,6 +238,20 @@ pub fn decode_msg(msg: &WireMsg, out: &mut [f32]) {
         CodecId::TernGrad => TernGrad.decompress(msg, out),
         CodecId::Blockwise => Blockwise::new(msg.param as usize).decompress(msg, out),
         CodecId::Qsgd => Qsgd::new(msg.param).decompress(msg, out),
+    }
+}
+
+/// [`decode_msg`] restricted to elements `[start, start + out.len())` —
+/// the block-parallel decode entry point of the sharded parameter
+/// server. Bit-identical to slicing a full [`decode_msg`] result.
+pub fn decode_msg_range(msg: &WireMsg, start: usize, out: &mut [f32]) {
+    match msg.codec {
+        CodecId::Identity => Identity.decompress_range(msg, start, out),
+        CodecId::LogQuant => LogQuant::new(msg.param & 0xff).decompress_range(msg, start, out),
+        CodecId::WQuant => WQuant::new(msg.param).decompress_range(msg, start, out),
+        CodecId::TernGrad => TernGrad.decompress_range(msg, start, out),
+        CodecId::Blockwise => Blockwise::new(msg.param as usize).decompress_range(msg, start, out),
+        CodecId::Qsgd => Qsgd::new(msg.param).decompress_range(msg, start, out),
     }
 }
 
@@ -271,6 +294,37 @@ mod tests {
         assert_eq!(back.n, msg.n);
         assert_eq!(back.scales, msg.scales);
         assert_eq!(back.codes, msg.codes);
+    }
+
+    /// Property: for every codec, any [start, end) range decode is
+    /// bit-identical to the matching slice of the full decode — the
+    /// contract the sharded server's block-parallel apply relies on.
+    #[test]
+    fn range_decode_matches_full_decode_all_codecs() {
+        let n = 300;
+        let u: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.37).sin() / (1.0 + i as f32 * 0.01)).collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(LogQuant::new(2)),
+            Box::new(WQuant::new(4)),
+            Box::new(TernGrad),
+            Box::new(Blockwise::new(7)), // non-dividing block: ragged scales
+            Box::new(Qsgd::new(4)),
+            Box::new(StochasticLogQuant::new(3)),
+        ];
+        for comp in &comps {
+            let mut q = vec![0.0; n];
+            let mut rng = seeded_rng(9, 9);
+            let msg = comp.compress_into(&u, &mut q, &mut rng);
+            let mut full = vec![0.0; n];
+            decode_msg(&msg, &mut full);
+            assert_eq!(full, q, "{}: decode identity", comp.name());
+            for &(start, len) in &[(0usize, n), (1, 5), (7, 100), (n - 1, 1), (64, 64)] {
+                let mut part = vec![0.0; len];
+                decode_msg_range(&msg, start, &mut part);
+                assert_eq!(part, full[start..start + len], "{} start={start}", comp.name());
+            }
+        }
     }
 
     #[test]

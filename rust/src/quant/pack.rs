@@ -57,9 +57,18 @@ pub fn pack(codes: &[u32], bits: u8) -> Packed {
 /// Unpack into a caller-provided buffer (len must equal `p.n`).
 pub fn unpack_into(p: &Packed, out: &mut [u32]) {
     assert_eq!(out.len(), p.n);
+    unpack_range_into(p, 0, out);
+}
+
+/// Unpack codes `[start, start + out.len())` without touching the rest
+/// of the payload. Because codes are fixed-width, any range decodes
+/// independently — this is what lets the sharded parameter server
+/// decode one block per thread.
+pub fn unpack_range_into(p: &Packed, start: usize, out: &mut [u32]) {
+    assert!(start + out.len() <= p.n, "range {}+{} out of {} codes", start, out.len(), p.n);
     let b = p.bits as usize;
     let mask = if p.bits == 32 { u32::MAX } else { (1u32 << p.bits) - 1 };
-    let mut bitpos = 0usize;
+    let mut bitpos = start * b;
     for o in out.iter_mut() {
         let w = bitpos >> 6;
         let off = bitpos & 63;
@@ -115,6 +124,37 @@ mod tests {
         let p = pack(&[], 5);
         assert_eq!(p.payload_bytes(), 0);
         assert!(unpack(&p).is_empty());
+    }
+
+    /// Property: any [start, end) range unpacks to the matching slice of
+    /// the full unpack, across widths (incl. word-straddling ones).
+    #[test]
+    fn range_unpack_matches_full_unpack() {
+        for bits in [1u8, 2, 3, 7, 13, 17, 32] {
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let n = 301;
+            let mut s = 0x1234_5678_9abc_def0u64 ^ bits as u64;
+            let codes: Vec<u32> = (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((s >> 33) as u32) & mask
+                })
+                .collect();
+            let p = pack(&codes, bits);
+            for &(start, len) in &[(0usize, n), (1, 10), (63, 66), (n - 1, 1), (150, 0)] {
+                let mut out = vec![0u32; len];
+                unpack_range_into(&p, start, &mut out);
+                assert_eq!(out, codes[start..start + len], "bits={bits} start={start}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn range_unpack_rejects_out_of_bounds() {
+        let p = pack(&[1, 2, 3], 4);
+        let mut out = vec![0u32; 2];
+        unpack_range_into(&p, 2, &mut out);
     }
 
     /// Property: roundtrip for every width x many seeds/lengths.

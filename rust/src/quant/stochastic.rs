@@ -15,7 +15,7 @@
 //! Both are unbiased, so the baselines using them run without error
 //! feedback (mirroring TernGrad).
 
-use super::pack::{bits_for_symbols, pack, unpack_into};
+use super::pack::{bits_for_symbols, pack, unpack_range_into};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -103,6 +103,10 @@ impl Compressor for StochasticLogQuant {
         self.inner().decompress(msg, out)
     }
 
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.inner().decompress_range(msg, start, out)
+    }
+
     fn bits_per_element(&self) -> f64 {
         self.inner().code_bits() as f64
     }
@@ -177,11 +181,16 @@ impl Compressor for Qsgd {
     fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
         let p = msg.codes.as_ref().expect("qsgd msg has codes");
         assert_eq!(out.len(), p.n);
+        self.decompress_range(msg, 0, out);
+    }
+
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("qsgd msg has codes");
         let s = msg.scales[0];
         let bias = msg.param as i32;
         let l = msg.param as f32;
-        let mut codes = vec![0u32; p.n];
-        unpack_into(p, &mut codes);
+        let mut codes = vec![0u32; out.len()];
+        unpack_range_into(p, start, &mut codes);
         for (o, c) in out.iter_mut().zip(codes) {
             *o = (c as i32 - bias) as f32 / l * s;
         }

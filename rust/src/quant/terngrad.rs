@@ -12,7 +12,7 @@
 //!
 //! Wire format: one f32 scale + 2-bit codes over `{-1, 0, +1}`.
 
-use super::pack::{pack, unpack_into};
+use super::pack::{pack, unpack_range_into};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -65,9 +65,14 @@ impl Compressor for TernGrad {
     fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
         let p = msg.codes.as_ref().expect("terngrad msg has codes");
         assert_eq!(out.len(), p.n);
+        self.decompress_range(msg, 0, out);
+    }
+
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("terngrad msg has codes");
         let s = msg.scales[0];
-        let mut codes = vec![0u32; p.n];
-        unpack_into(p, &mut codes);
+        let mut codes = vec![0u32; out.len()];
+        unpack_range_into(p, start, &mut codes);
         for (o, c) in out.iter_mut().zip(codes) {
             *o = match c {
                 0 => -s,

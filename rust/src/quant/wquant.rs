@@ -15,8 +15,28 @@
 //! `idx + 2^{k_x}` where `idx = round(clamp(2x,-1,1) * 2^{k_x})`.
 //! Paper's "Size" column: 162.9 MB fp32 → 81.44 MB at 16 bits
 //! (`k_x = 14`) → 40.72 MB at 8 bits (`k_x = 6`).
+//!
+//! # Role in the convergence theorems
+//!
+//! `Q_x` is the operator behind the *weight-quantization floor* of the
+//! paper's analysis; the per-coordinate bound
+//! `‖x − Q_x(x)‖_∞ ≤ δ_x = 2^-(k_x+2)` ([`WQuant::delta_x_per_coord`],
+//! property-tested below as `assumption3_bound_prop`) is exactly
+//! Assumption 3:
+//!
+//! * **Theorem 3.2** — single worker, `Q_x` on: `E‖∇f(Q_x(x_t))‖²`
+//!   converges to a neighborhood of radius `C₇ ∝ δ_x`, not to 0. The
+//!   empirical check (`rust/tests/convergence_theory.rs`, via
+//!   [`crate::sim`]) asserts the plateau shrinks as `k_x` grows.
+//! * **Theorem 3.3** — the multi-worker version of the same bound;
+//!   the checks verify the floor is no worse at 8 workers than at 1.
+//!
+//! The `decode_identity_prop` test below guards the other contract the
+//! parameter server depends on: the worker-side dequantized view equals
+//! the server-side decode bit-for-bit, so error feedback compensates
+//! exactly the bias the server applies.
 
-use super::pack::{bits_for_symbols, pack, unpack_into};
+use super::pack::{bits_for_symbols, pack, unpack_range_into};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -65,6 +85,37 @@ impl WQuant {
     pub fn delta_x_per_coord(&self) -> f32 {
         f32::exp2(-((self.kx + 2) as f32))
     }
+
+    /// Quantize a slice and emit its (unpacked) wire codes — the
+    /// per-element kernel of [`Compressor::compress_into`], exposed so
+    /// the sharded parameter server can run it one block per thread
+    /// before a single serial bit-pack. Bit-identical to the
+    /// corresponding range of `compress_into`'s outputs.
+    pub fn encode_into(&self, x: &[f32], q: &mut [f32], codes: &mut [u32]) {
+        debug_assert!(x.len() == q.len() && x.len() == codes.len());
+        let bias = 1i32 << self.kx;
+        for ((&xi, qi), ci) in x.iter().zip(q.iter_mut()).zip(codes.iter_mut()) {
+            let idx = self.index(xi);
+            *qi = 0.5 * idx as f32 / bias as f32;
+            *ci = (idx + bias) as u32;
+        }
+    }
+
+    /// Assemble the wire message for codes produced by
+    /// [`Self::encode_into`] — the single owner of the `Q_x` wire
+    /// layout, shared by [`Compressor::compress_into`] and the sharded
+    /// server's block-parallel broadcast.
+    pub fn wire_msg(&self, n: usize, codes: &[u32]) -> WireMsg {
+        debug_assert_eq!(n, codes.len());
+        WireMsg {
+            codec: CodecId::WQuant,
+            param: self.kx,
+            n,
+            scales: vec![],
+            codes: Some(pack(codes, self.code_bits())),
+            raw: vec![],
+        }
+    }
 }
 
 impl Compressor for WQuant {
@@ -76,32 +127,22 @@ impl Compressor for WQuant {
     }
 
     fn compress_into(&self, u: &[f32], q: &mut [f32], _rng: &mut DetRng) -> WireMsg {
-        let bias = 1i32 << self.kx;
-        let codes: Vec<u32> = u
-            .iter()
-            .zip(q.iter_mut())
-            .map(|(&xi, qi)| {
-                let idx = self.index(xi);
-                *qi = 0.5 * idx as f32 / bias as f32;
-                (idx + bias) as u32
-            })
-            .collect();
-        WireMsg {
-            codec: CodecId::WQuant,
-            param: self.kx,
-            n: u.len(),
-            scales: vec![],
-            codes: Some(pack(&codes, self.code_bits())),
-            raw: vec![],
-        }
+        let mut codes = vec![0u32; u.len()];
+        self.encode_into(u, q, &mut codes);
+        self.wire_msg(u.len(), &codes)
     }
 
     fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
         let p = msg.codes.as_ref().expect("wquant msg has codes");
         assert_eq!(out.len(), p.n);
+        self.decompress_range(msg, 0, out);
+    }
+
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("wquant msg has codes");
         let bias = 1i32 << self.kx;
-        let mut codes = vec![0u32; p.n];
-        unpack_into(p, &mut codes);
+        let mut codes = vec![0u32; out.len()];
+        unpack_range_into(p, start, &mut codes);
         for (o, c) in out.iter_mut().zip(codes) {
             *o = 0.5 * (c as i32 - bias) as f32 / bias as f32;
         }

@@ -14,6 +14,7 @@ use super::{literal_f32, literal_scalar, Graph, Runtime};
 use crate::models::Manifest;
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 pub struct KernelQAdam {
     graph: Graph,
@@ -32,7 +33,7 @@ pub struct StepScalars {
 }
 
 impl KernelQAdam {
-    pub fn load(rt: &std::rc::Rc<Runtime>, artifacts: &Path, manifest: &Manifest) -> Result<Self> {
+    pub fn load(rt: &Arc<Runtime>, artifacts: &Path, manifest: &Manifest) -> Result<Self> {
         let graph = rt.load(&artifacts.join(&manifest.optimizer.qadam_artifact))?;
         Ok(Self { graph, chunk: manifest.optimizer.chunk })
     }
@@ -107,7 +108,7 @@ impl KernelQAdam {
 /// [`crate::optim::QAdamEf`] (asserted by the integration tests) but the
 /// moment/quantization math runs inside the AOT-compiled Pallas kernel.
 pub struct PjrtQAdam {
-    kernel: std::rc::Rc<KernelQAdam>,
+    kernel: Arc<KernelQAdam>,
     m: Vec<f32>,
     v: Vec<f32>,
     e: Vec<f32>,
@@ -121,7 +122,7 @@ pub struct PjrtQAdam {
 
 impl PjrtQAdam {
     pub fn new(
-        kernel: std::rc::Rc<KernelQAdam>,
+        kernel: Arc<KernelQAdam>,
         dim: usize,
         kg: u32,
         lr: crate::optim::LrSchedule,

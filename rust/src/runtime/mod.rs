@@ -15,7 +15,7 @@ pub use model::ModelRuntime;
 
 use anyhow::{Context, Result};
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Shared PJRT CPU client. One per process; graphs are compiled against
 /// it and share its thread pool.
@@ -23,10 +23,31 @@ pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+/// All PJRT object traffic from worker threads funnels through this
+/// one lock (see the SAFETY notes below). Coarse on purpose: the CPU
+/// PJRT client parallelizes *inside* one execution via its own thread
+/// pool, so serializing the execute calls themselves costs little,
+/// and it is what lets us share graphs across `ThreadedBus` threads
+/// without trusting unverifiable internals of the `xla` wrapper.
+static PJRT_EXEC_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+// SAFETY: the underlying PJRT C++ client and loaded executables are
+// thread-safe per the PJRT API contract, but the rust `xla` wrapper
+// adds bookkeeping we cannot audit from here (it is not vendored), so
+// we do not rely on it: every cross-thread use of PJRT state goes
+// through [`Graph::run`], which holds the global [`PJRT_EXEC_LOCK`]
+// for the whole execute + host-transfer, and construction/drop of
+// `Runtime`/`Graph` stay on the owning thread, ordered against worker
+// threads by `std::thread::scope`'s spawn/join happens-before edges.
+// `Literal` inputs/outputs are created, used and dropped by exactly
+// one thread (inside the lock where they touch device buffers).
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
 impl Runtime {
-    pub fn cpu() -> Result<Rc<Self>> {
+    pub fn cpu() -> Result<Arc<Self>> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Rc::new(Self { client }))
+        Ok(Arc::new(Self { client }))
     }
 
     pub fn platform(&self) -> String {
@@ -52,8 +73,15 @@ pub struct Graph {
     exe: xla::PjRtLoadedExecutable,
 }
 
+// SAFETY: see the note on [`Runtime`] — all executions serialize on
+// [`PJRT_EXEC_LOCK`], so the wrapper's internals are never touched by
+// two threads at once.
+unsafe impl Send for Graph {}
+unsafe impl Sync for Graph {}
+
 impl Graph {
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let _guard = PJRT_EXEC_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let res = self.exe.execute::<xla::Literal>(inputs)?;
         let lit = res[0][0].to_literal_sync()?;
         Ok(lit.to_tuple()?)

@@ -6,7 +6,7 @@ use crate::data::{Batch, Dataset};
 use crate::models::{Manifest, ModelMeta, ParamLayout};
 use anyhow::{anyhow, Result};
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub struct ModelRuntime {
     pub meta: ModelMeta,
@@ -16,7 +16,7 @@ pub struct ModelRuntime {
 }
 
 impl ModelRuntime {
-    pub fn load(rt: &Rc<Runtime>, artifacts: &Path, manifest: &Manifest, model: &str) -> Result<Self> {
+    pub fn load(rt: &Arc<Runtime>, artifacts: &Path, manifest: &Manifest, model: &str) -> Result<Self> {
         let meta = manifest.model(model)?.clone();
         let grad = rt.load(&artifacts.join(&meta.grad_artifact))?;
         let eval = rt.load(&artifacts.join(&meta.eval_artifact))?;

@@ -17,7 +17,33 @@
 //!
 //! Stochastic gradients add bounded zero-mean noise, matching the
 //! unbiased + bounded-norm part of Assumption 1.
-
+//!
+//! # Which theorem each convergence check exercises
+//!
+//! The checks live in `rust/tests/convergence_theory.rs` (tier-1) and
+//! `examples/convergence_check.rs` (the printed sweep); both drive
+//! Algorithms 2–3 end-to-end over this problem and measure the tail of
+//! `‖∇f‖²` — at the *quantized* weights `Q_x(x_t)` when weight
+//! quantization is on, which is the quantity Theorems 3.2–3.3 bound.
+//!
+//! * **Theorem 3.1** (gradient quantization + error feedback,
+//!   single worker): `min_t E‖∇f(x_t)‖²` decays toward 0 at the
+//!   `O(1/√T)` rate — checked by running `Q_g` (k_g = 2) with EF and
+//!   asserting the tail gradient is tiny and within a constant of the
+//!   fp32 run. The biased-compressor contraction it needs
+//!   (Assumption 2, `δ_g = 2^-(k_g+2)`) is itself property-tested in
+//!   [`crate::quant::logquant`].
+//! * **Theorem 3.2** (weight quantization, single worker): with `Q_x`
+//!   the iterates converge only to a **floor** `C₇ ∝ δ_x` set by the
+//!   weight-grid resolution. [`StochasticProblem::with_offgrid_minimum`]
+//!   exists precisely for this check: a minimizer sitting *on* the
+//!   dyadic `Q_x` grid would hide the floor, so the check plants it
+//!   off-grid and asserts the plateau shrinks as `k_x` grows
+//!   (see [`crate::quant::wquant`] for `δ_x = 2^-(k_x+2)`).
+//! * **Theorem 3.3** (multi-worker, both quantizers): the same
+//!   guarantees survive averaging over `M` workers — checked by running
+//!   1 vs 8 workers and asserting more workers do not hurt the tail
+//!   gradient (noise averaging may only help).
 
 #[derive(Clone, Debug)]
 pub struct StochasticProblem {

@@ -1,11 +1,13 @@
 //! Self-contained utilities (this crate builds offline against only
 //! `xla` + `anyhow`): deterministic RNG, a minimal JSON reader for the
-//! artifact manifest, a tiny CLI-flag parser, and the micro-bench
-//! harness used by `benches/`.
+//! artifact manifest, a tiny CLI-flag parser, the micro-bench harness
+//! used by `benches/`, and the scoped-thread work partitioner behind
+//! the sharded parameter server.
 
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod rng;
 
 pub use args::Args;

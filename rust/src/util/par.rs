@@ -1,0 +1,106 @@
+//! Minimal scoped-thread parallelism (this crate builds offline, so no
+//! rayon): a static, deterministic work partitioner used by the sharded
+//! parameter server and anything else that can pre-split its work into
+//! `Send` tasks over disjoint `&mut` slices.
+//!
+//! Determinism contract: `par_tasks` only decides *which thread* runs a
+//! task, never what the task computes — every task owns its output
+//! slice exclusively, so results are bit-identical to running the tasks
+//! sequentially in order. This is the property the `Transport`
+//! determinism guarantee (DESIGN.md §Round protocol) builds on.
+
+/// Number of worker threads to use by default: the machine's available
+/// parallelism, or 1 when it cannot be queried.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over `tasks`, fanned out across at most `threads` scoped
+/// threads (round-robin static partition). With `threads <= 1` or a
+/// single task, runs inline with no thread spawn at all.
+///
+/// Tasks must be independent: `f` is shared (`Fn + Sync`) and each task
+/// carries its own exclusive data (typically `(offset, &mut [..])`
+/// pairs produced by `chunks_mut`).
+pub fn par_tasks<T, F>(threads: usize, tasks: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let threads = threads.max(1).min(tasks.len());
+    if threads <= 1 {
+        for t in tasks {
+            f(t);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<T>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, t) in tasks.into_iter().enumerate() {
+        buckets[i % threads].push(t);
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            s.spawn(move || {
+                for t in bucket {
+                    f(t);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for threads in [0usize, 1, 2, 5, 64] {
+            let n = 37;
+            let mut data = vec![0u32; n];
+            let tasks: Vec<(usize, &mut u32)> = data.iter_mut().enumerate().collect();
+            let count = AtomicUsize::new(0);
+            par_tasks(threads, tasks, |(i, slot)| {
+                *slot = i as u32 + 1;
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), n, "threads={threads}");
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as u32 + 1, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_task_list_is_a_noop() {
+        par_tasks::<usize, _>(8, Vec::new(), |_| panic!("no tasks to run"));
+    }
+
+    #[test]
+    fn chunked_mut_slices_partition_deterministically() {
+        // The sharded-server usage pattern: disjoint chunks + offsets.
+        let n = 1000;
+        let mut seq = vec![0f32; n];
+        let mut par = vec![0f32; n];
+        for (start, c) in seq.chunks_mut(64).enumerate().map(|(i, c)| (i * 64, c)) {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = ((start + j) as f32).sin();
+            }
+        }
+        let tasks: Vec<(usize, &mut [f32])> =
+            par.chunks_mut(64).enumerate().map(|(i, c)| (i * 64, c)).collect();
+        par_tasks(4, tasks, |(start, c)| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = ((start + j) as f32).sin();
+            }
+        });
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
+    }
+}

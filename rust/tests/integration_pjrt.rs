@@ -9,9 +9,9 @@ use qadam::optim::{LrSchedule, QAdamEf, ThetaSchedule, WorkerOpt};
 use qadam::quant::{decode_msg, seeded_rng};
 use qadam::runtime::kernel::{PjrtQAdam, StepScalars};
 use qadam::runtime::{KernelQAdam, ModelRuntime, Runtime};
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn setup() -> Option<(Rc<Runtime>, Manifest, std::path::PathBuf)> {
+fn setup() -> Option<(Arc<Runtime>, Manifest, std::path::PathBuf)> {
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
@@ -73,7 +73,7 @@ fn pallas_kernel_matches_native_qadam() {
     // PJRT) and the pure-Rust fused loop produce the same moments,
     // quantized delta and residual.
     let Some((rt, manifest, dir)) = setup() else { return };
-    let kernel = Rc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
+    let kernel = Arc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
     // cover: exact multiple of chunk and a ragged tail
     for &n in &[kernel.chunk, kernel.chunk / 2 + 1234] {
         let mut m = rand_vec(1, n, 0.01);
@@ -127,7 +127,7 @@ fn pallas_kernel_matches_native_qadam() {
 fn pjrt_worker_opt_decodes_identically() {
     // PjrtQAdam's wire message must decode to exactly its local qdelta.
     let Some((rt, manifest, dir)) = setup() else { return };
-    let kernel = Rc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
+    let kernel = Arc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
     let n = kernel.chunk + 777; // multi-chunk with ragged tail
     let mut opt = PjrtQAdam::new(kernel, n, 2, LrSchedule::Const { alpha: 1e-2 });
     let mut rng = seeded_rng(0, 0);
@@ -152,12 +152,12 @@ fn native_and_pjrt_training_converge_similarly() {
     // from per-chunk scale & f32 is amplified by training, so compare
     // coarse outcomes, not trajectories).
     let Some((rt, manifest, dir)) = setup() else { return };
-    let model = Rc::new(ModelRuntime::load(&rt, &dir, &manifest, "mlp").unwrap());
+    let model = Arc::new(ModelRuntime::load(&rt, &dir, &manifest, "mlp").unwrap());
     let data = SyntheticVector::new(64, 10, 0);
     let run = |use_pjrt: bool| -> f32 {
         let dim = model.dim();
         let mut opt: Box<dyn WorkerOpt> = if use_pjrt {
-            let kernel = Rc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
+            let kernel = Arc::new(KernelQAdam::load(&rt, &dir, &manifest).unwrap());
             Box::new(PjrtQAdam::new(kernel, dim, 2, LrSchedule::Const { alpha: 5e-3 }))
         } else {
             Box::new(QAdamEf::new(
@@ -198,7 +198,7 @@ fn native_and_pjrt_training_converge_similarly() {
 #[test]
 fn eval_graph_accuracy_improves_with_training() {
     let Some((rt, manifest, dir)) = setup() else { return };
-    let model = Rc::new(ModelRuntime::load(&rt, &dir, &manifest, "mlp").unwrap());
+    let model = Arc::new(ModelRuntime::load(&rt, &dir, &manifest, "mlp").unwrap());
     let data = SyntheticVector::new(64, 10, 0);
     let mut x = model.init_flat(0);
     let acc0 = model.accuracy(&x, &data, 2).unwrap();

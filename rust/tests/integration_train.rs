@@ -1,7 +1,7 @@
 //! Integration: the full training stack (Trainer = PS + workers + PJRT
 //! graphs + datasets + accounting) on small budgets.
 
-use qadam::coordinator::config::{Engine, ExperimentConfig, Method};
+use qadam::coordinator::config::{BusKind, Engine, ExperimentConfig, Method};
 use qadam::coordinator::Trainer;
 use qadam::models::artifacts_dir;
 use qadam::optim::LrSchedule;
@@ -26,6 +26,7 @@ fn base_cfg() -> ExperimentConfig {
         steps_per_epoch: 20,
         lr: LrSchedule::Const { alpha: 2e-3 },
         engine: Engine::Native,
+        bus: BusKind::Sequential,
         seed: 0,
         eval_every: 0,
         eval_batches: 2,
@@ -111,6 +112,23 @@ fn deterministic_given_seed() {
 }
 
 #[test]
+fn threaded_bus_matches_sequential_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.steps = 20;
+    let seq = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    cfg.bus = BusKind::Threaded;
+    let thr = Trainer::new(cfg).unwrap().run().unwrap();
+    // The parallel engine is a pure wall-clock optimization: losses,
+    // accuracies and byte accounting are bit-identical.
+    assert_eq!(seq.final_loss, thr.final_loss);
+    assert_eq!(seq.final_acc, thr.final_acc);
+    assert_eq!(seq.comm_mb_per_iter, thr.comm_mb_per_iter);
+}
+
+#[test]
 fn lm_model_trains_and_loss_drops() {
     if !have_artifacts() {
         return;
@@ -126,6 +144,7 @@ fn lm_model_trains_and_loss_drops() {
         steps_per_epoch: 100,
         lr: LrSchedule::Const { alpha: 5e-3 },
         engine: Engine::Native,
+        bus: BusKind::Sequential,
         seed: 0,
         eval_every: 0,
         eval_batches: 1,

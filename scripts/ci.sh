@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 + docs gate. Run from anywhere: resolves to the repo root.
+#
+#   scripts/ci.sh          # everything
+#   scripts/ci.sh docs     # just the docs/format gate (fast)
+#
+# The docs gate is what keeps DESIGN.md's companion rustdoc honest:
+# `cargo doc` runs with warnings promoted to errors, so broken
+# intra-doc links or malformed doc comments fail CI instead of rotting.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+step() { printf '\n== %s ==\n' "$*"; }
+
+step "cargo fmt --check"
+cargo fmt --check
+
+step "cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+if [ "${1:-all}" = "docs" ]; then
+    echo "docs gate OK"
+    exit 0
+fi
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q"
+cargo test -q
+
+echo
+echo "ci OK"
