@@ -80,9 +80,62 @@ fn round_scaling_bench() {
     }
 }
 
+/// Downlink accounting on the 8-worker synchronous round: full fp32
+/// broadcasts vs compressed weight deltas (kg=2, resync every 50).
+/// The acceptance target is a ≥4x reduction in `stats.down_bytes`.
+fn downlink_bench() {
+    let dim = 1usize << 18;
+    let nw = 8usize;
+    let rounds = 64u64;
+    println!("-- downlink accounting, dim={dim}, {nw} workers, {rounds} rounds --");
+    let x0: Vec<f32> = (0..dim).map(|i| 0.1 * (i as f32 * 0.013).sin()).collect();
+    let mk_workers = || -> Vec<Worker> {
+        (0..nw)
+            .map(|i| {
+                let src = SimGradSource { problem: StochasticProblem::new(dim, 0.05, 3) };
+                let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 1e-3 });
+                Worker::new(i as u32, Box::new(opt), Box::new(src), 7)
+            })
+            .collect()
+    };
+    let run_mode = |delta: bool| -> (u64, f64) {
+        let mut workers = mk_workers();
+        let mut ps = ParameterServer::new(x0.clone(), None);
+        if delta {
+            ps.enable_delta_downlink(Box::new(qadam::quant::LogQuant::new(2)), 50);
+        }
+        let bus = LocalBus::default();
+        let t0 = std::time::Instant::now();
+        for _ in 0..rounds {
+            let replies = {
+                let (b, _) = ps.broadcast(nw);
+                bus.round(&b, &mut workers).unwrap()
+            };
+            ps.apply(&replies).unwrap();
+        }
+        (ps.stats.down_bytes, t0.elapsed().as_secs_f64())
+    };
+    let (full_bytes, full_s) = run_mode(false);
+    let (delta_bytes, delta_s) = run_mode(true);
+    let per_round = |b: u64| b as f64 / rounds as f64 / nw as f64 / 1e6;
+    println!(
+        "   downlink full : {:8.3} MB/round/worker  ({full_s:6.2}s)",
+        per_round(full_bytes)
+    );
+    println!(
+        "   downlink delta: {:8.3} MB/round/worker  ({delta_s:6.2}s)",
+        per_round(delta_bytes)
+    );
+    println!(
+        "   -> down-bytes reduction: {:.2}x (target >= 4x)",
+        full_bytes as f64 / delta_bytes as f64
+    );
+}
+
 fn main() {
     println!("== worker_step ==");
     round_scaling_bench();
+    downlink_bench();
     // Native fused QAdam step at model-scale dims.
     for &n in &[1usize << 16, 1 << 20, 3_257_856] {
         let g = randv(n, 3);

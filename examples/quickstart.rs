@@ -5,7 +5,7 @@
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
-use qadam::coordinator::config::{BusKind, Engine, ExperimentConfig, Method};
+use qadam::coordinator::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
 use qadam::coordinator::Trainer;
 use qadam::optim::LrSchedule;
 
@@ -22,6 +22,8 @@ fn main() -> anyhow::Result<()> {
         lr: LrSchedule::ExpDecay { alpha: 2e-3, half_every: 50 },
         engine: Engine::Native,
         bus: BusKind::Threaded,
+        downlink: Downlink::Full,
+        resync_every: 64,
         seed: 0,
         eval_every: 20,
         eval_batches: 4,

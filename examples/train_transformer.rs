@@ -7,13 +7,13 @@
 //!   cargo run --release --example train_transformer -- \
 //!       [--model transformer_small|transformer] [--steps N] [--workers N]
 //!       [--kg K] [--kx K] [--alpha A] [--engine native|pjrt]
-//!       [--bus sequential|threaded] [--csv PATH]
+//!       [--bus sequential|threaded] [--downlink full|delta] [--csv PATH]
 //!
 //! Defaults are sized so the run finishes in a few minutes on a laptop
 //! CPU while showing an unambiguous loss drop; `--model transformer`
 //! runs the 3.3M-parameter config.
 
-use qadam::coordinator::config::{BusKind, Engine, ExperimentConfig, Method};
+use qadam::coordinator::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
 use qadam::coordinator::Trainer;
 use qadam::optim::LrSchedule;
 use qadam::util::Args;
@@ -33,6 +33,10 @@ fn main() -> anyhow::Result<()> {
     let bus_str = a.get_str("bus", "sequential");
     let bus = BusKind::parse(&bus_str)
         .ok_or_else(|| anyhow::anyhow!("unknown bus '{bus_str}' (sequential | threaded)"))?;
+    let down_str = a.get_str("downlink", "full");
+    let downlink = Downlink::parse(&down_str)
+        .ok_or_else(|| anyhow::anyhow!("unknown downlink '{down_str}' (full | delta)"))?;
+    let resync_every = a.get("resync_every", 64u64)?;
     let csv = a.get_str("csv", "results/train_transformer.csv");
     a.reject_unknown()?;
 
@@ -48,6 +52,8 @@ fn main() -> anyhow::Result<()> {
         lr: LrSchedule::ExpDecay { alpha, half_every: 4 },
         engine,
         bus,
+        downlink,
+        resync_every,
         seed: 0,
         eval_every: (steps / 12).max(25),
         eval_batches: 2,

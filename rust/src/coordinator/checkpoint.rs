@@ -1,23 +1,34 @@
 //! Checkpointing: binary snapshots of the parameter-server state
-//! (master weights + step) and, when available, per-worker optimizer
-//! state (m, v, e) — enough to resume training or to serve/evaluate the
-//! model without rerunning.
+//! (master weights + step), the delta-downlink server state (worker
+//! replica `x̂` + server EF residual) when that mode is on, and, when
+//! available, per-worker optimizer state (m, v, e) — enough to resume
+//! training or to serve/evaluate the model without rerunning.
 //!
-//! Format (little-endian):
+//! Format (little-endian), version 2:
 //! ```text
 //!   magic "QADMCKPT" (8)  version u32  step u64
 //!   model_name: len u32 + utf8
 //!   dim u64, x: dim f32
+//!   server flags u8 (1 = delta-downlink state), then 2*dim f32
+//!     (replica x̂, then residual e_server)
 //!   nworkers u32; per worker: flags u8 (1 = has m/v/e), then 3*dim f32
 //!   crc32 of everything above (simple polynomial, self-contained)
 //! ```
+//! Version-1 checkpoints (no server section) still load; `server` comes
+//! back `None` and the trainer forces a resync frame on resume.
+//!
+//! `from_bytes` must never panic: it feeds off files an operator hands
+//! us. Every read is bounds-checked (truncated or hostile headers —
+//! oversized `name_len`/`dim`/`nworkers` — return
+//! `Err("checkpoint truncated …")`), and trailing garbage after a
+//! structurally complete body is rejected too.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"QADMCKPT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 #[derive(Clone, Debug, Default)]
 pub struct WorkerState {
@@ -26,11 +37,22 @@ pub struct WorkerState {
     pub e: Vec<f32>,
 }
 
+/// Delta-downlink server state (version-2 checkpoints): the worker
+/// replica estimate `x̂` and the server-side EF residual.
+#[derive(Clone, Debug, Default)]
+pub struct ServerState {
+    pub replica: Vec<f32>,
+    pub residual: Vec<f32>,
+}
+
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
     pub model: String,
     pub step: u64,
     pub x: Vec<f32>,
+    /// Delta-downlink state (`None` in full-downlink runs and in
+    /// version-1 checkpoints).
+    pub server: Option<ServerState>,
     pub workers: Vec<Option<WorkerState>>,
 }
 
@@ -55,22 +77,49 @@ fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
     }
 }
 
+// --- bounds-checked readers -------------------------------------------------
+// Every reader validates before slicing; a truncated or hostile header
+// can only ever produce Err, never an out-of-bounds panic or an
+// attacker-sized allocation.
+
+fn rd_u8(b: &[u8], off: &mut usize) -> Result<u8> {
+    let v = *b.get(*off).ok_or_else(|| anyhow!("checkpoint truncated (u8)"))?;
+    *off += 1;
+    Ok(v)
+}
+
+fn rd_u32(b: &[u8], off: &mut usize) -> Result<u32> {
+    let end = off.checked_add(4).filter(|&e| e <= b.len());
+    let end = end.ok_or_else(|| anyhow!("checkpoint truncated (u32)"))?;
+    let v = u32::from_le_bytes(b[*off..end].try_into().unwrap());
+    *off = end;
+    Ok(v)
+}
+
+fn rd_u64(b: &[u8], off: &mut usize) -> Result<u64> {
+    let end = off.checked_add(8).filter(|&e| e <= b.len());
+    let end = end.ok_or_else(|| anyhow!("checkpoint truncated (u64)"))?;
+    let v = u64::from_le_bytes(b[*off..end].try_into().unwrap());
+    *off = end;
+    Ok(v)
+}
+
 fn get_f32s(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
-    if b.len() < *off + n * 4 {
-        bail!("checkpoint truncated");
-    }
-    let out = b[*off..*off + n * 4]
+    let bytes = n.checked_mul(4).ok_or_else(|| anyhow!("checkpoint truncated (f32 run)"))?;
+    let end = off.checked_add(bytes).filter(|&e| e <= b.len());
+    let end = end.ok_or_else(|| anyhow!("checkpoint truncated (f32 run)"))?;
+    let out = b[*off..end]
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    *off += n * 4;
+    *off = end;
     Ok(out)
 }
 
 impl Checkpoint {
     pub fn to_bytes(&self) -> Vec<u8> {
         let dim = self.x.len();
-        let mut buf = Vec::with_capacity(64 + dim * 4 * (1 + 3 * self.workers.len()));
+        let mut buf = Vec::with_capacity(64 + dim * 4 * (3 + 3 * self.workers.len()));
         buf.extend_from_slice(MAGIC);
         buf.extend_from_slice(&VERSION.to_le_bytes());
         buf.extend_from_slice(&self.step.to_le_bytes());
@@ -78,6 +127,23 @@ impl Checkpoint {
         buf.extend_from_slice(self.model.as_bytes());
         buf.extend_from_slice(&(dim as u64).to_le_bytes());
         put_f32s(&mut buf, &self.x);
+        match &self.server {
+            None => buf.push(0),
+            Some(s) => {
+                // The reader infers both run lengths from `dim`; writing
+                // mismatched vectors would seal a corrupt file under a
+                // valid CRC, so this must hold in release builds too.
+                assert!(
+                    s.replica.len() == dim && s.residual.len() == dim,
+                    "server state dims {}/{} != dim {dim}",
+                    s.replica.len(),
+                    s.residual.len()
+                );
+                buf.push(1);
+                put_f32s(&mut buf, &s.replica);
+                put_f32s(&mut buf, &s.residual);
+            }
+        }
         buf.extend_from_slice(&(self.workers.len() as u32).to_le_bytes());
         for w in &self.workers {
             match w {
@@ -96,8 +162,9 @@ impl Checkpoint {
     }
 
     pub fn from_bytes(b: &[u8]) -> Result<Self> {
-        if b.len() < 8 + 4 + 8 + 4 + 8 + 4 + 4 {
-            bail!("checkpoint too short");
+        // magic + version + crc is the absolute minimum
+        if b.len() < 8 + 4 + 4 {
+            bail!("checkpoint truncated (header)");
         }
         let (body, tail) = b.split_at(b.len() - 4);
         let want = u32::from_le_bytes(tail.try_into().unwrap());
@@ -108,38 +175,40 @@ impl Checkpoint {
             bail!("bad checkpoint magic");
         }
         let mut off = 8usize;
-        let rd_u32 = |b: &[u8], off: &mut usize| -> u32 {
-            let v = u32::from_le_bytes(b[*off..*off + 4].try_into().unwrap());
-            *off += 4;
-            v
-        };
-        let rd_u64 = |b: &[u8], off: &mut usize| -> u64 {
-            let v = u64::from_le_bytes(b[*off..*off + 8].try_into().unwrap());
-            *off += 8;
-            v
-        };
-        let version = rd_u32(body, &mut off);
-        if version != VERSION {
+        let version = rd_u32(body, &mut off)?;
+        if version != 1 && version != VERSION {
             bail!("unsupported checkpoint version {version}");
         }
-        let step = rd_u64(body, &mut off);
-        let name_len = rd_u32(body, &mut off) as usize;
-        if body.len() < off + name_len {
-            bail!("checkpoint truncated (name)");
-        }
-        let model = String::from_utf8(body[off..off + name_len].to_vec())?;
-        off += name_len;
-        let dim = rd_u64(body, &mut off) as usize;
+        let step = rd_u64(body, &mut off)?;
+        let name_len = rd_u32(body, &mut off)? as usize;
+        let name_end = off.checked_add(name_len).filter(|&e| e <= body.len());
+        let name_end = name_end.ok_or_else(|| anyhow!("checkpoint truncated (name)"))?;
+        let model = String::from_utf8(body[off..name_end].to_vec())?;
+        off = name_end;
+        let dim64 = rd_u64(body, &mut off)?;
+        let dim = usize::try_from(dim64).map_err(|_| anyhow!("checkpoint truncated (dim)"))?;
         let x = get_f32s(body, &mut off, dim)?;
-        let nworkers = rd_u32(body, &mut off) as usize;
+        let server = if version >= 2 {
+            match rd_u8(body, &mut off)? {
+                0 => None,
+                1 => Some(ServerState {
+                    replica: get_f32s(body, &mut off, dim)?,
+                    residual: get_f32s(body, &mut off, dim)?,
+                }),
+                f => bail!("bad server-state flag {f}"),
+            }
+        } else {
+            None
+        };
+        let nworkers = rd_u32(body, &mut off)? as usize;
+        // each worker record is at least its flag byte — a huge count
+        // cannot name more workers than there are bytes left
+        if nworkers > body.len() - off {
+            bail!("checkpoint truncated (worker count)");
+        }
         let mut workers = Vec::with_capacity(nworkers);
         for _ in 0..nworkers {
-            if body.len() <= off {
-                bail!("checkpoint truncated (worker flag)");
-            }
-            let flag = body[off];
-            off += 1;
-            workers.push(match flag {
+            workers.push(match rd_u8(body, &mut off)? {
                 0 => None,
                 1 => Some(WorkerState {
                     m: get_f32s(body, &mut off, dim)?,
@@ -149,7 +218,10 @@ impl Checkpoint {
                 f => bail!("bad worker flag {f}"),
             });
         }
-        Ok(Checkpoint { model, step, x, workers })
+        if off != body.len() {
+            bail!("checkpoint truncated (trailing bytes)");
+        }
+        Ok(Checkpoint { model, step, x, server, workers })
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -185,6 +257,7 @@ mod tests {
             model: "mlp".into(),
             step: 123,
             x: (0..37).map(|i| i as f32 * 0.5).collect(),
+            server: None,
             workers: vec![
                 None,
                 Some(WorkerState {
@@ -196,6 +269,15 @@ mod tests {
         }
     }
 
+    fn sample_with_server() -> Checkpoint {
+        let mut c = sample();
+        c.server = Some(ServerState {
+            replica: (0..37).map(|i| i as f32 * 0.25).collect(),
+            residual: vec![0.125; 37],
+        });
+        c
+    }
+
     #[test]
     fn roundtrip() {
         let c = sample();
@@ -204,8 +286,40 @@ mod tests {
         assert_eq!(back.model, "mlp");
         assert_eq!(back.step, 123);
         assert_eq!(back.x, c.x);
+        assert!(back.server.is_none());
         assert!(back.workers[0].is_none());
         assert_eq!(back.workers[1].as_ref().unwrap().e, vec![-0.5; 37]);
+    }
+
+    #[test]
+    fn roundtrip_with_server_state() {
+        let c = sample_with_server();
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        let s = back.server.unwrap();
+        let want = c.server.unwrap();
+        assert_eq!(s.replica, want.replica);
+        assert_eq!(s.residual, want.residual);
+    }
+
+    #[test]
+    fn version1_checkpoints_still_load() {
+        // A v1 body is the v2 body minus the server flag byte.
+        let c = sample();
+        let v2 = c.to_bytes();
+        let body = &v2[..v2.len() - 4];
+        let mut v1 = Vec::with_capacity(body.len());
+        v1.extend_from_slice(&body[..8]);
+        v1.extend_from_slice(&1u32.to_le_bytes()); // version
+        let x_end = 12 + 8 + 4 + c.model.len() + 8 + c.x.len() * 4;
+        v1.extend_from_slice(&body[12..x_end]);
+        v1.extend_from_slice(&body[x_end + 1..]); // skip the server flag
+        let crc = crc32(&v1);
+        v1.extend_from_slice(&crc.to_le_bytes());
+        let back = Checkpoint::from_bytes(&v1).unwrap();
+        assert_eq!(back.step, 123);
+        assert_eq!(back.x, c.x);
+        assert!(back.server.is_none());
+        assert_eq!(back.workers.len(), 2);
     }
 
     #[test]
@@ -218,6 +332,77 @@ mod tests {
         // truncation
         let b2 = c.to_bytes();
         assert!(Checkpoint::from_bytes(&b2[..b2.len() - 9]).is_err());
+    }
+
+    /// Satellite acceptance: `from_bytes` never panics — truncation at
+    /// every byte offset and a single-bit flip at every byte offset
+    /// must both return Err cleanly.
+    #[test]
+    fn truncation_and_bitflip_sweep_never_panics() {
+        for c in [sample(), sample_with_server()] {
+            let b = c.to_bytes();
+            for len in 0..b.len() {
+                assert!(
+                    Checkpoint::from_bytes(&b[..len]).is_err(),
+                    "truncated to {len} of {} bytes must not parse",
+                    b.len()
+                );
+            }
+            for i in 0..b.len() {
+                let mut m = b.clone();
+                m[i] ^= 0x01;
+                // CRC (or the CRC field itself) catches every single-bit
+                // flip; the parse must fail without panicking.
+                assert!(Checkpoint::from_bytes(&m).is_err(), "bit flip at {i} must not parse");
+            }
+        }
+    }
+
+    /// Hostile headers that *pass* the CRC (an attacker can always
+    /// recompute it) must still fail cleanly: oversized name/dim/worker
+    /// counts may not panic, wrap offsets, or trigger huge allocations.
+    #[test]
+    fn hostile_headers_with_valid_crc_fail_cleanly() {
+        let base = sample_with_server().to_bytes();
+        let body_len = base.len() - 4;
+        let reseal = |mut body: Vec<u8>| -> Vec<u8> {
+            let crc = crc32(&body);
+            body.extend_from_slice(&crc.to_le_bytes());
+            body
+        };
+        let patched = |at: usize, val: &[u8]| -> Vec<u8> {
+            let mut body = base[..body_len].to_vec();
+            body[at..at + val.len()].copy_from_slice(val);
+            reseal(body)
+        };
+        // name_len at offset 20 (after magic+version+step)
+        for huge in [u32::MAX, body_len as u32] {
+            let b = patched(20, &huge.to_le_bytes());
+            assert!(Checkpoint::from_bytes(&b).is_err());
+        }
+        // dim at offset 24 + name_len ("mlp" = 3)
+        let dim_off = 24 + 3;
+        for huge in [u64::MAX, 1u64 << 40, (body_len as u64) + 1] {
+            let b = patched(dim_off, &huge.to_le_bytes());
+            assert!(Checkpoint::from_bytes(&b).is_err());
+        }
+        // server flag gets an unknown value
+        let flag_off = dim_off + 8 + 37 * 4;
+        assert!(Checkpoint::from_bytes(&patched(flag_off, &[7])).is_err());
+        // nworkers (after flag + 2*dim f32)
+        let nw_off = flag_off + 1 + 2 * 37 * 4;
+        for huge in [u32::MAX, (body_len as u32) + 1] {
+            let b = patched(nw_off, &huge.to_le_bytes());
+            assert!(Checkpoint::from_bytes(&b).is_err());
+        }
+        // unknown version
+        assert!(Checkpoint::from_bytes(&patched(8, &99u32.to_le_bytes())).is_err());
+        // trailing garbage after a structurally complete body
+        let mut body = base[..body_len].to_vec();
+        body.push(0xab);
+        assert!(Checkpoint::from_bytes(&reseal(body)).is_err());
+        // sanity: the unpatched bytes still parse
+        assert!(Checkpoint::from_bytes(&base).is_ok());
     }
 
     #[test]

@@ -71,6 +71,38 @@ impl BusKind {
     }
 }
 
+/// Downlink (server → worker) broadcast mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Downlink {
+    /// Full `Q_x(x_t)` (or fp32) weights every round — the seed
+    /// behavior, bit-identical trajectories to pre-delta builds.
+    #[default]
+    Full,
+    /// Compressed weight-delta broadcasts with server-side error
+    /// feedback (Efficient-Adam-style two-way compression) and periodic
+    /// full resync frames (`resync_every`).
+    Delta,
+}
+
+impl Downlink {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Downlink::Full => "full",
+            Downlink::Delta => "delta",
+        }
+    }
+
+    /// Parse a CLI flag value; `None` for unknown values — callers
+    /// should error, not fall back silently.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "full" => Some(Downlink::Full),
+            "delta" => Some(Downlink::Delta),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Model name from artifacts/manifest.json (e.g. "vgg_sim").
@@ -91,6 +123,12 @@ pub struct ExperimentConfig {
     /// Round transport: sequential reference engine or the parallel
     /// sharded engine (bit-identical results).
     pub bus: BusKind,
+    /// Downlink broadcast mode: full frames every round, or compressed
+    /// weight deltas with server-side error feedback.
+    pub downlink: Downlink,
+    /// Full-weights resync cadence in delta mode, in rounds (0 = only
+    /// round 1 and forced resyncs). Ignored with `downlink = Full`.
+    pub resync_every: u64,
     pub seed: u64,
     /// Evaluate every this many steps (0 = only at the end).
     pub eval_every: u64,
@@ -113,6 +151,8 @@ impl ExperimentConfig {
             lr: LrSchedule::ExpDecay { alpha: crate::defaults::ALPHA, half_every: 50 },
             engine: Engine::Native,
             bus: BusKind::default(),
+            downlink: Downlink::default(),
+            resync_every: 64,
             seed: 0,
             eval_every: 64,
             eval_batches: 4,
@@ -137,7 +177,11 @@ impl ExperimentConfig {
             Some(k) => format!("-kx{k}"),
             None => String::new(),
         };
-        format!("{}-{}{}", self.model, self.method.label(), kx)
+        let down = match self.downlink {
+            Downlink::Full => String::new(),
+            Downlink::Delta => "-ddelta".to_string(),
+        };
+        format!("{}-{}{}{}", self.model, self.method.label(), kx, down)
     }
 }
 
@@ -160,6 +204,19 @@ mod tests {
         let mut c = ExperimentConfig::table3_default();
         c.kx = Some(6);
         assert_eq!(c.run_label(), "vgg_sim-qadam-kg2-kx6");
+    }
+
+    #[test]
+    fn downlink_modes() {
+        assert_eq!(Downlink::default(), Downlink::Full);
+        assert_eq!(Downlink::Full.label(), "full");
+        assert_eq!(Downlink::Delta.label(), "delta");
+        assert_eq!(Downlink::parse("full"), Some(Downlink::Full));
+        assert_eq!(Downlink::parse("delta"), Some(Downlink::Delta));
+        assert_eq!(Downlink::parse("deltaa"), None); // typos error, never fall back
+        let mut c = ExperimentConfig::table3_default();
+        c.downlink = Downlink::Delta;
+        assert_eq!(c.run_label(), "vgg_sim-qadam-kg2-ddelta");
     }
 
     #[test]

@@ -84,6 +84,8 @@ pub fn run_table(which: &str, steps: u64, workers: usize, outdir: &str) -> Resul
             lr: LrSchedule::ExpDecay { alpha: 1e-3, half_every: 50 },
             engine: Engine::Native,
             bus: super::config::BusKind::default(),
+            downlink: super::config::Downlink::default(),
+            resync_every: 64,
             seed: 0,
             eval_every: if curves { 32 } else { 0 },
             eval_batches: if curves { 2 } else { 4 },

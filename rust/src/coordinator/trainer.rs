@@ -1,7 +1,7 @@
 //! The synchronous training driver: server + N workers + dataset +
 //! PJRT model graphs, one process, byte-accurate comm accounting.
 
-use super::config::{BusKind, Engine, ExperimentConfig, Method};
+use super::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
 use super::metrics::{MetricsLog, Row};
 use crate::data::{Dataset, SyntheticText, SyntheticVector, SyntheticVision};
 use crate::models::{artifacts_dir, Manifest};
@@ -22,6 +22,9 @@ pub struct RunSummary {
     pub final_loss: f32,
     /// Measured uplink MB per iteration per worker (Comm column).
     pub comm_mb_per_iter: f64,
+    /// Measured downlink MB per iteration per worker (full broadcasts
+    /// or compressed weight deltas, resync frames included).
+    pub down_mb_per_iter: f64,
     /// Analytic model size in MB at the broadcast precision (Size column).
     pub model_size_mb: f64,
     /// fp32 model size in MB for the ratio.
@@ -50,6 +53,10 @@ pub struct Trainer {
     bus: Box<dyn Transport>,
     model: Arc<ModelRuntime>,
     data: Arc<dyn Dataset>,
+    /// Set by [`Trainer::restore`], cleared by [`Trainer::run`]: lets
+    /// `run` distinguish "restored at/past the horizon" (log a final
+    /// eval) from a fresh `steps = 0` config or a repeated `run` call.
+    restored: bool,
     pub log: MetricsLog,
 }
 
@@ -79,7 +86,7 @@ fn make_opt(
             }
             (Some(k), Engine::Native) => Box::new(QAdamEf::new(
                 dim,
-                Box::new(crate::quant::LogQuant::new(k)),
+                crate::quant::gradient_codec(Some(k)),
                 error_feedback,
                 cfg.lr,
                 crate::optim::ThetaSchedule::Const { theta: crate::defaults::THETA },
@@ -167,12 +174,27 @@ impl Trainer {
                 (Box::new(ThreadedBus::new()), crate::util::par::available_threads())
             }
         };
-        let ps = ParameterServer::with_shards(
+        let mut ps = ParameterServer::with_shards(
             model.init_flat(cfg.seed),
             cfg.kx,
             crate::ps::server::DEFAULT_BLOCK,
             ps_threads,
         );
+        if cfg.downlink == Downlink::Delta {
+            // The downlink reuses the gradient codec family: the method's
+            // kg level when it has one, fp32 Identity otherwise.
+            let kg = match cfg.method {
+                Method::QAdam { kg, .. } => kg,
+                _ => None,
+            };
+            if kg.is_none() {
+                eprintln!(
+                    "[trainer] downlink=delta without a k_g-bearing method: delta frames \
+                     ship fp32 (protocol-correct, but no downlink compression)"
+                );
+            }
+            ps.enable_delta_downlink(crate::quant::gradient_codec(kg), cfg.resync_every);
+        }
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
             let opt = make_opt(&cfg, dim, kernel.as_ref())?;
@@ -180,7 +202,7 @@ impl Trainer {
             workers.push(Worker::new(i as u32, opt, Box::new(src), cfg.seed ^ 0x5a5a));
         }
         let log = MetricsLog::new(cfg.run_label());
-        Ok(Self { cfg, ps, workers, bus, model, data, log })
+        Ok(Self { cfg, ps, workers, bus, model, data, restored: false, log })
     }
 
     /// Model size at broadcast precision, MB.
@@ -230,6 +252,39 @@ impl Trainer {
                 );
             }
         }
+        if start > self.cfg.steps && self.restored {
+            // Restored at/past the configured horizon: no rounds ran, so
+            // the loop above logged nothing and `last_loss` would stay
+            // NaN. Evaluate the restored weights instead — the fused
+            // fwd/bwd graph on the step's deterministic batch for the
+            // training loss (there is no loss-only AOT graph), plus the
+            // usual eval on the same view — and log the final row. (A
+            // fresh `steps = 0` trainer or a repeated `run` call is not
+            // a restore and keeps the seed behavior: no rounds, no rows.)
+            let t = self.ps.step();
+            let epoch = self.cfg.epoch_of(t.max(1));
+            let w = self.ps.output_weights().to_vec();
+            let batch = self.data.train_batch(0, t, self.cfg.batch);
+            let (loss, _grad) = self.model.loss_grad(&w, &batch)?;
+            last_loss = loss;
+            let acc = self.model.accuracy(&w, self.data.as_ref(), self.cfg.eval_batches)?;
+            let s = &self.ps.stats;
+            self.log.push(Row {
+                t,
+                epoch,
+                train_loss: last_loss,
+                test_acc: acc,
+                up_mb_per_round: s.up_mb_per_round_per_worker(self.workers.len()),
+                down_mb_per_round: s.down_mb_per_round_per_worker(self.workers.len()),
+                residual_norm: self.workers[0].residual_norm(),
+            });
+            eprintln!(
+                "[{}] t={t} (restored at horizon) loss={last_loss:.4} acc={:.2}%",
+                self.log.label,
+                100.0 * acc
+            );
+        }
+        self.restored = false;
         let (size_mb, fp32_mb) = self.model_size_mb();
         Ok(RunSummary {
             label: self.log.label.clone(),
@@ -237,19 +292,27 @@ impl Trainer {
             best_acc: self.log.best_acc().unwrap_or(0.0),
             final_loss: last_loss,
             comm_mb_per_iter: self.ps.stats.up_mb_per_round_per_worker(self.workers.len()),
+            down_mb_per_iter: self.ps.stats.down_mb_per_round_per_worker(self.workers.len()),
             model_size_mb: size_mb,
             model_size_fp32_mb: fp32_mb,
             steps: self.cfg.steps,
         })
     }
 
-    /// Snapshot the current training state (weights + step + worker
+    /// Snapshot the current training state (weights + step + the
+    /// delta-downlink server state when that mode is on + worker
     /// optimizer states when available).
     pub fn checkpoint(&self) -> super::checkpoint::Checkpoint {
         super::checkpoint::Checkpoint {
             model: self.cfg.model.clone(),
             step: self.ps.step(),
             x: self.ps.master().to_vec(),
+            server: self.ps.downlink_state().map(|(replica, residual)| {
+                super::checkpoint::ServerState {
+                    replica: replica.to_vec(),
+                    residual: residual.to_vec(),
+                }
+            }),
             workers: self
                 .workers
                 .iter()
@@ -261,6 +324,14 @@ impl Trainer {
     }
 
     /// Resume from a checkpoint written by [`Trainer::checkpoint`].
+    ///
+    /// In delta-downlink mode a version-2 checkpoint restores the
+    /// server replica/residual *and* seeds every worker's weight view
+    /// from the replica (the replica is the bit-exact worker state), so
+    /// a resumed run continues the exact trajectory of an uninterrupted
+    /// one. Restoring a checkpoint without downlink state (a version-1
+    /// file, or one written in full mode) forces a full resync frame on
+    /// the next round instead.
     pub fn restore(&mut self, ckpt: &super::checkpoint::Checkpoint) -> Result<()> {
         if ckpt.model != self.cfg.model {
             return Err(anyhow!("checkpoint is for model '{}', trainer runs '{}'", ckpt.model, self.cfg.model));
@@ -269,11 +340,25 @@ impl Trainer {
             return Err(anyhow!("checkpoint dim {} != model dim {}", ckpt.x.len(), self.model.dim()));
         }
         self.ps.restore(&ckpt.x, ckpt.step);
+        match (&ckpt.server, self.cfg.downlink) {
+            (Some(s), Downlink::Delta) => {
+                self.ps.restore_downlink(&s.replica, &s.residual)?;
+                for w in self.workers.iter_mut() {
+                    w.restore_weights(&s.replica);
+                }
+            }
+            // v1 file (or one written in full mode): `ps.restore` already
+            // scheduled the resync frame that re-syncs the workers.
+            (None, Downlink::Delta) => {}
+            // full mode ignores any delta-downlink state in the file
+            _ => {}
+        }
         for (w, ws) in self.workers.iter_mut().zip(&ckpt.workers) {
             if let Some(ws) = ws {
                 w.opt_restore(&ws.m, &ws.v, &ws.e);
             }
         }
+        self.restored = true;
         Ok(())
     }
 
@@ -286,10 +371,10 @@ impl Trainer {
     /// Post-training weight quantization (the paper's **WQuan** rows):
     /// train at full precision, then quantize the final weights and
     /// re-evaluate.
-    pub fn eval_post_quantized(&mut self, kx: u32) -> Result<f32> {
+    pub fn eval_post_quantized(&self, kx: u32) -> Result<f32> {
         let wq = crate::quant::WQuant::new(kx);
         let mut q = vec![0.0f32; self.ps.dim()];
-        wq.quantize_into(&self.ps.master().to_vec(), &mut q);
+        wq.quantize_into(self.ps.master(), &mut q);
         self.model.accuracy(&q, self.data.as_ref(), self.cfg.eval_batches)
     }
 }

@@ -14,7 +14,7 @@
 //!   qadam worker --addr 127.0.0.1:7777 --id 0 & qadam worker --id 1
 
 use anyhow::{anyhow, bail, Result};
-use qadam::coordinator::config::{BusKind, Engine};
+use qadam::coordinator::config::{BusKind, Downlink, Engine};
 use qadam::coordinator::{ExperimentConfig, Method, Trainer};
 use qadam::models::{artifacts_dir, Manifest};
 use qadam::optim::LrSchedule;
@@ -37,6 +37,11 @@ train flags:
   --bus B               sequential | threaded round engine (default
                         sequential; threaded = one thread per worker +
                         block-sharded server, bit-identical results)
+  --downlink D          full | delta broadcasts (default full; delta =
+                        compressed weight deltas + server-side error
+                        feedback, resync every --resync-every rounds)
+  --resync-every N      full-weights resync cadence in delta mode
+                        (default 64; 0 = only round 1)
   --workers N           number of workers (default 8)
   --steps N             training steps (default 200)
   --steps-per-epoch N   epoch length for LR decay (default 64)
@@ -51,7 +56,8 @@ train flags:
 eval flags:
   --ckpt PATH --model NAME --dataset NAME [--post-kx K] [--eval-batches N]
 
-serve flags:  --addr A --workers N --dim D --steps N [--kx K]
+serve flags:  --addr A --workers N --dim D --steps N [--kx K] [--kg K]
+              [--downlink D] [--resync-every N]
 worker flags: --addr A --id I --dim D --method M [--kg K] [--alpha A]
 ";
 
@@ -77,12 +83,18 @@ fn parse_bus(a: &Args) -> Result<BusKind> {
     BusKind::parse(&v).ok_or_else(|| anyhow!("unknown bus '{v}' (sequential | threaded)"))
 }
 
+fn parse_downlink(a: &Args) -> Result<(Downlink, u64)> {
+    let v = a.get_str("downlink", "full");
+    let d = Downlink::parse(&v).ok_or_else(|| anyhow!("unknown downlink '{v}' (full | delta)"))?;
+    Ok((d, a.get("resync_every", 64u64)?))
+}
+
 fn build_sim_opt(m: Method, dim: usize, lr: LrSchedule) -> Box<dyn qadam::optim::WorkerOpt> {
     use qadam::optim::{BlockwiseSgdEf, QAdamEf, TernGradSgd};
     match m {
         Method::QAdam { kg: Some(k), error_feedback } => Box::new(QAdamEf::new(
             dim,
-            Box::new(qadam::quant::LogQuant::new(k)),
+            qadam::quant::gradient_codec(Some(k)),
             error_feedback,
             lr,
             qadam::optim::ThetaSchedule::Const { theta: qadam::defaults::THETA },
@@ -97,6 +109,7 @@ fn build_sim_opt(m: Method, dim: usize, lr: LrSchedule) -> Box<dyn qadam::optim:
 
 fn cmd_train(a: &Args) -> Result<()> {
     let (method, kx, engine) = parse_method(a)?;
+    let (downlink, resync_every) = parse_downlink(a)?;
     let cfg = ExperimentConfig {
         model: a.get_str("model", "vgg_sim"),
         dataset: a.get_str("dataset", "cifar10_sim"),
@@ -109,6 +122,8 @@ fn cmd_train(a: &Args) -> Result<()> {
         lr: LrSchedule::ExpDecay { alpha: a.get("alpha", 1e-3f32)?, half_every: 50 },
         engine,
         bus: parse_bus(a)?,
+        downlink,
+        resync_every,
         seed: a.get("seed", 0u64)?,
         eval_every: a.get("eval_every", 50u64)?,
         eval_batches: a.get("eval_batches", 4usize)?,
@@ -146,10 +161,21 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let dim = a.get("dim", 64usize)?;
     let steps = a.get("steps", 200u64)?;
     let kx: Option<u32> = a.opt("kx")?;
+    let kg: Option<u32> = a.opt("kg")?;
+    let (downlink, resync_every) = parse_downlink(a)?;
     a.reject_unknown()?;
     let mut srv = TcpServer::bind_and_accept(&addr, workers)?;
     let problem = qadam::sim::StochasticProblem::new(dim, 0.05, 1);
     let mut ps = ParameterServer::new(problem.x0(), kx);
+    if downlink == Downlink::Delta {
+        if kg.is_none() {
+            eprintln!(
+                "[server] --downlink delta without --kg: delta frames ship fp32 \
+                 (protocol-correct, but no downlink compression)"
+            );
+        }
+        ps.enable_delta_downlink(qadam::quant::gradient_codec(kg), resync_every);
+    }
     for t in 1..=steps {
         let replies = {
             let (b, _) = ps.broadcast(workers);
@@ -211,6 +237,8 @@ fn cmd_eval(a: &Args) -> Result<()> {
         lr: LrSchedule::Const { alpha: 0.0 },
         engine: Engine::Native,
         bus: BusKind::Sequential,
+        downlink: Downlink::Full,
+        resync_every: 0,
         seed: a.get("seed", 0u64)?,
         eval_every: 0,
         eval_batches: a.get("eval_batches", 4usize)?,

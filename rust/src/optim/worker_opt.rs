@@ -235,8 +235,8 @@ mod tests {
             let msg = opt.step(&g, t, 0, &mut rng);
             let mut delta = vec![0.0; dim];
             crate::quant::decode_msg(&msg, &mut delta);
-            for i in 0..dim {
-                x[i] -= delta[i];
+            for (xi, d) in x.iter_mut().zip(&delta) {
+                *xi -= d;
             }
         }
         // final distance to optimum

@@ -6,8 +6,14 @@ use anyhow::{anyhow, Result};
 /// Server → worker.
 #[derive(Clone, Debug)]
 pub enum ToWorker {
-    /// Broadcast of the (possibly Q_x-quantized) weights for step `t`.
+    /// Broadcast of the (possibly Q_x-quantized) weights for step `t` —
+    /// the full frame, also the delta-downlink's resync frame. Workers
+    /// **overwrite** their replica with the decode.
     Weights { t: u64, epoch: u64, msg: WireMsg },
+    /// Compressed weight-delta broadcast for step `t` (delta-downlink
+    /// mode): `msg = Q_g(x_t − x̂_{t−1} + e_server)`. Workers **add**
+    /// the decode to their replica.
+    WeightsDelta { t: u64, epoch: u64, msg: WireMsg },
     Shutdown,
 }
 
@@ -21,22 +27,17 @@ impl ToWorker {
     pub fn wire_bytes(&self) -> usize {
         match self {
             // t(8) + epoch(8) + payload
-            ToWorker::Weights { msg, .. } => 16 + msg.wire_bytes(),
+            ToWorker::Weights { msg, .. } | ToWorker::WeightsDelta { msg, .. } => {
+                16 + msg.wire_bytes()
+            }
             ToWorker::Shutdown => 1,
         }
     }
 
     pub fn to_bytes(&self) -> Vec<u8> {
         match self {
-            ToWorker::Weights { t, epoch, msg } => {
-                let body = msg.to_bytes();
-                let mut out = Vec::with_capacity(17 + body.len());
-                out.push(1u8);
-                out.extend_from_slice(&t.to_le_bytes());
-                out.extend_from_slice(&epoch.to_le_bytes());
-                out.extend_from_slice(&body);
-                out
-            }
+            ToWorker::Weights { t, epoch, msg } => frame_bytes(1, *t, *epoch, msg),
+            ToWorker::WeightsDelta { t, epoch, msg } => frame_bytes(2, *t, *epoch, msg),
             ToWorker::Shutdown => vec![0u8],
         }
     }
@@ -44,18 +45,33 @@ impl ToWorker {
     pub fn from_bytes(b: &[u8]) -> Result<Self> {
         match b.first() {
             Some(0) => Ok(ToWorker::Shutdown),
-            Some(1) => {
+            Some(&(tag @ (1 | 2))) => {
                 if b.len() < 17 {
-                    return Err(anyhow!("short Weights frame"));
+                    return Err(anyhow!("short weights frame"));
                 }
                 let t = u64::from_le_bytes(b[1..9].try_into().unwrap());
                 let epoch = u64::from_le_bytes(b[9..17].try_into().unwrap());
                 let msg = WireMsg::from_bytes(&b[17..])?;
-                Ok(ToWorker::Weights { t, epoch, msg })
+                Ok(if tag == 1 {
+                    ToWorker::Weights { t, epoch, msg }
+                } else {
+                    ToWorker::WeightsDelta { t, epoch, msg }
+                })
             }
             _ => Err(anyhow!("bad ToWorker tag")),
         }
     }
+}
+
+/// `tag | t | epoch | WireMsg` — shared by both weights-frame kinds.
+fn frame_bytes(tag: u8, t: u64, epoch: u64, msg: &WireMsg) -> Vec<u8> {
+    let body = msg.to_bytes();
+    let mut out = Vec::with_capacity(17 + body.len());
+    out.push(tag);
+    out.extend_from_slice(&t.to_le_bytes());
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&body);
+    out
 }
 
 impl ToServer {
@@ -142,6 +158,25 @@ mod tests {
         }
         assert!(matches!(ToWorker::from_bytes(&[0]).unwrap(), ToWorker::Shutdown));
         assert!(ToWorker::from_bytes(&[9, 9]).is_err());
+    }
+
+    #[test]
+    fn weights_delta_roundtrip_and_accounting() {
+        let m = ToWorker::WeightsDelta { t: 9, epoch: 1, msg: sample_msg() };
+        // same framing cost as a full frame of the same payload
+        let full = ToWorker::Weights { t: 9, epoch: 1, msg: sample_msg() };
+        assert_eq!(m.wire_bytes(), full.wire_bytes());
+        let b = m.to_bytes();
+        assert_eq!(b[0], 2, "delta frames carry tag 2");
+        match ToWorker::from_bytes(&b).unwrap() {
+            ToWorker::WeightsDelta { t, epoch, msg } => {
+                assert_eq!((t, epoch), (9, 1));
+                assert_eq!(msg.n, 100);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // truncated delta frames fail cleanly
+        assert!(ToWorker::from_bytes(&b[..10]).is_err());
     }
 
     #[test]

@@ -15,9 +15,24 @@
 //! **bit-identical** to the sequential one for any `(block, threads)` —
 //! asserted by the tests below. `threads = 1` (the [`Self::new`]
 //! default) keeps the seed behavior exactly.
+//!
+//! **Delta downlink** ([`ParameterServer::enable_delta_downlink`]). The uplink has
+//! always been compressed; by default the downlink still ships the full
+//! `Q_x(x_t)` codes (or raw fp32) every round. In delta mode the server
+//! mirrors the worker-side error feedback (Efficient-Adam, Chen et al.
+//! 2022): it keeps a worker-replica estimate `x̂` plus its own
+//! [`ErrorFeedback`] residual `e`, and broadcasts
+//! `ToWorker::WeightsDelta { msg = Q_g(view_t − x̂_{t−1} + e) }`
+//! (where `view_t` is `Q_x(x_t)` or `x_t`), advancing
+//! `x̂ ← x̂ + decode(msg)` — the bit-exact mirror of what every worker
+//! applies, by the codec decode identity. A full [`ToWorker::Weights`]
+//! resync frame goes out on round 1, every `resync_every` rounds after
+//! it, and after a restore without downlink state, resetting `x̂` to
+//! the broadcast view and `e` to zero. `downlink=full` is untouched
+//! code and stays bit-identical to the seed behavior.
 
 use super::protocol::{CommStats, ToServer, ToWorker};
-use crate::quant::{decode_msg_range, Compressor, Identity, WQuant, WireMsg};
+use crate::quant::{decode_msg_range, Compressor, ErrorFeedback, Identity, WQuant, WireMsg};
 use crate::util::par::par_tasks;
 use anyhow::{anyhow, Result};
 
@@ -38,8 +53,28 @@ pub struct ParameterServer {
     block: usize,
     /// Worker threads for block-parallel passes (1 = sequential).
     threads: usize,
+    /// Compressed-downlink state (None = full broadcasts, the default).
+    down: Option<DeltaDownlink>,
     pub stats: CommStats,
     t: u64,
+}
+
+/// Server-side state of the compressed (weight-delta) downlink.
+struct DeltaDownlink {
+    /// Gradient-family codec compressing the broadcast delta.
+    comp: Box<dyn Compressor>,
+    /// Full-resync cadence in rounds (0 = only round 1 / forced).
+    resync_every: u64,
+    /// Worker-replica estimate `x̂`: bit-exact mirror of every worker's
+    /// decoded weight state.
+    replica: Vec<f32>,
+    /// Server-side error-feedback residual over broadcast deltas.
+    ef: ErrorFeedback,
+    /// Scratch: broadcast direction `view − x̂`.
+    dir: Vec<f32>,
+    /// Next broadcast must be a full resync frame (set after restores
+    /// that carry no downlink state).
+    pending_resync: bool,
 }
 
 impl ParameterServer {
@@ -63,8 +98,60 @@ impl ParameterServer {
             wq,
             block,
             threads: threads.max(1),
+            down: None,
             stats: CommStats::default(),
             t: 0,
+        }
+    }
+
+    /// Switch the downlink to compressed weight-delta broadcasts. Must
+    /// be called before the first round (the protocol needs round 1 to
+    /// be the initial full resync frame). `comp` is the gradient-family
+    /// codec for the delta payload ([`crate::quant::gradient_codec`]);
+    /// a full resync frame goes out every `resync_every` rounds (0 =
+    /// only round 1 and forced resyncs).
+    pub fn enable_delta_downlink(&mut self, comp: Box<dyn Compressor>, resync_every: u64) {
+        assert_eq!(self.t, 0, "downlink mode must be chosen before round 1");
+        let dim = self.x.len();
+        self.down = Some(DeltaDownlink {
+            comp,
+            resync_every,
+            replica: vec![0.0; dim],
+            ef: ErrorFeedback::new(dim, true),
+            dir: vec![0.0; dim],
+            pending_resync: false,
+        });
+    }
+
+    /// `(replica x̂, server EF residual)` when the delta downlink is on.
+    pub fn downlink_state(&self) -> Option<(&[f32], &[f32])> {
+        self.down.as_ref().map(|d| (d.replica.as_slice(), d.ef.residual()))
+    }
+
+    /// Restore delta-downlink state saved from [`Self::downlink_state`]
+    /// (version-2 checkpoints).
+    pub fn restore_downlink(&mut self, replica: &[f32], residual: &[f32]) -> Result<()> {
+        let d = self.down.as_mut().ok_or_else(|| anyhow!("delta downlink is not enabled"))?;
+        if replica.len() != d.replica.len() || residual.len() != d.replica.len() {
+            return Err(anyhow!(
+                "downlink state dim {}/{} != model dim {}",
+                replica.len(),
+                residual.len(),
+                d.replica.len()
+            ));
+        }
+        d.replica.copy_from_slice(replica);
+        d.ef.set_residual(residual);
+        d.pending_resync = false;
+        Ok(())
+    }
+
+    /// Force the next broadcast to be a full `Weights` resync frame —
+    /// used after a restore that carries no downlink state, so workers
+    /// (and the replica) re-synchronize before any delta frame.
+    pub fn force_resync(&mut self) {
+        if let Some(d) = self.down.as_mut() {
+            d.pending_resync = true;
         }
     }
 
@@ -81,16 +168,35 @@ impl ParameterServer {
         &self.x
     }
 
-    /// Restore (weights, step) from a checkpoint.
+    /// Restore (weights, step) from a checkpoint. In delta-downlink
+    /// mode this schedules a full resync frame for the next round — the
+    /// in-memory replica no longer matches any worker; callers that
+    /// also restore the saved downlink state
+    /// ([`Self::restore_downlink`]) clear the pending resync again.
     pub fn restore(&mut self, x: &[f32], t: u64) {
         assert_eq!(x.len(), self.x.len());
         self.x.copy_from_slice(x);
         self.t = t;
+        self.force_resync();
     }
 
     /// What an edge device stores/serves: Q_x(x) when quantizing,
     /// else x (paper Alg. 2 "Output Q_x(x_t)").
     pub fn output_weights(&mut self) -> &[f32] {
+        match self.wq {
+            Some(_) => {
+                self.refresh_view();
+                &self.qx
+            }
+            None => &self.x,
+        }
+    }
+
+    /// Fill `qx` with the broadcast view: `Q_x(x)` block-parallel, or a
+    /// copy of `x` when weight quantization is off. Shared by
+    /// [`Self::output_weights`] and the delta-frame path; bit-identical
+    /// to the view [`Self::encode_full_msg`] leaves behind.
+    fn refresh_view(&mut self) {
         match self.wq {
             Some(wq) => {
                 let x = &self.x;
@@ -98,9 +204,8 @@ impl ParameterServer {
                 par_tasks(self.threads, tasks, |(start, qc)| {
                     wq.quantize_into(&x[start..start + qc.len()], qc);
                 });
-                &self.qx
             }
-            None => &self.x,
+            None => self.qx.copy_from_slice(&self.x),
         }
     }
 
@@ -115,8 +220,69 @@ impl ParameterServer {
     /// workers' ExpDecay schedules).
     pub fn broadcast_at_epoch(&mut self, nworkers: usize, epoch: u64) -> (ToWorker, &[f32]) {
         self.t += 1;
+        let resync = match &self.down {
+            // full downlink: every frame is a full frame
+            None => true,
+            Some(d) => {
+                d.pending_resync
+                    || self.t == 1
+                    || (d.resync_every > 0 && (self.t - 1) % d.resync_every == 0)
+            }
+        };
+        if resync {
+            let msg = self.encode_full_msg();
+            if let Some(d) = self.down.as_mut() {
+                // A full frame re-anchors every worker replica at the
+                // broadcast view exactly; the old residual is obsolete.
+                d.replica.copy_from_slice(&self.qx);
+                d.ef.reset();
+                d.pending_resync = false;
+            }
+            let tw = ToWorker::Weights { t: self.t, epoch, msg };
+            self.stats.down_bytes += (tw.wire_bytes() * nworkers) as u64;
+            return (tw, &self.qx);
+        }
+
+        // Delta frame: target view Q_x(x_t) (or x_t) into qx.
+        self.refresh_view();
+        let down = self.down.as_mut().expect("delta frame requires delta mode");
+        // direction = view − x̂ (the EF residual is added inside compress)
+        {
+            let qx = &self.qx;
+            let replica = &down.replica;
+            let tasks: Vec<(usize, &mut [f32])> = blocks(&mut down.dir, self.block);
+            par_tasks(self.threads, tasks, |(start, dc)| {
+                for (j, d) in dc.iter_mut().enumerate() {
+                    *d = qx[start + j] - replica[start + j];
+                }
+            });
+        }
+        // The codec quantize + pack stays serial, like the full path's
+        // bit-pack; rng is only consumed by stochastic codecs and is
+        // deterministic in the round.
+        let mut rng = crate::quant::seeded_rng(0x00d0_0b17, self.t);
+        let (msg, q) = down.ef.compress_q(&down.dir, down.comp.as_ref(), &mut rng);
+        // x̂ ← x̂ + decode(msg): the bit-exact mirror of what every
+        // worker applies (codec decode identity).
+        let tasks: Vec<(usize, &mut [f32])> = blocks(&mut down.replica, self.block);
+        par_tasks(self.threads, tasks, |(start, rc)| {
+            for (j, r) in rc.iter_mut().enumerate() {
+                *r += q[start + j];
+            }
+        });
+        let tw = ToWorker::WeightsDelta { t: self.t, epoch, msg };
+        self.stats.down_bytes += (tw.wire_bytes() * nworkers) as u64;
+        let down = self.down.as_ref().expect("delta frame requires delta mode");
+        (tw, &down.replica)
+    }
+
+    /// Encode the full weight broadcast payload (`Q_x(x_t)` codes or
+    /// raw fp32), leaving the dequantized broadcast view in `self.qx`.
+    /// The one owner of the full-frame encoding, shared by the full
+    /// downlink and the delta mode's resync frames.
+    fn encode_full_msg(&mut self) -> WireMsg {
         let n = self.x.len();
-        let msg: WireMsg = match self.wq {
+        match self.wq {
             Some(wq) => {
                 // Block-parallel re-quantization: each task fills its
                 // slice of (qx, codes); the bit-pack stays serial (it is
@@ -139,10 +305,7 @@ impl ParameterServer {
                 let mut rng = crate::quant::seeded_rng(0, self.t); // unused (Identity)
                 Identity.compress_into(&self.x, &mut self.qx, &mut rng)
             }
-        };
-        let tw = ToWorker::Weights { t: self.t, epoch, msg };
-        self.stats.down_bytes += (tw.wire_bytes() * nworkers) as u64;
-        (tw, &self.qx)
+        }
     }
 
     /// Gather + apply one synchronous round of deltas (Alg. 2 lines 3–4).
@@ -161,6 +324,20 @@ impl ParameterServer {
             if msg.n != self.x.len() {
                 return Err(anyhow!("delta dim {} != model dim {}", msg.n, self.x.len()));
             }
+        }
+        // The Transport contract forbids duplicate replies, but a buggy
+        // transport (or a misconfigured worker id) would otherwise
+        // silently double-weight that worker in the mean — enforce it.
+        let mut ids: Vec<u32> = deltas
+            .iter()
+            .map(|d| {
+                let ToServer::Delta { worker, .. } = d;
+                *worker
+            })
+            .collect();
+        ids.sort_unstable();
+        if let Some(dup) = ids.windows(2).find(|p| p[0] == p[1]) {
+            return Err(anyhow!("duplicate delta from worker {} in round {}", dup[0], self.t));
         }
         let n = deltas.len() as f32;
         let mut mean_loss = 0.0f32;
@@ -311,6 +488,169 @@ mod tests {
                     assert_eq!(ps.stats.down_bytes, seq.stats.down_bytes);
                 }
             }
+        }
+    }
+
+    /// Duplicate worker ids in a round must be rejected before any
+    /// state is touched: averaging a duplicated reply would silently
+    /// double-weight that worker.
+    #[test]
+    fn rejects_duplicate_worker_ids() {
+        let mut ps = ParameterServer::new(vec![1.0; 4], None);
+        ps.broadcast(2);
+        let d = |w: u32| ToServer::Delta {
+            t: 1,
+            worker: w,
+            loss: 0.0,
+            msg: delta_msg(&[0.5, 0.0, 0.0, 0.0], 2),
+        };
+        let err = ps.apply(&[d(0), d(0)]).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        assert_eq!(ps.master(), &[1.0; 4][..], "rejected round must be side-effect-free");
+        assert_eq!(ps.stats.up_bytes, 0);
+        ps.apply(&[d(0), d(1)]).unwrap();
+    }
+
+    /// Acceptance (delta downlink): on every round the server replica
+    /// `x̂` equals what a worker holds after decoding the broadcast
+    /// stream, the sharded delta server is bit-identical to the
+    /// sequential one (frames, master, replica, accounting), and resync
+    /// frames appear exactly on the configured cadence.
+    #[test]
+    fn delta_downlink_replica_tracks_decode_and_shards_agree() {
+        use crate::quant::decode_msg;
+        let dim = 233;
+        let resync_every = 4u64;
+        let mk_x0 = || (0..dim).map(|i| 0.2 * ((i as f32) * 0.31).sin()).collect::<Vec<f32>>();
+        let deltas_for = |t: u64| -> Vec<ToServer> {
+            let mut rng = seeded_rng(7, t);
+            let mut q = vec![0.0; dim];
+            (0..3u32)
+                .map(|w| {
+                    let u: Vec<f32> = (0..dim)
+                        .map(|i| 0.01 * ((i as f32 + w as f32 * 3.7 + t as f32).cos()))
+                        .collect();
+                    let msg = LogQuant::new(2).compress_into(&u, &mut q, &mut rng);
+                    ToServer::Delta { t, worker: w, loss: 1.0, msg }
+                })
+                .collect()
+        };
+        let mk_ps = |block: usize, threads: usize, kx: Option<u32>| -> ParameterServer {
+            let mut ps = ParameterServer::with_shards(mk_x0(), kx, block, threads);
+            ps.enable_delta_downlink(Box::new(LogQuant::new(2)), resync_every);
+            ps
+        };
+        for &kx in &[None, Some(6u32)] {
+            let mut seq = mk_ps(DEFAULT_BLOCK, 1, kx);
+            let mut configs = vec![mk_ps(7, 4, kx), mk_ps(64, 3, kx)];
+            // independent worker-side replica, driven only by the frames
+            let mut w = vec![0.0f32; dim];
+            let mut scratch = vec![0.0f32; dim];
+            for t in 1u64..=13 {
+                let (b_seq, _) = seq.broadcast(3);
+                match &b_seq {
+                    ToWorker::Weights { msg, .. } => {
+                        assert!(
+                            t == 1 || (t - 1) % resync_every == 0,
+                            "unexpected resync frame at t={t}"
+                        );
+                        decode_msg(msg, &mut w);
+                    }
+                    ToWorker::WeightsDelta { msg, .. } => {
+                        assert!(
+                            t != 1 && (t - 1) % resync_every != 0,
+                            "expected resync frame at t={t}"
+                        );
+                        decode_msg(msg, &mut scratch);
+                        for (wi, &d) in w.iter_mut().zip(&scratch) {
+                            *wi += d;
+                        }
+                    }
+                    ToWorker::Shutdown => panic!("unexpected shutdown"),
+                }
+                let (replica, _res) = seq.downlink_state().unwrap();
+                assert_eq!(w.as_slice(), replica, "kx={kx:?} t={t}: replica != worker decode");
+                seq.apply(&deltas_for(t)).unwrap();
+                for ps in configs.iter_mut() {
+                    let (b, _) = ps.broadcast(3);
+                    assert_eq!(b.to_bytes(), b_seq.to_bytes(), "kx={kx:?} t={t}");
+                    ps.apply(&deltas_for(t)).unwrap();
+                    assert_eq!(ps.master(), seq.master(), "kx={kx:?} t={t}");
+                    let (r_seq, e_seq) = seq.downlink_state().unwrap();
+                    let (r, e) = ps.downlink_state().unwrap();
+                    assert_eq!(r, r_seq, "kx={kx:?} t={t}");
+                    assert_eq!(e, e_seq, "kx={kx:?} t={t}");
+                    assert_eq!(ps.stats.down_bytes, seq.stats.down_bytes);
+                    assert_eq!(ps.stats.up_bytes, seq.stats.up_bytes);
+                }
+            }
+        }
+    }
+
+    /// Acceptance: at kg=2 the compressed downlink is ≥4x smaller than
+    /// full fp32 broadcasts on an 8-worker round sequence.
+    #[test]
+    fn delta_downlink_cuts_down_bytes_4x() {
+        let dim = 4096;
+        let rounds = 20u64;
+        let x0: Vec<f32> = (0..dim).map(|i| 0.1 * (i as f32 * 0.013).sin()).collect();
+        let deltas_for = |t: u64| -> Vec<ToServer> {
+            let mut rng = seeded_rng(3, t);
+            let mut q = vec![0.0; dim];
+            (0..8u32)
+                .map(|w| {
+                    let u: Vec<f32> =
+                        (0..dim).map(|i| 0.001 * ((i + w as usize) as f32 + t as f32).sin()).collect();
+                    let msg = LogQuant::new(2).compress_into(&u, &mut q, &mut rng);
+                    ToServer::Delta { t, worker: w, loss: 0.0, msg }
+                })
+                .collect()
+        };
+        let mut full = ParameterServer::new(x0.clone(), None);
+        let mut delta = ParameterServer::new(x0, None);
+        delta.enable_delta_downlink(Box::new(LogQuant::new(2)), 50);
+        for t in 1..=rounds {
+            full.broadcast(8);
+            full.apply(&deltas_for(t)).unwrap();
+            delta.broadcast(8);
+            delta.apply(&deltas_for(t)).unwrap();
+        }
+        let ratio = full.stats.down_bytes as f64 / delta.stats.down_bytes as f64;
+        assert!(ratio >= 4.0, "down-bytes reduction only {ratio:.2}x");
+        // the uplink is untouched by the downlink mode
+        assert_eq!(full.stats.up_bytes, delta.stats.up_bytes);
+    }
+
+    /// After a restore without downlink state, the next frame must be a
+    /// full resync (and the replica re-anchors on it).
+    #[test]
+    fn forced_resync_after_restore_emits_full_frame() {
+        let dim = 16;
+        let mut ps = ParameterServer::new(vec![0.5; dim], None);
+        ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 100);
+        let deltas = |t: u64| {
+            vec![ToServer::Delta { t, worker: 0, loss: 0.0, msg: delta_msg(&[0.25; 16], 2) }]
+        };
+        for t in 1..=3 {
+            let (b, _) = ps.broadcast(1);
+            if t > 1 {
+                assert!(matches!(b, ToWorker::WeightsDelta { .. }), "t={t}");
+            }
+            ps.apply(&deltas(t)).unwrap();
+        }
+        let x: Vec<f32> = ps.master().to_vec();
+        ps.restore(&x, 3);
+        ps.force_resync();
+        let (b, _) = ps.broadcast(1);
+        match &b {
+            ToWorker::Weights { msg, .. } => {
+                let mut dec = vec![0.0; dim];
+                crate::quant::decode_msg(msg, &mut dec);
+                let (replica, residual) = ps.downlink_state().unwrap();
+                assert_eq!(replica, dec.as_slice());
+                assert!(residual.iter().all(|&e| e == 0.0), "resync must clear the residual");
+            }
+            other => panic!("expected a resync frame, got {other:?}"),
         }
     }
 

@@ -67,7 +67,9 @@ pub fn read_frame<R: Read>(stream: &mut R) -> Result<Vec<u8>> {
 ///   on scheduling), so the server's mean is summed in a fixed order
 ///   and trajectories are reproducible bit-for-bit across transports;
 /// * a transport may drop replies (fault injection, lost frames) but
-///   must never reorder or duplicate them;
+///   must never reorder or duplicate them — [`TcpServer`] rejects
+///   duplicate ids at the gather, and `ParameterServer::apply` enforces
+///   the same invariant server-side;
 /// * `workers` is the in-process worker set; transports whose workers
 ///   live elsewhere (TCP) ignore it.
 pub trait Transport {
@@ -81,6 +83,12 @@ pub trait Transport {
 fn drop_reply(drop_deltas: &[(u64, u32)], reply: &ToServer) -> bool {
     let ToServer::Delta { t, worker, .. } = reply;
     drop_deltas.iter().any(|&(dt, dw)| dt == *t && dw == *worker)
+}
+
+/// The worker id a reply claims (sort key of the deterministic gather).
+fn worker_id(reply: &ToServer) -> u32 {
+    let ToServer::Delta { worker, .. } = reply;
+    *worker
 }
 
 // ---------------------------------------------------------------------------
@@ -233,7 +241,9 @@ impl TcpServer {
     /// after the gather: connection-accept order races the workers'
     /// startup, and the [`Transport`] contract requires the merge order
     /// (and hence the server's float summation order) to be independent
-    /// of scheduling.
+    /// of scheduling. Two connections claiming the same worker id are a
+    /// deployment error (the mean would double-weight that worker) and
+    /// fail the round.
     pub fn round(&mut self, broadcast: &ToWorker) -> Result<Vec<ToServer>> {
         let payload = broadcast.to_bytes();
         for s in &mut self.streams {
@@ -244,10 +254,13 @@ impl TcpServer {
             let buf = read_frame(s)?;
             replies.push(ToServer::from_bytes(&buf)?);
         }
-        replies.sort_by_key(|r| {
-            let ToServer::Delta { worker, .. } = r;
-            *worker
-        });
+        replies.sort_by_key(worker_id);
+        if let Some(pair) = replies.windows(2).find(|p| worker_id(&p[0]) == worker_id(&p[1])) {
+            return Err(anyhow!(
+                "duplicate reply from worker {} (two connections share one id)",
+                worker_id(&pair[0])
+            ));
+        }
         Ok(replies)
     }
 
@@ -477,6 +490,155 @@ mod tests {
         assert_eq!(wire.len(), 4 + payload.len());
         let mut cur = std::io::Cursor::new(wire);
         assert_eq!(read_frame(&mut cur).unwrap(), payload);
+    }
+
+    /// Acceptance (delta downlink): LocalBus and ThreadedBus produce
+    /// bit-identical trajectories with compressed weight-delta
+    /// broadcasts, and every worker's decoded view equals the server
+    /// replica on every round.
+    #[test]
+    fn delta_downlink_parity_local_vs_threaded() {
+        use crate::quant::LogQuant;
+        let dim = 96;
+        let x0: Vec<f32> = (0..dim).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
+        let mk_ps = |x0: Vec<f32>, block: usize, threads: usize| -> ParameterServer {
+            let mut ps = ParameterServer::with_shards(x0, Some(4), block, threads);
+            ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 7);
+            ps
+        };
+        let mut ps_seq = mk_ps(x0.clone(), crate::ps::server::DEFAULT_BLOCK, 1);
+        let mut ws_seq: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+        let seq = LocalBus::default();
+        let mut ps_thr = mk_ps(x0, 13, 4);
+        let mut ws_thr: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+        let thr = ThreadedBus::new();
+        for t in 1u64..=40 {
+            let r_seq = {
+                let (b, _) = ps_seq.broadcast(4);
+                seq.round(&b, &mut ws_seq).unwrap()
+            };
+            ps_seq.apply(&r_seq).unwrap();
+            let r_thr = {
+                let (b, _) = ps_thr.broadcast(4);
+                thr.round(&b, &mut ws_thr).unwrap()
+            };
+            ps_thr.apply(&r_thr).unwrap();
+            assert_eq!(ps_seq.master(), ps_thr.master(), "diverged at round {t}");
+            let (replica, _) = ps_seq.downlink_state().unwrap();
+            for w in &ws_seq {
+                assert_eq!(w.weights(), replica, "worker {} != replica at round {t}", w.id);
+            }
+            let (replica_thr, _) = ps_thr.downlink_state().unwrap();
+            assert_eq!(replica, replica_thr, "round {t}");
+        }
+        assert_eq!(ps_seq.stats.down_bytes, ps_thr.stats.down_bytes);
+        assert_eq!(ps_seq.stats.up_bytes, ps_thr.stats.up_bytes);
+    }
+
+    /// Acceptance (delta downlink over TCP): the TCP engine matches the
+    /// LocalBus reference bit-for-bit — same masters, same replica,
+    /// same byte accounting — across resync and delta frames.
+    #[test]
+    fn tcp_delta_downlink_matches_local_bus() {
+        use crate::quant::LogQuant;
+        let dim = 16;
+        let rounds = 9u64; // crosses the resync at t=1 and t=5
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+
+        let spawn_worker = |addr: String, id: u32| {
+            std::thread::spawn(move || {
+                let mut w = mk_worker(id, dim);
+                for _ in 0..100 {
+                    match tcp_worker_loop(&addr, &mut w) {
+                        Ok(r) => return r,
+                        Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                    }
+                }
+                panic!("worker {id} never connected");
+            })
+        };
+        let h1 = spawn_worker(addr.clone(), 0);
+        let h2 = spawn_worker(addr.clone(), 1);
+
+        let mk_ps = || -> ParameterServer {
+            let mut ps = ParameterServer::new(vec![1.0; dim], None);
+            ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 4);
+            ps
+        };
+        let mut srv = TcpServer::bind_and_accept(&addr, 2).unwrap();
+        let mut ps_tcp = mk_ps();
+        let mut ps_ref = mk_ps();
+        let mut ws_ref: Vec<Worker> = (0..2).map(|i| mk_worker(i, dim)).collect();
+        let bus = LocalBus::default();
+        for t in 1..=rounds {
+            let replies = {
+                let (b, _) = ps_tcp.broadcast(2);
+                srv.round(&b).unwrap()
+            };
+            ps_tcp.apply(&replies).unwrap();
+            let r_ref = {
+                let (b, _) = ps_ref.broadcast(2);
+                bus.round(&b, &mut ws_ref).unwrap()
+            };
+            ps_ref.apply(&r_ref).unwrap();
+            assert_eq!(ps_tcp.master(), ps_ref.master(), "tcp diverged at round {t}");
+            assert_eq!(
+                ps_tcp.downlink_state().unwrap().0,
+                ps_ref.downlink_state().unwrap().0,
+                "replica diverged at round {t}"
+            );
+        }
+        assert_eq!(ps_tcp.stats.down_bytes, ps_ref.stats.down_bytes);
+        assert_eq!(ps_tcp.stats.up_bytes, ps_ref.stats.up_bytes);
+        srv.shutdown().unwrap();
+        assert_eq!(h1.join().unwrap(), rounds);
+        assert_eq!(h2.join().unwrap(), rounds);
+    }
+
+    /// Two connections claiming the same worker id must fail the round
+    /// (satellite: the contract forbade duplicates but nothing checked).
+    #[test]
+    fn tcp_round_rejects_duplicate_worker_ids() {
+        use crate::quant::{seeded_rng, Compressor, LogQuant};
+        let dim = 4;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+
+        // Two hand-rolled clients that both claim worker id 0.
+        let mk_client = |addr: String| {
+            std::thread::spawn(move || {
+                for _ in 0..100 {
+                    if let Ok(mut s) = std::net::TcpStream::connect(&addr) {
+                        let _ = read_frame(&mut s); // the broadcast
+                        let zeros = vec![0.0f32; dim];
+                        let mut q = vec![0.0; dim];
+                        let msg =
+                            LogQuant::new(2).compress_into(&zeros, &mut q, &mut seeded_rng(0, 0));
+                        let reply = ToServer::Delta { t: 1, worker: 0, loss: 0.0, msg };
+                        let _ = write_frame(&mut s, &reply.to_bytes());
+                        let _ = read_frame(&mut s); // hold until server exits
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                panic!("client never connected");
+            })
+        };
+        let h1 = mk_client(addr.clone());
+        let h2 = mk_client(addr.clone());
+        let mut srv = TcpServer::bind_and_accept(&addr, 2).unwrap();
+        let mut ps = ParameterServer::new(vec![0.0; dim], None);
+        let err = {
+            let (b, _) = ps.broadcast(2);
+            srv.round(&b).unwrap_err()
+        };
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        drop(srv); // closes the streams, releasing the clients
+        h1.join().unwrap();
+        h2.join().unwrap();
     }
 
     #[test]

@@ -61,8 +61,14 @@ pub struct Worker {
     opt: Box<dyn WorkerOpt>,
     src: Box<dyn GradSource>,
     rng: DetRng,
-    /// decoded weight buffer
+    /// decoded weight buffer (the worker replica in delta-downlink mode)
     w: Vec<f32>,
+    /// scratch for decoding delta frames
+    scratch: Vec<f32>,
+    /// whether `w` holds valid weights: set by the first full frame or
+    /// a checkpoint restore. Delta frames before that are a protocol
+    /// error (the server opens every stream with a resync frame).
+    synced: bool,
     pub last_loss: f32,
 }
 
@@ -75,8 +81,24 @@ impl Worker {
             src,
             rng: crate::quant::seeded_rng(seed, 0x9e37_79b9 ^ id as u64),
             w: vec![0.0; dim],
+            scratch: vec![0.0; dim],
+            synced: false,
             last_loss: f32::NAN,
         }
+    }
+
+    /// Current decoded weight view (the replica the next gradient is
+    /// evaluated at) — for parity tests and diagnostics.
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Seed the replica directly (checkpoint restore in delta-downlink
+    /// mode: the server's `x̂` is the bit-exact worker view).
+    pub fn restore_weights(&mut self, w: &[f32]) {
+        assert_eq!(w.len(), self.w.len());
+        self.w.copy_from_slice(w);
+        self.synced = true;
     }
 
     pub fn opt_name(&self) -> String {
@@ -108,12 +130,35 @@ impl Worker {
                     return Err(anyhow!("weights dim {} != worker dim {}", msg.n, self.w.len()));
                 }
                 decode_msg(msg, &mut self.w);
-                let (loss, grad) = self.src.loss_grad(&self.w, self.id as usize, *t)?;
-                self.last_loss = loss;
-                let delta = self.opt.step(&grad, *t, *epoch, &mut self.rng);
-                Ok(Some(ToServer::Delta { t: *t, worker: self.id, loss, msg: delta }))
+                self.synced = true;
+                self.reply(*t, *epoch)
+            }
+            ToWorker::WeightsDelta { t, epoch, msg } => {
+                if msg.n != self.w.len() {
+                    return Err(anyhow!("delta dim {} != worker dim {}", msg.n, self.w.len()));
+                }
+                if !self.synced {
+                    return Err(anyhow!(
+                        "worker {}: delta frame before any full weights frame",
+                        self.id
+                    ));
+                }
+                decode_msg(msg, &mut self.scratch);
+                for (w, &d) in self.w.iter_mut().zip(&self.scratch) {
+                    *w += d;
+                }
+                self.reply(*t, *epoch)
             }
         }
+    }
+
+    /// Gradient at the current replica → optimizer step → delta reply
+    /// (Alg. 3 lines 2–8; shared by both weights-frame kinds).
+    fn reply(&mut self, t: u64, epoch: u64) -> Result<Option<ToServer>> {
+        let (loss, grad) = self.src.loss_grad(&self.w, self.id as usize, t)?;
+        self.last_loss = loss;
+        let delta = self.opt.step(&grad, t, epoch, &mut self.rng);
+        Ok(Some(ToServer::Delta { t, worker: self.id, loss, msg: delta }))
     }
 }
 
@@ -142,6 +187,45 @@ mod tests {
         assert!(loss.is_finite());
         assert_eq!(msg.codec, CodecId::LogQuant);
         assert_eq!(msg.n, dim);
+    }
+
+    fn delta_msg(d: &[f32], t: u64) -> ToWorker {
+        let mut q = vec![0.0; d.len()];
+        let msg: WireMsg = Identity.compress_into(d, &mut q, &mut crate::quant::seeded_rng(0, 0));
+        ToWorker::WeightsDelta { t, epoch: 0, msg }
+    }
+
+    #[test]
+    fn delta_frame_accumulates_into_replica() {
+        let dim = 8;
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.1, 1) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 });
+        let mut w = Worker::new(0, Box::new(opt), Box::new(src), 42);
+        let x0 = vec![1.0f32; dim];
+        w.handle(&weights_msg(&x0, 1)).unwrap().unwrap();
+        assert_eq!(w.weights(), &x0[..]);
+        let d = vec![0.25f32; dim];
+        let out = w.handle(&delta_msg(&d, 2)).unwrap().unwrap();
+        let ToServer::Delta { t, .. } = out;
+        assert_eq!(t, 2);
+        assert_eq!(w.weights(), &[1.25f32; 8][..], "delta adds, full frame overwrites");
+        // a later full frame overwrites again
+        w.handle(&weights_msg(&x0, 3)).unwrap().unwrap();
+        assert_eq!(w.weights(), &x0[..]);
+    }
+
+    #[test]
+    fn delta_before_sync_rejected() {
+        let dim = 4;
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.0, 1) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 });
+        let mut w = Worker::new(0, Box::new(opt), Box::new(src), 0);
+        let err = w.handle(&delta_msg(&[0.1; 4], 1)).unwrap_err();
+        assert!(err.to_string().contains("full weights frame"), "{err}");
+        // restore_weights counts as a sync
+        w.restore_weights(&[0.5; 4]);
+        assert!(w.handle(&delta_msg(&[0.1; 4], 1)).unwrap().is_some());
+        assert_eq!(w.weights(), &[0.6f32; 4][..]);
     }
 
     #[test]

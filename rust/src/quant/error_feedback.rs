@@ -1,4 +1,4 @@
-//! Worker-side error feedback (Alg. 1 line 6 / Alg. 3 line 7).
+//! Error feedback (Alg. 1 line 6 / Alg. 3 line 7).
 //!
 //! The residual of the biased compressor is kept locally and added to
 //! the *next* update before quantization:
@@ -13,6 +13,12 @@
 //! machine. For unbiased codecs (TernGrad) the paper's baselines do not
 //! use EF; constructing with `enabled = false` reduces to plain
 //! compression with `e ≡ 0` (also used by the no-EF ablation).
+//!
+//! The same state machine runs on both ends of the wire: each worker
+//! compensates its gradient-delta uplink, and in the delta-downlink
+//! mode (Efficient-Adam-style two-way compression, see
+//! `ps::server`) the parameter server keeps a mirror instance that
+//! compensates the compressed weight-delta broadcasts.
 
 use super::{Compressor, WireMsg};
 use crate::util::DetRng;
@@ -56,6 +62,19 @@ impl ErrorFeedback {
         comp: &dyn Compressor,
         rng: &mut DetRng,
     ) -> WireMsg {
+        self.compress_q(direction, comp, rng).0
+    }
+
+    /// [`Self::compress`], additionally exposing the dequantized values
+    /// `Q(direction + e)` the message decodes to (the decode identity).
+    /// The parameter server's delta downlink uses this to advance its
+    /// worker-replica estimate without a second decode pass.
+    pub fn compress_q(
+        &mut self,
+        direction: &[f32],
+        comp: &dyn Compressor,
+        rng: &mut DetRng,
+    ) -> (WireMsg, &[f32]) {
         assert_eq!(direction.len(), self.e.len());
         if self.enabled {
             for ((u, &d), &e) in self.u.iter_mut().zip(direction).zip(&self.e) {
@@ -70,7 +89,13 @@ impl ErrorFeedback {
                 *e = u - q;
             }
         }
-        msg
+        (msg, &self.q)
+    }
+
+    /// Zero the residual. Used when a resync frame just transmitted the
+    /// full state: there is no compression error left to compensate.
+    pub fn reset(&mut self) {
+        self.e.fill(0.0);
     }
 
     /// Inject externally computed (u, q) — used by the PJRT path where
@@ -106,6 +131,24 @@ mod tests {
             }
             e_prev = ef.residual().to_vec();
         }
+    }
+
+    #[test]
+    fn compress_q_exposes_decoded_values_and_reset_clears() {
+        let lq = LogQuant::new(2);
+        let dim = 32;
+        let mut ef = ErrorFeedback::new(dim, true);
+        let mut rng = seeded_rng(1, 1);
+        let d: Vec<f32> = (0..dim).map(|i| 0.1 * (i as f32 * 0.7).sin()).collect();
+        let (msg, q) = ef.compress_q(&d, &lq, &mut rng);
+        let q = q.to_vec();
+        let mut dec = vec![0.0; dim];
+        lq.decompress(&msg, &mut dec);
+        assert_eq!(q, dec, "compress_q values must equal the wire decode");
+        assert!(ef.residual_norm() > 0.0);
+        ef.reset();
+        assert!(ef.residual().iter().all(|&x| x == 0.0));
+        assert_eq!(ef.residual_norm(), 0.0);
     }
 
     #[test]

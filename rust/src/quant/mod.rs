@@ -255,6 +255,18 @@ pub fn decode_msg_range(msg: &WireMsg, start: usize, out: &mut [f32]) {
     }
 }
 
+/// The gradient-family codec parameterized by `k_g` (`None` = fp32
+/// [`Identity`]). The single owner of the "which compressor does a
+/// `kg` level mean" decision, shared by the worker uplink
+/// (`optim::QAdamEf`) and the parameter server's compressed delta
+/// downlink (`ps::server`).
+pub fn gradient_codec(kg: Option<u32>) -> Box<dyn Compressor> {
+    match kg {
+        Some(k) => Box::new(LogQuant::new(k)),
+        None => Box::new(Identity),
+    }
+}
+
 /// Deterministic per-(seed, worker, t) rng used across the system.
 pub fn seeded_rng(seed: u64, stream: u64) -> DetRng {
     DetRng::seed_stream(seed, stream)
@@ -325,6 +337,14 @@ mod tests {
                 assert_eq!(part, full[start..start + len], "{} start={start}", comp.name());
             }
         }
+    }
+
+    #[test]
+    fn gradient_codec_dispatch() {
+        assert_eq!(gradient_codec(None).codec(), CodecId::Identity);
+        let c = gradient_codec(Some(2));
+        assert_eq!(c.codec(), CodecId::LogQuant);
+        assert_eq!(c.bits_per_element(), 3.0); // 7 symbols at kg=2
     }
 
     #[test]

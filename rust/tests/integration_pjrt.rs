@@ -180,8 +180,8 @@ fn native_and_pjrt_training_converge_similarly() {
             let msg = opt.step(&grad, t, 0, &mut rng);
             let mut delta = vec![0.0; dim];
             decode_msg(&msg, &mut delta);
-            for i in 0..dim {
-                x[i] -= delta[i];
+            for (xi, d) in x.iter_mut().zip(&delta) {
+                *xi -= d;
             }
         }
         last
@@ -211,12 +211,51 @@ fn eval_graph_accuracy_improves_with_training() {
         let msg = opt.step(&grad, t, 0, &mut rng);
         let mut delta = vec![0.0; model.dim()];
         decode_msg(&msg, &mut delta);
-        for i in 0..model.dim() {
-            x[i] -= delta[i];
+        for (xi, d) in x.iter_mut().zip(&delta) {
+            *xi -= d;
         }
     }
     let acc1 = model.accuracy(&x, &data, 2).unwrap();
     assert!(acc1 > acc0 + 0.3, "acc {acc0} -> {acc1}");
+}
+
+#[test]
+fn pjrt_engine_with_delta_downlink_trains_and_cuts_down_bytes() {
+    // The compressed downlink composed with the Pallas-kernel worker
+    // engine: still trains, downlink ≥4x smaller than full fp32
+    // broadcasts, uplink accounting untouched.
+    if setup().is_none() {
+        return;
+    }
+    use qadam::coordinator::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
+    use qadam::coordinator::Trainer;
+    let cfg = ExperimentConfig {
+        model: "mlp".into(),
+        dataset: "vector".into(),
+        method: Method::QAdam { kg: Some(2), error_feedback: true },
+        kx: None,
+        workers: 2,
+        batch: 16,
+        steps: 20,
+        steps_per_epoch: 20,
+        lr: LrSchedule::Const { alpha: 2e-3 },
+        engine: Engine::PjrtKernel,
+        bus: BusKind::Sequential,
+        downlink: Downlink::Delta,
+        resync_every: 8,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 2,
+    };
+    let mut full_cfg = cfg.clone();
+    full_cfg.downlink = Downlink::Full;
+    let delta = Trainer::new(cfg).unwrap().run().unwrap();
+    let full = Trainer::new(full_cfg).unwrap().run().unwrap();
+    assert!(delta.final_loss.is_finite(), "loss={}", delta.final_loss);
+    assert!(delta.final_acc > 0.3, "acc={}", delta.final_acc);
+    let ratio = full.down_mb_per_iter / delta.down_mb_per_iter;
+    assert!(ratio >= 4.0, "down-bytes reduction only {ratio:.2}x");
+    assert_eq!(full.comm_mb_per_iter, delta.comm_mb_per_iter);
 }
 
 #[test]

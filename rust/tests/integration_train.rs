@@ -1,7 +1,7 @@
 //! Integration: the full training stack (Trainer = PS + workers + PJRT
 //! graphs + datasets + accounting) on small budgets.
 
-use qadam::coordinator::config::{BusKind, Engine, ExperimentConfig, Method};
+use qadam::coordinator::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
 use qadam::coordinator::Trainer;
 use qadam::models::artifacts_dir;
 use qadam::optim::LrSchedule;
@@ -27,6 +27,8 @@ fn base_cfg() -> ExperimentConfig {
         lr: LrSchedule::Const { alpha: 2e-3 },
         engine: Engine::Native,
         bus: BusKind::Sequential,
+        downlink: Downlink::Full,
+        resync_every: 64,
         seed: 0,
         eval_every: 0,
         eval_batches: 2,
@@ -145,6 +147,8 @@ fn lm_model_trains_and_loss_drops() {
         lr: LrSchedule::Const { alpha: 5e-3 },
         engine: Engine::Native,
         bus: BusKind::Sequential,
+        downlink: Downlink::Full,
+        resync_every: 64,
         seed: 0,
         eval_every: 0,
         eval_batches: 1,
@@ -183,6 +187,91 @@ fn checkpoint_resume_is_bitwise_identical() {
     let sb = tr2.run().unwrap();
     assert_eq!(sa.final_loss, sb.final_loss, "resume must match continuous run exactly");
     assert_eq!(sa.final_acc, sb.final_acc);
+}
+
+#[test]
+fn delta_downlink_threaded_matches_sequential_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.downlink = Downlink::Delta;
+    cfg.resync_every = 7;
+    cfg.steps = 20;
+    let seq = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    cfg.bus = BusKind::Threaded;
+    let thr = Trainer::new(cfg).unwrap().run().unwrap();
+    assert_eq!(seq.final_loss, thr.final_loss);
+    assert_eq!(seq.final_acc, thr.final_acc);
+    assert_eq!(seq.comm_mb_per_iter, thr.comm_mb_per_iter);
+    assert_eq!(seq.down_mb_per_iter, thr.down_mb_per_iter);
+}
+
+#[test]
+fn delta_downlink_trains_and_cuts_down_bytes() {
+    if !have_artifacts() {
+        return;
+    }
+    let full = Trainer::new(base_cfg()).unwrap().run().unwrap();
+    let mut cfg = base_cfg();
+    cfg.downlink = Downlink::Delta;
+    cfg.resync_every = 50;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let delta = tr.run().unwrap();
+    // Still trains: same budget, slightly noisier worker views.
+    assert!(delta.final_acc > 0.85, "acc={}", delta.final_acc);
+    // Acceptance: ≥4x smaller downlink at kg=2 vs full fp32 broadcasts.
+    let ratio = full.down_mb_per_iter / delta.down_mb_per_iter;
+    assert!(ratio >= 4.0, "down-bytes reduction only {ratio:.2}x");
+    // The uplink accounting is untouched by the downlink mode.
+    assert_eq!(full.comm_mb_per_iter, delta.comm_mb_per_iter);
+}
+
+#[test]
+fn delta_downlink_checkpoint_resume_is_bitwise_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    // resync_every=7 so the resumed half crosses both frame kinds
+    let mut cfg = base_cfg();
+    cfg.downlink = Downlink::Delta;
+    cfg.resync_every = 7;
+    cfg.steps = 40;
+    let sa = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    let mut cfg_half = cfg.clone();
+    cfg_half.steps = 20;
+    let mut tr1 = Trainer::new(cfg_half).unwrap();
+    tr1.run().unwrap();
+    let ckpt = tr1.checkpoint();
+    // v2 checkpoints carry the server replica + residual
+    let ckpt = qadam::coordinator::Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+    assert!(ckpt.server.is_some(), "delta-mode checkpoints must carry server state");
+    let mut tr2 = Trainer::new(cfg).unwrap();
+    tr2.restore(&ckpt).unwrap();
+    let sb = tr2.run().unwrap();
+    assert_eq!(sa.final_loss, sb.final_loss, "delta-mode resume must match continuous run");
+    assert_eq!(sa.final_acc, sb.final_acc);
+}
+
+#[test]
+fn resume_at_horizon_yields_final_eval_not_nan() {
+    if !have_artifacts() {
+        return;
+    }
+    // Satellite: restoring at/past cfg.steps used to return NaN loss
+    // and log nothing (the round loop never ran).
+    let mut cfg = base_cfg();
+    cfg.steps = 20;
+    let mut tr1 = Trainer::new(cfg.clone()).unwrap();
+    tr1.run().unwrap();
+    let ckpt = tr1.checkpoint();
+    let mut tr2 = Trainer::new(cfg).unwrap();
+    tr2.restore(&ckpt).unwrap();
+    let s = tr2.run().unwrap();
+    assert!(s.final_loss.is_finite(), "restored-at-horizon loss must be finite");
+    assert!(s.final_acc > 0.0, "restored-at-horizon summary must carry the eval");
+    assert!(!tr2.log.rows.is_empty(), "a final eval row must be logged");
+    assert_eq!(tr2.log.rows.last().unwrap().t, 20);
 }
 
 #[test]

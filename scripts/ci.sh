@@ -26,6 +26,9 @@ fi
 step "cargo build --release"
 cargo build --release
 
+step "cargo clippy --all-targets (-D warnings)"
+cargo clippy --all-targets --quiet -- -D warnings
+
 step "cargo test -q"
 cargo test -q
 
