@@ -1,0 +1,91 @@
+//! Elastic-round benchmarks: what the chaos layer costs when idle
+//! (an empty plan must be ~free — it is the wrapper the trainer
+//! installs whenever `--straggler drop` is set), and what a lossy
+//! round looks like next to a clean one.
+//!
+//!   cargo bench --bench elastic_round
+
+use qadam::elastic::{ChaosPlan, ChaosTransport, StragglerPolicy};
+use qadam::optim::{LrSchedule, QAdamEf};
+use qadam::ps::transport::{LocalBus, ThreadedBus, Transport};
+use qadam::ps::worker::{SimGradSource, Worker};
+use qadam::ps::ParameterServer;
+use qadam::sim::StochasticProblem;
+use qadam::util::bench::run;
+
+fn mk_workers(n: usize, dim: usize) -> Vec<Worker> {
+    (0..n)
+        .map(|i| {
+            let src = SimGradSource { problem: StochasticProblem::new(dim, 0.05, 3) };
+            let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 1e-3 });
+            Worker::new(i as u32, Box::new(opt), Box::new(src), 7)
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== elastic_round ==");
+    let dim = 1usize << 16;
+    let nw = 8usize;
+    let x0: Vec<f32> = (0..dim).map(|i| 0.1 * (i as f32 * 0.013).sin()).collect();
+
+    // Bare sequential bus: the reference round cost.
+    let bare = {
+        let mut workers = mk_workers(nw, dim);
+        let mut ps = ParameterServer::new(x0.clone(), Some(6));
+        let bus = LocalBus::default();
+        run("round bare LocalBus", None, || {
+            let replies = {
+                let (b, _) = ps.broadcast(nw);
+                bus.round(&b, &mut workers).unwrap()
+            };
+            ps.apply(&replies).unwrap();
+        })
+    };
+
+    // Empty chaos plan: the wrapper the trainer installs for quorum
+    // enforcement; must cost nothing measurable.
+    let idle = {
+        let mut workers = mk_workers(nw, dim);
+        let mut ps = ParameterServer::new(x0.clone(), Some(6));
+        let mut bus = ChaosTransport::new(Box::new(LocalBus::default()), ChaosPlan::default())
+            .with_policy(StragglerPolicy::Drop, 1);
+        run("round chaos-idle wrap", None, || {
+            let replies = {
+                let (b, _) = ps.broadcast(nw);
+                bus.round(&b, &mut workers).unwrap()
+            };
+            ps.apply(&replies).unwrap();
+        })
+    };
+    println!("   -> idle-wrapper overhead: {:.2}x", idle.median_ns / bare.median_ns);
+
+    // Lossy plan over the threaded engine: drops shrink the gather (and
+    // the apply), crash windows shrink the worker fan-out.
+    {
+        let plan = ChaosPlan::parse("seed=9,drop=0.15,delay=0.1,crash=5@1..1000000").unwrap();
+        let mut workers = mk_workers(nw, dim);
+        let mut ps = ParameterServer::new(x0, Some(6));
+        let mut bus = ChaosTransport::new(Box::new(ThreadedBus::new()), plan)
+            .with_policy(StragglerPolicy::Drop, 1);
+        let mut skipped = 0u64;
+        run("round chaos-lossy threaded", None, || {
+            let t = ps.step() + 1;
+            let m = bus.membership(t, nw);
+            let round = {
+                let (b, _) = ps.broadcast(m.present);
+                bus.round(&b, &mut workers)
+            };
+            match round {
+                Ok(replies) => {
+                    ps.apply(&replies).unwrap();
+                }
+                Err(_) => skipped += 1, // below quorum: skipped round
+            }
+        });
+        println!(
+            "   faults: {} dropped, {} delayed, {} worker-rounds crashed, {skipped} rounds skipped",
+            bus.stats.dropped, bus.stats.delayed, bus.stats.crashed
+        );
+    }
+}

@@ -2,7 +2,11 @@
 //! constrained devices train over a *real TCP network* against the
 //! parameter server, with BOTH quantizations on — weights broadcast at
 //! k_x bits (storage-constrained devices), update vectors uploaded at
-//! k_g-derived bits (bandwidth-constrained uplink).
+//! k_g-derived bits (bandwidth-constrained uplink) — and, because edge
+//! links are lossy, a deterministic [`ChaosPlan`] chews on the uplink:
+//! replies get dropped and delayed, the round proceeds at quorum under
+//! the `drop` straggler policy, and error feedback absorbs the missed
+//! contributions (the residual carries them into the next round).
 //!
 //! Everything runs in this one process (server thread + one thread per
 //! device) but every byte crosses a real socket through the same
@@ -10,10 +14,12 @@
 //! (`qadam serve` / `qadam worker`).
 //!
 //!   cargo run --release --example fedlearn_edge -- [--devices N] [--steps N]
+//!       [--chaos "seed=9,drop=0.06,delay=0.04"]   ("" disables chaos)
 
 use anyhow::Result;
+use qadam::elastic::{ChaosPlan, ChaosTransport, StragglerPolicy};
 use qadam::optim::{LrSchedule, QAdamEf};
-use qadam::ps::transport::{tcp_worker_loop, TcpServer};
+use qadam::ps::transport::{tcp_worker_loop, TcpServer, Transport};
 use qadam::ps::worker::{SimGradSource, Worker};
 use qadam::ps::ParameterServer;
 use qadam::quant::LogQuant;
@@ -27,7 +33,9 @@ fn main() -> Result<()> {
     let dim = a.get("dim", 4096usize)?;
     let kg = a.get("kg", 2u32)?;
     let kx = a.get("kx", 6u32)?;
+    let chaos_spec = a.get_str("chaos", "seed=9,drop=0.06,delay=0.04");
     a.reject_unknown()?;
+    let plan = ChaosPlan::parse(&chaos_spec)?;
 
     // pick a free port
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
@@ -35,7 +43,8 @@ fn main() -> Result<()> {
     drop(listener);
 
     println!("edge scenario: {devices} devices, dim={dim}, k_g={kg} uplink, k_x={kx} broadcast");
-    println!("server at {addr}");
+    let chaos_label = if plan.is_empty() { "off" } else { chaos_spec.as_str() };
+    println!("server at {addr}, chaos: {chaos_label}");
 
     let mut handles = Vec::new();
     for id in 0..devices as u32 {
@@ -63,33 +72,67 @@ fn main() -> Result<()> {
         }));
     }
 
-    let mut srv = TcpServer::bind_and_accept(&addr, devices)?;
+    let srv = TcpServer::bind_and_accept(&addr, devices)?;
+    // The chaos wrapper emulates the lossy edge uplink on top of the
+    // healthy loopback sockets; `drop` + quorum 1 keeps rounds moving.
+    let mut net = ChaosTransport::new(Box::new(srv), plan)
+        .with_policy(StragglerPolicy::Drop, 1);
     let problem = StochasticProblem::with_offgrid_minimum(dim, 0.1, 3);
     let mut ps = ParameterServer::new(problem.x0(), Some(kx));
     let t0 = std::time::Instant::now();
+    let mut partial_rounds = 0u64;
+    let mut skipped_rounds = 0u64;
+    // Delivered message slots, so the fp32 baselines below compare
+    // like-for-like: chaos-dropped replies and skipped rounds must not
+    // be credited to quantization.
+    let mut down_slots = 0u64;
+    let mut up_slots = 0u64;
     for t in 1..=steps {
-        let replies = {
-            let (b, _) = ps.broadcast(devices);
-            srv.round(&b)?
+        let m = net.membership(t, devices);
+        if m.rejoined {
+            ps.force_resync();
+        }
+        let round = {
+            let (b, _) = ps.broadcast(m.present);
+            down_slots += m.present as u64;
+            net.round(&b, &mut [])
         };
-        let loss = ps.apply(&replies)?;
-        if t % (steps / 6).max(1) == 0 {
-            println!(
-                "  t={t:>4} loss={loss:.5} ||∇f(Qx(x))||²={:.3e}",
-                problem.grad_norm_sq(ps.output_weights())
-            );
+        match round {
+            Ok(replies) => {
+                let part = ps.apply(&replies)?;
+                up_slots += part.count() as u64;
+                if part.count() < devices {
+                    partial_rounds += 1;
+                }
+                if t % (steps / 6).max(1) == 0 {
+                    println!(
+                        "  t={t:>4} loss={:.5} members={}/{devices} ||∇f(Qx(x))||²={:.3e}",
+                        part.mean_loss,
+                        part.count(),
+                        problem.grad_norm_sq(ps.output_weights())
+                    );
+                }
+            }
+            Err(e) => {
+                // every reply of the round lost: below quorum — skip
+                // the update and move on, like a production loop would
+                skipped_rounds += 1;
+                eprintln!("  t={t:>4} round skipped: {e}");
+            }
         }
     }
-    srv.shutdown()?;
+    net.shutdown()?;
     for h in handles {
         h.join().unwrap()?;
     }
     let secs = t0.elapsed().as_secs_f64();
 
     let s = &ps.stats;
-    let fp32_up = dim as f64 * 4.0 * devices as f64 * steps as f64;
-    let fp32_down = fp32_up;
-    println!("\n=== traffic over {} rounds, {:.1}s ===", s.rounds, secs);
+    // fp32 baselines over the *delivered* message slots, so the saving
+    // factors measure quantization, not chaos losses.
+    let fp32_up = dim as f64 * 4.0 * up_slots as f64;
+    let fp32_down = dim as f64 * 4.0 * down_slots as f64;
+    println!("\n=== traffic over {} applied rounds, {:.1}s ===", s.rounds, secs);
     println!(
         "uplink   {:>10.3} MB (fp32 would be {:>10.3} MB) -> {:.1}x saved",
         s.up_bytes as f64 / 1e6,
@@ -107,6 +150,11 @@ fn main() -> Result<()> {
         dim as f64 * qadam::quant::WQuant::new(kx).code_bits() as f64 / 8.0 / 1e6,
         qadam::quant::WQuant::new(kx).code_bits(),
         dim as f64 * 4.0 / 1e6
+    );
+    println!(
+        "chaos: {} replies dropped, {} delayed past deadline; {partial_rounds} partial + \
+         {skipped_rounds} skipped of {steps} rounds — EF absorbed the losses",
+        net.stats.dropped, net.stats.delayed
     );
     Ok(())
 }

@@ -24,6 +24,9 @@ fn main() -> anyhow::Result<()> {
         bus: BusKind::Threaded,
         downlink: Downlink::Full,
         resync_every: 64,
+        chaos: None,
+        straggler: qadam::elastic::StragglerPolicy::Wait,
+        min_participation: 1,
         seed: 0,
         eval_every: 20,
         eval_batches: 4,

@@ -54,6 +54,9 @@ fn main() -> anyhow::Result<()> {
         bus,
         downlink,
         resync_every,
+        chaos: None,
+        straggler: qadam::elastic::StragglerPolicy::Wait,
+        min_participation: 1,
         seed: 0,
         eval_every: (steps / 12).max(25),
         eval_batches: 2,

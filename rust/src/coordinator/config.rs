@@ -1,6 +1,7 @@
 //! Experiment configuration (JSON-serializable; drives CLI, examples
 //! and benches).
 
+use crate::elastic::{ChaosPlan, StragglerPolicy};
 use crate::optim::LrSchedule;
 
 /// Which training method a run uses (rows of Tables 2–3).
@@ -129,6 +130,15 @@ pub struct ExperimentConfig {
     /// Full-weights resync cadence in delta mode, in rounds (0 = only
     /// round 1 and forced resyncs). Ignored with `downlink = Full`.
     pub resync_every: u64,
+    /// Deterministic fault-injection plan (`--chaos`). `None` keeps the
+    /// round path untouched and bit-identical to pre-chaos builds.
+    pub chaos: Option<ChaosPlan>,
+    /// What a round does about stragglers: `Wait` (the seed behavior)
+    /// or `Drop` (proceed at quorum).
+    pub straggler: StragglerPolicy,
+    /// Quorum under `straggler = Drop`: a round with fewer replies
+    /// fails the run.
+    pub min_participation: usize,
     pub seed: u64,
     /// Evaluate every this many steps (0 = only at the end).
     pub eval_every: u64,
@@ -153,6 +163,9 @@ impl ExperimentConfig {
             bus: BusKind::default(),
             downlink: Downlink::default(),
             resync_every: 64,
+            chaos: None,
+            straggler: StragglerPolicy::default(),
+            min_participation: 1,
             seed: 0,
             eval_every: 64,
             eval_batches: 4,
@@ -227,6 +240,14 @@ mod tests {
         assert_eq!(BusKind::parse("sequential"), Some(BusKind::Sequential));
         assert_eq!(BusKind::parse("thr"), Some(BusKind::Threaded));
         assert_eq!(BusKind::parse("threadd"), None); // typos error, never fall back
+    }
+
+    #[test]
+    fn elastic_defaults_keep_the_seed_path() {
+        let c = ExperimentConfig::table3_default();
+        assert!(c.chaos.is_none());
+        assert_eq!(c.straggler, StragglerPolicy::Wait);
+        assert_eq!(c.min_participation, 1);
     }
 
     #[test]

@@ -16,6 +16,11 @@ pub struct Row {
     /// MB sent server→worker per round per worker, measured.
     pub down_mb_per_round: f64,
     pub residual_norm: f32,
+    /// Workers whose deltas entered this round's mean (0 for rows that
+    /// are pure evals, e.g. restored-at-horizon).
+    pub participation: usize,
+    /// Cumulative full-weights resync frames (delta-downlink mode).
+    pub resyncs: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -47,12 +52,23 @@ impl MetricsLog {
         }
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
-        writeln!(f, "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm")?;
+        writeln!(
+            f,
+            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs"
+        )?;
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{}",
-                r.t, r.epoch, r.train_loss, r.test_acc, r.up_mb_per_round, r.down_mb_per_round, r.residual_norm
+                "{},{},{},{},{:.6},{:.6},{},{},{}",
+                r.t,
+                r.epoch,
+                r.train_loss,
+                r.test_acc,
+                r.up_mb_per_round,
+                r.down_mb_per_round,
+                r.residual_norm,
+                r.participation,
+                r.resyncs
             )?;
         }
         Ok(())
@@ -74,13 +90,18 @@ mod tests {
             up_mb_per_round: 0.5,
             down_mb_per_round: 1.0,
             residual_norm: 0.01,
+            participation: 7,
+            resyncs: 2,
         });
         let dir = std::env::temp_dir().join("qadam_metrics_test");
         let p = dir.join("m.csv");
         log.write_csv(&p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("t,epoch,"));
+        let header = s.lines().next().unwrap();
+        assert!(header.ends_with("participation,resyncs"));
         assert_eq!(s.lines().count(), 2);
+        assert!(s.lines().nth(1).unwrap().ends_with(",7,2"));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -96,6 +117,8 @@ mod tests {
                 up_mb_per_round: 0.0,
                 down_mb_per_round: 0.0,
                 residual_norm: 0.0,
+                participation: 1,
+                resyncs: 0,
             });
         }
         assert_eq!(log.best_acc(), Some(0.5));

@@ -86,6 +86,9 @@ pub fn run_table(which: &str, steps: u64, workers: usize, outdir: &str) -> Resul
             bus: super::config::BusKind::default(),
             downlink: super::config::Downlink::default(),
             resync_every: 64,
+            chaos: None,
+            straggler: crate::elastic::StragglerPolicy::Wait,
+            min_participation: 1,
             seed: 0,
             eval_every: if curves { 32 } else { 0 },
             eval_batches: if curves { 2 } else { 4 },

@@ -4,6 +4,7 @@
 use super::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
 use super::metrics::{MetricsLog, Row};
 use crate::data::{Dataset, SyntheticText, SyntheticVector, SyntheticVision};
+use crate::elastic::{ChaosTransport, StragglerPolicy};
 use crate::models::{artifacts_dir, Manifest};
 use crate::optim::{BlockwiseSgdEf, LrSchedule, QAdamEf, TernGradSgd, WorkerOpt};
 use crate::ps::transport::{LocalBus, ThreadedBus, Transport};
@@ -168,12 +169,21 @@ impl Trainer {
         // Engine selection: the threaded bus pairs with the sharded
         // server so both halves of the round run parallel; both engines
         // produce bit-identical trajectories (ps::transport parity tests).
-        let (bus, ps_threads): (Box<dyn Transport>, usize) = match cfg.bus {
+        let (mut bus, ps_threads): (Box<dyn Transport>, usize) = match cfg.bus {
             BusKind::Sequential => (Box::new(LocalBus::default()), 1),
             BusKind::Threaded => {
                 (Box::new(ThreadedBus::new()), crate::util::par::available_threads())
             }
         };
+        // With chaos or a non-wait straggler policy the bus is wrapped
+        // in the elastic layer; the default config keeps the bare bus
+        // (and hence the seed round path) untouched.
+        if cfg.chaos.is_some() || cfg.straggler != StragglerPolicy::Wait {
+            bus = Box::new(
+                ChaosTransport::new(bus, cfg.chaos.clone().unwrap_or_default())
+                    .with_policy(cfg.straggler, cfg.min_participation),
+            );
+        }
         let mut ps = ParameterServer::with_shards(
             model.init_flat(cfg.seed),
             cfg.kx,
@@ -227,11 +237,19 @@ impl Trainer {
         let start = self.ps.step() + 1; // continues after a restore
         for t in start..=self.cfg.steps {
             let epoch = self.cfg.epoch_of(t);
+            // Downlink membership first: who receives (and is charged
+            // for) this round's broadcast, and whether a rejoin forces
+            // a full-weights resync to re-anchor a stale replica.
+            let m = self.bus.membership(t, self.workers.len());
+            if m.rejoined {
+                self.ps.force_resync();
+            }
             let replies = {
-                let (b, _w) = self.ps.broadcast_at_epoch(self.workers.len(), epoch);
+                let (b, _w) = self.ps.broadcast_at_epoch(m.present, epoch);
                 self.bus.round(&b, &mut self.workers)?
             };
-            last_loss = self.ps.apply(&replies)?;
+            let part = self.ps.apply(&replies)?;
+            last_loss = part.mean_loss;
             let do_eval = self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0;
             if do_eval || t == self.cfg.steps {
                 let acc = self.eval()?;
@@ -244,6 +262,8 @@ impl Trainer {
                     up_mb_per_round: s.up_mb_per_round_per_worker(self.workers.len()),
                     down_mb_per_round: s.down_mb_per_round_per_worker(self.workers.len()),
                     residual_norm: self.workers[0].residual_norm(),
+                    participation: part.count(),
+                    resyncs: s.resyncs,
                 });
                 eprintln!(
                     "[{}] t={t} epoch={epoch} loss={last_loss:.4} acc={:.2}%",
@@ -277,6 +297,8 @@ impl Trainer {
                 up_mb_per_round: s.up_mb_per_round_per_worker(self.workers.len()),
                 down_mb_per_round: s.down_mb_per_round_per_worker(self.workers.len()),
                 residual_norm: self.workers[0].residual_norm(),
+                participation: 0, // no round ran: this row is a pure eval
+                resyncs: s.resyncs,
             });
             eprintln!(
                 "[{}] t={t} (restored at horizon) loss={last_loss:.4} acc={:.2}%",

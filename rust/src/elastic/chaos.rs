@@ -1,0 +1,812 @@
+//! Deterministic chaos injection behind the [`Transport`] contract.
+//!
+//! [`ChaosPlan`] is a pure function of `(seed, t, worker)`: every fault
+//! decision comes from [`crate::quant::seeded_rng`] keyed by the plan
+//! seed, the round and the worker id (or from an explicitly scheduled
+//! fault list) — never from a wall clock — so a chaotic run on an
+//! in-process engine is exactly reproducible, bit-for-bit across the
+//! sequential and threaded engines. [`ChaosTransport`] wraps any
+//! [`Transport`] and applies the plan:
+//!
+//! * **crash/restart** — a worker crashed at round `t` is excluded from
+//!   the round entirely: it receives no broadcast, computes nothing,
+//!   and advances none of its state (the in-process analogue of a dead
+//!   process). On restart the membership report flips `rejoined`, which
+//!   tells the driver to force a full-weights resync so the worker's
+//!   delta-downlink replica is re-anchored before any delta frame.
+//! * **drop** — the worker's reply is lost on the wire.
+//! * **delay** — the reply arrives after the round deadline: delivered
+//!   under [`StragglerPolicy::Wait`] (the round waits it out), dropped
+//!   under [`StragglerPolicy::Drop`].
+//! * **duplicate** — the reply is retransmitted. Under `Wait` the extra
+//!   copy is passed through so the server's duplicate rejection fires
+//!   (the protocol-violation path); under `Drop` the elastic gather
+//!   discards the retransmit and the round proceeds.
+//! * **corrupt** — one deterministic bit of the serialized reply frame
+//!   is flipped. A frame that no longer parses, or whose round/worker/
+//!   dimension metadata changed, is dropped (what a checksum would do);
+//!   a frame that still parses with intact metadata is delivered
+//!   corrupted (silent payload corruption, the realistic worst case —
+//!   still deterministic, because the flip is keyed by `(seed, t,
+//!   worker)` over deterministic bytes).
+//!
+//! This is the *one* fault-injection mechanism in the tree: the ad-hoc
+//! `drop_deltas` lists that used to live on `LocalBus`/`ThreadedBus`
+//! are gone, and their tests run here against [`ChaosTransport`].
+
+use super::membership::{Membership, StragglerPolicy};
+use crate::ps::protocol::{ToServer, ToWorker};
+use crate::ps::transport::Transport;
+use crate::ps::worker::Worker;
+use anyhow::{anyhow, Result};
+
+/// A fault kind a [`ChaosPlan`] can inject on a worker's reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Drop,
+    Delay,
+    Duplicate,
+    Corrupt,
+}
+
+/// One explicitly scheduled reply fault (tests and scripted drills).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScheduledFault {
+    pub kind: FaultKind,
+    pub t: u64,
+    pub worker: u32,
+}
+
+/// A crash window: worker `worker` is down for every round
+/// `t ∈ [from, until)` and rejoins at round `until`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashWindow {
+    pub worker: u32,
+    pub from: u64,
+    pub until: u64,
+}
+
+// Per-fault-kind salts so the probabilistic decisions are independent
+// streams of the same plan seed.
+const DROP_SALT: u64 = 0xc4a0_5_d201;
+const DELAY_SALT: u64 = 0xc4a0_5_d202;
+const DUP_SALT: u64 = 0xc4a0_5_d203;
+const CORRUPT_SALT: u64 = 0xc4a0_5_d204;
+const CORRUPT_BIT_SALT: u64 = 0xc4a0_5_d205;
+
+/// A deterministic fault plan. Probabilistic rates fire per
+/// `(t, worker)` from the plan seed; `scheduled` and `crashes` fire
+/// exactly when listed. The empty (default) plan injects nothing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    /// Per-reply drop probability.
+    pub drop_p: f32,
+    /// Per-reply past-deadline delay probability.
+    pub delay_p: f32,
+    /// Per-reply duplicate (retransmit) probability.
+    pub dup_p: f32,
+    /// Per-reply frame-corruption probability.
+    pub corrupt_p: f32,
+    /// Crash/restart windows.
+    pub crashes: Vec<CrashWindow>,
+    /// Explicitly scheduled one-off faults.
+    pub scheduled: Vec<ScheduledFault>,
+}
+
+impl ChaosPlan {
+    /// A plan that drops exactly the listed `(t, worker)` replies — the
+    /// successor of the old `drop_deltas` lists.
+    pub fn dropping(faults: &[(u64, u32)]) -> Self {
+        Self {
+            scheduled: faults
+                .iter()
+                .map(|&(t, worker)| ScheduledFault { kind: FaultKind::Drop, t, worker })
+                .collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Add a crash window (builder style, for tests and examples).
+    pub fn with_crash(mut self, worker: u32, from: u64, until: u64) -> Self {
+        self.crashes.push(CrashWindow { worker, from, until });
+        self
+    }
+
+    /// Parse the CLI spec: comma-separated `key=value` tokens.
+    ///
+    /// ```text
+    ///   seed=7,drop=0.1,delay=0.05,dup=0.01,corrupt=0.02,crash=3@40..80
+    /// ```
+    ///
+    /// `drop`/`delay`/`dup`/`corrupt` are probabilities in `[0, 1]`;
+    /// `crash=W@A..B` (repeatable) takes worker `W` down for rounds
+    /// `[A, B)`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = ChaosPlan::default();
+        for tok in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow!("chaos token '{tok}' is not key=value"))?;
+            match k {
+                "seed" => {
+                    plan.seed =
+                        v.parse().map_err(|e| anyhow!("bad chaos seed '{v}': {e}"))?;
+                }
+                "drop" => plan.drop_p = parse_prob(k, v)?,
+                "delay" => plan.delay_p = parse_prob(k, v)?,
+                "dup" => plan.dup_p = parse_prob(k, v)?,
+                "corrupt" => plan.corrupt_p = parse_prob(k, v)?,
+                "crash" => plan.crashes.push(parse_crash(v)?),
+                other => {
+                    return Err(anyhow!(
+                        "unknown chaos key '{other}' (seed|drop|delay|dup|corrupt|crash)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing (every decision is a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.drop_p == 0.0
+            && self.delay_p == 0.0
+            && self.dup_p == 0.0
+            && self.corrupt_p == 0.0
+            && self.crashes.is_empty()
+            && self.scheduled.is_empty()
+    }
+
+    fn hit(&self, kind: FaultKind, t: u64, worker: u32) -> bool {
+        self.scheduled.iter().any(|f| f.kind == kind && f.t == t && f.worker == worker)
+    }
+
+    fn roll(&self, salt: u64, p: f32, t: u64, worker: u32) -> bool {
+        p > 0.0
+            && crate::quant::seeded_rng(self.seed ^ salt, (t << 20) ^ worker as u64).gen_f32() < p
+    }
+
+    pub fn drops(&self, t: u64, worker: u32) -> bool {
+        self.hit(FaultKind::Drop, t, worker) || self.roll(DROP_SALT, self.drop_p, t, worker)
+    }
+
+    pub fn delays(&self, t: u64, worker: u32) -> bool {
+        self.hit(FaultKind::Delay, t, worker) || self.roll(DELAY_SALT, self.delay_p, t, worker)
+    }
+
+    pub fn duplicates(&self, t: u64, worker: u32) -> bool {
+        self.hit(FaultKind::Duplicate, t, worker) || self.roll(DUP_SALT, self.dup_p, t, worker)
+    }
+
+    pub fn corrupts(&self, t: u64, worker: u32) -> bool {
+        self.hit(FaultKind::Corrupt, t, worker)
+            || self.roll(CORRUPT_SALT, self.corrupt_p, t, worker)
+    }
+
+    /// Is `worker` down for round `t`?
+    pub fn crashed(&self, t: u64, worker: u32) -> bool {
+        self.crashes.iter().any(|c| c.worker == worker && c.from <= t && t < c.until)
+    }
+
+    /// Does any of `0..total` worker ids come back at round `t` after
+    /// being down at `t − 1`? (In-process worker ids are `0..total`.)
+    pub fn any_rejoin(&self, t: u64, total: usize) -> bool {
+        t > 1 && (0..total as u32).any(|w| !self.crashed(t, w) && self.crashed(t - 1, w))
+    }
+}
+
+fn parse_prob(key: &str, v: &str) -> Result<f32> {
+    let p: f32 = v.parse().map_err(|e| anyhow!("bad chaos {key} '{v}': {e}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(anyhow!("chaos {key}={p} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+fn parse_crash(v: &str) -> Result<CrashWindow> {
+    let (w, range) = v
+        .split_once('@')
+        .ok_or_else(|| anyhow!("chaos crash '{v}' is not W@A..B"))?;
+    let (a, b) = range
+        .split_once("..")
+        .ok_or_else(|| anyhow!("chaos crash range '{range}' is not A..B"))?;
+    let worker: u32 = w.parse().map_err(|e| anyhow!("bad crash worker '{w}': {e}"))?;
+    let from: u64 = a.parse().map_err(|e| anyhow!("bad crash start '{a}': {e}"))?;
+    let until: u64 = b.parse().map_err(|e| anyhow!("bad crash end '{b}': {e}"))?;
+    if from == 0 || until <= from {
+        return Err(anyhow!("chaos crash window {from}..{until} is empty (rounds start at 1)"));
+    }
+    Ok(CrashWindow { worker, from, until })
+}
+
+/// Counters of what a [`ChaosTransport`] actually injected.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Replies lost outright (drop faults + corrupt frames that no
+    /// longer parsed).
+    pub dropped: u64,
+    /// Replies that missed the deadline (dropped only under
+    /// [`StragglerPolicy::Drop`]).
+    pub delayed: u64,
+    /// Replies retransmitted.
+    pub duplicated: u64,
+    /// Reply frames bit-flipped.
+    pub corrupted: u64,
+    /// Worker-rounds skipped because the worker was crashed.
+    pub crashed: u64,
+}
+
+/// A [`Transport`] wrapper that injects the plan's faults around any
+/// inner engine and enforces the straggler policy's quorum.
+///
+/// Crash faults act on the in-process worker set (ids are assumed to be
+/// `0..n`, as the trainer assigns them); over TCP the worker slice is
+/// empty and crashes are modeled by the remote process actually dying —
+/// the reply-level faults (drop/delay/duplicate/corrupt) apply to every
+/// engine.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    plan: ChaosPlan,
+    policy: StragglerPolicy,
+    min_participation: usize,
+    pub stats: FaultStats,
+}
+
+impl ChaosTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: ChaosPlan) -> Self {
+        Self {
+            inner,
+            plan,
+            policy: StragglerPolicy::Wait,
+            min_participation: 1,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Set the straggler policy and the quorum a round must meet.
+    pub fn with_policy(mut self, policy: StragglerPolicy, min_participation: usize) -> Self {
+        self.policy = policy;
+        self.min_participation = min_participation.max(1);
+        self
+    }
+
+    pub fn plan(&self) -> &ChaosPlan {
+        &self.plan
+    }
+
+    /// Flip one deterministic bit of the serialized reply. Returns the
+    /// reparsed frame when it still parses with intact `(t, worker, n)`
+    /// metadata, `None` (dropped) otherwise.
+    fn corrupt_reply(&self, reply: &ToServer, t: u64, worker: u32) -> Option<ToServer> {
+        let mut bytes = reply.to_bytes();
+        let mut rng =
+            crate::quant::seeded_rng(self.plan.seed ^ CORRUPT_BIT_SALT, (t << 20) ^ worker as u64);
+        let bit = (rng.next_u64() as usize) % (bytes.len() * 8);
+        bytes[bit / 8] ^= 1 << (bit % 8);
+        let ToServer::Delta { msg: orig_msg, .. } = reply;
+        match ToServer::from_bytes(&bytes) {
+            Ok(parsed) => {
+                let ToServer::Delta { t: pt, worker: pw, msg: pm, .. } = &parsed;
+                if *pt == t && *pw == worker && pm.n == orig_msg.n {
+                    Some(parsed)
+                } else {
+                    None
+                }
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn round(
+        &mut self,
+        broadcast: &ToWorker,
+        workers: &mut [Worker],
+    ) -> Result<Vec<ToServer>> {
+        let t = match broadcast {
+            ToWorker::Weights { t, .. } | ToWorker::WeightsDelta { t, .. } => *t,
+            ToWorker::Shutdown => return self.inner.round(broadcast, workers),
+        };
+        if self.plan.is_empty() {
+            let replies = self.inner.round(broadcast, workers)?;
+            return self.check_quorum(t, replies);
+        }
+
+        // Crash faults: a crashed worker receives nothing and computes
+        // nothing. Stable-partition the slice so the alive workers form
+        // an id-ordered prefix the inner engine can run on, then
+        // restore id order (the Transport gather contract).
+        let n_crashed = workers.iter().filter(|w| self.plan.crashed(t, w.id)).count();
+        let replies = if n_crashed == 0 {
+            self.inner.round(broadcast, workers)?
+        } else {
+            self.stats.crashed += n_crashed as u64;
+            let plan = &self.plan;
+            workers.sort_by_key(|w| plan.crashed(t, w.id)); // stable: alive prefix stays id-ordered
+            let n_alive = workers.len() - n_crashed;
+            let r = self.inner.round(broadcast, &mut workers[..n_alive]);
+            workers.sort_by_key(|w| w.id);
+            r?
+        };
+
+        // Reply-level faults, in the deterministic gather order.
+        let mut out = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let (rt, rw) = {
+                let ToServer::Delta { t, worker, .. } = &reply;
+                (*t, *worker)
+            };
+            if self.plan.drops(rt, rw) {
+                self.stats.dropped += 1;
+                continue;
+            }
+            if self.plan.delays(rt, rw) {
+                self.stats.delayed += 1;
+                if self.policy == StragglerPolicy::Drop {
+                    continue; // missed the deadline
+                }
+            }
+            let duplicated = self.plan.duplicates(rt, rw);
+            let delivered = if self.plan.corrupts(rt, rw) {
+                self.stats.corrupted += 1;
+                self.corrupt_reply(&reply, rt, rw)
+            } else {
+                Some(reply)
+            };
+            match delivered {
+                None => self.stats.dropped += 1, // corrupt frame failed to parse
+                Some(r) => {
+                    if duplicated {
+                        self.stats.duplicated += 1;
+                        if self.policy == StragglerPolicy::Wait {
+                            // surface the retransmit so the server's
+                            // duplicate rejection fires
+                            out.push(r.clone());
+                        }
+                    }
+                    out.push(r);
+                }
+            }
+        }
+        self.check_quorum(t, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn membership(&mut self, next_t: u64, total: usize) -> Membership {
+        let inner = self.inner.membership(next_t, total);
+        if self.plan.crashes.is_empty() {
+            return inner;
+        }
+        let crashed = (0..total as u32).filter(|&w| self.plan.crashed(next_t, w)).count();
+        Membership {
+            expected: inner.expected,
+            present: inner.present.saturating_sub(crashed),
+            rejoined: inner.rejoined || self.plan.any_rejoin(next_t, total),
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.inner.shutdown()
+    }
+}
+
+impl ChaosTransport {
+    fn check_quorum(&self, t: u64, replies: Vec<ToServer>) -> Result<Vec<ToServer>> {
+        if self.policy == StragglerPolicy::Drop && replies.len() < self.min_participation {
+            return Err(anyhow!(
+                "round {t} below quorum: {} replies, need {}",
+                replies.len(),
+                self.min_participation
+            ));
+        }
+        Ok(replies)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{LrSchedule, QAdamEf};
+    use crate::ps::transport::{LocalBus, ThreadedBus};
+    use crate::ps::worker::SimGradSource;
+    use crate::ps::ParameterServer;
+    use crate::quant::LogQuant;
+
+    fn mk_worker(id: u32, dim: usize) -> Worker {
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.05, 9) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.02 });
+        Worker::new(id, Box::new(opt), Box::new(src), 1)
+    }
+
+    fn reply_ids(replies: &[ToServer]) -> Vec<u32> {
+        replies
+            .iter()
+            .map(|r| {
+                let ToServer::Delta { worker, .. } = r;
+                *worker
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spec_parse_roundtrip_and_errors() {
+        let p = ChaosPlan::parse("seed=7, drop=0.1,delay=0.05,dup=0.01,corrupt=0.02,crash=3@40..80").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.drop_p, 0.1);
+        assert_eq!(p.delay_p, 0.05);
+        assert_eq!(p.dup_p, 0.01);
+        assert_eq!(p.corrupt_p, 0.02);
+        assert_eq!(p.crashes, vec![CrashWindow { worker: 3, from: 40, until: 80 }]);
+        assert!(!p.is_empty());
+        // repeatable crash windows
+        let p = ChaosPlan::parse("crash=0@2..4,crash=1@5..6").unwrap();
+        assert_eq!(p.crashes.len(), 2);
+        assert!(ChaosPlan::parse("").unwrap().is_empty());
+        assert!(ChaosPlan::parse("drop=1.5").is_err()); // outside [0,1]
+        assert!(ChaosPlan::parse("frobnicate=1").is_err());
+        assert!(ChaosPlan::parse("drop").is_err()); // not key=value
+        assert!(ChaosPlan::parse("crash=0@5..5").is_err()); // empty window
+        assert!(ChaosPlan::parse("crash=0@0..5").is_err()); // rounds start at 1
+    }
+
+    #[test]
+    fn plan_decisions_are_deterministic_in_seed_t_worker() {
+        let p = ChaosPlan { seed: 11, drop_p: 0.3, ..Default::default() };
+        for t in 1u64..=50 {
+            for w in 0u32..8 {
+                assert_eq!(p.drops(t, w), p.clone().drops(t, w));
+            }
+        }
+        // a different seed gives a different pattern somewhere
+        let q = ChaosPlan { seed: 12, drop_p: 0.3, ..Default::default() };
+        let diff = (1u64..=50).any(|t| (0u32..8).any(|w| p.drops(t, w) != q.drops(t, w)));
+        assert!(diff, "seed must steer the fault pattern");
+    }
+
+    #[test]
+    fn crash_windows_and_rejoin_signal() {
+        let p = ChaosPlan::default().with_crash(1, 4, 8);
+        assert!(!p.crashed(3, 1));
+        assert!(p.crashed(4, 1) && p.crashed(7, 1));
+        assert!(!p.crashed(8, 1));
+        assert!(!p.crashed(5, 0));
+        for t in 1u64..=12 {
+            assert_eq!(p.any_rejoin(t, 3), t == 8, "t={t}");
+        }
+    }
+
+    /// Ported from `local_bus_fault_injection_drops_delta`: a scheduled
+    /// drop removes exactly that worker's reply, the server still makes
+    /// progress on the rest.
+    #[test]
+    fn chaos_drop_fault_drops_delta() {
+        let dim = 8;
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let mut bus = ChaosTransport::new(Box::new(LocalBus::default()), ChaosPlan::dropping(&[(1, 1)]));
+        let replies = {
+            let (b, _) = ps.broadcast(3);
+            bus.round(&b, &mut workers).unwrap()
+        };
+        assert_eq!(replies.len(), 2); // worker 1's delta dropped
+        assert_eq!(bus.stats.dropped, 1);
+        ps.apply(&replies).unwrap(); // PS still makes progress on the rest
+    }
+
+    /// Ported from `local_bus_drop_deltas_is_step_scoped_and_order_preserving`:
+    /// scheduled drops are per-(step, worker) — only the scheduled round
+    /// loses the delta, later rounds from the same worker go through,
+    /// and the surviving replies keep worker-id order.
+    #[test]
+    fn chaos_drop_is_step_scoped_and_order_preserving() {
+        let dim = 8;
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+        let mut bus =
+            ChaosTransport::new(Box::new(LocalBus::default()), ChaosPlan::dropping(&[(2, 0), (2, 3)]));
+        for t in 1u64..=3 {
+            let replies = {
+                let (b, _) = ps.broadcast(4);
+                bus.round(&b, &mut workers).unwrap()
+            };
+            if t == 2 {
+                assert_eq!(reply_ids(&replies), vec![1, 2]); // 0 and 3 dropped this round only
+            } else {
+                assert_eq!(reply_ids(&replies), vec![0, 1, 2, 3]);
+            }
+            ps.apply(&replies).unwrap();
+        }
+    }
+
+    /// Ported from `threaded_bus_honors_drop_deltas`: the same plan
+    /// applies over the threaded engine.
+    #[test]
+    fn chaos_drop_on_threaded_bus() {
+        let dim = 8;
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let mut bus = ChaosTransport::new(Box::new(ThreadedBus::new()), ChaosPlan::dropping(&[(1, 2)]));
+        let replies = {
+            let (b, _) = ps.broadcast(3);
+            bus.round(&b, &mut workers).unwrap()
+        };
+        assert_eq!(reply_ids(&replies), vec![0, 1]);
+    }
+
+    /// An empty plan under Wait is a pure pass-through: trajectories are
+    /// bit-identical to the unwrapped engine.
+    #[test]
+    fn empty_plan_is_bit_identical_to_bare_bus() {
+        let dim = 64;
+        let x0: Vec<f32> = (0..dim).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
+        let mut ps_bare = ParameterServer::new(x0.clone(), Some(4));
+        let mut ws_bare: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let bare = LocalBus::default();
+        let mut ps_chaos = ParameterServer::new(x0, Some(4));
+        let mut ws_chaos: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let mut chaos = ChaosTransport::new(Box::new(LocalBus::default()), ChaosPlan::default());
+        for t in 1u64..=25 {
+            let r_bare = {
+                let (b, _) = ps_bare.broadcast(3);
+                bare.round(&b, &mut ws_bare).unwrap()
+            };
+            ps_bare.apply(&r_bare).unwrap();
+            let r_chaos = {
+                let (b, _) = ps_chaos.broadcast(3);
+                chaos.round(&b, &mut ws_chaos).unwrap()
+            };
+            ps_chaos.apply(&r_chaos).unwrap();
+            assert_eq!(ps_bare.master(), ps_chaos.master(), "diverged at round {t}");
+        }
+        assert_eq!(ps_bare.stats.down_bytes, ps_chaos.stats.down_bytes);
+        assert_eq!(ps_bare.stats.up_bytes, ps_chaos.stats.up_bytes);
+        assert_eq!(chaos.stats, FaultStats::default());
+    }
+
+    /// Acceptance: a fixed-seed chaotic run (probabilistic drops/delays
+    /// plus a crash window) is bit-reproducible across the sequential
+    /// and threaded engines — same masters, same replicas, same fault
+    /// pattern, same byte accounting, round by round.
+    #[test]
+    fn fixed_seed_chaos_bit_reproducible_across_engines() {
+        let dim = 96;
+        let x0: Vec<f32> = (0..dim).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
+        let plan = ChaosPlan::parse("seed=5,drop=0.2,delay=0.15,crash=2@6..11").unwrap();
+        let mk_ps = |x0: Vec<f32>, block: usize, threads: usize| -> ParameterServer {
+            let mut ps = ParameterServer::with_shards(x0, Some(4), block, threads);
+            ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 7);
+            ps
+        };
+        let mut ps_seq = mk_ps(x0.clone(), crate::ps::server::DEFAULT_BLOCK, 1);
+        let mut ws_seq: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+        let mut seq = ChaosTransport::new(Box::new(LocalBus::default()), plan.clone())
+            .with_policy(StragglerPolicy::Drop, 1);
+        let mut ps_thr = mk_ps(x0, 13, 4);
+        let mut ws_thr: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
+        let mut thr = ChaosTransport::new(Box::new(ThreadedBus::new()), plan)
+            .with_policy(StragglerPolicy::Drop, 1);
+        let mut applied = 0u32;
+        for t in 1u64..=30 {
+            let m_seq = seq.membership(t, 4);
+            let m_thr = thr.membership(t, 4);
+            assert_eq!(m_seq, m_thr, "membership diverged at round {t}");
+            if m_seq.rejoined {
+                ps_seq.force_resync();
+                ps_thr.force_resync();
+            }
+            let r_seq = {
+                let (b, _) = ps_seq.broadcast(m_seq.present);
+                seq.round(&b, &mut ws_seq)
+            };
+            let r_thr = {
+                let (b, _) = ps_thr.broadcast(m_thr.present);
+                thr.round(&b, &mut ws_thr)
+            };
+            match (r_seq, r_thr) {
+                (Ok(a), Ok(c)) => {
+                    assert_eq!(reply_ids(&a), reply_ids(&c), "gather diverged at round {t}");
+                    let pa = ps_seq.apply(&a).unwrap();
+                    let pc = ps_thr.apply(&c).unwrap();
+                    assert_eq!(pa, pc, "participation diverged at round {t}");
+                    applied += 1;
+                }
+                (Err(ea), Err(ec)) => assert_eq!(ea.to_string(), ec.to_string()),
+                (a, c) => panic!("engines disagree at round {t}: {a:?} vs {c:?}"),
+            }
+            assert_eq!(ps_seq.master(), ps_thr.master(), "masters diverged at round {t}");
+            assert_eq!(
+                ps_seq.downlink_state().unwrap().0,
+                ps_thr.downlink_state().unwrap().0,
+                "replicas diverged at round {t}"
+            );
+        }
+        assert_eq!(seq.stats, thr.stats, "fault patterns diverged");
+        assert_eq!(ps_seq.stats.down_bytes, ps_thr.stats.down_bytes);
+        assert_eq!(ps_seq.stats.up_bytes, ps_thr.stats.up_bytes);
+        assert!(applied > 0, "the fixed seed must leave some applicable rounds");
+        assert!(seq.stats.dropped + seq.stats.delayed > 0, "the plan must actually fire");
+        assert!(seq.stats.crashed > 0);
+    }
+
+    /// Acceptance: delta-downlink replica parity holds across a
+    /// crash/rejoin cycle — the rejoin flips `Membership::rejoined`,
+    /// the forced resync re-anchors the returning worker, and every
+    /// participating worker equals the server replica on every round.
+    #[test]
+    fn crash_rejoin_replica_parity_with_forced_resync() {
+        let dim = 48;
+        let mut ps = ParameterServer::new(vec![0.5; dim], None);
+        ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 0); // resync only round 1 / forced
+        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let plan = ChaosPlan::default().with_crash(1, 4, 8);
+        let mut bus = ChaosTransport::new(Box::new(LocalBus::default()), plan);
+        for t in 1u64..=12 {
+            let m = bus.membership(t, 3);
+            assert_eq!(m.present, if (4..8).contains(&t) { 2 } else { 3 }, "t={t}");
+            assert_eq!(m.rejoined, t == 8, "t={t}");
+            if m.rejoined {
+                ps.force_resync();
+            }
+            let replies = {
+                let (b, _) = ps.broadcast(m.present);
+                if t == 8 {
+                    assert!(matches!(b, ToWorker::Weights { .. }), "rejoin round must resync");
+                } else if t > 1 {
+                    assert!(matches!(b, ToWorker::WeightsDelta { .. }), "t={t}");
+                }
+                bus.round(&b, &mut workers).unwrap()
+            };
+            if (4..8).contains(&t) {
+                assert_eq!(reply_ids(&replies), vec![0, 2]);
+            } else {
+                assert_eq!(reply_ids(&replies), vec![0, 1, 2]);
+            }
+            let part = ps.apply(&replies).unwrap();
+            assert_eq!(part.reporters, reply_ids(&replies));
+            // the crash partition must leave the slice back in id order
+            let order: Vec<u32> = workers.iter().map(|w| w.id).collect();
+            assert_eq!(order, vec![0, 1, 2]);
+            let (replica, _) = ps.downlink_state().unwrap();
+            for w in &workers {
+                if w.id == 1 && (4..8).contains(&t) {
+                    continue; // crashed: stale by design until the rejoin resync
+                }
+                assert_eq!(w.weights(), replica, "worker {} != replica at round {t}", w.id);
+            }
+        }
+        assert_eq!(ps.stats.resyncs, 2, "round 1 + the forced rejoin resync");
+        assert_eq!(bus.stats.crashed, 4, "worker 1 skipped rounds 4..8");
+    }
+
+    /// Duplicate faults: under Wait the retransmit reaches the server
+    /// and its duplicate rejection fires; under Drop the elastic gather
+    /// discards the retransmit and the round applies cleanly.
+    #[test]
+    fn duplicate_fault_rejected_under_wait_dropped_under_drop() {
+        let dim = 8;
+        let plan = || ChaosPlan {
+            scheduled: vec![ScheduledFault { kind: FaultKind::Duplicate, t: 1, worker: 1 }],
+            ..Default::default()
+        };
+        // Wait: the duplicate passes through, apply rejects the round.
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let mut bus = ChaosTransport::new(Box::new(LocalBus::default()), plan());
+        let replies = {
+            let (b, _) = ps.broadcast(3);
+            bus.round(&b, &mut workers).unwrap()
+        };
+        assert_eq!(reply_ids(&replies), vec![0, 1, 1, 2]);
+        let err = ps.apply(&replies).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // Drop: the retransmit is discarded at the gather.
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let mut bus = ChaosTransport::new(Box::new(LocalBus::default()), plan())
+            .with_policy(StragglerPolicy::Drop, 1);
+        let replies = {
+            let (b, _) = ps.broadcast(3);
+            bus.round(&b, &mut workers).unwrap()
+        };
+        assert_eq!(reply_ids(&replies), vec![0, 1, 2]);
+        ps.apply(&replies).unwrap();
+        assert_eq!(bus.stats.duplicated, 1);
+    }
+
+    /// Delay faults only drop the reply when the policy says the round
+    /// stops waiting.
+    #[test]
+    fn delay_drops_only_under_drop_policy() {
+        let dim = 8;
+        let plan = || ChaosPlan {
+            scheduled: vec![ScheduledFault { kind: FaultKind::Delay, t: 1, worker: 0 }],
+            ..Default::default()
+        };
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..2).map(|i| mk_worker(i, dim)).collect();
+        let mut wait = ChaosTransport::new(Box::new(LocalBus::default()), plan());
+        let replies = {
+            let (b, _) = ps.broadcast(2);
+            wait.round(&b, &mut workers).unwrap()
+        };
+        assert_eq!(reply_ids(&replies), vec![0, 1], "wait rides out the delay");
+        assert_eq!(wait.stats.delayed, 1);
+
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..2).map(|i| mk_worker(i, dim)).collect();
+        let mut drop = ChaosTransport::new(Box::new(LocalBus::default()), plan())
+            .with_policy(StragglerPolicy::Drop, 1);
+        let replies = {
+            let (b, _) = ps.broadcast(2);
+            drop.round(&b, &mut workers).unwrap()
+        };
+        assert_eq!(reply_ids(&replies), vec![1], "drop treats the delay as a miss");
+    }
+
+    /// Corrupt faults either deliver a deterministically bit-flipped
+    /// frame with intact metadata or drop it — never a panic, never a
+    /// round-poisoning stale/misshapen reply.
+    #[test]
+    fn corrupt_fault_is_deterministic_and_metadata_safe() {
+        let dim = 16;
+        let run = || -> (Vec<Vec<u32>>, FaultStats, Vec<f32>) {
+            let plan = ChaosPlan { seed: 3, corrupt_p: 1.0, ..Default::default() };
+            let mut ps = ParameterServer::new(vec![1.0; dim], None);
+            let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+            let mut bus = ChaosTransport::new(Box::new(LocalBus::default()), plan)
+                .with_policy(StragglerPolicy::Drop, 1);
+            let mut ids = Vec::new();
+            for _ in 1u64..=6 {
+                let r = {
+                    let (b, _) = ps.broadcast(3);
+                    bus.round(&b, &mut workers)
+                };
+                match r {
+                    Ok(replies) => {
+                        // delivered frames carry intact round/worker/dim
+                        // metadata — a flip there drops the frame instead
+                        for r in &replies {
+                            let ToServer::Delta { t, msg, .. } = r;
+                            assert_eq!(*t, ps.step());
+                            assert_eq!(msg.n, dim);
+                        }
+                        ids.push(reply_ids(&replies));
+                        ps.apply(&replies).unwrap();
+                    }
+                    // every frame of the round corrupted to death: the
+                    // quorum check fires; skip the apply, like a driver
+                    // retrying the next round would
+                    Err(_) => ids.push(Vec::new()),
+                }
+            }
+            (ids, bus.stats, ps.master().to_vec())
+        };
+        let (ids_a, stats_a, x_a) = run();
+        let (ids_b, stats_b, x_b) = run();
+        assert_eq!(ids_a, ids_b, "corruption pattern must be deterministic");
+        assert_eq!(stats_a, stats_b);
+        assert_eq!(x_a, x_b, "corrupted trajectories must be reproducible");
+        assert_eq!(stats_a.corrupted, 18, "every reply of every round is hit");
+    }
+
+    /// Below the configured quorum the round fails loudly.
+    #[test]
+    fn below_quorum_fails_the_round() {
+        let dim = 8;
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
+        let mut bus =
+            ChaosTransport::new(Box::new(LocalBus::default()), ChaosPlan::dropping(&[(1, 0), (1, 1)]))
+                .with_policy(StragglerPolicy::Drop, 2);
+        let err = {
+            let (b, _) = ps.broadcast(3);
+            bus.round(&b, &mut workers).unwrap_err()
+        };
+        assert!(err.to_string().contains("quorum"), "{err}");
+    }
+}

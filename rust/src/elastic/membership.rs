@@ -1,0 +1,109 @@
+//! The participation layer of the round protocol: who is in a round,
+//! what the server averaged over, and what to do about stragglers.
+
+/// Outcome of one applied round: which workers' deltas made it into the
+/// server's mean. `ParameterServer::apply` averages over the *received*
+/// replies (`mean_i` runs over `reporters`, not over the deployment
+/// size) — a dropped worker simply does not pull the mean that round,
+/// and its error-feedback residual carries the missed mass into its
+/// next reply (the Theorem 3.1 argument, round-robin across members).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Participation {
+    /// The round this outcome belongs to (`t` of the applied deltas).
+    pub round: u64,
+    /// Mean training loss over the received replies.
+    pub mean_loss: f32,
+    /// Worker ids whose deltas entered the mean, sorted ascending.
+    pub reporters: Vec<u32>,
+}
+
+impl Participation {
+    /// How many workers reported this round.
+    pub fn count(&self) -> usize {
+        self.reporters.len()
+    }
+}
+
+/// What a round does about workers that miss the gather.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StragglerPolicy {
+    /// Block until every live worker replies — the seed behavior, and
+    /// bit-identical to it. A dead connection or a lost reply fails the
+    /// round.
+    #[default]
+    Wait,
+    /// Proceed once the round deadline passes: stragglers and dead
+    /// connections count as dropped replies, and the round fails only
+    /// below the `min_participation` quorum.
+    Drop,
+}
+
+impl StragglerPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StragglerPolicy::Wait => "wait",
+            StragglerPolicy::Drop => "drop",
+        }
+    }
+
+    /// Parse a CLI flag value; `None` for unknown values — callers
+    /// should error, not fall back silently.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "wait" => Some(StragglerPolicy::Wait),
+            "drop" => Some(StragglerPolicy::Drop),
+            _ => None,
+        }
+    }
+}
+
+/// Downlink membership of the next round: who will receive the
+/// broadcast. The server charges `down_bytes` for exactly `present`
+/// workers — a crashed or evicted worker is not shipped bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Membership {
+    /// Worker slots the deployment is sized for.
+    pub expected: usize,
+    /// Workers that will receive this round's broadcast.
+    pub present: usize,
+    /// True when at least one worker (re)joined since the previous
+    /// round. The caller must then force a full-weights resync
+    /// (`ParameterServer::force_resync`) before broadcasting: a
+    /// rejoining worker missed frames, and in delta-downlink mode its
+    /// replica would silently diverge from `x̂` otherwise.
+    pub rejoined: bool,
+}
+
+impl Membership {
+    /// Everyone present, nobody rejoining — the static-fleet default.
+    pub fn full(total: usize) -> Self {
+        Self { expected: total, present: total, rejoined: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn participation_counts_reporters() {
+        let p = Participation { round: 3, mean_loss: 1.5, reporters: vec![0, 2, 5] };
+        assert_eq!(p.count(), 3);
+    }
+
+    #[test]
+    fn straggler_policy_parse_and_label() {
+        assert_eq!(StragglerPolicy::default(), StragglerPolicy::Wait);
+        assert_eq!(StragglerPolicy::parse("wait"), Some(StragglerPolicy::Wait));
+        assert_eq!(StragglerPolicy::parse("drop"), Some(StragglerPolicy::Drop));
+        assert_eq!(StragglerPolicy::parse("dropp"), None); // typos error, never fall back
+        assert_eq!(StragglerPolicy::Wait.label(), "wait");
+        assert_eq!(StragglerPolicy::Drop.label(), "drop");
+    }
+
+    #[test]
+    fn full_membership() {
+        let m = Membership::full(8);
+        assert_eq!(m, Membership { expected: 8, present: 8, rejoined: false });
+    }
+}

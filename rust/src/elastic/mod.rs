@@ -1,0 +1,38 @@
+//! Elastic rounds: membership, straggler policies, and deterministic
+//! chaos injection.
+//!
+//! The paper's multi-worker analysis (Theorems 3.2–3.3) assumes every
+//! worker reports every round. A production parameter server does not
+//! get that luxury: workers straggle, crash, and rejoin. Error feedback
+//! is exactly the mechanism that absorbs a missed contribution — the
+//! worker's residual carries the un-applied mass into its next reply
+//! (Error-Compensated QSGD, Wu et al. 2018; server-side in
+//! Efficient-Adam, Chen et al. 2022) — so the protocol can afford to
+//! *drop* a straggler instead of waiting on it. This module makes that
+//! policy explicit and testable:
+//!
+//! * [`membership`] — the participation layer of the round protocol:
+//!   [`Participation`] (which workers a round's mean actually averaged
+//!   over — `ParameterServer::apply` has always averaged over the
+//!   *received* replies; this formalizes it), [`StragglerPolicy`]
+//!   (`wait` = the seed behavior, `drop` = proceed at quorum), and
+//!   [`Membership`] (who receives the next broadcast, the set
+//!   `down_bytes` is charged for, plus the rejoin signal that forces a
+//!   full-weights resync so delta-downlink replicas never diverge).
+//! * [`chaos`] — a deterministic fault injector: [`ChaosPlan`] decides
+//!   drop / delay / duplicate / corrupt-frame and crash/restart faults
+//!   purely from `(seed, t, worker)` — no wall clock in the in-process
+//!   engines — and [`ChaosTransport`] applies the plan behind the
+//!   ordinary [`crate::ps::Transport`] round contract, wrapping any
+//!   engine (sequential, threaded, TCP).
+//!
+//! Determinism contract: with an empty plan and [`StragglerPolicy::Wait`]
+//! every engine is bit-identical to the unwrapped transport; with a
+//! fixed plan seed a chaotic run is reproducible bit-for-bit across the
+//! sequential and threaded engines (asserted in [`chaos`] tests).
+
+pub mod chaos;
+pub mod membership;
+
+pub use chaos::{ChaosPlan, ChaosTransport, CrashWindow, FaultKind, FaultStats, ScheduledFault};
+pub use membership::{Membership, Participation, StragglerPolicy};

@@ -22,6 +22,9 @@
 //!   worker (Alg. 3), transports behind one [`ps::Transport`] round
 //!   contract (sequential / threaded in-proc, TCP), protocol + byte
 //!   accounting.
+//! * [`elastic`] — fault tolerance for the round protocol: membership
+//!   and participation semantics, straggler policies with quorum, and
+//!   the deterministic `ChaosPlan`/`ChaosTransport` fault injector.
 //! * [`coordinator`] — experiment configs, the synchronous training
 //!   driver, metrics/CSV logging.
 //! * [`sim`] — synthetic stochastic nonconvex problems for the
@@ -29,6 +32,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod elastic;
 pub mod models;
 pub mod optim;
 pub mod ps;

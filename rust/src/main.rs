@@ -16,6 +16,7 @@
 use anyhow::{anyhow, bail, Result};
 use qadam::coordinator::config::{BusKind, Downlink, Engine};
 use qadam::coordinator::{ExperimentConfig, Method, Trainer};
+use qadam::elastic::{ChaosPlan, ChaosTransport, StragglerPolicy};
 use qadam::models::{artifacts_dir, Manifest};
 use qadam::optim::LrSchedule;
 use qadam::util::Args;
@@ -42,6 +43,12 @@ train flags:
                         feedback, resync every --resync-every rounds)
   --resync-every N      full-weights resync cadence in delta mode
                         (default 64; 0 = only round 1)
+  --chaos SPEC          deterministic fault injection, e.g.
+                        \"seed=7,drop=0.1,delay=0.05,crash=3@40..80\"
+                        (keys: seed|drop|delay|dup|corrupt|crash)
+  --straggler P         wait | drop (default wait; drop = proceed at
+                        quorum, stragglers count as dropped replies)
+  --min-participation N quorum under --straggler drop (default 1)
   --workers N           number of workers (default 8)
   --steps N             training steps (default 200)
   --steps-per-epoch N   epoch length for LR decay (default 64)
@@ -57,8 +64,10 @@ eval flags:
   --ckpt PATH --model NAME --dataset NAME [--post-kx K] [--eval-batches N]
 
 serve flags:  --addr A --workers N --dim D --steps N [--kx K] [--kg K]
-              [--downlink D] [--resync-every N]
+              [--downlink D] [--resync-every N] [--round-deadline-ms MS]
+              [--straggler P] [--min-participation N] [--chaos SPEC]
 worker flags: --addr A --id I --dim D --method M [--kg K] [--alpha A]
+              [--downlink D]  (match the server; used for diagnostics)
 ";
 
 fn parse_method(a: &Args) -> Result<(Method, Option<u32>, Engine)> {
@@ -89,6 +98,19 @@ fn parse_downlink(a: &Args) -> Result<(Downlink, u64)> {
     Ok((d, a.get("resync_every", 64u64)?))
 }
 
+/// The elastic-round flags shared by `train` and `serve`:
+/// `(chaos plan, straggler policy, quorum)`.
+fn parse_elastic(a: &Args) -> Result<(Option<ChaosPlan>, StragglerPolicy, usize)> {
+    let chaos = match a.opt::<String>("chaos")? {
+        Some(spec) => Some(ChaosPlan::parse(&spec)?),
+        None => None,
+    };
+    let v = a.get_str("straggler", "wait");
+    let straggler =
+        StragglerPolicy::parse(&v).ok_or_else(|| anyhow!("unknown straggler '{v}' (wait | drop)"))?;
+    Ok((chaos, straggler, a.get("min_participation", 1usize)?))
+}
+
 fn build_sim_opt(m: Method, dim: usize, lr: LrSchedule) -> Box<dyn qadam::optim::WorkerOpt> {
     use qadam::optim::{BlockwiseSgdEf, QAdamEf, TernGradSgd};
     match m {
@@ -110,6 +132,7 @@ fn build_sim_opt(m: Method, dim: usize, lr: LrSchedule) -> Box<dyn qadam::optim:
 fn cmd_train(a: &Args) -> Result<()> {
     let (method, kx, engine) = parse_method(a)?;
     let (downlink, resync_every) = parse_downlink(a)?;
+    let (chaos, straggler, min_participation) = parse_elastic(a)?;
     let cfg = ExperimentConfig {
         model: a.get_str("model", "vgg_sim"),
         dataset: a.get_str("dataset", "cifar10_sim"),
@@ -124,6 +147,9 @@ fn cmd_train(a: &Args) -> Result<()> {
         bus: parse_bus(a)?,
         downlink,
         resync_every,
+        chaos,
+        straggler,
+        min_participation,
         seed: a.get("seed", 0u64)?,
         eval_every: a.get("eval_every", 50u64)?,
         eval_batches: a.get("eval_batches", 4usize)?,
@@ -154,7 +180,7 @@ fn cmd_train(a: &Args) -> Result<()> {
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {
-    use qadam::ps::transport::TcpServer;
+    use qadam::ps::transport::{TcpServer, Transport};
     use qadam::ps::ParameterServer;
     let addr = a.get_str("addr", "127.0.0.1:7777");
     let workers = a.get("workers", 2usize)?;
@@ -163,8 +189,28 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let kx: Option<u32> = a.opt("kx")?;
     let kg: Option<u32> = a.opt("kg")?;
     let (downlink, resync_every) = parse_downlink(a)?;
+    let (chaos, straggler, min_participation) = parse_elastic(a)?;
+    let deadline_ms: Option<u64> = a.opt("round_deadline_ms")?;
     a.reject_unknown()?;
+    // Chaos (if any) wraps the TCP transport: reply-level faults apply
+    // to the gathered frames. Crash windows act on the in-process
+    // worker set, which a TCP server does not have — membership and
+    // accounting would silently disagree with the real fleet — so over
+    // TCP a crash is a worker process you actually kill.
+    if let Some(p) = &chaos {
+        if !p.crashes.is_empty() {
+            bail!(
+                "--chaos crash windows are in-process faults (train); over TCP, kill the \
+                 worker process instead — drop/delay/dup/corrupt apply on serve"
+            );
+        }
+    }
     let mut srv = TcpServer::bind_and_accept(&addr, workers)?;
+    srv.set_elastic(deadline_ms, straggler, min_participation);
+    let mut bus: Box<dyn Transport> = Box::new(srv);
+    if let Some(plan) = chaos {
+        bus = Box::new(ChaosTransport::new(bus, plan).with_policy(straggler, min_participation));
+    }
     let problem = qadam::sim::StochasticProblem::new(dim, 0.05, 1);
     let mut ps = ParameterServer::new(problem.x0(), kx);
     if downlink == Downlink::Delta {
@@ -177,26 +223,34 @@ fn cmd_serve(a: &Args) -> Result<()> {
         ps.enable_delta_downlink(qadam::quant::gradient_codec(kg), resync_every);
     }
     for t in 1..=steps {
+        let m = bus.membership(t, workers);
+        if m.rejoined {
+            ps.force_resync();
+        }
         let replies = {
-            let (b, _) = ps.broadcast(workers);
-            srv.round(&b)?
+            let (b, _) = ps.broadcast(m.present);
+            bus.round(&b, &mut [])?
         };
-        let loss = ps.apply(&replies)?;
+        let part = ps.apply(&replies)?;
         if t % 50 == 0 || t == steps {
             println!(
-                "[server] t={t} loss={loss:.5} |grad|^2={:.6} up={}B down={}B",
+                "[server] t={t} loss={:.5} |grad|^2={:.6} members={}/{} up={}B down={}B",
+                part.mean_loss,
                 problem.grad_norm_sq(ps.master()),
+                part.count(),
+                workers,
                 ps.stats.up_bytes,
                 ps.stats.down_bytes
             );
         }
     }
-    srv.shutdown()?;
+    bus.shutdown()?;
     println!(
-        "[server] done: {:.4} MB up, {:.4} MB down over {} rounds",
+        "[server] done: {:.4} MB up, {:.4} MB down over {} rounds ({} resyncs)",
         ps.stats.up_bytes as f64 / 1e6,
         ps.stats.down_bytes as f64 / 1e6,
-        ps.stats.rounds
+        ps.stats.rounds,
+        ps.stats.resyncs
     );
     Ok(())
 }
@@ -209,7 +263,23 @@ fn cmd_worker(a: &Args) -> Result<()> {
     let dim = a.get("dim", 64usize)?;
     let alpha = a.get("alpha", 0.01f32)?;
     let (m, _kx, _engine) = parse_method(a)?;
+    // `--downlink` mirrors the server flag so a misconfigured fleet is
+    // diagnosable from either end: the server already warns when delta
+    // frames will ship fp32, and so do we.
+    let (downlink, _resync_every) = parse_downlink(a)?;
     a.reject_unknown()?;
+    if downlink == Downlink::Delta {
+        let kg = match m {
+            Method::QAdam { kg, .. } => kg,
+            _ => None,
+        };
+        if kg.is_none() {
+            eprintln!(
+                "[worker {id}] --downlink delta without --kg: delta frames ship fp32 \
+                 (protocol-correct, but no downlink compression)"
+            );
+        }
+    }
     let src = SimGradSource { problem: qadam::sim::StochasticProblem::new(dim, 0.05, 1) };
     let opt = build_sim_opt(m, dim, LrSchedule::Const { alpha });
     let mut w = Worker::new(id, opt, Box::new(src), 7);
@@ -239,6 +309,9 @@ fn cmd_eval(a: &Args) -> Result<()> {
         bus: BusKind::Sequential,
         downlink: Downlink::Full,
         resync_every: 0,
+        chaos: None,
+        straggler: StragglerPolicy::Wait,
+        min_participation: 1,
         seed: a.get("seed", 0u64)?,
         eval_every: 0,
         eval_batches: a.get("eval_batches", 4usize)?,

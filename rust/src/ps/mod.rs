@@ -13,7 +13,10 @@
 //!   contract: `LocalBus` (in-process, sequential, deterministic),
 //!   `ThreadedBus` (in-process, one scoped thread per worker,
 //!   bit-identical to `LocalBus`) and a TCP transport (length-prefixed
-//!   frames) for the real multi-process deployment demo.
+//!   frames) for the real multi-process deployment demo. The contract
+//!   also carries the elastic-round hooks (`membership`, `shutdown`);
+//!   straggler policies and deterministic fault injection live in
+//!   [`crate::elastic`].
 //! * [`protocol`] — the message types + byte accounting.
 
 pub mod protocol;

@@ -111,11 +111,17 @@ impl ToServer {
 /// Cumulative traffic accounting, split by direction.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CommStats {
-    /// Server → workers (weight broadcasts), all workers summed.
+    /// Server → workers (weight broadcasts), summed over the workers
+    /// actually in each round's membership (crashed/evicted workers are
+    /// not shipped — or charged — bytes).
     pub down_bytes: u64,
-    /// Workers → server (deltas), all workers summed.
+    /// Workers → server (deltas), all received replies summed.
     pub up_bytes: u64,
     pub rounds: u64,
+    /// Full-weights resync frames broadcast in delta-downlink mode
+    /// (round 1, the `resync_every` cadence, and forced rejoins). Stays
+    /// 0 in full mode, where every frame is full by definition.
+    pub resyncs: u64,
 }
 
 impl CommStats {
@@ -190,7 +196,7 @@ mod tests {
 
     #[test]
     fn comm_stats_rates() {
-        let s = CommStats { down_bytes: 16_000_000, up_bytes: 8_000_000, rounds: 10 };
+        let s = CommStats { down_bytes: 16_000_000, up_bytes: 8_000_000, rounds: 10, resyncs: 0 };
         assert!((s.up_mb_per_round_per_worker(8) - 0.1).abs() < 1e-9);
         assert!((s.down_mb_per_round_per_worker(8) - 0.2).abs() < 1e-9);
     }

@@ -32,6 +32,7 @@
 //! code and stays bit-identical to the seed behavior.
 
 use super::protocol::{CommStats, ToServer, ToWorker};
+use crate::elastic::Participation;
 use crate::quant::{decode_msg_range, Compressor, ErrorFeedback, Identity, WQuant, WireMsg};
 use crate::util::par::par_tasks;
 use anyhow::{anyhow, Result};
@@ -237,6 +238,9 @@ impl ParameterServer {
                 d.replica.copy_from_slice(&self.qx);
                 d.ef.reset();
                 d.pending_resync = false;
+                // Only delta mode counts resyncs: in full mode every
+                // frame is full and the counter would just echo rounds.
+                self.stats.resyncs += 1;
             }
             let tw = ToWorker::Weights { t: self.t, epoch, msg };
             self.stats.down_bytes += (tw.wire_bytes() * nworkers) as u64;
@@ -309,8 +313,17 @@ impl ParameterServer {
     }
 
     /// Gather + apply one synchronous round of deltas (Alg. 2 lines 3–4).
-    /// Returns the mean training loss reported by the workers.
-    pub fn apply(&mut self, deltas: &[ToServer]) -> Result<f32> {
+    ///
+    /// **Participation semantics** (the elastic-round contract): the
+    /// mean is taken over the *received* replies — `x ← x − mean_i δ`
+    /// averages over `deltas.len()`, not over the deployment size. A
+    /// worker whose reply was dropped (straggler, chaos, dead
+    /// connection) simply does not pull the mean that round; its
+    /// error-feedback residual carries the un-applied mass into its
+    /// next reply (the Theorem 3.1 argument under partial
+    /// participation). The returned [`Participation`] names exactly the
+    /// workers the mean ran over.
+    pub fn apply(&mut self, deltas: &[ToServer]) -> Result<Participation> {
         if deltas.is_empty() {
             return Err(anyhow!("no deltas to apply"));
         }
@@ -367,7 +380,7 @@ impl ParameterServer {
             }
         });
         self.stats.rounds += 1;
-        Ok(mean_loss)
+        Ok(Participation { round: self.t, mean_loss, reporters: ids })
     }
 }
 
@@ -394,13 +407,15 @@ mod tests {
         // two workers send exact powers of two so quantization is exact
         let d1 = delta_msg(&[0.5, 0.5, 1.0, 0.0], 2);
         let d2 = delta_msg(&[1.0, 0.0, 1.0, 0.5], 2);
-        let loss = ps
+        let part = ps
             .apply(&[
                 ToServer::Delta { t: 1, worker: 0, loss: 2.0, msg: d1 },
                 ToServer::Delta { t: 1, worker: 1, loss: 4.0, msg: d2 },
             ])
             .unwrap();
-        assert_eq!(loss, 3.0);
+        assert_eq!(part.mean_loss, 3.0);
+        assert_eq!(part.reporters, vec![0, 1]);
+        assert_eq!(part.round, 1);
         let want = [1.0 - 0.75, 1.0 - 0.25, 0.0, 1.0 - 0.25];
         for (a, b) in ps.master().iter().zip(want) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
@@ -420,6 +435,50 @@ mod tests {
         assert_eq!(ps.master(), &[0.13, -0.13, 0.0, 0.26]);
         // output is quantized
         assert_eq!(ps.output_weights(), &[0.125, -0.125, 0.0, 0.25]);
+    }
+
+    /// The elastic participation semantics: the mean runs over the
+    /// *received* replies, and [`Participation`] reports exactly who
+    /// they came from.
+    #[test]
+    fn participation_is_the_received_set_and_mean_is_over_received() {
+        let mut ps = ParameterServer::new(vec![1.0; 4], None);
+        ps.broadcast(4); // 4 workers expected, 2 report
+        let part = ps
+            .apply(&[
+                ToServer::Delta { t: 1, worker: 3, loss: 1.0, msg: delta_msg(&[1.0, 0.0, 0.0, 0.0], 2) },
+                ToServer::Delta { t: 1, worker: 0, loss: 3.0, msg: delta_msg(&[0.0, 1.0, 0.0, 0.0], 2) },
+            ])
+            .unwrap();
+        // mean over the 2 received replies, not over the 4 expected
+        assert_eq!(part.mean_loss, 2.0);
+        assert_eq!(part.reporters, vec![0, 3], "sorted by worker id");
+        assert_eq!(part.count(), 2);
+        // the applied step divides by the received count too
+        let want = [1.0 - 0.5, 1.0 - 0.5, 1.0, 1.0];
+        for (a, b) in ps.master().iter().zip(want) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    /// In delta mode the resync counter tracks full frames: round 1,
+    /// the cadence, and forced resyncs — full mode leaves it at 0.
+    #[test]
+    fn resync_counter_counts_delta_mode_full_frames() {
+        let mut full = ParameterServer::new(vec![0.5; 8], None);
+        for _ in 0..5 {
+            full.broadcast(1);
+        }
+        assert_eq!(full.stats.resyncs, 0, "full mode does not count resyncs");
+        let mut ps = ParameterServer::new(vec![0.5; 8], None);
+        ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 4);
+        for _ in 0..6 {
+            ps.broadcast(1); // resync frames at t=1 and t=5
+        }
+        assert_eq!(ps.stats.resyncs, 2);
+        ps.force_resync();
+        ps.broadcast(1); // t=7, forced
+        assert_eq!(ps.stats.resyncs, 3);
     }
 
     #[test]

@@ -19,9 +19,11 @@
 //!   `qadam serve --help`).
 
 use super::protocol::{ToServer, ToWorker};
+use crate::elastic::{Membership, StragglerPolicy};
 use anyhow::{anyhow, Context, Result};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------------
 // framing
@@ -66,10 +68,11 @@ pub fn read_frame<R: Read>(stream: &mut R) -> Result<Vec<u8>> {
 /// * replies come back ordered by worker id (gather order never depends
 ///   on scheduling), so the server's mean is summed in a fixed order
 ///   and trajectories are reproducible bit-for-bit across transports;
-/// * a transport may drop replies (fault injection, lost frames) but
-///   must never reorder or duplicate them — [`TcpServer`] rejects
-///   duplicate ids at the gather, and `ParameterServer::apply` enforces
-///   the same invariant server-side;
+/// * a transport may drop replies (chaos injection via
+///   [`crate::elastic::ChaosTransport`], lost frames, evicted
+///   stragglers) but must never reorder or duplicate them —
+///   [`TcpServer`] rejects duplicate ids at the gather, and
+///   `ParameterServer::apply` enforces the same invariant server-side;
 /// * `workers` is the in-process worker set; transports whose workers
 ///   live elsewhere (TCP) ignore it.
 pub trait Transport {
@@ -77,12 +80,21 @@ pub trait Transport {
         -> Result<Vec<ToServer>>;
     /// Short engine name for logs/benches.
     fn name(&self) -> &'static str;
-}
-
-/// Shared fault-injection filter: true if `reply` is scheduled to drop.
-fn drop_reply(drop_deltas: &[(u64, u32)], reply: &ToServer) -> bool {
-    let ToServer::Delta { t, worker, .. } = reply;
-    drop_deltas.iter().any(|&(dt, dw)| dt == *t && dw == *worker)
+    /// Downlink membership of round `next_t`: who will receive the
+    /// broadcast (and is therefore charged `down_bytes`), plus the
+    /// rejoin signal that tells the driver to force a full-weights
+    /// resync. Static in-process fleets are always fully present;
+    /// elastic transports ([`TcpServer`] under rejoin,
+    /// [`crate::elastic::ChaosTransport`] under crash windows)
+    /// override this.
+    fn membership(&mut self, _next_t: u64, total: usize) -> Membership {
+        Membership::full(total)
+    }
+    /// Tell remote workers the run is over. In-process engines have
+    /// nothing to do (the driver owns the workers).
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// The worker id a reply claims (sort key of the deterministic gather).
@@ -96,13 +108,11 @@ fn worker_id(reply: &ToServer) -> u32 {
 // ---------------------------------------------------------------------------
 
 /// Deterministic in-process "network": the trainer broadcasts by calling
-/// each worker in worker-id order and gathers the replies. Kept as a
-/// type so tests/benches can interpose (e.g. drop or reorder messages).
+/// each worker in worker-id order and gathers the replies. Fault
+/// injection lives in [`crate::elastic::ChaosTransport`], which wraps
+/// this bus (or any other) — the bus itself is a faithful wire.
 #[derive(Default)]
-pub struct LocalBus {
-    /// Optional fault injection: drop the delta of worker `w` at step `t`.
-    pub drop_deltas: Vec<(u64, u32)>,
-}
+pub struct LocalBus;
 
 impl LocalBus {
     pub fn round(
@@ -113,9 +123,7 @@ impl LocalBus {
         let mut replies = Vec::with_capacity(workers.len());
         for w in workers.iter_mut() {
             if let Some(reply) = w.handle(broadcast)? {
-                if !drop_reply(&self.drop_deltas, &reply) {
-                    replies.push(reply);
-                }
+                replies.push(reply);
             }
         }
         Ok(replies)
@@ -146,10 +154,7 @@ impl Transport for LocalBus {
 /// the same workers, just `min(nworkers, cores)` times faster on the
 /// worker-compute half of the round.
 #[derive(Default)]
-pub struct ThreadedBus {
-    /// Optional fault injection, same semantics as [`LocalBus`].
-    pub drop_deltas: Vec<(u64, u32)>,
-}
+pub struct ThreadedBus;
 
 impl ThreadedBus {
     pub fn new() -> Self {
@@ -186,9 +191,7 @@ impl ThreadedBus {
         let mut replies = Vec::with_capacity(results.len());
         for r in results {
             if let Some(reply) = r? {
-                if !drop_reply(&self.drop_deltas, &reply) {
-                    replies.push(reply);
-                }
+                replies.push(reply);
             }
         }
         Ok(replies)
@@ -215,8 +218,28 @@ impl Transport for ThreadedBus {
 
 /// Server side of the TCP deployment: accepts `n` workers, then drives
 /// synchronous rounds (broadcast → gather).
+///
+/// **Elastic rounds** ([`TcpServer::set_elastic`]). Under the default
+/// [`StragglerPolicy::Wait`] the round blocks until every connection
+/// replies and any I/O error fails the round — exactly the seed
+/// behavior, bit-identical to it. Under [`StragglerPolicy::Drop`] the
+/// gather runs against the per-round deadline: a worker that misses it
+/// — or whose connection dies mid-round — counts as a dropped reply and
+/// is **evicted** (its socket is closed, so a late reply can never
+/// desynchronize the frame stream), and the round fails only below the
+/// `min_participation` quorum. The listener stays open: an evicted or
+/// freshly started worker reconnects, [`TcpServer::membership`] accepts
+/// it between rounds and reports `rejoined = true`, and the driver
+/// forces a full-weights resync so a delta-downlink replica can never
+/// diverge across the drop/rejoin cycle.
 pub struct TcpServer {
+    listener: TcpListener,
     streams: Vec<TcpStream>,
+    /// Worker slots the deployment was sized for (the rejoin cap).
+    capacity: usize,
+    deadline: Option<Duration>,
+    policy: StragglerPolicy,
+    min_participation: usize,
 }
 
 impl TcpServer {
@@ -230,11 +253,56 @@ impl TcpServer {
             eprintln!("[server] worker {i} connected from {peer}");
             streams.push(s);
         }
-        Ok(Self { streams })
+        // Rejoin polling must never block the round loop.
+        listener.set_nonblocking(true)?;
+        Ok(Self {
+            listener,
+            streams,
+            capacity: nworkers,
+            deadline: None,
+            policy: StragglerPolicy::Wait,
+            min_participation: 1,
+        })
+    }
+
+    /// Configure the elastic round: under [`StragglerPolicy::Drop`] the
+    /// gather stops at `deadline_ms` (`None` = wait for live peers, but
+    /// still drop dead connections) and fails below the
+    /// `min_participation` quorum. [`StragglerPolicy::Wait`] ignores
+    /// both and keeps the seed behavior.
+    pub fn set_elastic(
+        &mut self,
+        deadline_ms: Option<u64>,
+        policy: StragglerPolicy,
+        min_participation: usize,
+    ) {
+        self.deadline = deadline_ms.map(Duration::from_millis);
+        self.policy = policy;
+        self.min_participation = min_participation.max(1);
     }
 
     pub fn nworkers(&self) -> usize {
         self.streams.len()
+    }
+
+    /// Accept any workers waiting to (re)join, up to capacity. Call
+    /// between rounds; when it reports `rejoined`, force a full-weights
+    /// resync before the next broadcast (`ParameterServer::force_resync`)
+    /// — the joiner has no (or a stale) replica.
+    pub fn membership(&mut self) -> Membership {
+        let mut rejoined = false;
+        while self.streams.len() < self.capacity {
+            match self.listener.accept() {
+                Ok((s, peer)) => {
+                    let _ = s.set_nodelay(true);
+                    eprintln!("[server] worker rejoined from {peer}");
+                    self.streams.push(s);
+                    rejoined = true;
+                }
+                Err(_) => break, // WouldBlock: nobody waiting
+            }
+        }
+        Membership { expected: self.capacity, present: self.streams.len(), rejoined }
     }
 
     /// One synchronous round over TCP. Replies are sorted by worker id
@@ -243,23 +311,68 @@ impl TcpServer {
     /// (and hence the server's float summation order) to be independent
     /// of scheduling. Two connections claiming the same worker id are a
     /// deployment error (the mean would double-weight that worker) and
-    /// fail the round.
+    /// fail the round under either policy.
     pub fn round(&mut self, broadcast: &ToWorker) -> Result<Vec<ToServer>> {
         let payload = broadcast.to_bytes();
-        for s in &mut self.streams {
-            write_frame(s, &payload)?;
-        }
-        let mut replies = Vec::with_capacity(self.streams.len());
-        for s in &mut self.streams {
-            let buf = read_frame(s)?;
-            replies.push(ToServer::from_bytes(&buf)?);
-        }
+        let mut replies = match self.policy {
+            StragglerPolicy::Wait => {
+                for s in &mut self.streams {
+                    write_frame(s, &payload)?;
+                }
+                let mut replies = Vec::with_capacity(self.streams.len());
+                for s in &mut self.streams {
+                    let buf = read_frame(s)?;
+                    replies.push(ToServer::from_bytes(&buf)?);
+                }
+                replies
+            }
+            StragglerPolicy::Drop => self.round_drop(&payload)?,
+        };
         replies.sort_by_key(worker_id);
         if let Some(pair) = replies.windows(2).find(|p| worker_id(&p[0]) == worker_id(&p[1])) {
             return Err(anyhow!(
                 "duplicate reply from worker {} (two connections share one id)",
                 worker_id(&pair[0])
             ));
+        }
+        if self.policy == StragglerPolicy::Drop && replies.len() < self.min_participation {
+            return Err(anyhow!(
+                "round below quorum: {} of {} replies, need {}",
+                replies.len(),
+                self.capacity,
+                self.min_participation
+            ));
+        }
+        Ok(replies)
+    }
+
+    /// The drop-policy gather: broadcast to every live connection, read
+    /// replies against the shared deadline, evict anything that fails.
+    fn round_drop(&mut self, payload: &[u8]) -> Result<Vec<ToServer>> {
+        let start = Instant::now();
+        let mut live = Vec::with_capacity(self.streams.len());
+        for mut s in std::mem::take(&mut self.streams) {
+            // A connection we cannot even send to is dead: evict it and
+            // treat its reply as dropped.
+            if write_frame(&mut s, payload).is_ok() {
+                live.push(s);
+            } else {
+                eprintln!("[server] dropping dead connection at broadcast");
+            }
+        }
+        let mut replies = Vec::with_capacity(live.len());
+        for mut s in live {
+            match read_reply(&mut s, self.deadline.map(|d| (start, d))) {
+                Ok(r) => {
+                    replies.push(r);
+                    self.streams.push(s);
+                }
+                // Straggler past the deadline or dead connection: evict.
+                // The socket closes with the drop, so a late reply can
+                // never desync the frame stream; the worker reconnects
+                // and rejoins through the resync path.
+                Err(e) => eprintln!("[server] dropping straggler/dead connection: {e}"),
+            }
         }
         Ok(replies)
     }
@@ -271,6 +384,61 @@ impl TcpServer {
         }
         Ok(())
     }
+}
+
+/// Read one reply frame within the round budget (`None` = block until
+/// the peer replies or dies).
+///
+/// The budget is `(round start, deadline)` and is re-checked before
+/// **every** recv: each syscall's timeout is the *remaining* wall-clock
+/// budget, so a peer trickling one byte per timeout window cannot hold
+/// the round open past the deadline — the total wait is bounded by the
+/// deadline itself, not by `deadline × reads`.
+fn read_reply(s: &mut TcpStream, budget: Option<(Instant, Duration)>) -> Result<ToServer> {
+    if budget.is_none() {
+        s.set_read_timeout(None)?;
+        let buf = read_frame(s)?;
+        return ToServer::from_bytes(&buf);
+    }
+    let arm = |s: &mut TcpStream| -> Result<()> {
+        let (start, d) = budget.expect("budgeted path");
+        let remaining = d.saturating_sub(start.elapsed());
+        if remaining.is_zero() {
+            return Err(anyhow!("round deadline exhausted"));
+        }
+        s.set_read_timeout(Some(remaining))?;
+        Ok(())
+    };
+    let mut len = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < len.len() {
+        arm(s)?;
+        match s.read(&mut len[filled..]) {
+            Ok(0) => return Err(anyhow!("connection closed mid-frame")),
+            Ok(k) => filled += k,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(anyhow!("frame too large: {n}"));
+    }
+    // Grow while reading (same rule as `read_frame`): a lying length
+    // prefix costs us at most what the peer actually sends.
+    let mut buf = Vec::with_capacity(n.min(1 << 20));
+    let mut chunk = [0u8; 64 * 1024];
+    while buf.len() < n {
+        arm(s)?;
+        let want = (n - buf.len()).min(chunk.len());
+        match s.read(&mut chunk[..want]) {
+            Ok(0) => return Err(anyhow!("short frame: {} of {n} bytes", buf.len())),
+            Ok(k) => buf.extend_from_slice(&chunk[..k]),
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    ToServer::from_bytes(&buf)
 }
 
 impl Transport for TcpServer {
@@ -286,6 +454,14 @@ impl Transport for TcpServer {
 
     fn name(&self) -> &'static str {
         "tcp"
+    }
+
+    fn membership(&mut self, _next_t: u64, _total: usize) -> Membership {
+        TcpServer::membership(self)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        TcpServer::shutdown(self)
     }
 }
 
@@ -342,70 +518,9 @@ mod tests {
         assert!(ps.stats.up_bytes > 0 && ps.stats.down_bytes > 0);
     }
 
-    #[test]
-    fn local_bus_fault_injection_drops_delta() {
-        let dim = 8;
-        let mut ps = ParameterServer::new(vec![1.0; dim], None);
-        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
-        let bus = LocalBus { drop_deltas: vec![(1, 1)] };
-        let replies = {
-            let (b, _) = ps.broadcast(3);
-            bus.round(&b, &mut workers).unwrap()
-        };
-        assert_eq!(replies.len(), 2); // worker 1's delta dropped
-        ps.apply(&replies).unwrap(); // PS still makes progress on the rest
-    }
-
-    /// drop_deltas is per-(step, worker): only the scheduled round loses
-    /// the delta, later rounds from the same worker go through, and the
-    /// surviving replies keep worker-id order.
-    #[test]
-    fn local_bus_drop_deltas_is_step_scoped_and_order_preserving() {
-        let dim = 8;
-        let mut ps = ParameterServer::new(vec![1.0; dim], None);
-        let mut workers: Vec<Worker> = (0..4).map(|i| mk_worker(i, dim)).collect();
-        let bus = LocalBus { drop_deltas: vec![(2, 0), (2, 3)] };
-        for t in 1u64..=3 {
-            let replies = {
-                let (b, _) = ps.broadcast(4);
-                bus.round(&b, &mut workers).unwrap()
-            };
-            let ids: Vec<u32> = replies
-                .iter()
-                .map(|r| {
-                    let ToServer::Delta { worker, .. } = r;
-                    *worker
-                })
-                .collect();
-            if t == 2 {
-                assert_eq!(ids, vec![1, 2]); // 0 and 3 dropped this round only
-            } else {
-                assert_eq!(ids, vec![0, 1, 2, 3]);
-            }
-            ps.apply(&replies).unwrap();
-        }
-    }
-
-    #[test]
-    fn threaded_bus_honors_drop_deltas() {
-        let dim = 8;
-        let mut ps = ParameterServer::new(vec![1.0; dim], None);
-        let mut workers: Vec<Worker> = (0..3).map(|i| mk_worker(i, dim)).collect();
-        let bus = ThreadedBus { drop_deltas: vec![(1, 2)] };
-        let replies = {
-            let (b, _) = ps.broadcast(3);
-            bus.round(&b, &mut workers).unwrap()
-        };
-        assert_eq!(replies.len(), 2);
-        let ids: Vec<u32> = replies
-            .iter()
-            .map(|r| {
-                let ToServer::Delta { worker, .. } = r;
-                *worker
-            })
-            .collect();
-        assert_eq!(ids, vec![0, 1]);
-    }
+    // The fault-injection tests that used to live here (scheduled
+    // reply drops on LocalBus/ThreadedBus) moved to
+    // `crate::elastic::chaos`, onto the one `ChaosTransport` mechanism.
 
     /// Acceptance: ThreadedBus (+ sharded server) produces trajectories
     /// bit-identical to LocalBus (+ sequential server) over ≥50 rounds,
@@ -684,5 +799,177 @@ mod tests {
         srv.shutdown().unwrap();
         assert_eq!(h1.join().unwrap(), 3);
         assert_eq!(h2.join().unwrap(), 3);
+    }
+
+    /// A hand-rolled TCP client driving a real [`Worker`]: serves
+    /// `rounds` rounds, then drops the connection (a mid-run death).
+    fn short_lived_client(
+        addr: String,
+        id: u32,
+        dim: usize,
+        rounds: u64,
+    ) -> std::thread::JoinHandle<u64> {
+        std::thread::spawn(move || {
+            let mut stream = loop {
+                match TcpStream::connect(&addr) {
+                    Ok(s) => break s,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            };
+            stream.set_nodelay(true).unwrap();
+            let mut w = mk_worker(id, dim);
+            let mut served = 0u64;
+            while served < rounds {
+                let buf = read_frame(&mut stream).unwrap();
+                let msg = ToWorker::from_bytes(&buf).unwrap();
+                match w.handle(&msg).unwrap() {
+                    None => return served,
+                    Some(reply) => {
+                        write_frame(&mut stream, &reply.to_bytes()).unwrap();
+                        served += 1;
+                    }
+                }
+            }
+            served // the stream drops here: connection dies mid-run
+        })
+    }
+
+    /// Satellite: under `--straggler drop` a worker dying mid-round is a
+    /// dropped reply, not a failed round — the run continues at quorum,
+    /// and `down_bytes` is charged only for the workers actually in each
+    /// round's membership.
+    #[test]
+    fn tcp_drop_policy_survives_mid_round_disconnect() {
+        let dim = 16;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+
+        // Worker 0 serves the whole run; worker 1 dies after two rounds.
+        let addr0 = addr.clone();
+        let h0 = std::thread::spawn(move || {
+            let mut w = mk_worker(0, dim);
+            for _ in 0..100 {
+                match tcp_worker_loop(&addr0, &mut w) {
+                    Ok(r) => return r,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            }
+            panic!("worker 0 never connected");
+        });
+        let h1 = short_lived_client(addr.clone(), 1, dim, 2);
+
+        let mut srv = TcpServer::bind_and_accept(&addr, 2).unwrap();
+        srv.set_elastic(Some(3000), StragglerPolicy::Drop, 1);
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut expected_down = 0u64;
+        for t in 1u64..=6 {
+            let m = srv.membership();
+            let replies = {
+                let (b, _) = ps.broadcast(m.present);
+                expected_down += (b.wire_bytes() * m.present) as u64;
+                srv.round(&b).unwrap()
+            };
+            let part = ps.apply(&replies).unwrap();
+            if t <= 2 {
+                assert_eq!(part.reporters, vec![0, 1], "t={t}");
+            } else {
+                assert_eq!(part.reporters, vec![0], "t={t}: dead worker 1 must be dropped");
+            }
+        }
+        // After the eviction, broadcasts go (and are charged) to one
+        // worker only.
+        assert_eq!(ps.stats.down_bytes, expected_down);
+        assert_eq!(srv.nworkers(), 1);
+        srv.shutdown().unwrap();
+        assert_eq!(h0.join().unwrap(), 6);
+        assert_eq!(h1.join().unwrap(), 2);
+    }
+
+    /// A worker that died and comes back rejoins through
+    /// [`TcpServer::membership`] and is re-anchored by a forced full-
+    /// weights resync — so delta-downlink replicas survive a
+    /// drop/rejoin cycle (the joiner would otherwise fail on its first
+    /// delta frame).
+    #[test]
+    fn tcp_rejoin_after_eviction_gets_resync() {
+        use crate::quant::LogQuant;
+        let dim = 16;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+
+        let addr0 = addr.clone();
+        let h0 = std::thread::spawn(move || {
+            let mut w = mk_worker(0, dim);
+            for _ in 0..100 {
+                match tcp_worker_loop(&addr0, &mut w) {
+                    Ok(r) => return r,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            }
+            panic!("worker 0 never connected");
+        });
+        // First incarnation of worker 1: two rounds, then death.
+        let h1 = short_lived_client(addr.clone(), 1, dim, 2);
+
+        let mut srv = TcpServer::bind_and_accept(&addr, 2).unwrap();
+        srv.set_elastic(Some(3000), StragglerPolicy::Drop, 1);
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 0); // resync: round 1 / forced only
+
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let mut h2 = None;
+        for t in 1u64..=8 {
+            if t == 5 {
+                // Second incarnation of worker 1: a fresh process with
+                // no replica. Wait until its connect has landed so the
+                // rejoin is deterministic.
+                let addr2 = addr.clone();
+                let tx = tx.clone();
+                h2 = Some(std::thread::spawn(move || {
+                    let mut stream = TcpStream::connect(&addr2).unwrap();
+                    stream.set_nodelay(true).unwrap();
+                    tx.send(()).unwrap();
+                    let mut w = mk_worker(1, dim);
+                    let mut served = 0u64;
+                    loop {
+                        let buf = read_frame(&mut stream).unwrap();
+                        let msg = ToWorker::from_bytes(&buf).unwrap();
+                        match w.handle(&msg).unwrap() {
+                            None => return served,
+                            Some(reply) => {
+                                write_frame(&mut stream, &reply.to_bytes()).unwrap();
+                                served += 1;
+                            }
+                        }
+                    }
+                }));
+                rx.recv().unwrap();
+            }
+            let m = srv.membership();
+            if m.rejoined {
+                ps.force_resync();
+            }
+            assert_eq!(m.rejoined, t == 5, "t={t}");
+            let replies = {
+                let (b, _) = ps.broadcast(m.present);
+                match t {
+                    1 | 5 => assert!(matches!(b, ToWorker::Weights { .. }), "t={t}"),
+                    _ => assert!(matches!(b, ToWorker::WeightsDelta { .. }), "t={t}"),
+                }
+                srv.round(&b).unwrap()
+            };
+            let part = ps.apply(&replies).unwrap();
+            match t {
+                1 | 2 => assert_eq!(part.reporters, vec![0, 1], "t={t}"),
+                3 | 4 => assert_eq!(part.reporters, vec![0], "t={t}"),
+                _ => assert_eq!(part.reporters, vec![0, 1], "t={t}: rejoined worker must serve"),
+            }
+        }
+        srv.shutdown().unwrap();
+        assert_eq!(h0.join().unwrap(), 8);
+        assert_eq!(h1.join().unwrap(), 2);
+        assert_eq!(h2.unwrap().join().unwrap(), 4, "rejoined worker serves rounds 5..=8");
     }
 }

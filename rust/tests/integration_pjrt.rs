@@ -243,6 +243,9 @@ fn pjrt_engine_with_delta_downlink_trains_and_cuts_down_bytes() {
         bus: BusKind::Sequential,
         downlink: Downlink::Delta,
         resync_every: 8,
+        chaos: None,
+        straggler: qadam::elastic::StragglerPolicy::Wait,
+        min_participation: 1,
         seed: 0,
         eval_every: 0,
         eval_batches: 2,

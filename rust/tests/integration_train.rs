@@ -3,6 +3,7 @@
 
 use qadam::coordinator::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
 use qadam::coordinator::Trainer;
+use qadam::elastic::{ChaosPlan, FaultKind, ScheduledFault, StragglerPolicy};
 use qadam::models::artifacts_dir;
 use qadam::optim::LrSchedule;
 
@@ -29,6 +30,9 @@ fn base_cfg() -> ExperimentConfig {
         bus: BusKind::Sequential,
         downlink: Downlink::Full,
         resync_every: 64,
+        chaos: None,
+        straggler: StragglerPolicy::Wait,
+        min_participation: 1,
         seed: 0,
         eval_every: 0,
         eval_batches: 2,
@@ -149,6 +153,9 @@ fn lm_model_trains_and_loss_drops() {
         bus: BusKind::Sequential,
         downlink: Downlink::Full,
         resync_every: 64,
+        chaos: None,
+        straggler: StragglerPolicy::Wait,
+        min_participation: 1,
         seed: 0,
         eval_every: 0,
         eval_batches: 1,
@@ -272,6 +279,63 @@ fn resume_at_horizon_yields_final_eval_not_nan() {
     assert!(s.final_acc > 0.0, "restored-at-horizon summary must carry the eval");
     assert!(!tr2.log.rows.is_empty(), "a final eval row must be logged");
     assert_eq!(tr2.log.rows.last().unwrap().t, 20);
+}
+
+/// A deterministic chaos plan (scheduled drops + a crash window) run
+/// end-to-end through the Trainer is bit-reproducible across the
+/// sequential and threaded engines — losses, accuracies, byte
+/// accounting, participation and resync counts all match.
+#[test]
+fn chaos_run_reproducible_across_engines_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.steps = 20;
+    cfg.downlink = Downlink::Delta;
+    cfg.resync_every = 7;
+    cfg.straggler = StragglerPolicy::Drop;
+    cfg.min_participation = 1;
+    let mut plan = ChaosPlan::parse("crash=1@5..9").unwrap();
+    plan.scheduled = (6u64..=8)
+        .map(|t| ScheduledFault { kind: FaultKind::Drop, t, worker: 2 })
+        .collect();
+    cfg.chaos = Some(plan);
+    let mut tr_seq = Trainer::new(cfg.clone()).unwrap();
+    let seq = tr_seq.run().unwrap();
+    cfg.bus = BusKind::Threaded;
+    let mut tr_thr = Trainer::new(cfg).unwrap();
+    let thr = tr_thr.run().unwrap();
+    assert_eq!(seq.final_loss, thr.final_loss);
+    assert_eq!(seq.final_acc, thr.final_acc);
+    assert_eq!(seq.comm_mb_per_iter, thr.comm_mb_per_iter);
+    assert_eq!(seq.down_mb_per_iter, thr.down_mb_per_iter);
+    let rows_seq: Vec<(u64, usize, u64)> =
+        tr_seq.log.rows.iter().map(|r| (r.t, r.participation, r.resyncs)).collect();
+    let rows_thr: Vec<(u64, usize, u64)> =
+        tr_thr.log.rows.iter().map(|r| (r.t, r.participation, r.resyncs)).collect();
+    assert_eq!(rows_seq, rows_thr);
+    // The final round (t=20) has everyone back: 4 reporters.
+    assert_eq!(tr_seq.log.rows.last().unwrap().participation, 4);
+    // Resyncs: t=1, the cadence (t=8, 15), and the forced rejoin at
+    // t=9 (which coincides with no cadence round).
+    assert_eq!(tr_seq.log.rows.last().unwrap().resyncs, 4);
+}
+
+/// A run with a crash window still trains to high accuracy: error
+/// feedback and the mean-over-received semantics absorb the missing
+/// worker (the elastic-rounds motivation).
+#[test]
+fn chaos_crash_window_still_trains() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.straggler = StragglerPolicy::Drop;
+    cfg.chaos = Some(ChaosPlan::parse("crash=3@10..30").unwrap());
+    let mut tr = Trainer::new(cfg).unwrap();
+    let s = tr.run().unwrap();
+    assert!(s.final_acc > 0.85, "acc={}", s.final_acc);
 }
 
 #[test]

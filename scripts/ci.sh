@@ -29,8 +29,25 @@ cargo build --release
 step "cargo clippy --all-targets (-D warnings)"
 cargo clippy --all-targets --quiet -- -D warnings
 
+step "cargo build --release --examples"
+cargo build --release --examples
+
 step "cargo test -q"
 cargo test -q
+
+# Smoke-run the examples so example rot fails CI, not a user's first
+# ten minutes. fedlearn_edge needs no artifacts (sim problem over real
+# TCP, lossy chaos plan on); quickstart needs the PJRT artifacts and is
+# skipped when they are absent.
+step "example smoke: fedlearn_edge (lossy chaos, tiny budget)"
+cargo run --release --example fedlearn_edge -- --devices 2 --steps 40 --dim 512
+
+if [ -f "${QADAM_ARTIFACTS:-artifacts}/manifest.json" ]; then
+    step "example smoke: quickstart"
+    cargo run --release --example quickstart
+else
+    step "example smoke: quickstart (skipped: no artifacts)"
+fi
 
 echo
 echo "ci OK"
