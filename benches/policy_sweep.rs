@@ -1,0 +1,132 @@
+//! Codec-policy sweep: static `k_g` vs the adaptive per-tensor policy
+//! at **equal uplink byte budgets** on the sim problem.
+//!
+//! The static runs fix one global level for the whole run; the adaptive
+//! run spends the same number of uplink bytes, letting the controller
+//! move bits between tensors and rounds (growing where the EF residual
+//! says the codec under-serves, shrinking where it over-serves). The
+//! interesting outputs are loss / ‖∇f‖² *at the same spend*, plus how
+//! many rounds the adaptive budget stretched to.
+//!
+//!   cargo bench --bench policy_sweep
+//!   cargo bench --bench policy_sweep -- --rounds 1 --dim 4096   # CI smoke
+//!
+//! Flags: --rounds N (static-run rounds; default 150), --dim D
+//! (default 32768), --workers W (default 8).
+
+use qadam::optim::{LrSchedule, QAdamEf};
+use qadam::ps::transport::LocalBus;
+use qadam::ps::worker::{SimGradSource, Worker};
+use qadam::ps::ParameterServer;
+use qadam::quant::{CodecPolicy, PolicySpec, TensorLayout};
+use qadam::sim::StochasticProblem;
+use qadam::util::Args;
+use std::time::Instant;
+
+const POLICY_TENSORS: usize = 8;
+
+fn mk_workers(n: usize, dim: usize, spec: Option<PolicySpec>, kg: u32) -> Vec<Worker> {
+    (0..n as u32)
+        .map(|i| {
+            let src = SimGradSource { problem: StochasticProblem::new(dim, 0.05, 3) };
+            let mut opt = QAdamEf::paper_default(dim, kg, LrSchedule::InvSqrt { alpha: 0.05 });
+            if let Some(s) = &spec {
+                let layout = TensorLayout::uniform(dim, POLICY_TENSORS);
+                opt = opt.with_policy(CodecPolicy::new(s.clone(), layout, kg).unwrap());
+            }
+            Worker::new(i, Box::new(opt), Box::new(src), 7)
+        })
+        .collect()
+}
+
+struct SweepResult {
+    label: String,
+    rounds: u64,
+    up_bytes: u64,
+    loss: f32,
+    grad_norm_sq: f32,
+    mean_bits: f64,
+    secs: f64,
+}
+
+/// Run until `budget` uplink bytes are spent (or `max_rounds`), then
+/// report where the trajectory got.
+fn run_budget(
+    label: &str,
+    dim: usize,
+    nworkers: usize,
+    spec: Option<PolicySpec>,
+    kg: u32,
+    budget: Option<u64>,
+    max_rounds: u64,
+) -> SweepResult {
+    let problem = StochasticProblem::new(dim, 0.05, 3);
+    let mut ps = ParameterServer::new(problem.x0(), None);
+    let mut workers = mk_workers(nworkers, dim, spec, kg);
+    let bus = LocalBus::default();
+    let start = Instant::now();
+    let mut rounds = 0u64;
+    while rounds < max_rounds && budget.map(|b| ps.stats.up_bytes < b).unwrap_or(true) {
+        let replies = {
+            let (b, _) = ps.broadcast(nworkers);
+            bus.round(&b, &mut workers).unwrap()
+        };
+        ps.apply(&replies).unwrap();
+        rounds += 1;
+    }
+    let mean_bits =
+        workers[0].policy_bits().unwrap_or_else(|| workers[0].bits_per_element());
+    SweepResult {
+        label: label.into(),
+        rounds,
+        up_bytes: ps.stats.up_bytes,
+        loss: problem.loss(ps.master()),
+        grad_norm_sq: problem.grad_norm_sq(ps.master()),
+        mean_bits,
+        secs: start.elapsed().as_secs_f64(),
+    }
+}
+
+fn main() {
+    let a = Args::parse_env().expect("args");
+    let rounds = a.get("rounds", 150u64).expect("--rounds");
+    let dim = a.get("dim", 1usize << 15).expect("--dim");
+    let nworkers = a.get("workers", 8usize).expect("--workers");
+    a.reject_unknown().expect("flags");
+    println!("== policy_sweep == dim={dim} workers={nworkers} static-rounds={rounds}");
+
+    // Reference spend: static kg=2 (the paper's 3-bit row) for --rounds.
+    let static2 = run_budget("static kg=2", dim, nworkers, None, 2, None, rounds);
+    let budget = static2.up_bytes;
+
+    // Same byte budget, different policies.
+    let static0 =
+        run_budget("static kg=0", dim, nworkers, None, 0, Some(budget), rounds * 4);
+    let adaptive = run_budget(
+        "adaptive:0..4",
+        dim,
+        nworkers,
+        Some(PolicySpec::Adaptive { lo: 0, hi: 4 }),
+        2,
+        Some(budget),
+        rounds * 4,
+    );
+
+    println!(
+        "{:<16} {:>7} {:>12} {:>11} {:>12} {:>10} {:>8}",
+        "policy", "rounds", "up MB", "loss", "|grad|^2", "bits/elem", "secs"
+    );
+    for r in [static2, static0, adaptive] {
+        println!(
+            "{:<16} {:>7} {:>12.3} {:>11.5} {:>12.6} {:>10.2} {:>8.2}",
+            r.label,
+            r.rounds,
+            r.up_bytes as f64 / 1e6,
+            r.loss,
+            r.grad_norm_sq,
+            r.mean_bits,
+            r.secs
+        );
+    }
+    println!("(equal-budget comparison: every row spends ~the static kg=2 uplink bytes)");
+}

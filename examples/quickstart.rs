@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         downlink: Downlink::Full,
         resync_every: 64,
         chaos: None,
+        codec_policy: qadam::quant::PolicySpec::Static,
         straggler: qadam::elastic::StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,

@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         downlink,
         resync_every,
         chaos: None,
+        codec_policy: qadam::quant::PolicySpec::Static,
         straggler: qadam::elastic::StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,

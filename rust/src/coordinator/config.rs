@@ -3,6 +3,8 @@
 
 use crate::elastic::{ChaosPlan, StragglerPolicy};
 use crate::optim::LrSchedule;
+use crate::quant::PolicySpec;
+use anyhow::{bail, Result};
 
 /// Which training method a run uses (rows of Tables 2–3).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -133,6 +135,11 @@ pub struct ExperimentConfig {
     /// Deterministic fault-injection plan (`--chaos`). `None` keeps the
     /// round path untouched and bit-identical to pre-chaos builds.
     pub chaos: Option<ChaosPlan>,
+    /// Per-tensor codec policy for the uplink (and, in delta mode, the
+    /// downlink): `static` keeps the seed single-message path
+    /// byte-identical; `per-layer`/`adaptive` switch to per-tensor
+    /// frames ([`crate::quant::PolicySpec`], `--codec-policy`).
+    pub codec_policy: PolicySpec,
     /// What a round does about stragglers: `Wait` (the seed behavior)
     /// or `Drop` (proceed at quorum).
     pub straggler: StragglerPolicy,
@@ -164,6 +171,7 @@ impl ExperimentConfig {
             downlink: Downlink::default(),
             resync_every: 64,
             chaos: None,
+            codec_policy: PolicySpec::default(),
             straggler: StragglerPolicy::default(),
             min_participation: 1,
             seed: 0,
@@ -194,13 +202,58 @@ impl ExperimentConfig {
             Downlink::Full => String::new(),
             Downlink::Delta => "-ddelta".to_string(),
         };
-        format!("{}-{}{}{}", self.model, self.method.label(), kx, down)
+        let pol = if self.codec_policy.is_static() {
+            String::new()
+        } else {
+            format!("-{}", self.codec_policy.label())
+        };
+        format!("{}-{}{}{}{}", self.model, self.method.label(), kx, down, pol)
+    }
+
+    /// Cross-field sanity, run by `Trainer::new` before anything is
+    /// built — the one place a bad `k_g`/`k_x`/policy combination turns
+    /// into a clear error instead of a mid-run panic (satellite fix:
+    /// `gradient_codec(kg)` used to accept an out-of-range level at
+    /// parse time and blow up inside the codec constructor later).
+    pub fn validate(&self) -> Result<()> {
+        let kg = match self.method {
+            Method::QAdam { kg, .. } => kg,
+            _ => None,
+        };
+        crate::quant::validate_levels(kg, self.kx)?;
+        if !self.codec_policy.is_static() {
+            match self.method {
+                Method::QAdam { kg: Some(_), error_feedback } => {
+                    // The adaptive controller's only input is the EF
+                    // residual; with EF off it reads zero debt forever
+                    // and silently walks every tensor down to `lo`.
+                    if !error_feedback
+                        && matches!(self.codec_policy, PolicySpec::Adaptive { .. })
+                    {
+                        bail!(
+                            "--codec-policy adaptive needs error feedback (drop --no-ef): \
+                             the controller is driven by the EF residual"
+                        );
+                    }
+                }
+                _ => bail!(
+                    "--codec-policy {} needs a k_g-bearing method (qadam with --kg)",
+                    self.codec_policy.label()
+                ),
+            }
+            if self.engine == Engine::PjrtKernel {
+                bail!("--codec-policy is native-engine only (the AOT kernel bakes in one k_g)");
+            }
+            self.codec_policy.validate()?;
+        }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{MAX_KG, MAX_KX};
 
     #[test]
     fn defaults_are_consistent() {
@@ -240,6 +293,45 @@ mod tests {
         assert_eq!(BusKind::parse("sequential"), Some(BusKind::Sequential));
         assert_eq!(BusKind::parse("thr"), Some(BusKind::Threaded));
         assert_eq!(BusKind::parse("threadd"), None); // typos error, never fall back
+    }
+
+    #[test]
+    fn codec_policy_defaults_and_validation() {
+        let mut c = ExperimentConfig::table3_default();
+        assert!(c.codec_policy.is_static());
+        c.validate().unwrap();
+        // satellite fix: out-of-range kg is a clear parse-time error,
+        // not a mid-run panic inside the codec constructor
+        c.method = Method::QAdam { kg: Some(MAX_KG + 1), error_feedback: true };
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        c.method = Method::QAdam { kg: Some(2), error_feedback: true };
+        c.kx = Some(MAX_KX + 1);
+        assert!(c.validate().is_err());
+        c.kx = None;
+        // non-static policy needs a kg-bearing native method
+        c.codec_policy = PolicySpec::Adaptive { lo: 0, hi: 4 };
+        c.validate().unwrap();
+        assert_eq!(c.run_label(), "vgg_sim-qadam-kg2-adaptive0..4");
+        c.method = Method::TernGrad;
+        assert!(c.validate().is_err());
+        c.method = Method::QAdam { kg: None, error_feedback: true };
+        assert!(c.validate().is_err());
+        c.method = Method::QAdam { kg: Some(2), error_feedback: true };
+        c.engine = Engine::PjrtKernel;
+        assert!(c.validate().is_err());
+        c.engine = Engine::Native;
+        // adaptive without EF has no signal: the controller would read
+        // zero debt forever and silently collapse to the band floor
+        c.method = Method::QAdam { kg: Some(2), error_feedback: false };
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("error feedback"), "{err}");
+        // …but a *fixed* per-layer policy is fine without EF
+        c.codec_policy = PolicySpec::parse("per-layer:*=1").unwrap();
+        c.validate().unwrap();
+        c.method = Method::QAdam { kg: Some(2), error_feedback: true };
+        c.codec_policy = PolicySpec::Adaptive { lo: 5, hi: 1 };
+        assert!(c.validate().is_err());
     }
 
     #[test]

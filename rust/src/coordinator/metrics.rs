@@ -21,6 +21,9 @@ pub struct Row {
     pub participation: usize,
     /// Cumulative full-weights resync frames (delta-downlink mode).
     pub resyncs: u64,
+    /// Mean uplink code bits/element the codec policy chose this round
+    /// (the static codec's analytic bits when no policy is installed).
+    pub policy_bits: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -54,12 +57,12 @@ impl MetricsLog {
             .with_context(|| format!("creating {}", path.display()))?;
         writeln!(
             f,
-            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs"
+            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs,policy_bits"
         )?;
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{},{},{}",
+                "{},{},{},{},{:.6},{:.6},{},{},{},{:.3}",
                 r.t,
                 r.epoch,
                 r.train_loss,
@@ -68,7 +71,8 @@ impl MetricsLog {
                 r.down_mb_per_round,
                 r.residual_norm,
                 r.participation,
-                r.resyncs
+                r.resyncs,
+                r.policy_bits
             )?;
         }
         Ok(())
@@ -92,6 +96,7 @@ mod tests {
             residual_norm: 0.01,
             participation: 7,
             resyncs: 2,
+            policy_bits: 2.75,
         });
         let dir = std::env::temp_dir().join("qadam_metrics_test");
         let p = dir.join("m.csv");
@@ -99,9 +104,9 @@ mod tests {
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("t,epoch,"));
         let header = s.lines().next().unwrap();
-        assert!(header.ends_with("participation,resyncs"));
+        assert!(header.ends_with("participation,resyncs,policy_bits"));
         assert_eq!(s.lines().count(), 2);
-        assert!(s.lines().nth(1).unwrap().ends_with(",7,2"));
+        assert!(s.lines().nth(1).unwrap().ends_with(",7,2,2.750"));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -119,6 +124,7 @@ mod tests {
                 residual_norm: 0.0,
                 participation: 1,
                 resyncs: 0,
+                policy_bits: 3.0,
             });
         }
         assert_eq!(log.best_acc(), Some(0.5));

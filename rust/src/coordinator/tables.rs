@@ -87,6 +87,7 @@ pub fn run_table(which: &str, steps: u64, workers: usize, outdir: &str) -> Resul
             downlink: super::config::Downlink::default(),
             resync_every: 64,
             chaos: None,
+            codec_policy: crate::quant::PolicySpec::Static,
             straggler: crate::elastic::StragglerPolicy::Wait,
             min_participation: 1,
             seed: 0,

@@ -10,6 +10,7 @@ use crate::optim::{BlockwiseSgdEf, LrSchedule, QAdamEf, TernGradSgd, WorkerOpt};
 use crate::ps::transport::{LocalBus, ThreadedBus, Transport};
 use crate::ps::worker::{ModelGradSource, Worker};
 use crate::ps::ParameterServer;
+use crate::quant::{CodecPolicy, TensorLayout};
 use crate::runtime::kernel::PjrtQAdam;
 use crate::runtime::{KernelQAdam, ModelRuntime, Runtime};
 use anyhow::{anyhow, Result};
@@ -75,6 +76,7 @@ fn make_opt(
     cfg: &ExperimentConfig,
     dim: usize,
     kernel: Option<&Arc<KernelQAdam>>,
+    policy: Option<CodecPolicy>,
 ) -> Result<Box<dyn WorkerOpt>> {
     Ok(match cfg.method {
         Method::QAdam { kg, error_feedback } => match (kg, cfg.engine) {
@@ -85,15 +87,21 @@ fn make_opt(
                 }
                 Box::new(PjrtQAdam::new(kernel.clone(), dim, k, cfg.lr))
             }
-            (Some(k), Engine::Native) => Box::new(QAdamEf::new(
-                dim,
-                crate::quant::gradient_codec(Some(k)),
-                error_feedback,
-                cfg.lr,
-                crate::optim::ThetaSchedule::Const { theta: crate::defaults::THETA },
-                crate::defaults::BETA,
-                crate::defaults::EPS,
-            )),
+            (Some(k), Engine::Native) => {
+                let mut opt = QAdamEf::new(
+                    dim,
+                    crate::quant::gradient_codec(Some(k)),
+                    error_feedback,
+                    cfg.lr,
+                    crate::optim::ThetaSchedule::Const { theta: crate::defaults::THETA },
+                    crate::defaults::BETA,
+                    crate::defaults::EPS,
+                );
+                if let Some(p) = policy {
+                    opt = opt.with_policy(p);
+                }
+                Box::new(opt)
+            }
             (None, _) => Box::new(QAdamEf::full_precision(dim, cfg.lr)),
         },
         Method::TernGrad => Box::new(TernGradSgd::new(dim, terngrad_lr(cfg.lr))),
@@ -101,6 +109,24 @@ fn make_opt(
             Box::new(BlockwiseSgdEf::new(dim, momentum, block, sgd_lr(cfg.lr)))
         }
     })
+}
+
+/// Bind the config's codec-policy spec to the model layout — one fresh
+/// instance per endpoint (each worker, plus the delta downlink), since
+/// every endpoint runs its own controller over its own EF state.
+/// `None` for `static`: the caller then keeps the policy-free path,
+/// which stays byte-identical to pre-policy builds.
+fn make_policy(cfg: &ExperimentConfig, layout: &TensorLayout) -> Result<Option<CodecPolicy>> {
+    if cfg.codec_policy.is_static() {
+        return Ok(None);
+    }
+    let kg = match cfg.method {
+        Method::QAdam { kg: Some(k), .. } => k,
+        // `ExperimentConfig::validate` rejects this combination before
+        // any policy is built.
+        _ => return Err(anyhow!("codec policy needs a k_g-bearing method")),
+    };
+    Ok(Some(CodecPolicy::new(cfg.codec_policy.clone(), layout.clone(), kg)?))
 }
 
 /// The paper tunes baseline SGD-family LRs separately (its grid:
@@ -124,6 +150,7 @@ fn terngrad_lr(lr: LrSchedule) -> LrSchedule {
 
 impl Trainer {
     pub fn new(mut cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
         let artifacts = artifacts_dir();
         let manifest = Manifest::load(&artifacts)?;
         let rt = Runtime::cpu()?;
@@ -190,6 +217,11 @@ impl Trainer {
             crate::ps::server::DEFAULT_BLOCK,
             ps_threads,
         );
+        // The named parameter blocks of the flat vector — the
+        // granularity the codec policy decides at.
+        let layout = TensorLayout::from_named(
+            &model.meta.params.iter().map(|p| (p.name.clone(), p.size())).collect::<Vec<_>>(),
+        );
         if cfg.downlink == Downlink::Delta {
             // The downlink reuses the gradient codec family: the method's
             // kg level when it has one, fp32 Identity otherwise.
@@ -204,10 +236,15 @@ impl Trainer {
                 );
             }
             ps.enable_delta_downlink(crate::quant::gradient_codec(kg), cfg.resync_every);
+            // Non-static policy: the server runs its own controller over
+            // the same layout, and delta frames carry per-tensor codecs.
+            if let Some(p) = make_policy(&cfg, &layout)? {
+                ps.set_downlink_policy(p);
+            }
         }
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
-            let opt = make_opt(&cfg, dim, kernel.as_ref())?;
+            let opt = make_opt(&cfg, dim, kernel.as_ref(), make_policy(&cfg, &layout)?)?;
             let src = ModelGradSource { model: model.clone(), data: data.clone(), batch: cfg.batch };
             workers.push(Worker::new(i as u32, opt, Box::new(src), cfg.seed ^ 0x5a5a));
         }
@@ -264,6 +301,9 @@ impl Trainer {
                     residual_norm: self.workers[0].residual_norm(),
                     participation: part.count(),
                     resyncs: s.resyncs,
+                    policy_bits: self.workers[0]
+                        .policy_bits()
+                        .unwrap_or_else(|| self.workers[0].bits_per_element()),
                 });
                 eprintln!(
                     "[{}] t={t} epoch={epoch} loss={last_loss:.4} acc={:.2}%",
@@ -299,6 +339,9 @@ impl Trainer {
                 residual_norm: self.workers[0].residual_norm(),
                 participation: 0, // no round ran: this row is a pure eval
                 resyncs: s.resyncs,
+                policy_bits: self.workers[0]
+                    .policy_bits()
+                    .unwrap_or_else(|| self.workers[0].bits_per_element()),
             });
             eprintln!(
                 "[{}] t={t} (restored at horizon) loss={last_loss:.4} acc={:.2}%",

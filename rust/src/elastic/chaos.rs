@@ -284,17 +284,15 @@ impl ChaosTransport {
             crate::quant::seeded_rng(self.plan.seed ^ CORRUPT_BIT_SALT, (t << 20) ^ worker as u64);
         let bit = (rng.next_u64() as usize) % (bytes.len() * 8);
         bytes[bit / 8] ^= 1 << (bit % 8);
-        let ToServer::Delta { msg: orig_msg, .. } = reply;
         match ToServer::from_bytes(&bytes) {
-            Ok(parsed) => {
-                let ToServer::Delta { t: pt, worker: pw, msg: pm, .. } = &parsed;
-                if *pt == t && *pw == worker && pm.n == orig_msg.n {
-                    Some(parsed)
-                } else {
-                    None
-                }
+            Ok(parsed)
+                if parsed.round() == t
+                    && parsed.worker() == worker
+                    && parsed.payload_n() == reply.payload_n() =>
+            {
+                Some(parsed)
             }
-            Err(_) => None,
+            _ => None,
         }
     }
 }
@@ -306,7 +304,9 @@ impl Transport for ChaosTransport {
         workers: &mut [Worker],
     ) -> Result<Vec<ToServer>> {
         let t = match broadcast {
-            ToWorker::Weights { t, .. } | ToWorker::WeightsDelta { t, .. } => *t,
+            ToWorker::Weights { t, .. }
+            | ToWorker::WeightsDelta { t, .. }
+            | ToWorker::WeightsDeltaParts { t, .. } => *t,
             ToWorker::Shutdown => return self.inner.round(broadcast, workers),
         };
         if self.plan.is_empty() {
@@ -334,10 +334,7 @@ impl Transport for ChaosTransport {
         // Reply-level faults, in the deterministic gather order.
         let mut out = Vec::with_capacity(replies.len());
         for reply in replies {
-            let (rt, rw) = {
-                let ToServer::Delta { t, worker, .. } = &reply;
-                (*t, *worker)
-            };
+            let (rt, rw) = (reply.round(), reply.worker());
             if self.plan.drops(rt, rw) {
                 self.stats.dropped += 1;
                 continue;
@@ -424,13 +421,7 @@ mod tests {
     }
 
     fn reply_ids(replies: &[ToServer]) -> Vec<u32> {
-        replies
-            .iter()
-            .map(|r| {
-                let ToServer::Delta { worker, .. } = r;
-                *worker
-            })
-            .collect()
+        replies.iter().map(|r| r.worker()).collect()
     }
 
     #[test]
@@ -771,9 +762,8 @@ mod tests {
                         // delivered frames carry intact round/worker/dim
                         // metadata — a flip there drops the frame instead
                         for r in &replies {
-                            let ToServer::Delta { t, msg, .. } = r;
-                            assert_eq!(*t, ps.step());
-                            assert_eq!(msg.n, dim);
+                            assert_eq!(r.round(), ps.step());
+                            assert_eq!(r.payload_n(), dim);
                         }
                         ids.push(reply_ids(&replies));
                         ps.apply(&replies).unwrap();

@@ -19,7 +19,13 @@ use qadam::coordinator::{ExperimentConfig, Method, Trainer};
 use qadam::elastic::{ChaosPlan, ChaosTransport, StragglerPolicy};
 use qadam::models::{artifacts_dir, Manifest};
 use qadam::optim::LrSchedule;
+use qadam::quant::{CodecPolicy, PolicySpec, TensorLayout};
 use qadam::util::Args;
+
+/// Tensor granularity the sim CLIs (`serve` / `worker`) give the codec
+/// policy: the flat sim vector has no named parameters, so it is split
+/// into this many uniform blocks on both ends of the wire.
+const SIM_POLICY_TENSORS: usize = 4;
 
 const USAGE: &str = "\
 qadam — Quantized Adam with Error Feedback (paper reproduction)
@@ -43,6 +49,12 @@ train flags:
                         feedback, resync every --resync-every rounds)
   --resync-every N      full-weights resync cadence in delta mode
                         (default 64; 0 = only round 1)
+  --codec-policy P      per-tensor gradient-codec policy:
+                        static (default; the seed single-message path)
+                        | per-layer:<name=k,...> (fixed per-tensor k_g;
+                          exact names, prefix* globs, * catch-all)
+                        | adaptive:<lo>..<hi> (bits tuned per tensor and
+                          round from the EF residual / gradient ratio)
   --chaos SPEC          deterministic fault injection, e.g.
                         \"seed=7,drop=0.1,delay=0.05,crash=3@40..80\"
                         (keys: seed|drop|delay|dup|corrupt|crash)
@@ -66,13 +78,18 @@ eval flags:
 serve flags:  --addr A --workers N --dim D --steps N [--kx K] [--kg K]
               [--downlink D] [--resync-every N] [--round-deadline-ms MS]
               [--straggler P] [--min-participation N] [--chaos SPEC]
+              [--codec-policy P]  (applies to the delta downlink)
 worker flags: --addr A --id I --dim D --method M [--kg K] [--alpha A]
-              [--downlink D]  (match the server; used for diagnostics)
+              [--downlink D] [--codec-policy P]  (match the server)
 ";
 
 fn parse_method(a: &Args) -> Result<(Method, Option<u32>, Engine)> {
     let kg: Option<u32> = a.opt("kg")?;
     let kx: Option<u32> = a.opt("kx")?;
+    // Validate the levels where they are parsed (the satellite fix):
+    // `LogQuant::new` / `WQuant::new` would only panic deep inside the
+    // run otherwise.
+    qadam::quant::validate_levels(kg, kx)?;
     let method = match a.get_str("method", "qadam").as_str() {
         "qadam" => Method::QAdam { kg, error_feedback: !a.flag("no_ef") },
         "terngrad" => Method::TernGrad,
@@ -98,6 +115,10 @@ fn parse_downlink(a: &Args) -> Result<(Downlink, u64)> {
     Ok((d, a.get("resync_every", 64u64)?))
 }
 
+fn parse_policy(a: &Args) -> Result<PolicySpec> {
+    PolicySpec::parse(&a.get_str("codec_policy", "static"))
+}
+
 /// The elastic-round flags shared by `train` and `serve`:
 /// `(chaos plan, straggler policy, quorum)`.
 fn parse_elastic(a: &Args) -> Result<(Option<ChaosPlan>, StragglerPolicy, usize)> {
@@ -111,18 +132,50 @@ fn parse_elastic(a: &Args) -> Result<(Option<ChaosPlan>, StragglerPolicy, usize)
     Ok((chaos, straggler, a.get("min_participation", 1usize)?))
 }
 
-fn build_sim_opt(m: Method, dim: usize, lr: LrSchedule) -> Box<dyn qadam::optim::WorkerOpt> {
+/// Bind a non-static policy spec to the sim layout (`None` for static
+/// or methods without a `k_g` — callers error/warn as appropriate).
+fn sim_policy(spec: &PolicySpec, m: Method, dim: usize) -> Result<Option<CodecPolicy>> {
+    if spec.is_static() {
+        return Ok(None);
+    }
+    let kg = match m {
+        Method::QAdam { kg: Some(k), error_feedback } => {
+            // the adaptive controller reads the EF residual; without EF
+            // it sees zero debt forever and collapses to the band floor
+            if !error_feedback && matches!(spec, PolicySpec::Adaptive { .. }) {
+                bail!("--codec-policy adaptive needs error feedback (drop --no-ef)");
+            }
+            k
+        }
+        _ => bail!("--codec-policy {} needs a k_g-bearing method (--kg)", spec.label()),
+    };
+    let layout = TensorLayout::uniform(dim, SIM_POLICY_TENSORS);
+    Ok(Some(CodecPolicy::new(spec.clone(), layout, kg)?))
+}
+
+fn build_sim_opt(
+    m: Method,
+    dim: usize,
+    lr: LrSchedule,
+    policy: Option<CodecPolicy>,
+) -> Box<dyn qadam::optim::WorkerOpt> {
     use qadam::optim::{BlockwiseSgdEf, QAdamEf, TernGradSgd};
     match m {
-        Method::QAdam { kg: Some(k), error_feedback } => Box::new(QAdamEf::new(
-            dim,
-            qadam::quant::gradient_codec(Some(k)),
-            error_feedback,
-            lr,
-            qadam::optim::ThetaSchedule::Const { theta: qadam::defaults::THETA },
-            qadam::defaults::BETA,
-            qadam::defaults::EPS,
-        )),
+        Method::QAdam { kg: Some(k), error_feedback } => {
+            let mut opt = QAdamEf::new(
+                dim,
+                qadam::quant::gradient_codec(Some(k)),
+                error_feedback,
+                lr,
+                qadam::optim::ThetaSchedule::Const { theta: qadam::defaults::THETA },
+                qadam::defaults::BETA,
+                qadam::defaults::EPS,
+            );
+            if let Some(p) = policy {
+                opt = opt.with_policy(p);
+            }
+            Box::new(opt)
+        }
         Method::QAdam { kg: None, .. } => Box::new(QAdamEf::full_precision(dim, lr)),
         Method::TernGrad => Box::new(TernGradSgd::new(dim, lr)),
         Method::Blockwise { block, momentum } => Box::new(BlockwiseSgdEf::new(dim, momentum, block, lr)),
@@ -133,6 +186,7 @@ fn cmd_train(a: &Args) -> Result<()> {
     let (method, kx, engine) = parse_method(a)?;
     let (downlink, resync_every) = parse_downlink(a)?;
     let (chaos, straggler, min_participation) = parse_elastic(a)?;
+    let codec_policy = parse_policy(a)?;
     let cfg = ExperimentConfig {
         model: a.get_str("model", "vgg_sim"),
         dataset: a.get_str("dataset", "cifar10_sim"),
@@ -148,6 +202,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         downlink,
         resync_every,
         chaos,
+        codec_policy,
         straggler,
         min_participation,
         seed: a.get("seed", 0u64)?,
@@ -188,8 +243,10 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let steps = a.get("steps", 200u64)?;
     let kx: Option<u32> = a.opt("kx")?;
     let kg: Option<u32> = a.opt("kg")?;
+    qadam::quant::validate_levels(kg, kx)?;
     let (downlink, resync_every) = parse_downlink(a)?;
     let (chaos, straggler, min_participation) = parse_elastic(a)?;
+    let codec_policy = parse_policy(a)?;
     let deadline_ms: Option<u64> = a.opt("round_deadline_ms")?;
     a.reject_unknown()?;
     // Chaos (if any) wraps the TCP transport: reply-level faults apply
@@ -221,6 +278,16 @@ fn cmd_serve(a: &Args) -> Result<()> {
             );
         }
         ps.enable_delta_downlink(qadam::quant::gradient_codec(kg), resync_every);
+        let method = Method::QAdam { kg, error_feedback: true };
+        if let Some(p) = sim_policy(&codec_policy, method, dim)? {
+            ps.set_downlink_policy(p);
+        }
+    } else if !codec_policy.is_static() {
+        eprintln!(
+            "[server] --codec-policy {} affects only worker uplinks and the delta \
+             downlink; with --downlink full the broadcast stays full frames",
+            codec_policy.label()
+        );
     }
     for t in 1..=steps {
         let m = bus.membership(t, workers);
@@ -267,6 +334,7 @@ fn cmd_worker(a: &Args) -> Result<()> {
     // diagnosable from either end: the server already warns when delta
     // frames will ship fp32, and so do we.
     let (downlink, _resync_every) = parse_downlink(a)?;
+    let codec_policy = parse_policy(a)?;
     a.reject_unknown()?;
     if downlink == Downlink::Delta {
         let kg = match m {
@@ -281,7 +349,7 @@ fn cmd_worker(a: &Args) -> Result<()> {
         }
     }
     let src = SimGradSource { problem: qadam::sim::StochasticProblem::new(dim, 0.05, 1) };
-    let opt = build_sim_opt(m, dim, LrSchedule::Const { alpha });
+    let opt = build_sim_opt(m, dim, LrSchedule::Const { alpha }, sim_policy(&codec_policy, m, dim)?);
     let mut w = Worker::new(id, opt, Box::new(src), 7);
     let rounds = tcp_worker_loop(&addr, &mut w)?;
     println!("[worker {id}] served {rounds} rounds ({})", w.opt_name());
@@ -310,6 +378,7 @@ fn cmd_eval(a: &Args) -> Result<()> {
         downlink: Downlink::Full,
         resync_every: 0,
         chaos: None,
+        codec_policy: PolicySpec::Static,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
         seed: a.get("seed", 0u64)?,

@@ -2,24 +2,38 @@
 
 use super::adam::{AdamState, Momentum};
 use super::schedule::{LrSchedule, ThetaSchedule};
-use crate::quant::{Blockwise, Compressor, ErrorFeedback, Identity, LogQuant, TernGrad, WireMsg};
+use crate::quant::{
+    Blockwise, CodecPolicy, Compressor, DeltaMsg, ErrorFeedback, Identity, LogQuant, TernGrad,
+};
 use crate::util::DetRng;
 
 /// One worker's optimizer: consumes the local stochastic gradient at the
-/// broadcast weights and emits the compressed update message. The
+/// broadcast weights and emits the compressed update payload — a single
+/// message on the static codec path (byte-identical to pre-policy
+/// builds), one message per layout tensor under a codec policy. The
 /// server applies `x <- x - mean_i decode(msg_i)`.
 ///
 /// `Send` so a whole [`crate::ps::Worker`] can run on its own
 /// [`crate::ps::transport::ThreadedBus`] thread.
 pub trait WorkerOpt: Send {
     /// `t` is the 1-based global iteration; `epoch` drives ExpDecay.
-    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg;
+    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> DeltaMsg;
     fn name(&self) -> String;
     /// Analytic uplink bits per model element (Comm column formula).
     fn bits_per_element(&self) -> f64;
     /// Residual norm (0 when EF is off) — for diagnostics.
     fn residual_norm(&self) -> f32 {
         0.0
+    }
+    /// Mean code bits/element the codec policy currently chooses (None
+    /// on the static path).
+    fn policy_bits(&self) -> Option<f64> {
+        None
+    }
+    /// Per-tensor levels the codec policy currently chooses (None on
+    /// the static path) — parity tests compare these across engines.
+    fn chosen_bits(&self) -> Option<Vec<u32>> {
+        None
     }
     /// Checkpointable optimizer state (m, v, e), when the optimizer has
     /// one (QAdam family). Baselines return None (cold resume).
@@ -40,6 +54,11 @@ pub struct QAdamEf {
     state: AdamState,
     ef: ErrorFeedback,
     comp: Box<dyn Compressor>,
+    /// Per-tensor codec policy (None = the static single-message path,
+    /// byte-identical to pre-policy builds). Each worker owns its own
+    /// instance: decisions are driven by its own EF state and never
+    /// cross the wire except as per-part codec headers.
+    policy: Option<CodecPolicy>,
     pub lr: LrSchedule,
     pub theta: ThetaSchedule,
     pub beta: f32,
@@ -61,12 +80,29 @@ impl QAdamEf {
             state: AdamState::new(dim),
             ef: ErrorFeedback::new(dim, ef_enabled),
             comp,
+            policy: None,
             lr,
             theta,
             beta,
             eps,
             dir: vec![0.0; dim],
         }
+    }
+
+    /// Install a per-tensor codec policy (builder style). A static spec
+    /// installs nothing — the single-message path stays byte-identical,
+    /// asserted in `rust/tests/policy_parity.rs`. The policy layout dim
+    /// must equal the model dim.
+    pub fn with_policy(mut self, policy: CodecPolicy) -> Self {
+        assert_eq!(
+            policy.layout().dim(),
+            self.dir.len(),
+            "policy layout dim != model dim"
+        );
+        if !policy.spec().is_static() {
+            self.policy = Some(policy);
+        }
+        self
     }
 
     /// Paper defaults: LogQuant(kg), EF on, β=0.99, θ=0.999, ε=1e-5.
@@ -97,26 +133,62 @@ impl QAdamEf {
 }
 
 impl WorkerOpt for QAdamEf {
-    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg {
+    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> DeltaMsg {
         let alpha = self.lr.at(t, epoch);
         let theta = self.theta.at(t);
         let mut dir = std::mem::take(&mut self.dir);
         self.state.step_into(grad, alpha, self.beta, theta, self.eps, &mut dir);
-        let msg = self.ef.compress(&dir, self.comp.as_ref(), rng);
+        let out = match self.policy.as_mut() {
+            None => DeltaMsg::Single(self.ef.compress(&dir, self.comp.as_ref(), rng)),
+            Some(policy) => {
+                // Decide the per-tensor levels from the debt the last
+                // round's codec left behind, then run the range-EF step
+                // one tensor at a time (each part gets its own ∞-norm
+                // scale and codec header).
+                policy.decide(t, &dir, self.ef.residual());
+                let mut parts = Vec::with_capacity(policy.layout().tensors().len());
+                for (i, ts) in policy.layout().tensors().iter().enumerate() {
+                    let comp = LogQuant::new(policy.bits()[i]);
+                    parts.push(self.ef.compress_range(&dir, ts.start, ts.len, &comp, rng));
+                }
+                DeltaMsg::Parts(parts)
+            }
+        };
         self.dir = dir;
-        msg
+        out
     }
 
     fn name(&self) -> String {
-        format!("qadam[{}{}]", self.comp.name(), if self.ef.enabled() { "+ef" } else { "" })
+        match &self.policy {
+            Some(p) => format!(
+                "qadam[{}{}+{}]",
+                self.comp.name(),
+                if self.ef.enabled() { "+ef" } else { "" },
+                p.spec().label()
+            ),
+            None => {
+                format!("qadam[{}{}]", self.comp.name(), if self.ef.enabled() { "+ef" } else { "" })
+            }
+        }
     }
 
     fn bits_per_element(&self) -> f64 {
-        self.comp.bits_per_element()
+        match &self.policy {
+            Some(p) => p.mean_code_bits(),
+            None => self.comp.bits_per_element(),
+        }
     }
 
     fn residual_norm(&self) -> f32 {
         self.ef.residual_norm()
+    }
+
+    fn policy_bits(&self) -> Option<f64> {
+        self.policy.as_ref().map(|p| p.mean_code_bits())
+    }
+
+    fn chosen_bits(&self) -> Option<Vec<u32>> {
+        self.policy.as_ref().map(|p| p.bits().to_vec())
     }
 
     fn state(&self) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
@@ -149,12 +221,12 @@ impl TernGradSgd {
 }
 
 impl WorkerOpt for TernGradSgd {
-    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg {
+    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> DeltaMsg {
         let lr = self.lr.at(t, epoch);
         for (s, &g) in self.scaled.iter_mut().zip(grad) {
             *s = lr * g;
         }
-        self.comp.compress_into(&self.scaled, &mut self.q, rng)
+        DeltaMsg::Single(self.comp.compress_into(&self.scaled, &mut self.q, rng))
     }
 
     fn name(&self) -> String {
@@ -193,13 +265,13 @@ impl BlockwiseSgdEf {
 }
 
 impl WorkerOpt for BlockwiseSgdEf {
-    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> WireMsg {
+    fn step(&mut self, grad: &[f32], t: u64, epoch: u64, rng: &mut DetRng) -> DeltaMsg {
         let lr = self.lr.at(t, epoch);
         let mut dir = std::mem::take(&mut self.dir);
         self.mom.step_into(grad, lr, &mut dir);
         let msg = self.ef.compress(&dir, &self.comp, rng);
         self.dir = dir;
-        msg
+        DeltaMsg::Single(msg)
     }
 
     fn name(&self) -> String {
@@ -234,7 +306,7 @@ mod tests {
             let g = quad_grad(&x);
             let msg = opt.step(&g, t, 0, &mut rng);
             let mut delta = vec![0.0; dim];
-            crate::quant::decode_msg(&msg, &mut delta);
+            msg.decode(&mut delta);
             for (xi, d) in x.iter_mut().zip(&delta) {
                 *xi -= d;
             }
@@ -271,6 +343,49 @@ mod tests {
         let opt = BlockwiseSgdEf::new(16, 0.9, 8, LrSchedule::InvSqrt { alpha: 0.05 });
         let d = run_opt(Box::new(opt), 800);
         assert!(d < 0.3, "dist={d}");
+    }
+
+    /// The adaptive policy path still converges on the quadratic (the
+    /// controller moves bits, never the semantics), reports its chosen
+    /// levels, and a static-spec policy is a byte-identical no-op.
+    #[test]
+    fn qadam_policy_paths() {
+        use crate::quant::{CodecPolicy, PolicySpec, TensorLayout};
+        let dim = 16;
+        let layout = TensorLayout::uniform(dim, 4);
+        let mk = |spec: PolicySpec| -> QAdamEf {
+            QAdamEf::paper_default(dim, 2, LrSchedule::InvSqrt { alpha: 0.3 })
+                .with_policy(CodecPolicy::new(spec, layout.clone(), 2).unwrap())
+        };
+        // adaptive: converges, stays in band, reports parts
+        let mut opt = mk(PolicySpec::Adaptive { lo: 0, hi: 4 });
+        assert!(opt.chosen_bits().is_some());
+        let d = run_opt(Box::new(mk(PolicySpec::Adaptive { lo: 0, hi: 4 })), 800);
+        assert!(d < 0.3, "dist={d}");
+        let mut rng = seeded_rng(0, 0);
+        let origin = vec![0.0f32; dim];
+        let msg = opt.step(&quad_grad(&origin), 1, 0, &mut rng);
+        assert!(matches!(&msg, crate::quant::DeltaMsg::Parts(p) if p.len() == 4));
+        assert!(opt.chosen_bits().unwrap().iter().all(|&b| b <= 4));
+        assert!(opt.policy_bits().unwrap() >= 2.0, "code bits of kg>=0 are >= 2");
+        // static spec: bit-identical to no policy at all
+        let mut plain = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.1 });
+        let mut static_pol = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.1 })
+            .with_policy(CodecPolicy::new(PolicySpec::Static, layout, 2).unwrap());
+        assert!(static_pol.chosen_bits().is_none());
+        let mut rng_a = seeded_rng(1, 1);
+        let mut rng_b = seeded_rng(1, 1);
+        for t in 1..=20 {
+            let g: Vec<f32> = (0..dim).map(|i| ((t as f32 + i as f32) * 0.3).sin()).collect();
+            let a = plain.step(&g, t, 0, &mut rng_a);
+            let b = static_pol.step(&g, t, 0, &mut rng_b);
+            match (a, b) {
+                (crate::quant::DeltaMsg::Single(ma), crate::quant::DeltaMsg::Single(mb)) => {
+                    assert_eq!(ma.to_bytes(), mb.to_bytes(), "t={t}");
+                }
+                other => panic!("static path must stay single-message: {other:?}"),
+            }
+        }
     }
 
     #[test]

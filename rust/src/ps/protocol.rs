@@ -1,7 +1,30 @@
 //! PS ⇄ worker message types, wire framing and byte accounting.
+//!
+//! **Wire version.** [`WIRE_VERSION`] names the frame layout; the
+//! golden-fixture suite (`rust/tests/wire_golden.rs`) pins every frame
+//! byte-for-byte against it, so any layout change fails loudly there
+//! until the version is bumped and the fixtures regenerated. Version 2
+//! (the codec-policy release) added a tag byte to `ToServer` frames and
+//! the parts frame kinds (`ToServer::DeltaParts`,
+//! [`ToWorker::WeightsDeltaParts`]) that carry one `WireMsg` — and
+//! hence one codec header — per layout tensor.
 
-use crate::quant::WireMsg;
+use crate::quant::{decode_msg_range, decode_parts_range, WireMsg};
 use anyhow::{anyhow, Result};
+
+/// Frame-layout version, asserted by the golden-fixture suite. Bump it
+/// in lockstep with any byte-layout change to the messages below (or to
+/// `WireMsg::to_bytes`), and regenerate the fixtures.
+pub const WIRE_VERSION: u32 = 2;
+
+/// Accounting charge for a parts frame's own structure: its tag byte +
+/// the `nparts:u32` list header. (The v1 frame kinds keep the legacy
+/// convention — tag uncharged — so static-path accounting stays
+/// bit-identical to pre-policy builds; the new kinds charge their full
+/// in-frame layout.)
+const PARTS_OVERHEAD: usize = 1 + 4;
+/// Accounting charge per part (its `len:u32` prefix).
+const PART_OVERHEAD: usize = 4;
 
 /// Server → worker.
 #[derive(Clone, Debug)]
@@ -14,13 +37,22 @@ pub enum ToWorker {
     /// mode): `msg = Q_g(x_t − x̂_{t−1} + e_server)`. Workers **add**
     /// the decode to their replica.
     WeightsDelta { t: u64, epoch: u64, msg: WireMsg },
+    /// [`Self::WeightsDelta`] under a non-static codec policy: one part
+    /// per layout tensor, laid out back to back, each carrying its own
+    /// codec id and bit-width. Workers **add** the decode.
+    WeightsDeltaParts { t: u64, epoch: u64, parts: Vec<WireMsg> },
     Shutdown,
 }
 
 /// Worker → server.
 #[derive(Clone, Debug)]
 pub enum ToServer {
+    /// One compressed update covering the whole vector (the static
+    /// codec path).
     Delta { t: u64, worker: u32, loss: f32, msg: WireMsg },
+    /// Per-tensor update of a codec-policy round: part `i` covers the
+    /// `i`-th layout tensor, with its own codec header.
+    DeltaParts { t: u64, worker: u32, loss: f32, parts: Vec<WireMsg> },
 }
 
 impl ToWorker {
@@ -30,6 +62,13 @@ impl ToWorker {
             ToWorker::Weights { msg, .. } | ToWorker::WeightsDelta { msg, .. } => {
                 16 + msg.wire_bytes()
             }
+            // per-part codec headers AND the parts framing (nparts +
+            // per-part length prefixes) are real in-frame traffic —
+            // both are charged, so the parts path never under-reports
+            // against the single-message path
+            ToWorker::WeightsDeltaParts { parts, .. } => {
+                16 + PARTS_OVERHEAD + parts.iter().map(|m| PART_OVERHEAD + m.wire_bytes()).sum::<usize>()
+            }
             ToWorker::Shutdown => 1,
         }
     }
@@ -38,6 +77,14 @@ impl ToWorker {
         match self {
             ToWorker::Weights { t, epoch, msg } => frame_bytes(1, *t, *epoch, msg),
             ToWorker::WeightsDelta { t, epoch, msg } => frame_bytes(2, *t, *epoch, msg),
+            ToWorker::WeightsDeltaParts { t, epoch, parts } => {
+                let mut out = Vec::with_capacity(21);
+                out.push(3u8);
+                out.extend_from_slice(&t.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+                parts_to_bytes(&mut out, parts);
+                out
+            }
             ToWorker::Shutdown => vec![0u8],
         }
     }
@@ -45,17 +92,16 @@ impl ToWorker {
     pub fn from_bytes(b: &[u8]) -> Result<Self> {
         match b.first() {
             Some(0) => Ok(ToWorker::Shutdown),
-            Some(&(tag @ (1 | 2))) => {
+            Some(&(tag @ (1 | 2 | 3))) => {
                 if b.len() < 17 {
                     return Err(anyhow!("short weights frame"));
                 }
                 let t = u64::from_le_bytes(b[1..9].try_into().unwrap());
                 let epoch = u64::from_le_bytes(b[9..17].try_into().unwrap());
-                let msg = WireMsg::from_bytes(&b[17..])?;
-                Ok(if tag == 1 {
-                    ToWorker::Weights { t, epoch, msg }
-                } else {
-                    ToWorker::WeightsDelta { t, epoch, msg }
+                Ok(match tag {
+                    1 => ToWorker::Weights { t, epoch, msg: WireMsg::from_bytes(&b[17..])? },
+                    2 => ToWorker::WeightsDelta { t, epoch, msg: WireMsg::from_bytes(&b[17..])? },
+                    _ => ToWorker::WeightsDeltaParts { t, epoch, parts: parts_from_bytes(&b[17..])? },
                 })
             }
             _ => Err(anyhow!("bad ToWorker tag")),
@@ -63,7 +109,8 @@ impl ToWorker {
     }
 }
 
-/// `tag | t | epoch | WireMsg` — shared by both weights-frame kinds.
+/// `tag | t | epoch | WireMsg` — shared by both single-message
+/// weights-frame kinds.
 fn frame_bytes(tag: u8, t: u64, epoch: u64, msg: &WireMsg) -> Vec<u8> {
     let body = msg.to_bytes();
     let mut out = Vec::with_capacity(17 + body.len());
@@ -74,11 +121,96 @@ fn frame_bytes(tag: u8, t: u64, epoch: u64, msg: &WireMsg) -> Vec<u8> {
     out
 }
 
+/// `nparts:u32 | (len:u32 | WireMsg)*` — the parts payload shared by
+/// the uplink and downlink parts frames.
+fn parts_to_bytes(out: &mut Vec<u8>, parts: &[WireMsg]) {
+    out.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+    for p in parts {
+        let body = p.to_bytes();
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+    }
+}
+
+/// Inverse of [`parts_to_bytes`]; consumes `b` exactly (trailing bytes
+/// are a framing error) and never trusts a length prefix past the
+/// buffer.
+fn parts_from_bytes(b: &[u8]) -> Result<Vec<WireMsg>> {
+    if b.len() < 4 {
+        return Err(anyhow!("short parts frame"));
+    }
+    let nparts = u32::from_le_bytes(b[0..4].try_into().unwrap()) as usize;
+    if nparts == 0 {
+        return Err(anyhow!("parts frame with zero parts"));
+    }
+    let mut off = 4usize;
+    let mut parts = Vec::new();
+    for i in 0..nparts {
+        if off + 4 > b.len() {
+            return Err(anyhow!("parts frame truncated at part {i}"));
+        }
+        let len = u32::from_le_bytes(b[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        if len > b.len() - off {
+            return Err(anyhow!("part {i} length {len} overruns the frame"));
+        }
+        parts.push(WireMsg::from_bytes(&b[off..off + len])?);
+        off += len;
+    }
+    if off != b.len() {
+        return Err(anyhow!("parts frame has {} trailing bytes", b.len() - off));
+    }
+    Ok(parts)
+}
+
 impl ToServer {
+    /// The round this reply belongs to.
+    pub fn round(&self) -> u64 {
+        match self {
+            ToServer::Delta { t, .. } | ToServer::DeltaParts { t, .. } => *t,
+        }
+    }
+
+    /// The worker id this reply claims.
+    pub fn worker(&self) -> u32 {
+        match self {
+            ToServer::Delta { worker, .. } | ToServer::DeltaParts { worker, .. } => *worker,
+        }
+    }
+
+    pub fn loss(&self) -> f32 {
+        match self {
+            ToServer::Delta { loss, .. } | ToServer::DeltaParts { loss, .. } => *loss,
+        }
+    }
+
+    /// Total element count of the compressed payload (what must match
+    /// the model dimension).
+    pub fn payload_n(&self) -> usize {
+        match self {
+            ToServer::Delta { msg, .. } => msg.n,
+            ToServer::DeltaParts { parts, .. } => parts.iter().map(|m| m.n).sum(),
+        }
+    }
+
+    /// Decode payload elements `[start, start + out.len())` — the
+    /// block-parallel decode entry point of the sharded server, codec-
+    /// policy rounds included. Bit-identical to slicing a full decode.
+    pub fn decode_range(&self, start: usize, out: &mut [f32]) {
+        match self {
+            ToServer::Delta { msg, .. } => decode_msg_range(msg, start, out),
+            ToServer::DeltaParts { parts, .. } => decode_parts_range(parts, start, out),
+        }
+    }
+
     pub fn wire_bytes(&self) -> usize {
         match self {
             // t(8) + worker(4) + loss(4) + payload
             ToServer::Delta { msg, .. } => 16 + msg.wire_bytes(),
+            // parts framing charged like the downlink (see ToWorker)
+            ToServer::DeltaParts { parts, .. } => {
+                16 + PARTS_OVERHEAD + parts.iter().map(|m| PART_OVERHEAD + m.wire_bytes()).sum::<usize>()
+            }
         }
     }
 
@@ -86,30 +218,44 @@ impl ToServer {
         match self {
             ToServer::Delta { t, worker, loss, msg } => {
                 let body = msg.to_bytes();
-                let mut out = Vec::with_capacity(16 + body.len());
+                let mut out = Vec::with_capacity(17 + body.len());
+                out.push(0u8);
                 out.extend_from_slice(&t.to_le_bytes());
                 out.extend_from_slice(&worker.to_le_bytes());
                 out.extend_from_slice(&loss.to_le_bytes());
                 out.extend_from_slice(&body);
                 out
             }
+            ToServer::DeltaParts { t, worker, loss, parts } => {
+                let mut out = Vec::with_capacity(21);
+                out.push(1u8);
+                out.extend_from_slice(&t.to_le_bytes());
+                out.extend_from_slice(&worker.to_le_bytes());
+                out.extend_from_slice(&loss.to_le_bytes());
+                parts_to_bytes(&mut out, parts);
+                out
+            }
         }
     }
 
     pub fn from_bytes(b: &[u8]) -> Result<Self> {
-        if b.len() < 16 {
+        if b.len() < 17 {
             return Err(anyhow!("short Delta frame"));
         }
-        let t = u64::from_le_bytes(b[0..8].try_into().unwrap());
-        let worker = u32::from_le_bytes(b[8..12].try_into().unwrap());
-        let loss = f32::from_le_bytes(b[12..16].try_into().unwrap());
-        let msg = WireMsg::from_bytes(&b[16..])?;
-        Ok(ToServer::Delta { t, worker, loss, msg })
+        let tag = b[0];
+        let t = u64::from_le_bytes(b[1..9].try_into().unwrap());
+        let worker = u32::from_le_bytes(b[9..13].try_into().unwrap());
+        let loss = f32::from_le_bytes(b[13..17].try_into().unwrap());
+        match tag {
+            0 => Ok(ToServer::Delta { t, worker, loss, msg: WireMsg::from_bytes(&b[17..])? }),
+            1 => Ok(ToServer::DeltaParts { t, worker, loss, parts: parts_from_bytes(&b[17..])? }),
+            other => Err(anyhow!("bad ToServer tag {other}")),
+        }
     }
 }
 
 /// Cumulative traffic accounting, split by direction.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     /// Server → workers (weight broadcasts), summed over the workers
     /// actually in each round's membership (crashed/evicted workers are
@@ -143,12 +289,24 @@ impl CommStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{seeded_rng, Compressor, LogQuant};
+    use crate::quant::{decode_msg, seeded_rng, Compressor, LogQuant};
 
     fn sample_msg() -> WireMsg {
         let u: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 7.0).collect();
         let mut q = vec![0.0; 100];
         LogQuant::new(2).compress_into(&u, &mut q, &mut seeded_rng(0, 0))
+    }
+
+    fn sample_parts() -> Vec<WireMsg> {
+        let mut rng = seeded_rng(0, 0);
+        [(40usize, 2u32), (60, 0)]
+            .iter()
+            .map(|&(n, kg)| {
+                let u: Vec<f32> = (0..n).map(|i| (i as f32 - 20.0) / 9.0).collect();
+                let mut q = vec![0.0; n];
+                LogQuant::new(kg).compress_into(&u, &mut q, &mut rng)
+            })
+            .collect()
     }
 
     #[test]
@@ -186,12 +344,104 @@ mod tests {
     }
 
     #[test]
+    fn weights_delta_parts_roundtrip_and_accounting() {
+        let parts = sample_parts();
+        let m = ToWorker::WeightsDeltaParts { t: 5, epoch: 2, parts: parts.clone() };
+        assert_eq!(
+            m.wire_bytes(),
+            16 + 5 + parts.iter().map(|p| 4 + p.wire_bytes()).sum::<usize>(),
+            "per-part headers and the full parts framing (tag + nparts + len prefixes) are charged"
+        );
+        let b = m.to_bytes();
+        assert_eq!(b[0], 3, "parts frames carry tag 3");
+        match ToWorker::from_bytes(&b).unwrap() {
+            ToWorker::WeightsDeltaParts { t, epoch, parts: back } => {
+                assert_eq!((t, epoch), (5, 2));
+                assert_eq!(back.len(), 2);
+                assert_eq!(back[0].n, 40);
+                assert_eq!(back[1].n, 60);
+                // the parts decode to exactly what went in
+                for (a, b) in back.iter().zip(&parts) {
+                    let mut da = vec![0.0; a.n];
+                    let mut db = vec![0.0; b.n];
+                    decode_msg(a, &mut da);
+                    decode_msg(b, &mut db);
+                    assert_eq!(da, db);
+                }
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // truncation anywhere fails cleanly, never panics
+        for cut in [0, 5, 17, 20, b.len() - 1] {
+            assert!(ToWorker::from_bytes(&b[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
     fn toserver_roundtrip() {
         let m = ToServer::Delta { t: 7, worker: 5, loss: 1.25, msg: sample_msg() };
         let b = m.to_bytes();
-        let ToServer::Delta { t, worker, loss, msg } = ToServer::from_bytes(&b).unwrap();
-        assert_eq!((t, worker, loss), (7, 5, 1.25));
-        assert_eq!(msg.n, 100);
+        assert_eq!(b[0], 0, "single-message replies carry tag 0");
+        match ToServer::from_bytes(&b).unwrap() {
+            ToServer::Delta { t, worker, loss, msg } => {
+                assert_eq!((t, worker, loss), (7, 5, 1.25));
+                assert_eq!(msg.n, 100);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        assert!(ToServer::from_bytes(&[7; 16]).is_err(), "short frame");
+        let mut bad = b.clone();
+        bad[0] = 9;
+        assert!(ToServer::from_bytes(&bad).is_err(), "unknown tag");
+    }
+
+    #[test]
+    fn toserver_parts_roundtrip_and_accessors() {
+        let parts = sample_parts();
+        let m = ToServer::DeltaParts { t: 3, worker: 1, loss: 0.5, parts: parts.clone() };
+        assert_eq!(m.round(), 3);
+        assert_eq!(m.worker(), 1);
+        assert_eq!(m.loss(), 0.5);
+        assert_eq!(m.payload_n(), 100);
+        assert_eq!(
+            m.wire_bytes(),
+            16 + 5 + parts.iter().map(|p| 4 + p.wire_bytes()).sum::<usize>()
+        );
+        let b = m.to_bytes();
+        assert_eq!(b[0], 1, "parts replies carry tag 1");
+        let back = ToServer::from_bytes(&b).unwrap();
+        assert!(matches!(back, ToServer::DeltaParts { .. }));
+        assert_eq!(back.payload_n(), 100);
+        // range decode across the part seam equals the full decode
+        let mut full = vec![0.0; 100];
+        let mut expect = vec![0.0; 100];
+        back.decode_range(0, &mut full);
+        decode_msg(&parts[0], &mut expect[..40]);
+        decode_msg(&parts[1], &mut expect[40..]);
+        assert_eq!(full, expect);
+        let mut seam = vec![0.0; 20];
+        back.decode_range(30, &mut seam);
+        assert_eq!(seam, full[30..50]);
+    }
+
+    #[test]
+    fn parts_frame_rejects_malformed_payloads() {
+        let parts = sample_parts();
+        let m = ToServer::DeltaParts { t: 1, worker: 0, loss: 0.0, parts };
+        let good = m.to_bytes();
+        // zero parts
+        let mut b = good[..17].to_vec();
+        b.extend_from_slice(&0u32.to_le_bytes());
+        assert!(ToServer::from_bytes(&b).is_err());
+        // lying part length (overruns the frame)
+        let mut b = good.clone();
+        b[21] = 0xff;
+        b[22] = 0xff;
+        assert!(ToServer::from_bytes(&b).is_err());
+        // trailing garbage after the last part
+        let mut b = good.clone();
+        b.push(0);
+        assert!(ToServer::from_bytes(&b).is_err());
     }
 
     #[test]

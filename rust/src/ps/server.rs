@@ -33,7 +33,7 @@
 
 use super::protocol::{CommStats, ToServer, ToWorker};
 use crate::elastic::Participation;
-use crate::quant::{decode_msg_range, Compressor, ErrorFeedback, Identity, WQuant, WireMsg};
+use crate::quant::{CodecPolicy, Compressor, ErrorFeedback, Identity, LogQuant, WQuant, WireMsg};
 use crate::util::par::par_tasks;
 use anyhow::{anyhow, Result};
 
@@ -62,7 +62,8 @@ pub struct ParameterServer {
 
 /// Server-side state of the compressed (weight-delta) downlink.
 struct DeltaDownlink {
-    /// Gradient-family codec compressing the broadcast delta.
+    /// Gradient-family codec compressing the broadcast delta (the
+    /// static path; unused while a non-static `policy` is installed).
     comp: Box<dyn Compressor>,
     /// Full-resync cadence in rounds (0 = only round 1 / forced).
     resync_every: u64,
@@ -76,6 +77,12 @@ struct DeltaDownlink {
     /// Next broadcast must be a full resync frame (set after restores
     /// that carry no downlink state).
     pending_resync: bool,
+    /// Per-tensor codec policy for the delta frames (None = the static
+    /// single-message path, byte-identical to pre-policy builds). The
+    /// server runs its own controller instance over *its* EF state —
+    /// policy state never crosses the wire, only the per-part codec
+    /// headers do.
+    policy: Option<CodecPolicy>,
 }
 
 impl ParameterServer {
@@ -121,7 +128,40 @@ impl ParameterServer {
             ef: ErrorFeedback::new(dim, true),
             dir: vec![0.0; dim],
             pending_resync: false,
+            policy: None,
         });
+    }
+
+    /// Install a per-tensor codec policy on the delta downlink: delta
+    /// frames become [`ToWorker::WeightsDeltaParts`] (one codec header
+    /// per layout tensor), with the adaptive controller — when the spec
+    /// is adaptive — driven by the *server's* EF residual against the
+    /// broadcast direction. A static spec is a no-op: the single-message
+    /// path stays byte-identical. Must be called before round 1, after
+    /// [`Self::enable_delta_downlink`].
+    pub fn set_downlink_policy(&mut self, policy: CodecPolicy) {
+        assert_eq!(self.t, 0, "downlink policy must be chosen before round 1");
+        let d = self.down.as_mut().expect("downlink policy requires delta mode");
+        assert_eq!(
+            policy.layout().dim(),
+            d.replica.len(),
+            "policy layout dim != model dim"
+        );
+        if !policy.spec().is_static() {
+            d.policy = Some(policy);
+        }
+    }
+
+    /// Mean code bits/element the downlink policy currently chooses
+    /// (None without a non-static policy) — what the metrics CSV logs.
+    pub fn downlink_bits(&self) -> Option<f64> {
+        self.down.as_ref().and_then(|d| d.policy.as_ref()).map(|p| p.mean_code_bits())
+    }
+
+    /// Per-tensor levels the downlink policy currently chooses (parity
+    /// tests compare these across engines).
+    pub fn downlink_chosen_bits(&self) -> Option<Vec<u32>> {
+        self.down.as_ref().and_then(|d| d.policy.as_ref()).map(|p| p.bits().to_vec())
     }
 
     /// `(replica x̂, server EF residual)` when the delta downlink is on.
@@ -265,16 +305,44 @@ impl ParameterServer {
         // bit-pack; rng is only consumed by stochastic codecs and is
         // deterministic in the round.
         let mut rng = crate::quant::seeded_rng(0x00d0_0b17, self.t);
-        let (msg, q) = down.ef.compress_q(&down.dir, down.comp.as_ref(), &mut rng);
-        // x̂ ← x̂ + decode(msg): the bit-exact mirror of what every
-        // worker applies (codec decode identity).
-        let tasks: Vec<(usize, &mut [f32])> = blocks(&mut down.replica, self.block);
-        par_tasks(self.threads, tasks, |(start, rc)| {
-            for (j, r) in rc.iter_mut().enumerate() {
-                *r += q[start + j];
+        let tw = if down.policy.is_some() {
+            // Codec-policy frame: decide the per-tensor levels from the
+            // server's own EF state, then run the range-EF step one
+            // tensor at a time — each part gets its own scale and codec
+            // header — advancing x̂ per range (decode identity per
+            // range, so x̂ still mirrors every worker bit-exactly).
+            let policy = down.policy.as_mut().expect("checked above");
+            policy.decide(self.t, &down.dir, down.ef.residual());
+            let mut parts = Vec::with_capacity(policy.layout().tensors().len());
+            for (i, ts) in policy.layout().tensors().iter().enumerate() {
+                let comp = LogQuant::new(policy.bits()[i]);
+                let (msg, q) =
+                    down.ef.compress_range_q(&down.dir, ts.start, ts.len, &comp, &mut rng);
+                // x̂ ← x̂ + decode(msg) over this tensor's range,
+                // block-parallel like the static path (per-coordinate
+                // adds: identical bytes for any (block, threads)).
+                let repl = &mut down.replica[ts.start..ts.start + ts.len];
+                let tasks: Vec<(usize, &mut [f32])> = blocks(repl, self.block);
+                par_tasks(self.threads, tasks, |(start, rc)| {
+                    for (j, r) in rc.iter_mut().enumerate() {
+                        *r += q[start + j];
+                    }
+                });
+                parts.push(msg);
             }
-        });
-        let tw = ToWorker::WeightsDelta { t: self.t, epoch, msg };
+            ToWorker::WeightsDeltaParts { t: self.t, epoch, parts }
+        } else {
+            let (msg, q) = down.ef.compress_q(&down.dir, down.comp.as_ref(), &mut rng);
+            // x̂ ← x̂ + decode(msg): the bit-exact mirror of what every
+            // worker applies (codec decode identity).
+            let tasks: Vec<(usize, &mut [f32])> = blocks(&mut down.replica, self.block);
+            par_tasks(self.threads, tasks, |(start, rc)| {
+                for (j, r) in rc.iter_mut().enumerate() {
+                    *r += q[start + j];
+                }
+            });
+            ToWorker::WeightsDelta { t: self.t, epoch, msg }
+        };
         self.stats.down_bytes += (tw.wire_bytes() * nworkers) as u64;
         let down = self.down.as_ref().expect("delta frame requires delta mode");
         (tw, &down.replica)
@@ -329,25 +397,25 @@ impl ParameterServer {
         }
         // Validate everything first, so a rejected round is fully
         // side-effect-free: no weight movement, no accounting drift.
+        // Replies may mix the single-message and per-tensor frame kinds
+        // (and, within parts, any codec per tensor): validation and
+        // decode go through the `ToServer` payload accessors.
         for d in deltas {
-            let ToServer::Delta { t, msg, .. } = d;
-            if *t != self.t {
-                return Err(anyhow!("stale delta for t={t}, server at {}", self.t));
+            if d.round() != self.t {
+                return Err(anyhow!("stale delta for t={}, server at {}", d.round(), self.t));
             }
-            if msg.n != self.x.len() {
-                return Err(anyhow!("delta dim {} != model dim {}", msg.n, self.x.len()));
+            if d.payload_n() != self.x.len() {
+                return Err(anyhow!(
+                    "delta dim {} != model dim {}",
+                    d.payload_n(),
+                    self.x.len()
+                ));
             }
         }
         // The Transport contract forbids duplicate replies, but a buggy
         // transport (or a misconfigured worker id) would otherwise
         // silently double-weight that worker in the mean — enforce it.
-        let mut ids: Vec<u32> = deltas
-            .iter()
-            .map(|d| {
-                let ToServer::Delta { worker, .. } = d;
-                *worker
-            })
-            .collect();
+        let mut ids: Vec<u32> = deltas.iter().map(|d| d.worker()).collect();
         ids.sort_unstable();
         if let Some(dup) = ids.windows(2).find(|p| p[0] == p[1]) {
             return Err(anyhow!("duplicate delta from worker {} in round {}", dup[0], self.t));
@@ -355,8 +423,7 @@ impl ParameterServer {
         let n = deltas.len() as f32;
         let mut mean_loss = 0.0f32;
         for d in deltas {
-            let ToServer::Delta { loss, .. } = d;
-            mean_loss += loss / n;
+            mean_loss += d.loss() / n;
             self.stats.up_bytes += d.wire_bytes() as u64;
         }
         // Block-parallel decode + average + apply. Per coordinate the
@@ -369,8 +436,7 @@ impl ParameterServer {
             let mut scratch = vec![0.0f32; len];
             let mut acc = vec![0.0f32; len];
             for d in deltas {
-                let ToServer::Delta { msg, .. } = d;
-                decode_msg_range(msg, start, &mut scratch);
+                d.decode_range(start, &mut scratch);
                 for (a, &s) in acc.iter_mut().zip(&scratch) {
                     *a += s;
                 }
@@ -625,7 +691,7 @@ mod tests {
                             *wi += d;
                         }
                     }
-                    ToWorker::Shutdown => panic!("unexpected shutdown"),
+                    other => panic!("unexpected frame {other:?}"),
                 }
                 let (replica, _res) = seq.downlink_state().unwrap();
                 assert_eq!(w.as_slice(), replica, "kx={kx:?} t={t}: replica != worker decode");
@@ -711,6 +777,129 @@ mod tests {
             }
             other => panic!("expected a resync frame, got {other:?}"),
         }
+    }
+
+    /// Mixed-frame rounds: single-message and per-tensor replies (with
+    /// different codecs per tensor) average together, block-parallel,
+    /// bit-identical to the sequential pass.
+    #[test]
+    fn apply_mixes_single_and_parts_replies_bit_identically() {
+        use crate::quant::TernGrad;
+        let dim = 233;
+        let mk_x0 = || (0..dim).map(|i| 0.2 * ((i as f32) * 0.31).sin()).collect::<Vec<f32>>();
+        let deltas_for = |t: u64| -> Vec<ToServer> {
+            let mut rng = seeded_rng(7, t);
+            let mut q = vec![0.0; dim];
+            let u = |w: u32| -> Vec<f32> {
+                (0..dim).map(|i| 0.01 * ((i as f32 + w as f32 * 3.7 + t as f32).cos())).collect()
+            };
+            // worker 0: classic single-message reply
+            let m0 = LogQuant::new(2).compress_into(&u(0), &mut q, &mut rng);
+            // worker 1: per-tensor reply, mixed codecs and a ragged split
+            let u1 = u(1);
+            let p0 = LogQuant::new(0).compress_into(&u1[..100], &mut q[..100], &mut rng);
+            let p1 = LogQuant::new(4).compress_into(&u1[100..170], &mut q[100..170], &mut rng);
+            let p2 = TernGrad.compress_into(&u1[170..], &mut q[170..], &mut rng);
+            vec![
+                ToServer::Delta { t, worker: 0, loss: 1.0, msg: m0 },
+                ToServer::DeltaParts { t, worker: 1, loss: 2.0, parts: vec![p0, p1, p2] },
+            ]
+        };
+        let mut seq = ParameterServer::new(mk_x0(), None);
+        let mut shard = ParameterServer::with_shards(mk_x0(), None, 13, 4);
+        for t in 1u64..=10 {
+            seq.broadcast(2);
+            seq.apply(&deltas_for(t)).unwrap();
+            shard.broadcast(2);
+            shard.apply(&deltas_for(t)).unwrap();
+            assert_eq!(seq.master(), shard.master(), "t={t}");
+        }
+        assert_eq!(seq.stats.up_bytes, shard.stats.up_bytes);
+        // a parts reply with the wrong total dim is rejected cleanly
+        let mut rng = seeded_rng(0, 0);
+        let mut q = vec![0.0; 10];
+        let short = LogQuant::new(2).compress_into(&[0.1; 10], &mut q, &mut rng);
+        seq.broadcast(1);
+        let bad = ToServer::DeltaParts { t: seq.step(), worker: 0, loss: 0.0, parts: vec![short] };
+        let err = seq.apply(&[bad]).unwrap_err();
+        assert!(err.to_string().contains("delta dim"), "{err}");
+    }
+
+    /// Codec-policy delta downlink: parts frames carry one codec header
+    /// per tensor, the replica still mirrors a frame-driven worker
+    /// decode bit-exactly across resyncs, and a static-spec policy
+    /// leaves the single-message frames byte-identical.
+    #[test]
+    fn policy_downlink_parts_frames_track_replica() {
+        use crate::quant::{decode_parts, PolicySpec, TensorLayout};
+        let dim = 96;
+        let layout = TensorLayout::uniform(dim, 3);
+        let x0: Vec<f32> = (0..dim).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
+        let deltas_for = |t: u64| -> Vec<ToServer> {
+            let mut rng = seeded_rng(3, t);
+            let mut q = vec![0.0; dim];
+            (0..2u32)
+                .map(|w| {
+                    let u: Vec<f32> = (0..dim)
+                        .map(|i| 0.05 * ((i as f32 + w as f32 * 3.7 + t as f32).cos()))
+                        .collect();
+                    let msg = LogQuant::new(2).compress_into(&u, &mut q, &mut rng);
+                    ToServer::Delta { t, worker: w, loss: 1.0, msg }
+                })
+                .collect()
+        };
+        let mut ps = ParameterServer::new(x0.clone(), Some(6));
+        ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 5);
+        let policy =
+            CodecPolicy::new(PolicySpec::Adaptive { lo: 0, hi: 4 }, layout.clone(), 2).unwrap();
+        ps.set_downlink_policy(policy);
+        assert!(ps.downlink_bits().is_some());
+        // frame-driven worker replica
+        let mut w = vec![0.0f32; dim];
+        let mut scratch = vec![0.0f32; dim];
+        for t in 1u64..=12 {
+            let (b, _) = ps.broadcast(2);
+            match &b {
+                ToWorker::Weights { msg, .. } => {
+                    assert!(t == 1 || (t - 1) % 5 == 0, "unexpected resync at t={t}");
+                    crate::quant::decode_msg(msg, &mut w);
+                }
+                ToWorker::WeightsDeltaParts { parts, .. } => {
+                    assert_eq!(parts.len(), layout.tensors().len());
+                    let chosen = ps.downlink_chosen_bits().unwrap();
+                    for (p, &k) in parts.iter().zip(&chosen) {
+                        assert_eq!(p.param, k, "part header must carry the chosen level");
+                    }
+                    decode_parts(parts, &mut scratch);
+                    for (wi, &d) in w.iter_mut().zip(&scratch) {
+                        *wi += d;
+                    }
+                }
+                other => panic!("unexpected frame {other:?} at t={t}"),
+            }
+            let (replica, _) = ps.downlink_state().unwrap();
+            assert_eq!(w.as_slice(), replica, "t={t}: replica != worker decode");
+            ps.apply(&deltas_for(t)).unwrap();
+        }
+        // a static-spec policy is a no-op: frames stay byte-identical
+        // to the policy-free delta downlink
+        let mk = |with_static_policy: bool| -> Vec<Vec<u8>> {
+            let mut ps = ParameterServer::new(x0.clone(), None);
+            ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 0);
+            if with_static_policy {
+                let p = CodecPolicy::new(PolicySpec::Static, layout.clone(), 2).unwrap();
+                ps.set_downlink_policy(p);
+                assert!(ps.downlink_bits().is_none(), "static installs no controller");
+            }
+            (1u64..=6)
+                .map(|t| {
+                    let (b, _) = ps.broadcast(1);
+                    ps.apply(&deltas_for(t)).unwrap();
+                    b.to_bytes()
+                })
+                .collect()
+        };
+        assert_eq!(mk(false), mk(true), "static policy must not change a single byte");
     }
 
     /// A failed apply must not move the weights, even with sharding.

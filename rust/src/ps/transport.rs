@@ -99,8 +99,7 @@ pub trait Transport {
 
 /// The worker id a reply claims (sort key of the deterministic gather).
 fn worker_id(reply: &ToServer) -> u32 {
-    let ToServer::Delta { worker, .. } = reply;
-    *worker
+    reply.worker()
 }
 
 // ---------------------------------------------------------------------------

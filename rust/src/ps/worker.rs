@@ -4,7 +4,7 @@
 use super::protocol::{ToServer, ToWorker};
 use crate::data::Dataset;
 use crate::optim::WorkerOpt;
-use crate::quant::decode_msg;
+use crate::quant::{decode_msg, decode_parts, DeltaMsg};
 use anyhow::{anyhow, Result};
 use crate::util::DetRng;
 use std::sync::Arc;
@@ -113,6 +113,18 @@ impl Worker {
         self.opt.residual_norm()
     }
 
+    /// Mean code bits/element the uplink codec policy currently
+    /// chooses (None on the static path) — for the metrics CSV.
+    pub fn policy_bits(&self) -> Option<f64> {
+        self.opt.policy_bits()
+    }
+
+    /// Per-tensor levels the uplink policy currently chooses (parity
+    /// tests compare these across engines).
+    pub fn chosen_bits(&self) -> Option<Vec<u32>> {
+        self.opt.chosen_bits()
+    }
+
     pub fn opt_state(&self) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         self.opt.state()
     }
@@ -149,16 +161,37 @@ impl Worker {
                 }
                 self.reply(*t, *epoch)
             }
+            ToWorker::WeightsDeltaParts { t, epoch, parts } => {
+                let n: usize = parts.iter().map(|m| m.n).sum();
+                if n != self.w.len() {
+                    return Err(anyhow!("delta parts dim {} != worker dim {}", n, self.w.len()));
+                }
+                if !self.synced {
+                    return Err(anyhow!(
+                        "worker {}: delta frame before any full weights frame",
+                        self.id
+                    ));
+                }
+                // mixed-codec round: each part decodes with its own
+                // header, laid out back to back
+                decode_parts(parts, &mut self.scratch);
+                for (w, &d) in self.w.iter_mut().zip(&self.scratch) {
+                    *w += d;
+                }
+                self.reply(*t, *epoch)
+            }
         }
     }
 
     /// Gradient at the current replica → optimizer step → delta reply
-    /// (Alg. 3 lines 2–8; shared by both weights-frame kinds).
+    /// (Alg. 3 lines 2–8; shared by every weights-frame kind).
     fn reply(&mut self, t: u64, epoch: u64) -> Result<Option<ToServer>> {
         let (loss, grad) = self.src.loss_grad(&self.w, self.id as usize, t)?;
         self.last_loss = loss;
-        let delta = self.opt.step(&grad, t, epoch, &mut self.rng);
-        Ok(Some(ToServer::Delta { t, worker: self.id, loss, msg: delta }))
+        Ok(Some(match self.opt.step(&grad, t, epoch, &mut self.rng) {
+            DeltaMsg::Single(msg) => ToServer::Delta { t, worker: self.id, loss, msg },
+            DeltaMsg::Parts(parts) => ToServer::DeltaParts { t, worker: self.id, loss, parts },
+        }))
     }
 }
 
@@ -182,11 +215,15 @@ mod tests {
         let mut w = Worker::new(3, Box::new(opt), Box::new(src), 42);
         let x = vec![1.0f32; dim];
         let out = w.handle(&weights_msg(&x, 1)).unwrap().unwrap();
-        let ToServer::Delta { t, worker, loss, msg } = out;
-        assert_eq!((t, worker), (1, 3));
-        assert!(loss.is_finite());
-        assert_eq!(msg.codec, CodecId::LogQuant);
-        assert_eq!(msg.n, dim);
+        match out {
+            ToServer::Delta { t, worker, loss, msg } => {
+                assert_eq!((t, worker), (1, 3));
+                assert!(loss.is_finite());
+                assert_eq!(msg.codec, CodecId::LogQuant);
+                assert_eq!(msg.n, dim);
+            }
+            other => panic!("static opt must reply single-message, got {other:?}"),
+        }
     }
 
     fn delta_msg(d: &[f32], t: u64) -> ToWorker {
@@ -206,12 +243,41 @@ mod tests {
         assert_eq!(w.weights(), &x0[..]);
         let d = vec![0.25f32; dim];
         let out = w.handle(&delta_msg(&d, 2)).unwrap().unwrap();
-        let ToServer::Delta { t, .. } = out;
-        assert_eq!(t, 2);
+        assert_eq!(out.round(), 2);
         assert_eq!(w.weights(), &[1.25f32; 8][..], "delta adds, full frame overwrites");
         // a later full frame overwrites again
         w.handle(&weights_msg(&x0, 3)).unwrap().unwrap();
         assert_eq!(w.weights(), &x0[..]);
+    }
+
+    /// Mixed-codec downlink parts accumulate into the replica exactly
+    /// like a single delta frame of the concatenated payload.
+    #[test]
+    fn delta_parts_frame_accumulates_into_replica() {
+        use crate::quant::{Compressor, LogQuant};
+        let dim = 12;
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.1, 1) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 });
+        let mut w = Worker::new(0, Box::new(opt), Box::new(src), 42);
+        w.handle(&weights_msg(&vec![1.0f32; dim], 1)).unwrap().unwrap();
+        // two parts with different codecs; exact powers of two decode
+        // exactly
+        let mut rng = crate::quant::seeded_rng(0, 0);
+        let mut q = vec![0.0; dim];
+        let p0 = LogQuant::new(0).compress_into(&[0.5f32; 8], &mut q[..8], &mut rng);
+        let p1 = LogQuant::new(2).compress_into(&[0.25f32; 4], &mut q[8..], &mut rng);
+        let out = w
+            .handle(&ToWorker::WeightsDeltaParts { t: 2, epoch: 0, parts: vec![p0.clone(), p1] })
+            .unwrap()
+            .unwrap();
+        assert_eq!(out.round(), 2);
+        let want: Vec<f32> =
+            (0..dim).map(|i| if i < 8 { 1.5 } else { 1.25 }).collect();
+        assert_eq!(w.weights(), &want[..]);
+        // wrong total dimension is rejected
+        let err =
+            w.handle(&ToWorker::WeightsDeltaParts { t: 3, epoch: 0, parts: vec![p0] }).unwrap_err();
+        assert!(err.to_string().contains("parts dim"), "{err}");
     }
 
     #[test]

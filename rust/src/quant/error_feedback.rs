@@ -75,21 +75,54 @@ impl ErrorFeedback {
         comp: &dyn Compressor,
         rng: &mut DetRng,
     ) -> (WireMsg, &[f32]) {
+        self.compress_range_q(direction, 0, direction.len(), comp, rng)
+    }
+
+    /// [`Self::compress`] restricted to `[start, start + len)`: the EF
+    /// state machine runs over that range only (the rest of the
+    /// residual is untouched), with `comp`'s scale taken over the range
+    /// — the per-tensor step the codec-policy layer composes one part
+    /// at a time. `compress_range_q(d, 0, d.len(), …)` is bit-identical
+    /// to the whole-vector [`Self::compress_q`].
+    pub fn compress_range(
+        &mut self,
+        direction: &[f32],
+        start: usize,
+        len: usize,
+        comp: &dyn Compressor,
+        rng: &mut DetRng,
+    ) -> WireMsg {
+        self.compress_range_q(direction, start, len, comp, rng).0
+    }
+
+    /// [`Self::compress_range`], additionally exposing the dequantized
+    /// values of the range (the decode identity) — what the server's
+    /// delta downlink adds to its worker-replica estimate.
+    pub fn compress_range_q(
+        &mut self,
+        direction: &[f32],
+        start: usize,
+        len: usize,
+        comp: &dyn Compressor,
+        rng: &mut DetRng,
+    ) -> (WireMsg, &[f32]) {
         assert_eq!(direction.len(), self.e.len());
+        assert!(start + len <= self.e.len(), "range {start}+{len} out of {}", self.e.len());
+        let end = start + len;
         if self.enabled {
-            for ((u, &d), &e) in self.u.iter_mut().zip(direction).zip(&self.e) {
-                *u = d + e;
+            for i in start..end {
+                self.u[i] = direction[i] + self.e[i];
             }
         } else {
-            self.u.copy_from_slice(direction);
+            self.u[start..end].copy_from_slice(&direction[start..end]);
         }
-        let msg = comp.compress_into(&self.u, &mut self.q, rng);
+        let msg = comp.compress_into(&self.u[start..end], &mut self.q[start..end], rng);
         if self.enabled {
-            for ((e, &u), &q) in self.e.iter_mut().zip(&self.u).zip(&self.q) {
-                *e = u - q;
+            for i in start..end {
+                self.e[i] = self.u[i] - self.q[i];
             }
         }
-        (msg, &self.q)
+        (msg, &self.q[start..end])
     }
 
     /// Zero the residual. Used when a resync frame just transmitted the
@@ -149,6 +182,33 @@ mod tests {
         ef.reset();
         assert!(ef.residual().iter().all(|&x| x == 0.0));
         assert_eq!(ef.residual_norm(), 0.0);
+    }
+
+    /// Per-range compression composes to the per-tensor semantics: each
+    /// range gets its own scale, the residual outside the range is
+    /// untouched, and compressing every range of a partition is
+    /// equivalent to independent per-tensor EF state machines.
+    #[test]
+    fn compress_range_is_per_tensor_ef() {
+        let lq = LogQuant::new(2);
+        let dim = 24;
+        let split = 10usize;
+        let mut whole = ErrorFeedback::new(dim, true);
+        let mut lo = ErrorFeedback::new(split, true);
+        let mut hi = ErrorFeedback::new(dim - split, true);
+        let mut rng = seeded_rng(2, 2);
+        for t in 0..8 {
+            let d: Vec<f32> =
+                (0..dim).map(|i| ((i * 5 + t * 11) % 17) as f32 / 17.0 - 0.4).collect();
+            let m0 = whole.compress_range(&d, 0, split, &lq, &mut rng);
+            let m1 = whole.compress_range(&d, split, dim - split, &lq, &mut rng);
+            let r0 = lo.compress(&d[..split], &lq, &mut rng);
+            let r1 = hi.compress(&d[split..], &lq, &mut rng);
+            assert_eq!(m0.to_bytes(), r0.to_bytes(), "t={t}");
+            assert_eq!(m1.to_bytes(), r1.to_bytes(), "t={t}");
+            assert_eq!(&whole.residual()[..split], lo.residual(), "t={t}");
+            assert_eq!(&whole.residual()[split..], hi.residual(), "t={t}");
+        }
     }
 
     #[test]

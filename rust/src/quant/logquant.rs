@@ -38,7 +38,7 @@ pub struct LogQuant {
 
 impl LogQuant {
     pub fn new(kg: u32) -> Self {
-        assert!(kg <= 20, "kg={kg} out of range");
+        assert!(kg <= super::MAX_KG, "kg={kg} out of range");
         Self { kg }
     }
 

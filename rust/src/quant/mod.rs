@@ -21,6 +21,7 @@ pub mod blockwise;
 pub mod error_feedback;
 pub mod logquant;
 pub mod pack;
+pub mod policy;
 pub mod stochastic;
 pub mod terngrad;
 pub mod wquant;
@@ -28,11 +29,42 @@ pub mod wquant;
 pub use blockwise::Blockwise;
 pub use error_feedback::ErrorFeedback;
 pub use logquant::LogQuant;
+pub use policy::{CodecPolicy, PolicySpec, TensorLayout};
 pub use stochastic::{Qsgd, StochasticLogQuant};
 pub use terngrad::TernGrad;
 pub use wquant::WQuant;
 
 use crate::util::DetRng;
+
+/// Largest accepted gradient-quantization level `k_g` (`LogQuant` /
+/// `StochasticLogQuant`). Enforced at config parse time
+/// (`coordinator::config::ExperimentConfig::validate`), at policy
+/// binding, and on the wire ([`WireMsg::from_bytes`] rejects frames
+/// claiming more) — so an out-of-range level is a clean error
+/// everywhere, never a mid-run panic.
+pub const MAX_KG: u32 = 20;
+
+/// Largest accepted weight-quantization level `k_x` ([`WQuant`]).
+pub const MAX_KX: u32 = 22;
+
+/// Validate optional quantization levels against the codec domains —
+/// the one implementation behind the CLI flags (`--kg`/`--kx`) and
+/// `ExperimentConfig::validate`, so an out-of-range level is a clear
+/// parse-time error instead of a panic inside a codec constructor
+/// mid-run.
+pub fn validate_levels(kg: Option<u32>, kx: Option<u32>) -> anyhow::Result<()> {
+    if let Some(k) = kg {
+        if k > MAX_KG {
+            anyhow::bail!("--kg {k} out of range (k_g <= {MAX_KG})");
+        }
+    }
+    if let Some(k) = kx {
+        if k > MAX_KX {
+            anyhow::bail!("--kx {k} out of range (k_x <= {MAX_KX})");
+        }
+    }
+    Ok(())
+}
 
 /// Compressor family id — first wire byte, also used in configs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,6 +168,33 @@ impl WireMsg {
         let bits = b[1];
         let rd = |i: usize| u32::from_le_bytes(b[i..i + 4].try_into().unwrap()) as usize;
         let param = rd(2) as u32;
+        // Codec-parameter sanity: a frame claiming a level outside the
+        // codec's domain would panic deep inside the decode (level
+        // constructors assert their range) — reject it here instead,
+        // like any other malformed frame off the socket.
+        match codec {
+            CodecId::LogQuant => {
+                if (param & 0xff) > MAX_KG || (param >> 8) > 32 {
+                    return Err(anyhow!("logquant param {param} out of range"));
+                }
+            }
+            CodecId::WQuant => {
+                if param > MAX_KX {
+                    return Err(anyhow!("wquant param {param} out of range"));
+                }
+            }
+            CodecId::Qsgd => {
+                if param == 0 || param > 1 << 15 {
+                    return Err(anyhow!("qsgd param {param} out of range"));
+                }
+            }
+            CodecId::Blockwise => {
+                if param == 0 {
+                    return Err(anyhow!("blockwise block size must be positive"));
+                }
+            }
+            CodecId::Identity | CodecId::TernGrad => {}
+        }
         let n = rd(6);
         let nscales = rd(10);
         let nwords = rd(14);
@@ -143,6 +202,68 @@ impl WireMsg {
         let need = 22 + nscales * 4 + nwords * 8 + nraw * 4;
         if b.len() != need {
             return Err(anyhow!("wire msg len {} != expected {}", b.len(), need));
+        }
+        // Structural consistency: every codec's decode indexes scales
+        // and packed words by position, so a frame whose counts don't
+        // match its codec's layout would panic there (missing scale,
+        // short word array, absurd bit width). The length prefix above
+        // only proves the frame is self-consistent — this proves it is
+        // decodable. Each check mirrors exactly what `compress_into`
+        // emits (the golden fixtures pin both directions).
+        let expect = |ok: bool, what: &str| -> anyhow::Result<()> {
+            if ok {
+                Ok(())
+            } else {
+                Err(anyhow!("inconsistent {what} for codec {codec:?} (n={n}, bits={bits}, param={param}, nscales={nscales}, nwords={nwords}, nraw={nraw})"))
+            }
+        };
+        let code_words = (n * bits as usize).div_ceil(64);
+        match codec {
+            CodecId::Identity => {
+                expect(bits == 0 && nwords == 0 && nscales == 0 && nraw == n, "identity layout")?;
+            }
+            CodecId::LogQuant => {
+                let want_bits = pack::bits_for_symbols(2 * ((param & 0xff) + 1) + 1);
+                expect(bits == want_bits && nraw == 0 && nwords == code_words, "logquant layout")?;
+                // one global scale, or the PJRT per-chunk layout with
+                // the chunk size in the param's high byte
+                if nscales != 1 {
+                    let chunk_log2 = param >> 8;
+                    expect(
+                        chunk_log2 > 0 && nscales == n.div_ceil(1usize << chunk_log2),
+                        "logquant scale count",
+                    )?;
+                }
+            }
+            CodecId::WQuant => {
+                let want_bits = pack::bits_for_symbols(2 * (1u32 << param) + 1);
+                expect(
+                    bits == want_bits && nscales == 0 && nraw == 0 && nwords == code_words,
+                    "wquant layout",
+                )?;
+            }
+            CodecId::TernGrad => {
+                expect(
+                    bits == 2 && nscales == 1 && nraw == 0 && nwords == code_words,
+                    "terngrad layout",
+                )?;
+            }
+            CodecId::Blockwise => {
+                expect(
+                    bits == 1
+                        && nscales == n.div_ceil(param as usize)
+                        && nraw == 0
+                        && nwords == code_words,
+                    "blockwise layout",
+                )?;
+            }
+            CodecId::Qsgd => {
+                let want_bits = pack::bits_for_symbols(2 * param + 1);
+                expect(
+                    bits == want_bits && nscales == 1 && nraw == 0 && nwords == code_words,
+                    "qsgd layout",
+                )?;
+            }
         }
         let mut off = 22;
         let mut scales = Vec::with_capacity(nscales);
@@ -255,6 +376,76 @@ pub fn decode_msg_range(msg: &WireMsg, start: usize, out: &mut [f32]) {
     }
 }
 
+/// Decode a per-tensor ("parts") message sequence laid out back to
+/// back: part `i` covers elements `[Σ_{j<i} n_j, Σ_{j<=i} n_j)` of the
+/// flat vector. The codec-policy layer produces these (one part per
+/// [`policy::TensorLayout`] tensor, each with its own codec id and
+/// bit-width in its own header); `out.len()` must equal the total.
+pub fn decode_parts(parts: &[WireMsg], out: &mut [f32]) {
+    let mut off = 0usize;
+    for p in parts {
+        decode_msg(p, &mut out[off..off + p.n]);
+        off += p.n;
+    }
+    assert_eq!(off, out.len(), "parts cover {off} of {} elements", out.len());
+}
+
+/// [`decode_parts`] restricted to elements `[start, start + out.len())`
+/// — the block-parallel entry point the sharded parameter server uses
+/// on mixed-codec rounds. Bit-identical to slicing a full
+/// [`decode_parts`] result (each sub-range decode is, per codec).
+pub fn decode_parts_range(parts: &[WireMsg], start: usize, out: &mut [f32]) {
+    let end = start + out.len();
+    let mut off = 0usize;
+    for p in parts {
+        let p_end = off + p.n;
+        if p_end > start && off < end {
+            let lo = start.max(off);
+            let hi = end.min(p_end);
+            decode_msg_range(p, lo - off, &mut out[lo - start..hi - start]);
+        }
+        off = p_end;
+    }
+    assert!(end <= off, "range {start}..{end} out of {off} part elements");
+}
+
+/// A worker-side compressed update as handed to the transport: one
+/// message for the whole vector (the static path — byte-identical to
+/// pre-policy builds) or one per layout tensor (codec-policy rounds,
+/// each part carrying its own codec header).
+#[derive(Clone, Debug)]
+pub enum DeltaMsg {
+    Single(WireMsg),
+    Parts(Vec<WireMsg>),
+}
+
+impl DeltaMsg {
+    /// Total element count across the payload.
+    pub fn n(&self) -> usize {
+        match self {
+            DeltaMsg::Single(m) => m.n,
+            DeltaMsg::Parts(ps) => ps.iter().map(|m| m.n).sum(),
+        }
+    }
+
+    /// Bytes on the wire (per-part headers included — the per-tensor
+    /// codec headers are real traffic and are charged).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            DeltaMsg::Single(m) => m.wire_bytes(),
+            DeltaMsg::Parts(ps) => ps.iter().map(|m| m.wire_bytes()).sum(),
+        }
+    }
+
+    /// Decode the full payload (`out.len()` must equal [`Self::n`]).
+    pub fn decode(&self, out: &mut [f32]) {
+        match self {
+            DeltaMsg::Single(m) => decode_msg(m, out),
+            DeltaMsg::Parts(ps) => decode_parts(ps, out),
+        }
+    }
+}
+
 /// The gradient-family codec parameterized by `k_g` (`None` = fp32
 /// [`Identity`]). The single owner of the "which compressor does a
 /// `kg` level mean" decision, shared by the worker uplink
@@ -291,9 +482,12 @@ mod tests {
 
     #[test]
     fn wire_serialization_roundtrip() {
+        // PJRT-style multi-scale LogQuant message: kg=2 in the low
+        // byte, log2(chunk)=2 in the high byte, one scale per chunk of
+        // 4 elements (ragged tail).
         let msg = WireMsg {
             codec: CodecId::LogQuant,
-            param: 2,
+            param: 2 | (2 << 8),
             n: 5,
             scales: vec![0.5, 1.5],
             codes: Some(pack::pack(&[1, 2, 3, 4, 5], 3)),
@@ -345,6 +539,96 @@ mod tests {
         let c = gradient_codec(Some(2));
         assert_eq!(c.codec(), CodecId::LogQuant);
         assert_eq!(c.bits_per_element(), 3.0); // 7 symbols at kg=2
+    }
+
+    /// Parts decode (full and any range) is bit-identical to decoding
+    /// each mixed-codec part into its own slice — the contract the
+    /// sharded server relies on for codec-policy rounds.
+    #[test]
+    fn parts_decode_matches_per_part_decode() {
+        let mut rng = seeded_rng(4, 4);
+        let lens = [37usize, 64, 5];
+        let comps: Vec<Box<dyn Compressor>> =
+            vec![Box::new(LogQuant::new(2)), Box::new(LogQuant::new(0)), Box::new(Identity)];
+        let mut parts = Vec::new();
+        let mut want = Vec::new();
+        for (len, comp) in lens.iter().zip(&comps) {
+            let u: Vec<f32> =
+                (0..*len).map(|i| ((i as f32 + want.len() as f32) * 0.7).sin()).collect();
+            let mut q = vec![0.0; *len];
+            parts.push(comp.compress_into(&u, &mut q, &mut rng));
+            want.extend_from_slice(&q);
+        }
+        let n: usize = lens.iter().sum();
+        let mut full = vec![0.0; n];
+        decode_parts(&parts, &mut full);
+        assert_eq!(full, want);
+        for &(start, len) in &[(0usize, n), (0, 10), (30, 40), (37, 64), (100, 6), (n - 1, 1)] {
+            let mut part = vec![0.0; len];
+            decode_parts_range(&parts, start, &mut part);
+            assert_eq!(part, full[start..start + len], "start={start} len={len}");
+        }
+        let dm = DeltaMsg::Parts(parts.clone());
+        assert_eq!(dm.n(), n);
+        assert_eq!(dm.wire_bytes(), parts.iter().map(|m| m.wire_bytes()).sum::<usize>());
+        let mut out = vec![0.0; n];
+        dm.decode(&mut out);
+        assert_eq!(out, full);
+    }
+
+    /// Frames claiming codec parameters outside the codec's domain, or
+    /// whose counts don't match the codec's layout, are clean errors —
+    /// not decode-time panics. (Starts from genuinely valid frames and
+    /// patches single fields, the shape a bit-flip or hostile peer
+    /// produces.)
+    #[test]
+    fn wire_rejects_out_of_range_or_inconsistent_frames() {
+        let u: Vec<f32> = (0..20).map(|i| (i as f32 * 0.7).sin()).collect();
+        let encode = |comp: &dyn Compressor| -> Vec<u8> {
+            let mut q = vec![0.0; u.len()];
+            comp.compress_into(&u, &mut q, &mut seeded_rng(1, 1)).to_bytes()
+        };
+        // param is bytes 2..6 LE
+        let patch_param = |mut b: Vec<u8>, param: u32| -> Vec<u8> {
+            b[2..6].copy_from_slice(&param.to_le_bytes());
+            b
+        };
+        let lq = encode(&LogQuant::new(MAX_KG));
+        assert!(WireMsg::from_bytes(&lq).is_ok());
+        assert!(WireMsg::from_bytes(&patch_param(lq.clone(), MAX_KG + 1)).is_err());
+        assert!(
+            WireMsg::from_bytes(&patch_param(lq.clone(), MAX_KG | (40 << 8))).is_err(),
+            "absurd pjrt chunk log2"
+        );
+        let wq = encode(&WQuant::new(MAX_KX));
+        assert!(WireMsg::from_bytes(&wq).is_ok());
+        assert!(WireMsg::from_bytes(&patch_param(wq, MAX_KX + 1)).is_err());
+        let qs = encode(&Qsgd::new(4));
+        assert!(WireMsg::from_bytes(&qs).is_ok());
+        assert!(WireMsg::from_bytes(&patch_param(qs, 0)).is_err());
+        let bw = encode(&Blockwise::new(7));
+        assert!(WireMsg::from_bytes(&bw).is_ok());
+        assert!(WireMsg::from_bytes(&patch_param(bw.clone(), 0)).is_err());
+        // structural inconsistencies a panic used to hide behind:
+        // a bits byte (offset 1) the codec never emits…
+        let mut wild_bits = lq.clone();
+        wild_bits[1] = 66;
+        assert!(WireMsg::from_bytes(&wild_bits).is_err(), "absurd bit width");
+        // …a Blockwise block size that disagrees with the scale count…
+        assert!(
+            WireMsg::from_bytes(&patch_param(bw, 19)).is_err(),
+            "scale count must match the claimed block size"
+        );
+        // …and a TernGrad frame whose scale was amputated (nscales
+        // patched to 0 with the frame re-lengthened accordingly).
+        let tg = encode(&TernGrad);
+        let mut no_scale = tg.clone();
+        no_scale[10..14].copy_from_slice(&0u32.to_le_bytes());
+        no_scale.drain(22..26); // drop the 4 scale bytes so lengths match
+        assert!(
+            WireMsg::from_bytes(&no_scale).is_err(),
+            "decode would index scales[0] — must be rejected at parse"
+        );
     }
 
     #[test]

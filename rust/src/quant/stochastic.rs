@@ -28,7 +28,7 @@ pub struct StochasticLogQuant {
 
 impl StochasticLogQuant {
     pub fn new(kg: u32) -> Self {
-        assert!(kg <= 20);
+        assert!(kg <= super::MAX_KG, "kg={kg} out of range");
         Self { kg }
     }
 

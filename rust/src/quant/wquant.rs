@@ -48,7 +48,7 @@ pub struct WQuant {
 
 impl WQuant {
     pub fn new(kx: u32) -> Self {
-        assert!(kx <= 22, "kx={kx} out of range");
+        assert!(kx <= super::MAX_KX, "kx={kx} out of range");
         Self { kx }
     }
 

@@ -149,7 +149,7 @@ impl crate::optim::WorkerOpt for PjrtQAdam {
         t: u64,
         epoch: u64,
         _rng: &mut crate::util::DetRng,
-    ) -> crate::quant::WireMsg {
+    ) -> crate::quant::DeltaMsg {
         let s = StepScalars {
             alpha: self.lr.at(t, epoch),
             beta: self.beta,
@@ -169,14 +169,14 @@ impl crate::optim::WorkerOpt for PjrtQAdam {
             scales.push(s);
             codes.extend(self.lq.encode_quantized(piece, s));
         }
-        crate::quant::WireMsg {
+        crate::quant::DeltaMsg::Single(crate::quant::WireMsg {
             codec: crate::quant::CodecId::LogQuant,
             param: if scales.len() > 1 { self.lq.pjrt_param(chunk) } else { self.lq.kg },
             n: self.qdelta.len(),
             scales,
             codes: Some(crate::quant::pack::pack(&codes, self.lq.code_bits())),
             raw: vec![],
-        }
+        })
     }
 
     fn name(&self) -> String {

@@ -1,0 +1,169 @@
+//! Property tests for the codecs' theoretical error bounds, and for the
+//! adaptive controller's band/purity contract, on randomized inputs.
+//!
+//! Each codec documents (or implies) a per-coordinate worst case; these
+//! tests pin them so a quantizer change that silently loosens a bound
+//! fails here, not three layers up in a convergence plateau:
+//!
+//! * `Q_g` (LogQuant, nearest power of two):
+//!   `|u − Q(u)|_i ≤ max(s·2^-(kg+1), |u_i|/2)` — the zero region is
+//!   below `s·2^-(kg+1)`, and inside a bracket `[2^m, 2^(m+1})` the
+//!   nearest endpoint is at most half the gap (`2^(m-1) ≤ |y|/2`) away.
+//! * stochastic log: rounding to *either* bracket endpoint —
+//!   `≤ max(s·2^-kg, |u_i|)` (full gap, or the smallest level).
+//! * `Q_x` (WQuant): `≤ 2^-(kx+2)` inside the representable
+//!   `|x| ≤ 0.5` (Assumption 3).
+//! * TernGrad: values are `{0, ±s}` with matching sign —
+//!   `≤ s = ‖u‖_∞`.
+//! * Blockwise sign·mean: `|u_i − sign(u_i)·s_b| ≤ max(|u_i|, s_b) ≤ s`.
+//! * QSGD(L): stochastic rounding between adjacent uniform levels —
+//!   `≤ s/L`.
+
+use qadam::optim::{LrSchedule, QAdamEf, WorkerOpt};
+use qadam::quant::{
+    seeded_rng, Blockwise, CodecPolicy, Compressor, DeltaMsg, Identity, LogQuant, PolicySpec,
+    Qsgd, StochasticLogQuant, TensorLayout, TernGrad, WQuant,
+};
+
+fn rand_vec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+    let mut rng = seeded_rng(seed, 0xb0);
+    (0..n).map(|_| rng.gen_range_f32(-scale, scale)).collect()
+}
+
+/// Run `comp` over randomized inputs and check the per-coordinate bound
+/// `|u_i − q_i| ≤ bound(s, |u_i|) + tol`.
+fn check_bound(
+    name: &str,
+    comp: &dyn Compressor,
+    scale: f32,
+    bound: impl Fn(f32, f32) -> f32,
+) {
+    for seed in 0..6u64 {
+        let u = rand_vec(seed * 31 + 1, 257, scale);
+        let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mut q = vec![0.0; u.len()];
+        let mut rng = seeded_rng(seed, 9);
+        let msg = comp.compress_into(&u, &mut q, &mut rng);
+        assert_eq!(msg.n, u.len());
+        let tol = 1e-5 * s.max(1e-30);
+        for (i, (&ui, &qi)) in u.iter().zip(&q).enumerate() {
+            let err = (ui - qi).abs();
+            let b = bound(s, ui.abs());
+            assert!(
+                err <= b + tol,
+                "{name} seed={seed} i={i}: |{ui} - {qi}| = {err} > bound {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn identity_is_exact() {
+    check_bound("identity", &Identity, 3.0, |_, _| 0.0);
+}
+
+#[test]
+fn logquant_inf_bound_across_levels() {
+    for kg in [0u32, 1, 2, 4, 8] {
+        let comp = LogQuant::new(kg);
+        let zero_region = f32::exp2(-((kg + 1) as f32));
+        for scale in [1e-3f32, 1.0, 1e3] {
+            check_bound(&format!("logquant kg={kg}"), &comp, scale, |s, ui| {
+                (s * zero_region).max(ui / 2.0)
+            });
+        }
+    }
+}
+
+#[test]
+fn stochastic_logquant_inf_bound() {
+    for kg in [0u32, 2, 4] {
+        let comp = StochasticLogQuant::new(kg);
+        let lo = f32::exp2(-(kg as f32));
+        check_bound(&format!("stoch-log kg={kg}"), &comp, 1.0, |s, ui| (s * lo).max(ui));
+    }
+}
+
+#[test]
+fn wquant_assumption3_bound_inside_range() {
+    for kx in [1u32, 2, 6, 10] {
+        let comp = WQuant::new(kx);
+        let delta = comp.delta_x_per_coord();
+        // restrict to the representable range |x| <= 0.5
+        check_bound(&format!("wquant kx={kx}"), &comp, 0.5, |_, _| delta);
+    }
+}
+
+#[test]
+fn terngrad_inf_bound() {
+    check_bound("terngrad", &TernGrad, 2.0, |s, _| s);
+}
+
+#[test]
+fn blockwise_inf_bound() {
+    for block in [3usize, 64, 4096] {
+        check_bound(&format!("blockwise b={block}"), &Blockwise::new(block), 2.0, |s, _| s);
+    }
+}
+
+#[test]
+fn qsgd_inf_bound() {
+    for levels in [1u32, 4, 16] {
+        let comp = Qsgd::new(levels);
+        check_bound(&format!("qsgd L={levels}"), &comp, 5.0, |s, _| s / levels as f32);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// adaptive-controller properties, end to end through the optimizer
+// ---------------------------------------------------------------------------
+
+/// Drive a full adaptive QAdam-EF optimizer on random gradients: the
+/// chosen levels never leave the configured band, every part's wire
+/// header carries exactly the chosen level, and two identical runs
+/// produce byte-identical uplinks — the decision layer is a pure
+/// function of `(seed, t, tensor)`, nothing else.
+#[test]
+fn adaptive_controller_stays_in_band_and_is_pure() {
+    let dim = 48;
+    let (lo, hi) = (1u32, 4u32);
+    let run = |seed: u64| -> Vec<(Vec<u32>, Vec<Vec<u8>>)> {
+        let layout = TensorLayout::uniform(dim, 3);
+        let policy =
+            CodecPolicy::new(PolicySpec::Adaptive { lo, hi }, layout, 2).unwrap();
+        let mut opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.05 })
+            .with_policy(policy);
+        let mut rng = seeded_rng(seed, 1);
+        let mut grad_rng = seeded_rng(seed, 2);
+        let mut trace = Vec::new();
+        for t in 1u64..=60 {
+            // gradients with a tensor-dependent magnitude profile so the
+            // controller has something to react to
+            let g: Vec<f32> = (0..dim)
+                .map(|i| grad_rng.gen_normal() * (0.01 + 0.1 * (i / 16) as f32))
+                .collect();
+            let msg = opt.step(&g, t, 0, &mut rng);
+            let bits = opt.chosen_bits().expect("adaptive policy reports levels");
+            assert!(
+                bits.iter().all(|&b| (lo..=hi).contains(&b)),
+                "t={t}: levels {bits:?} left the band {lo}..{hi}"
+            );
+            match &msg {
+                DeltaMsg::Parts(parts) => {
+                    assert_eq!(parts.len(), 3);
+                    for (p, &b) in parts.iter().zip(&bits) {
+                        assert_eq!(p.param, b, "t={t}: header level != chosen level");
+                    }
+                    trace.push((bits, parts.iter().map(|p| p.to_bytes()).collect()));
+                }
+                other => panic!("adaptive policy must emit parts, got {other:?}"),
+            }
+        }
+        trace
+    };
+    let a = run(11);
+    assert_eq!(a, run(11), "fixed seed must reproduce decisions and bytes exactly");
+    // (That the controller *moves* under debt/idle pressure is pinned by
+    // the unit tests in `quant::policy`; here the property under test is
+    // band confinement + reproducibility on a live optimizer.)
+}

@@ -6,7 +6,7 @@
 use qadam::data::{Dataset, SyntheticVector};
 use qadam::models::{artifacts_dir, Manifest};
 use qadam::optim::{LrSchedule, QAdamEf, ThetaSchedule, WorkerOpt};
-use qadam::quant::{decode_msg, seeded_rng};
+use qadam::quant::seeded_rng;
 use qadam::runtime::kernel::{PjrtQAdam, StepScalars};
 use qadam::runtime::{KernelQAdam, ModelRuntime, Runtime};
 use std::sync::Arc;
@@ -135,7 +135,7 @@ fn pjrt_worker_opt_decodes_identically() {
         let g = rand_vec(10 + t, n, 0.3);
         let msg = opt.step(&g, t, 0, &mut rng);
         let mut dec = vec![0.0; n];
-        decode_msg(&msg, &mut dec);
+        msg.decode(&mut dec);
         // Residual identity: decoded delta + e' == u; we can't see u here,
         // but decoded delta must be a valid LogQuant codebook vector and
         // finite.
@@ -179,7 +179,7 @@ fn native_and_pjrt_training_converge_similarly() {
             last = loss;
             let msg = opt.step(&grad, t, 0, &mut rng);
             let mut delta = vec![0.0; dim];
-            decode_msg(&msg, &mut delta);
+            msg.decode(&mut delta);
             for (xi, d) in x.iter_mut().zip(&delta) {
                 *xi -= d;
             }
@@ -210,7 +210,7 @@ fn eval_graph_accuracy_improves_with_training() {
         let (_, grad) = model.loss_grad(&x, &batch).unwrap();
         let msg = opt.step(&grad, t, 0, &mut rng);
         let mut delta = vec![0.0; model.dim()];
-        decode_msg(&msg, &mut delta);
+        msg.decode(&mut delta);
         for (xi, d) in x.iter_mut().zip(&delta) {
             *xi -= d;
         }
@@ -244,6 +244,7 @@ fn pjrt_engine_with_delta_downlink_trains_and_cuts_down_bytes() {
         downlink: Downlink::Delta,
         resync_every: 8,
         chaos: None,
+        codec_policy: qadam::quant::PolicySpec::Static,
         straggler: qadam::elastic::StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,

@@ -31,6 +31,7 @@ fn base_cfg() -> ExperimentConfig {
         downlink: Downlink::Full,
         resync_every: 64,
         chaos: None,
+        codec_policy: qadam::quant::PolicySpec::Static,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,
@@ -154,6 +155,7 @@ fn lm_model_trains_and_loss_drops() {
         downlink: Downlink::Full,
         resync_every: 64,
         chaos: None,
+        codec_policy: qadam::quant::PolicySpec::Static,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,
@@ -347,4 +349,58 @@ fn checkpoint_rejects_wrong_model() {
     let mut ckpt = tr.checkpoint();
     ckpt.model = "vgg_sim".into();
     assert!(tr.restore(&ckpt).is_err());
+}
+
+/// An adaptive codec-policy run through the full Trainer stack (named
+/// model tensors, delta downlink, both engines): still trains, is
+/// bit-identical between sequential and threaded, and logs the chosen
+/// bits in the metrics rows.
+#[test]
+fn adaptive_policy_trains_and_matches_across_engines() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.codec_policy = qadam::quant::PolicySpec::Adaptive { lo: 0, hi: 4 };
+    cfg.downlink = Downlink::Delta;
+    cfg.resync_every = 7;
+    cfg.steps = 30;
+    cfg.eval_every = 10;
+    let mut tr_seq = Trainer::new(cfg.clone()).unwrap();
+    let seq = tr_seq.run().unwrap();
+    cfg.bus = BusKind::Threaded;
+    let mut tr_thr = Trainer::new(cfg).unwrap();
+    let thr = tr_thr.run().unwrap();
+    assert_eq!(seq.final_loss, thr.final_loss, "adaptive run diverged across engines");
+    assert_eq!(seq.final_acc, thr.final_acc);
+    assert_eq!(seq.comm_mb_per_iter, thr.comm_mb_per_iter);
+    assert_eq!(seq.down_mb_per_iter, thr.down_mb_per_iter);
+    assert!(seq.final_loss.is_finite());
+    // the chosen bits land in the metrics rows, within the band's code
+    // widths (kg in 0..=4 -> 2..=4 code bits)
+    let bits: Vec<f64> = tr_seq.log.rows.iter().map(|r| r.policy_bits).collect();
+    assert_eq!(
+        bits,
+        tr_thr.log.rows.iter().map(|r| r.policy_bits).collect::<Vec<f64>>()
+    );
+    for b in bits {
+        assert!((2.0..=4.0).contains(&b), "policy_bits={b} outside the band's code widths");
+    }
+    assert!(seq.label.contains("adaptive0..4"), "label={}", seq.label);
+}
+
+/// The satellite fix end-to-end: an out-of-range k_g is rejected with a
+/// clear error at Trainer construction, not a panic mid-run.
+#[test]
+fn out_of_range_kg_is_a_clean_config_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.method = Method::QAdam { kg: Some(99), error_feedback: true };
+    let err = match Trainer::new(cfg) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("kg=99 must not construct a trainer"),
+    };
+    assert!(err.contains("out of range"), "{err}");
 }

@@ -1,0 +1,267 @@
+//! Cross-engine differential tests for the codec-policy layer.
+//!
+//! The acceptance contract of the adaptive per-tensor bit-width change:
+//!
+//! * a fixed-seed `adaptive` run is **bit-identical** across the
+//!   sequential, threaded and TCP engines — masters, replicas,
+//!   per-round chosen bits, reply bytes and `CommStats`;
+//! * it survives a chaos crash/rejoin cycle with replica parity
+//!   (forced full-weights resync re-anchors the returning worker);
+//! * `--codec-policy static` (the default) leaves every existing path
+//!   bit-identical to the pre-policy build: same single-message frames,
+//!   byte for byte.
+
+use qadam::elastic::{ChaosPlan, ChaosTransport, StragglerPolicy};
+use qadam::optim::{LrSchedule, QAdamEf};
+use qadam::ps::transport::{tcp_worker_loop, LocalBus, TcpServer, ThreadedBus, Transport};
+use qadam::ps::worker::{SimGradSource, Worker};
+use qadam::ps::{ParameterServer, ToServer, ToWorker};
+use qadam::quant::{CodecPolicy, LogQuant, PolicySpec, TensorLayout};
+use qadam::sim::StochasticProblem;
+
+const DIM: usize = 96;
+const TENSORS: usize = 3;
+
+fn adaptive_spec() -> PolicySpec {
+    PolicySpec::Adaptive { lo: 0, hi: 4 }
+}
+
+fn mk_policy(spec: PolicySpec) -> CodecPolicy {
+    CodecPolicy::new(spec, TensorLayout::uniform(DIM, TENSORS), 2).unwrap()
+}
+
+/// Worker construction shared by every engine (and both ends of the
+/// TCP leg): identical state ⇒ any divergence is the engine's fault.
+fn mk_worker(id: u32, spec: Option<PolicySpec>) -> Worker {
+    let src = SimGradSource { problem: StochasticProblem::new(DIM, 0.05, 9) };
+    let mut opt = QAdamEf::paper_default(DIM, 2, LrSchedule::Const { alpha: 0.02 });
+    if let Some(s) = spec {
+        opt = opt.with_policy(mk_policy(s));
+    }
+    Worker::new(id, Box::new(opt), Box::new(src), 1)
+}
+
+fn mk_ps_with_policy() -> ParameterServer {
+    let x0: Vec<f32> = (0..DIM).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
+    let mut ps = ParameterServer::new(x0, Some(4));
+    ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 5);
+    ps.set_downlink_policy(mk_policy(adaptive_spec()));
+    ps
+}
+
+fn reply_bytes(replies: &[ToServer]) -> Vec<Vec<u8>> {
+    replies.iter().map(|r| r.to_bytes()).collect()
+}
+
+/// Sequential vs threaded, both with the adaptive uplink policy and the
+/// adaptive delta-downlink policy: every broadcast frame, every reply
+/// frame, every chosen level, the masters, the replicas and the byte
+/// accounting agree round by round.
+#[test]
+fn adaptive_run_bit_identical_sequential_vs_threaded() {
+    let nw = 4usize;
+    let mut ps_seq = mk_ps_with_policy();
+    let mut ws_seq: Vec<Worker> = (0..nw as u32).map(|i| mk_worker(i, Some(adaptive_spec()))).collect();
+    let seq = LocalBus::default();
+    let mut ps_thr = mk_ps_with_policy();
+    let mut ws_thr: Vec<Worker> = (0..nw as u32).map(|i| mk_worker(i, Some(adaptive_spec()))).collect();
+    let thr = ThreadedBus::new();
+    let mut saw_parts_uplink = false;
+    let mut saw_parts_downlink = false;
+    for t in 1u64..=20 {
+        let (b_seq, _) = ps_seq.broadcast(nw);
+        let (b_thr, _) = ps_thr.broadcast(nw);
+        assert_eq!(b_seq.to_bytes(), b_thr.to_bytes(), "broadcast diverged at round {t}");
+        saw_parts_downlink |= matches!(b_seq, ToWorker::WeightsDeltaParts { .. });
+        let r_seq = seq.round(&b_seq, &mut ws_seq).unwrap();
+        let r_thr = thr.round(&b_thr, &mut ws_thr).unwrap();
+        assert_eq!(
+            reply_bytes(&r_seq),
+            reply_bytes(&r_thr),
+            "uplink frames diverged at round {t}"
+        );
+        saw_parts_uplink |= r_seq.iter().all(|r| matches!(r, ToServer::DeltaParts { .. }));
+        ps_seq.apply(&r_seq).unwrap();
+        ps_thr.apply(&r_thr).unwrap();
+        assert_eq!(ps_seq.master(), ps_thr.master(), "masters diverged at round {t}");
+        assert_eq!(
+            ps_seq.downlink_state().unwrap().0,
+            ps_thr.downlink_state().unwrap().0,
+            "replicas diverged at round {t}"
+        );
+        // per-round chosen bits: every worker, plus the server downlink
+        for (a, b) in ws_seq.iter().zip(&ws_thr) {
+            assert_eq!(
+                a.chosen_bits().expect("adaptive worker reports levels"),
+                b.chosen_bits().unwrap(),
+                "worker {} levels diverged at round {t}",
+                a.id
+            );
+        }
+        assert_eq!(
+            ps_seq.downlink_chosen_bits().unwrap(),
+            ps_thr.downlink_chosen_bits().unwrap(),
+            "downlink levels diverged at round {t}"
+        );
+    }
+    assert_eq!(ps_seq.stats, ps_thr.stats, "CommStats diverged");
+    assert!(saw_parts_uplink, "the adaptive uplink never produced parts frames");
+    assert!(saw_parts_downlink, "the adaptive downlink never produced parts frames");
+}
+
+/// The TCP engine replays the same adaptive trajectory bit-for-bit:
+/// reply frames off the socket equal the in-process reference, masters
+/// and replicas track, and the byte accounting agrees.
+#[test]
+fn adaptive_run_bit_identical_over_tcp() {
+    let rounds = 12u64;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+
+    let spawn_worker = |addr: String, id: u32| {
+        std::thread::spawn(move || {
+            let mut w = mk_worker(id, Some(adaptive_spec()));
+            for _ in 0..100 {
+                match tcp_worker_loop(&addr, &mut w) {
+                    Ok(r) => return r,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            }
+            panic!("worker {id} never connected");
+        })
+    };
+    let h0 = spawn_worker(addr.clone(), 0);
+    let h1 = spawn_worker(addr.clone(), 1);
+
+    let mut srv = TcpServer::bind_and_accept(&addr, 2).unwrap();
+    let mut ps_tcp = mk_ps_with_policy();
+    let mut ps_ref = mk_ps_with_policy();
+    let mut ws_ref: Vec<Worker> = (0..2).map(|i| mk_worker(i, Some(adaptive_spec()))).collect();
+    let bus = LocalBus::default();
+    for t in 1..=rounds {
+        let replies = {
+            let (b, _) = ps_tcp.broadcast(2);
+            srv.round(&b).unwrap()
+        };
+        let r_ref = {
+            let (b, _) = ps_ref.broadcast(2);
+            bus.round(&b, &mut ws_ref).unwrap()
+        };
+        assert_eq!(
+            reply_bytes(&replies),
+            reply_bytes(&r_ref),
+            "tcp uplink frames diverged at round {t}"
+        );
+        ps_tcp.apply(&replies).unwrap();
+        ps_ref.apply(&r_ref).unwrap();
+        assert_eq!(ps_tcp.master(), ps_ref.master(), "tcp master diverged at round {t}");
+        assert_eq!(
+            ps_tcp.downlink_state().unwrap().0,
+            ps_ref.downlink_state().unwrap().0,
+            "tcp replica diverged at round {t}"
+        );
+        assert_eq!(
+            ps_tcp.downlink_chosen_bits().unwrap(),
+            ps_ref.downlink_chosen_bits().unwrap(),
+            "tcp downlink levels diverged at round {t}"
+        );
+    }
+    assert_eq!(ps_tcp.stats, ps_ref.stats, "CommStats diverged over TCP");
+    srv.shutdown().unwrap();
+    assert_eq!(h0.join().unwrap(), rounds);
+    assert_eq!(h1.join().unwrap(), rounds);
+}
+
+/// Acceptance: a fixed-seed adaptive run survives a chaos crash/rejoin
+/// cycle — bit-reproducible across the sequential and threaded engines,
+/// with the forced resync re-anchoring the returning worker's replica.
+#[test]
+fn adaptive_chaos_crash_rejoin_parity() {
+    let nw = 3usize;
+    let plan = ChaosPlan::parse("seed=5,crash=1@4..8").unwrap();
+    let mk_stack = |inner: Box<dyn Transport>| -> (ParameterServer, Vec<Worker>, ChaosTransport) {
+        let mut ps = mk_ps_with_policy();
+        ps.force_resync(); // no-op guard: fresh server, round 1 resyncs anyway
+        let ws: Vec<Worker> = (0..nw as u32).map(|i| mk_worker(i, Some(adaptive_spec()))).collect();
+        let bus = ChaosTransport::new(inner, plan.clone()).with_policy(StragglerPolicy::Drop, 1);
+        (ps, ws, bus)
+    };
+    let (mut ps_a, mut ws_a, mut bus_a) = mk_stack(Box::new(LocalBus::default()));
+    let (mut ps_b, mut ws_b, mut bus_b) = mk_stack(Box::new(ThreadedBus::new()));
+    for t in 1u64..=12 {
+        let m_a = bus_a.membership(t, nw);
+        let m_b = bus_b.membership(t, nw);
+        assert_eq!(m_a, m_b, "membership diverged at round {t}");
+        assert_eq!(m_a.rejoined, t == 8, "t={t}");
+        if m_a.rejoined {
+            ps_a.force_resync();
+            ps_b.force_resync();
+        }
+        let r_a = {
+            let (b, _) = ps_a.broadcast(m_a.present);
+            if t == 8 {
+                assert!(matches!(b, ToWorker::Weights { .. }), "rejoin round must resync");
+            }
+            bus_a.round(&b, &mut ws_a).unwrap()
+        };
+        let r_b = {
+            let (b, _) = ps_b.broadcast(m_b.present);
+            bus_b.round(&b, &mut ws_b).unwrap()
+        };
+        assert_eq!(reply_bytes(&r_a), reply_bytes(&r_b), "gather diverged at round {t}");
+        let p_a = ps_a.apply(&r_a).unwrap();
+        let p_b = ps_b.apply(&r_b).unwrap();
+        assert_eq!(p_a, p_b, "participation diverged at round {t}");
+        assert_eq!(ps_a.master(), ps_b.master(), "masters diverged at round {t}");
+        let (replica, _) = ps_a.downlink_state().unwrap();
+        assert_eq!(replica, ps_b.downlink_state().unwrap().0, "replicas diverged at round {t}");
+        // live workers track the replica bit-exactly; the crashed one is
+        // stale by design until its rejoin resync
+        for w in &ws_a {
+            if w.id == 1 && (4..8).contains(&t) {
+                continue;
+            }
+            assert_eq!(w.weights(), replica, "worker {} != replica at round {t}", w.id);
+        }
+    }
+    assert_eq!(bus_a.stats, bus_b.stats, "fault patterns diverged");
+    assert_eq!(ps_a.stats, ps_b.stats);
+    assert!(ps_a.stats.resyncs >= 2, "round 1 + the forced rejoin resync");
+}
+
+/// Acceptance: the default `static` policy leaves the pre-policy path
+/// untouched — same single-message reply frames byte for byte, same
+/// masters, same accounting — whether the policy object is absent or
+/// bound with a static spec.
+#[test]
+fn static_policy_is_bit_identical_to_policy_free_path() {
+    let nw = 3usize;
+    let x0: Vec<f32> = (0..DIM).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
+    let run = |spec: Option<PolicySpec>| -> (Vec<Vec<Vec<u8>>>, Vec<f32>, u64, u64) {
+        let mut ps = ParameterServer::new(x0.clone(), Some(4));
+        let mut ws: Vec<Worker> = (0..nw as u32).map(|i| mk_worker(i, spec.clone())).collect();
+        let bus = LocalBus::default();
+        let mut frames = Vec::new();
+        for _ in 1u64..=15 {
+            let replies = {
+                let (b, _) = ps.broadcast(nw);
+                bus.round(&b, &mut ws).unwrap()
+            };
+            for r in &replies {
+                assert!(
+                    matches!(r, ToServer::Delta { .. }),
+                    "static path must stay single-message"
+                );
+            }
+            frames.push(reply_bytes(&replies));
+            ps.apply(&replies).unwrap();
+        }
+        (frames, ps.master().to_vec(), ps.stats.up_bytes, ps.stats.down_bytes)
+    };
+    assert_eq!(
+        run(None),
+        run(Some(PolicySpec::Static)),
+        "a static codec policy must not change a single byte"
+    );
+}

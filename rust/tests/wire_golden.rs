@@ -1,0 +1,297 @@
+//! Golden wire-format fixtures: byte-exact encode/decode vectors for
+//! every `CodecId` and every frame tag, pinned against
+//! `ps::protocol::WIRE_VERSION`.
+//!
+//! These tests exist to fail LOUDLY on any wire change. If one fails,
+//! either (a) you changed the wire format by accident — revert — or
+//! (b) you changed it on purpose: bump `WIRE_VERSION`, regenerate the
+//! hex below (each assertion prints the actual bytes on mismatch), and
+//! say so in DESIGN.md §Wire format. `scripts/ci.sh` runs this suite in
+//! both debug and `--release`, so an optimization-dependent divergence
+//! (fast-math, UB) in any codec's float path also lands here.
+//!
+//! Inputs are chosen so every codec is deterministic: TernGrad sees
+//! only `|u| ∈ {0, s}` (Bernoulli p ∈ {0, 1}) and QSGD only exact grid
+//! points (zero stochastic-rounding mass), so the fixtures hold for any
+//! rng stream.
+
+use qadam::ps::protocol::{ToServer, ToWorker, WIRE_VERSION};
+use qadam::quant::{
+    decode_msg, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd, TernGrad, WQuant,
+    WireMsg,
+};
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn compress(comp: &dyn Compressor, u: &[f32]) -> (Vec<f32>, WireMsg) {
+    let mut q = vec![0.0; u.len()];
+    // Any stream works: the fixture inputs leave no decision to the rng.
+    let msg = comp.compress_into(u, &mut q, &mut seeded_rng(0xfeed, 7));
+    (q, msg)
+}
+
+/// One fixture: codec, input, expected dequantized values, expected
+/// serialized bytes (hex), expected analytic wire_bytes.
+struct Fixture {
+    name: &'static str,
+    comp: Box<dyn Compressor>,
+    u: Vec<f32>,
+    q: Vec<f32>,
+    hex: String,
+    wire_bytes: usize,
+}
+
+/// `WireMsg::to_bytes` layout (version 2, unchanged since v1):
+/// `codec:u8 | bits:u8 | param:u32 | n:u32 | nscales:u32 | nwords:u32 |
+///  nraw:u32 | scales:f32* | words:u64* | raw:f32*`, all LE.
+fn fixtures() -> Vec<Fixture> {
+    vec![
+        Fixture {
+            name: "identity",
+            comp: Box::new(Identity),
+            u: vec![1.0, -2.0],
+            q: vec![1.0, -2.0],
+            hex: concat!(
+                "0000",             // codec=0 bits=0
+                "00000000",         // param
+                "02000000",         // n=2
+                "00000000",         // nscales=0
+                "00000000",         // nwords=0
+                "02000000",         // nraw=2
+                "0000803f",         // 1.0
+                "000000c0",         // -2.0
+            )
+            .into(),
+            wire_bytes: 14 + 8,
+        },
+        Fixture {
+            name: "logquant kg=0 (ternary rows)",
+            comp: Box::new(LogQuant::new(0)),
+            u: vec![1.0, -1.0, 0.0, 0.5],
+            // 0.5 is the zero/level midpoint: ties round up, to level 1
+            q: vec![1.0, -1.0, 0.0, 1.0],
+            hex: concat!(
+                "0102",             // codec=1 bits=2
+                "00000000",         // param = kg = 0
+                "04000000",         // n=4
+                "01000000",         // nscales=1
+                "01000000",         // nwords=1
+                "00000000",         // nraw=0
+                "0000803f",         // scale = 1.0
+                "9200000000000000", // codes [2,0,1,2] @2b LSB-first = 0x92
+            )
+            .into(),
+            wire_bytes: 14 + 4 + 1, // header + scale + ceil(4*2/8)
+        },
+        Fixture {
+            name: "wquant kx=1",
+            comp: Box::new(WQuant::new(1)),
+            u: vec![0.5, -0.25, 0.0, 0.25],
+            q: vec![0.5, -0.25, 0.0, 0.25],
+            hex: concat!(
+                "0203",             // codec=2 bits=3
+                "01000000",         // param = kx = 1
+                "04000000",         // n=4
+                "00000000",         // nscales=0 (absolute grid)
+                "01000000",         // nwords=1
+                "00000000",         // nraw=0
+                "8c06000000000000", // codes [4,1,2,3] @3b = 0x68c
+            )
+            .into(),
+            wire_bytes: 14 + 2, // header + ceil(4*3/8)
+        },
+        Fixture {
+            name: "terngrad",
+            comp: Box::new(TernGrad),
+            u: vec![2.0, -2.0, 0.0, 2.0],
+            q: vec![2.0, -2.0, 0.0, 2.0],
+            hex: concat!(
+                "0302",             // codec=3 bits=2
+                "00000000",         // param
+                "04000000",         // n=4
+                "01000000",         // nscales=1
+                "01000000",         // nwords=1
+                "00000000",         // nraw=0
+                "00000040",         // scale = 2.0
+                "9200000000000000", // codes [2,0,1,2]
+            )
+            .into(),
+            wire_bytes: 14 + 4 + 1,
+        },
+        Fixture {
+            name: "blockwise block=2",
+            comp: Box::new(Blockwise::new(2)),
+            u: vec![1.0, -3.0, 0.5, 0.5],
+            q: vec![2.0, -2.0, 0.5, 0.5],
+            hex: concat!(
+                "0401",             // codec=4 bits=1
+                "02000000",         // param = block = 2
+                "04000000",         // n=4
+                "02000000",         // nscales=2
+                "01000000",         // nwords=1
+                "00000000",         // nraw=0
+                "00000040",         // block scale 2.0
+                "0000003f",         // block scale 0.5
+                "0d00000000000000", // sign codes [1,0,1,1] @1b = 0x0d
+            )
+            .into(),
+            wire_bytes: 14 + 8 + 1,
+        },
+        Fixture {
+            name: "qsgd L=4",
+            comp: Box::new(Qsgd::new(4)),
+            u: vec![1.0, 0.5, -0.25, 0.0],
+            q: vec![1.0, 0.5, -0.25, 0.0],
+            hex: concat!(
+                "0504",             // codec=5 bits=4
+                "04000000",         // param = levels = 4
+                "04000000",         // n=4
+                "01000000",         // nscales=1
+                "01000000",         // nwords=1
+                "00000000",         // nraw=0
+                "0000803f",         // scale = 1.0
+                "6843000000000000", // codes [8,6,3,4] @4b = 0x4368
+            )
+            .into(),
+            wire_bytes: 14 + 4 + 2,
+        },
+    ]
+}
+
+const BUMP: &str = "wire format changed — bump ps::protocol::WIRE_VERSION, regenerate this \
+                    fixture from the printed actual bytes, and document the change in DESIGN.md";
+
+#[test]
+fn fixtures_are_for_wire_version_2() {
+    assert_eq!(
+        WIRE_VERSION, 2,
+        "WIRE_VERSION moved without regenerating the golden fixtures in this file"
+    );
+}
+
+/// Encode direction: every codec's serialized bytes match the golden
+/// vector bit-for-bit, and the analytic `wire_bytes` accounting matches
+/// the fixture.
+#[test]
+fn codec_encode_matches_golden_bytes() {
+    for f in fixtures() {
+        let (q, msg) = compress(f.comp.as_ref(), &f.u);
+        assert_eq!(q, f.q, "[{}] dequantized values drifted", f.name);
+        assert_eq!(
+            hex(&msg.to_bytes()),
+            f.hex,
+            "[{}] serialized bytes drifted — {BUMP}",
+            f.name
+        );
+        assert_eq!(msg.wire_bytes(), f.wire_bytes, "[{}] wire_bytes accounting", f.name);
+    }
+}
+
+/// Decode direction: the golden bytes parse and decode back to the
+/// fixture's dequantized values — so old captures stay readable until a
+/// deliberate, versioned break.
+#[test]
+fn codec_decode_matches_golden_values() {
+    for f in fixtures() {
+        let bytes: Vec<u8> = (0..f.hex.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&f.hex[i..i + 2], 16).unwrap())
+            .collect();
+        let msg = WireMsg::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("[{}] golden bytes no longer parse: {e} — {BUMP}", f.name));
+        let mut out = vec![0.0f32; msg.n];
+        decode_msg(&msg, &mut out);
+        assert_eq!(out, f.q, "[{}] golden bytes decode drifted", f.name);
+    }
+}
+
+fn logquant_fixture_msg() -> WireMsg {
+    compress(&LogQuant::new(0), &[1.0, -1.0, 0.0, 0.5]).1
+}
+
+fn terngrad_fixture_msg() -> WireMsg {
+    compress(&TernGrad, &[2.0, -2.0, 0.0, 2.0]).1
+}
+
+const T_EPOCH_HEX: &str = concat!(
+    "0700000000000000", // t = 7
+    "0100000000000000", // epoch = 1
+);
+const LOGQUANT_HEX: &str = concat!(
+    "0102", "00000000", "04000000", "01000000", "01000000", "00000000",
+    "0000803f", "9200000000000000",
+);
+const TERNGRAD_HEX: &str = concat!(
+    "0302", "00000000", "04000000", "01000000", "01000000", "00000000",
+    "00000040", "9200000000000000",
+);
+
+/// Every `ToWorker` frame tag, byte-for-byte.
+#[test]
+fn toworker_frames_match_golden_bytes() {
+    let weights = ToWorker::Weights { t: 7, epoch: 1, msg: logquant_fixture_msg() };
+    assert_eq!(
+        hex(&weights.to_bytes()),
+        format!("01{T_EPOCH_HEX}{LOGQUANT_HEX}"),
+        "Weights (tag 1) drifted — {BUMP}"
+    );
+    let delta = ToWorker::WeightsDelta { t: 7, epoch: 1, msg: logquant_fixture_msg() };
+    assert_eq!(
+        hex(&delta.to_bytes()),
+        format!("02{T_EPOCH_HEX}{LOGQUANT_HEX}"),
+        "WeightsDelta (tag 2) drifted — {BUMP}"
+    );
+    // parts payload: nparts=2, then (len | bytes) per part; both
+    // fixture messages serialize to 34 = 0x22 bytes
+    let parts =
+        ToWorker::WeightsDeltaParts { t: 7, epoch: 1, parts: vec![logquant_fixture_msg(), terngrad_fixture_msg()] };
+    assert_eq!(
+        hex(&parts.to_bytes()),
+        format!("03{T_EPOCH_HEX}02000000{}{LOGQUANT_HEX}{}{TERNGRAD_HEX}", "22000000", "22000000"),
+        "WeightsDeltaParts (tag 3) drifted — {BUMP}"
+    );
+    assert_eq!(hex(&ToWorker::Shutdown.to_bytes()), "00", "Shutdown (tag 0) drifted — {BUMP}");
+    // and they all parse back
+    for frame in [weights, delta, parts, ToWorker::Shutdown] {
+        let b = frame.to_bytes();
+        ToWorker::from_bytes(&b).expect("golden frame must parse");
+    }
+}
+
+/// Both `ToServer` frame tags, byte-for-byte.
+#[test]
+fn toserver_frames_match_golden_bytes() {
+    const WORKER_LOSS_HEX: &str = concat!(
+        "03000000", // worker = 3
+        "0000c03f", // loss = 1.5
+    );
+    let single = ToServer::Delta { t: 7, worker: 3, loss: 1.5, msg: logquant_fixture_msg() };
+    assert_eq!(
+        hex(&single.to_bytes()),
+        format!("000700000000000000{WORKER_LOSS_HEX}{LOGQUANT_HEX}"),
+        "Delta (tag 0) drifted — {BUMP}"
+    );
+    let parts = ToServer::DeltaParts {
+        t: 7,
+        worker: 3,
+        loss: 1.5,
+        parts: vec![logquant_fixture_msg(), terngrad_fixture_msg()],
+    };
+    assert_eq!(
+        hex(&parts.to_bytes()),
+        format!(
+            "010700000000000000{WORKER_LOSS_HEX}02000000{}{LOGQUANT_HEX}{}{TERNGRAD_HEX}",
+            "22000000", "22000000"
+        ),
+        "DeltaParts (tag 1) drifted — {BUMP}"
+    );
+    // roundtrip through the payload accessors
+    let back = ToServer::from_bytes(&parts.to_bytes()).unwrap();
+    assert_eq!((back.round(), back.worker(), back.loss()), (7, 3, 1.5));
+    assert_eq!(back.payload_n(), 8);
+    let mut out = vec![0.0f32; 8];
+    back.decode_range(0, &mut out);
+    assert_eq!(out, vec![1.0, -1.0, 0.0, 1.0, 2.0, -2.0, 0.0, 2.0]);
+}

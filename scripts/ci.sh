@@ -35,12 +35,28 @@ cargo build --release --examples
 step "cargo test -q"
 cargo test -q
 
+# Golden wire-format fixtures run in BOTH debug and --release: the
+# fixtures are byte-exact, so an optimization-dependent divergence in a
+# codec's float path (fast-math, UB) shows up as a release-only
+# mismatch here instead of a silent cross-build wire break.
+step "golden wire fixtures (debug)"
+cargo test -q --test wire_golden
+
+step "golden wire fixtures (--release)"
+cargo test -q --release --test wire_golden
+
 # Smoke-run the examples so example rot fails CI, not a user's first
 # ten minutes. fedlearn_edge needs no artifacts (sim problem over real
 # TCP, lossy chaos plan on); quickstart needs the PJRT artifacts and is
 # skipped when they are absent.
 step "example smoke: fedlearn_edge (lossy chaos, tiny budget)"
 cargo run --release --example fedlearn_edge -- --devices 2 --steps 40 --dim 512
+
+# One-round smoke of the codec-policy sweep: catches bench rot and the
+# adaptive plumbing (parts frames end to end) without paying for the
+# full equal-budget comparison.
+step "bench smoke: policy_sweep (1 round)"
+cargo bench --bench policy_sweep -- --rounds 1 --dim 4096 --workers 2
 
 if [ -f "${QADAM_ARTIFACTS:-artifacts}/manifest.json" ]; then
     step "example smoke: quickstart"
