@@ -1,0 +1,121 @@
+//! Shard-scaling sweep: rounds/sec and uplink+downlink bytes as the
+//! parameter server splits into more shards, everything else fixed
+//! (threaded engine, delta downlink, kg=2).
+//!
+//! The interesting outputs: how round throughput moves with the shard
+//! count on one machine (in-process, the shards only change codec
+//! scale granularity and frame count — the real win is that each shard
+//! can leave the process), and what sharding does to the byte
+//! accounting (per-shard frame headers and per-shard codec scales are
+//! real traffic).
+//!
+//!   cargo bench --bench shard_scaling
+//!   cargo bench --bench shard_scaling -- --rounds 1 --dim 4096 --shards 1,2   # CI smoke
+//!
+//! Flags: --rounds N (default 60), --dim D (default 32768),
+//! --workers W (default 8), --shards CSV (default 1,2,4,8),
+//! --json PATH (default BENCH_shard_scaling.json).
+//!
+//! Emits a machine-readable `BENCH_shard_scaling.json` next to the
+//! working directory so the perf trajectory can be tracked run over
+//! run.
+
+use qadam::optim::{LrSchedule, QAdamEf};
+use qadam::ps::transport::Transport;
+use qadam::ps::worker::{SimGradSource, Worker};
+use qadam::ps::{ShardPlan, ShardedServer, ThreadedBus};
+use qadam::sim::StochasticProblem;
+use qadam::util::Args;
+use std::time::Instant;
+
+fn mk_workers(n: usize, dim: usize, plan: &ShardPlan) -> Vec<Worker> {
+    (0..n as u32)
+        .map(|i| {
+            let src = SimGradSource { problem: StochasticProblem::new(dim, 0.05, 3) };
+            let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 1e-3 });
+            let mut w = Worker::new(i, Box::new(opt), Box::new(src), 7);
+            w.set_shards(plan.clone());
+            w
+        })
+        .collect()
+}
+
+struct ShardResult {
+    shards: usize,
+    secs: f64,
+    rounds_per_sec: f64,
+    up_bytes: u64,
+    down_bytes: u64,
+}
+
+fn run_one(dim: usize, nworkers: usize, shards: usize, rounds: u64) -> ShardResult {
+    let plan = ShardPlan::uniform(dim, shards);
+    let x0: Vec<f32> = (0..dim).map(|i| 0.1 * (i as f32 * 0.013).sin()).collect();
+    let mut srv = ShardedServer::new(x0, None, plan.clone(), 1 << 16, 1);
+    srv.enable_delta_downlink(Some(2), 16);
+    let mut workers = mk_workers(nworkers, dim, &plan);
+    let mut bus = ThreadedBus::new();
+    let start = Instant::now();
+    for _ in 0..rounds {
+        let frames = srv.broadcast(nworkers);
+        let lanes = bus.round_sharded(&frames, &mut workers).unwrap();
+        srv.apply(&lanes).unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let stats = srv.stats();
+    ShardResult {
+        shards,
+        secs,
+        rounds_per_sec: rounds as f64 / secs.max(1e-9),
+        up_bytes: stats.up_bytes,
+        down_bytes: stats.down_bytes,
+    }
+}
+
+fn main() {
+    let a = Args::parse_env().unwrap();
+    let rounds: u64 = a.get("rounds", 60).unwrap();
+    let dim: usize = a.get("dim", 32768).unwrap();
+    let nworkers: usize = a.get("workers", 8).unwrap();
+    let shard_list = a.get_str("shards", "1,2,4,8");
+    let json_path = a.get_str("json", "BENCH_shard_scaling.json");
+    a.reject_unknown().unwrap();
+    let shard_counts: Vec<usize> = shard_list
+        .split(',')
+        .map(|s| s.trim().parse().expect("--shards takes a comma list of counts"))
+        .collect();
+
+    println!("== shard_scaling: dim={dim} workers={nworkers} rounds={rounds} ==");
+    let mut results = Vec::with_capacity(shard_counts.len());
+    for &s in &shard_counts {
+        let r = run_one(dim, nworkers, s, rounds);
+        println!(
+            "shards={:<2} {:>9.1} rounds/s  up={:>10} B  down={:>10} B  ({:.3}s)",
+            r.shards, r.rounds_per_sec, r.up_bytes, r.down_bytes, r.secs
+        );
+        results.push(r);
+    }
+
+    // Machine-readable trajectory point.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"shard_scaling\",\n");
+    json.push_str(&format!(
+        "  \"dim\": {dim},\n  \"workers\": {nworkers},\n  \"rounds\": {rounds},\n"
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"shards\": {}, \"rounds_per_sec\": {:.3}, \"up_bytes\": {}, \"down_bytes\": {}, \"secs\": {:.6}}}{}\n",
+            r.shards,
+            r.rounds_per_sec,
+            r.up_bytes,
+            r.down_bytes,
+            r.secs,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&json_path, json).expect("writing the bench JSON");
+    println!("wrote {json_path}");
+}

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         resync_every: 64,
         chaos: None,
         codec_policy: qadam::quant::PolicySpec::Static,
+        shards: 1,
         straggler: qadam::elastic::StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,

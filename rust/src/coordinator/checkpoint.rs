@@ -1,10 +1,13 @@
 //! Checkpointing: binary snapshots of the parameter-server state
-//! (master weights + step), the delta-downlink server state (worker
-//! replica `x̂` + server EF residual) when that mode is on, and, when
-//! available, per-worker optimizer state (m, v, e) — enough to resume
-//! training or to serve/evaluate the model without rerunning.
+//! (master weights + step), the per-shard delta-downlink server state
+//! (worker replica `x̂` + server EF residual, one blob per shard) when
+//! that mode is on, and, when available, per-worker optimizer state
+//! (m, v, e) — enough to resume training or to serve/evaluate the
+//! model without rerunning.
 //!
-//! Format (little-endian), version 2:
+//! Format (little-endian). Version 2 — written whenever the downlink
+//! state is absent or covers the whole vector in one blob (every
+//! `--shards 1` run), byte-identical to pre-shard builds:
 //! ```text
 //!   magic "QADMCKPT" (8)  version u32  step u64
 //!   model_name: len u32 + utf8
@@ -14,12 +17,22 @@
 //!   nworkers u32; per worker: flags u8 (1 = has m/v/e), then 3*dim f32
 //!   crc32 of everything above (simple polynomial, self-contained)
 //! ```
-//! Version-1 checkpoints (no server section) still load; `server` comes
-//! back `None` and the trainer forces a resync frame on resume.
+//! Version 3 — written by multi-shard runs — replaces the server
+//! section with per-shard blobs (everything else unchanged):
+//! ```text
+//!   nshards u32; per shard: start u64, len u64,
+//!     replica: len f32, residual: len f32
+//! ```
+//! Version-1 checkpoints (no server section) still load with an empty
+//! `server` (the trainer forces a resync frame on resume). Restore is
+//! **shard-count-agnostic**: [`Checkpoint::stitched_server`] reassembles
+//! the blobs into full-dim vectors, which the trainer re-slices by its
+//! own plan — so a v2 file loads into an N-shard run and a v3 file
+//! loads into a `--shards 1` run.
 //!
 //! `from_bytes` must never panic: it feeds off files an operator hands
 //! us. Every read is bounds-checked (truncated or hostile headers —
-//! oversized `name_len`/`dim`/`nworkers` — return
+//! oversized `name_len`/`dim`/`nshards`/`nworkers` — return
 //! `Err("checkpoint truncated …")`), and trailing garbage after a
 //! structurally complete body is rejected too.
 
@@ -28,7 +41,13 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"QADMCKPT";
+/// The single-blob (unsharded) format version.
 const VERSION: u32 = 2;
+/// The per-shard-blob format version.
+const VERSION_SHARDED: u32 = 3;
+/// Every checkpoint version this build reads (`qadam info` reports it
+/// so operators can check compatibility before a rollout).
+pub const SUPPORTED_VERSIONS: &[u32] = &[1, 2, 3];
 
 #[derive(Clone, Debug, Default)]
 pub struct WorkerState {
@@ -37,10 +56,13 @@ pub struct WorkerState {
     pub e: Vec<f32>,
 }
 
-/// Delta-downlink server state (version-2 checkpoints): the worker
-/// replica estimate `x̂` and the server-side EF residual.
+/// One shard's delta-downlink state: the worker-replica estimate `x̂`
+/// and the server-side EF residual over
+/// `[start, start + replica.len())`. A version-2 file is the single
+/// full-range blob (`start == 0`, `replica.len() == dim`).
 #[derive(Clone, Debug, Default)]
-pub struct ServerState {
+pub struct ShardServerState {
+    pub start: usize,
     pub replica: Vec<f32>,
     pub residual: Vec<f32>,
 }
@@ -50,9 +72,10 @@ pub struct Checkpoint {
     pub model: String,
     pub step: u64,
     pub x: Vec<f32>,
-    /// Delta-downlink state (`None` in full-downlink runs and in
-    /// version-1 checkpoints).
-    pub server: Option<ServerState>,
+    /// Per-shard delta-downlink state blobs (empty in full-downlink
+    /// runs and in version-1 checkpoints). The blobs of a delta-mode
+    /// run tile `[0, dim)`; [`Self::stitched_server`] reassembles them.
+    pub server: Vec<ShardServerState>,
     pub workers: Vec<Option<WorkerState>>,
 }
 
@@ -117,31 +140,62 @@ fn get_f32s(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
 }
 
 impl Checkpoint {
+    /// Is this the single full-range (or absent) downlink state the
+    /// version-2 layout encodes? Multi-shard blobs need version 3.
+    fn needs_v3(&self) -> bool {
+        match self.server.as_slice() {
+            [] => false,
+            [s] => !(s.start == 0 && s.replica.len() == self.x.len()),
+            _ => true,
+        }
+    }
+
     pub fn to_bytes(&self) -> Vec<u8> {
         let dim = self.x.len();
+        let sharded = self.needs_v3();
+        let version = if sharded { VERSION_SHARDED } else { VERSION };
         let mut buf = Vec::with_capacity(64 + dim * 4 * (3 + 3 * self.workers.len()));
         buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&version.to_le_bytes());
         buf.extend_from_slice(&self.step.to_le_bytes());
         buf.extend_from_slice(&(self.model.len() as u32).to_le_bytes());
         buf.extend_from_slice(self.model.as_bytes());
         buf.extend_from_slice(&(dim as u64).to_le_bytes());
         put_f32s(&mut buf, &self.x);
-        match &self.server {
-            None => buf.push(0),
-            Some(s) => {
-                // The reader infers both run lengths from `dim`; writing
-                // mismatched vectors would seal a corrupt file under a
+        if sharded {
+            buf.extend_from_slice(&(self.server.len() as u32).to_le_bytes());
+            for s in &self.server {
+                // The reader bounds every blob against `dim`; writing an
+                // out-of-range blob would seal a corrupt file under a
                 // valid CRC, so this must hold in release builds too.
                 assert!(
-                    s.replica.len() == dim && s.residual.len() == dim,
-                    "server state dims {}/{} != dim {dim}",
+                    s.replica.len() == s.residual.len()
+                        && s.start + s.replica.len() <= dim,
+                    "shard state {}+{}/{} out of dim {dim}",
+                    s.start,
                     s.replica.len(),
                     s.residual.len()
                 );
-                buf.push(1);
+                buf.extend_from_slice(&(s.start as u64).to_le_bytes());
+                buf.extend_from_slice(&(s.replica.len() as u64).to_le_bytes());
                 put_f32s(&mut buf, &s.replica);
                 put_f32s(&mut buf, &s.residual);
+            }
+        } else {
+            match self.server.first() {
+                None => buf.push(0),
+                Some(s) => {
+                    // The v2 reader infers both run lengths from `dim`.
+                    assert!(
+                        s.replica.len() == dim && s.residual.len() == dim,
+                        "server state dims {}/{} != dim {dim}",
+                        s.replica.len(),
+                        s.residual.len()
+                    );
+                    buf.push(1);
+                    put_f32s(&mut buf, &s.replica);
+                    put_f32s(&mut buf, &s.residual);
+                }
             }
         }
         buf.extend_from_slice(&(self.workers.len() as u32).to_le_bytes());
@@ -176,7 +230,7 @@ impl Checkpoint {
         }
         let mut off = 8usize;
         let version = rd_u32(body, &mut off)?;
-        if version != 1 && version != VERSION {
+        if !SUPPORTED_VERSIONS.contains(&version) {
             bail!("unsupported checkpoint version {version}");
         }
         let step = rd_u64(body, &mut off)?;
@@ -188,17 +242,43 @@ impl Checkpoint {
         let dim64 = rd_u64(body, &mut off)?;
         let dim = usize::try_from(dim64).map_err(|_| anyhow!("checkpoint truncated (dim)"))?;
         let x = get_f32s(body, &mut off, dim)?;
-        let server = if version >= 2 {
-            match rd_u8(body, &mut off)? {
-                0 => None,
-                1 => Some(ServerState {
+        let server = match version {
+            1 => Vec::new(),
+            2 => match rd_u8(body, &mut off)? {
+                0 => Vec::new(),
+                1 => vec![ShardServerState {
+                    start: 0,
                     replica: get_f32s(body, &mut off, dim)?,
                     residual: get_f32s(body, &mut off, dim)?,
-                }),
+                }],
                 f => bail!("bad server-state flag {f}"),
+            },
+            _ => {
+                let nshards = rd_u32(body, &mut off)? as usize;
+                // each shard record is at least start + len (16 bytes) —
+                // a huge count cannot name more shards than bytes left
+                if nshards == 0 || nshards > (body.len() - off) / 16 {
+                    bail!("checkpoint truncated (shard count {nshards})");
+                }
+                let mut blobs = Vec::with_capacity(nshards);
+                for i in 0..nshards {
+                    let start64 = rd_u64(body, &mut off)?;
+                    let len64 = rd_u64(body, &mut off)?;
+                    let start = usize::try_from(start64)
+                        .map_err(|_| anyhow!("checkpoint truncated (shard {i} start)"))?;
+                    let len = usize::try_from(len64)
+                        .map_err(|_| anyhow!("checkpoint truncated (shard {i} len)"))?;
+                    if start.checked_add(len).filter(|&e| e <= dim).is_none() {
+                        bail!("shard {i} range {start}+{len} outside dim {dim}");
+                    }
+                    blobs.push(ShardServerState {
+                        start,
+                        replica: get_f32s(body, &mut off, len)?,
+                        residual: get_f32s(body, &mut off, len)?,
+                    });
+                }
+                blobs
             }
-        } else {
-            None
         };
         let nworkers = rd_u32(body, &mut off)? as usize;
         // each worker record is at least its flag byte — a huge count
@@ -222,6 +302,40 @@ impl Checkpoint {
             bail!("checkpoint truncated (trailing bytes)");
         }
         Ok(Checkpoint { model, step, x, server, workers })
+    }
+
+    /// Stitch the per-shard downlink blobs back into full-dim
+    /// `(replica, residual)` vectors — `None` when the file carries no
+    /// downlink state, `Err` when the blobs do not tile `[0, dim)`
+    /// exactly. Restoring through the stitched vectors (re-sliced by
+    /// the *current* plan) is what makes a checkpoint written under any
+    /// shard count load under any other.
+    pub fn stitched_server(&self, dim: usize) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        if self.server.is_empty() {
+            return Ok(None);
+        }
+        let mut blobs: Vec<&ShardServerState> = self.server.iter().collect();
+        blobs.sort_by_key(|s| s.start);
+        let mut replica = Vec::with_capacity(dim);
+        let mut residual = Vec::with_capacity(dim);
+        for b in blobs {
+            if b.start != replica.len() {
+                bail!(
+                    "shard state at {} does not tile the vector (expected offset {})",
+                    b.start,
+                    replica.len()
+                );
+            }
+            if b.replica.len() != b.residual.len() {
+                bail!("shard state at {} has mismatched blob lengths", b.start);
+            }
+            replica.extend_from_slice(&b.replica);
+            residual.extend_from_slice(&b.residual);
+        }
+        if replica.len() != dim {
+            bail!("shard states cover {} of dim {dim}", replica.len());
+        }
+        Ok(Some((replica, residual)))
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -257,7 +371,7 @@ mod tests {
             model: "mlp".into(),
             step: 123,
             x: (0..37).map(|i| i as f32 * 0.5).collect(),
-            server: None,
+            server: Vec::new(),
             workers: vec![
                 None,
                 Some(WorkerState {
@@ -271,10 +385,28 @@ mod tests {
 
     fn sample_with_server() -> Checkpoint {
         let mut c = sample();
-        c.server = Some(ServerState {
+        c.server = vec![ShardServerState {
+            start: 0,
             replica: (0..37).map(|i| i as f32 * 0.25).collect(),
             residual: vec![0.125; 37],
-        });
+        }];
+        c
+    }
+
+    fn sample_sharded() -> Checkpoint {
+        let mut c = sample();
+        c.server = vec![
+            ShardServerState {
+                start: 0,
+                replica: (0..20).map(|i| i as f32 * 0.25).collect(),
+                residual: vec![0.125; 20],
+            },
+            ShardServerState {
+                start: 20,
+                replica: (20..37).map(|i| i as f32 * 0.25).collect(),
+                residual: vec![0.25; 17],
+            },
+        ];
         c
     }
 
@@ -286,7 +418,7 @@ mod tests {
         assert_eq!(back.model, "mlp");
         assert_eq!(back.step, 123);
         assert_eq!(back.x, c.x);
-        assert!(back.server.is_none());
+        assert!(back.server.is_empty());
         assert!(back.workers[0].is_none());
         assert_eq!(back.workers[1].as_ref().unwrap().e, vec![-0.5; 37]);
     }
@@ -294,11 +426,47 @@ mod tests {
     #[test]
     fn roundtrip_with_server_state() {
         let c = sample_with_server();
-        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
-        let s = back.server.unwrap();
-        let want = c.server.unwrap();
-        assert_eq!(s.replica, want.replica);
-        assert_eq!(s.residual, want.residual);
+        let b = c.to_bytes();
+        // a single full-range blob stays on the version-2 layout
+        assert_eq!(u32::from_le_bytes(b[8..12].try_into().unwrap()), 2);
+        let back = Checkpoint::from_bytes(&b).unwrap();
+        assert_eq!(back.server.len(), 1);
+        assert_eq!(back.server[0].start, 0);
+        assert_eq!(back.server[0].replica, c.server[0].replica);
+        assert_eq!(back.server[0].residual, c.server[0].residual);
+    }
+
+    /// Multi-shard blobs round-trip on the version-3 layout, and the
+    /// stitched view reassembles them — so a v3 file restores under
+    /// `--shards 1` and a v2 file restores under any shard count.
+    #[test]
+    fn sharded_checkpoint_v3_roundtrip_and_stitching() {
+        let c = sample_sharded();
+        let b = c.to_bytes();
+        assert_eq!(u32::from_le_bytes(b[8..12].try_into().unwrap()), 3);
+        let back = Checkpoint::from_bytes(&b).unwrap();
+        assert_eq!(back.server.len(), 2);
+        assert_eq!(back.server[1].start, 20);
+        assert_eq!(back.server[1].replica, c.server[1].replica);
+        // stitched: v3 blobs == the v2 single blob's full vectors
+        let (replica, residual) = back.stitched_server(37).unwrap().unwrap();
+        let v2 = sample_with_server();
+        assert_eq!(replica, v2.server[0].replica);
+        let want: Vec<f32> =
+            (0..37).map(|i| if i < 20 { 0.125 } else { 0.25 }).collect();
+        assert_eq!(residual, want);
+        // and the v2 file stitches identically
+        let (r2, _) = v2.stitched_server(37).unwrap().unwrap();
+        assert_eq!(r2, replica);
+        // no state at all stitches to None
+        assert!(sample().stitched_server(37).unwrap().is_none());
+        // blobs that overlap (or leave a gap) are a clear error
+        let mut gap = sample_sharded();
+        gap.server[1].start = 19;
+        let b = gap.to_bytes();
+        let gap = Checkpoint::from_bytes(&b).unwrap();
+        assert!(gap.stitched_server(37).is_err());
+        assert!(sample_with_server().stitched_server(36).is_err());
     }
 
     #[test]
@@ -318,7 +486,7 @@ mod tests {
         let back = Checkpoint::from_bytes(&v1).unwrap();
         assert_eq!(back.step, 123);
         assert_eq!(back.x, c.x);
-        assert!(back.server.is_none());
+        assert!(back.server.is_empty());
         assert_eq!(back.workers.len(), 2);
     }
 
@@ -339,7 +507,7 @@ mod tests {
     /// must both return Err cleanly.
     #[test]
     fn truncation_and_bitflip_sweep_never_panics() {
-        for c in [sample(), sample_with_server()] {
+        for c in [sample(), sample_with_server(), sample_sharded()] {
             let b = c.to_bytes();
             for len in 0..b.len() {
                 assert!(
@@ -397,6 +565,28 @@ mod tests {
         }
         // unknown version
         assert!(Checkpoint::from_bytes(&patched(8, &99u32.to_le_bytes())).is_err());
+        // hostile v3 headers: oversized shard count / out-of-range blob
+        // ranges may not panic, wrap offsets, or allocate wildly
+        let v3 = sample_sharded().to_bytes();
+        let v3_len = v3.len() - 4;
+        let patched3 = |at: usize, val: &[u8]| -> Vec<u8> {
+            let mut body = v3[..v3_len].to_vec();
+            body[at..at + val.len()].copy_from_slice(val);
+            reseal(body)
+        };
+        // nshards sits right after x (dim_off + 8 + 37*4)
+        let nshards_off = 24 + 3 + 8 + 37 * 4;
+        for huge in [u32::MAX, (v3_len as u32) + 1, 0] {
+            assert!(Checkpoint::from_bytes(&patched3(nshards_off, &huge.to_le_bytes())).is_err());
+        }
+        // shard 0's start pushed outside dim
+        let start_off = nshards_off + 4;
+        assert!(Checkpoint::from_bytes(&patched3(start_off, &u64::MAX.to_le_bytes())).is_err());
+        // shard 0's len overrunning dim
+        assert!(
+            Checkpoint::from_bytes(&patched3(start_off + 8, &(1u64 << 40).to_le_bytes())).is_err()
+        );
+        assert!(Checkpoint::from_bytes(&v3).is_ok(), "the unpatched v3 bytes still parse");
         // trailing garbage after a structurally complete body
         let mut body = base[..body_len].to_vec();
         body.push(0xab);

@@ -140,6 +140,12 @@ pub struct ExperimentConfig {
     /// byte-identical; `per-layer`/`adaptive` switch to per-tensor
     /// frames ([`crate::quant::PolicySpec`], `--codec-policy`).
     pub codec_policy: PolicySpec,
+    /// Parameter-server shards: the flat vector is split into this many
+    /// contiguous ranges, each owned by an independent server instance
+    /// with its own EF residual, replica, resync schedule and policy
+    /// controller (`crate::ps::ShardedServer`). `1` (the default) is
+    /// byte-identical to the unsharded engine.
+    pub shards: usize,
     /// What a round does about stragglers: `Wait` (the seed behavior)
     /// or `Drop` (proceed at quorum).
     pub straggler: StragglerPolicy,
@@ -172,6 +178,7 @@ impl ExperimentConfig {
             resync_every: 64,
             chaos: None,
             codec_policy: PolicySpec::default(),
+            shards: 1,
             straggler: StragglerPolicy::default(),
             min_participation: 1,
             seed: 0,
@@ -207,7 +214,8 @@ impl ExperimentConfig {
         } else {
             format!("-{}", self.codec_policy.label())
         };
-        format!("{}-{}{}{}{}", self.model, self.method.label(), kx, down, pol)
+        let sh = if self.shards > 1 { format!("-s{}", self.shards) } else { String::new() };
+        format!("{}-{}{}{}{}{}", self.model, self.method.label(), kx, down, pol, sh)
     }
 
     /// Cross-field sanity, run by `Trainer::new` before anything is
@@ -245,6 +253,15 @@ impl ExperimentConfig {
                 bail!("--codec-policy is native-engine only (the AOT kernel bakes in one k_g)");
             }
             self.codec_policy.validate()?;
+        }
+        if self.shards == 0 {
+            bail!("--shards must be at least 1");
+        }
+        if self.shards > 1 && self.engine == Engine::PjrtKernel {
+            bail!(
+                "--shards > 1 is native-engine only (the AOT kernel emits one fused \
+                 whole-vector message and cannot split its payload per shard)"
+            );
         }
         Ok(())
     }
@@ -340,6 +357,24 @@ mod tests {
         assert!(c.chaos.is_none());
         assert_eq!(c.straggler, StragglerPolicy::Wait);
         assert_eq!(c.min_participation, 1);
+        assert_eq!(c.shards, 1, "the default is the unsharded (seed) engine");
+    }
+
+    #[test]
+    fn shards_validate_and_label() {
+        let mut c = ExperimentConfig::table3_default();
+        c.shards = 4;
+        c.validate().unwrap();
+        assert_eq!(c.run_label(), "vgg_sim-qadam-kg2-s4");
+        c.shards = 0;
+        assert!(c.validate().is_err());
+        // the AOT kernel cannot split its fused payload
+        c.shards = 2;
+        c.engine = Engine::PjrtKernel;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("native-engine"), "{err}");
+        c.engine = Engine::Native;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -24,6 +24,10 @@ pub struct Row {
     /// Mean uplink code bits/element the codec policy chose this round
     /// (the static codec's analytic bits when no policy is installed).
     pub policy_bits: f64,
+    /// Which parameter-server shard this row describes: `-1` is the
+    /// merged (whole-fleet) row every run emits; multi-shard runs add
+    /// one row per shard (`0..N`) with that shard's bytes/resyncs.
+    pub shard: i64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -57,12 +61,12 @@ impl MetricsLog {
             .with_context(|| format!("creating {}", path.display()))?;
         writeln!(
             f,
-            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs,policy_bits"
+            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs,policy_bits,shard"
         )?;
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{},{},{},{:.3}",
+                "{},{},{},{},{:.6},{:.6},{},{},{},{:.3},{}",
                 r.t,
                 r.epoch,
                 r.train_loss,
@@ -72,7 +76,8 @@ impl MetricsLog {
                 r.residual_norm,
                 r.participation,
                 r.resyncs,
-                r.policy_bits
+                r.policy_bits,
+                r.shard
             )?;
         }
         Ok(())
@@ -97,6 +102,7 @@ mod tests {
             participation: 7,
             resyncs: 2,
             policy_bits: 2.75,
+            shard: -1,
         });
         let dir = std::env::temp_dir().join("qadam_metrics_test");
         let p = dir.join("m.csv");
@@ -104,9 +110,9 @@ mod tests {
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("t,epoch,"));
         let header = s.lines().next().unwrap();
-        assert!(header.ends_with("participation,resyncs,policy_bits"));
+        assert!(header.ends_with("participation,resyncs,policy_bits,shard"));
         assert_eq!(s.lines().count(), 2);
-        assert!(s.lines().nth(1).unwrap().ends_with(",7,2,2.750"));
+        assert!(s.lines().nth(1).unwrap().ends_with(",7,2,2.750,-1"));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -125,6 +131,7 @@ mod tests {
                 participation: 1,
                 resyncs: 0,
                 policy_bits: 3.0,
+                shard: -1,
             });
         }
         assert_eq!(log.best_acc(), Some(0.5));

@@ -88,6 +88,7 @@ pub fn run_table(which: &str, steps: u64, workers: usize, outdir: &str) -> Resul
             resync_every: 64,
             chaos: None,
             codec_policy: crate::quant::PolicySpec::Static,
+            shards: 1,
             straggler: crate::elastic::StragglerPolicy::Wait,
             min_participation: 1,
             seed: 0,

@@ -9,7 +9,7 @@ use crate::models::{artifacts_dir, Manifest};
 use crate::optim::{BlockwiseSgdEf, LrSchedule, QAdamEf, TernGradSgd, WorkerOpt};
 use crate::ps::transport::{LocalBus, ThreadedBus, Transport};
 use crate::ps::worker::{ModelGradSource, Worker};
-use crate::ps::ParameterServer;
+use crate::ps::{ShardPlan, ShardedServer};
 use crate::quant::{CodecPolicy, TensorLayout};
 use crate::runtime::kernel::PjrtQAdam;
 use crate::runtime::{KernelQAdam, ModelRuntime, Runtime};
@@ -50,7 +50,10 @@ impl RunSummary {
 
 pub struct Trainer {
     pub cfg: ExperimentConfig,
-    ps: ParameterServer,
+    /// The (possibly 1-shard) server fleet: `--shards 1` builds the
+    /// single unsharded `ParameterServer` behind the same merged API,
+    /// byte-identical to pre-shard builds.
+    ps: ShardedServer,
     workers: Vec<Worker>,
     bus: Box<dyn Transport>,
     model: Arc<ModelRuntime>,
@@ -211,16 +214,19 @@ impl Trainer {
                     .with_policy(cfg.straggler, cfg.min_participation),
             );
         }
-        let mut ps = ParameterServer::with_shards(
-            model.init_flat(cfg.seed),
-            cfg.kx,
-            crate::ps::server::DEFAULT_BLOCK,
-            ps_threads,
-        );
         // The named parameter blocks of the flat vector — the
-        // granularity the codec policy decides at.
+        // granularity the codec policy decides at, and (under a
+        // non-static policy) the boundaries shard ranges snap to.
         let layout = TensorLayout::from_named(
             &model.meta.params.iter().map(|p| (p.name.clone(), p.size())).collect::<Vec<_>>(),
+        );
+        let plan = ShardPlan::build(dim, cfg.shards, &cfg.codec_policy, &layout)?;
+        let mut ps = ShardedServer::new(
+            model.init_flat(cfg.seed),
+            cfg.kx,
+            plan.clone(),
+            crate::ps::server::DEFAULT_BLOCK,
+            ps_threads,
         );
         if cfg.downlink == Downlink::Delta {
             // The downlink reuses the gradient codec family: the method's
@@ -235,18 +241,23 @@ impl Trainer {
                      ship fp32 (protocol-correct, but no downlink compression)"
                 );
             }
-            ps.enable_delta_downlink(crate::quant::gradient_codec(kg), cfg.resync_every);
-            // Non-static policy: the server runs its own controller over
-            // the same layout, and delta frames carry per-tensor codecs.
-            if let Some(p) = make_policy(&cfg, &layout)? {
-                ps.set_downlink_policy(p);
+            ps.enable_delta_downlink(kg, cfg.resync_every);
+            // Non-static policy: every shard runs its own controller
+            // over the layout cropped to its range, and delta frames
+            // carry per-tensor codecs.
+            if !cfg.codec_policy.is_static() {
+                if let Some(kg) = kg {
+                    ps.set_downlink_policy(&cfg.codec_policy, &layout, kg)?;
+                }
             }
         }
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
             let opt = make_opt(&cfg, dim, kernel.as_ref(), make_policy(&cfg, &layout)?)?;
             let src = ModelGradSource { model: model.clone(), data: data.clone(), batch: cfg.batch };
-            workers.push(Worker::new(i as u32, opt, Box::new(src), cfg.seed ^ 0x5a5a));
+            let mut w = Worker::new(i as u32, opt, Box::new(src), cfg.seed ^ 0x5a5a);
+            w.set_shards(plan.clone());
+            workers.push(w);
         }
         let log = MetricsLog::new(cfg.run_label());
         Ok(Self { cfg, ps, workers, bus, model, data, restored: false, log })
@@ -265,8 +276,57 @@ impl Trainer {
     }
 
     fn eval(&mut self) -> Result<f32> {
-        let w = self.ps.output_weights().to_vec();
+        let w = self.ps.output_weights();
         self.model.accuracy(&w, self.data.as_ref(), self.cfg.eval_batches)
+    }
+
+    /// Uplink policy bits for a metrics row (the worker controller's
+    /// choice, falling back to the static codec's analytic bits).
+    fn row_policy_bits(&self) -> f64 {
+        self.workers[0].policy_bits().unwrap_or_else(|| self.workers[0].bits_per_element())
+    }
+
+    /// Push the merged metrics row plus, in multi-shard runs, one row
+    /// per shard carrying that shard's bytes/resyncs (the `shard` CSV
+    /// dimension; single-shard runs emit only the merged row).
+    fn log_rows(&mut self, t: u64, epoch: u64, loss: f32, acc: f32, participation: usize) {
+        let nworkers = self.workers.len();
+        let merged = self.ps.stats();
+        let policy_bits = self.row_policy_bits();
+        self.log.push(Row {
+            t,
+            epoch,
+            train_loss: loss,
+            test_acc: acc,
+            up_mb_per_round: merged.up_mb_per_round_per_worker(nworkers),
+            down_mb_per_round: merged.down_mb_per_round_per_worker(nworkers),
+            residual_norm: self.workers[0].residual_norm(),
+            participation,
+            resyncs: merged.resyncs,
+            policy_bits,
+            shard: -1,
+        });
+        if self.ps.nshards() > 1 {
+            for s in 0..self.ps.nshards() {
+                let st = *self.ps.shard_stats(s);
+                self.log.push(Row {
+                    t,
+                    epoch,
+                    train_loss: loss,
+                    test_acc: acc,
+                    up_mb_per_round: st.up_mb_per_round_per_worker(nworkers),
+                    down_mb_per_round: st.down_mb_per_round_per_worker(nworkers),
+                    residual_norm: self.workers[0].residual_norm(),
+                    participation,
+                    resyncs: st.resyncs,
+                    // the column's semantics are uplink bits on every
+                    // row (per-shard *downlink* controller choices are
+                    // queryable via `ParameterServer::downlink_bits`)
+                    policy_bits,
+                    shard: s as i64,
+                });
+            }
+        }
     }
 
     pub fn run(&mut self) -> Result<RunSummary> {
@@ -276,35 +336,22 @@ impl Trainer {
             let epoch = self.cfg.epoch_of(t);
             // Downlink membership first: who receives (and is charged
             // for) this round's broadcast, and whether a rejoin forces
-            // a full-weights resync to re-anchor a stale replica.
+            // a full-weights resync — on every shard: the rejoined
+            // worker missed frames on every lane.
             let m = self.bus.membership(t, self.workers.len());
             if m.rejoined {
-                self.ps.force_resync();
+                self.ps.force_resync_all();
             }
             let replies = {
-                let (b, _w) = self.ps.broadcast_at_epoch(m.present, epoch);
-                self.bus.round(&b, &mut self.workers)?
+                let frames = self.ps.broadcast_at_epoch(m.present, epoch);
+                self.bus.round_sharded(&frames, &mut self.workers)?
             };
             let part = self.ps.apply(&replies)?;
             last_loss = part.mean_loss;
             let do_eval = self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0;
             if do_eval || t == self.cfg.steps {
                 let acc = self.eval()?;
-                let s = &self.ps.stats;
-                self.log.push(Row {
-                    t,
-                    epoch,
-                    train_loss: last_loss,
-                    test_acc: acc,
-                    up_mb_per_round: s.up_mb_per_round_per_worker(self.workers.len()),
-                    down_mb_per_round: s.down_mb_per_round_per_worker(self.workers.len()),
-                    residual_norm: self.workers[0].residual_norm(),
-                    participation: part.count(),
-                    resyncs: s.resyncs,
-                    policy_bits: self.workers[0]
-                        .policy_bits()
-                        .unwrap_or_else(|| self.workers[0].bits_per_element()),
-                });
+                self.log_rows(t, epoch, last_loss, acc, part.count());
                 eprintln!(
                     "[{}] t={t} epoch={epoch} loss={last_loss:.4} acc={:.2}%",
                     self.log.label,
@@ -323,26 +370,13 @@ impl Trainer {
             // a restore and keeps the seed behavior: no rounds, no rows.)
             let t = self.ps.step();
             let epoch = self.cfg.epoch_of(t.max(1));
-            let w = self.ps.output_weights().to_vec();
+            let w = self.ps.output_weights();
             let batch = self.data.train_batch(0, t, self.cfg.batch);
             let (loss, _grad) = self.model.loss_grad(&w, &batch)?;
             last_loss = loss;
             let acc = self.model.accuracy(&w, self.data.as_ref(), self.cfg.eval_batches)?;
-            let s = &self.ps.stats;
-            self.log.push(Row {
-                t,
-                epoch,
-                train_loss: last_loss,
-                test_acc: acc,
-                up_mb_per_round: s.up_mb_per_round_per_worker(self.workers.len()),
-                down_mb_per_round: s.down_mb_per_round_per_worker(self.workers.len()),
-                residual_norm: self.workers[0].residual_norm(),
-                participation: 0, // no round ran: this row is a pure eval
-                resyncs: s.resyncs,
-                policy_bits: self.workers[0]
-                    .policy_bits()
-                    .unwrap_or_else(|| self.workers[0].bits_per_element()),
-            });
+            // participation 0: no round ran, this row is a pure eval
+            self.log_rows(t, epoch, last_loss, acc, 0);
             eprintln!(
                 "[{}] t={t} (restored at horizon) loss={last_loss:.4} acc={:.2}%",
                 self.log.label,
@@ -351,13 +385,14 @@ impl Trainer {
         }
         self.restored = false;
         let (size_mb, fp32_mb) = self.model_size_mb();
+        let stats = self.ps.stats();
         Ok(RunSummary {
             label: self.log.label.clone(),
             final_acc: self.log.last_acc().unwrap_or(0.0),
             best_acc: self.log.best_acc().unwrap_or(0.0),
             final_loss: last_loss,
-            comm_mb_per_iter: self.ps.stats.up_mb_per_round_per_worker(self.workers.len()),
-            down_mb_per_iter: self.ps.stats.down_mb_per_round_per_worker(self.workers.len()),
+            comm_mb_per_iter: stats.up_mb_per_round_per_worker(self.workers.len()),
+            down_mb_per_iter: stats.down_mb_per_round_per_worker(self.workers.len()),
             model_size_mb: size_mb,
             model_size_fp32_mb: fp32_mb,
             steps: self.cfg.steps,
@@ -365,19 +400,26 @@ impl Trainer {
     }
 
     /// Snapshot the current training state (weights + step + the
-    /// delta-downlink server state when that mode is on + worker
-    /// optimizer states when available).
+    /// per-shard delta-downlink server state when that mode is on +
+    /// worker optimizer states when available). Single-shard runs write
+    /// the version-2 layout byte-identically; multi-shard runs write
+    /// one blob per shard (version 3).
     pub fn checkpoint(&self) -> super::checkpoint::Checkpoint {
+        let mut server = Vec::new();
+        for (i, &(start, _len)) in self.ps.plan().ranges().iter().enumerate() {
+            if let Some((replica, residual)) = self.ps.shard(i).downlink_state() {
+                server.push(super::checkpoint::ShardServerState {
+                    start,
+                    replica: replica.to_vec(),
+                    residual: residual.to_vec(),
+                });
+            }
+        }
         super::checkpoint::Checkpoint {
             model: self.cfg.model.clone(),
             step: self.ps.step(),
-            x: self.ps.master().to_vec(),
-            server: self.ps.downlink_state().map(|(replica, residual)| {
-                super::checkpoint::ServerState {
-                    replica: replica.to_vec(),
-                    residual: residual.to_vec(),
-                }
-            }),
+            x: self.ps.master(),
+            server,
             workers: self
                 .workers
                 .iter()
@@ -390,13 +432,15 @@ impl Trainer {
 
     /// Resume from a checkpoint written by [`Trainer::checkpoint`].
     ///
-    /// In delta-downlink mode a version-2 checkpoint restores the
-    /// server replica/residual *and* seeds every worker's weight view
-    /// from the replica (the replica is the bit-exact worker state), so
-    /// a resumed run continues the exact trajectory of an uninterrupted
-    /// one. Restoring a checkpoint without downlink state (a version-1
-    /// file, or one written in full mode) forces a full resync frame on
-    /// the next round instead.
+    /// In delta-downlink mode the per-shard replica/residual blobs are
+    /// stitched back to full vectors, re-sliced by *this* run's shard
+    /// plan, and every worker's weight view is seeded from the replica
+    /// (the replica is the bit-exact worker state) — so a resumed run
+    /// continues the exact trajectory of an uninterrupted one, and a
+    /// file written under any shard count restores under any other
+    /// (v2 ↔ v3). Restoring a checkpoint without downlink state (a
+    /// version-1 file, or one written in full mode) forces full resync
+    /// frames on the next round instead.
     pub fn restore(&mut self, ckpt: &super::checkpoint::Checkpoint) -> Result<()> {
         if ckpt.model != self.cfg.model {
             return Err(anyhow!("checkpoint is for model '{}', trainer runs '{}'", ckpt.model, self.cfg.model));
@@ -405,18 +449,16 @@ impl Trainer {
             return Err(anyhow!("checkpoint dim {} != model dim {}", ckpt.x.len(), self.model.dim()));
         }
         self.ps.restore(&ckpt.x, ckpt.step);
-        match (&ckpt.server, self.cfg.downlink) {
-            (Some(s), Downlink::Delta) => {
-                self.ps.restore_downlink(&s.replica, &s.residual)?;
+        if self.cfg.downlink == Downlink::Delta {
+            // Absent state (a v1 file, or one written in full mode):
+            // `ps.restore` already scheduled the resync frames that
+            // re-sync the workers. Full mode ignores any state blobs.
+            if let Some((replica, residual)) = ckpt.stitched_server(self.model.dim())? {
+                self.ps.restore_downlink_full(&replica, &residual)?;
                 for w in self.workers.iter_mut() {
-                    w.restore_weights(&s.replica);
+                    w.restore_weights(&replica);
                 }
             }
-            // v1 file (or one written in full mode): `ps.restore` already
-            // scheduled the resync frame that re-syncs the workers.
-            (None, Downlink::Delta) => {}
-            // full mode ignores any delta-downlink state in the file
-            _ => {}
         }
         for (w, ws) in self.workers.iter_mut().zip(&ckpt.workers) {
             if let Some(ws) = ws {
@@ -439,7 +481,7 @@ impl Trainer {
     pub fn eval_post_quantized(&self, kx: u32) -> Result<f32> {
         let wq = crate::quant::WQuant::new(kx);
         let mut q = vec![0.0f32; self.ps.dim()];
-        wq.quantize_into(self.ps.master(), &mut q);
+        wq.quantize_into(&self.ps.master(), &mut q);
         self.model.accuracy(&q, self.data.as_ref(), self.cfg.eval_batches)
     }
 }

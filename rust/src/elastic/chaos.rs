@@ -275,6 +275,48 @@ impl ChaosTransport {
         &self.plan
     }
 
+    /// Apply the plan's reply-level faults to one lane's gathered
+    /// replies, in the deterministic gather order — the shared tail of
+    /// the unsharded round and of each sharded lane.
+    fn apply_reply_faults(&mut self, replies: Vec<ToServer>) -> Vec<ToServer> {
+        let mut out = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let (rt, rw) = (reply.round(), reply.worker());
+            if self.plan.drops(rt, rw) {
+                self.stats.dropped += 1;
+                continue;
+            }
+            if self.plan.delays(rt, rw) {
+                self.stats.delayed += 1;
+                if self.policy == StragglerPolicy::Drop {
+                    continue; // missed the deadline
+                }
+            }
+            let duplicated = self.plan.duplicates(rt, rw);
+            let delivered = if self.plan.corrupts(rt, rw) {
+                self.stats.corrupted += 1;
+                self.corrupt_reply(&reply, rt, rw)
+            } else {
+                Some(reply)
+            };
+            match delivered {
+                None => self.stats.dropped += 1, // corrupt frame failed to parse
+                Some(r) => {
+                    if duplicated {
+                        self.stats.duplicated += 1;
+                        if self.policy == StragglerPolicy::Wait {
+                            // surface the retransmit so the server's
+                            // duplicate rejection fires
+                            out.push(r.clone());
+                        }
+                    }
+                    out.push(r);
+                }
+            }
+        }
+        out
+    }
+
     /// Flip one deterministic bit of the serialized reply. Returns the
     /// reparsed frame when it still parses with intact `(t, worker, n)`
     /// metadata, `None` (dropped) otherwise.
@@ -331,43 +373,56 @@ impl Transport for ChaosTransport {
             r?
         };
 
-        // Reply-level faults, in the deterministic gather order.
-        let mut out = Vec::with_capacity(replies.len());
-        for reply in replies {
-            let (rt, rw) = (reply.round(), reply.worker());
-            if self.plan.drops(rt, rw) {
-                self.stats.dropped += 1;
-                continue;
-            }
-            if self.plan.delays(rt, rw) {
-                self.stats.delayed += 1;
-                if self.policy == StragglerPolicy::Drop {
-                    continue; // missed the deadline
-                }
-            }
-            let duplicated = self.plan.duplicates(rt, rw);
-            let delivered = if self.plan.corrupts(rt, rw) {
-                self.stats.corrupted += 1;
-                self.corrupt_reply(&reply, rt, rw)
-            } else {
-                Some(reply)
-            };
-            match delivered {
-                None => self.stats.dropped += 1, // corrupt frame failed to parse
-                Some(r) => {
-                    if duplicated {
-                        self.stats.duplicated += 1;
-                        if self.policy == StragglerPolicy::Wait {
-                            // surface the retransmit so the server's
-                            // duplicate rejection fires
-                            out.push(r.clone());
-                        }
-                    }
-                    out.push(r);
-                }
-            }
-        }
+        let out = self.apply_reply_faults(replies);
         self.check_quorum(t, out)
+    }
+
+    /// Sharded rounds: **crash and reply-level fault decisions stay
+    /// keyed by `(t, worker)`** — a worker faults as a unit, so a
+    /// crashed or dropped worker loses *every* lane of the round and
+    /// the per-shard reporter sets stay consistent. Only corruption is
+    /// per-lane in its outcome: the same decision flips one bit of each
+    /// lane's (different) frame, and each lane independently delivers
+    /// or drops the result. [`FaultStats`] consequently count per-lane
+    /// events in multi-shard rounds.
+    fn round_sharded(
+        &mut self,
+        broadcasts: &[ToWorker],
+        workers: &mut [Worker],
+    ) -> Result<Vec<Vec<ToServer>>> {
+        if broadcasts.len() == 1 {
+            // the unsharded chaos path, byte-identical
+            return Ok(vec![self.round(&broadcasts[0], workers)?]);
+        }
+        let t = match &broadcasts[0] {
+            ToWorker::Weights { t, .. }
+            | ToWorker::WeightsDelta { t, .. }
+            | ToWorker::WeightsDeltaParts { t, .. } => *t,
+            ToWorker::Shutdown => return self.inner.round_sharded(broadcasts, workers),
+        };
+        if self.plan.is_empty() {
+            let lanes = self.inner.round_sharded(broadcasts, workers)?;
+            return lanes.into_iter().map(|r| self.check_quorum(t, r)).collect();
+        }
+        let n_crashed = workers.iter().filter(|w| self.plan.crashed(t, w.id)).count();
+        let lanes = if n_crashed == 0 {
+            self.inner.round_sharded(broadcasts, workers)?
+        } else {
+            self.stats.crashed += n_crashed as u64;
+            let plan = &self.plan;
+            workers.sort_by_key(|w| plan.crashed(t, w.id)); // stable: alive prefix stays id-ordered
+            let n_alive = workers.len() - n_crashed;
+            let r = self.inner.round_sharded(broadcasts, &mut workers[..n_alive]);
+            workers.sort_by_key(|w| w.id);
+            r?
+        };
+        lanes
+            .into_iter()
+            .map(|lane| {
+                let out = self.apply_reply_faults(lane);
+                self.check_quorum(t, out)
+            })
+            .collect()
     }
 
     fn name(&self) -> &'static str {

@@ -1,5 +1,13 @@
 //! The participation layer of the round protocol: who is in a round,
 //! what the server averaged over, and what to do about stragglers.
+//!
+//! **Sharding contract.** All three types here are worker-level and
+//! shard-agnostic: one [`Membership`] describes the round across every
+//! shard lane (a worker is present as a unit), a [`StragglerPolicy`]
+//! applies identically per lane, and the merged [`Participation`] of a
+//! sharded round (`ps::shard::ShardedServer::apply`) is the union of
+//! the per-shard reporter sets — identical to each shard's own set
+//! under worker-level faults.
 
 /// Outcome of one applied round: which workers' deltas made it into the
 /// server's mean. `ParameterServer::apply` averages over the *received*

@@ -30,6 +30,18 @@
 //! every engine is bit-identical to the unwrapped transport; with a
 //! fixed plan seed a chaotic run is reproducible bit-for-bit across the
 //! sequential and threaded engines (asserted in [`chaos`] tests).
+//!
+//! **Sharding contract.** Membership and fault decisions are
+//! **worker-level, not lane-level**: a worker is present (or crashed,
+//! or dropped) as a unit across every parameter-server shard it talks
+//! to, so the per-shard reporter sets of a sharded round stay
+//! consistent and one [`Membership`] covers all lanes. The exceptions
+//! are deliberate: over TCP each shard listener tracks its own
+//! connections (`ps::transport::TcpShardGroup::shard_memberships`
+//! exposes the per-lane view so a driver can resync a single shard),
+//! and a corrupt fault's *outcome* is per-lane (the same decision
+//! bit-flips each lane's different frame). A worker's rejoin forces a
+//! resync on every shard — it missed frames on every lane.
 
 pub mod chaos;
 pub mod membership;

@@ -18,10 +18,12 @@
 //!   (model fwd/bwd graphs and the fused Pallas QAdam step kernel)
 //!   and executes them from the request path. Python is never needed
 //!   at run time.
-//! * [`ps`] — the parameter-server system: sharded server (Alg. 2),
-//!   worker (Alg. 3), transports behind one [`ps::Transport`] round
-//!   contract (sequential / threaded in-proc, TCP), protocol + byte
-//!   accounting.
+//! * [`ps`] — the parameter-server system: block-parallel server
+//!   (Alg. 2), the scale-out shard layer ([`ps::ShardedServer`]: N
+//!   independent servers over contiguous ranges, one process/host
+//!   each), worker (Alg. 3), transports behind one [`ps::Transport`]
+//!   round contract (sequential / threaded in-proc, TCP — sharded
+//!   rounds run as independent lanes), protocol + byte accounting.
 //! * [`elastic`] — fault tolerance for the round protocol: membership
 //!   and participation semantics, straggler policies with quorum, and
 //!   the deterministic `ChaosPlan`/`ChaosTransport` fault injector.

@@ -3,15 +3,19 @@
 //! Subcommands:
 //!   train   single-process training (in-proc PS + N workers, PJRT graphs)
 //!   eval    evaluate a checkpoint (optionally after weight quantization)
-//!   serve   TCP parameter server (pair with `worker` processes)
+//!   serve   TCP parameter-server shard (pair with `worker` processes)
 //!   worker  TCP worker process
-//!   info    inspect artifacts/manifest.json
+//!   info    binary-compatibility capabilities (JSON) + artifacts/manifest.json
 //!
 //! Examples:
 //!   qadam train --model vgg_sim --dataset cifar10_sim --kg 2 --steps 200
 //!   qadam train --model resnet_sim --dataset cifar100_sim --method terngrad
 //!   qadam serve --addr 127.0.0.1:7777 --workers 2 &
 //!   qadam worker --addr 127.0.0.1:7777 --id 0 & qadam worker --id 1
+//!   # 2-shard scale-out: one serve process per shard (ports 7777, 7778)
+//!   qadam serve --addr 127.0.0.1:7777 --shard-id 0/2 --workers 2 &
+//!   qadam serve --addr 127.0.0.1:7777 --shard-id 1/2 --workers 2 &
+//!   qadam worker --addr 127.0.0.1:7777 --shards 2 --id 0 --kg 2
 
 use anyhow::{anyhow, bail, Result};
 use qadam::coordinator::config::{BusKind, Downlink, Engine};
@@ -61,6 +65,11 @@ train flags:
   --straggler P         wait | drop (default wait; drop = proceed at
                         quorum, stragglers count as dropped replies)
   --min-participation N quorum under --straggler drop (default 1)
+  --shards N            parameter-server shards: the flat vector splits
+                        into N contiguous ranges, each with its own
+                        server state (EF residual, replica, resync,
+                        policy controller). 1 (default) = the seed
+                        engine, byte-identical
   --workers N           number of workers (default 8)
   --steps N             training steps (default 200)
   --steps-per-epoch N   epoch length for LR decay (default 64)
@@ -79,8 +88,12 @@ serve flags:  --addr A --workers N --dim D --steps N [--kx K] [--kg K]
               [--downlink D] [--resync-every N] [--round-deadline-ms MS]
               [--straggler P] [--min-participation N] [--chaos SPEC]
               [--codec-policy P]  (applies to the delta downlink)
+              [--shard-id i/N]  (this process serves shard i of N;
+              listens on base addr port + i; default 0/1 = unsharded)
 worker flags: --addr A --id I --dim D --method M [--kg K] [--alpha A]
-              [--downlink D] [--codec-policy P]  (match the server)
+              [--downlink D] [--codec-policy P] [--shards N]
+              (match the server fleet; --shards N connects to the N
+              listeners at base addr port + 0..N)
 ";
 
 fn parse_method(a: &Args) -> Result<(Method, Option<u32>, Engine)> {
@@ -132,9 +145,13 @@ fn parse_elastic(a: &Args) -> Result<(Option<ChaosPlan>, StragglerPolicy, usize)
     Ok((chaos, straggler, a.get("min_participation", 1usize)?))
 }
 
-/// Bind a non-static policy spec to the sim layout (`None` for static
-/// or methods without a `k_g` — callers error/warn as appropriate).
-fn sim_policy(spec: &PolicySpec, m: Method, dim: usize) -> Result<Option<CodecPolicy>> {
+/// Bind a non-static policy spec to `layout` (`None` for static or
+/// methods without a `k_g` — callers error/warn as appropriate).
+fn sim_policy_over(
+    spec: &PolicySpec,
+    m: Method,
+    layout: TensorLayout,
+) -> Result<Option<CodecPolicy>> {
     if spec.is_static() {
         return Ok(None);
     }
@@ -149,8 +166,52 @@ fn sim_policy(spec: &PolicySpec, m: Method, dim: usize) -> Result<Option<CodecPo
         }
         _ => bail!("--codec-policy {} needs a k_g-bearing method (--kg)", spec.label()),
     };
-    let layout = TensorLayout::uniform(dim, SIM_POLICY_TENSORS);
     Ok(Some(CodecPolicy::new(spec.clone(), layout, kg)?))
+}
+
+/// [`sim_policy_over`] on the whole sim vector's uniform layout.
+fn sim_policy(spec: &PolicySpec, m: Method, dim: usize) -> Result<Option<CodecPolicy>> {
+    sim_policy_over(spec, m, TensorLayout::uniform(dim, SIM_POLICY_TENSORS))
+}
+
+/// The sim deployment's shard plan. `serve --shard-id i/N` and
+/// `worker --shards N` compute it independently and must agree, so it
+/// is a pure function of `(dim, shards, policy spec)`: snapped to the
+/// uniform sim policy layout when a non-static policy is active,
+/// near-uniform otherwise.
+fn sim_plan(dim: usize, shards: usize, spec: &PolicySpec) -> Result<qadam::ps::ShardPlan> {
+    qadam::ps::ShardPlan::build(dim, shards, spec, &TensorLayout::uniform(dim, SIM_POLICY_TENSORS))
+}
+
+/// Parse `--shard-id i/N` (default `0/1`, the unsharded server).
+fn parse_shard_id(a: &Args) -> Result<(usize, usize)> {
+    let v = a.get_str("shard_id", "0/1");
+    let (i, n) = v
+        .split_once('/')
+        .ok_or_else(|| anyhow!("--shard-id '{v}' is not i/N"))?;
+    let i: usize = i.parse().map_err(|e| anyhow!("bad shard index '{i}': {e}"))?;
+    let n: usize = n.parse().map_err(|e| anyhow!("bad shard count '{n}': {e}"))?;
+    if n == 0 || i >= n {
+        bail!("--shard-id {i}/{n} out of range (need i < N, N >= 1)");
+    }
+    Ok((i, n))
+}
+
+/// Shard `i`'s listener address: base port + i — the deployment
+/// convention `serve --shard-id` and `worker --shards` share.
+fn shard_addr(base: &str, i: usize) -> Result<String> {
+    if i == 0 {
+        return Ok(base.to_string());
+    }
+    let (host, port) = base
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow!("--addr '{base}' is not host:port"))?;
+    let port: u16 = port.parse().map_err(|e| anyhow!("bad port in '{base}': {e}"))?;
+    let shifted = u16::try_from(i)
+        .ok()
+        .and_then(|i| port.checked_add(i))
+        .ok_or_else(|| anyhow!("shard {i} port overflows past {port}"))?;
+    Ok(format!("{host}:{shifted}"))
 }
 
 fn build_sim_opt(
@@ -203,6 +264,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         resync_every,
         chaos,
         codec_policy,
+        shards: a.get("shards", 1usize)?,
         straggler,
         min_participation,
         seed: a.get("seed", 0u64)?,
@@ -237,7 +299,7 @@ fn cmd_train(a: &Args) -> Result<()> {
 fn cmd_serve(a: &Args) -> Result<()> {
     use qadam::ps::transport::{TcpServer, Transport};
     use qadam::ps::ParameterServer;
-    let addr = a.get_str("addr", "127.0.0.1:7777");
+    let base_addr = a.get_str("addr", "127.0.0.1:7777");
     let workers = a.get("workers", 2usize)?;
     let dim = a.get("dim", 64usize)?;
     let steps = a.get("steps", 200u64)?;
@@ -248,6 +310,14 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let (chaos, straggler, min_participation) = parse_elastic(a)?;
     let codec_policy = parse_policy(a)?;
     let deadline_ms: Option<u64> = a.opt("round_deadline_ms")?;
+    let (shard_id, nshards) = parse_shard_id(a)?;
+    let addr = shard_addr(&base_addr, shard_id)?;
+    // This process owns shard `shard_id`'s contiguous range of the
+    // shared sim problem; its workers connect to every shard's
+    // listener and split their replies accordingly. The plan is a pure
+    // function of (dim, shards, policy), so both ends agree on it.
+    let plan = sim_plan(dim, nshards, &codec_policy)?;
+    let (start, len) = plan.range(shard_id);
     a.reject_unknown()?;
     // Chaos (if any) wraps the TCP transport: reply-level faults apply
     // to the gathered frames. Crash windows act on the in-process
@@ -265,26 +335,39 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let mut srv = TcpServer::bind_and_accept(&addr, workers)?;
     srv.set_elastic(deadline_ms, straggler, min_participation);
     let mut bus: Box<dyn Transport> = Box::new(srv);
-    if let Some(plan) = chaos {
-        bus = Box::new(ChaosTransport::new(bus, plan).with_policy(straggler, min_participation));
+    if let Some(chaos_plan) = chaos {
+        bus = Box::new(
+            ChaosTransport::new(bus, chaos_plan).with_policy(straggler, min_participation),
+        );
     }
     let problem = qadam::sim::StochasticProblem::new(dim, 0.05, 1);
-    let mut ps = ParameterServer::new(problem.x0(), kx);
+    // Shard 0/1 is the whole vector — the unsharded seed path, bit for
+    // bit. Any other shard serves its slice of the same x0.
+    let mut ps = ParameterServer::new(problem.x0()[start..start + len].to_vec(), kx);
+    let tag: String =
+        if nshards > 1 { format!("server shard {shard_id}/{nshards}") } else { "server".into() };
     if downlink == Downlink::Delta {
         if kg.is_none() {
             eprintln!(
-                "[server] --downlink delta without --kg: delta frames ship fp32 \
+                "[{tag}] --downlink delta without --kg: delta frames ship fp32 \
                  (protocol-correct, but no downlink compression)"
             );
         }
         ps.enable_delta_downlink(qadam::quant::gradient_codec(kg), resync_every);
         let method = Method::QAdam { kg, error_feedback: true };
-        if let Some(p) = sim_policy(&codec_policy, method, dim)? {
-            ps.set_downlink_policy(p);
+        // The shard's downlink controller runs over the sim layout
+        // cropped to its range — only computed under a non-static
+        // policy, where the plan snapped to that layout (a uniform
+        // static-policy plan need not align with it).
+        if !codec_policy.is_static() {
+            let sub_layout = TensorLayout::uniform(dim, SIM_POLICY_TENSORS).crop(start, len)?;
+            if let Some(p) = sim_policy_over(&codec_policy, method, sub_layout)? {
+                ps.set_downlink_policy(p);
+            }
         }
     } else if !codec_policy.is_static() {
         eprintln!(
-            "[server] --codec-policy {} affects only worker uplinks and the delta \
+            "[{tag}] --codec-policy {} affects only worker uplinks and the delta \
              downlink; with --downlink full the broadcast stays full frames",
             codec_policy.label()
         );
@@ -300,20 +383,32 @@ fn cmd_serve(a: &Args) -> Result<()> {
         };
         let part = ps.apply(&replies)?;
         if t % 50 == 0 || t == steps {
-            println!(
-                "[server] t={t} loss={:.5} |grad|^2={:.6} members={}/{} up={}B down={}B",
-                part.mean_loss,
-                problem.grad_norm_sq(ps.master()),
-                part.count(),
-                workers,
-                ps.stats.up_bytes,
-                ps.stats.down_bytes
-            );
+            if nshards == 1 {
+                println!(
+                    "[server] t={t} loss={:.5} |grad|^2={:.6} members={}/{} up={}B down={}B",
+                    part.mean_loss,
+                    problem.grad_norm_sq(ps.master()),
+                    part.count(),
+                    workers,
+                    ps.stats.up_bytes,
+                    ps.stats.down_bytes
+                );
+            } else {
+                // a shard sees only its range: no global gradient norm
+                println!(
+                    "[{tag}] t={t} loss={:.5} members={}/{} up={}B down={}B",
+                    part.mean_loss,
+                    part.count(),
+                    workers,
+                    ps.stats.up_bytes,
+                    ps.stats.down_bytes
+                );
+            }
         }
     }
     bus.shutdown()?;
     println!(
-        "[server] done: {:.4} MB up, {:.4} MB down over {} rounds ({} resyncs)",
+        "[{tag}] done: {:.4} MB up, {:.4} MB down over {} rounds ({} resyncs)",
         ps.stats.up_bytes as f64 / 1e6,
         ps.stats.down_bytes as f64 / 1e6,
         ps.stats.rounds,
@@ -323,12 +418,13 @@ fn cmd_serve(a: &Args) -> Result<()> {
 }
 
 fn cmd_worker(a: &Args) -> Result<()> {
-    use qadam::ps::transport::tcp_worker_loop;
+    use qadam::ps::transport::tcp_sharded_worker_loop;
     use qadam::ps::worker::{SimGradSource, Worker};
     let addr = a.get_str("addr", "127.0.0.1:7777");
     let id = a.get("id", 0u32)?;
     let dim = a.get("dim", 64usize)?;
     let alpha = a.get("alpha", 0.01f32)?;
+    let shards = a.get("shards", 1usize)?;
     let (m, _kx, _engine) = parse_method(a)?;
     // `--downlink` mirrors the server flag so a misconfigured fleet is
     // diagnosable from either end: the server already warns when delta
@@ -348,10 +444,16 @@ fn cmd_worker(a: &Args) -> Result<()> {
             );
         }
     }
+    // One lane per shard listener (base port + shard id), the same plan
+    // the serve fleet computes. --shards 1 is the classic single-lane
+    // loop, byte-identical.
+    let plan = sim_plan(dim, shards, &codec_policy)?;
+    let addrs: Vec<String> = (0..shards).map(|i| shard_addr(&addr, i)).collect::<Result<_>>()?;
     let src = SimGradSource { problem: qadam::sim::StochasticProblem::new(dim, 0.05, 1) };
     let opt = build_sim_opt(m, dim, LrSchedule::Const { alpha }, sim_policy(&codec_policy, m, dim)?);
     let mut w = Worker::new(id, opt, Box::new(src), 7);
-    let rounds = tcp_worker_loop(&addr, &mut w)?;
+    w.set_shards(plan);
+    let rounds = tcp_sharded_worker_loop(&addrs, &mut w)?;
     println!("[worker {id}] served {rounds} rounds ({})", w.opt_name());
     Ok(())
 }
@@ -379,6 +481,7 @@ fn cmd_eval(a: &Args) -> Result<()> {
         resync_every: 0,
         chaos: None,
         codec_policy: PolicySpec::Static,
+        shards: 1,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
         seed: a.get("seed", 0u64)?,
@@ -409,19 +512,56 @@ fn cmd_eval(a: &Args) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
+    // Binary-compatibility capabilities, machine-readable: what an
+    // operator checks across a fleet before a mixed-version rollout
+    // (wire layout, frame tags, codec set, shard conventions). Printed
+    // unconditionally — no artifacts needed.
+    println!("{{");
+    println!("  \"wire_version\": {},", qadam::ps::protocol::WIRE_VERSION);
+    println!(
+        "  \"checkpoint_versions\": {:?},",
+        qadam::coordinator::checkpoint::SUPPORTED_VERSIONS
+    );
+    println!("  \"frame_tags\": {{");
+    println!(
+        "    \"to_worker\": {{\"shutdown\": 0, \"weights\": 1, \"weights_delta\": 2, \"weights_delta_parts\": 3}},"
+    );
+    println!("    \"to_server\": {{\"delta\": 0, \"delta_parts\": 1}}");
+    println!("  }},");
+    println!(
+        "  \"codecs\": [\"identity\", \"logquant\", \"wquant\", \"terngrad\", \"blockwise\", \"qsgd\"],"
+    );
+    println!("  \"max_kg\": {},", qadam::quant::MAX_KG);
+    println!("  \"max_kx\": {},", qadam::quant::MAX_KX);
+    println!("  \"shards\": {{");
+    println!("    \"supported\": true,");
+    println!("    \"tcp_port_convention\": \"base_port + shard_id\",");
+    println!("    \"snap_to_tensor_boundaries\": \"when a non-static codec policy is active\",");
+    println!("    \"sharded_checkpoint_version\": 3");
+    println!("  }}");
+    println!("}}");
+    // The artifacts listing stays best-effort: a deploy box checking
+    // wire compatibility has no reason to carry model artifacts.
     let dir = artifacts_dir();
-    let m = Manifest::load(&dir)?;
-    println!("artifacts: {}", dir.display());
-    println!("optimizer kernel: {} (chunk {})", m.optimizer.qadam_artifact, m.optimizer.chunk);
-    for (name, meta) in &m.models {
-        println!(
-            "  {:<20} {:>9} params  {:>2} tensors  train_x={:?} ({})",
-            name,
-            meta.total_params,
-            meta.params.len(),
-            meta.train_x.shape,
-            meta.kind
-        );
+    match Manifest::load(&dir) {
+        Err(_) => eprintln!("(no artifacts at {} — model listing skipped)", dir.display()),
+        Ok(m) => {
+            println!("artifacts: {}", dir.display());
+            println!(
+                "optimizer kernel: {} (chunk {})",
+                m.optimizer.qadam_artifact, m.optimizer.chunk
+            );
+            for (name, meta) in &m.models {
+                println!(
+                    "  {:<20} {:>9} params  {:>2} tensors  train_x={:?} ({})",
+                    name,
+                    meta.total_params,
+                    meta.params.len(),
+                    meta.train_x.shape,
+                    meta.kind
+                );
+            }
+        }
     }
     Ok(())
 }

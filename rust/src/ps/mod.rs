@@ -4,27 +4,44 @@
 //!   weights, quantizes them for broadcast (`Q_x`), averages the
 //!   decoded worker deltas and applies `x ← x − mean δ` (Alg. 2; the
 //!   paper writes `+δ̂` with the descent sign folded into δ — we keep
-//!   the explicit minus).
+//!   the explicit minus). One instance owns one contiguous range of
+//!   the model — the whole vector in the unsharded (seed) deployment.
+//! * [`shard`] — the scale-out layer: a [`shard::ShardPlan`] splits
+//!   the flat vector into N contiguous ranges and a
+//!   [`shard::ShardedServer`] runs one independent `ParameterServer`
+//!   per range (its own EF residual, replica `x̂`, resync schedule,
+//!   codec-policy controller and byte accounting). `--shards 1` is
+//!   byte-identical to the unsharded engine.
 //! * [`worker::Worker`] — receives (quantized) weights, draws its data
 //!   shard, computes the local stochastic gradient (PJRT model graph or
 //!   a synthetic problem), runs its [`crate::optim::WorkerOpt`]
-//!   (Alg. 3) and replies with the compressed delta.
+//!   (Alg. 3) and replies with the compressed delta. The worker's
+//!   optimizer state (Adam moments, EF residual) is **global** — only
+//!   the wire messages are split per shard
+//!   ([`worker::Worker::handle_sharded`]).
 //! * [`transport`] — how messages move, behind the [`Transport`] round
 //!   contract: `LocalBus` (in-process, sequential, deterministic),
 //!   `ThreadedBus` (in-process, one scoped thread per worker,
 //!   bit-identical to `LocalBus`) and a TCP transport (length-prefixed
-//!   frames) for the real multi-process deployment demo. The contract
-//!   also carries the elastic-round hooks (`membership`, `shutdown`);
-//!   straggler policies and deterministic fault injection live in
-//!   [`crate::elastic`].
-//! * [`protocol`] — the message types + byte accounting.
+//!   frames) for the real multi-process deployment. Sharded rounds run
+//!   the same contract over N independent lanes
+//!   ([`Transport::round_sharded`]); over TCP each shard is its own
+//!   listener ([`transport::TcpShardGroup`], `qadam serve --shard-id`).
+//!   The contract also carries the elastic-round hooks (`membership`,
+//!   `shutdown`); straggler policies and deterministic fault injection
+//!   live in [`crate::elastic`].
+//! * [`protocol`] — the message types + byte accounting. Frames are
+//!   shard-agnostic: a lane's connection (or in-process slot) *is* its
+//!   shard routing, so the wire format is unchanged by sharding.
 
 pub mod protocol;
 pub mod server;
+pub mod shard;
 pub mod transport;
 pub mod worker;
 
 pub use protocol::{CommStats, ToServer, ToWorker};
 pub use server::ParameterServer;
+pub use shard::{ShardPlan, ShardedServer};
 pub use transport::{LocalBus, ThreadedBus, Transport};
 pub use worker::{GradSource, SimGradSource, Worker};

@@ -1,20 +1,30 @@
-//! The parameter server (Algorithm 2), sharded.
+//! The parameter server (Algorithm 2), block-parallel.
 //!
 //! Keeps the master weights `x_t` in full precision; broadcasts
 //! `Q_x(x_t)` (or raw fp32 when weight quantization is off); gathers
 //! the workers' compressed deltas, decodes and averages them, and
 //! applies `x_{t+1} = x_t − mean_i δ_t^{(i)}`.
 //!
-//! **Sharding.** The server state is processed in fixed-size blocks
-//! (`block` coordinates each): delta decode, averaging, the apply, and
-//! the `Q_x` broadcast re-quantization all run one block per task,
-//! fanned out over `threads` scoped threads
-//! ([`crate::util::par::par_tasks`]). Every per-coordinate operation is
-//! independent and scales are indexed by global position
-//! ([`crate::quant::decode_msg_range`]), so the blocked result is
-//! **bit-identical** to the sequential one for any `(block, threads)` —
-//! asserted by the tests below. `threads = 1` (the [`Self::new`]
-//! default) keeps the seed behavior exactly.
+//! **Sharding contract.** One [`ParameterServer`] owns one contiguous
+//! range of the model — the *whole* vector in the unsharded (seed)
+//! deployment, or one shard's range under the scale-out layer
+//! ([`crate::ps::shard::ShardedServer`]), which composes N fully
+//! independent instances. Everything in this file is per-instance
+//! state: master weights, broadcast view, the delta-downlink replica
+//! `x̂` + EF residual + resync schedule, the downlink policy
+//! controller, and the [`CommStats`] accounting. Nothing here knows
+//! about other shards.
+//!
+//! **Block-parallelism** (orthogonal to sharding): the instance's state
+//! is processed in fixed-size blocks (`block` coordinates each): delta
+//! decode, averaging, the apply, and the `Q_x` broadcast
+//! re-quantization all run one block per task, fanned out over
+//! `threads` scoped threads ([`crate::util::par::par_tasks`]). Every
+//! per-coordinate operation is independent and scales are indexed by
+//! global position ([`crate::quant::decode_msg_range`]), so the
+//! blocked result is **bit-identical** to the sequential one for any
+//! `(block, threads)` — asserted by the tests below. `threads = 1`
+//! (the [`Self::new`] default) keeps the seed behavior exactly.
 //!
 //! **Delta downlink** ([`ParameterServer::enable_delta_downlink`]). The uplink has
 //! always been compressed; by default the downlink still ships the full

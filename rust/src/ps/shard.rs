@@ -1,0 +1,584 @@
+//! The shard layer: scale-out across N independent parameter servers.
+//!
+//! A [`ShardPlan`] partitions the flat parameter vector into N
+//! contiguous ranges; a [`ShardedServer`] owns one full
+//! [`ParameterServer`] per range. Everything the single server keeps —
+//! master weights, the delta-downlink worker-replica `x̂`, the
+//! server-side [`crate::quant::ErrorFeedback`] residual, the resync
+//! schedule, the downlink [`crate::quant::CodecPolicy`] controller and
+//! the [`CommStats`] accounting — becomes **per-shard state**; nothing
+//! is shared across shards, which is what lets each shard run as its
+//! own process (`qadam serve --shard-id i/N`) on its own host.
+//!
+//! # Why coordinate-wise error feedback composes across shards
+//!
+//! The paper's parameter-server protocol (Alg. 2) and its error
+//! feedback are coordinate-wise: the residual update
+//! `e ← u − Q(u)` and the apply `x ← x − mean δ` never mix
+//! coordinates. Restricting the whole state machine to a contiguous
+//! range therefore yields *exactly* the per-coordinate trajectory the
+//! full-vector machine would produce over that range — the only thing
+//! that changes when a vector is split is each codec's *scale* (taken
+//! per message, hence per shard), which is a choice the analysis
+//! already allows per compression call (Assumption 2 is per-call).
+//! Efficient-Adam (Chen et al. 2022) runs the same two-way-compression
+//! scheme with per-partition state. Concretely:
+//!
+//! * `--shards 1` is **byte-identical** to the unsharded engine: the
+//!   single shard is the very same [`ParameterServer`] code path, fed
+//!   the very same inputs (asserted in `rust/tests/shard_parity.rs`).
+//! * An N-shard fixed-seed run is **bit-reproducible** across the
+//!   sequential, threaded and TCP transports: every per-shard decision
+//!   (codec scale, policy controller, EF residual) is a pure function
+//!   of that shard's deterministic input stream.
+//!
+//! # What is per-shard vs global
+//!
+//! | state | owner |
+//! |---|---|
+//! | master weights `x`, broadcast view `Q_x(x)` | per shard (its range) |
+//! | delta-downlink replica `x̂`, server EF residual, resync schedule | per shard |
+//! | downlink [`crate::quant::CodecPolicy`] controller | per shard (cropped layout) |
+//! | [`CommStats`] byte accounting | per shard, summed for the merged row |
+//! | worker gradient, Adam moments `m, v`, worker EF residual | global (the worker splits only the *wire message* per shard) |
+//! | round counter `t`, epoch | lockstep across shards (one logical round) |
+//!
+//! Shard boundaries **snap to tensor boundaries** whenever a non-static
+//! codec policy is active ([`ShardPlan::snapped`]), so a per-tensor
+//! wire part never straddles two shards; without a policy the split is
+//! near-uniform ([`ShardPlan::uniform`]). Both ends of the wire compute
+//! the plan independently with [`ShardPlan::build`] — the plan itself
+//! never crosses the wire.
+
+use super::protocol::{CommStats, ToServer, ToWorker};
+use super::server::ParameterServer;
+use crate::elastic::Participation;
+use crate::quant::{CodecPolicy, PolicySpec, TensorLayout};
+use anyhow::{anyhow, bail, Result};
+
+/// A partition of the flat parameter vector into contiguous shard
+/// ranges, in ascending offset order and covering it exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// `(start, len)` per shard.
+    ranges: Vec<(usize, usize)>,
+    dim: usize,
+}
+
+impl ShardPlan {
+    /// One shard covering the whole vector — the unsharded (seed) plan.
+    pub fn single(dim: usize) -> Self {
+        assert!(dim > 0, "shard plan needs a non-empty vector");
+        Self { ranges: vec![(0, dim)], dim }
+    }
+
+    /// Balanced contiguous split into **exactly** `shards` non-empty
+    /// ranges (widths differ by at most one element; the first
+    /// `dim % shards` shards carry the extra) — the plan used when no
+    /// per-tensor codec policy is active. Producing exactly the
+    /// requested count matters: `serve --shard-id i/N` indexes range
+    /// `i` and every worker opens one lane per shard. More shards than
+    /// elements clamps to one element per shard.
+    pub fn uniform(dim: usize, shards: usize) -> Self {
+        assert!(dim > 0, "shard plan needs a non-empty vector");
+        let shards = shards.clamp(1, dim);
+        let base = dim / shards;
+        let rem = dim % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        for s in 0..shards {
+            let len = base + usize::from(s < rem);
+            ranges.push((start, len));
+            start += len;
+        }
+        Self { ranges, dim }
+    }
+
+    /// Split snapping every shard boundary to a tensor boundary of
+    /// `layout`, balancing element counts greedily — required whenever
+    /// per-tensor wire parts are in play (a part must live entirely
+    /// inside one shard). Errors when there are fewer tensors than
+    /// shards.
+    pub fn snapped(layout: &TensorLayout, shards: usize) -> Result<Self> {
+        let tensors = layout.tensors();
+        let n = tensors.len();
+        if shards == 0 {
+            bail!("shard plan needs at least one shard");
+        }
+        if shards > n {
+            bail!(
+                "--shards {shards} exceeds the {n} layout tensors \
+                 (per-tensor parts cannot straddle shard boundaries)"
+            );
+        }
+        let dim = layout.dim();
+        let mut ranges = Vec::with_capacity(shards);
+        let mut ti = 0usize;
+        let mut off = 0usize;
+        for s in 0..shards {
+            let remaining_shards = shards - s;
+            // leave at least one tensor for every later shard
+            let max_take = (n - ti) - (remaining_shards - 1);
+            let target = (dim - off).div_ceil(remaining_shards);
+            let start = off;
+            let mut len = 0usize;
+            let mut took = 0usize;
+            while took < max_take {
+                len += tensors[ti].len;
+                ti += 1;
+                took += 1;
+                if len >= target {
+                    break;
+                }
+            }
+            ranges.push((start, len));
+            off += len;
+        }
+        debug_assert_eq!(off, dim);
+        debug_assert_eq!(ti, n);
+        Ok(Self { ranges, dim })
+    }
+
+    /// The one plan rule both ends of the wire compute independently
+    /// (the plan never crosses the wire): snap to `layout` when a
+    /// non-static codec policy is active, near-uniform otherwise.
+    pub fn build(
+        dim: usize,
+        shards: usize,
+        spec: &PolicySpec,
+        layout: &TensorLayout,
+    ) -> Result<Self> {
+        if shards == 0 {
+            bail!("--shards must be at least 1");
+        }
+        if shards > dim {
+            bail!("--shards {shards} exceeds the model dimension {dim}");
+        }
+        if layout.dim() != dim {
+            bail!("layout dim {} != model dim {dim}", layout.dim());
+        }
+        if spec.is_static() {
+            Ok(Self::uniform(dim, shards))
+        } else {
+            Self::snapped(layout, shards)
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// `(start, len)` per shard, ascending and tiling `[0, dim)`.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// `(start, len)` of shard `i`.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        self.ranges[i]
+    }
+}
+
+/// N independent [`ParameterServer`]s over the disjoint ranges of a
+/// [`ShardPlan`], advancing in lockstep (one logical round drives every
+/// shard once). The merged accessors ([`Self::stats`],
+/// [`Self::master`], [`Self::apply`]'s [`Participation`]) present the
+/// fleet as one logical server to the coordinator; the per-shard
+/// accessors ([`Self::shard`], [`Self::shard_stats`]) feed the
+/// per-shard metrics rows and the checkpoint-v3 blobs.
+pub struct ShardedServer {
+    shards: Vec<ParameterServer>,
+    plan: ShardPlan,
+}
+
+impl ShardedServer {
+    /// Split `x0` by `plan`; every shard gets its own block-parallel
+    /// [`ParameterServer`] (`block`/`threads` as in
+    /// [`ParameterServer::with_shards`]). A single-shard plan builds
+    /// exactly the unsharded server, fed exactly the same inputs.
+    pub fn new(
+        x0: Vec<f32>,
+        kx: Option<u32>,
+        plan: ShardPlan,
+        block: usize,
+        threads: usize,
+    ) -> Self {
+        assert_eq!(x0.len(), plan.dim(), "x0 len != plan dim");
+        let shards = plan
+            .ranges()
+            .iter()
+            .map(|&(start, len)| {
+                ParameterServer::with_shards(x0[start..start + len].to_vec(), kx, block, threads)
+            })
+            .collect();
+        Self { shards, plan }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Shard `i`'s server (tests, per-shard metrics, checkpointing).
+    pub fn shard(&self, i: usize) -> &ParameterServer {
+        &self.shards[i]
+    }
+
+    /// Shard `i`'s byte accounting.
+    pub fn shard_stats(&self, i: usize) -> &CommStats {
+        &self.shards[i].stats
+    }
+
+    /// Merged accounting: bytes and resyncs summed across shards;
+    /// `rounds` is the lockstep round count (shard 0's — all shards
+    /// advance together).
+    pub fn stats(&self) -> CommStats {
+        let mut s = self.shards[0].stats;
+        for sh in &self.shards[1..] {
+            s.down_bytes += sh.stats.down_bytes;
+            s.up_bytes += sh.stats.up_bytes;
+            s.resyncs += sh.stats.resyncs;
+        }
+        s
+    }
+
+    pub fn dim(&self) -> usize {
+        self.plan.dim()
+    }
+
+    /// Lockstep round counter (shard 0's).
+    pub fn step(&self) -> u64 {
+        self.shards[0].step()
+    }
+
+    /// Concatenated full-precision master weights (allocates; the eval
+    /// and checkpoint path, not the round hot path).
+    pub fn master(&self) -> Vec<f32> {
+        let mut x = Vec::with_capacity(self.dim());
+        for sh in &self.shards {
+            x.extend_from_slice(sh.master());
+        }
+        x
+    }
+
+    /// Concatenated output weights (`Q_x(x)` when quantizing, else `x`).
+    pub fn output_weights(&mut self) -> Vec<f32> {
+        let mut x = Vec::with_capacity(self.dim());
+        for sh in &mut self.shards {
+            x.extend_from_slice(sh.output_weights());
+        }
+        x
+    }
+
+    /// Enable the compressed weight-delta downlink on every shard: each
+    /// gets its own replica `x̂`, EF residual and resync schedule, with
+    /// the gradient-family codec at level `kg` (fp32 [`crate::quant::Identity`]
+    /// when `None`). Must be called before round 1.
+    pub fn enable_delta_downlink(&mut self, kg: Option<u32>, resync_every: u64) {
+        for sh in &mut self.shards {
+            sh.enable_delta_downlink(crate::quant::gradient_codec(kg), resync_every);
+        }
+    }
+
+    /// Install a per-tensor downlink codec policy: every shard gets its
+    /// own controller over the layout **cropped to its range** (shard
+    /// boundaries must snap to tensor boundaries —
+    /// [`ShardPlan::snapped`]). A static spec installs nothing.
+    pub fn set_downlink_policy(
+        &mut self,
+        spec: &PolicySpec,
+        layout: &TensorLayout,
+        base_kg: u32,
+    ) -> Result<()> {
+        if spec.is_static() {
+            return Ok(());
+        }
+        if layout.dim() != self.dim() {
+            bail!("policy layout dim {} != model dim {}", layout.dim(), self.dim());
+        }
+        for (i, &(start, len)) in self.plan.ranges().iter().enumerate() {
+            let sub = layout.crop(start, len)?;
+            self.shards[i].set_downlink_policy(CodecPolicy::new(spec.clone(), sub, base_kg)?);
+        }
+        Ok(())
+    }
+
+    /// Mean downlink code bits/element across shards, weighted by shard
+    /// width (`None` unless every shard runs a non-static policy).
+    pub fn downlink_bits(&self) -> Option<f64> {
+        let mut num = 0.0;
+        for (sh, &(_, len)) in self.shards.iter().zip(self.plan.ranges()) {
+            num += sh.downlink_bits()? * len as f64;
+        }
+        Some(num / self.dim() as f64)
+    }
+
+    /// Per-tensor downlink levels concatenated in global tensor order
+    /// (`None` unless every shard runs a non-static policy).
+    pub fn downlink_chosen_bits(&self) -> Option<Vec<u32>> {
+        let mut bits = Vec::new();
+        for sh in &self.shards {
+            bits.extend(sh.downlink_chosen_bits()?);
+        }
+        Some(bits)
+    }
+
+    /// Is the delta downlink enabled (it is all-shards-or-none)?
+    pub fn delta_downlink(&self) -> bool {
+        self.shards[0].downlink_state().is_some()
+    }
+
+    /// Per-shard `(replica x̂, EF residual)` when the delta downlink is
+    /// on, in shard order.
+    pub fn downlink_states(&self) -> Option<Vec<(&[f32], &[f32])>> {
+        self.shards.iter().map(|sh| sh.downlink_state()).collect()
+    }
+
+    /// Restore every shard's downlink state from **full-dim** vectors
+    /// (sliced by the plan) — the checkpoint path, which stitches the
+    /// per-shard blobs back to full vectors first so a file written
+    /// under any shard count restores under any other.
+    pub fn restore_downlink_full(&mut self, replica: &[f32], residual: &[f32]) -> Result<()> {
+        if replica.len() != self.dim() || residual.len() != self.dim() {
+            return Err(anyhow!(
+                "downlink state dim {}/{} != model dim {}",
+                replica.len(),
+                residual.len(),
+                self.dim()
+            ));
+        }
+        for (sh, &(start, len)) in self.shards.iter_mut().zip(self.plan.ranges()) {
+            sh.restore_downlink(&replica[start..start + len], &residual[start..start + len])?;
+        }
+        Ok(())
+    }
+
+    /// Force a full-weights resync frame on **every** shard (a worker
+    /// rejoined: it missed frames on every lane).
+    pub fn force_resync_all(&mut self) {
+        for sh in &mut self.shards {
+            sh.force_resync();
+        }
+    }
+
+    /// Force a full-weights resync frame on shard `i` only (a
+    /// single-shard restore or lane rejoin); the other shards keep
+    /// their delta streams.
+    pub fn force_resync_shard(&mut self, i: usize) {
+        self.shards[i].force_resync();
+    }
+
+    /// Restore `(weights, step)` on every shard (slices `x` by the
+    /// plan). Like [`ParameterServer::restore`], this schedules a full
+    /// resync on each shard until its downlink state is also restored.
+    pub fn restore(&mut self, x: &[f32], t: u64) {
+        assert_eq!(x.len(), self.dim());
+        for (sh, &(start, len)) in self.shards.iter_mut().zip(self.plan.ranges()) {
+            sh.restore(&x[start..start + len], t);
+        }
+    }
+
+    /// Begin the next round on every shard: one broadcast frame per
+    /// shard, in shard order. `nworkers` is this round's downlink
+    /// membership (each shard charges its frame to that many workers).
+    pub fn broadcast(&mut self, nworkers: usize) -> Vec<ToWorker> {
+        self.broadcast_at_epoch(nworkers, 0)
+    }
+
+    /// [`Self::broadcast`] with an explicit epoch tag.
+    pub fn broadcast_at_epoch(&mut self, nworkers: usize, epoch: u64) -> Vec<ToWorker> {
+        self.shards
+            .iter_mut()
+            .map(|sh| {
+                let (frame, _view) = sh.broadcast_at_epoch(nworkers, epoch);
+                frame
+            })
+            .collect()
+    }
+
+    /// Apply one lockstep round: `replies[s]` are shard `s`'s gathered
+    /// replies. The merged [`Participation`] reports the union of the
+    /// per-shard reporter sets and the mean of the per-shard mean
+    /// losses (with full participation every shard sees the same
+    /// reporters and the same per-worker losses, so the merge is
+    /// exactly each shard's own view). A failing shard fails the whole
+    /// round.
+    pub fn apply(&mut self, replies: &[Vec<ToServer>]) -> Result<Participation> {
+        if replies.len() != self.shards.len() {
+            return Err(anyhow!(
+                "reply lanes {} != shards {}",
+                replies.len(),
+                self.shards.len()
+            ));
+        }
+        let mut parts = Vec::with_capacity(self.shards.len());
+        for (sh, r) in self.shards.iter_mut().zip(replies) {
+            parts.push(sh.apply(r)?);
+        }
+        let round = parts[0].round;
+        let mean_loss =
+            parts.iter().map(|p| p.mean_loss).sum::<f32>() / parts.len() as f32;
+        let mut reporters: Vec<u32> =
+            parts.iter().flat_map(|p| p.reporters.iter().copied()).collect();
+        reporters.sort_unstable();
+        reporters.dedup();
+        Ok(Participation { round, mean_loss, reporters })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{seeded_rng, Compressor, LogQuant};
+
+    fn delta_msg(u: &[f32], kg: u32) -> crate::quant::WireMsg {
+        let mut q = vec![0.0; u.len()];
+        LogQuant::new(kg).compress_into(u, &mut q, &mut seeded_rng(0, 0))
+    }
+
+    #[test]
+    fn uniform_and_single_plans_tile_the_vector() {
+        let p = ShardPlan::uniform(10, 4);
+        assert_eq!(p.ranges(), &[(0, 3), (3, 3), (6, 2), (8, 2)]);
+        assert_eq!(p.dim(), 10);
+        assert_eq!(p.count(), 4);
+        assert_eq!(ShardPlan::single(7), ShardPlan::uniform(7, 1));
+        // the count is exact even when div_ceil blocks would under-fill
+        // (9/4 → blocks of 3 would yield only 3 ranges)
+        assert_eq!(ShardPlan::uniform(9, 4).ranges(), &[(0, 3), (3, 2), (5, 2), (7, 2)]);
+        // more shards than elements clamps
+        assert_eq!(ShardPlan::uniform(3, 100).count(), 3);
+    }
+
+    #[test]
+    fn snapped_plan_respects_tensor_boundaries_and_balances() {
+        let layout = TensorLayout::from_named(&[
+            ("a".into(), 10),
+            ("b".into(), 30),
+            ("c".into(), 10),
+            ("d".into(), 10),
+        ]);
+        let p = ShardPlan::snapped(&layout, 2).unwrap();
+        // greedy target 30: shard 0 takes a+b (40), shard 1 the rest
+        assert_eq!(p.ranges(), &[(0, 40), (40, 20)]);
+        // every boundary is a tensor boundary
+        for &(start, len) in p.ranges() {
+            assert!(layout.crop(start, len).is_ok());
+        }
+        // one shard per tensor is the finest legal split
+        let p4 = ShardPlan::snapped(&layout, 4).unwrap();
+        assert_eq!(p4.count(), 4);
+        assert_eq!(p4.ranges()[3], (50, 10));
+        // more shards than tensors is a clear error
+        assert!(ShardPlan::snapped(&layout, 5).is_err());
+    }
+
+    #[test]
+    fn build_rule_matches_policy_mode() {
+        let layout = TensorLayout::uniform(64, 4);
+        let uni = ShardPlan::build(64, 2, &PolicySpec::Static, &layout).unwrap();
+        assert_eq!(uni, ShardPlan::uniform(64, 2));
+        let snap =
+            ShardPlan::build(64, 2, &PolicySpec::Adaptive { lo: 0, hi: 4 }, &layout).unwrap();
+        assert_eq!(snap, ShardPlan::snapped(&layout, 2).unwrap());
+        assert!(ShardPlan::build(64, 0, &PolicySpec::Static, &layout).is_err());
+        assert!(ShardPlan::build(63, 2, &PolicySpec::Static, &layout).is_err());
+    }
+
+    /// A 2-shard server applies each lane to its own range; merged
+    /// Participation and stats present one logical server.
+    #[test]
+    fn sharded_apply_is_rangewise_and_merges_participation() {
+        let dim = 8;
+        let plan = ShardPlan::uniform(dim, 2);
+        let mut srv = ShardedServer::new(vec![1.0; dim], None, plan, 4, 1);
+        let frames = srv.broadcast(2);
+        assert_eq!(frames.len(), 2);
+        assert_eq!(srv.step(), 1);
+        // worker w ships 0.5 on shard 0 and 1.0 on shard 1
+        let lane = |d: f32, w: u32| ToServer::Delta {
+            t: 1,
+            worker: w,
+            loss: 2.0 + w as f32,
+            msg: delta_msg(&[d; 4], 2),
+        };
+        let part = srv
+            .apply(&[vec![lane(0.5, 0), lane(0.5, 1)], vec![lane(1.0, 0), lane(1.0, 1)]])
+            .unwrap();
+        assert_eq!(part.round, 1);
+        assert_eq!(part.reporters, vec![0, 1]);
+        assert!((part.mean_loss - 2.5).abs() < 1e-6);
+        let x = srv.master();
+        for (i, v) in x.iter().enumerate() {
+            let want = if i < 4 { 0.5 } else { 0.0 };
+            assert!((v - want).abs() < 1e-6, "x[{i}] = {v}");
+        }
+        let s = srv.stats();
+        assert_eq!(s.rounds, 1);
+        assert_eq!(
+            s.up_bytes,
+            srv.shard_stats(0).up_bytes + srv.shard_stats(1).up_bytes
+        );
+        // a missing lane fails the round
+        assert_eq!(srv.broadcast(2).len(), 2);
+        assert!(srv.apply(&[vec![lane(0.5, 0)]]).is_err());
+    }
+
+    /// Per-shard delta downlink: each shard keeps its own replica and
+    /// resync schedule; a single-shard forced resync leaves the other
+    /// shard's delta stream untouched.
+    #[test]
+    fn per_shard_downlink_and_single_shard_resync() {
+        let dim = 8;
+        let plan = ShardPlan::uniform(dim, 2);
+        let mut srv = ShardedServer::new(vec![0.5; dim], None, plan, 4, 1);
+        srv.enable_delta_downlink(Some(2), 0); // resync only round 1 / forced
+        assert!(srv.delta_downlink());
+        let lane = |t: u64, w: u32| ToServer::Delta {
+            t,
+            worker: w,
+            loss: 0.0,
+            msg: delta_msg(&[0.25; 4], 2),
+        };
+        let frames = srv.broadcast(1);
+        assert!(frames.iter().all(|f| matches!(f, ToWorker::Weights { .. })));
+        srv.apply(&[vec![lane(1, 0)], vec![lane(1, 0)]]).unwrap();
+        let frames = srv.broadcast(1);
+        assert!(frames.iter().all(|f| matches!(f, ToWorker::WeightsDelta { .. })));
+        srv.apply(&[vec![lane(2, 0)], vec![lane(2, 0)]]).unwrap();
+        // shard 1 resyncs alone
+        srv.force_resync_shard(1);
+        let frames = srv.broadcast(1);
+        assert!(matches!(frames[0], ToWorker::WeightsDelta { .. }));
+        assert!(matches!(frames[1], ToWorker::Weights { .. }));
+        assert_eq!(srv.shard_stats(0).resyncs, 1);
+        assert_eq!(srv.shard_stats(1).resyncs, 2);
+        assert_eq!(srv.stats().resyncs, 3);
+        let states = srv.downlink_states().unwrap();
+        assert_eq!(states.len(), 2);
+        assert!(states[1].1.iter().all(|&e| e == 0.0), "resync clears shard 1's residual");
+    }
+
+    #[test]
+    fn restore_downlink_full_slices_by_plan() {
+        let dim = 6;
+        let plan = ShardPlan::uniform(dim, 3);
+        let mut srv = ShardedServer::new(vec![0.0; dim], None, plan, 4, 1);
+        srv.enable_delta_downlink(Some(2), 0);
+        let replica: Vec<f32> = (0..dim).map(|i| i as f32).collect();
+        let residual = vec![0.125f32; dim];
+        srv.restore_downlink_full(&replica, &residual).unwrap();
+        let states = srv.downlink_states().unwrap();
+        assert_eq!(states[1].0, &[2.0, 3.0]);
+        assert_eq!(states[2].0, &[4.0, 5.0]);
+        assert!(states.iter().all(|(_, e)| e == &[0.125, 0.125]));
+        assert!(srv.restore_downlink_full(&replica[..4], &residual).is_err());
+    }
+}

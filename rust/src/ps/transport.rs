@@ -17,6 +17,20 @@
 //!   deployment: length-prefixed frames over TCP, one blocking stream
 //!   per worker (run each worker as its own `qadam worker` process; see
 //!   `qadam serve --help`).
+//!
+//! **Sharding contract.** A sharded round is N independent *lanes* —
+//! one per parameter-server shard — driven in lockstep by
+//! [`Transport::round_sharded`]: lane `s` carries shard `s`'s broadcast
+//! frame out and its replies back, and the gather contract (worker-id
+//! order, no duplicates, drops allowed) holds **per lane**. The frame
+//! format itself is shard-agnostic: a lane's connection (or in-process
+//! slot) *is* its routing. In-process buses run the lanes through
+//! [`crate::ps::Worker::handle_sharded`]; over TCP every shard is its
+//! own listener ([`TcpShardGroup`] in one driver process,
+//! `qadam serve --shard-id i/N` as separate processes) and the worker
+//! fans its per-lane frames out concurrently
+//! ([`tcp_sharded_worker_loop`]). A transport's single-shard
+//! `round_sharded` is byte-identical to its classic [`Transport::round`].
 
 use super::protocol::{ToServer, ToWorker};
 use crate::elastic::{Membership, StragglerPolicy};
@@ -78,6 +92,25 @@ pub fn read_frame<R: Read>(stream: &mut R) -> Result<Vec<u8>> {
 pub trait Transport {
     fn round(&mut self, broadcast: &ToWorker, workers: &mut [super::worker::Worker])
         -> Result<Vec<ToServer>>;
+    /// One sharded round: `broadcasts[s]` goes out on lane `s`, and the
+    /// result's lane `s` holds shard `s`'s gathered replies (the round
+    /// contract above applies per lane). The default handles the
+    /// single-lane case by delegating to [`Transport::round`] —
+    /// byte-identical to the unsharded path — and rejects multi-lane
+    /// plans; engines that can route shards override it.
+    fn round_sharded(
+        &mut self,
+        broadcasts: &[ToWorker],
+        workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<Vec<ToServer>>> {
+        match broadcasts {
+            [single] => Ok(vec![self.round(single, workers)?]),
+            _ => Err(anyhow!(
+                "transport '{}' does not route multi-shard rounds",
+                self.name()
+            )),
+        }
+    }
     /// Short engine name for logs/benches.
     fn name(&self) -> &'static str;
     /// Downlink membership of round `next_t`: who will receive the
@@ -100,6 +133,18 @@ pub trait Transport {
 /// The worker id a reply claims (sort key of the deterministic gather).
 fn worker_id(reply: &ToServer) -> u32 {
     reply.worker()
+}
+
+/// Merge one worker's per-lane replies into the per-lane gathers (the
+/// in-process sharded round merge, shared by both buses).
+fn push_lanes(lanes: &mut [Vec<ToServer>], replies: Vec<ToServer>) -> Result<()> {
+    if replies.len() != lanes.len() {
+        return Err(anyhow!("worker replied on {} of {} lanes", replies.len(), lanes.len()));
+    }
+    for (lane, r) in lanes.iter_mut().zip(replies) {
+        lane.push(r);
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -136,6 +181,25 @@ impl Transport for LocalBus {
         workers: &mut [super::worker::Worker],
     ) -> Result<Vec<ToServer>> {
         LocalBus::round(self, broadcast, workers)
+    }
+
+    /// Sharded lanes, sequentially: workers are stepped in worker-id
+    /// order, each handling all lanes of the round at once
+    /// ([`super::worker::Worker::handle_sharded`]); a single-lane call
+    /// is byte-identical to [`Transport::round`].
+    fn round_sharded(
+        &mut self,
+        broadcasts: &[ToWorker],
+        workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<Vec<ToServer>>> {
+        let mut lanes: Vec<Vec<ToServer>> =
+            (0..broadcasts.len()).map(|_| Vec::with_capacity(workers.len())).collect();
+        for w in workers.iter_mut() {
+            if let Some(replies) = w.handle_sharded(broadcasts)? {
+                push_lanes(&mut lanes, replies)?;
+            }
+        }
+        Ok(lanes)
     }
 
     fn name(&self) -> &'static str {
@@ -204,6 +268,44 @@ impl Transport for ThreadedBus {
         workers: &mut [super::worker::Worker],
     ) -> Result<Vec<ToServer>> {
         ThreadedBus::round(self, broadcast, workers)
+    }
+
+    /// Sharded lanes, one scoped thread per worker (the worker handles
+    /// all its lanes on its own thread), merged in worker-id order —
+    /// bit-identical to the sequential lanes.
+    fn round_sharded(
+        &mut self,
+        broadcasts: &[ToWorker],
+        workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<Vec<ToServer>>> {
+        let results: Vec<Result<Option<Vec<ToServer>>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .iter_mut()
+                .map(|w| s.spawn(move || w.handle_sharded(broadcasts)))
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(i, h)| {
+                    h.join().unwrap_or_else(|payload| {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into());
+                        Err(anyhow!("worker thread {i} panicked: {msg}"))
+                    })
+                })
+                .collect()
+        });
+        let mut lanes: Vec<Vec<ToServer>> =
+            (0..broadcasts.len()).map(|_| Vec::with_capacity(results.len())).collect();
+        for r in results {
+            if let Some(replies) = r? {
+                push_lanes(&mut lanes, replies)?;
+            }
+        }
+        Ok(lanes)
     }
 
     fn name(&self) -> &'static str {
@@ -312,12 +414,52 @@ impl TcpServer {
     /// deployment error (the mean would double-weight that worker) and
     /// fail the round under either policy.
     pub fn round(&mut self, broadcast: &ToWorker) -> Result<Vec<ToServer>> {
+        self.send_broadcast(broadcast)?;
+        self.gather()
+    }
+
+    /// The broadcast half of a round: ship the frame to every live
+    /// connection. Split from [`Self::gather`] so a multi-shard driver
+    /// ([`TcpShardGroup`]) can put every lane's frame on the wire
+    /// before any lane blocks in its gather — a sharded worker replies
+    /// only after it has read *all* of its lanes' frames, so gathering
+    /// lane 0 before sending lane 1 would deadlock. Under
+    /// [`StragglerPolicy::Drop`] a connection that cannot be written to
+    /// is dead and is evicted here.
+    pub fn send_broadcast(&mut self, broadcast: &ToWorker) -> Result<()> {
         let payload = broadcast.to_bytes();
-        let mut replies = match self.policy {
+        match self.policy {
             StragglerPolicy::Wait => {
                 for s in &mut self.streams {
                     write_frame(s, &payload)?;
                 }
+            }
+            StragglerPolicy::Drop => {
+                let mut live = Vec::with_capacity(self.streams.len());
+                for mut s in std::mem::take(&mut self.streams) {
+                    // A connection we cannot even send to is dead: evict
+                    // it and treat its reply as dropped.
+                    if write_frame(&mut s, &payload).is_ok() {
+                        live.push(s);
+                    } else {
+                        eprintln!("[server] dropping dead connection at broadcast");
+                    }
+                }
+                self.streams = live;
+            }
+        }
+        Ok(())
+    }
+
+    /// The gather half of a round (sorted, duplicate-checked, quorum-
+    /// checked). Under [`StragglerPolicy::Drop`] the round deadline is
+    /// armed when the gather starts; a straggler past it — or a dead
+    /// connection — is evicted (its socket closes with the drop, so a
+    /// late reply can never desync the frame stream; the worker
+    /// reconnects and rejoins through the resync path).
+    pub fn gather(&mut self) -> Result<Vec<ToServer>> {
+        let mut replies = match self.policy {
+            StragglerPolicy::Wait => {
                 let mut replies = Vec::with_capacity(self.streams.len());
                 for s in &mut self.streams {
                     let buf = read_frame(s)?;
@@ -325,7 +467,20 @@ impl TcpServer {
                 }
                 replies
             }
-            StragglerPolicy::Drop => self.round_drop(&payload)?,
+            StragglerPolicy::Drop => {
+                let start = Instant::now();
+                let mut replies = Vec::with_capacity(self.streams.len());
+                for mut s in std::mem::take(&mut self.streams) {
+                    match read_reply(&mut s, self.deadline.map(|d| (start, d))) {
+                        Ok(r) => {
+                            replies.push(r);
+                            self.streams.push(s);
+                        }
+                        Err(e) => eprintln!("[server] dropping straggler/dead connection: {e}"),
+                    }
+                }
+                replies
+            }
         };
         replies.sort_by_key(worker_id);
         if let Some(pair) = replies.windows(2).find(|p| worker_id(&p[0]) == worker_id(&p[1])) {
@@ -341,37 +496,6 @@ impl TcpServer {
                 self.capacity,
                 self.min_participation
             ));
-        }
-        Ok(replies)
-    }
-
-    /// The drop-policy gather: broadcast to every live connection, read
-    /// replies against the shared deadline, evict anything that fails.
-    fn round_drop(&mut self, payload: &[u8]) -> Result<Vec<ToServer>> {
-        let start = Instant::now();
-        let mut live = Vec::with_capacity(self.streams.len());
-        for mut s in std::mem::take(&mut self.streams) {
-            // A connection we cannot even send to is dead: evict it and
-            // treat its reply as dropped.
-            if write_frame(&mut s, payload).is_ok() {
-                live.push(s);
-            } else {
-                eprintln!("[server] dropping dead connection at broadcast");
-            }
-        }
-        let mut replies = Vec::with_capacity(live.len());
-        for mut s in live {
-            match read_reply(&mut s, self.deadline.map(|d| (start, d))) {
-                Ok(r) => {
-                    replies.push(r);
-                    self.streams.push(s);
-                }
-                // Straggler past the deadline or dead connection: evict.
-                // The socket closes with the drop, so a late reply can
-                // never desync the frame stream; the worker reconnects
-                // and rejoins through the resync path.
-                Err(e) => eprintln!("[server] dropping straggler/dead connection: {e}"),
-            }
         }
         Ok(replies)
     }
@@ -464,6 +588,113 @@ impl Transport for TcpServer {
     }
 }
 
+/// N shard lanes over TCP in one driver process: one [`TcpServer`]
+/// (its own listener, its own worker connections) per parameter-server
+/// shard, driven in lockstep. The sharded round puts **every** lane's
+/// broadcast on the wire before any lane blocks in its gather — a
+/// sharded worker replies only once it has read all of its lanes'
+/// frames, so a send-then-gather-per-lane driver would deadlock.
+///
+/// Cross-host deployments run each lane as its own
+/// `qadam serve --shard-id i/N` process instead (same wire bytes, no
+/// shared driver); this type exists for single-driver deployments and
+/// for the cross-engine parity suite.
+pub struct TcpShardGroup {
+    servers: Vec<TcpServer>,
+}
+
+impl TcpShardGroup {
+    /// `servers[s]` carries shard `s`'s lane. Every server must have
+    /// been accepted with the same worker capacity.
+    pub fn new(servers: Vec<TcpServer>) -> Self {
+        assert!(!servers.is_empty(), "shard group needs at least one lane");
+        Self { servers }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Per-lane membership, in shard order — lanes rejoin
+    /// independently, and a driver that sees `rejoined` on lane `s`
+    /// only needs to force a resync on shard `s`
+    /// (`ShardedServer::force_resync_shard`).
+    pub fn shard_memberships(&mut self) -> Vec<Membership> {
+        self.servers.iter_mut().map(|s| s.membership()).collect()
+    }
+
+    /// One lockstep sharded round: broadcast on every lane, then gather
+    /// every lane.
+    pub fn round_sharded(&mut self, broadcasts: &[ToWorker]) -> Result<Vec<Vec<ToServer>>> {
+        if broadcasts.len() != self.servers.len() {
+            return Err(anyhow!(
+                "{} broadcast frames for {} shard lanes",
+                broadcasts.len(),
+                self.servers.len()
+            ));
+        }
+        for (srv, b) in self.servers.iter_mut().zip(broadcasts) {
+            srv.send_broadcast(b)?;
+        }
+        let mut lanes = Vec::with_capacity(self.servers.len());
+        for srv in &mut self.servers {
+            lanes.push(srv.gather()?);
+        }
+        Ok(lanes)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        for srv in &mut self.servers {
+            srv.shutdown()?;
+        }
+        Ok(())
+    }
+}
+
+impl Transport for TcpShardGroup {
+    /// Single-lane rounds only make sense for a 1-shard group.
+    fn round(
+        &mut self,
+        broadcast: &ToWorker,
+        _workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<ToServer>> {
+        if self.servers.len() != 1 {
+            return Err(anyhow!("single-frame round on a {}-shard group", self.servers.len()));
+        }
+        self.servers[0].round(broadcast)
+    }
+
+    fn round_sharded(
+        &mut self,
+        broadcasts: &[ToWorker],
+        _workers: &mut [super::worker::Worker],
+    ) -> Result<Vec<Vec<ToServer>>> {
+        TcpShardGroup::round_sharded(self, broadcasts)
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp-sharded"
+    }
+
+    /// Merged membership: a worker must be present on *every* lane to
+    /// serve the round (`present` is the minimum across lanes), and any
+    /// lane's rejoin raises the resync signal. Drivers wanting
+    /// per-shard resyncs use [`TcpShardGroup::shard_memberships`]
+    /// directly.
+    fn membership(&mut self, _next_t: u64, _total: usize) -> Membership {
+        let per_lane = self.shard_memberships();
+        Membership {
+            expected: per_lane.iter().map(|m| m.expected).min().unwrap_or(0),
+            present: per_lane.iter().map(|m| m.present).min().unwrap_or(0),
+            rejoined: per_lane.iter().any(|m| m.rejoined),
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        TcpShardGroup::shutdown(self)
+    }
+}
+
 /// Worker side of the TCP deployment: connect and serve rounds until
 /// Shutdown. The closure maps each weight broadcast to a delta reply.
 pub fn tcp_worker_loop(
@@ -481,6 +712,91 @@ pub fn tcp_worker_loop(
             Some(reply) => {
                 write_frame(&mut stream, &reply.to_bytes())?;
                 rounds += 1;
+            }
+        }
+    }
+}
+
+/// Connect to one shard lane, retrying for up to ~10 s. In a rolling
+/// multi-shard deployment the worker routinely starts before some
+/// shard's listener is up; giving up on lane `s` after lane `s−1`
+/// already connected would strand a half-open worker slot on the
+/// earlier shard's accept queue, so the retry must happen *per lane*,
+/// inside the loop — not by restarting the whole connect sequence.
+fn connect_lane(addr: &str) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for _ in 0..500 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true)?;
+                return Ok(s);
+            }
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    Err(anyhow!(
+        "connecting shard lane {addr}: {}",
+        last.map(|e| e.to_string()).unwrap_or_else(|| "no attempt".into())
+    ))
+}
+
+/// Worker side of a sharded TCP deployment: one connection per shard
+/// listener (`addrs[s]` = shard `s`'s server), serving lockstep rounds
+/// until any lane sends Shutdown. Each round fans the per-lane frame
+/// reads out concurrently (every lane is its own FIFO stream, so
+/// concurrent reads stay deterministic), assembles them through
+/// [`super::worker::Worker::handle_sharded`] — the worker must carry
+/// the matching `ShardPlan` ([`super::worker::Worker::set_shards`]) —
+/// and routes each per-shard reply back on its lane. A single address
+/// delegates to [`tcp_worker_loop`] (whose caller owns the retry, as
+/// before — the seed behavior).
+pub fn tcp_sharded_worker_loop(
+    addrs: &[String],
+    worker: &mut super::worker::Worker,
+) -> Result<u64> {
+    match addrs {
+        [] => Err(anyhow!("no shard addresses")),
+        [single] => tcp_worker_loop(single, worker),
+        _ => {
+            let mut streams = Vec::with_capacity(addrs.len());
+            for addr in addrs {
+                streams.push(connect_lane(addr)?);
+            }
+            let mut rounds = 0u64;
+            loop {
+                let results: Vec<Result<ToWorker>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = streams
+                        .iter_mut()
+                        .map(|s| {
+                            scope.spawn(move || -> Result<ToWorker> {
+                                let buf = read_frame(s)?;
+                                ToWorker::from_bytes(&buf)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, h)| {
+                            h.join().unwrap_or_else(|_| {
+                                Err(anyhow!("shard lane {i} reader panicked"))
+                            })
+                        })
+                        .collect()
+                });
+                let frames = results.into_iter().collect::<Result<Vec<ToWorker>>>()?;
+                match worker.handle_sharded(&frames)? {
+                    None => return Ok(rounds),
+                    Some(replies) => {
+                        for (s, reply) in streams.iter_mut().zip(&replies) {
+                            write_frame(s, &reply.to_bytes())?;
+                        }
+                        rounds += 1;
+                    }
+                }
             }
         }
     }

@@ -1,7 +1,18 @@
 //! The worker (Algorithm 3): receive weights → local stochastic
 //! gradient → worker optimizer (moments + EF + quantization) → delta.
+//!
+//! **Sharding contract.** A worker is a *global* endpoint: its weight
+//! replica, gradient, Adam moments and EF residual always cover the
+//! whole model. Under `--shards N` only the *wire traffic* is split —
+//! [`Worker::handle_sharded`] assembles the N per-shard broadcast
+//! frames into the one replica, computes one gradient, runs one
+//! optimizer step, and routes the resulting per-shard messages back on
+//! their lanes. Per-shard `synced` flags track which ranges have seen
+//! a full-weights frame, so a single-shard resync re-anchors exactly
+//! that range.
 
 use super::protocol::{ToServer, ToWorker};
+use super::shard::ShardPlan;
 use crate::data::Dataset;
 use crate::optim::WorkerOpt;
 use crate::quant::{decode_msg, decode_parts, DeltaMsg};
@@ -65,10 +76,14 @@ pub struct Worker {
     w: Vec<f32>,
     /// scratch for decoding delta frames
     scratch: Vec<f32>,
-    /// whether `w` holds valid weights: set by the first full frame or
-    /// a checkpoint restore. Delta frames before that are a protocol
-    /// error (the server opens every stream with a resync frame).
-    synced: bool,
+    /// The shard partition this worker's wire traffic is split by
+    /// (single full-vector shard by default — the seed behavior).
+    plan: ShardPlan,
+    /// Per-shard: has this range seen a full weights frame (or a
+    /// checkpoint restore)? Delta frames on an unsynced range are a
+    /// protocol error (every shard opens its stream with a resync
+    /// frame).
+    synced: Vec<bool>,
     pub last_loss: f32,
 }
 
@@ -82,9 +97,25 @@ impl Worker {
             rng: crate::quant::seeded_rng(seed, 0x9e37_79b9 ^ id as u64),
             w: vec![0.0; dim],
             scratch: vec![0.0; dim],
-            synced: false,
+            plan: ShardPlan::single(dim),
+            synced: vec![false; 1],
             last_loss: f32::NAN,
         }
+    }
+
+    /// Split this worker's wire traffic by `plan`: frame `s` of every
+    /// [`Self::handle_sharded`] round covers shard `s`'s range, and the
+    /// reply comes back as one message per shard. Resets the per-shard
+    /// sync state (the fleet re-syncs via each shard's opening full
+    /// frame).
+    pub fn set_shards(&mut self, plan: ShardPlan) {
+        assert_eq!(plan.dim(), self.w.len(), "plan dim != worker dim");
+        self.synced = vec![false; plan.count()];
+        self.plan = plan;
+    }
+
+    fn all_synced(&self) -> bool {
+        self.synced.iter().all(|&s| s)
     }
 
     /// Current decoded weight view (the replica the next gradient is
@@ -98,7 +129,7 @@ impl Worker {
     pub fn restore_weights(&mut self, w: &[f32]) {
         assert_eq!(w.len(), self.w.len());
         self.w.copy_from_slice(w);
-        self.synced = true;
+        self.synced.fill(true);
     }
 
     pub fn opt_name(&self) -> String {
@@ -142,14 +173,14 @@ impl Worker {
                     return Err(anyhow!("weights dim {} != worker dim {}", msg.n, self.w.len()));
                 }
                 decode_msg(msg, &mut self.w);
-                self.synced = true;
+                self.synced.fill(true);
                 self.reply(*t, *epoch)
             }
             ToWorker::WeightsDelta { t, epoch, msg } => {
                 if msg.n != self.w.len() {
                     return Err(anyhow!("delta dim {} != worker dim {}", msg.n, self.w.len()));
                 }
-                if !self.synced {
+                if !self.all_synced() {
                     return Err(anyhow!(
                         "worker {}: delta frame before any full weights frame",
                         self.id
@@ -166,7 +197,7 @@ impl Worker {
                 if n != self.w.len() {
                     return Err(anyhow!("delta parts dim {} != worker dim {}", n, self.w.len()));
                 }
-                if !self.synced {
+                if !self.all_synced() {
                     return Err(anyhow!(
                         "worker {}: delta frame before any full weights frame",
                         self.id
@@ -181,6 +212,117 @@ impl Worker {
                 self.reply(*t, *epoch)
             }
         }
+    }
+
+    /// Process one sharded round: frame `s` covers shard `s`'s range of
+    /// the replica (a `Weights` frame overwrites and re-syncs that
+    /// range; delta frames add to it), then one gradient is computed at
+    /// the fully assembled view and one global optimizer step emits the
+    /// per-shard replies, in shard order. A single-shard plan delegates
+    /// to [`Self::handle`] — byte-identical to the unsharded path. Any
+    /// `Shutdown` frame ends the run (`None`).
+    pub fn handle_sharded(&mut self, frames: &[ToWorker]) -> Result<Option<Vec<ToServer>>> {
+        if self.plan.count() == 1 && frames.len() == 1 {
+            return Ok(self.handle(&frames[0])?.map(|r| vec![r]));
+        }
+        if frames.len() != self.plan.count() {
+            return Err(anyhow!(
+                "worker {}: {} shard frames for a {}-shard plan",
+                self.id,
+                frames.len(),
+                self.plan.count()
+            ));
+        }
+        if frames.iter().any(|f| matches!(f, ToWorker::Shutdown)) {
+            return Ok(None);
+        }
+        // All lanes must carry the same logical round.
+        let (t, epoch) = match &frames[0] {
+            ToWorker::Weights { t, epoch, .. }
+            | ToWorker::WeightsDelta { t, epoch, .. }
+            | ToWorker::WeightsDeltaParts { t, epoch, .. } => (*t, *epoch),
+            ToWorker::Shutdown => unreachable!("checked above"),
+        };
+        for (s, f) in frames.iter().enumerate() {
+            let ft = match f {
+                ToWorker::Weights { t, .. }
+                | ToWorker::WeightsDelta { t, .. }
+                | ToWorker::WeightsDeltaParts { t, .. } => *t,
+                ToWorker::Shutdown => unreachable!("checked above"),
+            };
+            if ft != t {
+                return Err(anyhow!(
+                    "worker {}: shard {s} at round {ft}, shard 0 at {t} (lanes desynchronized)",
+                    self.id
+                ));
+            }
+        }
+        for (s, f) in frames.iter().enumerate() {
+            let (start, len) = self.plan.range(s);
+            match f {
+                ToWorker::Weights { msg, .. } => {
+                    if msg.n != len {
+                        return Err(anyhow!(
+                            "shard {s} weights dim {} != shard width {len}",
+                            msg.n
+                        ));
+                    }
+                    decode_msg(msg, &mut self.w[start..start + len]);
+                    self.synced[s] = true;
+                }
+                ToWorker::WeightsDelta { msg, .. } => {
+                    if msg.n != len {
+                        return Err(anyhow!("shard {s} delta dim {} != shard width {len}", msg.n));
+                    }
+                    if !self.synced[s] {
+                        return Err(anyhow!(
+                            "worker {}: delta frame on shard {s} before its full weights frame",
+                            self.id
+                        ));
+                    }
+                    decode_msg(msg, &mut self.scratch[start..start + len]);
+                    for (w, &d) in
+                        self.w[start..start + len].iter_mut().zip(&self.scratch[start..start + len])
+                    {
+                        *w += d;
+                    }
+                }
+                ToWorker::WeightsDeltaParts { parts, .. } => {
+                    let n: usize = parts.iter().map(|m| m.n).sum();
+                    if n != len {
+                        return Err(anyhow!("shard {s} parts dim {n} != shard width {len}"));
+                    }
+                    if !self.synced[s] {
+                        return Err(anyhow!(
+                            "worker {}: delta frame on shard {s} before its full weights frame",
+                            self.id
+                        ));
+                    }
+                    decode_parts(parts, &mut self.scratch[start..start + len]);
+                    for (w, &d) in
+                        self.w[start..start + len].iter_mut().zip(&self.scratch[start..start + len])
+                    {
+                        *w += d;
+                    }
+                }
+                ToWorker::Shutdown => unreachable!("checked above"),
+            }
+        }
+        let (loss, grad) = self.src.loss_grad(&self.w, self.id as usize, t)?;
+        self.last_loss = loss;
+        let msgs = self.opt.step_sharded(&grad, t, epoch, &mut self.rng, self.plan.ranges())?;
+        Ok(Some(
+            msgs.into_iter()
+                .map(|m| match m {
+                    DeltaMsg::Single(msg) => {
+                        ToServer::Delta { t, worker: self.id, loss, msg }
+                    }
+                    DeltaMsg::Parts(parts) => {
+                        ToServer::DeltaParts { t, worker: self.id, loss, parts }
+                    }
+                })
+                .collect(),
+        ))
     }
 
     /// Gradient at the current replica → optimizer step → delta reply
@@ -278,6 +420,61 @@ mod tests {
         let err =
             w.handle(&ToWorker::WeightsDeltaParts { t: 3, epoch: 0, parts: vec![p0] }).unwrap_err();
         assert!(err.to_string().contains("parts dim"), "{err}");
+    }
+
+    /// Sharded rounds: per-shard frames assemble one replica, one
+    /// gradient step answers with one reply per shard, and a
+    /// single-shard resync re-anchors exactly its range.
+    #[test]
+    fn handle_sharded_assembles_ranges_and_replies_per_shard() {
+        use crate::ps::shard::ShardPlan;
+        use crate::quant::LogQuant;
+        let dim = 8;
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.1, 1) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 });
+        let mut w = Worker::new(0, Box::new(opt), Box::new(src), 42);
+        w.set_shards(ShardPlan::uniform(dim, 2));
+        let full = |x: f32, t: u64| ToWorker::Weights {
+            t,
+            epoch: 0,
+            msg: Identity.compress_into(
+                &[x; 4],
+                &mut [0.0; 4],
+                &mut crate::quant::seeded_rng(0, 0),
+            ),
+        };
+        let delta = |d: f32, t: u64| ToWorker::WeightsDelta {
+            t,
+            epoch: 0,
+            msg: LogQuant::new(2).compress_into(
+                &[d; 4],
+                &mut [0.0; 4],
+                &mut crate::quant::seeded_rng(1, t),
+            ),
+        };
+        // a delta before the shard's resync frame is rejected
+        let err = w.handle_sharded(&[delta(0.5, 1), full(1.0, 1)]).unwrap_err();
+        assert!(err.to_string().contains("shard 0"), "{err}");
+        // round 1: both lanes resync
+        let replies = w.handle_sharded(&[full(1.0, 1), full(2.0, 1)]).unwrap().unwrap();
+        assert_eq!(replies.len(), 2);
+        assert_eq!(replies[0].worker(), 0);
+        assert_eq!(replies[0].payload_n(), 4);
+        assert_eq!(replies[1].payload_n(), 4);
+        assert_eq!(replies[0].loss(), replies[1].loss(), "one gradient, one loss, every lane");
+        assert_eq!(&w.weights()[..4], &[1.0; 4]);
+        assert_eq!(&w.weights()[4..], &[2.0; 4]);
+        // round 2: shard 0 delta (exact power of two), shard 1 resync
+        w.handle_sharded(&[delta(0.5, 2), full(3.0, 2)]).unwrap().unwrap();
+        assert_eq!(&w.weights()[..4], &[1.5; 4], "delta adds on its range");
+        assert_eq!(&w.weights()[4..], &[3.0; 4], "resync overwrites its range");
+        // desynchronized lanes are a clear error
+        let err = w.handle_sharded(&[delta(0.5, 3), full(0.0, 4)]).unwrap_err();
+        assert!(err.to_string().contains("desynchronized"), "{err}");
+        // wrong frame count for the plan
+        assert!(w.handle_sharded(&[full(0.0, 3)]).is_err());
+        // any Shutdown lane ends the run
+        assert!(w.handle_sharded(&[ToWorker::Shutdown, full(0.0, 3)]).unwrap().is_none());
     }
 
     #[test]

@@ -121,6 +121,33 @@ impl TensorLayout {
     pub fn dim(&self) -> usize {
         self.dim
     }
+
+    /// The sub-layout covering `[start, start + len)`, with tensor
+    /// offsets rebased to the range — what a parameter-server *shard*
+    /// hands its own downlink [`CodecPolicy`] so per-tensor decisions
+    /// compose across shards. Errors if either range edge splits a
+    /// tensor: shard boundaries must snap to tensor boundaries
+    /// (`crate::ps::shard::ShardPlan::snapped` guarantees it).
+    pub fn crop(&self, start: usize, len: usize) -> Result<TensorLayout> {
+        let end = start
+            .checked_add(len)
+            .filter(|&e| e <= self.dim)
+            .ok_or_else(|| anyhow!("crop {start}+{len} outside layout dim {}", self.dim))?;
+        let inside: Vec<(String, usize)> = self
+            .tensors
+            .iter()
+            .filter(|ts| ts.start >= start && ts.start + ts.len <= end)
+            .map(|ts| (ts.name.clone(), ts.len))
+            .collect();
+        let covered: usize = inside.iter().map(|(_, l)| l).sum();
+        if inside.is_empty() || covered != len {
+            bail!(
+                "range {start}..{end} does not snap to tensor boundaries \
+                 ({covered} of {len} elements covered by whole tensors)"
+            );
+        }
+        Ok(Self::from_named(&inside))
+    }
 }
 
 /// Controller thresholds: grow above, shrink below. The 4x gap between
@@ -365,6 +392,22 @@ mod tests {
         assert_eq!(TensorLayout::single(5).tensors().len(), 1);
         // more parts than elements clamps
         assert_eq!(TensorLayout::uniform(3, 100).tensors().len(), 3);
+    }
+
+    #[test]
+    fn crop_rebases_whole_tensors_and_rejects_splits() {
+        let l = layout3(); // dense1[0..8) dense2[8..24) head[24..28)
+        let sub = l.crop(8, 20).unwrap();
+        assert_eq!(sub.dim(), 20);
+        assert_eq!(sub.tensors()[0], TensorSpec { name: "dense2".into(), start: 0, len: 16 });
+        assert_eq!(sub.tensors()[1], TensorSpec { name: "head".into(), start: 16, len: 4 });
+        // whole-layout crop is the identity
+        assert_eq!(l.crop(0, 28).unwrap(), l);
+        // a range edge inside dense2 must be rejected
+        assert!(l.crop(0, 12).is_err());
+        assert!(l.crop(10, 18).is_err());
+        // out of bounds
+        assert!(l.crop(8, 28).is_err());
     }
 
     #[test]

@@ -245,6 +245,7 @@ fn pjrt_engine_with_delta_downlink_trains_and_cuts_down_bytes() {
         resync_every: 8,
         chaos: None,
         codec_policy: qadam::quant::PolicySpec::Static,
+        shards: 1,
         straggler: qadam::elastic::StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,

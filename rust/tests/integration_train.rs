@@ -32,6 +32,7 @@ fn base_cfg() -> ExperimentConfig {
         resync_every: 64,
         chaos: None,
         codec_policy: qadam::quant::PolicySpec::Static,
+        shards: 1,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,
@@ -156,6 +157,7 @@ fn lm_model_trains_and_loss_drops() {
         resync_every: 64,
         chaos: None,
         codec_policy: qadam::quant::PolicySpec::Static,
+        shards: 1,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
         seed: 0,
@@ -254,7 +256,7 @@ fn delta_downlink_checkpoint_resume_is_bitwise_identical() {
     let ckpt = tr1.checkpoint();
     // v2 checkpoints carry the server replica + residual
     let ckpt = qadam::coordinator::Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
-    assert!(ckpt.server.is_some(), "delta-mode checkpoints must carry server state");
+    assert!(!ckpt.server.is_empty(), "delta-mode checkpoints must carry server state");
     let mut tr2 = Trainer::new(cfg).unwrap();
     tr2.restore(&ckpt).unwrap();
     let sb = tr2.run().unwrap();

@@ -1,0 +1,461 @@
+//! Shard-layer acceptance suite (no artifacts needed — sim workers
+//! over the real engines):
+//!
+//! * `--shards 1` drives the very same code path as the unsharded seed
+//!   engine: broadcast frames, replies, masters, stats and
+//!   participation are **byte-identical** round by round.
+//! * An N-shard fixed-seed run is **bit-reproducible** across all
+//!   three transports — sequential, threaded, TCP — including the
+//!   per-shard byte accounting and the adaptive policy's chosen bits.
+//! * Chaos crash/rejoin composes with sharding: the rejoin forces a
+//!   resync on every shard, replicas re-anchor, and the run stays
+//!   bit-identical across the in-process engines.
+//! * A single-shard forced resync re-anchors exactly that shard while
+//!   the other lanes keep their delta streams.
+//! * Checkpoints round-trip across shard counts: a 2-shard run resumes
+//!   bit-identically from its v3 file, and v2 ↔ v3 files restore under
+//!   either shard count through the stitched blobs.
+
+use qadam::coordinator::checkpoint::{Checkpoint, ShardServerState, WorkerState};
+use qadam::elastic::{ChaosPlan, ChaosTransport};
+use qadam::optim::{LrSchedule, QAdamEf};
+use qadam::ps::transport::{tcp_sharded_worker_loop, TcpServer, TcpShardGroup};
+use qadam::ps::worker::{SimGradSource, Worker};
+use qadam::ps::{
+    LocalBus, ParameterServer, ShardPlan, ShardedServer, ThreadedBus, ToWorker, Transport,
+};
+use qadam::quant::{CodecPolicy, PolicySpec, TensorLayout};
+
+const BLOCK: usize = 1 << 16;
+
+fn mk_worker(id: u32, dim: usize, policy: Option<(PolicySpec, TensorLayout)>) -> Worker {
+    let src = SimGradSource { problem: qadam::sim::StochasticProblem::new(dim, 0.05, 9) };
+    let mut opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.02 });
+    if let Some((spec, layout)) = policy {
+        opt = opt.with_policy(CodecPolicy::new(spec, layout, 2).unwrap());
+    }
+    Worker::new(id, Box::new(opt), Box::new(src), 1)
+}
+
+fn x0(dim: usize) -> Vec<f32> {
+    (0..dim).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect()
+}
+
+/// Acceptance: `--shards 1` is byte-identical to the pre-shard engine.
+/// The seed path (bare `ParameterServer` + `LocalBus::round` +
+/// `Worker::handle`) and the shard path (`ShardedServer` over a
+/// single-range plan + `round_sharded` + `handle_sharded`) are run
+/// side by side; every frame, reply, master, stat and participation
+/// must match bit for bit — with weight quantization and the delta
+/// downlink in play.
+#[test]
+fn shards_1_is_byte_identical_to_the_seed_engine() {
+    let dim = 64;
+    let nw = 3usize;
+    let kx = Some(4u32);
+    // seed path
+    let mut ps_seed = ParameterServer::new(x0(dim), kx);
+    ps_seed.enable_delta_downlink(qadam::quant::gradient_codec(Some(2)), 5);
+    let mut ws_seed: Vec<Worker> = (0..nw as u32).map(|i| mk_worker(i, dim, None)).collect();
+    let seed_bus = LocalBus::default();
+    // shard path, shards = 1
+    let plan =
+        ShardPlan::build(dim, 1, &PolicySpec::Static, &TensorLayout::uniform(dim, 4)).unwrap();
+    let mut srv = ShardedServer::new(x0(dim), kx, plan.clone(), BLOCK, 1);
+    srv.enable_delta_downlink(Some(2), 5);
+    let mut ws: Vec<Worker> = (0..nw as u32)
+        .map(|i| {
+            let mut w = mk_worker(i, dim, None);
+            w.set_shards(plan.clone());
+            w
+        })
+        .collect();
+    let mut bus: Box<dyn Transport> = Box::new(LocalBus::default());
+    for t in 1u64..=12 {
+        let (b, _) = ps_seed.broadcast(nw);
+        let r = seed_bus.round(&b, &mut ws_seed).unwrap();
+        let part_seed = ps_seed.apply(&r).unwrap();
+
+        let frames = srv.broadcast(nw);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].to_bytes(), b.to_bytes(), "t={t}: broadcast frame diverged");
+        let lanes = bus.round_sharded(&frames, &mut ws).unwrap();
+        assert_eq!(lanes.len(), 1);
+        for (x, y) in lanes[0].iter().zip(&r) {
+            assert_eq!(x.to_bytes(), y.to_bytes(), "t={t}: reply diverged");
+        }
+        let part = srv.apply(&lanes).unwrap();
+        assert_eq!(part, part_seed, "t={t}");
+        assert_eq!(srv.master(), ps_seed.master(), "t={t}");
+        assert_eq!(srv.stats(), ps_seed.stats, "t={t}");
+        let (replica, residual) = ps_seed.downlink_state().unwrap();
+        let states = srv.downlink_states().unwrap();
+        assert_eq!(states[0].0, replica, "t={t}");
+        assert_eq!(states[0].1, residual, "t={t}");
+    }
+}
+
+/// Drive one in-process sharded round: membershipless full fleet.
+fn drive_round(
+    srv: &mut ShardedServer,
+    bus: &mut dyn Transport,
+    workers: &mut [Worker],
+) -> (Vec<ToWorker>, qadam::elastic::Participation) {
+    let frames = srv.broadcast(workers.len());
+    let lanes = bus.round_sharded(&frames, workers).unwrap();
+    let part = srv.apply(&lanes).unwrap();
+    (frames, part)
+}
+
+/// Acceptance: a 2-shard fixed-seed run — delta downlink + adaptive
+/// per-tensor policy on both directions — is bit-reproducible across
+/// LocalBus, ThreadedBus and the TCP shard group: masters, per-shard
+/// CommStats, downlink replicas, chosen policy bits and participation
+/// all match round by round.
+#[test]
+fn n_shard_fixed_seed_bit_parity_across_all_three_transports() {
+    let dim = 96;
+    let nw = 2usize;
+    let rounds = 12u64;
+    let spec = PolicySpec::Adaptive { lo: 0, hi: 4 };
+    let layout = TensorLayout::uniform(dim, 4);
+    let plan = ShardPlan::build(dim, 2, &spec, &layout).unwrap();
+    assert_eq!(plan.count(), 2);
+    let mk_srv = || {
+        let mut srv = ShardedServer::new(x0(dim), None, plan.clone(), BLOCK, 1);
+        srv.enable_delta_downlink(Some(2), 5);
+        srv.set_downlink_policy(&spec, &layout, 2).unwrap();
+        srv
+    };
+    let mk_ws = |plan: &ShardPlan| -> Vec<Worker> {
+        (0..nw as u32)
+            .map(|i| {
+                let mut w = mk_worker(i, dim, Some((spec.clone(), layout.clone())));
+                w.set_shards(plan.clone());
+                w
+            })
+            .collect()
+    };
+
+    // TCP lanes: two listeners, workers as real sharded TCP clients.
+    let ephemeral = || {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        addr
+    };
+    let addr0 = ephemeral();
+    let addr1 = ephemeral();
+    let handles: Vec<_> = (0..nw as u32)
+        .map(|id| {
+            let addrs = vec![addr0.clone(), addr1.clone()];
+            let plan = plan.clone();
+            let spec = spec.clone();
+            let layout = layout.clone();
+            std::thread::spawn(move || {
+                let mut w = mk_worker(id, dim, Some((spec, layout)));
+                w.set_shards(plan);
+                // per-lane connect retries live inside the loop, so a
+                // worker may start before the listeners are up
+                tcp_sharded_worker_loop(&addrs, &mut w).unwrap()
+            })
+        })
+        .collect();
+    let srv0 = TcpServer::bind_and_accept(&addr0, nw).unwrap();
+    let srv1 = TcpServer::bind_and_accept(&addr1, nw).unwrap();
+    let mut group = TcpShardGroup::new(vec![srv0, srv1]);
+
+    let mut ps_local = mk_srv();
+    let mut ws_local = mk_ws(&plan);
+    let mut local: Box<dyn Transport> = Box::new(LocalBus::default());
+    let mut ps_thr = mk_srv();
+    let mut ws_thr = mk_ws(&plan);
+    let mut thr: Box<dyn Transport> = Box::new(ThreadedBus::new());
+    let mut ps_tcp = mk_srv();
+
+    for t in 1..=rounds {
+        let (frames_l, part_l) = drive_round(&mut ps_local, local.as_mut(), &mut ws_local);
+        let (frames_t, part_t) = drive_round(&mut ps_thr, thr.as_mut(), &mut ws_thr);
+        let frames_tcp = ps_tcp.broadcast(nw);
+        let lanes_tcp = group.round_sharded(&frames_tcp).unwrap();
+        let part_tcp = ps_tcp.apply(&lanes_tcp).unwrap();
+
+        let bytes = |fs: &[ToWorker]| fs.iter().map(|f| f.to_bytes()).collect::<Vec<_>>();
+        assert_eq!(bytes(&frames_l), bytes(&frames_t), "t={t}: frames local vs threaded");
+        assert_eq!(bytes(&frames_l), bytes(&frames_tcp), "t={t}: frames local vs tcp");
+        assert_eq!(part_l, part_t, "t={t}");
+        assert_eq!(part_l, part_tcp, "t={t}");
+        assert_eq!(ps_local.master(), ps_thr.master(), "t={t}");
+        assert_eq!(ps_local.master(), ps_tcp.master(), "t={t}");
+        for s in 0..2 {
+            assert_eq!(ps_local.shard_stats(s), ps_thr.shard_stats(s), "t={t} shard {s}");
+            assert_eq!(ps_local.shard_stats(s), ps_tcp.shard_stats(s), "t={t} shard {s}");
+        }
+        assert_eq!(
+            ps_local.downlink_chosen_bits(),
+            ps_tcp.downlink_chosen_bits(),
+            "t={t}: downlink policy bits"
+        );
+        assert!(ps_local.downlink_bits().is_some());
+        let rl = ps_local.downlink_states().unwrap();
+        let rt = ps_tcp.downlink_states().unwrap();
+        for s in 0..2 {
+            assert_eq!(rl[s].0, rt[s].0, "t={t} shard {s}: replica");
+        }
+        // worker-side chosen bits agree across the in-process engines
+        assert_eq!(ws_local[0].chosen_bits(), ws_thr[0].chosen_bits(), "t={t}");
+    }
+    group.shutdown().unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), rounds);
+    }
+}
+
+/// Acceptance: chaos crash/rejoin on a 2-shard fleet — the rejoin
+/// forces a full-weights resync on *every* shard (the worker missed
+/// frames on every lane), replicas re-anchor, and the whole chaotic
+/// run is bit-identical across the sequential and threaded engines.
+#[test]
+fn chaos_crash_rejoin_forces_resync_on_every_shard_bit_reproducibly() {
+    let dim = 64;
+    let nw = 3usize;
+    let plan = ShardPlan::uniform(dim, 2);
+    let chaos_plan = ChaosPlan::default().with_crash(1, 4, 8);
+    let mk_srv = || {
+        let mut srv = ShardedServer::new(x0(dim), None, plan.clone(), BLOCK, 1);
+        srv.enable_delta_downlink(Some(2), 0); // resync only round 1 / forced
+        srv
+    };
+    let mk_ws = || -> Vec<Worker> {
+        (0..nw as u32)
+            .map(|i| {
+                let mut w = mk_worker(i, dim, None);
+                w.set_shards(plan.clone());
+                w
+            })
+            .collect()
+    };
+    let mut ps_a = mk_srv();
+    let mut ws_a = mk_ws();
+    let mut bus_a: Box<dyn Transport> =
+        Box::new(ChaosTransport::new(Box::new(LocalBus::default()), chaos_plan.clone()));
+    let mut ps_b = mk_srv();
+    let mut ws_b = mk_ws();
+    let mut bus_b: Box<dyn Transport> =
+        Box::new(ChaosTransport::new(Box::new(ThreadedBus::new()), chaos_plan));
+    for t in 1u64..=10 {
+        let m_a = bus_a.membership(t, nw);
+        let m_b = bus_b.membership(t, nw);
+        assert_eq!(m_a, m_b, "t={t}");
+        assert_eq!(m_a.rejoined, t == 8, "t={t}");
+        if m_a.rejoined {
+            ps_a.force_resync_all();
+            ps_b.force_resync_all();
+        }
+        let frames_a = ps_a.broadcast(m_a.present);
+        let frames_b = ps_b.broadcast(m_b.present);
+        if t == 1 || t == 8 {
+            assert!(
+                frames_a.iter().all(|f| matches!(f, ToWorker::Weights { .. })),
+                "t={t}: every shard must resync"
+            );
+        } else {
+            assert!(
+                frames_a.iter().all(|f| matches!(f, ToWorker::WeightsDelta { .. })),
+                "t={t}: steady state is delta frames on every shard"
+            );
+        }
+        let lanes_a = bus_a.round_sharded(&frames_a, &mut ws_a).unwrap();
+        let lanes_b = bus_b.round_sharded(&frames_b, &mut ws_b).unwrap();
+        let part_a = ps_a.apply(&lanes_a).unwrap();
+        let part_b = ps_b.apply(&lanes_b).unwrap();
+        assert_eq!(part_a, part_b, "t={t}");
+        let expected: Vec<u32> =
+            if (4..8).contains(&t) { vec![0, 2] } else { vec![0, 1, 2] };
+        assert_eq!(part_a.reporters, expected, "t={t}");
+        assert_eq!(ps_a.master(), ps_b.master(), "t={t}");
+        // every present worker's view equals the concatenated replicas
+        let states = ps_a.downlink_states().unwrap();
+        let mut replica = Vec::with_capacity(dim);
+        for (r, _) in &states {
+            replica.extend_from_slice(r);
+        }
+        for w in &ws_a {
+            if w.id == 1 && (4..8).contains(&t) {
+                continue; // crashed: stale by design until the rejoin resync
+            }
+            assert_eq!(w.weights(), &replica[..], "t={t} worker {}", w.id);
+        }
+    }
+    // round 1 + the forced rejoin resync, on each of the two shards
+    assert_eq!(ps_a.stats().resyncs, 4);
+}
+
+/// A forced single-shard resync (shard-local restore / lane rejoin)
+/// re-anchors exactly that shard: the other lane keeps its delta
+/// stream, and the run continues bit-consistently.
+#[test]
+fn single_shard_forced_resync_keeps_other_lanes_on_delta() {
+    let dim = 48;
+    let nw = 2usize;
+    let plan = ShardPlan::uniform(dim, 2);
+    let mut srv = ShardedServer::new(x0(dim), None, plan.clone(), BLOCK, 1);
+    srv.enable_delta_downlink(Some(2), 0);
+    let mut ws: Vec<Worker> = (0..nw as u32)
+        .map(|i| {
+            let mut w = mk_worker(i, dim, None);
+            w.set_shards(plan.clone());
+            w
+        })
+        .collect();
+    let mut bus: Box<dyn Transport> = Box::new(LocalBus::default());
+    for _ in 1..=3 {
+        drive_round(&mut srv, bus.as_mut(), &mut ws);
+    }
+    srv.force_resync_shard(1);
+    let frames = srv.broadcast(nw);
+    assert!(matches!(frames[0], ToWorker::WeightsDelta { .. }), "shard 0 stays on delta");
+    assert!(matches!(frames[1], ToWorker::Weights { .. }), "shard 1 resyncs alone");
+    let lanes = bus.round_sharded(&frames, &mut ws).unwrap();
+    srv.apply(&lanes).unwrap();
+    for _ in 5..=6 {
+        let (frames, _) = drive_round(&mut srv, bus.as_mut(), &mut ws);
+        assert!(frames.iter().all(|f| matches!(f, ToWorker::WeightsDelta { .. })));
+    }
+    assert_eq!(srv.shard_stats(0).resyncs, 1, "shard 0: only round 1");
+    assert_eq!(srv.shard_stats(1).resyncs, 2, "shard 1: round 1 + the forced one");
+    // replicas still mirror every worker bit-exactly
+    let states = srv.downlink_states().unwrap();
+    let mut replica = Vec::with_capacity(dim);
+    for (r, _) in &states {
+        replica.extend_from_slice(r);
+    }
+    for w in &ws {
+        assert_eq!(w.weights(), &replica[..], "worker {}", w.id);
+    }
+}
+
+/// Snapshot a running sharded fleet into a Checkpoint (the trainer's
+/// layout: per-shard blobs + per-worker opt state).
+fn snapshot(srv: &ShardedServer, ws: &[Worker]) -> Checkpoint {
+    let mut server = Vec::new();
+    for (i, &(start, _len)) in srv.plan().ranges().iter().enumerate() {
+        let (replica, residual) = srv.shard(i).downlink_state().unwrap();
+        server.push(ShardServerState {
+            start,
+            replica: replica.to_vec(),
+            residual: residual.to_vec(),
+        });
+    }
+    Checkpoint {
+        model: "sim".into(),
+        step: srv.step(),
+        x: srv.master(),
+        server,
+        workers: ws
+            .iter()
+            .map(|w| w.opt_state().map(|(m, v, e)| WorkerState { m, v, e }))
+            .collect(),
+    }
+}
+
+/// Acceptance: checkpoint v2 ↔ v3 round-trip. A 2-shard run writes a
+/// version-3 file and resumes from it bit-identically; the same file
+/// restores into a 1-shard server (stitched blobs re-sliced), and a
+/// v2-style single-blob file restores into a 2-shard server — the
+/// per-shard states come back as exact slices of the full vectors.
+#[test]
+fn checkpoint_v2_v3_round_trip_across_shard_counts() {
+    let dim = 32;
+    let nw = 2usize;
+    let plan2 = ShardPlan::uniform(dim, 2);
+    let mk_srv = |plan: &ShardPlan| {
+        let mut srv = ShardedServer::new(x0(dim), None, plan.clone(), BLOCK, 1);
+        srv.enable_delta_downlink(Some(2), 4);
+        srv
+    };
+    let mk_ws = |plan: &ShardPlan| -> Vec<Worker> {
+        (0..nw as u32)
+            .map(|i| {
+                let mut w = mk_worker(i, dim, None);
+                w.set_shards(plan.clone());
+                w
+            })
+            .collect()
+    };
+    // Reference: 10 uninterrupted rounds.
+    let mut ps_ref = mk_srv(&plan2);
+    let mut ws_ref = mk_ws(&plan2);
+    let mut bus: Box<dyn Transport> = Box::new(LocalBus::default());
+    let mut ckpt_bytes = Vec::new();
+    for t in 1u64..=10 {
+        drive_round(&mut ps_ref, bus.as_mut(), &mut ws_ref);
+        if t == 6 {
+            ckpt_bytes = snapshot(&ps_ref, &ws_ref).to_bytes();
+        }
+    }
+    // The 2-shard snapshot is a version-3 file.
+    assert_eq!(u32::from_le_bytes(ckpt_bytes[8..12].try_into().unwrap()), 3);
+    let ckpt = Checkpoint::from_bytes(&ckpt_bytes).unwrap();
+    assert_eq!(ckpt.server.len(), 2);
+    assert_eq!(ckpt.step, 6);
+
+    // Resume a fresh 2-shard fleet from it: rounds 7..=10 must be
+    // bit-identical to the uninterrupted reference.
+    let mut ps = mk_srv(&plan2);
+    let mut ws = mk_ws(&plan2);
+    ps.restore(&ckpt.x, ckpt.step);
+    let (replica, residual) = ckpt.stitched_server(dim).unwrap().unwrap();
+    ps.restore_downlink_full(&replica, &residual).unwrap();
+    for (w, s) in ws.iter_mut().zip(&ckpt.workers) {
+        w.restore_weights(&replica);
+        let s = s.as_ref().unwrap();
+        w.opt_restore(&s.m, &s.v, &s.e);
+    }
+    for _ in 7..=10 {
+        drive_round(&mut ps, bus.as_mut(), &mut ws);
+    }
+    assert_eq!(ps.master(), ps_ref.master(), "resumed 2-shard run diverged");
+    let (a, b) = (ps.downlink_states().unwrap(), ps_ref.downlink_states().unwrap());
+    for s in 0..2 {
+        assert_eq!(a[s].0, b[s].0, "shard {s} replica diverged after resume");
+        assert_eq!(a[s].1, b[s].1, "shard {s} residual diverged after resume");
+    }
+
+    // The v3 file loads into a 1-shard server: its single downlink
+    // state is exactly the stitched full-range vectors.
+    let plan1 = ShardPlan::single(dim);
+    let mut ps1 = mk_srv(&plan1);
+    ps1.restore(&ckpt.x, ckpt.step);
+    ps1.restore_downlink_full(&replica, &residual).unwrap();
+    let s1 = ps1.downlink_states().unwrap();
+    assert_eq!(s1[0].0, &replica[..]);
+    assert_eq!(s1[0].1, &residual[..]);
+    assert_eq!(ps1.master(), ckpt.x);
+
+    // And a v2-style file (one full-range blob) restores into the
+    // 2-shard fleet as exact slices.
+    let v2 = Checkpoint {
+        model: "sim".into(),
+        step: 6,
+        x: ckpt.x.clone(),
+        server: vec![ShardServerState {
+            start: 0,
+            replica: replica.clone(),
+            residual: residual.clone(),
+        }],
+        workers: vec![None, None],
+    };
+    let v2_bytes = v2.to_bytes();
+    assert_eq!(u32::from_le_bytes(v2_bytes[8..12].try_into().unwrap()), 2);
+    let v2 = Checkpoint::from_bytes(&v2_bytes).unwrap();
+    let (r2, e2) = v2.stitched_server(dim).unwrap().unwrap();
+    let mut ps2 = mk_srv(&plan2);
+    ps2.restore(&v2.x, v2.step);
+    ps2.restore_downlink_full(&r2, &e2).unwrap();
+    let states = ps2.downlink_states().unwrap();
+    let (s0, s1) = (plan2.range(0), plan2.range(1));
+    assert_eq!(states[0].0, &replica[s0.0..s0.0 + s0.1]);
+    assert_eq!(states[1].0, &replica[s1.0..s1.0 + s1.1]);
+    assert_eq!(states[1].1, &residual[s1.0..s1.0 + s1.1]);
+}

@@ -58,6 +58,38 @@ cargo run --release --example fedlearn_edge -- --devices 2 --steps 40 --dim 512
 step "bench smoke: policy_sweep (1 round)"
 cargo bench --bench policy_sweep -- --rounds 1 --dim 4096 --workers 2
 
+# One-round smoke of the shard-scaling sweep: the sharded server +
+# threaded lanes end to end, plus the machine-readable JSON emitter.
+step "bench smoke: shard_scaling (1 round)"
+cargo bench --bench shard_scaling -- --rounds 1 --dim 4096 --workers 2 --shards 1,2 \
+    --json /tmp/BENCH_shard_scaling_smoke.json
+grep -q '"bench": "shard_scaling"' /tmp/BENCH_shard_scaling_smoke.json
+
+# Binary-compatibility probe: `qadam info` must print its capability
+# JSON (wire version, frame tags, codecs, shard conventions) without
+# needing artifacts.
+step "cli smoke: qadam info"
+target/release/qadam info | grep -q '"wire_version"'
+
+# The README operator runbook, executed as written: two shard servers
+# (one listener each, base port + shard id), two workers fanning their
+# per-shard frames across both. Everything must exit cleanly.
+step "2-shard TCP smoke (README runbook)"
+target/release/qadam serve --addr 127.0.0.1:17841 --shard-id 0/2 --workers 2 \
+    --dim 64 --steps 5 --kg 2 --downlink delta &
+S0=$!
+target/release/qadam serve --addr 127.0.0.1:17841 --shard-id 1/2 --workers 2 \
+    --dim 64 --steps 5 --kg 2 --downlink delta &
+S1=$!
+target/release/qadam worker --addr 127.0.0.1:17841 --shards 2 --id 0 \
+    --dim 64 --kg 2 --downlink delta &
+W0=$!
+target/release/qadam worker --addr 127.0.0.1:17841 --shards 2 --id 1 \
+    --dim 64 --kg 2 --downlink delta
+wait "$S0"
+wait "$S1"
+wait "$W0"
+
 if [ -f "${QADAM_ARTIFACTS:-artifacts}/manifest.json" ]; then
     step "example smoke: quickstart"
     cargo run --release --example quickstart
