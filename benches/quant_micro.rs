@@ -1,59 +1,259 @@
 //! Micro-benchmarks for the communication hot path: quantize, pack,
-//! decode for every codec, plus wire serialization.
+//! decode for every codec, plus wire serialization — and, for each
+//! rewritten kernel, the retained scalar reference implementation
+//! (`qadam::quant::reference`) timed side by side so the speedup the
+//! SIMD/fused rewrite buys is a *measured, tracked* number, not a
+//! claim.
 //!
 //!   cargo bench --bench quant_micro
+//!   cargo bench --bench quant_micro -- --sizes 4096 --target-ms 20 \
+//!       --json /tmp/q.json                                  # CI smoke
+//!
+//! Flags: --sizes CSV of element counts (default 65536,1048576),
+//! --target-ms N per measurement (default 200),
+//! --json PATH (default BENCH_quant_micro.json).
+//!
+//! The JSON is the bench trajectory: `scripts/bench_diff.sh` compares a
+//! fresh run against the committed `BENCH_quant_micro.json` and fails
+//! on regression. Refresh the baseline with
+//! `scripts/bench_diff.sh --refresh`.
 
-use qadam::quant::{seeded_rng, Blockwise, Compressor, Identity, LogQuant, TernGrad, WQuant};
-use qadam::util::bench::run;
-use qadam::util::DetRng;
+use qadam::quant::reference as r;
+use qadam::quant::{
+    decode_msg_range_add, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd,
+    StochasticLogQuant, TernGrad, WQuant, WireMsg,
+};
+use qadam::util::bench::{bench, BenchResult};
+use qadam::util::{Args, DetRng};
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
     let mut r = DetRng::seed_stream(seed, 0);
     (0..n).map(|_| r.gen_normal() * 0.01).collect()
 }
 
+struct Entry {
+    name: String,
+    n: usize,
+    res: BenchResult,
+}
+
+struct Speedup {
+    kernel: String,
+    n: usize,
+    ref_ns: f64,
+    fused_ns: f64,
+}
+
+struct Session {
+    target_ms: u64,
+    entries: Vec<Entry>,
+    speedups: Vec<Speedup>,
+}
+
+impl Session {
+    /// Bench `f`, print with throughput, record for the JSON.
+    fn run(&mut self, name: &str, n: usize, bytes: usize, f: impl FnMut()) -> f64 {
+        let res = bench(&format!("{name} n={n}"), self.target_ms, f);
+        res.print(Some(bytes));
+        let ns = res.median_ns;
+        self.entries.push(Entry { name: name.to_string(), n, res });
+        ns
+    }
+
+    /// Bench the fused kernel against its scalar reference and record
+    /// the speedup.
+    fn versus(
+        &mut self,
+        kernel: &str,
+        n: usize,
+        bytes: usize,
+        fused: impl FnMut(),
+        reference: impl FnMut(),
+    ) {
+        let fused_ns = self.run(kernel, n, bytes, fused);
+        let ref_ns = self.run(&format!("{kernel} [scalar ref]"), n, bytes, reference);
+        println!("   -> {kernel}: {:.2}x vs scalar reference", ref_ns / fused_ns);
+        self.speedups.push(Speedup { kernel: kernel.to_string(), n, ref_ns, fused_ns });
+    }
+}
+
+/// A codec paired with reference compress/decompress closures.
+type RefCompress = Box<dyn Fn(&[f32], &mut [f32], &mut DetRng) -> WireMsg>;
+type RefDecompress = Box<dyn Fn(&WireMsg, usize, &mut [f32])>;
+
+fn codec_cases() -> Vec<(&'static str, Box<dyn Compressor>, RefCompress, RefDecompress)> {
+    vec![
+        (
+            "logquant kg=2",
+            Box::new(LogQuant::new(2)),
+            Box::new(|u, q, _rng: &mut DetRng| r::logquant_compress_ref(2, u, q)),
+            Box::new(|m: &WireMsg, s, o: &mut [f32]| r::logquant_decompress_range_ref(m, s, o)),
+        ),
+        (
+            "logquant kg=8",
+            Box::new(LogQuant::new(8)),
+            Box::new(|u, q, _rng: &mut DetRng| r::logquant_compress_ref(8, u, q)),
+            Box::new(|m: &WireMsg, s, o: &mut [f32]| r::logquant_decompress_range_ref(m, s, o)),
+        ),
+        (
+            "stoch-log kg=2",
+            Box::new(StochasticLogQuant::new(2)),
+            Box::new(|u, q, rng: &mut DetRng| r::stochastic_log_compress_ref(2, u, q, rng)),
+            Box::new(|m: &WireMsg, s, o: &mut [f32]| r::logquant_decompress_range_ref(m, s, o)),
+        ),
+        (
+            "terngrad",
+            Box::new(TernGrad),
+            Box::new(|u, q, rng: &mut DetRng| r::terngrad_compress_ref(u, q, rng)),
+            Box::new(|m: &WireMsg, s, o: &mut [f32]| r::terngrad_decompress_range_ref(m, s, o)),
+        ),
+        (
+            "qsgd L=4",
+            Box::new(Qsgd::new(4)),
+            Box::new(|u, q, rng: &mut DetRng| r::qsgd_compress_ref(4, u, q, rng)),
+            Box::new(|m: &WireMsg, s, o: &mut [f32]| r::qsgd_decompress_range_ref(m, s, o)),
+        ),
+        (
+            "blockwise 4096",
+            Box::new(Blockwise::new(4096)),
+            Box::new(|u, q, _rng: &mut DetRng| r::blockwise_compress_ref(4096, u, q)),
+            Box::new(|m: &WireMsg, s, o: &mut [f32]| {
+                r::blockwise_decompress_range_ref(4096, m, s, o)
+            }),
+        ),
+        (
+            "wquant kx=6",
+            Box::new(WQuant::new(6)),
+            Box::new(|u, q, _rng: &mut DetRng| r::wquant_compress_ref(6, u, q)),
+            Box::new(|m: &WireMsg, s, o: &mut [f32]| r::wquant_decompress_range_ref(6, m, s, o)),
+        ),
+    ]
+}
+
 fn main() {
-    println!("== quant_micro (sizes: 64Ki and 1Mi f32) ==");
-    for &n in &[1usize << 16, 1 << 20] {
+    let a = Args::parse_env().unwrap();
+    let sizes_csv = a.get_str("sizes", "65536,1048576");
+    let target_ms: u64 = a.get("target_ms", 200).unwrap();
+    let json_path = a.get_str("json", "BENCH_quant_micro.json");
+    a.reject_unknown().unwrap();
+    let sizes: Vec<usize> = sizes_csv
+        .split(',')
+        .map(|s| s.trim().parse().expect("--sizes takes a comma list of element counts"))
+        .collect();
+
+    let mut sess = Session { target_ms, entries: Vec::new(), speedups: Vec::new() };
+    println!("== quant_micro (sizes: {sizes:?}, {target_ms} ms/measurement) ==");
+    for &n in &sizes {
         let u = randv(n, 1);
         let bytes = n * 4;
         let mut q = vec![0.0f32; n];
+        let mut q_ref = vec![0.0f32; n];
+        let mut out = vec![0.0f32; n];
+        let mut out_ref = vec![0.0f32; n];
 
-        for (name, comp) in [
-            ("logquant kg=2", Box::new(LogQuant::new(2)) as Box<dyn Compressor>),
-            ("logquant kg=8", Box::new(LogQuant::new(8))),
-            ("terngrad", Box::new(TernGrad)),
-            ("blockwise 4096", Box::new(Blockwise::new(4096))),
-            ("wquant kx=6", Box::new(WQuant::new(6))),
-            ("identity", Box::new(Identity)),
-        ] {
+        for (name, comp, ref_c, ref_d) in codec_cases() {
+            // fused-vs-reference compress (quantize + bit-pack)
             let mut rng = seeded_rng(0, 0);
-            let label = format!("{name} compress n={n}");
-            run(&label, Some(bytes), || {
-                let msg = comp.compress_into(&u, &mut q, &mut rng);
-                std::hint::black_box(msg.wire_bytes());
-            });
+            let mut rng_ref = seeded_rng(0, 0);
+            sess.versus(
+                &format!("{name} compress"),
+                n,
+                bytes,
+                || {
+                    std::hint::black_box(comp.compress_into(&u, &mut q, &mut rng).wire_bytes());
+                },
+                || {
+                    std::hint::black_box(ref_c(&u, &mut q_ref, &mut rng_ref).wire_bytes());
+                },
+            );
+            // fused-vs-reference decode
             let mut rng = seeded_rng(0, 0);
             let msg = comp.compress_into(&u, &mut q, &mut rng);
-            let mut out = vec![0.0f32; n];
-            let label = format!("{name} decompress n={n}");
-            run(&label, Some(bytes), || {
-                comp.decompress(&msg, &mut out);
-                std::hint::black_box(out[0]);
-            });
+            sess.versus(
+                &format!("{name} decompress"),
+                n,
+                bytes,
+                || {
+                    comp.decompress(&msg, &mut out);
+                    std::hint::black_box(out[0]);
+                },
+                || {
+                    ref_d(&msg, 0, &mut out_ref);
+                    std::hint::black_box(out_ref[0]);
+                },
+            );
+            // fused decode-accumulate (the server apply inner loop) vs
+            // the pre-fusion shape: decode to scratch, then add.
+            let mut scratch = vec![0.0f32; n];
+            sess.versus(
+                &format!("{name} decode_add"),
+                n,
+                bytes,
+                || {
+                    decode_msg_range_add(&msg, 0, &mut out);
+                    std::hint::black_box(out[0]);
+                },
+                || {
+                    ref_d(&msg, 0, &mut scratch);
+                    for (o, &s) in out_ref.iter_mut().zip(scratch.iter()) {
+                        *o += s;
+                    }
+                    std::hint::black_box(out_ref[0]);
+                },
+            );
         }
 
-        // wire serialization roundtrip
-        let lq = LogQuant::new(2);
+        // identity + wire serialization (no scalar reference — these
+        // were not rewritten, they just anchor the trajectory)
         let mut rng = seeded_rng(0, 0);
-        let msg = lq.compress_into(&u, &mut q, &mut rng);
-        run(&format!("wire to_bytes n={n}"), Some(msg.wire_bytes()), || {
+        sess.run("identity compress", n, bytes, || {
+            std::hint::black_box(Identity.compress_into(&u, &mut q, &mut rng).wire_bytes());
+        });
+        let lq = LogQuant::new(2);
+        let msg = lq.compress_into(&u, &mut q, &mut seeded_rng(0, 0));
+        sess.run("wire to_bytes", n, msg.wire_bytes(), || {
             std::hint::black_box(msg.to_bytes().len());
         });
         let b = msg.to_bytes();
-        run(&format!("wire from_bytes n={n}"), Some(b.len()), || {
-            std::hint::black_box(qadam::quant::WireMsg::from_bytes(&b).unwrap().n);
+        sess.run("wire from_bytes", n, b.len(), || {
+            std::hint::black_box(WireMsg::from_bytes(&b).unwrap().n);
         });
         println!();
     }
+
+    // Machine-readable trajectory point.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"quant_micro\",\n");
+    json.push_str(&format!(
+        "  \"sizes\": [{}],\n  \"target_ms\": {target_ms},\n",
+        sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, e) in sess.entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{} n={}\", \"median_ns\": {:.1}, \"p10_ns\": {:.1}, \"p90_ns\": {:.1}, \"iters\": {}}}{}\n",
+            e.name,
+            e.n,
+            e.res.median_ns,
+            e.res.p10_ns,
+            e.res.p90_ns,
+            e.res.iters,
+            if i + 1 == sess.entries.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"speedups\": [\n");
+    for (i, s) in sess.speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{} n={}\", \"ref_ns\": {:.1}, \"fused_ns\": {:.1}, \"speedup\": {:.3}}}{}\n",
+            s.kernel,
+            s.n,
+            s.ref_ns,
+            s.fused_ns,
+            s.ref_ns / s.fused_ns,
+            if i + 1 == sess.speedups.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&json_path, json).expect("writing the bench JSON");
+    println!("wrote {json_path}");
 }

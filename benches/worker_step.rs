@@ -3,6 +3,20 @@
 //! round, plus the PJRT model gradient (the other per-round cost).
 //!
 //!   cargo bench --bench worker_step
+//!   cargo bench --bench worker_step -- --dim 4096 --workers 1,2 \
+//!       --step-dims 4096 --target-ms 20 --downlink-rounds 4 \
+//!       --skip-pjrt --json /tmp/w.json                     # CI smoke
+//!
+//! Flags: --dim D for the round benches (default 262144),
+//! --workers CSV (default 1,2,4,8,16), --step-dims CSV for the bare
+//! optimizer step (default 65536,1048576,3257856), --target-ms N per
+//! measurement (default 300), --downlink-rounds N (default 64),
+//! --skip-pjrt, --json PATH (default BENCH_worker_step.json).
+//!
+//! The JSON is the bench trajectory: `scripts/bench_diff.sh` compares a
+//! fresh run against the committed `BENCH_worker_step.json` and fails
+//! on regression. Refresh the baseline with
+//! `scripts/bench_diff.sh --refresh`.
 
 use qadam::data::{Dataset, SyntheticVector, SyntheticVision};
 use qadam::models::{artifacts_dir, Manifest};
@@ -14,8 +28,8 @@ use qadam::quant::seeded_rng;
 use qadam::runtime::kernel::PjrtQAdam;
 use qadam::runtime::{KernelQAdam, ModelRuntime, Runtime};
 use qadam::sim::StochasticProblem;
-use qadam::util::bench::run;
-use qadam::util::DetRng;
+use qadam::util::bench::{bench, BenchResult};
+use qadam::util::{Args, DetRng};
 use std::sync::Arc;
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
@@ -23,32 +37,45 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| r.gen_normal() * 0.01).collect()
 }
 
+struct Session {
+    target_ms: u64,
+    entries: Vec<BenchResult>,
+}
+
+impl Session {
+    fn run(&mut self, name: &str, bytes: Option<usize>, f: impl FnMut()) -> f64 {
+        let res = bench(name, self.target_ms, f);
+        res.print(bytes);
+        let ns = res.median_ns;
+        self.entries.push(res);
+        ns
+    }
+}
+
+fn mk_workers(n: usize, dim: usize) -> Vec<Worker> {
+    (0..n)
+        .map(|i| {
+            let src = SimGradSource { problem: StochasticProblem::new(dim, 0.05, 3) };
+            let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 1e-3 });
+            Worker::new(i as u32, Box::new(opt), Box::new(src), 7)
+        })
+        .collect()
+}
+
 /// Full synchronous rounds (broadcast → worker steps → decode/apply) on
 /// the sequential vs the threaded engine, across worker counts. Both
 /// engines compute bit-identical trajectories (asserted in
 /// `ps::transport` tests); this measures the wall-clock gap.
-fn round_scaling_bench() {
-    let dim = 1usize << 18;
+fn round_scaling_bench(sess: &mut Session, dim: usize, worker_counts: &[usize]) {
     let threads = qadam::util::par::available_threads();
-    println!(
-        "-- synchronous round, dim={dim}, kg=2, kx=6 ({threads} hw threads) --"
-    );
+    println!("-- synchronous round, dim={dim}, kg=2, kx=6 ({threads} hw threads) --");
     let x0: Vec<f32> = (0..dim).map(|i| 0.1 * (i as f32 * 0.013).sin()).collect();
-    let mk_workers = |n: usize| -> Vec<Worker> {
-        (0..n)
-            .map(|i| {
-                let src = SimGradSource { problem: StochasticProblem::new(dim, 0.05, 3) };
-                let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 1e-3 });
-                Worker::new(i as u32, Box::new(opt), Box::new(src), 7)
-            })
-            .collect()
-    };
-    for &nw in &[1usize, 2, 4, 8, 16] {
+    for &nw in worker_counts {
         let seq = {
-            let mut workers = mk_workers(nw);
+            let mut workers = mk_workers(nw, dim);
             let mut ps = ParameterServer::new(x0.clone(), Some(6));
             let bus = LocalBus::default();
-            run(&format!("round sequential workers={nw:>2}"), None, || {
+            sess.run(&format!("round sequential dim={dim} workers={nw}"), None, || {
                 let replies = {
                     let (b, _) = ps.broadcast(nw);
                     bus.round(&b, &mut workers).unwrap()
@@ -57,7 +84,7 @@ fn round_scaling_bench() {
             })
         };
         let thr = {
-            let mut workers = mk_workers(nw);
+            let mut workers = mk_workers(nw, dim);
             let mut ps = ParameterServer::with_shards(
                 x0.clone(),
                 Some(6),
@@ -65,7 +92,7 @@ fn round_scaling_bench() {
                 threads,
             );
             let bus = ThreadedBus::new();
-            run(&format!("round threaded   workers={nw:>2}"), None, || {
+            sess.run(&format!("round threaded dim={dim} workers={nw}"), None, || {
                 let replies = {
                     let (b, _) = ps.broadcast(nw);
                     bus.round(&b, &mut workers).unwrap()
@@ -73,33 +100,19 @@ fn round_scaling_bench() {
                 ps.apply(&replies).unwrap();
             })
         };
-        println!(
-            "   -> threaded speedup at {nw:>2} workers: {:.2}x",
-            seq.median_ns / thr.median_ns
-        );
+        println!("   -> threaded speedup at {nw:>2} workers: {:.2}x", seq / thr);
     }
 }
 
-/// Downlink accounting on the 8-worker synchronous round: full fp32
-/// broadcasts vs compressed weight deltas (kg=2, resync every 50).
-/// The acceptance target is a ≥4x reduction in `stats.down_bytes`.
-fn downlink_bench() {
-    let dim = 1usize << 18;
+/// Downlink accounting on the synchronous round: full fp32 broadcasts
+/// vs compressed weight deltas (kg=2, resync every 50). The acceptance
+/// target is a ≥4x reduction in `stats.down_bytes`.
+fn downlink_bench(dim: usize, rounds: u64) -> (u64, u64) {
     let nw = 8usize;
-    let rounds = 64u64;
     println!("-- downlink accounting, dim={dim}, {nw} workers, {rounds} rounds --");
     let x0: Vec<f32> = (0..dim).map(|i| 0.1 * (i as f32 * 0.013).sin()).collect();
-    let mk_workers = || -> Vec<Worker> {
-        (0..nw)
-            .map(|i| {
-                let src = SimGradSource { problem: StochasticProblem::new(dim, 0.05, 3) };
-                let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 1e-3 });
-                Worker::new(i as u32, Box::new(opt), Box::new(src), 7)
-            })
-            .collect()
-    };
     let run_mode = |delta: bool| -> (u64, f64) {
-        let mut workers = mk_workers();
+        let mut workers = mk_workers(nw, dim);
         let mut ps = ParameterServer::new(x0.clone(), None);
         if delta {
             ps.enable_delta_downlink(Box::new(qadam::quant::LogQuant::new(2)), 50);
@@ -130,24 +143,10 @@ fn downlink_bench() {
         "   -> down-bytes reduction: {:.2}x (target >= 4x)",
         full_bytes as f64 / delta_bytes as f64
     );
+    (full_bytes, delta_bytes)
 }
 
-fn main() {
-    println!("== worker_step ==");
-    round_scaling_bench();
-    downlink_bench();
-    // Native fused QAdam step at model-scale dims.
-    for &n in &[1usize << 16, 1 << 20, 3_257_856] {
-        let g = randv(n, 3);
-        let mut opt = QAdamEf::paper_default(n, 2, LrSchedule::Const { alpha: 1e-3 });
-        let mut rng = seeded_rng(0, 0);
-        let mut t = 0u64;
-        run(&format!("native qadam step dim={n}"), Some(n * 4), || {
-            t += 1;
-            std::hint::black_box(opt.step(&g, t, 0, &mut rng).wire_bytes());
-        });
-    }
-
+fn pjrt_benches(sess: &mut Session) {
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         println!("(skipping PJRT benches: run `make artifacts`)");
@@ -163,7 +162,7 @@ fn main() {
         let mut opt = PjrtQAdam::new(kernel.clone(), n, 2, LrSchedule::Const { alpha: 1e-3 });
         let mut rng = seeded_rng(0, 0);
         let mut t = 0u64;
-        run(&format!("pjrt qadam step dim={n}"), Some(n * 4), || {
+        sess.run(&format!("pjrt qadam step dim={n}"), Some(n * 4), || {
             t += 1;
             std::hint::black_box(opt.step(&g, t, 0, &mut rng).wire_bytes());
         });
@@ -175,7 +174,7 @@ fn main() {
         let data = SyntheticVector::new(64, 10, 0);
         let flat = model.init_flat(0);
         let batch = data.train_batch(0, 0, model.meta.train_x.shape[0]);
-        run("pjrt grad mlp (batch 16)", None, || {
+        sess.run("pjrt grad mlp (batch 16)", None, || {
             std::hint::black_box(model.loss_grad(&flat, &batch).unwrap().0);
         });
     }
@@ -184,8 +183,70 @@ fn main() {
         let data = SyntheticVision::cifar10_sim(0);
         let flat = model.init_flat(0);
         let batch = data.train_batch(0, 0, model.meta.train_x.shape[0]);
-        run("pjrt grad vgg_sim (batch 16)", None, || {
+        sess.run("pjrt grad vgg_sim (batch 16)", None, || {
             std::hint::black_box(model.loss_grad(&flat, &batch).unwrap().0);
         });
     }
+}
+
+fn parse_csv(s: &str, what: &str) -> Vec<usize> {
+    s.split(',')
+        .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("{what} takes a comma list")))
+        .collect()
+}
+
+fn main() {
+    let a = Args::parse_env().unwrap();
+    let dim: usize = a.get("dim", 1 << 18).unwrap();
+    let worker_counts = parse_csv(&a.get_str("workers", "1,2,4,8,16"), "--workers");
+    let step_dims = parse_csv(&a.get_str("step_dims", "65536,1048576,3257856"), "--step-dims");
+    let target_ms: u64 = a.get("target_ms", 300).unwrap();
+    let downlink_rounds: u64 = a.get("downlink_rounds", 64).unwrap();
+    let skip_pjrt = a.flag("skip_pjrt");
+    let json_path = a.get_str("json", "BENCH_worker_step.json");
+    a.reject_unknown().unwrap();
+
+    println!("== worker_step (dim={dim}, {target_ms} ms/measurement) ==");
+    let mut sess = Session { target_ms, entries: Vec::new() };
+    round_scaling_bench(&mut sess, dim, &worker_counts);
+    let (full_bytes, delta_bytes) = downlink_bench(dim, downlink_rounds);
+    // Native fused QAdam step at model-scale dims.
+    for &n in &step_dims {
+        let g = randv(n, 3);
+        let mut opt = QAdamEf::paper_default(n, 2, LrSchedule::Const { alpha: 1e-3 });
+        let mut rng = seeded_rng(0, 0);
+        let mut t = 0u64;
+        sess.run(&format!("native qadam step dim={n}"), Some(n * 4), || {
+            t += 1;
+            std::hint::black_box(opt.step(&g, t, 0, &mut rng).wire_bytes());
+        });
+    }
+    if !skip_pjrt {
+        pjrt_benches(&mut sess);
+    }
+
+    // Machine-readable trajectory point.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"worker_step\",\n");
+    json.push_str(&format!("  \"dim\": {dim},\n  \"target_ms\": {target_ms},\n"));
+    json.push_str("  \"results\": [\n");
+    for (i, e) in sess.entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"p10_ns\": {:.1}, \"p90_ns\": {:.1}, \"iters\": {}}}{}\n",
+            e.name,
+            e.median_ns,
+            e.p10_ns,
+            e.p90_ns,
+            e.iters,
+            if i + 1 == sess.entries.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"downlink\": {{\"rounds\": {downlink_rounds}, \"full_bytes\": {full_bytes}, \"delta_bytes\": {delta_bytes}, \"reduction\": {:.3}}}\n",
+        full_bytes as f64 / (delta_bytes.max(1)) as f64
+    ));
+    json.push_str("}\n");
+    std::fs::write(&json_path, json).expect("writing the bench JSON");
+    println!("wrote {json_path}");
 }

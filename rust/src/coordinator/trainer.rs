@@ -424,7 +424,11 @@ impl Trainer {
                 .workers
                 .iter()
                 .map(|w| {
-                    w.opt_state().map(|(m, v, e)| super::checkpoint::WorkerState { m, v, e })
+                    w.opt_state().map(|(m, v, e)| super::checkpoint::WorkerState {
+                        m: m.to_vec(),
+                        v: v.to_vec(),
+                        e: e.to_vec(),
+                    })
                 })
                 .collect(),
         }

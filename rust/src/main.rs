@@ -34,7 +34,7 @@ const SIM_POLICY_TENSORS: usize = 4;
 const USAGE: &str = "\
 qadam — Quantized Adam with Error Feedback (paper reproduction)
 
-USAGE: qadam <train|serve|worker|info> [flags]
+USAGE: qadam <train|serve|worker|info|bench-diff> [flags]
 
 train flags:
   --model NAME          manifest model (default vgg_sim)
@@ -94,6 +94,15 @@ worker flags: --addr A --id I --dim D --method M [--kg K] [--alpha A]
               [--downlink D] [--codec-policy P] [--shards N]
               (match the server fleet; --shards N connects to the N
               listeners at base addr port + 0..N)
+
+bench-diff flags: --baseline PATH --fresh PATH [--threshold PCT]
+              compare two bench JSONs (benches/ emit them; the committed
+              BENCH_*.json are the baselines). Entries present in both
+              with measured medians are compared; a fresh median more
+              than PCT percent slower (default 25) fails the command.
+              Baseline entries with null medians count as unmeasured and
+              never fail — `scripts/bench_diff.sh --refresh` measures
+              them.
 ";
 
 fn parse_method(a: &Args) -> Result<(Method, Option<u32>, Engine)> {
@@ -566,6 +575,74 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+/// Read one bench JSON: its `bench` tag, the measured `(name,
+/// median_ns)` pairs from `results`, and how many entries carry a null
+/// median (committed placeholder baselines that nobody has measured on
+/// this machine yet).
+fn load_bench(path: &str) -> Result<(String, Vec<(String, f64)>, usize)> {
+    use qadam::util::json::{parse, Value};
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let v = parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    let bench = v.get("bench")?.as_str()?.to_string();
+    let mut measured = Vec::new();
+    let mut unmeasured = 0usize;
+    for e in v.get("results")?.as_arr()? {
+        let name = e.get("name")?.as_str()?.to_string();
+        match e.get("median_ns")? {
+            Value::Num(ns) if ns.is_finite() && *ns > 0.0 => measured.push((name, *ns)),
+            _ => unmeasured += 1,
+        }
+    }
+    Ok((bench, measured, unmeasured))
+}
+
+fn cmd_bench_diff(a: &Args) -> Result<()> {
+    let baseline = a.get_str("baseline", "");
+    let fresh = a.get_str("fresh", "");
+    let threshold: f64 = a.get("threshold", 25.0)?;
+    a.reject_unknown()?;
+    if baseline.is_empty() || fresh.is_empty() {
+        bail!("bench-diff needs --baseline and --fresh JSON paths\n{USAGE}");
+    }
+    let (base_tag, base, base_unmeasured) = load_bench(&baseline)?;
+    let (fresh_tag, new, _) = load_bench(&fresh)?;
+    if base_tag != fresh_tag {
+        bail!("bench mismatch: baseline is '{base_tag}', fresh run is '{fresh_tag}'");
+    }
+    let base_map: std::collections::BTreeMap<&str, f64> =
+        base.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    let (mut compared, mut regressions) = (0usize, 0usize);
+    for (name, new_ns) in &new {
+        match base_map.get(name.as_str()) {
+            Some(base_ns) => {
+                compared += 1;
+                let pct = (new_ns / base_ns - 1.0) * 100.0;
+                let flag = if pct > threshold {
+                    regressions += 1;
+                    "  << REGRESSION"
+                } else {
+                    ""
+                };
+                println!("{name:<52} {base_ns:>12.1} -> {new_ns:>12.1} ns  {pct:+7.1}%{flag}");
+            }
+            None => println!("{name:<52} (no baseline)"),
+        }
+    }
+    if base_unmeasured > 0 {
+        println!(
+            "({base_unmeasured} baseline entries are unmeasured placeholders — \
+             run scripts/bench_diff.sh --refresh to record this machine)"
+        );
+    }
+    println!(
+        "bench-diff [{base_tag}]: compared {compared} entries, threshold {threshold}%"
+    );
+    if regressions > 0 {
+        bail!("{regressions} benchmark entries regressed more than {threshold}%");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse_env()?;
     match args.subcommand.as_deref() {
@@ -574,6 +651,7 @@ fn main() -> Result<()> {
         Some("worker") => cmd_worker(&args),
         Some("eval") => cmd_eval(&args),
         Some("info") => cmd_info(),
+        Some("bench-diff") => cmd_bench_diff(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())

@@ -65,12 +65,15 @@ pub trait WorkerOpt: Send {
     }
     /// Per-tensor levels the codec policy currently chooses (None on
     /// the static path) — parity tests compare these across engines.
-    fn chosen_bits(&self) -> Option<Vec<u32>> {
+    /// A borrowed view into the live policy state: copy-free in the
+    /// round path; callers that need ownership (checkpoints) copy.
+    fn chosen_bits(&self) -> Option<&[u32]> {
         None
     }
     /// Checkpointable optimizer state (m, v, e), when the optimizer has
     /// one (QAdam family). Baselines return None (cold resume).
-    fn state(&self) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    /// Borrowed views — the checkpoint writer owns the one copy.
+    fn state(&self) -> Option<(&[f32], &[f32], &[f32])> {
         None
     }
     /// Restore state saved by [`WorkerOpt::state`].
@@ -303,12 +306,12 @@ impl WorkerOpt for QAdamEf {
         self.policy.as_ref().map(|p| p.mean_code_bits())
     }
 
-    fn chosen_bits(&self) -> Option<Vec<u32>> {
-        self.policy.as_ref().map(|p| p.bits().to_vec())
+    fn chosen_bits(&self) -> Option<&[u32]> {
+        self.policy.as_ref().map(|p| p.bits())
     }
 
-    fn state(&self) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        Some((self.state.m.clone(), self.state.v.clone(), self.ef.residual().to_vec()))
+    fn state(&self) -> Option<(&[f32], &[f32], &[f32])> {
+        Some((&self.state.m, &self.state.v, self.ef.residual()))
     }
 
     fn restore(&mut self, m: &[f32], v: &[f32], e: &[f32]) {

@@ -9,7 +9,9 @@
 //! [`ToWorker::WeightsDeltaParts`]) that carry one `WireMsg` — and
 //! hence one codec header — per layout tensor.
 
-use crate::quant::{decode_msg_range, decode_parts_range, WireMsg};
+use crate::quant::{
+    decode_msg_range, decode_msg_range_add, decode_parts_range, decode_parts_range_add, WireMsg,
+};
 use anyhow::{anyhow, Result};
 
 /// Frame-layout version, asserted by the golden-fixture suite. Bump it
@@ -200,6 +202,17 @@ impl ToServer {
         match self {
             ToServer::Delta { msg, .. } => decode_msg_range(msg, start, out),
             ToServer::DeltaParts { parts, .. } => decode_parts_range(parts, start, out),
+        }
+    }
+
+    /// [`Self::decode_range`] that *accumulates* (`out[i] += decoded`)
+    /// in one fused traversal — what `ParameterServer::apply` uses to
+    /// sum the round's worker deltas without a per-delta scratch
+    /// buffer. Bit-identical to decode-into-scratch-then-add.
+    pub fn decode_range_add(&self, start: usize, out: &mut [f32]) {
+        match self {
+            ToServer::Delta { msg, .. } => decode_msg_range_add(msg, start, out),
+            ToServer::DeltaParts { parts, .. } => decode_parts_range_add(parts, start, out),
         }
     }
 

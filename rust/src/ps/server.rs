@@ -60,6 +60,11 @@ pub struct ParameterServer {
     qx: Vec<f32>,
     /// Scratch: unpacked broadcast codes (WQuant path only).
     codes: Vec<u32>,
+    /// Round-scoped accumulator arena for [`Self::apply`]: the fused
+    /// decode→sum pass lands in here block by block, so steady-state
+    /// rounds allocate nothing in the codec path. Persistent like
+    /// `qx`/`codes`; contents are only meaningful inside one `apply`.
+    acc: Vec<f32>,
     /// Shard width in coordinates.
     block: usize,
     /// Worker threads for block-parallel passes (1 = sequential).
@@ -112,6 +117,7 @@ impl ParameterServer {
         Self {
             qx: vec![0.0; dim],
             codes: if wq.is_some() { vec![0; dim] } else { Vec::new() },
+            acc: vec![0.0; dim],
             x: x0,
             wq,
             block,
@@ -251,8 +257,7 @@ impl ParameterServer {
         match self.wq {
             Some(wq) => {
                 let x = &self.x;
-                let tasks: Vec<(usize, &mut [f32])> = blocks(&mut self.qx, self.block);
-                par_tasks(self.threads, tasks, |(start, qc)| {
+                for_blocks(self.threads, self.block, &mut self.qx, |(start, qc)| {
                     wq.quantize_into(&x[start..start + qc.len()], qc);
                 });
             }
@@ -304,8 +309,7 @@ impl ParameterServer {
         {
             let qx = &self.qx;
             let replica = &down.replica;
-            let tasks: Vec<(usize, &mut [f32])> = blocks(&mut down.dir, self.block);
-            par_tasks(self.threads, tasks, |(start, dc)| {
+            for_blocks(self.threads, self.block, &mut down.dir, |(start, dc)| {
                 for (j, d) in dc.iter_mut().enumerate() {
                     *d = qx[start + j] - replica[start + j];
                 }
@@ -332,8 +336,7 @@ impl ParameterServer {
                 // block-parallel like the static path (per-coordinate
                 // adds: identical bytes for any (block, threads)).
                 let repl = &mut down.replica[ts.start..ts.start + ts.len];
-                let tasks: Vec<(usize, &mut [f32])> = blocks(repl, self.block);
-                par_tasks(self.threads, tasks, |(start, rc)| {
+                for_blocks(self.threads, self.block, repl, |(start, rc)| {
                     for (j, r) in rc.iter_mut().enumerate() {
                         *r += q[start + j];
                     }
@@ -345,8 +348,7 @@ impl ParameterServer {
             let (msg, q) = down.ef.compress_q(&down.dir, down.comp.as_ref(), &mut rng);
             // x̂ ← x̂ + decode(msg): the bit-exact mirror of what every
             // worker applies (codec decode identity).
-            let tasks: Vec<(usize, &mut [f32])> = blocks(&mut down.replica, self.block);
-            par_tasks(self.threads, tasks, |(start, rc)| {
+            for_blocks(self.threads, self.block, &mut down.replica, |(start, rc)| {
                 for (j, r) in rc.iter_mut().enumerate() {
                     *r += q[start + j];
                 }
@@ -436,25 +438,38 @@ impl ParameterServer {
             mean_loss += d.loss() / n;
             self.stats.up_bytes += d.wire_bytes() as u64;
         }
-        // Block-parallel decode + average + apply. Per coordinate the
-        // worker summation order is fixed (delta order == worker order),
-        // so this is bit-identical to the sequential pass.
+        // Block-parallel fused decode→sum→apply: each block zeroes its
+        // slice of the persistent `acc` arena, accumulates every
+        // worker's decoded range straight into it
+        // (`ToServer::decode_range_add` — no per-delta scratch buffer),
+        // then applies the mean. Per coordinate the summation order is
+        // fixed (delta order == worker order) and `acc[j] += decode`
+        // performs the identical f32 adds the old scratch-then-add pass
+        // did, so this is bit-identical to the sequential seed pass.
         let inv = 1.0 / n;
-        let tasks: Vec<(usize, &mut [f32])> = blocks(&mut self.x, self.block);
-        par_tasks(self.threads, tasks, |(start, xc)| {
-            let len = xc.len();
-            let mut scratch = vec![0.0f32; len];
-            let mut acc = vec![0.0f32; len];
+        let block = self.block;
+        let work = |(start, xc, ac): (usize, &mut [f32], &mut [f32])| {
+            ac.fill(0.0);
             for d in deltas {
-                d.decode_range(start, &mut scratch);
-                for (a, &s) in acc.iter_mut().zip(&scratch) {
-                    *a += s;
-                }
+                d.decode_range_add(start, ac);
             }
-            for (xi, &a) in xc.iter_mut().zip(&acc) {
+            for (xi, &a) in xc.iter_mut().zip(ac.iter()) {
                 *xi -= inv * a;
             }
-        });
+        };
+        let chunks = self
+            .x
+            .chunks_mut(block)
+            .zip(self.acc.chunks_mut(block))
+            .enumerate()
+            .map(|(i, (xc, ac))| (i * block, xc, ac));
+        if self.threads <= 1 {
+            // Sequential fast path: no task Vec either — a steady-state
+            // round allocates nothing in the decode/apply path.
+            chunks.for_each(work);
+        } else {
+            par_tasks(self.threads, chunks.collect(), work);
+        }
         self.stats.rounds += 1;
         Ok(Participation { round: self.t, mean_loss, reporters: ids })
     }
@@ -463,6 +478,23 @@ impl ParameterServer {
 /// Split a buffer into `(global offset, block)` tasks.
 fn blocks(buf: &mut [f32], block: usize) -> Vec<(usize, &mut [f32])> {
     buf.chunks_mut(block).enumerate().map(|(i, c)| (i * block, c)).collect()
+}
+
+/// Run `f` over the `(global offset, block)` chunks of `buf`: inline
+/// with no task-list allocation when `threads <= 1` (the seed/LocalBus
+/// configuration), else fanned out via [`par_tasks`]. Identical results
+/// either way — `par_tasks` never changes what a task computes.
+fn for_blocks<F>(threads: usize, block: usize, buf: &mut [f32], f: F)
+where
+    F: Fn((usize, &mut [f32])) + Sync,
+{
+    if threads <= 1 {
+        for (i, c) in buf.chunks_mut(block).enumerate() {
+            f((i * block, c));
+        }
+    } else {
+        par_tasks(threads, blocks(buf, block), f);
+    }
 }
 
 #[cfg(test)]

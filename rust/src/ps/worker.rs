@@ -151,12 +151,15 @@ impl Worker {
     }
 
     /// Per-tensor levels the uplink policy currently chooses (parity
-    /// tests compare these across engines).
-    pub fn chosen_bits(&self) -> Option<Vec<u32>> {
+    /// tests compare these across engines). Borrowed view — copy-free
+    /// in the round path.
+    pub fn chosen_bits(&self) -> Option<&[u32]> {
         self.opt.chosen_bits()
     }
 
-    pub fn opt_state(&self) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    /// Checkpointable optimizer state `(m, v, e)` as borrowed views;
+    /// the checkpoint writer owns the one copy it makes.
+    pub fn opt_state(&self) -> Option<(&[f32], &[f32], &[f32])> {
         self.opt.state()
     }
 

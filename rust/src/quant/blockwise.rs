@@ -16,7 +16,7 @@
 //! default block of 4096 the overhead is 1.008 bits/element — the
 //! paper's Comm columns for [44] round this to the same MB as 1-bit.
 
-use super::pack::{pack, unpack_range_into};
+use super::pack::{for_each_chunk, BitWriter, Packed};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -36,6 +36,30 @@ impl Blockwise {
         assert!(block > 0);
         Self { block }
     }
+
+    /// Fused unpack+decode; `ADD` accumulates into `out` (the server's
+    /// decode→sum fusion). The per-element scale lookup keeps the old
+    /// global-position indexing, so ragged tails and ranges that start
+    /// mid-block decode identically.
+    fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("blockwise msg has codes");
+        for_each_chunk(p, start, out.len(), |o, chunk| {
+            for (j, &c) in chunk.iter().enumerate() {
+                let s = msg.scales[(start + o + j) / self.block];
+                let v = if c == 0 { -s } else { s };
+                if ADD {
+                    out[o + j] += v;
+                } else {
+                    out[o + j] = v;
+                }
+            }
+        });
+    }
+
+    /// `decompress_range` that accumulates (`out[i] += decoded`).
+    pub fn decompress_range_add(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<true>(msg, start, out);
+    }
 }
 
 impl Compressor for Blockwise {
@@ -47,9 +71,14 @@ impl Compressor for Blockwise {
     }
 
     fn compress_into(&self, u: &[f32], q: &mut [f32], _rng: &mut DetRng) -> WireMsg {
-        let nblocks = u.len().div_ceil(self.block);
+        // Fused scale + sign + bit-pack: one streaming writer runs
+        // across all blocks (no intermediate Vec<u32>); the per-block
+        // scale keeps its order-sensitive serial sum.
+        let n = u.len();
+        let nblocks = n.div_ceil(self.block);
         let mut scales = Vec::with_capacity(nblocks);
-        let mut codes = Vec::with_capacity(u.len());
+        let mut words = vec![0u64; n.div_ceil(64)];
+        let mut wtr = BitWriter::new(&mut words, 1);
         for (bi, chunk) in u.chunks(self.block).enumerate() {
             let s = chunk.iter().map(|x| x.abs()).sum::<f32>() / chunk.len() as f32;
             scales.push(s);
@@ -58,19 +87,20 @@ impl Compressor for Blockwise {
                 // sign convention: >= 0 -> +s (code 1), < 0 -> -s (code 0)
                 if ui < 0.0 {
                     q[base + j] = -s;
-                    codes.push(0);
+                    wtr.push(0);
                 } else {
                     q[base + j] = s;
-                    codes.push(1);
+                    wtr.push(1);
                 }
             }
         }
+        wtr.finish();
         WireMsg {
             codec: CodecId::Blockwise,
             param: self.block as u32,
-            n: u.len(),
+            n,
             scales,
-            codes: Some(pack(&codes, 1)),
+            codes: Some(Packed { bits: 1, n, words }),
             raw: vec![],
         }
     }
@@ -82,14 +112,7 @@ impl Compressor for Blockwise {
     }
 
     fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
-        let p = msg.codes.as_ref().expect("blockwise msg has codes");
-        let mut codes = vec![0u32; out.len()];
-        unpack_range_into(p, start, &mut codes);
-        for (j, (o, c)) in out.iter_mut().zip(codes).enumerate() {
-            // scales are indexed by the element's global position
-            let s = msg.scales[(start + j) / self.block];
-            *o = if c == 0 { -s } else { s };
-        }
+        self.decode_range_impl::<false>(msg, start, out);
     }
 
     fn bits_per_element(&self) -> f64 {

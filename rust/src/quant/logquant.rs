@@ -26,7 +26,7 @@
 //! ops per element (exactly matching the Pallas kernel's
 //! `floor(log2())` form; see `python/compile/kernels/qadam.py`).
 
-use super::pack::{bits_for_symbols, unpack_range_into, Packed};
+use super::pack::{bits_for_symbols, for_each_chunk, BitWriter, Packed};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -144,6 +144,96 @@ impl LogQuant {
         self.kg | ((block.trailing_zeros()) << 8)
     }
 
+    /// Fused unpack+decode over codes `[start, start + out.len())`.
+    /// `ADD` accumulates into `out` instead of overwriting — the
+    /// server's decode→sum fusion (see `decode_msg_range_add`).
+    fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        const TABLE_BITS: usize = 6; // kg <= MAX_KG=20 -> 43 symbols -> 6 bits
+        let p: &Packed = msg.codes.as_ref().expect("logquant msg has codes");
+        let nb = p.bits as usize;
+        if msg.scales.len() == 1 {
+            let s = msg.scales[0];
+            if nb <= TABLE_BITS {
+                // Dense symbol table (at most 64 entries on the stack):
+                // decode is one lookup per code, identical bit-for-bit
+                // to `decode_symbol` by construction.
+                let mut table = [0.0f32; 1 << TABLE_BITS];
+                for (c, t) in table.iter_mut().take(1 << nb).enumerate() {
+                    *t = self.decode_symbol(c as u32, s);
+                }
+                for_each_chunk(p, start, out.len(), |o, chunk| {
+                    let dst = &mut out[o..o + chunk.len()];
+                    if ADD {
+                        for (d, &c) in dst.iter_mut().zip(chunk) {
+                            *d += table[c as usize];
+                        }
+                    } else {
+                        for (d, &c) in dst.iter_mut().zip(chunk) {
+                            *d = table[c as usize];
+                        }
+                    }
+                });
+            } else {
+                // Oversized widths never come off the wire (validated);
+                // decode symbol by symbol for in-process odd messages.
+                for_each_chunk(p, start, out.len(), |o, chunk| {
+                    for (j, &c) in chunk.iter().enumerate() {
+                        let v = self.decode_symbol(c, s);
+                        if ADD {
+                            out[o + j] += v;
+                        } else {
+                            out[o + j] = v;
+                        }
+                    }
+                });
+            }
+        } else {
+            // Multi-scale (per-chunk) message from the PJRT kernel path:
+            // block size is 2^(param >> 8) (see `pjrt_param`). Scales are
+            // indexed by the element's *global* position. The table holds
+            // the *signed levels* (scale factored out): `(-2^m) * s` and
+            // `-(2^m * s)` agree bit-for-bit, and the zero symbol is
+            // special-cased so it stays exactly +0.0 under any scale.
+            let block = 1usize << (msg.param >> 8);
+            if nb <= TABLE_BITS {
+                let mut lvl = [0.0f32; 1 << TABLE_BITS];
+                for (c, t) in lvl.iter_mut().take(1 << nb).enumerate() {
+                    *t = self.decode_symbol(c as u32, 1.0);
+                }
+                for_each_chunk(p, start, out.len(), |o, chunk| {
+                    for (j, &c) in chunk.iter().enumerate() {
+                        let l = lvl[c as usize];
+                        let s = msg.scales[(start + o + j) / block];
+                        let v = if l == 0.0 { 0.0 } else { l * s };
+                        if ADD {
+                            out[o + j] += v;
+                        } else {
+                            out[o + j] = v;
+                        }
+                    }
+                });
+            } else {
+                for_each_chunk(p, start, out.len(), |o, chunk| {
+                    for (j, &c) in chunk.iter().enumerate() {
+                        let v = self.decode_symbol(c, msg.scales[(start + o + j) / block]);
+                        if ADD {
+                            out[o + j] += v;
+                        } else {
+                            out[o + j] = v;
+                        }
+                    }
+                });
+            }
+        }
+    }
+
+    /// `decompress_range` that *accumulates* (`out[i] += decoded`) —
+    /// what `ParameterServer::apply` uses to sum worker deltas in a
+    /// single traversal without a scratch buffer.
+    pub fn decompress_range_add(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<true>(msg, start, out);
+    }
+
     /// Re-derive the wire codes from an *already quantized* vector (used
     /// by the PJRT path, where the Pallas kernel produced `qdelta`).
     /// `s` must be the quantization scale (`max|u|` of the pre-quant
@@ -192,16 +282,11 @@ impl Compressor for LogQuant {
         if s == 0.0 || !s.is_finite() {
             q.fill(0.0);
             // all-zero symbols: code = bias everywhere
-            let mut bitpos = 0usize;
+            let mut wtr = BitWriter::new(&mut words, bits as u8);
             for _ in 0..n {
-                let w = bitpos >> 6;
-                let off = bitpos & 63;
-                words[w] |= (bias as u64) << off;
-                if off + bits > 64 {
-                    words[w + 1] |= (bias as u64) >> (64 - off);
-                }
-                bitpos += bits;
+                wtr.push(bias as u32);
             }
+            wtr.finish();
             return WireMsg {
                 codec: CodecId::LogQuant,
                 param: self.kg,
@@ -214,7 +299,7 @@ impl Compressor for LogQuant {
         let inv_s = 1.0 / s;
         let kg = self.kg as i32;
         let zero_thresh = f32::exp2(-(kg + 1) as f32);
-        let mut bitpos = 0usize;
+        let mut wtr = BitWriter::new(&mut words, bits as u8);
         for (qi, &ui) in q.iter_mut().zip(u.iter()) {
             let a = (ui.abs() * inv_s).min(1.0);
             let (qv, code): (f32, u32) = if a < zero_thresh {
@@ -236,14 +321,9 @@ impl Compressor for LogQuant {
                 }
             };
             *qi = qv;
-            let w = bitpos >> 6;
-            let off = bitpos & 63;
-            words[w] |= (code as u64) << off;
-            if off + bits > 64 {
-                words[w + 1] |= (code as u64) >> (64 - off);
-            }
-            bitpos += bits;
+            wtr.push(code);
         }
+        wtr.finish();
         WireMsg {
             codec: CodecId::LogQuant,
             param: self.kg,
@@ -261,23 +341,7 @@ impl Compressor for LogQuant {
     }
 
     fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
-        let p: &Packed = msg.codes.as_ref().expect("logquant msg has codes");
-        let mut codes = vec![0u32; out.len()];
-        unpack_range_into(p, start, &mut codes);
-        if msg.scales.len() == 1 {
-            let s = msg.scales[0];
-            for (o, c) in out.iter_mut().zip(codes) {
-                *o = self.decode_symbol(c, s);
-            }
-        } else {
-            // Multi-scale (per-chunk) message from the PJRT kernel path:
-            // block size is 2^(param >> 8) (see `pjrt_param`). Scales are
-            // indexed by the element's *global* position.
-            let block = 1usize << (msg.param >> 8);
-            for (j, (o, c)) in out.iter_mut().zip(codes).enumerate() {
-                *o = self.decode_symbol(c, msg.scales[(start + j) / block]);
-            }
-        }
+        self.decode_range_impl::<false>(msg, start, out);
     }
 
     fn bits_per_element(&self) -> f64 {

@@ -22,6 +22,8 @@ pub mod error_feedback;
 pub mod logquant;
 pub mod pack;
 pub mod policy;
+#[doc(hidden)]
+pub mod reference;
 pub mod stochastic;
 pub mod terngrad;
 pub mod wquant;
@@ -376,6 +378,29 @@ pub fn decode_msg_range(msg: &WireMsg, start: usize, out: &mut [f32]) {
     }
 }
 
+/// [`decode_msg_range`] that *accumulates* — `out[i] += decoded[i]` —
+/// in the same fused traversal. This is the server's decode→sum fusion:
+/// `ParameterServer::apply` sums every worker's delta into one
+/// accumulator without a per-delta scratch buffer. The additions are
+/// the exact f32 ops (same order) as decoding into scratch and adding,
+/// so the summed result is bit-identical to the unfused form.
+pub fn decode_msg_range_add(msg: &WireMsg, start: usize, out: &mut [f32]) {
+    match msg.codec {
+        CodecId::Identity => {
+            for (o, &r) in out.iter_mut().zip(&msg.raw[start..start + out.len()]) {
+                *o += r;
+            }
+        }
+        CodecId::LogQuant => LogQuant::new(msg.param & 0xff).decompress_range_add(msg, start, out),
+        CodecId::WQuant => WQuant::new(msg.param).decompress_range_add(msg, start, out),
+        CodecId::TernGrad => TernGrad.decompress_range_add(msg, start, out),
+        CodecId::Blockwise => {
+            Blockwise::new(msg.param as usize).decompress_range_add(msg, start, out)
+        }
+        CodecId::Qsgd => Qsgd::new(msg.param).decompress_range_add(msg, start, out),
+    }
+}
+
 /// Decode a per-tensor ("parts") message sequence laid out back to
 /// back: part `i` covers elements `[Σ_{j<i} n_j, Σ_{j<=i} n_j)` of the
 /// flat vector. The codec-policy layer produces these (one part per
@@ -403,6 +428,23 @@ pub fn decode_parts_range(parts: &[WireMsg], start: usize, out: &mut [f32]) {
             let lo = start.max(off);
             let hi = end.min(p_end);
             decode_msg_range(p, lo - off, &mut out[lo - start..hi - start]);
+        }
+        off = p_end;
+    }
+    assert!(end <= off, "range {start}..{end} out of {off} part elements");
+}
+
+/// [`decode_parts_range`] that accumulates (`out[i] += decoded[i]`) —
+/// the mixed-codec side of the server's decode→sum fusion.
+pub fn decode_parts_range_add(parts: &[WireMsg], start: usize, out: &mut [f32]) {
+    let end = start + out.len();
+    let mut off = 0usize;
+    for p in parts {
+        let p_end = off + p.n;
+        if p_end > start && off < end {
+            let lo = start.max(off);
+            let hi = end.min(p_end);
+            decode_msg_range_add(p, lo - off, &mut out[lo - start..hi - start]);
         }
         off = p_end;
     }
@@ -533,6 +575,43 @@ mod tests {
         }
     }
 
+    /// Property: for every codec, the fused decode→accumulate is
+    /// bit-identical to decoding into a scratch buffer and adding — the
+    /// equivalence `ParameterServer::apply`'s single-traversal sum
+    /// rests on.
+    #[test]
+    fn range_decode_add_matches_scratch_then_add_all_codecs() {
+        let n = 300;
+        let u: Vec<f32> =
+            (0..n).map(|i| ((i as f32) * 0.37).sin() / (1.0 + i as f32 * 0.01)).collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(LogQuant::new(2)),
+            Box::new(WQuant::new(4)),
+            Box::new(TernGrad),
+            Box::new(Blockwise::new(7)),
+            Box::new(Qsgd::new(4)),
+            Box::new(StochasticLogQuant::new(3)),
+        ];
+        for comp in &comps {
+            let mut q = vec![0.0; n];
+            let mut rng = seeded_rng(9, 9);
+            let msg = comp.compress_into(&u, &mut q, &mut rng);
+            for &(start, len) in &[(0usize, n), (1, 5), (7, 100), (n - 1, 1), (64, 64)] {
+                let acc0: Vec<f32> = (0..len).map(|i| ((start + i) as f32 * 0.11).cos()).collect();
+                let mut fused = acc0.clone();
+                decode_msg_range_add(&msg, start, &mut fused);
+                let mut scratch = vec![0.0; len];
+                decode_msg_range(&msg, start, &mut scratch);
+                let mut unfused = acc0;
+                for (a, &s) in unfused.iter_mut().zip(&scratch) {
+                    *a += s;
+                }
+                assert_eq!(fused, unfused, "{} start={start} len={len}", comp.name());
+            }
+        }
+    }
+
     #[test]
     fn gradient_codec_dispatch() {
         assert_eq!(gradient_codec(None).codec(), CodecId::Identity);
@@ -574,6 +653,19 @@ mod tests {
         let mut out = vec![0.0; n];
         dm.decode(&mut out);
         assert_eq!(out, full);
+        // fused accumulate over mixed-codec parts == scratch-then-add
+        for &(start, len) in &[(0usize, n), (30, 40), (37, 64), (100, 6)] {
+            let acc0: Vec<f32> = (0..len).map(|i| (start + i) as f32 * 0.5).collect();
+            let mut fused = acc0.clone();
+            decode_parts_range_add(&parts, start, &mut fused);
+            let mut scratch = vec![0.0; len];
+            decode_parts_range(&parts, start, &mut scratch);
+            let mut unfused = acc0;
+            for (a, &s) in unfused.iter_mut().zip(&scratch) {
+                *a += s;
+            }
+            assert_eq!(fused, unfused, "start={start} len={len}");
+        }
     }
 
     /// Frames claiming codec parameters outside the codec's domain, or

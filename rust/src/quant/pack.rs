@@ -6,8 +6,14 @@
 //! padding. A code may straddle a word boundary.
 //!
 //! The packer is on the hot path (every worker packs its whole update
-//! vector every iteration), so the inner loops are branch-light and the
-//! unpacker reads at most two words per code.
+//! vector every iteration), so both directions are streaming: the
+//! packer carries an accumulator word and writes each output word
+//! exactly once ([`BitWriter`]), and the unpacker carries a cursor over
+//! the current word and hands the caller decoded codes in stack-resident
+//! chunks ([`for_each_chunk`]) so decode loops run over plain `&[u32]`
+//! slices the compiler can vectorize. Neither direction allocates.
+//! `reference::pack_ref` / `reference::unpack_range_ref` keep the old
+//! two-loads-per-code forms for the kernel-equivalence suite.
 
 /// Packed fixed-width codes.
 #[derive(Clone, Debug, PartialEq)]
@@ -34,24 +40,109 @@ pub fn bits_for_symbols(nsymbols: u32) -> u8 {
     (32 - (nsymbols - 1).leading_zeros()).max(1) as u8
 }
 
+/// Streaming fixed-width bit writer over a caller-provided word buffer.
+///
+/// The fused-compress counterpart of [`for_each_chunk`]: codes are
+/// shifted into a 64-bit accumulator and each destination word is
+/// stored exactly once when it fills (the old packer read-modified two
+/// words per straddling code). The buffer must be zeroed and sized
+/// `ceil(n * bits / 64)`; call [`BitWriter::finish`] to flush the
+/// partial tail word.
+pub struct BitWriter<'a> {
+    words: &'a mut [u64],
+    b: usize,
+    acc: u64,
+    fill: usize,
+    out: usize,
+}
+
+impl<'a> BitWriter<'a> {
+    pub fn new(words: &'a mut [u64], bits: u8) -> Self {
+        debug_assert!((1..=32).contains(&bits));
+        Self { words, b: bits as usize, acc: 0, fill: 0, out: 0 }
+    }
+
+    /// Append one code (`< 2^bits`).
+    #[inline]
+    pub fn push(&mut self, c: u32) {
+        debug_assert!(self.b == 32 || c < (1u32 << self.b));
+        self.acc |= (c as u64) << self.fill;
+        self.fill += self.b;
+        if self.fill >= 64 {
+            self.words[self.out] = self.acc;
+            self.out += 1;
+            self.fill -= 64;
+            // Bits of `c` that did not fit the stored word (b - fill of
+            // them were consumed; fill < b <= 32, so the shift is safe).
+            self.acc = if self.fill > 0 { (c as u64) >> (self.b - self.fill) } else { 0 };
+        }
+    }
+
+    /// Flush the partial tail word, if any.
+    pub fn finish(self) {
+        if self.fill > 0 {
+            self.words[self.out] = self.acc;
+        }
+    }
+}
+
 /// Pack `codes` (each `< 2^bits`) into words.
 pub fn pack(codes: &[u32], bits: u8) -> Packed {
     debug_assert!((1..=32).contains(&bits));
-    let b = bits as usize;
-    let nwords = (codes.len() * b).div_ceil(64);
+    let nwords = (codes.len() * bits as usize).div_ceil(64);
     let mut words = vec![0u64; nwords];
-    let mut bitpos = 0usize;
+    let mut w = BitWriter::new(&mut words, bits);
     for &c in codes {
-        debug_assert!(bits == 32 || c < (1u32 << bits));
-        let w = bitpos >> 6;
-        let off = bitpos & 63;
-        words[w] |= (c as u64) << off;
-        if off + b > 64 {
-            words[w + 1] |= (c as u64) >> (64 - off);
-        }
-        bitpos += b;
+        w.push(c);
     }
+    w.finish();
     Packed { bits, n: codes.len(), words }
+}
+
+/// Stack-chunk size of [`for_each_chunk`] (codes per callback).
+pub const UNPACK_CHUNK: usize = 128;
+
+/// Visit codes `[start, start + len)` as stack-resident chunks: `f` is
+/// called with `(offset_within_range, codes)` where `codes` holds at
+/// most [`UNPACK_CHUNK`] decoded values. Because codes are fixed-width,
+/// any range decodes independently — this is what lets the sharded
+/// parameter server decode one block per thread. The cursor reads each
+/// payload word once; no heap allocation.
+pub fn for_each_chunk<F: FnMut(usize, &[u32])>(p: &Packed, start: usize, len: usize, mut f: F) {
+    assert!(start + len <= p.n, "range {start}+{len} out of {} codes", p.n);
+    if len == 0 {
+        return;
+    }
+    let b = p.bits as usize;
+    let mask = if p.bits == 32 { u32::MAX } else { (1u32 << p.bits) - 1 };
+    let bitpos = start * b;
+    let mut w = bitpos >> 6;
+    let off = bitpos & 63;
+    // `cur` holds the unread (low-aligned) bits of the current word;
+    // `avail` counts them, so `cur`'s bits above `avail` are always 0.
+    let mut cur = p.words[w] >> off;
+    let mut avail = 64 - off;
+    let mut buf = [0u32; UNPACK_CHUNK];
+    let mut done = 0usize;
+    while done < len {
+        let k = (len - done).min(UNPACK_CHUNK);
+        for slot in buf[..k].iter_mut() {
+            if avail >= b {
+                *slot = (cur as u32) & mask;
+                cur >>= b;
+                avail -= b;
+            } else {
+                // Code straddles into the next word (avail < b <= 32).
+                w += 1;
+                let next = p.words[w];
+                *slot = ((cur | (next << avail)) as u32) & mask;
+                cur = next >> (b - avail);
+                avail = 64 + avail - b;
+            }
+        }
+        f(done, &buf[..k]);
+        done += k;
+    }
 }
 
 /// Unpack into a caller-provided buffer (len must equal `p.n`).
@@ -61,24 +152,11 @@ pub fn unpack_into(p: &Packed, out: &mut [u32]) {
 }
 
 /// Unpack codes `[start, start + out.len())` without touching the rest
-/// of the payload. Because codes are fixed-width, any range decodes
-/// independently — this is what lets the sharded parameter server
-/// decode one block per thread.
+/// of the payload.
 pub fn unpack_range_into(p: &Packed, start: usize, out: &mut [u32]) {
-    assert!(start + out.len() <= p.n, "range {}+{} out of {} codes", start, out.len(), p.n);
-    let b = p.bits as usize;
-    let mask = if p.bits == 32 { u32::MAX } else { (1u32 << p.bits) - 1 };
-    let mut bitpos = start * b;
-    for o in out.iter_mut() {
-        let w = bitpos >> 6;
-        let off = bitpos & 63;
-        let mut v = (p.words[w] >> off) as u32;
-        if off + b > 64 {
-            v |= (p.words[w + 1] << (64 - off)) as u32;
-        }
-        *o = v & mask;
-        bitpos += b;
-    }
+    for_each_chunk(p, start, out.len(), |o, chunk| {
+        out[o..o + chunk.len()].copy_from_slice(chunk);
+    });
 }
 
 /// Convenience allocating unpack.
@@ -91,6 +169,7 @@ pub fn unpack(p: &Packed) -> Vec<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::reference::{pack_ref, unpack_range_ref};
 
     #[test]
     fn bits_for_symbols_table() {
@@ -176,5 +255,59 @@ mod tests {
                 assert!(p.payload_bytes() <= p.words.len() * 8);
             }
         }
+    }
+
+    /// Property: the streaming packer emits the exact words of the
+    /// retained read-modify-write reference, and the chunked cursor
+    /// unpack agrees with the reference range unpack, for every width
+    /// and ragged lengths around the chunk and word boundaries.
+    #[test]
+    fn streaming_matches_reference_prop() {
+        for bits in 1u8..=32 {
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            for seed in 0u64..4 {
+                for n in [0usize, 1, 63, 64, 65, 127, 128, 129, 397] {
+                    let mut s = seed
+                        .wrapping_mul(0x9e3779b97f4a7c15)
+                        .wrapping_add(bits as u64)
+                        .wrapping_add(n as u64);
+                    let codes: Vec<u32> = (0..n)
+                        .map(|_| {
+                            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                            ((s >> 33) as u32) & mask
+                        })
+                        .collect();
+                    let p = pack(&codes, bits);
+                    let pr = pack_ref(&codes, bits);
+                    assert_eq!(p, pr, "bits={bits} n={n} seed={seed}");
+                    if n > 0 {
+                        let (start, len) = (n / 3, n - n / 3 - n / 7);
+                        let mut a = vec![0u32; len];
+                        let mut b = vec![0u32; len];
+                        unpack_range_into(&p, start, &mut a);
+                        unpack_range_ref(&p, start, &mut b);
+                        assert_eq!(a, b, "bits={bits} n={n} seed={seed}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The chunk visitor hands back contiguous, correctly-offset chunks
+    /// covering exactly the requested range.
+    #[test]
+    fn for_each_chunk_offsets_cover_the_range() {
+        let codes: Vec<u32> = (0..UNPACK_CHUNK as u32 * 3 + 17).map(|i| i % 32).collect();
+        let p = pack(&codes, 5);
+        let (start, len) = (3usize, codes.len() - 5);
+        let mut got = vec![u32::MAX; len];
+        let mut calls = 0usize;
+        for_each_chunk(&p, start, len, |o, chunk| {
+            assert!(chunk.len() <= UNPACK_CHUNK && !chunk.is_empty());
+            got[o..o + chunk.len()].copy_from_slice(chunk);
+            calls += 1;
+        });
+        assert_eq!(got, codes[start..start + len]);
+        assert_eq!(calls, len.div_ceil(UNPACK_CHUNK));
     }
 }

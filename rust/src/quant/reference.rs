@@ -1,0 +1,409 @@
+//! Retained scalar reference kernels.
+//!
+//! These are byte-for-byte copies of the codec kernels as they existed
+//! *before* the fused/streaming rewrite of the hot path (see DESIGN.md
+//! §Hot path & memory discipline): the read-modify-write bit packer,
+//! the two-load-per-code range unpacker, and each codec's
+//! allocate-then-pack compress / unpack-then-decode decompress.
+//!
+//! They exist for two reasons and sit on no production path:
+//!
+//! * `rust/tests/kernel_equiv.rs` asserts the production kernels are
+//!   bit-identical to these references across lengths (including
+//!   non-lane-multiple tails), extreme values, and every supported bit
+//!   level — the stochastic codecs consume the *same* rng sequence by
+//!   construction, so equality is exact, not statistical.
+//! * `benches/quant_micro.rs` times them as the `(ref)` baselines the
+//!   committed `BENCH_quant_micro.json` speedups are measured against.
+//!
+//! Do not "improve" this module: its value is that it does not change.
+
+use super::pack::{bits_for_symbols, Packed};
+use super::{CodecId, WireMsg};
+use crate::util::DetRng;
+
+/// Pre-rewrite packer: read-modify-write into the word array, up to two
+/// word updates per code.
+pub fn pack_ref(codes: &[u32], bits: u8) -> Packed {
+    debug_assert!((1..=32).contains(&bits));
+    let b = bits as usize;
+    let nwords = (codes.len() * b).div_ceil(64);
+    let mut words = vec![0u64; nwords];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(bits == 32 || c < (1u32 << bits));
+        let w = bitpos >> 6;
+        let off = bitpos & 63;
+        words[w] |= (c as u64) << off;
+        if off + b > 64 {
+            words[w + 1] |= (c as u64) >> (64 - off);
+        }
+        bitpos += b;
+    }
+    Packed { bits, n: codes.len(), words }
+}
+
+/// Pre-rewrite range unpacker: recomputes the word index and reads up
+/// to two words for every code.
+pub fn unpack_range_ref(p: &Packed, start: usize, out: &mut [u32]) {
+    assert!(start + out.len() <= p.n, "range {}+{} out of {} codes", start, out.len(), p.n);
+    let b = p.bits as usize;
+    let mask = if p.bits == 32 { u32::MAX } else { (1u32 << p.bits) - 1 };
+    let mut bitpos = start * b;
+    for o in out.iter_mut() {
+        let w = bitpos >> 6;
+        let off = bitpos & 63;
+        let mut v = (p.words[w] >> off) as u32;
+        if off + b > 64 {
+            v |= (p.words[w + 1] << (64 - off)) as u32;
+        }
+        *o = v & mask;
+        bitpos += b;
+    }
+}
+
+/// Pre-rewrite `LogQuant::decode_symbol`.
+#[inline]
+pub fn logquant_decode_symbol_ref(kg: u32, code: u32, s: f32) -> f32 {
+    let bias = (kg + 1) as i32;
+    let sym = code as i32 - bias; // in [-(kg+1), kg+1]
+    if sym == 0 {
+        0.0
+    } else {
+        let m = sym.abs() - bias; // in [-kg, 0]
+        let level = f32::exp2(m as f32) * s;
+        if sym < 0 {
+            -level
+        } else {
+            level
+        }
+    }
+}
+
+/// Pre-rewrite `LogQuant::compress_into` (the inline read-modify-write
+/// bit writer it carried before the shared streaming writer existed).
+pub fn logquant_compress_ref(kg: u32, u: &[f32], q: &mut [f32]) -> WireMsg {
+    assert_eq!(u.len(), q.len());
+    let n = u.len();
+    let bits = bits_for_symbols(2 * (kg + 1) + 1) as usize;
+    let mut words = vec![0u64; (n * bits).div_ceil(64)];
+    let bias = (kg + 1) as i32;
+    let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if s == 0.0 || !s.is_finite() {
+        q.fill(0.0);
+        // all-zero symbols: code = bias everywhere
+        let mut bitpos = 0usize;
+        for _ in 0..n {
+            let w = bitpos >> 6;
+            let off = bitpos & 63;
+            words[w] |= (bias as u64) << off;
+            if off + bits > 64 {
+                words[w + 1] |= (bias as u64) >> (64 - off);
+            }
+            bitpos += bits;
+        }
+        return WireMsg {
+            codec: CodecId::LogQuant,
+            param: kg,
+            n,
+            scales: vec![if s.is_finite() { s } else { f32::NAN }],
+            codes: Some(Packed { bits: bits as u8, n, words }),
+            raw: vec![],
+        };
+    }
+    let inv_s = 1.0 / s;
+    let kg = kg as i32;
+    let zero_thresh = f32::exp2(-(kg + 1) as f32);
+    let mut bitpos = 0usize;
+    for (qi, &ui) in q.iter_mut().zip(u.iter()) {
+        let a = (ui.abs() * inv_s).min(1.0);
+        let (qv, code): (f32, u32) = if a < zero_thresh {
+            (0.0, bias as u32)
+        } else {
+            let b = a.to_bits();
+            let mut m = ((b >> 23) & 0xff) as i32 - 127;
+            if m < -kg {
+                m = -kg;
+            } else if (b & 0x7f_ffff) >= 0x40_0000 && m < 0 {
+                m += 1;
+            }
+            let m = m.min(0);
+            let level = f32::from_bits(((m + 127) as u32) << 23); // 2^m exactly
+            if ui < 0.0 {
+                (-level * s, (bias - (m + bias)) as u32)
+            } else {
+                (level * s, (bias + (m + bias)) as u32)
+            }
+        };
+        *qi = qv;
+        let w = bitpos >> 6;
+        let off = bitpos & 63;
+        words[w] |= (code as u64) << off;
+        if off + bits > 64 {
+            words[w + 1] |= (code as u64) >> (64 - off);
+        }
+        bitpos += bits;
+    }
+    WireMsg {
+        codec: CodecId::LogQuant,
+        param: kg as u32,
+        n,
+        scales: vec![s],
+        codes: Some(Packed { bits: bits as u8, n, words }),
+        raw: vec![],
+    }
+}
+
+/// Pre-rewrite `LogQuant::decompress_range`: allocate a codes buffer,
+/// unpack, then decode symbol by symbol (`k_g` from the wire param).
+pub fn logquant_decompress_range_ref(msg: &WireMsg, start: usize, out: &mut [f32]) {
+    let kg = msg.param & 0xff;
+    let p: &Packed = msg.codes.as_ref().expect("logquant msg has codes");
+    let mut codes = vec![0u32; out.len()];
+    unpack_range_ref(p, start, &mut codes);
+    if msg.scales.len() == 1 {
+        let s = msg.scales[0];
+        for (o, c) in out.iter_mut().zip(codes) {
+            *o = logquant_decode_symbol_ref(kg, c, s);
+        }
+    } else {
+        // Multi-scale (per-chunk) message from the PJRT kernel path:
+        // block size is 2^(param >> 8); scales are indexed by the
+        // element's *global* position.
+        let block = 1usize << (msg.param >> 8);
+        for (j, (o, c)) in out.iter_mut().zip(codes).enumerate() {
+            *o = logquant_decode_symbol_ref(kg, c, msg.scales[(start + j) / block]);
+        }
+    }
+}
+
+/// Pre-rewrite `StochasticLogQuant::compress_into`: codes `Vec` then a
+/// separate pack pass. Consumes the rng in exactly the same order as
+/// the production kernel.
+pub fn stochastic_log_compress_ref(kg: u32, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+    let kgi = kg as i32;
+    let bias = (kg + 1) as i32;
+    let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let mut codes = Vec::with_capacity(u.len());
+    if s == 0.0 {
+        q.fill(0.0);
+        codes.resize(u.len(), bias as u32);
+    } else {
+        let inv_s = 1.0 / s;
+        let lo = f32::exp2(-kgi as f32);
+        for (qi, &ui) in q.iter_mut().zip(u) {
+            let a = (ui.abs() * inv_s).min(1.0);
+            let (level, m): (f32, i32) = if a < lo {
+                // randomize between 0 and the smallest level with
+                // p = a/lo so the expectation is a
+                if rng.gen_f32() < a / lo {
+                    (lo, -kgi)
+                } else {
+                    (0.0, i32::MIN)
+                }
+            } else {
+                // bracket [2^m, 2^(m+1)); round up w.p. (a-low)/(low)
+                let b = a.to_bits();
+                let mm = (((b >> 23) & 0xff) as i32 - 127).clamp(-kgi, 0);
+                let low = f32::from_bits(((mm + 127) as u32) << 23);
+                let hi_m = (mm + 1).min(0);
+                let high = f32::from_bits(((hi_m + 127) as u32) << 23);
+                if high > low && rng.gen_f32() < (a - low) / (high - low) {
+                    (high, hi_m)
+                } else {
+                    (low, mm)
+                }
+            };
+            if level == 0.0 {
+                *qi = 0.0;
+                codes.push(bias as u32);
+            } else {
+                let sym = (m + bias) * if ui < 0.0 { -1 } else { 1 };
+                *qi = level * s * if ui < 0.0 { -1.0 } else { 1.0 };
+                codes.push((sym + bias) as u32);
+            }
+        }
+    }
+    WireMsg {
+        codec: CodecId::LogQuant,
+        param: kg,
+        n: u.len(),
+        scales: vec![s],
+        codes: Some(pack_ref(&codes, bits_for_symbols(2 * (kg + 1) + 1))),
+        raw: vec![],
+    }
+}
+
+/// Pre-rewrite `Qsgd::compress_into`: codes `Vec` then pack.
+pub fn qsgd_compress_ref(levels: u32, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+    let l = levels as f32;
+    let bias = levels as i32;
+    let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let mut codes = Vec::with_capacity(u.len());
+    if s == 0.0 {
+        q.fill(0.0);
+        codes.resize(u.len(), bias as u32);
+    } else {
+        let inv_s = 1.0 / s;
+        for (qi, &ui) in q.iter_mut().zip(u) {
+            let a = (ui.abs() * inv_s).min(1.0) * l; // in [0, L]
+            let fl = a.floor();
+            let idx = fl as i32 + i32::from(rng.gen_f32() < a - fl);
+            let idx = idx.min(bias);
+            let val = idx as f32 / l * s;
+            if ui < 0.0 {
+                *qi = -val;
+                codes.push((bias - idx) as u32);
+            } else {
+                *qi = val;
+                codes.push((bias + idx) as u32);
+            }
+        }
+    }
+    WireMsg {
+        codec: CodecId::Qsgd,
+        param: levels,
+        n: u.len(),
+        scales: vec![s],
+        codes: Some(pack_ref(&codes, bits_for_symbols(2 * levels + 1))),
+        raw: vec![],
+    }
+}
+
+/// Pre-rewrite `Qsgd::decompress_range`.
+pub fn qsgd_decompress_range_ref(msg: &WireMsg, start: usize, out: &mut [f32]) {
+    let p = msg.codes.as_ref().expect("qsgd msg has codes");
+    let s = msg.scales[0];
+    let bias = msg.param as i32;
+    let l = msg.param as f32;
+    let mut codes = vec![0u32; out.len()];
+    unpack_range_ref(p, start, &mut codes);
+    for (o, c) in out.iter_mut().zip(codes) {
+        *o = (c as i32 - bias) as f32 / l * s;
+    }
+}
+
+/// Pre-rewrite `TernGrad::compress_into`.
+pub fn terngrad_compress_ref(u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+    let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let mut codes = Vec::with_capacity(u.len());
+    if s == 0.0 {
+        q.fill(0.0);
+        codes.resize(u.len(), 1u32);
+    } else {
+        let inv_s = 1.0 / s;
+        for (qi, &ui) in q.iter_mut().zip(u) {
+            let p = ui.abs() * inv_s;
+            let hit = rng.gen_f32() < p;
+            if hit {
+                if ui < 0.0 {
+                    *qi = -s;
+                    codes.push(0);
+                } else {
+                    *qi = s;
+                    codes.push(2);
+                }
+            } else {
+                *qi = 0.0;
+                codes.push(1);
+            }
+        }
+    }
+    WireMsg {
+        codec: CodecId::TernGrad,
+        param: 0,
+        n: u.len(),
+        scales: vec![s],
+        codes: Some(pack_ref(&codes, 2)),
+        raw: vec![],
+    }
+}
+
+/// Pre-rewrite `TernGrad::decompress_range`.
+pub fn terngrad_decompress_range_ref(msg: &WireMsg, start: usize, out: &mut [f32]) {
+    let p = msg.codes.as_ref().expect("terngrad msg has codes");
+    let s = msg.scales[0];
+    let mut codes = vec![0u32; out.len()];
+    unpack_range_ref(p, start, &mut codes);
+    for (o, c) in out.iter_mut().zip(codes) {
+        *o = match c {
+            0 => -s,
+            1 => 0.0,
+            _ => s,
+        };
+    }
+}
+
+/// Pre-rewrite `WQuant::compress_into`: codes `Vec` through
+/// `encode_into` then pack.
+pub fn wquant_compress_ref(kx: u32, u: &[f32], q: &mut [f32]) -> WireMsg {
+    let scale = (1u32 << kx) as f32;
+    let bias = 1i32 << kx;
+    let mut codes = vec![0u32; u.len()];
+    for ((&xi, qi), ci) in u.iter().zip(q.iter_mut()).zip(codes.iter_mut()) {
+        let idx = ((2.0 * xi).clamp(-1.0, 1.0) * scale).round() as i32;
+        *qi = 0.5 * idx as f32 / bias as f32;
+        *ci = (idx + bias) as u32;
+    }
+    WireMsg {
+        codec: CodecId::WQuant,
+        param: kx,
+        n: u.len(),
+        scales: vec![],
+        codes: Some(pack_ref(&codes, bits_for_symbols(2 * (1 << kx) + 1))),
+        raw: vec![],
+    }
+}
+
+/// Pre-rewrite `WQuant::decompress_range`.
+pub fn wquant_decompress_range_ref(kx: u32, msg: &WireMsg, start: usize, out: &mut [f32]) {
+    let p = msg.codes.as_ref().expect("wquant msg has codes");
+    let bias = 1i32 << kx;
+    let mut codes = vec![0u32; out.len()];
+    unpack_range_ref(p, start, &mut codes);
+    for (o, c) in out.iter_mut().zip(codes) {
+        *o = 0.5 * (c as i32 - bias) as f32 / bias as f32;
+    }
+}
+
+/// Pre-rewrite `Blockwise::compress_into`.
+pub fn blockwise_compress_ref(block: usize, u: &[f32], q: &mut [f32]) -> WireMsg {
+    let nblocks = u.len().div_ceil(block);
+    let mut scales = Vec::with_capacity(nblocks);
+    let mut codes = Vec::with_capacity(u.len());
+    for (bi, chunk) in u.chunks(block).enumerate() {
+        let s = chunk.iter().map(|x| x.abs()).sum::<f32>() / chunk.len() as f32;
+        scales.push(s);
+        let base = bi * block;
+        for (j, &ui) in chunk.iter().enumerate() {
+            // sign convention: >= 0 -> +s (code 1), < 0 -> -s (code 0)
+            if ui < 0.0 {
+                q[base + j] = -s;
+                codes.push(0);
+            } else {
+                q[base + j] = s;
+                codes.push(1);
+            }
+        }
+    }
+    WireMsg {
+        codec: CodecId::Blockwise,
+        param: block as u32,
+        n: u.len(),
+        scales,
+        codes: Some(pack_ref(&codes, 1)),
+        raw: vec![],
+    }
+}
+
+/// Pre-rewrite `Blockwise::decompress_range`.
+pub fn blockwise_decompress_range_ref(block: usize, msg: &WireMsg, start: usize, out: &mut [f32]) {
+    let p = msg.codes.as_ref().expect("blockwise msg has codes");
+    let mut codes = vec![0u32; out.len()];
+    unpack_range_ref(p, start, &mut codes);
+    for (j, (o, c)) in out.iter_mut().zip(codes).enumerate() {
+        // scales are indexed by the element's global position
+        let s = msg.scales[(start + j) / block];
+        *o = if c == 0 { -s } else { s };
+    }
+}

@@ -15,7 +15,7 @@
 //! Both are unbiased, so the baselines using them run without error
 //! feedback (mirroring TernGrad).
 
-use super::pack::{bits_for_symbols, pack, unpack_range_into};
+use super::pack::{bits_for_symbols, for_each_chunk, BitWriter, Packed};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -46,13 +46,22 @@ impl Compressor for StochasticLogQuant {
     }
 
     fn compress_into(&self, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+        // Fused quantize + bit-pack: one pass, codes streamed straight
+        // into the packed words (no intermediate Vec<u32>). The rng is
+        // consumed in exactly the pre-fusion order (see
+        // `reference::stochastic_log_compress_ref`).
+        let n = u.len();
         let kg = self.kg as i32;
         let bias = (self.kg + 1) as i32;
+        let bits = self.inner().code_bits();
         let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-        let mut codes = Vec::with_capacity(u.len());
+        let mut words = vec![0u64; (n * bits as usize).div_ceil(64)];
+        let mut wtr = BitWriter::new(&mut words, bits);
         if s == 0.0 {
             q.fill(0.0);
-            codes.resize(u.len(), bias as u32);
+            for _ in 0..n {
+                wtr.push(bias as u32);
+            }
         } else {
             let inv_s = 1.0 / s;
             let lo = f32::exp2(-kg as f32);
@@ -81,20 +90,21 @@ impl Compressor for StochasticLogQuant {
                 };
                 if level == 0.0 {
                     *qi = 0.0;
-                    codes.push(bias as u32);
+                    wtr.push(bias as u32);
                 } else {
                     let sym = (m + bias) * if ui < 0.0 { -1 } else { 1 };
                     *qi = level * s * if ui < 0.0 { -1.0 } else { 1.0 };
-                    codes.push((sym + bias) as u32);
+                    wtr.push((sym + bias) as u32);
                 }
             }
         }
+        wtr.finish();
         WireMsg {
             codec: CodecId::LogQuant,
             param: self.kg,
-            n: u.len(),
+            n,
             scales: vec![s],
-            codes: Some(pack(&codes, self.inner().code_bits())),
+            codes: Some(Packed { bits, n, words }),
             raw: vec![],
         }
     }
@@ -133,6 +143,33 @@ impl Qsgd {
     pub fn code_bits(&self) -> u8 {
         bits_for_symbols(2 * self.levels + 1)
     }
+
+    /// Fused unpack+decode; `ADD` accumulates into `out` (the server's
+    /// decode→sum fusion). The per-code arithmetic is byte-identical to
+    /// the pre-fusion loop (`(c - bias) / L * s`, division kept).
+    fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("qsgd msg has codes");
+        let s = msg.scales[0];
+        let bias = msg.param as i32;
+        let l = msg.param as f32;
+        for_each_chunk(p, start, out.len(), |o, chunk| {
+            let dst = &mut out[o..o + chunk.len()];
+            if ADD {
+                for (d, &c) in dst.iter_mut().zip(chunk) {
+                    *d += (c as i32 - bias) as f32 / l * s;
+                }
+            } else {
+                for (d, &c) in dst.iter_mut().zip(chunk) {
+                    *d = (c as i32 - bias) as f32 / l * s;
+                }
+            }
+        });
+    }
+
+    /// `decompress_range` that accumulates (`out[i] += decoded`).
+    pub fn decompress_range_add(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<true>(msg, start, out);
+    }
 }
 
 impl Compressor for Qsgd {
@@ -144,13 +181,20 @@ impl Compressor for Qsgd {
     }
 
     fn compress_into(&self, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+        // Fused quantize + bit-pack; rng consumption order unchanged
+        // (see `reference::qsgd_compress_ref`).
+        let n = u.len();
         let l = self.levels as f32;
         let bias = self.levels as i32;
+        let bits = self.code_bits();
         let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-        let mut codes = Vec::with_capacity(u.len());
+        let mut words = vec![0u64; (n * bits as usize).div_ceil(64)];
+        let mut wtr = BitWriter::new(&mut words, bits);
         if s == 0.0 {
             q.fill(0.0);
-            codes.resize(u.len(), bias as u32);
+            for _ in 0..n {
+                wtr.push(bias as u32);
+            }
         } else {
             let inv_s = 1.0 / s;
             for (qi, &ui) in q.iter_mut().zip(u) {
@@ -161,19 +205,20 @@ impl Compressor for Qsgd {
                 let val = idx as f32 / l * s;
                 if ui < 0.0 {
                     *qi = -val;
-                    codes.push((bias - idx) as u32);
+                    wtr.push((bias - idx) as u32);
                 } else {
                     *qi = val;
-                    codes.push((bias + idx) as u32);
+                    wtr.push((bias + idx) as u32);
                 }
             }
         }
+        wtr.finish();
         WireMsg {
             codec: CodecId::Qsgd,
             param: self.levels,
-            n: u.len(),
+            n,
             scales: vec![s],
-            codes: Some(pack(&codes, self.code_bits())),
+            codes: Some(Packed { bits, n, words }),
             raw: vec![],
         }
     }
@@ -185,15 +230,7 @@ impl Compressor for Qsgd {
     }
 
     fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
-        let p = msg.codes.as_ref().expect("qsgd msg has codes");
-        let s = msg.scales[0];
-        let bias = msg.param as i32;
-        let l = msg.param as f32;
-        let mut codes = vec![0u32; out.len()];
-        unpack_range_into(p, start, &mut codes);
-        for (o, c) in out.iter_mut().zip(codes) {
-            *o = (c as i32 - bias) as f32 / l * s;
-        }
+        self.decode_range_impl::<false>(msg, start, out);
     }
 
     fn bits_per_element(&self) -> f64 {

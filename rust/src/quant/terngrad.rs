@@ -12,12 +12,60 @@
 //!
 //! Wire format: one f32 scale + 2-bit codes over `{-1, 0, +1}`.
 
-use super::pack::{pack, unpack_range_into};
+use super::pack::{for_each_chunk, BitWriter, Packed};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TernGrad;
+
+impl TernGrad {
+    /// Fused unpack+decode; `ADD` accumulates into `out` (the server's
+    /// decode→sum fusion). Codes map through a 4-entry table
+    /// `[-s, 0, s, s]` — the (never emitted) code 3 decodes to `s`
+    /// exactly as the old `match` fallthrough did.
+    fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("terngrad msg has codes");
+        let s = msg.scales[0];
+        if p.bits == 2 {
+            let table = [-s, 0.0, s, s];
+            for_each_chunk(p, start, out.len(), |o, chunk| {
+                let dst = &mut out[o..o + chunk.len()];
+                if ADD {
+                    for (d, &c) in dst.iter_mut().zip(chunk) {
+                        *d += table[c as usize];
+                    }
+                } else {
+                    for (d, &c) in dst.iter_mut().zip(chunk) {
+                        *d = table[c as usize];
+                    }
+                }
+            });
+        } else {
+            // Never off the wire (width is validated); in-process odd
+            // messages keep the old code→value map.
+            for_each_chunk(p, start, out.len(), |o, chunk| {
+                for (j, &c) in chunk.iter().enumerate() {
+                    let v = match c {
+                        0 => -s,
+                        1 => 0.0,
+                        _ => s,
+                    };
+                    if ADD {
+                        out[o + j] += v;
+                    } else {
+                        out[o + j] = v;
+                    }
+                }
+            });
+        }
+    }
+
+    /// `decompress_range` that accumulates (`out[i] += decoded`).
+    pub fn decompress_range_add(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<true>(msg, start, out);
+    }
+}
 
 impl Compressor for TernGrad {
     fn name(&self) -> &'static str {
@@ -28,36 +76,44 @@ impl Compressor for TernGrad {
     }
 
     fn compress_into(&self, u: &[f32], q: &mut [f32], rng: &mut DetRng) -> WireMsg {
+        // Fused quantize + bit-pack: one pass over `u`, codes streamed
+        // straight into the packed words (no intermediate Vec<u32>).
+        let n = u.len();
         let s = u.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-        let mut codes = Vec::with_capacity(u.len());
+        let mut words = vec![0u64; (n * 2).div_ceil(64)];
+        let mut wtr = BitWriter::new(&mut words, 2);
         if s == 0.0 {
             q.fill(0.0);
-            codes.resize(u.len(), 1u32);
+            for _ in 0..n {
+                wtr.push(1);
+            }
         } else {
             let inv_s = 1.0 / s;
             for (qi, &ui) in q.iter_mut().zip(u) {
                 let p = ui.abs() * inv_s;
                 let hit = rng.gen_f32() < p;
-                if hit {
+                let code = if hit {
                     if ui < 0.0 {
                         *qi = -s;
-                        codes.push(0);
+                        0
                     } else {
                         *qi = s;
-                        codes.push(2);
+                        2
                     }
                 } else {
                     *qi = 0.0;
-                    codes.push(1);
-                }
+                    1
+                };
+                wtr.push(code);
             }
         }
+        wtr.finish();
         WireMsg {
             codec: CodecId::TernGrad,
             param: 0,
-            n: u.len(),
+            n,
             scales: vec![s],
-            codes: Some(pack(&codes, 2)),
+            codes: Some(Packed { bits: 2, n, words }),
             raw: vec![],
         }
     }
@@ -69,17 +125,7 @@ impl Compressor for TernGrad {
     }
 
     fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
-        let p = msg.codes.as_ref().expect("terngrad msg has codes");
-        let s = msg.scales[0];
-        let mut codes = vec![0u32; out.len()];
-        unpack_range_into(p, start, &mut codes);
-        for (o, c) in out.iter_mut().zip(codes) {
-            *o = match c {
-                0 => -s,
-                1 => 0.0,
-                _ => s,
-            };
-        }
+        self.decode_range_impl::<false>(msg, start, out);
     }
 
     fn bits_per_element(&self) -> f64 {

@@ -36,7 +36,7 @@
 //! the server-side decode bit-for-bit, so error feedback compensates
 //! exactly the bias the server applies.
 
-use super::pack::{bits_for_symbols, pack, unpack_range_into};
+use super::pack::{bits_for_symbols, for_each_chunk, pack, BitWriter, Packed};
 use super::{CodecId, Compressor, WireMsg};
 use crate::util::DetRng;
 
@@ -116,6 +116,32 @@ impl WQuant {
             raw: vec![],
         }
     }
+
+    /// Fused unpack+decode; `ADD` accumulates into `out` (the server's
+    /// decode→sum fusion). Keeps the exact pre-fusion arithmetic —
+    /// `0.5 * (c - bias) / bias`, division not folded into a reciprocal
+    /// multiply, so decoded grid points are bit-identical.
+    fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let p = msg.codes.as_ref().expect("wquant msg has codes");
+        let bias = 1i32 << self.kx;
+        for_each_chunk(p, start, out.len(), |o, chunk| {
+            let dst = &mut out[o..o + chunk.len()];
+            if ADD {
+                for (d, &c) in dst.iter_mut().zip(chunk) {
+                    *d += 0.5 * (c as i32 - bias) as f32 / bias as f32;
+                }
+            } else {
+                for (d, &c) in dst.iter_mut().zip(chunk) {
+                    *d = 0.5 * (c as i32 - bias) as f32 / bias as f32;
+                }
+            }
+        });
+    }
+
+    /// `decompress_range` that accumulates (`out[i] += decoded`).
+    pub fn decompress_range_add(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<true>(msg, start, out);
+    }
 }
 
 impl Compressor for WQuant {
@@ -127,9 +153,28 @@ impl Compressor for WQuant {
     }
 
     fn compress_into(&self, u: &[f32], q: &mut [f32], _rng: &mut DetRng) -> WireMsg {
-        let mut codes = vec![0u32; u.len()];
-        self.encode_into(u, q, &mut codes);
-        self.wire_msg(u.len(), &codes)
+        // Fused encode + bit-pack: same per-element kernel as
+        // `encode_into`, codes streamed straight into the packed words
+        // (no intermediate Vec<u32>).
+        let n = u.len();
+        let bits = self.code_bits();
+        let bias = 1i32 << self.kx;
+        let mut words = vec![0u64; (n * bits as usize).div_ceil(64)];
+        let mut wtr = BitWriter::new(&mut words, bits);
+        for (qi, &xi) in q.iter_mut().zip(u) {
+            let idx = self.index(xi);
+            *qi = 0.5 * idx as f32 / bias as f32;
+            wtr.push((idx + bias) as u32);
+        }
+        wtr.finish();
+        WireMsg {
+            codec: CodecId::WQuant,
+            param: self.kx,
+            n,
+            scales: vec![],
+            codes: Some(Packed { bits, n, words }),
+            raw: vec![],
+        }
     }
 
     fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
@@ -139,13 +184,7 @@ impl Compressor for WQuant {
     }
 
     fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
-        let p = msg.codes.as_ref().expect("wquant msg has codes");
-        let bias = 1i32 << self.kx;
-        let mut codes = vec![0u32; out.len()];
-        unpack_range_into(p, start, &mut codes);
-        for (o, c) in out.iter_mut().zip(codes) {
-            *o = 0.5 * (c as i32 - bias) as f32 / bias as f32;
-        }
+        self.decode_range_impl::<false>(msg, start, out);
     }
 
     fn bits_per_element(&self) -> f64 {

@@ -1,0 +1,227 @@
+//! Allocation-regression harness for the round hot path.
+//!
+//! A counting `#[global_allocator]` (thread-local counters, so
+//! parallel `#[test]` threads don't bleed into each other) pins the
+//! memory discipline the kernel rewrite bought:
+//!
+//! * decode paths (`decompress`, `decompress_range`,
+//!   `decode_msg_range_add`) perform **zero** heap allocations;
+//! * `compress_into` allocates exactly its wire payload (the returned
+//!   `WireMsg`'s words/scales/raw Vecs — the product, not scratch);
+//! * `ParameterServer::apply` allocates only the O(workers) reporter
+//!   id list — never an O(dim) scratch buffer;
+//! * a steady-state LocalBus round (after warmup) has a *flat*
+//!   allocation profile: identical count and bytes every round.
+//!
+//! Everything here runs single-threaded (LocalBus, `threads = 1`
+//! server) so all allocations land on the measuring thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use qadam::optim::{LrSchedule, QAdamEf};
+use qadam::ps::{LocalBus, ParameterServer, SimGradSource, ToServer, Worker};
+use qadam::quant::{
+    decode_msg_range_add, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd,
+    StochasticLogQuant, TernGrad, WQuant, WireMsg,
+};
+use qadam::sim::StochasticProblem;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+// `try_with` so allocations during thread teardown (after TLS
+// destruction) fall through uncounted instead of aborting.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        let _ = BYTES.try_with(|c| c.set(c.get() + layout.size() as u64));
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        let _ = BYTES.try_with(|c| c.set(c.get() + layout.size() as u64));
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        let _ = BYTES.try_with(|c| c.set(c.get() + new_size as u64));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Run `f`, returning (allocation count, allocated bytes, result).
+fn measure<R>(f: impl FnOnce() -> R) -> (u64, u64, R) {
+    let a0 = ALLOCS.with(|c| c.get());
+    let b0 = BYTES.with(|c| c.get());
+    let r = f();
+    let a1 = ALLOCS.with(|c| c.get());
+    let b1 = BYTES.with(|c| c.get());
+    (a1 - a0, b1 - b0, r)
+}
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = seeded_rng(seed, 77);
+    (0..n).map(|_| 0.1 * (rng.gen_f32() - 0.5)).collect()
+}
+
+/// Every codec's `compress_into` allocates exactly its wire payload:
+/// the `Packed` words plus the scales Vec (2 allocations), except
+/// WQuant (scale-free grid: 1) and Identity (raw payload: 1). No
+/// intermediate code buffers, no scratch.
+#[test]
+fn compress_allocates_exactly_the_wire_payload() {
+    let n = 4096;
+    let u = randv(n, 1);
+    let mut q = vec![0.0f32; n];
+    let cases: Vec<(&str, Box<dyn Compressor>, u64)> = vec![
+        ("logquant", Box::new(LogQuant::new(2)), 2),
+        ("slq", Box::new(StochasticLogQuant::new(2)), 2),
+        ("terngrad", Box::new(TernGrad), 2),
+        ("qsgd", Box::new(Qsgd::new(4)), 2),
+        ("blockwise", Box::new(Blockwise::new(512)), 2),
+        ("wquant", Box::new(WQuant::new(6)), 1),
+        ("identity", Box::new(Identity), 1),
+    ];
+    for (name, comp, want) in &cases {
+        let mut rng = seeded_rng(3, 3);
+        let _warm = comp.compress_into(&u, &mut q, &mut rng);
+        let (allocs, bytes, msg) = measure(|| comp.compress_into(&u, &mut q, &mut rng));
+        assert_eq!(
+            allocs, *want,
+            "{name}: compress must allocate exactly its payload Vecs"
+        );
+        if msg.codes.is_some() {
+            // packed payload, not an O(4n) float scratch
+            assert!(bytes < (n * 4) as u64, "{name}: allocated {bytes} bytes for n={n}");
+        }
+    }
+}
+
+/// Every decode path is allocation-free: plain, ranged, and the fused
+/// accumulate used by the server's apply loop.
+#[test]
+fn decode_paths_allocate_nothing() {
+    let n = 4096;
+    let u = randv(n, 2);
+    let mut q = vec![0.0f32; n];
+    let cases: Vec<(&str, Box<dyn Compressor>)> = vec![
+        ("logquant", Box::new(LogQuant::new(2))),
+        ("slq", Box::new(StochasticLogQuant::new(2))),
+        ("terngrad", Box::new(TernGrad)),
+        ("qsgd", Box::new(Qsgd::new(4))),
+        ("blockwise", Box::new(Blockwise::new(512))),
+        ("wquant", Box::new(WQuant::new(6))),
+        ("identity", Box::new(Identity)),
+    ];
+    let mut out = vec![0.0f32; n];
+    for (name, comp) in &cases {
+        let mut rng = seeded_rng(5, 5);
+        let msg: WireMsg = comp.compress_into(&u, &mut q, &mut rng);
+        let (a, _, ()) = measure(|| comp.decompress(&msg, &mut out));
+        assert_eq!(a, 0, "{name}: decompress must not allocate");
+        let (a, _, ()) = measure(|| comp.decompress_range(&msg, 100, &mut out[..1000]));
+        assert_eq!(a, 0, "{name}: decompress_range must not allocate");
+        let (a, _, ()) = measure(|| decode_msg_range_add(&msg, 100, &mut out[..1000]));
+        assert_eq!(a, 0, "{name}: decode_msg_range_add must not allocate");
+    }
+}
+
+fn delta_replies(t: u64, dim: usize, workers: u32) -> Vec<ToServer> {
+    let mut rng = seeded_rng(11, t);
+    let mut q = vec![0.0f32; dim];
+    (0..workers)
+        .map(|w| {
+            let u = randv(dim, t * 100 + w as u64);
+            let msg = LogQuant::new(2).compress_into(&u, &mut q, &mut rng);
+            ToServer::Delta { t, worker: w, loss: 1.0, msg }
+        })
+        .collect()
+}
+
+/// `ParameterServer::apply` on the sequential (threads = 1) path
+/// allocates exactly one Vec — the O(workers) reporter id list. The
+/// decode→sum→apply traversal runs entirely in the persistent arena.
+#[test]
+fn apply_allocates_only_the_reporter_id_list() {
+    let dim = 8192;
+    let workers = 4u32;
+    let mut ps = ParameterServer::new(randv(dim, 9), None);
+    // warmup round: first-touch effects out of the way
+    ps.broadcast(workers as usize);
+    ps.apply(&delta_replies(1, dim, workers)).unwrap();
+    ps.broadcast(workers as usize);
+    let deltas = delta_replies(2, dim, workers);
+    let (allocs, bytes, res) = measure(|| ps.apply(&deltas));
+    res.unwrap();
+    assert_eq!(allocs, 1, "apply must allocate only the reporter id list");
+    assert_eq!(bytes, workers as u64 * 4, "the id list is O(workers), never O(dim)");
+}
+
+/// Steady-state LocalBus rounds have a flat allocation profile: after
+/// warmup, every round performs the identical allocation count and
+/// byte total (wire payloads + the gradient-source Vec + the two
+/// O(workers) lists — nothing that grows, nothing transient in the
+/// codec path). The delta-downlink broadcast and the apply are also
+/// pinned individually.
+#[test]
+fn steady_state_round_allocation_is_flat() {
+    let dim = 4096;
+    let nw = 3usize;
+    let mut ps = ParameterServer::new(randv(dim, 21), None);
+    ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 50);
+    let mut workers: Vec<Worker> = (0..nw)
+        .map(|i| {
+            let src = SimGradSource { problem: StochasticProblem::new(dim, 0.1, 7) };
+            let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 });
+            Worker::new(i as u32, Box::new(opt), Box::new(src), 42)
+        })
+        .collect();
+    let bus = LocalBus;
+    let mut run_round = |ps: &mut ParameterServer, workers: &mut [Worker]| -> (u64, u64) {
+        let (bcast_allocs, _, tw) = measure(|| ps.broadcast(nw).0);
+        let (ha, hb, replies) = measure(|| bus.round(&tw, workers).unwrap());
+        let (aa, ab, res) = measure(|| ps.apply(&replies));
+        res.unwrap();
+        if ps.step() > 2 {
+            // steady state: the delta-frame broadcast allocates exactly
+            // its payload (words + scales), apply exactly the id list
+            assert_eq!(bcast_allocs, 2, "t={}: broadcast payload only", ps.step());
+            assert_eq!(aa, 1, "t={}: apply id list only", ps.step());
+            assert_eq!(ab, nw as u64 * 4, "t={}", ps.step());
+        }
+        (ha, hb)
+    };
+    // warmup: resync frame + first-touch
+    for _ in 0..3 {
+        run_round(&mut ps, &mut workers);
+    }
+    let profile: Vec<(u64, u64)> =
+        (0..4).map(|_| run_round(&mut ps, &mut workers)).collect();
+    for (i, p) in profile.iter().enumerate().skip(1) {
+        assert_eq!(
+            p, &profile[0],
+            "round {} of the steady state changed the allocation profile",
+            i + 1
+        );
+    }
+    // the whole worker side of a round stays O(payload + gradient):
+    // bounded count, and no hidden O(dim) scratch beyond the one
+    // gradient Vec per worker the GradSource API returns by value.
+    let (count, bytes) = profile[0];
+    assert!(count <= 8 * nw as u64, "worker-side allocs per round: {count}");
+    assert!(
+        bytes <= (nw * (5 * dim)) as u64,
+        "worker-side bytes per round: {bytes} (dim={dim})"
+    );
+}

@@ -143,7 +143,7 @@ fn adaptive_controller_stays_in_band_and_is_pure() {
                 .map(|i| grad_rng.gen_normal() * (0.01 + 0.1 * (i / 16) as f32))
                 .collect();
             let msg = opt.step(&g, t, 0, &mut rng);
-            let bits = opt.chosen_bits().expect("adaptive policy reports levels");
+            let bits = opt.chosen_bits().expect("adaptive policy reports levels").to_vec();
             assert!(
                 bits.iter().all(|&b| (lo..=hi).contains(&b)),
                 "t={t}: levels {bits:?} left the band {lo}..{hi}"

@@ -1,0 +1,353 @@
+//! Kernel-equivalence suite: every rewritten hot-path kernel
+//! (streaming bit-pack, fused compress, table/fused range decode) is
+//! **bit-identical** to the retained scalar reference implementations
+//! in `qadam::quant::reference` — the literal pre-rewrite code.
+//!
+//! Coverage axes:
+//! * randomized lengths, including non-lane-multiple tails (the
+//!   `for_each_chunk` chunk width is 128; lengths straddle 63/64/65,
+//!   127/128/129 and a large non-multiple);
+//! * extreme values: ±0.0, subnormals, the smallest normal, and
+//!   magnitudes near `f32::MAX`;
+//! * every supported bit level per codec;
+//! * stochastic codecs additionally prove they consume the *same rng
+//!   sequence* (the wire golden fixtures depend on exact draw counts).
+//!
+//! Equality is always on bit patterns: wire bytes via
+//! [`WireMsg::to_bytes`], floats via `f32::to_bits`.
+
+use qadam::quant::pack::{pack, unpack_range_into};
+use qadam::quant::reference as r;
+use qadam::quant::{
+    decode_msg_range_add, seeded_rng, Blockwise, CodecId, Compressor, Identity, LogQuant, Qsgd,
+    StochasticLogQuant, TernGrad, WQuant, WireMsg,
+};
+
+/// Lengths exercising empty, single-lane, tail-straddling and large
+/// non-multiple cases for every chunked kernel.
+const LENGTHS: &[usize] = &[0, 1, 3, 31, 32, 33, 63, 64, 65, 127, 128, 129, 1000, 4097];
+
+/// Deterministic values with extremes spliced at the head and tail, so
+/// both the vector head and the ragged last chunk see them.
+fn vals(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+    let mut rng = seeded_rng(seed, 0x7e57);
+    let mut v: Vec<f32> = (0..n).map(|_| scale * (rng.gen_f32() - 0.5)).collect();
+    let extremes = [
+        0.0f32,
+        -0.0,
+        f32::from_bits(1),        // smallest positive subnormal
+        -f32::from_bits(1),
+        f32::MIN_POSITIVE,        // smallest normal
+        -f32::MIN_POSITIVE,
+        1.0e38,
+        -1.0e38,
+    ];
+    for (slot, &e) in v.iter_mut().zip(&extremes) {
+        *slot = e;
+    }
+    let m = v.len();
+    for (k, &e) in extremes.iter().enumerate().take(m.saturating_sub(extremes.len())) {
+        v[m - 1 - k] = e;
+    }
+    v
+}
+
+/// Range windows covering full, prefix, suffix, middle and off-by-one
+/// starts of an `n`-element payload.
+fn windows(n: usize) -> Vec<(usize, usize)> {
+    let mut w = vec![(0usize, n)];
+    if n > 0 {
+        w.push((0, 1));
+        w.push((n - 1, 1));
+        w.push((n / 3, n - n / 3 - (n / 4)));
+    }
+    if n > 2 {
+        w.push((1, n - 2));
+    }
+    w
+}
+
+#[track_caller]
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}: {x:?} vs {y:?}");
+    }
+}
+
+/// Compare the fused range decode (and its `_add` variant) against the
+/// reference range decode over every window of the payload.
+fn check_ranges(
+    msg: &WireMsg,
+    n: usize,
+    dec_new: &dyn Fn(&WireMsg, usize, &mut [f32]),
+    dec_ref: &dyn Fn(&WireMsg, usize, &mut [f32]),
+    ctx: &str,
+) {
+    for (start, len) in windows(n) {
+        let mut a = vec![0.0f32; len];
+        let mut b = vec![0.0f32; len];
+        dec_new(msg, start, &mut a);
+        dec_ref(msg, start, &mut b);
+        assert_bits_eq(&a, &b, &format!("{ctx} decode range {start}+{len}"));
+        // fused add == reference decode into scratch, then add
+        let mut acc_fused: Vec<f32> = (0..len).map(|i| 0.25 * (i as f32 + 1.0)).collect();
+        let mut acc_ref = acc_fused.clone();
+        decode_msg_range_add(msg, start, &mut acc_fused);
+        for (dst, &s) in acc_ref.iter_mut().zip(&b) {
+            *dst += s;
+        }
+        assert_bits_eq(&acc_fused, &acc_ref, &format!("{ctx} add range {start}+{len}"));
+    }
+}
+
+#[test]
+fn pack_streaming_matches_reference_all_widths() {
+    for bits in 1u8..=32 {
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        for &n in LENGTHS {
+            let mut rng = seeded_rng(bits as u64, n as u64);
+            let codes: Vec<u32> = (0..n).map(|_| rng.gen_u32() & mask).collect();
+            let new = pack(&codes, bits);
+            let reference = r::pack_ref(&codes, bits);
+            assert_eq!(new.words, reference.words, "bits={bits} n={n}");
+            assert_eq!((new.bits, new.n), (reference.bits, reference.n));
+            for (start, len) in windows(n) {
+                let mut a = vec![0u32; len];
+                let mut b = vec![0u32; len];
+                unpack_range_into(&new, start, &mut a);
+                r::unpack_range_ref(&new, start, &mut b);
+                assert_eq!(a, b, "bits={bits} n={n} range {start}+{len}");
+            }
+        }
+    }
+}
+
+#[test]
+fn logquant_kernels_match_reference() {
+    for &kg in &[0u32, 1, 2, 8, 20] {
+        let lq = LogQuant::new(kg);
+        for &n in LENGTHS {
+            for seed in 0..2u64 {
+                let u = vals(seed, n, 0.2);
+                let mut q_new = vec![0.0f32; n];
+                let mut q_ref = vec![0.0f32; n];
+                let mut rng = seeded_rng(0, 0); // unused: deterministic codec
+                let m_new = lq.compress_into(&u, &mut q_new, &mut rng);
+                let m_ref = r::logquant_compress_ref(kg, &u, &mut q_ref);
+                let ctx = format!("logquant kg={kg} n={n} seed={seed}");
+                assert_eq!(m_new.to_bytes(), m_ref.to_bytes(), "{ctx}: wire bytes");
+                assert_bits_eq(&q_new, &q_ref, &format!("{ctx}: q"));
+                check_ranges(
+                    &m_new,
+                    n,
+                    &|m, s, o| lq.decompress_range(m, s, o),
+                    &r::logquant_decompress_range_ref,
+                    &ctx,
+                );
+            }
+        }
+    }
+}
+
+/// Multi-scale (per-chunk scale) LogQuant frames — the PJRT kernel
+/// layout — decode through the signed-level table bit-identically to
+/// the reference, including the zero symbol staying exactly +0.0.
+#[test]
+fn logquant_multiscale_decode_matches_reference() {
+    for &kg in &[0u32, 2, 8] {
+        let lq = LogQuant::new(kg);
+        for &block_log2 in &[2u32, 6] {
+            let block = 1usize << block_log2;
+            for &n in &[1usize, 5, 64, 65, 257, 1000] {
+                let u = vals(kg as u64 + block_log2 as u64, n, 0.5);
+                let mut q = vec![0.0f32; n];
+                let mut scales = Vec::new();
+                let mut all_codes: Vec<u32> = Vec::new();
+                for (bi, chunk) in u.chunks(block).enumerate() {
+                    let lo = bi * block;
+                    let mut codes = Vec::new();
+                    let s = lq.quantize(chunk, &mut q[lo..lo + chunk.len()], &mut codes);
+                    scales.push(s);
+                    all_codes.extend_from_slice(&codes);
+                }
+                let msg = WireMsg {
+                    codec: CodecId::LogQuant,
+                    param: lq.pjrt_param(block),
+                    n,
+                    scales,
+                    codes: Some(pack(&all_codes, lq.code_bits())),
+                    raw: vec![],
+                };
+                let ctx = format!("logquant-ms kg={kg} block={block} n={n}");
+                check_ranges(
+                    &msg,
+                    n,
+                    &|m, s, o| lq.decompress_range(m, s, o),
+                    &r::logquant_decompress_range_ref,
+                    &ctx,
+                );
+                // the decoded payload equals the quantizer's q (decode
+                // identity across the multi-scale wire layout)
+                let mut out = vec![0.0f32; n];
+                lq.decompress_range(&msg, 0, &mut out);
+                assert_bits_eq(&out, &q, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn stochastic_logquant_matches_reference_and_rng_sequence() {
+    for &kg in &[0u32, 3] {
+        let slq = StochasticLogQuant::new(kg);
+        for &n in LENGTHS {
+            let u = vals(kg as u64, n, 0.1);
+            let mut q_new = vec![0.0f32; n];
+            let mut q_ref = vec![0.0f32; n];
+            let mut rng_new = seeded_rng(42, n as u64);
+            let mut rng_ref = seeded_rng(42, n as u64);
+            let m_new = slq.compress_into(&u, &mut q_new, &mut rng_new);
+            let m_ref = r::stochastic_log_compress_ref(kg, &u, &mut q_ref, &mut rng_ref);
+            let ctx = format!("slq kg={kg} n={n}");
+            assert_eq!(m_new.to_bytes(), m_ref.to_bytes(), "{ctx}: wire bytes");
+            assert_bits_eq(&q_new, &q_ref, &format!("{ctx}: q"));
+            // identical post-compress draws == identical consumption
+            for _ in 0..4 {
+                assert_eq!(rng_new.gen_u32(), rng_ref.gen_u32(), "{ctx}: rng sequence");
+            }
+            check_ranges(
+                &m_new,
+                n,
+                &|m, s, o| slq.decompress_range(m, s, o),
+                &r::logquant_decompress_range_ref,
+                &ctx,
+            );
+        }
+    }
+}
+
+#[test]
+fn qsgd_matches_reference_and_rng_sequence() {
+    for &levels in &[1u32, 4, 255, 1000] {
+        let qs = Qsgd::new(levels);
+        for &n in LENGTHS {
+            let u = vals(levels as u64, n, 0.3);
+            let mut q_new = vec![0.0f32; n];
+            let mut q_ref = vec![0.0f32; n];
+            let mut rng_new = seeded_rng(7, n as u64);
+            let mut rng_ref = seeded_rng(7, n as u64);
+            let m_new = qs.compress_into(&u, &mut q_new, &mut rng_new);
+            let m_ref = r::qsgd_compress_ref(levels, &u, &mut q_ref, &mut rng_ref);
+            let ctx = format!("qsgd levels={levels} n={n}");
+            assert_eq!(m_new.to_bytes(), m_ref.to_bytes(), "{ctx}: wire bytes");
+            assert_bits_eq(&q_new, &q_ref, &format!("{ctx}: q"));
+            for _ in 0..4 {
+                assert_eq!(rng_new.gen_u32(), rng_ref.gen_u32(), "{ctx}: rng sequence");
+            }
+            check_ranges(
+                &m_new,
+                n,
+                &|m, s, o| qs.decompress_range(m, s, o),
+                &r::qsgd_decompress_range_ref,
+                &ctx,
+            );
+        }
+    }
+}
+
+#[test]
+fn terngrad_matches_reference_and_rng_sequence() {
+    for &n in LENGTHS {
+        for seed in 0..3u64 {
+            let u = vals(seed, n, 0.4);
+            let mut q_new = vec![0.0f32; n];
+            let mut q_ref = vec![0.0f32; n];
+            let mut rng_new = seeded_rng(9, seed * 1000 + n as u64);
+            let mut rng_ref = seeded_rng(9, seed * 1000 + n as u64);
+            let m_new = TernGrad.compress_into(&u, &mut q_new, &mut rng_new);
+            let m_ref = r::terngrad_compress_ref(&u, &mut q_ref, &mut rng_ref);
+            let ctx = format!("terngrad n={n} seed={seed}");
+            assert_eq!(m_new.to_bytes(), m_ref.to_bytes(), "{ctx}: wire bytes");
+            assert_bits_eq(&q_new, &q_ref, &format!("{ctx}: q"));
+            for _ in 0..4 {
+                assert_eq!(rng_new.gen_u32(), rng_ref.gen_u32(), "{ctx}: rng sequence");
+            }
+            check_ranges(
+                &m_new,
+                n,
+                &|m, s, o| TernGrad.decompress_range(m, s, o),
+                &r::terngrad_decompress_range_ref,
+                &ctx,
+            );
+        }
+    }
+}
+
+#[test]
+fn wquant_matches_reference() {
+    for &kx in &[0u32, 1, 6, 14, 22] {
+        let wq = WQuant::new(kx);
+        for &n in LENGTHS {
+            let u = vals(kx as u64, n, 1.2); // wide enough to hit the clamp
+            let mut q_new = vec![0.0f32; n];
+            let mut q_ref = vec![0.0f32; n];
+            let mut rng = seeded_rng(0, 0); // unused: deterministic codec
+            let m_new = wq.compress_into(&u, &mut q_new, &mut rng);
+            let m_ref = r::wquant_compress_ref(kx, &u, &mut q_ref);
+            let ctx = format!("wquant kx={kx} n={n}");
+            assert_eq!(m_new.to_bytes(), m_ref.to_bytes(), "{ctx}: wire bytes");
+            assert_bits_eq(&q_new, &q_ref, &format!("{ctx}: q"));
+            check_ranges(
+                &m_new,
+                n,
+                &|m, s, o| wq.decompress_range(m, s, o),
+                &|m, s, o| r::wquant_decompress_range_ref(kx, m, s, o),
+                &ctx,
+            );
+        }
+    }
+}
+
+#[test]
+fn blockwise_matches_reference() {
+    for &block in &[1usize, 3, 7, 4096] {
+        let bw = Blockwise::new(block);
+        for &n in LENGTHS {
+            let u = vals(block as u64, n, 0.6);
+            let mut q_new = vec![0.0f32; n];
+            let mut q_ref = vec![0.0f32; n];
+            let mut rng = seeded_rng(0, 0); // unused: deterministic codec
+            let m_new = bw.compress_into(&u, &mut q_new, &mut rng);
+            let m_ref = r::blockwise_compress_ref(block, &u, &mut q_ref);
+            let ctx = format!("blockwise block={block} n={n}");
+            assert_eq!(m_new.to_bytes(), m_ref.to_bytes(), "{ctx}: wire bytes");
+            assert_bits_eq(&q_new, &q_ref, &format!("{ctx}: q"));
+            check_ranges(
+                &m_new,
+                n,
+                &|m, s, o| bw.decompress_range(m, s, o),
+                &|m, s, o| r::blockwise_decompress_range_ref(block, m, s, o),
+                &ctx,
+            );
+        }
+    }
+}
+
+/// Identity has no rewritten kernel, but its fused-add path feeds the
+/// same server loop — pin it against scratch-then-add too.
+#[test]
+fn identity_add_matches_scratch_then_add() {
+    for &n in LENGTHS {
+        let u = vals(1, n, 2.0);
+        let mut q = vec![0.0f32; n];
+        let msg = Identity.compress_into(&u, &mut q, &mut seeded_rng(0, 0));
+        check_ranges(
+            &msg,
+            n,
+            &|m, s, o| Identity.decompress_range(m, s, o),
+            &|m, s, o| Identity.decompress_range(m, s, o),
+            &format!("identity n={n}"),
+        );
+    }
+}

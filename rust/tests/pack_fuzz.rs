@@ -1,0 +1,157 @@
+//! Round-trip and hostile-input fuzzing for the bit-pack layer and the
+//! wire frame parser.
+//!
+//! * arbitrary code sequences round-trip `pack` → `unpack` bit-exactly
+//!   at every supported width (1..=32), every ragged length;
+//! * truncated frames are rejected by [`WireMsg::from_bytes`] with an
+//!   error — never a panic — at **every** prefix length;
+//! * extended frames (trailing garbage) are rejected (exact-length
+//!   contract);
+//! * single-byte header corruptions either fail to parse or parse into
+//!   a frame whose decode stays in bounds (the structural-consistency
+//!   checks guarantee `decode_msg` cannot index out of range on
+//!   anything `from_bytes` accepts — hostile `Packed` shapes are
+//!   rejected at the wire boundary).
+
+use qadam::quant::pack::{pack, unpack, unpack_range_into};
+use qadam::quant::{
+    decode_msg, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd, TernGrad, WQuant,
+    WireMsg,
+};
+
+#[test]
+fn pack_roundtrips_arbitrary_codes_at_every_width() {
+    for bits in 1u8..=32 {
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        for &n in &[0usize, 1, 2, 5, 21, 63, 64, 65, 127, 128, 129, 509, 2048] {
+            for seed in 0..3u64 {
+                let mut rng = seeded_rng(seed, ((bits as u64) << 32) | n as u64);
+                let codes: Vec<u32> = (0..n).map(|_| rng.gen_u32() & mask).collect();
+                let p = pack(&codes, bits);
+                assert_eq!(unpack(&p), codes, "bits={bits} n={n} seed={seed}");
+                // ragged range views round-trip too
+                if n > 2 {
+                    let (start, len) = (n / 3, n / 2);
+                    let mut out = vec![0u32; len];
+                    unpack_range_into(&p, start, &mut out);
+                    assert_eq!(out, &codes[start..start + len], "bits={bits} n={n}");
+                }
+            }
+        }
+    }
+}
+
+/// One representative valid frame per codec (plus a multi-scale
+/// LogQuant layout via Blockwise's many-scales shape).
+fn sample_frames() -> Vec<(String, Vec<u8>)> {
+    let n = 150;
+    let mut rng = seeded_rng(13, 13);
+    let u: Vec<f32> = (0..n).map(|_| 0.2 * (rng.gen_f32() - 0.5)).collect();
+    let mut q = vec![0.0f32; n];
+    let comps: Vec<(&str, Box<dyn Compressor>)> = vec![
+        ("logquant", Box::new(LogQuant::new(2))),
+        ("terngrad", Box::new(TernGrad)),
+        ("blockwise", Box::new(Blockwise::new(16))),
+        ("wquant", Box::new(WQuant::new(6))),
+        ("qsgd", Box::new(Qsgd::new(4))),
+        ("identity", Box::new(Identity)),
+    ];
+    comps
+        .iter()
+        .map(|(name, c)| {
+            let msg = c.compress_into(&u, &mut q, &mut seeded_rng(1, 1));
+            (name.to_string(), msg.to_bytes())
+        })
+        .collect()
+}
+
+#[test]
+fn truncated_frames_error_at_every_prefix_length() {
+    for (name, frame) in sample_frames() {
+        // round-trip sanity first
+        let msg = WireMsg::from_bytes(&frame).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(msg.to_bytes(), frame, "{name}: canonical round-trip");
+        for cut in 0..frame.len() {
+            assert!(
+                WireMsg::from_bytes(&frame[..cut]).is_err(),
+                "{name}: prefix of {cut}/{} bytes must be rejected",
+                frame.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn extended_frames_are_rejected() {
+    for (name, frame) in sample_frames() {
+        for extra in [1usize, 4, 64] {
+            let mut long = frame.clone();
+            let want = long.len() + extra;
+            long.resize(want, 0xAB);
+            assert!(
+                WireMsg::from_bytes(&long).is_err(),
+                "{name}: {extra} trailing bytes must be rejected"
+            );
+        }
+    }
+}
+
+/// Flip bytes across the whole header of every sample frame: the
+/// parser must never panic, and anything it *accepts* must decode
+/// without panicking (in-bounds words/scales by construction).
+#[test]
+fn corrupted_headers_never_panic_and_accepted_frames_stay_decodable() {
+    for (_name, frame) in sample_frames() {
+        for i in 0..22.min(frame.len()) {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut b = frame.clone();
+                b[i] ^= flip;
+                // parse may accept (payload-equivalent headers exist);
+                // the property is: no panic here, and no panic decoding
+                // whatever was accepted.
+                if let Ok(msg) = WireMsg::from_bytes(&b) {
+                    let mut out = vec![0.0f32; msg.n];
+                    decode_msg(&msg, &mut out);
+                    std::hint::black_box(&out);
+                }
+            }
+        }
+    }
+}
+
+/// Hostile `Packed` shapes — inflated or deflated word counts and
+/// element counts that disagree with the codec layout — are rejected
+/// at the wire boundary (this is what lets the decode kernels trust
+/// `Packed::words` unconditionally).
+#[test]
+fn inconsistent_layout_counts_are_rejected() {
+    let n = 100usize;
+    let mut q = vec![0.0f32; n];
+    let u: Vec<f32> = (0..n).map(|i| 0.01 * (i as f32).sin()).collect();
+    let msg = LogQuant::new(2).compress_into(&u, &mut q, &mut seeded_rng(0, 0));
+    let good = msg.to_bytes();
+    let set_u32 = |b: &mut Vec<u8>, off: usize, v: u32| {
+        b[off..off + 4].copy_from_slice(&v.to_le_bytes());
+    };
+    // nwords inflated: self-consistent length, wrong for the codec
+    let mut b = good.clone();
+    set_u32(&mut b, 14, 20);
+    b.resize(22 + 4 + 20 * 8, 0);
+    assert!(WireMsg::from_bytes(&b).is_err(), "inflated nwords must be rejected");
+    // nwords deflated
+    let mut b = good.clone();
+    set_u32(&mut b, 14, 1);
+    b.truncate(22 + 4 + 8);
+    assert!(WireMsg::from_bytes(&b).is_err(), "deflated nwords must be rejected");
+    // n inflated without matching words
+    let mut b = good.clone();
+    set_u32(&mut b, 6, 100_000);
+    assert!(WireMsg::from_bytes(&b).is_err(), "inflated n must be rejected");
+    // out-of-domain codec params
+    let mut b = good.clone();
+    set_u32(&mut b, 2, 10_000); // kg way past MAX_KG
+    assert!(WireMsg::from_bytes(&b).is_err(), "out-of-range kg must be rejected");
+    let mut b = good.clone();
+    b[0] = 99; // unknown codec id
+    assert!(WireMsg::from_bytes(&b).is_err(), "unknown codec must be rejected");
+}

@@ -354,7 +354,13 @@ fn snapshot(srv: &ShardedServer, ws: &[Worker]) -> Checkpoint {
         server,
         workers: ws
             .iter()
-            .map(|w| w.opt_state().map(|(m, v, e)| WorkerState { m, v, e }))
+            .map(|w| {
+                w.opt_state().map(|(m, v, e)| WorkerState {
+                    m: m.to_vec(),
+                    v: v.to_vec(),
+                    e: e.to_vec(),
+                })
+            })
             .collect(),
     }
 }

@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Bench-trajectory gate: run the hot-path benches fresh and compare
+# them against the committed baselines (BENCH_quant_micro.json,
+# BENCH_worker_step.json) with `qadam bench-diff`. A fresh median more
+# than THRESHOLD percent slower than its baseline fails the script.
+#
+#   scripts/bench_diff.sh                 # full-size run, compare both
+#   scripts/bench_diff.sh --refresh       # overwrite the baselines with
+#                                         # this machine's numbers
+#   scripts/bench_diff.sh --quick         # CI smoke sizes (seconds);
+#                                         # quick entry names differ from
+#                                         # full-size ones, so against
+#                                         # full baselines this mostly
+#                                         # exercises the plumbing
+#   scripts/bench_diff.sh --threshold 40  # loosen the gate
+#
+# Baselines whose medians are null (the committed placeholders) are
+# reported as unmeasured and never fail — run `--refresh` (full size,
+# quiet machine) once to pin real numbers, then commit the JSONs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+REFRESH=0
+QUICK=0
+THRESHOLD=25
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --refresh) REFRESH=1 ;;
+        --quick) QUICK=1 ;;
+        --threshold) THRESHOLD="$2"; shift ;;
+        *) echo "unknown flag: $1" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+QUANT_FLAGS=()
+WORKER_FLAGS=(--skip-pjrt)
+if [ "$QUICK" = 1 ]; then
+    QUANT_FLAGS=(--sizes 4096 --target-ms 20)
+    WORKER_FLAGS=(--dim 4096 --workers 1,2 --step-dims 4096 --target-ms 20
+                  --downlink-rounds 4 --skip-pjrt)
+fi
+
+FRESH_Q=/tmp/BENCH_quant_micro.fresh.json
+FRESH_W=/tmp/BENCH_worker_step.fresh.json
+
+cargo build --release --quiet
+cargo bench --bench quant_micro -- "${QUANT_FLAGS[@]+"${QUANT_FLAGS[@]}"}" --json "$FRESH_Q"
+cargo bench --bench worker_step -- "${WORKER_FLAGS[@]}" --json "$FRESH_W"
+
+if [ "$REFRESH" = 1 ]; then
+    if [ "$QUICK" = 1 ]; then
+        echo "refusing --refresh --quick: baselines must be full-size runs" >&2
+        exit 2
+    fi
+    cp "$FRESH_Q" BENCH_quant_micro.json
+    cp "$FRESH_W" BENCH_worker_step.json
+    echo "baselines refreshed — commit BENCH_quant_micro.json BENCH_worker_step.json"
+    exit 0
+fi
+
+target/release/qadam bench-diff --baseline BENCH_quant_micro.json \
+    --fresh "$FRESH_Q" --threshold "$THRESHOLD"
+target/release/qadam bench-diff --baseline BENCH_worker_step.json \
+    --fresh "$FRESH_W" --threshold "$THRESHOLD"
+echo "bench-diff OK"

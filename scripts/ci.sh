@@ -65,6 +65,26 @@ cargo bench --bench shard_scaling -- --rounds 1 --dim 4096 --workers 2 --shards 
     --json /tmp/BENCH_shard_scaling_smoke.json
 grep -q '"bench": "shard_scaling"' /tmp/BENCH_shard_scaling_smoke.json
 
+# Hot-path bench trajectory, smoke-sized: both emitters run at tiny
+# sizes, the fresh quant_micro JSON is self-compared through `qadam
+# bench-diff` (the regression math must hold at 0% diff), and the
+# committed BENCH_*.json baselines must stay parseable (null medians
+# are legal placeholders). The full-size gate is scripts/bench_diff.sh.
+step "bench smoke: quant_micro + worker_step + bench-diff"
+cargo bench --bench quant_micro -- --sizes 4096 --target-ms 20 \
+    --json /tmp/BENCH_quant_micro_smoke.json
+grep -q '"bench": "quant_micro"' /tmp/BENCH_quant_micro_smoke.json
+cargo bench --bench worker_step -- --dim 4096 --workers 1,2 --step-dims 4096 \
+    --target-ms 20 --downlink-rounds 4 --skip-pjrt \
+    --json /tmp/BENCH_worker_step_smoke.json
+grep -q '"bench": "worker_step"' /tmp/BENCH_worker_step_smoke.json
+target/release/qadam bench-diff --baseline /tmp/BENCH_quant_micro_smoke.json \
+    --fresh /tmp/BENCH_quant_micro_smoke.json
+target/release/qadam bench-diff --baseline BENCH_quant_micro.json \
+    --fresh /tmp/BENCH_quant_micro_smoke.json
+target/release/qadam bench-diff --baseline BENCH_worker_step.json \
+    --fresh /tmp/BENCH_worker_step_smoke.json
+
 # Binary-compatibility probe: `qadam info` must print its capability
 # JSON (wire version, frame tags, codecs, shard conventions) without
 # needing artifacts.
