@@ -1,0 +1,434 @@
+//! The invariant rules behind `qadam lint` (see `DESIGN.md` §Static
+//! analysis & invariants for the registry rationale).
+//!
+//! Per-file rules run over one sanitized source ([`check_file`]);
+//! INV-WIRE is cross-file ([`check_wire`]). Every rule honors
+//! `// lint: allow(RULE) reason` waivers — a waiver without a reason is
+//! itself a finding, and honored waivers are reported so `qadam lint`
+//! output always shows what was excused and why.
+
+use super::scanner::{self, Allowance, Line};
+
+pub const INV_ALLOC: &str = "INV-ALLOC";
+pub const INV_DET: &str = "INV-DET";
+pub const INV_PANIC: &str = "INV-PANIC";
+pub const INV_SAFETY: &str = "INV-SAFETY";
+pub const INV_WIRE: &str = "INV-WIRE";
+
+/// Calls that allocate — banned inside `// qadam: hotpath` functions.
+/// The zero-steady-state-allocation contract these protect is asserted
+/// dynamically by `rust/tests/alloc_regression.rs`; the lint catches it
+/// at the source level, on every path.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    ".to_vec()",
+    ".clone()",
+    "format!",
+    "Box::new",
+    "String::new",
+    "String::from",
+    ".to_string()",
+    ".to_owned()",
+    "with_capacity",
+    ".collect()",
+];
+
+/// Panicking calls — banned in wire/checkpoint decode functions (any
+/// `fn` whose name contains `from_bytes`, plus `// qadam: decode`
+/// annotations). Direct indexing is detected structurally on top.
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// Nondeterminism sources — banned in the decision paths of `ps/`,
+/// `quant/` and `elastic/`, where order- or time-dependence silently
+/// breaks the fixed-seed bit-parity suites (`shard_parity`,
+/// `policy_parity`). Substring tokens.
+const DET_CALL_TOKENS: &[&str] = &["Instant::now", "SystemTime::now", "thread_rng", "rand::"];
+
+/// Hash-order containers (whole-word): iteration order varies run to
+/// run, so any traversal that reaches output or wire bytes breaks
+/// reproducibility. Use `BTreeMap`/`BTreeSet` instead.
+const DET_TYPE_TOKENS: &[&str] = &["HashMap", "HashSet"];
+
+/// Directories whose sources are in INV-DET scope.
+fn det_scope(path: &str) -> bool {
+    path.contains("src/ps/") || path.contains("src/quant/") || path.contains("src/elastic/")
+}
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-relative path, `/`-separated.
+    pub path: String,
+    /// 1-based line (0 = file/crate-level finding).
+    pub line: usize,
+    pub msg: String,
+}
+
+/// One honored `// lint: allow(...)` waiver.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub reason: String,
+}
+
+/// Everything one file contributes to a lint run.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+    /// Non-test `unsafe` sites (counted against the crate budget).
+    pub unsafe_count: usize,
+}
+
+impl FileReport {
+    fn emit(&mut self, lines: &[Line], rule: &'static str, path: &str, li: usize, msg: String) {
+        match scanner::allowance(lines, li, rule) {
+            Allowance::Justified(reason) => {
+                self.waivers.push(Waiver { rule, path: path.to_string(), line: li + 1, reason });
+            }
+            Allowance::Unjustified => self.findings.push(Finding {
+                rule,
+                path: path.to_string(),
+                line: li + 1,
+                msg: format!(
+                    "{msg} — and the waiver comment has no justification \
+                     (add a reason after `lint: allow({rule})`)"
+                ),
+            }),
+            Allowance::None => {
+                self.findings.push(Finding { rule, path: path.to_string(), line: li + 1, msg });
+            }
+        }
+    }
+}
+
+/// Run every per-file rule over one source. `path` is the repo-relative
+/// path (it selects INV-DET scope); `text` is the raw source.
+pub fn check_file(path: &str, text: &str) -> FileReport {
+    let lines = scanner::sanitize(text);
+    let tests = scanner::test_lines(&lines);
+    let spans = scanner::fn_spans(&lines);
+    let mut rep = FileReport::default();
+
+    // INV-ALLOC: hotpath functions must not allocate.
+    for sp in spans.iter().filter(|s| s.hotpath) {
+        for li in sp.start..=sp.end {
+            if tests[li] {
+                continue;
+            }
+            for tok in ALLOC_TOKENS {
+                if lines[li].code.contains(tok) {
+                    rep.emit(
+                        &lines,
+                        INV_ALLOC,
+                        path,
+                        li,
+                        format!("`{tok}` allocates inside hot function `{}`", sp.name),
+                    );
+                }
+            }
+        }
+    }
+
+    // INV-PANIC: decode functions must be total.
+    for sp in spans.iter().filter(|s| s.decode || s.name.contains("from_bytes")) {
+        for li in sp.start..=sp.end {
+            if tests[li] {
+                continue;
+            }
+            for tok in PANIC_TOKENS {
+                if lines[li].code.contains(tok) {
+                    rep.emit(
+                        &lines,
+                        INV_PANIC,
+                        path,
+                        li,
+                        format!("`{tok}` can panic inside decode function `{}`", sp.name),
+                    );
+                }
+            }
+            if scanner::has_index_expr(&lines[li].code) {
+                rep.emit(
+                    &lines,
+                    INV_PANIC,
+                    path,
+                    li,
+                    format!(
+                        "direct indexing inside decode function `{}` (use util::bytes / `.get()`)",
+                        sp.name
+                    ),
+                );
+            }
+        }
+    }
+
+    // INV-DET: no nondeterminism sources in decision-path modules.
+    if det_scope(path) {
+        for (li, line) in lines.iter().enumerate() {
+            if tests[li] {
+                continue;
+            }
+            for tok in DET_CALL_TOKENS {
+                if line.code.contains(tok) {
+                    rep.emit(
+                        &lines,
+                        INV_DET,
+                        path,
+                        li,
+                        format!("`{tok}` is nondeterministic in a bit-parity decision path"),
+                    );
+                }
+            }
+            for tok in DET_TYPE_TOKENS {
+                if scanner::has_word(&line.code, tok) {
+                    rep.emit(
+                        &lines,
+                        INV_DET,
+                        path,
+                        li,
+                        format!("`{tok}` iteration order is nondeterministic (use BTree{})",
+                            tok.trim_start_matches("Hash")),
+                    );
+                }
+            }
+        }
+    }
+
+    // INV-SAFETY: every unsafe site carries a SAFETY justification.
+    for (li, line) in lines.iter().enumerate() {
+        if tests[li] || !scanner::has_word(&line.code, "unsafe") {
+            continue;
+        }
+        rep.unsafe_count += 1;
+        if !safety_documented(&lines, li) {
+            rep.emit(
+                &lines,
+                INV_SAFETY,
+                path,
+                li,
+                "`unsafe` without a `// SAFETY:` justification".to_string(),
+            );
+        }
+    }
+
+    rep.findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    rep
+}
+
+/// Is there a `SAFETY:` comment on this line or the contiguous run of
+/// comment / attribute / further-`unsafe` lines directly above it?
+/// (Stacked `unsafe impl Send`/`Sync` pairs share one block.)
+fn safety_documented(lines: &[Line], li: usize) -> bool {
+    if lines[li].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = li;
+    let mut budget = 40usize;
+    while j > 0 && budget > 0 {
+        j -= 1;
+        budget -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        let comment_only = code.is_empty() && !l.comment.trim().is_empty();
+        let carries = comment_only || code.starts_with("#[") || scanner::has_word(code, "unsafe");
+        if !carries {
+            return false;
+        }
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// INV-WIRE, the cross-file rule: every `pub const NAME: u8` in
+/// `ps/protocol.rs`'s `tag` module must appear (as code, not prose) in
+/// both the golden-fixture suite and the `qadam info` capability JSON
+/// emitter. A new frame kind therefore cannot ship without a
+/// byte-pinned fixture and operator visibility.
+pub fn check_wire(protocol: &str, golden: &str, info: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let tags = tag_constants(protocol);
+    if tags.is_empty() {
+        out.push(Finding {
+            rule: INV_WIRE,
+            path: "rust/src/ps/protocol.rs".to_string(),
+            line: 0,
+            msg: "no `pub const NAME: u8` frame tags found in the `tag` module".to_string(),
+        });
+        return out;
+    }
+    let golden_code = code_of(golden);
+    let info_code = code_of(info);
+    for (name, line) in tags {
+        if !scanner::has_word(&golden_code, &name) {
+            out.push(Finding {
+                rule: INV_WIRE,
+                path: "rust/src/ps/protocol.rs".to_string(),
+                line,
+                msg: format!("frame tag `{name}` is not pinned in rust/tests/wire_golden.rs"),
+            });
+        }
+        if !scanner::has_word(&info_code, &name) {
+            out.push(Finding {
+                rule: INV_WIRE,
+                path: "rust/src/ps/protocol.rs".to_string(),
+                line,
+                msg: format!(
+                    "frame tag `{name}` is not surfaced by the `qadam info` capability JSON"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// The sanitized code of a whole source (comments/literals blanked).
+fn code_of(text: &str) -> String {
+    let lines = scanner::sanitize(text);
+    let mut out = String::new();
+    for l in &lines {
+        out.push_str(&l.code);
+        out.push('\n');
+    }
+    out
+}
+
+/// `(name, 1-based line)` of every `pub const NAME: u8` inside the
+/// `tag` module of the protocol source.
+fn tag_constants(protocol: &str) -> Vec<(String, usize)> {
+    let lines = scanner::sanitize(protocol);
+    let mut out = Vec::new();
+    let mut inside = false;
+    let mut depth = 0i32;
+    for (i, l) in lines.iter().enumerate() {
+        if !inside {
+            if scanner::has_word(&l.code, "mod") && scanner::has_word(&l.code, "tag") {
+                inside = true;
+            } else {
+                continue;
+            }
+        }
+        for c in l.code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        let t = l.code.trim();
+        if let Some(rest) = t.strip_prefix("pub const ") {
+            if let Some((name, tail)) = rest.split_once(':') {
+                if tail.trim_start().starts_with("u8") {
+                    out.push((name.trim().to_string(), i + 1));
+                }
+            }
+        }
+        if depth <= 0 && l.code.contains('}') {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_rule_fires_only_in_hot_spans() {
+        let src = "\
+// qadam: hotpath
+fn hot(out: &mut [f32]) {
+    let v = out.to_vec();
+    out.copy_from_slice(&v);
+}
+
+fn cold() -> Vec<f32> {
+    Vec::new()
+}
+";
+        let rep = check_file("rust/src/quant/x.rs", src);
+        assert_eq!(rep.findings.len(), 1, "{:?}", rep.findings);
+        assert_eq!(rep.findings[0].rule, INV_ALLOC);
+        assert_eq!(rep.findings[0].line, 3);
+    }
+
+    #[test]
+    fn panic_rule_catches_named_and_annotated_decoders() {
+        let src = "\
+pub fn thing_from_bytes(b: &[u8]) -> u8 {
+    b[0]
+}
+
+// qadam: decode
+pub fn load(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b.get(0..4).map(|s| s.try_into().unwrap()).unwrap_or([0; 4]))
+}
+";
+        let rep = check_file("rust/src/ps/x.rs", src);
+        let rules: Vec<_> = rep.findings.iter().map(|f| (f.rule, f.line)).collect();
+        assert!(rules.contains(&(INV_PANIC, 2)), "{rules:?}");
+        assert!(rules.contains(&(INV_PANIC, 7)), "{rules:?}");
+    }
+
+    #[test]
+    fn det_rule_is_scoped_and_waivable() {
+        let src = "\
+use std::time::Instant;
+pub fn f() -> std::time::Instant {
+    // lint: allow(INV-DET) deadline is wall-clock by design
+    Instant::now()
+}
+";
+        let in_scope = check_file("rust/src/ps/x.rs", src);
+        assert!(in_scope.findings.is_empty(), "{:?}", in_scope.findings);
+        assert_eq!(in_scope.waivers.len(), 1);
+        let out_of_scope = check_file("rust/src/util/x.rs", src);
+        assert!(out_of_scope.findings.is_empty() && out_of_scope.waivers.is_empty());
+    }
+
+    #[test]
+    fn safety_rule_counts_and_requires_justification() {
+        let documented = "\
+// SAFETY: all access serializes on LOCK.
+unsafe impl Send for X {}
+unsafe impl Sync for X {}
+";
+        let rep = check_file("rust/src/runtime/x.rs", documented);
+        assert_eq!(rep.unsafe_count, 2);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        let bare = "unsafe impl Send for X {}\n";
+        let rep = check_file("rust/src/runtime/x.rs", bare);
+        assert_eq!(rep.unsafe_count, 1);
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, INV_SAFETY);
+    }
+
+    #[test]
+    fn wire_rule_checks_both_sides() {
+        let protocol = "\
+pub mod tag {
+    pub const TO_WORKER_SHUTDOWN: u8 = 0;
+    pub const TO_WORKER_WEIGHTS: u8 = 1;
+}
+pub const WIRE_VERSION: u32 = 2;
+";
+        let both = "TO_WORKER_SHUTDOWN TO_WORKER_WEIGHTS";
+        assert!(check_wire(protocol, both, both).is_empty());
+        let missing = check_wire(protocol, "TO_WORKER_SHUTDOWN", both);
+        assert_eq!(missing.len(), 1);
+        assert!(missing[0].msg.contains("TO_WORKER_WEIGHTS"));
+        assert!(missing[0].msg.contains("wire_golden"));
+        // prose/comment mentions do not count
+        let prose = "// TO_WORKER_SHUTDOWN TO_WORKER_WEIGHTS";
+        assert_eq!(check_wire(protocol, prose, both).len(), 2);
+        // an empty tag module is itself a finding
+        assert_eq!(check_wire("fn nothing() {}", both, both).len(), 1);
+    }
+}

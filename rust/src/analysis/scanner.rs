@@ -1,0 +1,531 @@
+//! Text-level Rust source scanner behind `qadam lint`.
+//!
+//! Deliberately dependency-free (no `syn`, no proc-macro machinery —
+//! this crate builds offline against only `xla` + `anyhow`): the
+//! scanner strips string/char literals and comments with a small state
+//! machine, then recognizes just enough structure — function spans by
+//! brace matching, `#[cfg(test)] mod` spans, annotation and waiver
+//! comments — for the rules in [`super::rules`] to match tokens without
+//! false positives from literals or prose.
+//!
+//! Precision contract: token matching runs over [`Line::code`] (string
+//! and comment contents blanked), so `"Instant::now"` inside a string
+//! or a doc comment never fires; annotations and waivers are read from
+//! [`Line::comment`], so code can never fake one.
+
+/// One source line after sanitization.
+#[derive(Debug, Default)]
+pub struct Line {
+    /// Code with comments removed and string/char-literal *contents*
+    /// blanked (delimiters kept, so expression shape survives).
+    pub code: String,
+    /// Comment text on this line (line, block and doc comments alike).
+    pub comment: String,
+}
+
+/// Split `text` into sanitized lines. Handles nested block comments,
+/// string/raw-string/byte-string literals (including multi-line ones),
+/// char literals and lifetimes.
+pub fn sanitize(text: &str) -> Vec<Line> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Mode {
+        Code,
+        /// Inside `/* ... */`, with nesting depth.
+        Block(u32),
+        /// Inside a `"..."` (or `b"..."`) literal.
+        Str,
+        /// Inside a raw string, with the closing `#` count.
+        RawStr(usize),
+    }
+    let mut mode = Mode::Code;
+    let mut lines = Vec::new();
+    for raw in text.split('\n') {
+        let cs: Vec<char> = raw.chars().collect();
+        let mut line = Line::default();
+        let mut i = 0usize;
+        while i < cs.len() {
+            match mode {
+                Mode::Block(depth) => {
+                    if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                        mode = if depth <= 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                        i += 2;
+                    } else if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        line.comment.push(cs[i]);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if cs[i] == '\\' {
+                        i += 2; // skip the escaped char (may end the line)
+                    } else if cs[i] == '"' {
+                        line.code.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    let closes = cs[i] == '"'
+                        && (1..=hashes).all(|k| cs.get(i + k) == Some(&'#'));
+                    if closes {
+                        line.code.push('"');
+                        mode = Mode::Code;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = cs[i];
+                    let prev_ident = line
+                        .code
+                        .chars()
+                        .next_back()
+                        .is_some_and(|p| p.is_alphanumeric() || p == '_');
+                    if c == '/' && cs.get(i + 1) == Some(&'/') {
+                        // line comment: the rest of the line, sans the
+                        // leading slashes / doc-comment markers
+                        let rest: String = cs[i..].iter().collect();
+                        line.comment.push_str(
+                            rest.trim_start_matches('/').trim_start_matches('!'),
+                        );
+                        break;
+                    } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        line.code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == 'r' && !prev_ident && is_raw_str_start(&cs, i + 1) {
+                        let hashes = count_hashes(&cs, i + 1);
+                        line.code.push('"');
+                        mode = Mode::RawStr(hashes);
+                        i += 2 + hashes; // r, #*, "
+                    } else if c == 'b' && !prev_ident && cs.get(i + 1) == Some(&'"') {
+                        line.code.push('"');
+                        mode = Mode::Str;
+                        i += 2;
+                    } else if c == 'b' && !prev_ident && cs.get(i + 1) == Some(&'r')
+                        && is_raw_str_start(&cs, i + 2)
+                    {
+                        let hashes = count_hashes(&cs, i + 2);
+                        line.code.push('"');
+                        mode = Mode::RawStr(hashes);
+                        i += 3 + hashes;
+                    } else if c == 'b' && !prev_ident && cs.get(i + 1) == Some(&'\'') {
+                        i += 1; // byte-char literal: fall through to '\''
+                    } else if c == '\'' {
+                        if cs.get(i + 1) == Some(&'\\') {
+                            // escaped char literal: skip to the closing quote
+                            let mut j = i + 3;
+                            while j < cs.len() && cs[j] != '\'' {
+                                j += 1;
+                            }
+                            i = j + 1;
+                        } else if cs.get(i + 2) == Some(&'\'') {
+                            i += 3; // plain char literal 'x'
+                        } else {
+                            line.code.push('\''); // a lifetime
+                            i += 1;
+                        }
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        lines.push(line);
+    }
+    lines
+}
+
+/// Is `cs[at..]` the `#*"` tail of a raw-string opener?
+fn is_raw_str_start(cs: &[char], at: usize) -> bool {
+    let hashes = count_hashes(cs, at);
+    cs.get(at + hashes) == Some(&'"')
+}
+
+fn count_hashes(cs: &[char], at: usize) -> usize {
+    cs[at.min(cs.len())..].iter().take_while(|&&c| c == '#').count()
+}
+
+/// Does `s` contain `word` with non-identifier characters (or edges) on
+/// both sides?
+pub fn has_word(s: &str, word: &str) -> bool {
+    let bytes = s.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut from = 0usize;
+    while let Some(pos) = s.get(from..).and_then(|t| t.find(word)) {
+        let at = from + pos;
+        let end = at + word.len();
+        let left_ok = at == 0 || !bytes.get(at - 1).copied().is_some_and(is_ident);
+        let right_ok = !bytes.get(end).copied().is_some_and(is_ident);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// Does the sanitized code contain an *index expression* (`expr[...]`)?
+/// A `[` counts when the previous non-space character ends an
+/// expression — an identifier (that is not a keyword), `)` or `]`.
+/// Attributes (`#[...]`), array/slice types (`[u8; 4]`, `&[f32]`),
+/// array literals and slice patterns all miss that test.
+pub fn has_index_expr(code: &str) -> bool {
+    const KEYWORDS: &[&str] = &[
+        "mut", "in", "return", "if", "else", "match", "ref", "move", "as", "dyn", "impl",
+        "where", "for", "while", "let", "const", "static", "box", "break", "loop",
+    ];
+    let cs: Vec<char> = code.chars().collect();
+    for (i, &c) in cs.iter().enumerate() {
+        if c != '[' {
+            continue;
+        }
+        let mut j = i;
+        let mut prev = None;
+        while j > 0 {
+            j -= 1;
+            if cs[j] != ' ' {
+                prev = Some((j, cs[j]));
+                break;
+            }
+        }
+        let (at, p) = match prev {
+            Some(v) => v,
+            None => continue,
+        };
+        if p == ')' || p == ']' {
+            return true;
+        }
+        if p.is_alphanumeric() || p == '_' {
+            // walk the identifier back; keywords are not expressions
+            let mut s = at;
+            while s > 0 && (cs[s - 1].is_alphanumeric() || cs[s - 1] == '_') {
+                s -= 1;
+            }
+            let ident: String = cs[s..=at].iter().collect();
+            if !KEYWORDS.contains(&ident.as_str()) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// One function's span in a sanitized file.
+#[derive(Debug)]
+pub struct FnSpan {
+    pub name: String,
+    /// Line of the `fn` keyword (0-based).
+    pub start: usize,
+    /// Last body line, inclusive (== `start` for bodyless trait decls).
+    pub end: usize,
+    /// Preceded by a `// qadam: hotpath` annotation.
+    pub hotpath: bool,
+    /// Preceded by a `// qadam: decode` annotation.
+    pub decode: bool,
+}
+
+/// Find every `fn` item and its body span. Annotation comments
+/// (`// qadam: hotpath`, `// qadam: decode`) bind to the next `fn`,
+/// surviving only blank, comment-only and attribute lines in between.
+pub fn fn_spans(lines: &[Line]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    let mut pending_hot = false;
+    let mut pending_decode = false;
+    for (idx, line) in lines.iter().enumerate() {
+        if line.comment.contains("qadam: hotpath") {
+            pending_hot = true;
+        }
+        if line.comment.contains("qadam: decode") {
+            pending_decode = true;
+        }
+        let trimmed = line.code.trim();
+        let decl = has_word(&line.code, "fn").then(|| fn_name(&line.code));
+        match decl {
+            Some(Some((name, after))) => {
+                let end = item_end(lines, idx, after);
+                spans.push(FnSpan {
+                    name,
+                    start: idx,
+                    end,
+                    hotpath: pending_hot,
+                    decode: pending_decode,
+                });
+                pending_hot = false;
+                pending_decode = false;
+            }
+            _ => {
+                // any other real code line breaks the annotation chain
+                if !trimmed.is_empty() && !trimmed.starts_with("#[") && !trimmed.starts_with("#!") {
+                    pending_hot = false;
+                    pending_decode = false;
+                }
+            }
+        }
+    }
+    spans
+}
+
+/// Parse `fn <name>` out of a sanitized code line; returns the name and
+/// the char offset just past it. `None` for `fn` pointer types and the
+/// like (no identifier follows).
+fn fn_name(code: &str) -> Option<(String, usize)> {
+    let cs: Vec<char> = code.chars().collect();
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut i = 0usize;
+    while i + 2 <= cs.len() {
+        let word_here = cs[i] == 'f'
+            && cs.get(i + 1) == Some(&'n')
+            && (i == 0 || !is_ident(cs[i - 1]))
+            && !cs.get(i + 2).copied().is_some_and(is_ident);
+        if !word_here {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while cs.get(j) == Some(&' ') {
+            j += 1;
+        }
+        let start = j;
+        while cs.get(j).copied().is_some_and(is_ident) {
+            j += 1;
+        }
+        if j > start {
+            return Some((cs[start..j].iter().collect(), j));
+        }
+        i += 2;
+    }
+    None
+}
+
+/// Walk from `(start_line, start_char)` to the end of the item: the
+/// first top-level `;` (bodyless declaration) ends it on that line; a
+/// `{` opens the body, which ends where braces balance. `;` inside
+/// `()`/`[]`/`<>`-free bracket nesting (e.g. `-> [u8; 4]`) is not a
+/// terminator.
+fn item_end(lines: &[Line], start_line: usize, start_char: usize) -> usize {
+    let mut depth = 0i32; // ( and [
+    let mut braces = 0i32;
+    let mut in_body = false;
+    let mut first = start_char;
+    for (li, line) in lines.iter().enumerate().skip(start_line) {
+        for c in line.code.chars().skip(if li == start_line { first } else { 0 }) {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                ';' if !in_body && depth <= 0 => return li,
+                '{' => {
+                    in_body = true;
+                    braces += 1;
+                }
+                '}' if in_body => {
+                    braces -= 1;
+                    if braces == 0 {
+                        return li;
+                    }
+                }
+                _ => {}
+            }
+        }
+        first = 0;
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// Mark every line inside a `#[cfg(test)] mod … { … }` span. Rules skip
+/// these: tests legitimately `unwrap()`, allocate and index.
+pub fn test_lines(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if lines[i].code.contains("#[cfg(test)]") {
+            // find the gated item (skip further attributes/blank lines)
+            let mut j = i + 1;
+            while j < lines.len() {
+                let t = lines[j].code.trim();
+                if t.is_empty() || t.starts_with("#[") {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            if j < lines.len() && has_word(&lines[j].code, "mod") {
+                let end = item_end(lines, j, 0);
+                for m in mask.iter_mut().take(end + 1).skip(i) {
+                    *m = true;
+                }
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// The outcome of looking for a `// lint: allow(RULE) reason` waiver
+/// covering a finding.
+#[derive(Debug, PartialEq)]
+pub enum Allowance {
+    /// No waiver — report the finding.
+    None,
+    /// Waived, with a non-empty justification.
+    Justified(String),
+    /// A waiver comment with no justification — itself a violation.
+    Unjustified,
+}
+
+/// Look for a waiver of `rule` at `line`: its own comment, or the
+/// contiguous run of comment-only lines directly above it.
+pub fn allowance(lines: &[Line], line: usize, rule: &str) -> Allowance {
+    let needle = format!("lint: allow({rule})");
+    let mut best = Allowance::None;
+    let mut check = |l: &Line| {
+        if let Some(pos) = l.comment.find(&needle) {
+            let reason = l.comment[pos + needle.len()..].trim();
+            if reason.is_empty() {
+                if best == Allowance::None {
+                    best = Allowance::Unjustified;
+                }
+            } else {
+                best = Allowance::Justified(reason.to_string());
+            }
+        }
+    };
+    if let Some(l) = lines.get(line) {
+        check(l);
+    }
+    let mut j = line;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if !l.code.trim().is_empty() {
+            break; // a code line ends the comment run
+        }
+        if l.comment.trim().is_empty() {
+            break; // so does a fully blank line
+        }
+        check(l);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let x = \"Instant::now()\"; // Instant::now in prose\nlet y = 1;";
+        let lines = sanitize(src);
+        assert!(!lines[0].code.contains("Instant::now"));
+        assert!(lines[0].comment.contains("Instant::now in prose"));
+        assert_eq!(lines[1].code, "let y = 1;");
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let src = "let a = r#\"unwrap() . b[0]\"#; let b = b\"x[1]\"; let c = 'x';";
+        let lines = sanitize(src);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(!has_index_expr(&lines[0].code), "{}", lines[0].code);
+    }
+
+    #[test]
+    fn multiline_strings_and_block_comments() {
+        let src = "let s = \"line one\n .unwrap() two\";\n/* block\n.unwrap()\n*/ let t = 3;";
+        let lines = sanitize(src);
+        assert!(lines.iter().all(|l| !l.code.contains(".unwrap()")));
+        assert_eq!(lines[4].code.trim(), "let t = 3;");
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literal_handling() {
+        let lines = sanitize("fn f<'a>(x: &'a [u8]) -> char { '\\'' }");
+        assert!(lines[0].code.contains("<'a>"));
+        assert!(!lines[0].code.contains("\\'"));
+    }
+
+    #[test]
+    fn word_matching_respects_boundaries() {
+        assert!(has_word("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_word("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(has_word("unsafe impl Send for X {}", "unsafe"));
+    }
+
+    #[test]
+    fn index_detection() {
+        assert!(has_index_expr("let x = b[0];"));
+        assert!(has_index_expr("let y = words[i + 1];"));
+        assert!(has_index_expr("f(a)[2]"));
+        assert!(!has_index_expr("#[cfg(test)]"));
+        assert!(!has_index_expr("let a: [u8; 4] = [0u8; 4];"));
+        assert!(!has_index_expr("fn f(x: &mut [f32]) -> [u8; 4] {"));
+        assert!(!has_index_expr("for v in [1, 2, 3] {"));
+        assert!(!has_index_expr("let [a, b] = pair;"));
+    }
+
+    #[test]
+    fn fn_spans_with_annotations() {
+        let src = "\
+// qadam: hotpath
+fn hot(x: &mut [f32]) {
+    x.fill(0.0);
+}
+
+fn cold() -> Vec<u8> {
+    Vec::new()
+}
+
+// qadam: decode
+#[inline]
+fn parse_from_bytes(b: &[u8]) -> Option<u8> {
+    b.first().copied()
+}
+";
+        let spans = fn_spans(&sanitize(src));
+        assert_eq!(spans.len(), 3);
+        assert!(spans[0].hotpath && !spans[0].decode);
+        assert_eq!((spans[0].name.as_str(), spans[0].start, spans[0].end), ("hot", 1, 3));
+        assert!(!spans[1].hotpath);
+        assert_eq!(spans[1].name, "cold");
+        assert!(spans[2].decode, "annotation must survive an attribute line");
+        assert_eq!(spans[2].name, "parse_from_bytes");
+    }
+
+    #[test]
+    fn bodyless_and_array_return_spans() {
+        let src = "trait T {\n    fn decl(&self) -> usize;\n    fn arr(&self) -> [u8; 4] {\n        [0; 4]\n    }\n}";
+        let spans = fn_spans(&sanitize(src));
+        assert_eq!(spans.len(), 2);
+        assert_eq!((spans[0].start, spans[0].end), (1, 1), "decl ends at its `;`");
+        assert_eq!((spans[1].start, spans[1].end), (2, 4), "`;` inside [u8; 4] is not an end");
+    }
+
+    #[test]
+    fn cfg_test_mod_is_masked() {
+        let src = "fn real() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x[0]; }\n}";
+        let lines = sanitize(src);
+        let mask = test_lines(&lines);
+        assert_eq!(mask, vec![false, false, true, true, true, true, true]);
+    }
+
+    #[test]
+    fn allowance_forms() {
+        let lines = sanitize(
+            "// lint: allow(INV-DET) deadline is wall-clock by design\nlet t = Instant::now();\n\n// lint: allow(INV-DET)\nlet u = Instant::now();\nlet v = Instant::now();\n",
+        );
+        assert!(matches!(allowance(&lines, 1, "INV-DET"), Allowance::Justified(_)));
+        assert_eq!(allowance(&lines, 4, "INV-DET"), Allowance::Unjustified);
+        assert_eq!(allowance(&lines, 5, "INV-DET"), Allowance::None);
+    }
+}

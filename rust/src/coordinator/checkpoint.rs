@@ -36,6 +36,7 @@
 //! `Err("checkpoint truncated …")`), and trailing garbage after a
 //! structurally complete body is rejected too.
 
+use crate::util::bytes;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
@@ -101,42 +102,28 @@ fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
 }
 
 // --- bounds-checked readers -------------------------------------------------
-// Every reader validates before slicing; a truncated or hostile header
-// can only ever produce Err, never an out-of-bounds panic or an
-// attacker-sized allocation.
+// Thin error-mapping wrappers over `util::bytes`: a truncated or
+// hostile header can only ever produce Err, never an out-of-bounds
+// panic or an attacker-sized allocation.
 
+// qadam: decode
 fn rd_u8(b: &[u8], off: &mut usize) -> Result<u8> {
-    let v = *b.get(*off).ok_or_else(|| anyhow!("checkpoint truncated (u8)"))?;
-    *off += 1;
-    Ok(v)
+    bytes::u8_at(b, off).ok_or_else(|| anyhow!("checkpoint truncated (u8)"))
 }
 
+// qadam: decode
 fn rd_u32(b: &[u8], off: &mut usize) -> Result<u32> {
-    let end = off.checked_add(4).filter(|&e| e <= b.len());
-    let end = end.ok_or_else(|| anyhow!("checkpoint truncated (u32)"))?;
-    let v = u32::from_le_bytes(b[*off..end].try_into().unwrap());
-    *off = end;
-    Ok(v)
+    bytes::u32_at(b, off).ok_or_else(|| anyhow!("checkpoint truncated (u32)"))
 }
 
+// qadam: decode
 fn rd_u64(b: &[u8], off: &mut usize) -> Result<u64> {
-    let end = off.checked_add(8).filter(|&e| e <= b.len());
-    let end = end.ok_or_else(|| anyhow!("checkpoint truncated (u64)"))?;
-    let v = u64::from_le_bytes(b[*off..end].try_into().unwrap());
-    *off = end;
-    Ok(v)
+    bytes::u64_at(b, off).ok_or_else(|| anyhow!("checkpoint truncated (u64)"))
 }
 
+// qadam: decode
 fn get_f32s(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
-    let bytes = n.checked_mul(4).ok_or_else(|| anyhow!("checkpoint truncated (f32 run)"))?;
-    let end = off.checked_add(bytes).filter(|&e| e <= b.len());
-    let end = end.ok_or_else(|| anyhow!("checkpoint truncated (f32 run)"))?;
-    let out = b[*off..end]
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    *off = end;
-    Ok(out)
+    bytes::f32s_at(b, off, n).ok_or_else(|| anyhow!("checkpoint truncated (f32 run)"))
 }
 
 impl Checkpoint {
@@ -221,24 +208,27 @@ impl Checkpoint {
             bail!("checkpoint truncated (header)");
         }
         let (body, tail) = b.split_at(b.len() - 4);
-        let want = u32::from_le_bytes(tail.try_into().unwrap());
+        let want = {
+            let mut toff = 0usize;
+            bytes::u32_at(tail, &mut toff).ok_or_else(|| anyhow!("checkpoint truncated (crc)"))?
+        };
         if crc32(body) != want {
             bail!("checkpoint CRC mismatch");
         }
-        if &body[..8] != MAGIC {
+        let mut off = 0usize;
+        let magic = bytes::take_at(body, &mut off, 8);
+        if magic != Some(MAGIC.as_slice()) {
             bail!("bad checkpoint magic");
         }
-        let mut off = 8usize;
         let version = rd_u32(body, &mut off)?;
         if !SUPPORTED_VERSIONS.contains(&version) {
             bail!("unsupported checkpoint version {version}");
         }
         let step = rd_u64(body, &mut off)?;
         let name_len = rd_u32(body, &mut off)? as usize;
-        let name_end = off.checked_add(name_len).filter(|&e| e <= body.len());
-        let name_end = name_end.ok_or_else(|| anyhow!("checkpoint truncated (name)"))?;
-        let model = String::from_utf8(body[off..name_end].to_vec())?;
-        off = name_end;
+        let name = bytes::take_at(body, &mut off, name_len)
+            .ok_or_else(|| anyhow!("checkpoint truncated (name)"))?;
+        let model = String::from_utf8(name.to_vec())?;
         let dim64 = rd_u64(body, &mut off)?;
         let dim = usize::try_from(dim64).map_err(|_| anyhow!("checkpoint truncated (dim)"))?;
         let x = get_f32s(body, &mut off, dim)?;

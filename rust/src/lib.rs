@@ -31,7 +31,16 @@
 //!   driver, metrics/CSV logging.
 //! * [`sim`] — synthetic stochastic nonconvex problems for the
 //!   convergence-theory checks (Theorems 3.1–3.3).
+//! * [`analysis`] — the `qadam lint` static analyzer: a dependency-free
+//!   source scanner enforcing the repo's invariant registry (INV-ALLOC,
+//!   INV-DET, INV-PANIC, INV-SAFETY, INV-WIRE) over `rust/src/`.
 
+// Unsafe code is budgeted (see `analysis::UNSAFE_BUDGET`): every site
+// carries a `// SAFETY:` comment and implicit unsafety inside `unsafe
+// fn` bodies is rejected, so each operation is individually justified.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod elastic;

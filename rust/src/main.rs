@@ -6,6 +6,8 @@
 //!   serve   TCP parameter-server shard (pair with `worker` processes)
 //!   worker  TCP worker process
 //!   info    binary-compatibility capabilities (JSON) + artifacts/manifest.json
+//!   lint    static invariant analyzer over rust/src/ (the registry in
+//!           `qadam::analysis`; nonzero exit on any finding)
 //!
 //! Examples:
 //!   qadam train --model vgg_sim --dataset cifar10_sim --kg 2 --steps 200
@@ -34,7 +36,7 @@ const SIM_POLICY_TENSORS: usize = 4;
 const USAGE: &str = "\
 qadam — Quantized Adam with Error Feedback (paper reproduction)
 
-USAGE: qadam <train|serve|worker|info|bench-diff> [flags]
+USAGE: qadam <train|eval|serve|worker|info|lint|bench-diff> [flags]
 
 train flags:
   --model NAME          manifest model (default vgg_sim)
@@ -94,6 +96,16 @@ worker flags: --addr A --id I --dim D --method M [--kg K] [--alpha A]
               [--downlink D] [--codec-policy P] [--shards N]
               (match the server fleet; --shards N connects to the N
               listeners at base addr port + 0..N)
+
+lint flags:   [--root PATH]  repo root (default: walk up from the cwd to
+              the directory containing rust/src/lib.rs). Runs the static
+              invariant analyzer over rust/src/: INV-ALLOC (no
+              allocation in `// qadam: hotpath` fns), INV-DET (no
+              nondeterminism in ps/ quant/ elastic/), INV-PANIC (no
+              panics/indexing in decode fns), INV-SAFETY (SAFETY
+              comments + pinned unsafe budget), INV-WIRE (frame tags
+              pinned in golden tests and `qadam info`). Prints honored
+              waivers, then findings; nonzero exit on any finding.
 
 bench-diff flags: --baseline PATH --fresh PATH [--threshold PCT]
               compare two bench JSONs (benches/ emit them; the committed
@@ -531,11 +543,24 @@ fn cmd_info() -> Result<()> {
         "  \"checkpoint_versions\": {:?},",
         qadam::coordinator::checkpoint::SUPPORTED_VERSIONS
     );
+    // Tag values come from the registry constants, never re-typed here:
+    // INV-WIRE (`qadam lint`) checks every `tag::` constant is used by
+    // this emitter, so a new frame kind shows up below or fails CI.
+    use qadam::ps::protocol::tag;
     println!("  \"frame_tags\": {{");
     println!(
-        "    \"to_worker\": {{\"shutdown\": 0, \"weights\": 1, \"weights_delta\": 2, \"weights_delta_parts\": 3}},"
+        "    \"to_worker\": {{\"shutdown\": {}, \"weights\": {}, \"weights_delta\": {}, \
+         \"weights_delta_parts\": {}}},",
+        tag::TO_WORKER_SHUTDOWN,
+        tag::TO_WORKER_WEIGHTS,
+        tag::TO_WORKER_WEIGHTS_DELTA,
+        tag::TO_WORKER_WEIGHTS_DELTA_PARTS
     );
-    println!("    \"to_server\": {{\"delta\": 0, \"delta_parts\": 1}}");
+    println!(
+        "    \"to_server\": {{\"delta\": {}, \"delta_parts\": {}}}",
+        tag::TO_SERVER_DELTA,
+        tag::TO_SERVER_DELTA_PARTS
+    );
     println!("  }},");
     println!(
         "  \"codecs\": [\"identity\", \"logquant\", \"wquant\", \"terngrad\", \"blockwise\", \"qsgd\"],"
@@ -547,6 +572,15 @@ fn cmd_info() -> Result<()> {
     println!("    \"tcp_port_convention\": \"base_port + shard_id\",");
     println!("    \"snap_to_tensor_boundaries\": \"when a non-static codec policy is active\",");
     println!("    \"sharded_checkpoint_version\": 3");
+    println!("  }},");
+    // Which invariant rule set this binary's `qadam lint` enforces —
+    // CI and bench-diff-style probes assert on it.
+    println!("  \"invariant_registry\": {{");
+    println!("    \"version\": {},", qadam::analysis::REGISTRY_VERSION);
+    println!("    \"unsafe_budget\": {},", qadam::analysis::UNSAFE_BUDGET);
+    let rules: Vec<String> =
+        qadam::analysis::RULES.iter().map(|r| format!("\"{}\"", r.id)).collect();
+    println!("    \"rules\": [{}]", rules.join(", "));
     println!("  }}");
     println!("}}");
     // The artifacts listing stays best-effort: a deploy box checking
@@ -571,6 +605,44 @@ fn cmd_info() -> Result<()> {
                 );
             }
         }
+    }
+    Ok(())
+}
+
+/// `qadam lint`: run the invariant analyzer over the repo's
+/// `rust/src/` tree and fail (nonzero exit) on any finding — the CI
+/// hard gate `scripts/ci.sh` runs right after the build.
+fn cmd_lint(a: &Args) -> Result<()> {
+    use qadam::analysis;
+    let root = match a.opt::<String>("root")? {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            let cwd = std::env::current_dir()?;
+            analysis::repo_root_from(&cwd).ok_or_else(|| {
+                anyhow!("no rust/src/lib.rs at or above {} (use --root)", cwd.display())
+            })?
+        }
+    };
+    a.reject_unknown()?;
+    let report = analysis::run(&root)?;
+    for w in &report.waivers {
+        println!("waived  {}:{} [{}] {}", w.path, w.line, w.rule, w.reason);
+    }
+    for f in &report.findings {
+        println!("FAIL    {}:{} [{}] {}", f.path, f.line, f.rule, f.msg);
+    }
+    println!(
+        "qadam lint: {} files, {} unsafe sites (budget {}), {} waivers, {} findings \
+         (registry v{})",
+        report.files,
+        report.unsafe_count,
+        analysis::UNSAFE_BUDGET,
+        report.waivers.len(),
+        report.findings.len(),
+        analysis::REGISTRY_VERSION
+    );
+    if !report.findings.is_empty() {
+        bail!("{} invariant violations in {}", report.findings.len(), root.display());
     }
     Ok(())
 }
@@ -651,6 +723,7 @@ fn main() -> Result<()> {
         Some("worker") => cmd_worker(&args),
         Some("eval") => cmd_eval(&args),
         Some("info") => cmd_info(),
+        Some("lint") => cmd_lint(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
         Some("help") | None => {
             print!("{USAGE}");

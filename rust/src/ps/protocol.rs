@@ -12,12 +12,34 @@
 use crate::quant::{
     decode_msg_range, decode_msg_range_add, decode_parts_range, decode_parts_range_add, WireMsg,
 };
+use crate::util::bytes::Rd;
 use anyhow::{anyhow, Result};
 
 /// Frame-layout version, asserted by the golden-fixture suite. Bump it
 /// in lockstep with any byte-layout change to the messages below (or to
 /// `WireMsg::to_bytes`), and regenerate the fixtures.
 pub const WIRE_VERSION: u32 = 2;
+
+/// Frame-tag registry: the first byte of every frame on the wire, one
+/// constant per frame kind (the two directions are separate tag
+/// spaces). INV-WIRE (`qadam lint`) requires every constant here to
+/// appear in both `rust/tests/wire_golden.rs` and the `qadam info`
+/// capability JSON, so a new frame kind cannot ship without a
+/// byte-pinned fixture and operator visibility.
+pub mod tag {
+    /// [`super::ToWorker::Shutdown`].
+    pub const TO_WORKER_SHUTDOWN: u8 = 0;
+    /// [`super::ToWorker::Weights`] — full broadcast / resync frame.
+    pub const TO_WORKER_WEIGHTS: u8 = 1;
+    /// [`super::ToWorker::WeightsDelta`] — compressed delta broadcast.
+    pub const TO_WORKER_WEIGHTS_DELTA: u8 = 2;
+    /// [`super::ToWorker::WeightsDeltaParts`] — per-tensor broadcast.
+    pub const TO_WORKER_WEIGHTS_DELTA_PARTS: u8 = 3;
+    /// [`super::ToServer::Delta`] — single-message worker reply.
+    pub const TO_SERVER_DELTA: u8 = 0;
+    /// [`super::ToServer::DeltaParts`] — per-tensor worker reply.
+    pub const TO_SERVER_DELTA_PARTS: u8 = 1;
+}
 
 /// Accounting charge for a parts frame's own structure: its tag byte +
 /// the `nparts:u32` list header. (The v1 frame kinds keep the legacy
@@ -77,33 +99,51 @@ impl ToWorker {
 
     pub fn to_bytes(&self) -> Vec<u8> {
         match self {
-            ToWorker::Weights { t, epoch, msg } => frame_bytes(1, *t, *epoch, msg),
-            ToWorker::WeightsDelta { t, epoch, msg } => frame_bytes(2, *t, *epoch, msg),
+            ToWorker::Weights { t, epoch, msg } => {
+                frame_bytes(tag::TO_WORKER_WEIGHTS, *t, *epoch, msg)
+            }
+            ToWorker::WeightsDelta { t, epoch, msg } => {
+                frame_bytes(tag::TO_WORKER_WEIGHTS_DELTA, *t, *epoch, msg)
+            }
             ToWorker::WeightsDeltaParts { t, epoch, parts } => {
                 let mut out = Vec::with_capacity(21);
-                out.push(3u8);
+                out.push(tag::TO_WORKER_WEIGHTS_DELTA_PARTS);
                 out.extend_from_slice(&t.to_le_bytes());
                 out.extend_from_slice(&epoch.to_le_bytes());
                 parts_to_bytes(&mut out, parts);
                 out
             }
-            ToWorker::Shutdown => vec![0u8],
+            ToWorker::Shutdown => vec![tag::TO_WORKER_SHUTDOWN],
         }
     }
 
+    // qadam: decode
     pub fn from_bytes(b: &[u8]) -> Result<Self> {
-        match b.first() {
-            Some(0) => Ok(ToWorker::Shutdown),
-            Some(&(tag @ (1 | 2 | 3))) => {
-                if b.len() < 17 {
-                    return Err(anyhow!("short weights frame"));
-                }
-                let t = u64::from_le_bytes(b[1..9].try_into().unwrap());
-                let epoch = u64::from_le_bytes(b[9..17].try_into().unwrap());
-                Ok(match tag {
-                    1 => ToWorker::Weights { t, epoch, msg: WireMsg::from_bytes(&b[17..])? },
-                    2 => ToWorker::WeightsDelta { t, epoch, msg: WireMsg::from_bytes(&b[17..])? },
-                    _ => ToWorker::WeightsDeltaParts { t, epoch, parts: parts_from_bytes(&b[17..])? },
+        let mut rd = Rd::new(b);
+        match rd.u8() {
+            Some(tag::TO_WORKER_SHUTDOWN) => Ok(ToWorker::Shutdown),
+            Some(
+                kind @ (tag::TO_WORKER_WEIGHTS
+                | tag::TO_WORKER_WEIGHTS_DELTA
+                | tag::TO_WORKER_WEIGHTS_DELTA_PARTS),
+            ) => {
+                let (step, epoch) = match rd.u64().zip(rd.u64()) {
+                    Some(hdr) => hdr,
+                    None => return Err(anyhow!("short weights frame")),
+                };
+                let body = rd.rest();
+                Ok(match kind {
+                    tag::TO_WORKER_WEIGHTS => {
+                        ToWorker::Weights { t: step, epoch, msg: WireMsg::from_bytes(body)? }
+                    }
+                    tag::TO_WORKER_WEIGHTS_DELTA => {
+                        ToWorker::WeightsDelta { t: step, epoch, msg: WireMsg::from_bytes(body)? }
+                    }
+                    _ => ToWorker::WeightsDeltaParts {
+                        t: step,
+                        epoch,
+                        parts: parts_from_bytes(body)?,
+                    },
                 })
             }
             _ => Err(anyhow!("bad ToWorker tag")),
@@ -137,30 +177,30 @@ fn parts_to_bytes(out: &mut Vec<u8>, parts: &[WireMsg]) {
 /// Inverse of [`parts_to_bytes`]; consumes `b` exactly (trailing bytes
 /// are a framing error) and never trusts a length prefix past the
 /// buffer.
+// qadam: decode
 fn parts_from_bytes(b: &[u8]) -> Result<Vec<WireMsg>> {
-    if b.len() < 4 {
-        return Err(anyhow!("short parts frame"));
-    }
-    let nparts = u32::from_le_bytes(b[0..4].try_into().unwrap()) as usize;
+    let mut rd = Rd::new(b);
+    let nparts = match rd.u32() {
+        Some(n) => n as usize,
+        None => return Err(anyhow!("short parts frame")),
+    };
     if nparts == 0 {
         return Err(anyhow!("parts frame with zero parts"));
     }
-    let mut off = 4usize;
     let mut parts = Vec::new();
     for i in 0..nparts {
-        if off + 4 > b.len() {
-            return Err(anyhow!("parts frame truncated at part {i}"));
-        }
-        let len = u32::from_le_bytes(b[off..off + 4].try_into().unwrap()) as usize;
-        off += 4;
-        if len > b.len() - off {
-            return Err(anyhow!("part {i} length {len} overruns the frame"));
-        }
-        parts.push(WireMsg::from_bytes(&b[off..off + len])?);
-        off += len;
+        let len = match rd.u32() {
+            Some(l) => l as usize,
+            None => return Err(anyhow!("parts frame truncated at part {i}")),
+        };
+        let body = match rd.take(len) {
+            Some(s) => s,
+            None => return Err(anyhow!("part {i} length {len} overruns the frame")),
+        };
+        parts.push(WireMsg::from_bytes(body)?);
     }
-    if off != b.len() {
-        return Err(anyhow!("parts frame has {} trailing bytes", b.len() - off));
+    if rd.remaining() != 0 {
+        return Err(anyhow!("parts frame has {} trailing bytes", rd.remaining()));
     }
     Ok(parts)
 }
@@ -232,7 +272,7 @@ impl ToServer {
             ToServer::Delta { t, worker, loss, msg } => {
                 let body = msg.to_bytes();
                 let mut out = Vec::with_capacity(17 + body.len());
-                out.push(0u8);
+                out.push(tag::TO_SERVER_DELTA);
                 out.extend_from_slice(&t.to_le_bytes());
                 out.extend_from_slice(&worker.to_le_bytes());
                 out.extend_from_slice(&loss.to_le_bytes());
@@ -241,7 +281,7 @@ impl ToServer {
             }
             ToServer::DeltaParts { t, worker, loss, parts } => {
                 let mut out = Vec::with_capacity(21);
-                out.push(1u8);
+                out.push(tag::TO_SERVER_DELTA_PARTS);
                 out.extend_from_slice(&t.to_le_bytes());
                 out.extend_from_slice(&worker.to_le_bytes());
                 out.extend_from_slice(&loss.to_le_bytes());
@@ -251,17 +291,25 @@ impl ToServer {
         }
     }
 
+    // qadam: decode
     pub fn from_bytes(b: &[u8]) -> Result<Self> {
-        if b.len() < 17 {
-            return Err(anyhow!("short Delta frame"));
-        }
-        let tag = b[0];
-        let t = u64::from_le_bytes(b[1..9].try_into().unwrap());
-        let worker = u32::from_le_bytes(b[9..13].try_into().unwrap());
-        let loss = f32::from_le_bytes(b[13..17].try_into().unwrap());
-        match tag {
-            0 => Ok(ToServer::Delta { t, worker, loss, msg: WireMsg::from_bytes(&b[17..])? }),
-            1 => Ok(ToServer::DeltaParts { t, worker, loss, parts: parts_from_bytes(&b[17..])? }),
+        let mut rd = Rd::new(b);
+        let kind = rd.u8();
+        let t = rd.u64();
+        let worker = rd.u32();
+        let loss = rd.f32();
+        let (kind, t, worker, loss) = match (kind, t, worker, loss) {
+            (Some(k), Some(t), Some(w), Some(l)) => (k, t, w, l),
+            _ => return Err(anyhow!("short Delta frame")),
+        };
+        let body = rd.rest();
+        match kind {
+            tag::TO_SERVER_DELTA => {
+                Ok(ToServer::Delta { t, worker, loss, msg: WireMsg::from_bytes(body)? })
+            }
+            tag::TO_SERVER_DELTA_PARTS => {
+                Ok(ToServer::DeltaParts { t, worker, loss, parts: parts_from_bytes(body)? })
+            }
             other => Err(anyhow!("bad ToServer tag {other}")),
         }
     }
@@ -455,6 +503,34 @@ mod tests {
         let mut b = good.clone();
         b.push(0);
         assert!(ToServer::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn every_prefix_truncation_errors_cleanly() {
+        // INV-PANIC regression: every strict prefix of every frame kind
+        // must decode to Err, never panic (the decoders only read
+        // through util::bytes).
+        let down = [
+            ToWorker::Weights { t: 1, epoch: 2, msg: sample_msg() }.to_bytes(),
+            ToWorker::WeightsDelta { t: 1, epoch: 2, msg: sample_msg() }.to_bytes(),
+            ToWorker::WeightsDeltaParts { t: 1, epoch: 2, parts: sample_parts() }.to_bytes(),
+        ];
+        for b in &down {
+            assert!(ToWorker::from_bytes(b).is_ok());
+            for cut in 0..b.len() {
+                assert!(ToWorker::from_bytes(&b[..cut]).is_err(), "cut={cut}");
+            }
+        }
+        let up = [
+            ToServer::Delta { t: 1, worker: 0, loss: 0.5, msg: sample_msg() }.to_bytes(),
+            ToServer::DeltaParts { t: 1, worker: 0, loss: 0.5, parts: sample_parts() }.to_bytes(),
+        ];
+        for b in &up {
+            assert!(ToServer::from_bytes(b).is_ok());
+            for cut in 0..b.len() {
+                assert!(ToServer::from_bytes(&b[..cut]).is_err(), "cut={cut}");
+            }
+        }
     }
 
     #[test]

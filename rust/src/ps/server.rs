@@ -449,13 +449,7 @@ impl ParameterServer {
         let inv = 1.0 / n;
         let block = self.block;
         let work = |(start, xc, ac): (usize, &mut [f32], &mut [f32])| {
-            ac.fill(0.0);
-            for d in deltas {
-                d.decode_range_add(start, ac);
-            }
-            for (xi, &a) in xc.iter_mut().zip(ac.iter()) {
-                *xi -= inv * a;
-            }
+            apply_block(deltas, inv, start, xc, ac)
         };
         let chunks = self
             .x
@@ -472,6 +466,22 @@ impl ParameterServer {
         }
         self.stats.rounds += 1;
         Ok(Participation { round: self.t, mean_loss, reporters: ids })
+    }
+}
+
+/// One block of the fused decode→sum→apply traversal behind
+/// [`ParameterServer::apply`]: zero the block's slice of the persistent
+/// accumulator arena, sum every worker's decoded range into it, apply
+/// the mean. Runs once per block per round on every thread — the
+/// steady-state server hot loop, so it must not allocate.
+// qadam: hotpath
+fn apply_block(deltas: &[ToServer], inv: f32, start: usize, xc: &mut [f32], ac: &mut [f32]) {
+    ac.fill(0.0);
+    for d in deltas {
+        d.decode_range_add(start, ac);
+    }
+    for (xi, &a) in xc.iter_mut().zip(ac.iter()) {
+        *xi -= inv * a;
     }
 }
 

@@ -54,6 +54,7 @@ pub fn write_frame<W: Write>(stream: &mut W, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
+// qadam: decode
 pub fn read_frame<R: Read>(stream: &mut R) -> Result<Vec<u8>> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len)?;
@@ -468,6 +469,8 @@ impl TcpServer {
                 replies
             }
             StragglerPolicy::Drop => {
+                // lint: allow(INV-DET) the straggler deadline is wall-clock by design; what
+                // a round computes from the replies it keeps stays deterministic
                 let start = Instant::now();
                 let mut replies = Vec::with_capacity(self.streams.len());
                 for mut s in std::mem::take(&mut self.streams) {
@@ -518,13 +521,15 @@ impl TcpServer {
 /// the round open past the deadline — the total wait is bounded by the
 /// deadline itself, not by `deadline × reads`.
 fn read_reply(s: &mut TcpStream, budget: Option<(Instant, Duration)>) -> Result<ToServer> {
-    if budget.is_none() {
-        s.set_read_timeout(None)?;
-        let buf = read_frame(s)?;
-        return ToServer::from_bytes(&buf);
-    }
+    let (start, d) = match budget {
+        Some(b) => b,
+        None => {
+            s.set_read_timeout(None)?;
+            let buf = read_frame(s)?;
+            return ToServer::from_bytes(&buf);
+        }
+    };
     let arm = |s: &mut TcpStream| -> Result<()> {
-        let (start, d) = budget.expect("budgeted path");
         let remaining = d.saturating_sub(start.elapsed());
         if remaining.is_zero() {
             return Err(anyhow!("round deadline exhausted"));

@@ -41,6 +41,7 @@ impl Blockwise {
     /// decode→sum fusion). The per-element scale lookup keeps the old
     /// global-position indexing, so ragged tails and ranges that start
     /// mid-block decode identically.
+    // qadam: hotpath
     fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
         let p = msg.codes.as_ref().expect("blockwise msg has codes");
         for_each_chunk(p, start, out.len(), |o, chunk| {

@@ -147,6 +147,7 @@ impl LogQuant {
     /// Fused unpack+decode over codes `[start, start + out.len())`.
     /// `ADD` accumulates into `out` instead of overwriting — the
     /// server's decode→sum fusion (see `decode_msg_range_add`).
+    // qadam: hotpath
     fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
         const TABLE_BITS: usize = 6; // kg <= MAX_KG=20 -> 43 symbols -> 6 bits
         let p: &Packed = msg.codes.as_ref().expect("logquant msg has codes");

@@ -161,15 +161,24 @@ impl WireMsg {
     }
 
     /// Inverse of [`WireMsg::to_bytes`].
+    // qadam: decode
     pub fn from_bytes(b: &[u8]) -> anyhow::Result<Self> {
+        use crate::util::bytes::Rd;
         use anyhow::anyhow;
         if b.len() < 22 {
             return Err(anyhow!("wire msg too short: {}", b.len()));
         }
-        let codec = CodecId::from_u8(b[0]).ok_or_else(|| anyhow!("bad codec {}", b[0]))?;
-        let bits = b[1];
-        let rd = |i: usize| u32::from_le_bytes(b[i..i + 4].try_into().unwrap()) as usize;
-        let param = rd(2) as u32;
+        let mut rd = Rd::new(b);
+        let header = (rd.u8(), rd.u8(), rd.u32(), rd.u32(), rd.u32(), rd.u32(), rd.u32());
+        let (codec_byte, bits, param, n, nscales, nwords, nraw) = match header {
+            (Some(c), Some(bt), Some(p), Some(n), Some(s), Some(w), Some(r)) => {
+                (c, bt, p, n as usize, s as usize, w as usize, r as usize)
+            }
+            // unreachable given the length check above, but decode
+            // functions never assume — they return Err
+            _ => return Err(anyhow!("wire msg too short: {}", b.len())),
+        };
+        let codec = CodecId::from_u8(codec_byte).ok_or_else(|| anyhow!("bad codec {codec_byte}"))?;
         // Codec-parameter sanity: a frame claiming a level outside the
         // codec's domain would panic deep inside the decode (level
         // constructors assert their range) — reject it here instead,
@@ -197,10 +206,6 @@ impl WireMsg {
             }
             CodecId::Identity | CodecId::TernGrad => {}
         }
-        let n = rd(6);
-        let nscales = rd(10);
-        let nwords = rd(14);
-        let nraw = rd(18);
         let need = 22 + nscales * 4 + nwords * 8 + nraw * 4;
         if b.len() != need {
             return Err(anyhow!("wire msg len {} != expected {}", b.len(), need));
@@ -267,27 +272,17 @@ impl WireMsg {
                 )?;
             }
         }
-        let mut off = 22;
-        let mut scales = Vec::with_capacity(nscales);
-        for _ in 0..nscales {
-            scales.push(f32::from_le_bytes(b[off..off + 4].try_into().unwrap()));
-            off += 4;
-        }
+        // `need == b.len()` makes these reads infallible, but the
+        // bounds-checked readers keep that a local fact, not a
+        // load-bearing assumption
+        let short = || anyhow!("wire msg len {} != expected {}", b.len(), need);
+        let scales = rd.f32s(nscales).ok_or_else(short)?;
         let codes = if nwords > 0 || (bits > 0 && n > 0) {
-            let mut words = Vec::with_capacity(nwords);
-            for _ in 0..nwords {
-                words.push(u64::from_le_bytes(b[off..off + 8].try_into().unwrap()));
-                off += 8;
-            }
-            Some(pack::Packed { bits, n, words })
+            Some(pack::Packed { bits, n, words: rd.u64s(nwords).ok_or_else(short)? })
         } else {
             None
         };
-        let mut raw = Vec::with_capacity(nraw);
-        for _ in 0..nraw {
-            raw.push(f32::from_le_bytes(b[off..off + 4].try_into().unwrap()));
-            off += 4;
-        }
+        let raw = rd.f32s(nraw).ok_or_else(short)?;
         Ok(WireMsg { codec, param, n, scales, codes, raw })
     }
 }
@@ -367,6 +362,7 @@ pub fn decode_msg(msg: &WireMsg, out: &mut [f32]) {
 /// [`decode_msg`] restricted to elements `[start, start + out.len())` —
 /// the block-parallel decode entry point of the sharded parameter
 /// server. Bit-identical to slicing a full [`decode_msg`] result.
+// qadam: hotpath
 pub fn decode_msg_range(msg: &WireMsg, start: usize, out: &mut [f32]) {
     match msg.codec {
         CodecId::Identity => Identity.decompress_range(msg, start, out),
@@ -384,6 +380,7 @@ pub fn decode_msg_range(msg: &WireMsg, start: usize, out: &mut [f32]) {
 /// accumulator without a per-delta scratch buffer. The additions are
 /// the exact f32 ops (same order) as decoding into scratch and adding,
 /// so the summed result is bit-identical to the unfused form.
+// qadam: hotpath
 pub fn decode_msg_range_add(msg: &WireMsg, start: usize, out: &mut [f32]) {
     match msg.codec {
         CodecId::Identity => {
@@ -419,6 +416,7 @@ pub fn decode_parts(parts: &[WireMsg], out: &mut [f32]) {
 /// — the block-parallel entry point the sharded parameter server uses
 /// on mixed-codec rounds. Bit-identical to slicing a full
 /// [`decode_parts`] result (each sub-range decode is, per codec).
+// qadam: hotpath
 pub fn decode_parts_range(parts: &[WireMsg], start: usize, out: &mut [f32]) {
     let end = start + out.len();
     let mut off = 0usize;
@@ -436,6 +434,7 @@ pub fn decode_parts_range(parts: &[WireMsg], start: usize, out: &mut [f32]) {
 
 /// [`decode_parts_range`] that accumulates (`out[i] += decoded[i]`) —
 /// the mixed-codec side of the server's decode→sum fusion.
+// qadam: hotpath
 pub fn decode_parts_range_add(parts: &[WireMsg], start: usize, out: &mut [f32]) {
     let end = start + out.len();
     let mut off = 0usize;

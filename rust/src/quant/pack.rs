@@ -63,6 +63,7 @@ impl<'a> BitWriter<'a> {
     }
 
     /// Append one code (`< 2^bits`).
+    // qadam: hotpath
     #[inline]
     pub fn push(&mut self, c: u32) {
         debug_assert!(self.b == 32 || c < (1u32 << self.b));
@@ -79,6 +80,7 @@ impl<'a> BitWriter<'a> {
     }
 
     /// Flush the partial tail word, if any.
+    // qadam: hotpath
     pub fn finish(self) {
         if self.fill > 0 {
             self.words[self.out] = self.acc;
@@ -108,6 +110,7 @@ pub const UNPACK_CHUNK: usize = 128;
 /// any range decodes independently — this is what lets the sharded
 /// parameter server decode one block per thread. The cursor reads each
 /// payload word once; no heap allocation.
+// qadam: hotpath
 pub fn for_each_chunk<F: FnMut(usize, &[u32])>(p: &Packed, start: usize, len: usize, mut f: F) {
     assert!(start + len <= p.n, "range {start}+{len} out of {} codes", p.n);
     if len == 0 {
@@ -153,6 +156,7 @@ pub fn unpack_into(p: &Packed, out: &mut [u32]) {
 
 /// Unpack codes `[start, start + out.len())` without touching the rest
 /// of the payload.
+// qadam: hotpath
 pub fn unpack_range_into(p: &Packed, start: usize, out: &mut [u32]) {
     for_each_chunk(p, start, out.len(), |o, chunk| {
         out[o..o + chunk.len()].copy_from_slice(chunk);

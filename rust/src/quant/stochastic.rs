@@ -147,6 +147,7 @@ impl Qsgd {
     /// Fused unpack+decode; `ADD` accumulates into `out` (the server's
     /// decode→sum fusion). The per-code arithmetic is byte-identical to
     /// the pre-fusion loop (`(c - bias) / L * s`, division kept).
+    // qadam: hotpath
     fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
         let p = msg.codes.as_ref().expect("qsgd msg has codes");
         let s = msg.scales[0];

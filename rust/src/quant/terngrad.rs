@@ -24,6 +24,7 @@ impl TernGrad {
     /// decode→sum fusion). Codes map through a 4-entry table
     /// `[-s, 0, s, s]` — the (never emitted) code 3 decodes to `s`
     /// exactly as the old `match` fallthrough did.
+    // qadam: hotpath
     fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
         let p = msg.codes.as_ref().expect("terngrad msg has codes");
         let s = msg.scales[0];

@@ -121,6 +121,7 @@ impl WQuant {
     /// decode→sum fusion). Keeps the exact pre-fusion arithmetic —
     /// `0.5 * (c - bias) / bias`, division not folded into a reciprocal
     /// multiply, so decoded grid points are bit-identical.
+    // qadam: hotpath
     fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
         let p = msg.codes.as_ref().expect("wquant msg has codes");
         let bias = 1i32 << self.kx;

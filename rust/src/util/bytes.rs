@@ -1,0 +1,195 @@
+//! Bounds-checked little-endian byte readers — the only way wire and
+//! checkpoint decoders read untrusted bytes.
+//!
+//! Every reader returns `Option` instead of panicking: a truncated,
+//! hostile or corrupt buffer can only ever surface as `None` (which the
+//! decode functions map to their own `Err`), never as an out-of-bounds
+//! panic. This is the mechanism behind the INV-PANIC invariant that
+//! `qadam lint` enforces over every `from_bytes`/`// qadam: decode`
+//! function: no `unwrap()`, no `expect()`, no direct indexing.
+//!
+//! Two shapes are provided: free functions over an explicit `(buf,
+//! &mut offset)` pair (what the checkpoint reader's version-branching
+//! layout wants) and the [`Rd`] cursor that owns its offset (what the
+//! strictly sequential wire decoders want). Both are zero-copy except
+//! for the bulk `f32s`/`u64s` readers, which allocate exactly the
+//! validated run.
+
+/// Copy an exactly-`N`-byte slice into an array, without indexing.
+fn arr<const N: usize>(s: &[u8]) -> Option<[u8; N]> {
+    if s.len() != N {
+        return None;
+    }
+    let mut a = [0u8; N];
+    a.copy_from_slice(s);
+    Some(a)
+}
+
+/// Take `n` bytes at `*off`, advancing it. `None` if the run (or the
+/// offset arithmetic itself) overruns `b`.
+pub fn take_at<'a>(b: &'a [u8], off: &mut usize, n: usize) -> Option<&'a [u8]> {
+    let end = off.checked_add(n)?;
+    let s = b.get(*off..end)?;
+    *off = end;
+    Some(s)
+}
+
+pub fn u8_at(b: &[u8], off: &mut usize) -> Option<u8> {
+    let v = *b.get(*off)?;
+    *off = off.checked_add(1)?;
+    Some(v)
+}
+
+pub fn u32_at(b: &[u8], off: &mut usize) -> Option<u32> {
+    Some(u32::from_le_bytes(arr(take_at(b, off, 4)?)?))
+}
+
+pub fn u64_at(b: &[u8], off: &mut usize) -> Option<u64> {
+    Some(u64::from_le_bytes(arr(take_at(b, off, 8)?)?))
+}
+
+pub fn f32_at(b: &[u8], off: &mut usize) -> Option<f32> {
+    Some(f32::from_le_bytes(arr(take_at(b, off, 4)?)?))
+}
+
+/// Read a run of `n` little-endian f32s. The length check happens
+/// *before* the allocation, so a hostile count cannot trigger an
+/// attacker-sized reserve.
+pub fn f32s_at(b: &[u8], off: &mut usize, n: usize) -> Option<Vec<f32>> {
+    let s = take_at(b, off, n.checked_mul(4)?)?;
+    Some(
+        s.chunks_exact(4)
+            .map(|c| {
+                let mut a = [0u8; 4];
+                a.copy_from_slice(c);
+                f32::from_le_bytes(a)
+            })
+            .collect(),
+    )
+}
+
+/// Read a run of `n` little-endian u64s (same allocation discipline as
+/// [`f32s_at`]).
+pub fn u64s_at(b: &[u8], off: &mut usize, n: usize) -> Option<Vec<u64>> {
+    let s = take_at(b, off, n.checked_mul(8)?)?;
+    Some(
+        s.chunks_exact(8)
+            .map(|c| {
+                let mut a = [0u8; 8];
+                a.copy_from_slice(c);
+                u64::from_le_bytes(a)
+            })
+            .collect(),
+    )
+}
+
+/// Sequential cursor over an untrusted byte buffer.
+pub struct Rd<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, off: 0 }
+    }
+
+    /// Take the next `n` bytes; `None` past the end.
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        take_at(self.buf, &mut self.off, n)
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        u8_at(self.buf, &mut self.off)
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        u32_at(self.buf, &mut self.off)
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        u64_at(self.buf, &mut self.off)
+    }
+
+    pub fn f32(&mut self) -> Option<f32> {
+        f32_at(self.buf, &mut self.off)
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Option<Vec<f32>> {
+        f32s_at(self.buf, &mut self.off, n)
+    }
+
+    pub fn u64s(&mut self, n: usize) -> Option<Vec<u64>> {
+        u64s_at(self.buf, &mut self.off, n)
+    }
+
+    /// Everything not yet consumed (possibly empty); the cursor moves
+    /// to the end.
+    pub fn rest(&mut self) -> &'a [u8] {
+        let s = self.buf.get(self.off..).unwrap_or(&[]);
+        self.off = self.buf.len();
+        s
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_reads_and_eof() {
+        let mut b = Vec::new();
+        b.push(7u8);
+        b.extend_from_slice(&0xdead_beefu32.to_le_bytes());
+        b.extend_from_slice(&42u64.to_le_bytes());
+        b.extend_from_slice(&1.5f32.to_le_bytes());
+        let mut rd = Rd::new(&b);
+        assert_eq!(rd.u8(), Some(7));
+        assert_eq!(rd.u32(), Some(0xdead_beef));
+        assert_eq!(rd.u64(), Some(42));
+        assert_eq!(rd.f32(), Some(1.5));
+        assert_eq!(rd.remaining(), 0);
+        assert_eq!(rd.u8(), None, "reading past the end is None, not a panic");
+        assert_eq!(rd.rest(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn every_truncation_of_a_run_is_none() {
+        let b: Vec<u8> = (0..32).collect();
+        for cut in 0..b.len() {
+            let mut rd = Rd::new(&b[..cut]);
+            // whichever read fails first, none may panic
+            let _ = rd.u8();
+            let _ = rd.u32();
+            let _ = rd.u64();
+            let _ = rd.f32s(4);
+        }
+    }
+
+    #[test]
+    fn bulk_reads_reject_overflowing_counts() {
+        let b = [0u8; 8];
+        let mut off = 0;
+        assert!(f32s_at(&b, &mut off, usize::MAX / 2).is_none());
+        assert_eq!(off, 0, "a failed read must not move the cursor");
+        assert!(u64s_at(&b, &mut off, usize::MAX).is_none());
+        let got = f32s_at(&b, &mut off, 2).expect("exact fit");
+        assert_eq!(got, vec![0.0, 0.0]);
+        assert_eq!(off, 8);
+    }
+
+    #[test]
+    fn take_and_rest_split_the_buffer() {
+        let b = [1u8, 2, 3, 4, 5];
+        let mut rd = Rd::new(&b);
+        assert_eq!(rd.take(2), Some(&b[..2]));
+        assert_eq!(rd.take(9), None);
+        assert_eq!(rd.rest(), &b[2..]);
+        assert_eq!(rd.remaining(), 0);
+    }
+}

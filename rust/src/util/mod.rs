@@ -1,11 +1,13 @@
 //! Self-contained utilities (this crate builds offline against only
 //! `xla` + `anyhow`): deterministic RNG, a minimal JSON reader for the
 //! artifact manifest, a tiny CLI-flag parser, the micro-bench harness
-//! used by `benches/`, and the scoped-thread work partitioner behind
-//! the sharded parameter server.
+//! used by `benches/`, the scoped-thread work partitioner behind the
+//! sharded parameter server, and the bounds-checked byte readers every
+//! wire/checkpoint decoder goes through ([`bytes`]).
 
 pub mod args;
 pub mod bench;
+pub mod bytes;
 pub mod json;
 pub mod par;
 pub mod rng;

@@ -1,0 +1,109 @@
+//! Integration tests for the `qadam lint` invariant analyzer: the live
+//! tree must be clean, every known-bad fixture in `lint_fixtures/` must
+//! fail exactly its rule, and every known-good twin must pass. This is
+//! the suite that keeps the analyzer honest — a rules change that stops
+//! a bad fixture from failing (or starts flagging a good one) lands
+//! here before it can silently weaken the ci.sh gate.
+
+use std::path::Path;
+
+use qadam::analysis::{self, check_file, check_wire};
+
+fn repo_root() -> std::path::PathBuf {
+    analysis::repo_root_from(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("no rust/src/lib.rs at or above CARGO_MANIFEST_DIR")
+}
+
+/// The committed tree passes its own analyzer — same assertion
+/// `scripts/ci.sh` makes by running `qadam lint` as a hard gate.
+#[test]
+fn full_tree_is_clean() {
+    let rep = analysis::run(&repo_root()).expect("lint walk failed");
+    assert!(rep.findings.is_empty(), "live tree has lint findings:\n{:#?}", rep.findings);
+    assert!(rep.files >= 20, "walked only {} files — wrong root?", rep.files);
+    assert_eq!(
+        rep.unsafe_count,
+        analysis::UNSAFE_BUDGET,
+        "unsafe inventory drifted from the committed budget"
+    );
+    assert!(
+        rep.waivers.iter().any(|w| w.path.ends_with("ps/transport.rs") && w.rule == "INV-DET"),
+        "the transport straggler-deadline waiver should be honored and reported: {:?}",
+        rep.waivers
+    );
+}
+
+#[test]
+fn registry_shape_is_pinned() {
+    assert_eq!(analysis::REGISTRY_VERSION, 1, "registry version moved — update this pin and ci");
+    let ids: Vec<&str> = analysis::RULES.iter().map(|r| r.id).collect();
+    assert_eq!(ids, ["INV-ALLOC", "INV-DET", "INV-PANIC", "INV-SAFETY", "INV-WIRE"]);
+    assert!(analysis::RULES.iter().all(|r| !r.summary.is_empty()));
+}
+
+/// Every known-bad fixture produces at least one finding of exactly the
+/// rule named in its header, under a virtual in-scope path.
+#[test]
+fn known_bad_fixtures_fail_their_rule() {
+    let cases = [
+        (include_str!("lint_fixtures/bad_alloc.rs"), "rust/src/quant/fixture.rs", "INV-ALLOC"),
+        (include_str!("lint_fixtures/bad_det.rs"), "rust/src/ps/fixture.rs", "INV-DET"),
+        (include_str!("lint_fixtures/bad_panic.rs"), "rust/src/ps/fixture.rs", "INV-PANIC"),
+        (include_str!("lint_fixtures/bad_safety.rs"), "rust/src/runtime/fixture.rs", "INV-SAFETY"),
+        (include_str!("lint_fixtures/bad_allow.rs"), "rust/src/ps/fixture.rs", "INV-DET"),
+    ];
+    for (src, vpath, rule) in cases {
+        let rep = check_file(vpath, src);
+        assert!(
+            rep.findings.iter().any(|f| f.rule == rule),
+            "{vpath} fixture produced no {rule} finding: {:?}",
+            rep.findings
+        );
+    }
+    // the reasonless waiver in bad_allow.rs is not honored, and the
+    // finding says why
+    let rep = check_file("rust/src/ps/fixture.rs", include_str!("lint_fixtures/bad_allow.rs"));
+    assert!(rep.waivers.is_empty(), "a reasonless allow must not become a waiver");
+    assert!(
+        rep.findings.iter().any(|f| f.msg.contains("no justification")),
+        "{:?}",
+        rep.findings
+    );
+}
+
+/// Every known-good twin is clean under the same virtual paths.
+#[test]
+fn known_good_fixtures_pass() {
+    let cases = [
+        (include_str!("lint_fixtures/good_alloc.rs"), "rust/src/quant/fixture.rs"),
+        (include_str!("lint_fixtures/good_det.rs"), "rust/src/ps/fixture.rs"),
+        (include_str!("lint_fixtures/good_panic.rs"), "rust/src/ps/fixture.rs"),
+        (include_str!("lint_fixtures/good_safety.rs"), "rust/src/runtime/fixture.rs"),
+    ];
+    for (src, vpath) in cases {
+        let rep = check_file(vpath, src);
+        assert!(rep.findings.is_empty(), "{vpath}: {:?}", rep.findings);
+    }
+    // good_det's justified waiver is honored AND surfaced
+    let rep = check_file("rust/src/ps/fixture.rs", include_str!("lint_fixtures/good_det.rs"));
+    assert_eq!(rep.waivers.len(), 1, "{:?}", rep.waivers);
+    assert!(rep.waivers[0].reason.contains("logging"), "{:?}", rep.waivers);
+}
+
+/// INV-WIRE fails when a tag constant loses its golden fixture — the
+/// cross-file direction the per-file fixtures cannot cover.
+#[test]
+fn inv_wire_catches_a_dropped_tag() {
+    let protocol = "\
+pub mod tag {
+    pub const TO_WORKER_SHUTDOWN: u8 = 0;
+    pub const TO_SERVER_DELTA: u8 = 0;
+}
+";
+    let complete = "TO_WORKER_SHUTDOWN TO_SERVER_DELTA";
+    assert!(check_wire(protocol, complete, complete).is_empty());
+    let missing = check_wire(protocol, "TO_WORKER_SHUTDOWN", complete);
+    assert_eq!(missing.len(), 1, "{missing:?}");
+    assert!(missing[0].msg.contains("TO_SERVER_DELTA"), "{missing:?}");
+    assert!(missing[0].msg.contains("wire_golden"), "{missing:?}");
+}

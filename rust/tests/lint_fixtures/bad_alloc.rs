@@ -1,0 +1,8 @@
+// Known-bad fixture for INV-ALLOC: a `// qadam: hotpath` function that
+// allocates on every call. `lint_analyzer.rs` feeds this file through
+// `analysis::check_file` and asserts the rule fires.
+
+// qadam: hotpath
+pub fn unpack_hot(src: &[f32], out: &mut Vec<f32>) {
+    *out = src.to_vec();
+}

@@ -1,0 +1,11 @@
+// Known-bad fixture for waiver hygiene: a `lint: allow` with no reason
+// does not excuse the finding — it upgrades it to one that also
+// complains about the empty justification (INV-DET here, under the
+// virtual path rust/src/ps/fixture.rs).
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    // lint: allow(INV-DET)
+    Instant::now()
+}

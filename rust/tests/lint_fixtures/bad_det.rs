@@ -1,0 +1,11 @@
+// Known-bad fixture for INV-DET: wall-clock and hash-order reads in a
+// bit-parity decision path (the analyzer test lints this under the
+// virtual path rust/src/ps/fixture.rs).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn pick(order: &HashMap<u32, f32>) -> f32 {
+    let _t = Instant::now();
+    order.values().sum()
+}

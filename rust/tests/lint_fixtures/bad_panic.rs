@@ -1,0 +1,9 @@
+// Known-bad fixture for INV-PANIC: a decode function (in scope by its
+// `*_from_bytes` name alone) that indexes directly and unwraps, so a
+// short frame panics instead of returning an error.
+
+pub fn header_from_bytes(b: &[u8]) -> (u8, u32) {
+    let kind = b[0];
+    let len = u32::from_le_bytes(b[1..5].try_into().unwrap());
+    (kind, len)
+}

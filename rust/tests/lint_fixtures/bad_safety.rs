@@ -1,0 +1,6 @@
+// Known-bad fixture for INV-SAFETY: an `unsafe impl` with no
+// `// SAFETY:` justification anywhere above it.
+
+pub struct Handle(*mut u8);
+
+unsafe impl Send for Handle {}

@@ -1,0 +1,12 @@
+// Known-good twin of bad_alloc.rs: the hot function writes into a
+// caller-provided buffer; allocation happens once, in cold setup code
+// outside the annotated span.
+
+// qadam: hotpath
+pub fn unpack_hot(src: &[f32], out: &mut [f32]) {
+    out.copy_from_slice(src);
+}
+
+pub fn setup(n: usize) -> Vec<f32> {
+    vec![0.0; n]
+}

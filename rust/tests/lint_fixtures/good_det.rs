@@ -1,0 +1,12 @@
+// Known-good twin of bad_det.rs: an ordered container, and the one
+// wall-clock read carries a justified waiver (it feeds logging only,
+// never a round's arithmetic).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+pub fn pick(order: &BTreeMap<u32, f32>) -> f32 {
+    // lint: allow(INV-DET) progress logging only; no round arithmetic
+    let _t = Instant::now();
+    order.values().sum()
+}

@@ -1,0 +1,9 @@
+// Known-good twin of bad_panic.rs: Option-returning reads all the way
+// down — a short frame yields `None`, never a panic.
+
+// qadam: decode
+pub fn header_from_bytes(b: &[u8]) -> Option<(u8, u32)> {
+    let kind = *b.first()?;
+    let len = b.get(1..5).and_then(|s| s.try_into().ok()).map(u32::from_le_bytes)?;
+    Some((kind, len))
+}

@@ -1,0 +1,8 @@
+// Known-good twin of bad_safety.rs: the impl carries its argument, in
+// the same stacked-comment shape runtime/mod.rs uses.
+
+pub struct Handle(*mut u8);
+
+// SAFETY: the pointer is only ever dereferenced behind a global lock,
+// and construction/drop stay on the owning thread.
+unsafe impl Send for Handle {}

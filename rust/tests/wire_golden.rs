@@ -15,7 +15,7 @@
 //! points (zero stochastic-rounding mass), so the fixtures hold for any
 //! rng stream.
 
-use qadam::ps::protocol::{ToServer, ToWorker, WIRE_VERSION};
+use qadam::ps::protocol::{tag, ToServer, ToWorker, WIRE_VERSION};
 use qadam::quant::{
     decode_msg, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd, TernGrad, WQuant,
     WireMsg,
@@ -258,6 +258,44 @@ fn toworker_frames_match_golden_bytes() {
         let b = frame.to_bytes();
         ToWorker::from_bytes(&b).expect("golden frame must parse");
     }
+}
+
+/// The frame-tag registry itself: every constant in `protocol::tag` is
+/// pinned here by value, and the first byte of a sample frame of each
+/// kind equals its registry constant. `qadam lint` (INV-WIRE) checks
+/// that every `tag` constant appears in this file, so adding a tag
+/// without extending this test fails the analyzer.
+#[test]
+fn frame_tag_registry_is_pinned() {
+    assert_eq!(tag::TO_WORKER_SHUTDOWN, 0, "Shutdown tag moved — {BUMP}");
+    assert_eq!(tag::TO_WORKER_WEIGHTS, 1, "Weights tag moved — {BUMP}");
+    assert_eq!(tag::TO_WORKER_WEIGHTS_DELTA, 2, "WeightsDelta tag moved — {BUMP}");
+    assert_eq!(tag::TO_WORKER_WEIGHTS_DELTA_PARTS, 3, "WeightsDeltaParts tag moved — {BUMP}");
+    assert_eq!(tag::TO_SERVER_DELTA, 0, "Delta tag moved — {BUMP}");
+    assert_eq!(tag::TO_SERVER_DELTA_PARTS, 1, "DeltaParts tag moved — {BUMP}");
+
+    let msg = logquant_fixture_msg;
+    assert_eq!(ToWorker::Shutdown.to_bytes()[0], tag::TO_WORKER_SHUTDOWN);
+    assert_eq!(
+        ToWorker::Weights { t: 7, epoch: 1, msg: msg() }.to_bytes()[0],
+        tag::TO_WORKER_WEIGHTS
+    );
+    assert_eq!(
+        ToWorker::WeightsDelta { t: 7, epoch: 1, msg: msg() }.to_bytes()[0],
+        tag::TO_WORKER_WEIGHTS_DELTA
+    );
+    assert_eq!(
+        ToWorker::WeightsDeltaParts { t: 7, epoch: 1, parts: vec![msg()] }.to_bytes()[0],
+        tag::TO_WORKER_WEIGHTS_DELTA_PARTS
+    );
+    assert_eq!(
+        ToServer::Delta { t: 7, worker: 3, loss: 1.5, msg: msg() }.to_bytes()[0],
+        tag::TO_SERVER_DELTA
+    );
+    assert_eq!(
+        ToServer::DeltaParts { t: 7, worker: 3, loss: 1.5, parts: vec![msg()] }.to_bytes()[0],
+        tag::TO_SERVER_DELTA_PARTS
+    );
 }
 
 /// Both `ToServer` frame tags, byte-for-byte.

@@ -26,6 +26,12 @@ fi
 step "cargo build --release"
 cargo build --release
 
+# Invariant analyzer, hard gate: INV-ALLOC / INV-DET / INV-PANIC /
+# INV-SAFETY / INV-WIRE over rust/src/ (see DESIGN.md §Static analysis
+# & invariants). Nonzero exit on any finding.
+step "qadam lint (invariant analyzer)"
+target/release/qadam lint --root .
+
 step "cargo clippy --all-targets (-D warnings)"
 cargo clippy --all-targets --quiet -- -D warnings
 
@@ -86,10 +92,12 @@ target/release/qadam bench-diff --baseline BENCH_worker_step.json \
     --fresh /tmp/BENCH_worker_step_smoke.json
 
 # Binary-compatibility probe: `qadam info` must print its capability
-# JSON (wire version, frame tags, codecs, shard conventions) without
-# needing artifacts.
+# JSON (wire version, frame tags, codecs, shard conventions, invariant
+# registry) without needing artifacts.
 step "cli smoke: qadam info"
-target/release/qadam info | grep -q '"wire_version"'
+INFO_JSON="$(target/release/qadam info)"
+echo "$INFO_JSON" | grep -q '"wire_version"'
+echo "$INFO_JSON" | grep -q '"invariant_registry"'
 
 # The README operator runbook, executed as written: two shard servers
 # (one listener each, base port + shard id), two workers fanning their
@@ -115,6 +123,40 @@ if [ -f "${QADAM_ARTIFACTS:-artifacts}/manifest.json" ]; then
     cargo run --release --example quickstart
 else
     step "example smoke: quickstart (skipped: no artifacts)"
+fi
+
+# Opt-in sanitizer lanes (QADAM_SANITIZERS=1): Miri over the bit-packing
+# core and ThreadSanitizer over the threaded shard-parity suite — the
+# dynamic complement of the INV-SAFETY audit in runtime/mod.rs (the
+# TSan lane exercises exactly the `ThreadedBus` cross-thread path the
+# `unsafe impl Send/Sync` argument covers). Both need a nightly
+# toolchain; each lane auto-skips with a visible notice when its
+# toolchain is missing, so the default CI run never depends on rustup
+# or nightly being installed.
+have_nightly_with() { # component name, e.g. miri / rust-src
+    command -v rustup >/dev/null 2>&1 \
+        && rustup toolchain list 2>/dev/null | grep -q nightly \
+        && rustup component list --toolchain nightly 2>/dev/null \
+            | grep "$1" | grep -q installed
+}
+if [ "${QADAM_SANITIZERS:-0}" = "1" ]; then
+    if have_nightly_with miri; then
+        step "miri: quant::pack unit tests + pack_fuzz"
+        cargo +nightly miri test -q --lib quant::pack
+        cargo +nightly miri test -q --test pack_fuzz
+    else
+        step "miri (SKIPPED: no nightly toolchain with the miri component)"
+    fi
+    if have_nightly_with rust-src; then
+        step "thread sanitizer: shard_parity (ThreadedBus cross-thread path)"
+        TSAN_TARGET="$(rustc -vV | sed -n 's/^host: //p')"
+        RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std \
+            --target "$TSAN_TARGET" -q --test shard_parity
+    else
+        step "thread sanitizer (SKIPPED: no nightly toolchain with the rust-src component)"
+    fi
+else
+    step "sanitizer lanes (SKIPPED: opt-in — set QADAM_SANITIZERS=1; needs nightly + miri/rust-src)"
 fi
 
 echo
