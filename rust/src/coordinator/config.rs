@@ -106,6 +106,29 @@ impl Downlink {
     }
 }
 
+/// Observability switches (`--trace-out`, `--metrics-addr`). Kept out
+/// of [`ExperimentConfig`] on purpose: obs never changes what a run
+/// computes (bit-reproducibility is pinned by `rust/tests/obs.rs`), so
+/// it is not part of the experiment identity — two runs differing only
+/// in `ObsConfig` are the *same* experiment. The default is all-off,
+/// which is the zero-overhead path.
+#[derive(Clone, Debug, Default)]
+pub struct ObsConfig {
+    /// JSONL span-trace output path (`--trace-out`). `None` = no trace.
+    pub trace_out: Option<std::path::PathBuf>,
+    /// `GET /metrics` listener address (`--metrics-addr`, e.g.
+    /// `127.0.0.1:9184`). `None` = no exporter.
+    pub metrics_addr: Option<String>,
+}
+
+impl ObsConfig {
+    /// Whether any obs sink is requested — `false` keeps the trainer's
+    /// obs slot `None`, i.e. the statically-zero-cost path.
+    pub fn enabled(&self) -> bool {
+        self.trace_out.is_some() || self.metrics_addr.is_some()
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Model name from artifacts/manifest.json (e.g. "vgg_sim").

@@ -28,6 +28,10 @@ pub struct Row {
     /// merged (whole-fleet) row every run emits; multi-shard runs add
     /// one row per shard (`0..N`) with that shard's bytes/resyncs.
     pub shard: i64,
+    /// Wall-clock round time in milliseconds, measured by the injected
+    /// obs clock at the coordinator seam — `0` when tracing is off
+    /// (the clock is never read on the disabled path).
+    pub round_ms: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -49,8 +53,13 @@ impl MetricsLog {
         self.rows.last().map(|r| r.test_acc)
     }
 
+    /// Best test accuracy over the run, skipping non-finite evals: a
+    /// diverged eval (NaN loss → NaN accuracy) must not become the
+    /// "best" — and `reduce(f32::max)` would otherwise report
+    /// `Some(NaN)` for a NaN-only run. `None` when no finite eval
+    /// exists.
     pub fn best_acc(&self) -> Option<f32> {
-        self.rows.iter().map(|r| r.test_acc).reduce(f32::max)
+        self.rows.iter().map(|r| r.test_acc).filter(|a| a.is_finite()).reduce(f32::max)
     }
 
     pub fn write_csv(&self, path: &Path) -> Result<()> {
@@ -59,14 +68,16 @@ impl MetricsLog {
         }
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
+        // `round_ms` is appended at the end so positional consumers of
+        // the pre-obs columns keep parsing.
         writeln!(
             f,
-            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs,policy_bits,shard"
+            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs,policy_bits,shard,round_ms"
         )?;
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{},{},{},{:.3},{}",
+                "{},{},{},{},{:.6},{:.6},{},{},{},{:.3},{},{:.3}",
                 r.t,
                 r.epoch,
                 r.train_loss,
@@ -77,7 +88,8 @@ impl MetricsLog {
                 r.participation,
                 r.resyncs,
                 r.policy_bits,
-                r.shard
+                r.shard,
+                r.round_ms
             )?;
         }
         Ok(())
@@ -87,6 +99,23 @@ impl MetricsLog {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn row(t: u64, acc: f32, shard: i64) -> Row {
+        Row {
+            t,
+            epoch: 0,
+            train_loss: 0.0,
+            test_acc: acc,
+            up_mb_per_round: 0.0,
+            down_mb_per_round: 0.0,
+            residual_norm: 0.0,
+            participation: 1,
+            resyncs: 0,
+            policy_bits: 3.0,
+            shard,
+            round_ms: 0.0,
+        }
+    }
 
     #[test]
     fn csv_roundtrip_shape() {
@@ -103,6 +132,7 @@ mod tests {
             resyncs: 2,
             policy_bits: 2.75,
             shard: -1,
+            round_ms: 12.5,
         });
         let dir = std::env::temp_dir().join("qadam_metrics_test");
         let p = dir.join("m.csv");
@@ -110,9 +140,9 @@ mod tests {
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("t,epoch,"));
         let header = s.lines().next().unwrap();
-        assert!(header.ends_with("participation,resyncs,policy_bits,shard"));
+        assert!(header.ends_with("participation,resyncs,policy_bits,shard,round_ms"));
         assert_eq!(s.lines().count(), 2);
-        assert!(s.lines().nth(1).unwrap().ends_with(",7,2,2.750,-1"));
+        assert!(s.lines().nth(1).unwrap().ends_with(",7,2,2.750,-1,12.500"));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -120,21 +150,55 @@ mod tests {
     fn best_acc() {
         let mut log = MetricsLog::new("x");
         for (i, a) in [0.1f32, 0.5, 0.3].iter().enumerate() {
-            log.push(Row {
-                t: i as u64,
-                epoch: 0,
-                train_loss: 0.0,
-                test_acc: *a,
-                up_mb_per_round: 0.0,
-                down_mb_per_round: 0.0,
-                residual_norm: 0.0,
-                participation: 1,
-                resyncs: 0,
-                policy_bits: 3.0,
-                shard: -1,
-            });
+            log.push(row(i as u64, *a, -1));
         }
         assert_eq!(log.best_acc(), Some(0.5));
         assert_eq!(log.last_acc(), Some(0.3));
+    }
+
+    #[test]
+    fn best_acc_skips_non_finite_evals() {
+        let mut log = MetricsLog::new("x");
+        log.push(row(0, 0.4, -1));
+        log.push(row(1, f32::NAN, -1)); // diverged eval mid-run
+        log.push(row(2, 0.2, -1));
+        assert_eq!(log.best_acc(), Some(0.4), "NaN must not mask a finite best");
+
+        let mut diverged = MetricsLog::new("y");
+        diverged.push(row(0, f32::NAN, -1));
+        diverged.push(row(1, f32::INFINITY, -1));
+        assert_eq!(diverged.best_acc(), None, "no finite eval: no best, not Some(NaN)");
+        assert!(diverged.last_acc().unwrap().is_infinite(), "last_acc stays raw");
+    }
+
+    /// Multi-shard logs interleave one merged row (`shard = -1`) with
+    /// one row per shard at each log point; the CSV must preserve that
+    /// ordering and shape so per-shard consumers can group by the
+    /// final columns.
+    #[test]
+    fn multi_shard_csv_ordering_and_shape() {
+        let mut log = MetricsLog::new("sharded");
+        for t in [1u64, 2] {
+            log.push(row(t, 0.5, -1));
+            log.push(row(t, 0.5, 0));
+            log.push(row(t, 0.5, 1));
+        }
+        let dir = std::env::temp_dir().join("qadam_metrics_test_sharded");
+        let p = dir.join("m.csv");
+        log.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        let ncols = s.lines().next().unwrap().split(',').count();
+        let rows: Vec<&str> = s.lines().skip(1).collect();
+        assert_eq!(rows.len(), 6, "2 log points x (merged + 2 shards)");
+        let shard_of = |line: &str| -> i64 {
+            let cols: Vec<&str> = line.split(',').collect();
+            assert_eq!(cols.len(), ncols, "ragged row: {line}");
+            cols[ncols - 2].parse().unwrap() // shard is second-to-last, before round_ms
+        };
+        let shards: Vec<i64> = rows.iter().map(|l| shard_of(l)).collect();
+        assert_eq!(shards, vec![-1, 0, 1, -1, 0, 1], "merged row leads each log point");
+        let t_of = |line: &str| -> u64 { line.split(',').next().unwrap().parse().unwrap() };
+        assert_eq!(rows.iter().map(|l| t_of(l)).collect::<Vec<_>>(), vec![1, 1, 1, 2, 2, 2]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

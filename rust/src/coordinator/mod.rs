@@ -8,6 +8,6 @@ pub mod tables;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
-pub use config::{ExperimentConfig, Method};
+pub use config::{ExperimentConfig, Method, ObsConfig};
 pub use metrics::{MetricsLog, Row};
 pub use trainer::{RunSummary, Trainer};

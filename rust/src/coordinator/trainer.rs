@@ -6,6 +6,7 @@ use super::metrics::{MetricsLog, Row};
 use crate::data::{Dataset, SyntheticText, SyntheticVector, SyntheticVision};
 use crate::elastic::{ChaosTransport, StragglerPolicy};
 use crate::models::{artifacts_dir, Manifest};
+use crate::obs::{RoundObs, Span, SpanKind};
 use crate::optim::{BlockwiseSgdEf, LrSchedule, QAdamEf, TernGradSgd, WorkerOpt};
 use crate::ps::transport::{LocalBus, ThreadedBus, Transport};
 use crate::ps::worker::{ModelGradSource, Worker};
@@ -63,6 +64,16 @@ pub struct Trainer {
     /// eval) from a fresh `steps = 0` config or a repeated `run` call.
     restored: bool,
     pub log: MetricsLog,
+    /// Observability, off (`None`) by default. The round loop never
+    /// reads a clock, records a span, or touches a registry unless
+    /// [`Trainer::enable_obs`] installed one — that branch-on-None is
+    /// the zero-overhead-off guarantee (`rust/tests/obs.rs` pins
+    /// bit-identical trajectories, `alloc_regression.rs` pins the
+    /// allocation profile).
+    obs: Option<RoundObs>,
+    /// Duration of the last observed round in ns (0 with obs off) —
+    /// the `round_ms` CSV column.
+    last_round_ns: u64,
 }
 
 fn make_dataset(cfg: &ExperimentConfig, seq: usize, vocab: usize) -> Result<Arc<dyn Dataset>> {
@@ -260,7 +271,31 @@ impl Trainer {
             workers.push(w);
         }
         let log = MetricsLog::new(cfg.run_label());
-        Ok(Self { cfg, ps, workers, bus, model, data, restored: false, log })
+        Ok(Self {
+            cfg,
+            ps,
+            workers,
+            bus,
+            model,
+            data,
+            restored: false,
+            log,
+            obs: None,
+            last_round_ns: 0,
+        })
+    }
+
+    /// Install observability (span tracing + metrics registry). Build
+    /// the [`RoundObs`] with this trainer's shard count so the
+    /// per-shard metric series line up with the CSV's shard rows.
+    pub fn enable_obs(&mut self, obs: RoundObs) {
+        self.obs = Some(obs);
+    }
+
+    /// The installed obs registry (for mounting a `/metrics` listener
+    /// on it); `None` when obs is off.
+    pub fn obs_registry(&self) -> Option<std::sync::Arc<crate::obs::MetricsRegistry>> {
+        self.obs.as_ref().map(|o| o.registry.clone())
     }
 
     /// Model size at broadcast precision, MB.
@@ -273,11 +308,6 @@ impl Trainer {
             None => fp32,
         };
         (quant, fp32)
-    }
-
-    fn eval(&mut self) -> Result<f32> {
-        let w = self.ps.output_weights();
-        self.model.accuracy(&w, self.data.as_ref(), self.cfg.eval_batches)
     }
 
     /// Uplink policy bits for a metrics row (the worker controller's
@@ -305,6 +335,7 @@ impl Trainer {
             resyncs: merged.resyncs,
             policy_bits,
             shard: -1,
+            round_ms: self.last_round_ns as f64 / 1e6,
         });
         if self.ps.nshards() > 1 {
             for s in 0..self.ps.nshards() {
@@ -324,8 +355,80 @@ impl Trainer {
                     // queryable via `ParameterServer::downlink_bits`)
                     policy_bits,
                     shard: s as i64,
+                    // an in-process trainer drives every shard lane
+                    // through one round call, so per-shard time is not
+                    // observable here — 0, like byte-attribution spans
+                    round_ms: 0.0,
                 });
             }
+        }
+    }
+
+    /// Record one observed round: the merged phase spans (real
+    /// durations from the seam timestamps `ts = [t0..t3]`), per-shard
+    /// frame and per-lane reply byte-attribution spans (`dur_ns = 0` —
+    /// an in-process trainer drives all lanes through one transport
+    /// call, so it cannot see inside them; a `serve` process owns one
+    /// shard and gets real per-shard times), and the registry feed.
+    /// Only called with obs installed; everything it does is stores
+    /// into preallocated obs state.
+    fn record_round_obs(
+        &mut self,
+        t: u64,
+        frames: &[crate::ps::protocol::ToWorker],
+        replies: &[Vec<crate::ps::protocol::ToServer>],
+        ts: [u64; 4],
+        participation: usize,
+        loss: f32,
+    ) {
+        let [t0, t1, t2, t3] = ts;
+        let merged = self.ps.stats();
+        let nshards = self.ps.nshards();
+        let residual_inf = self.workers[0].residual_inf_norm();
+        let policy_bits = self.row_policy_bits();
+        let evictions = self.bus.straggler_evictions();
+        let faults = self.bus.fault_stats();
+        let Some(obs) = &mut self.obs else { return };
+        let span = |kind, start_ns, dur_ns, bytes| Span {
+            round: t,
+            shard: -1,
+            lane: -1,
+            kind,
+            start_ns,
+            dur_ns,
+            bytes,
+        };
+        let down: u64 = frames.iter().map(|f| f.wire_bytes() as u64).sum();
+        let up: u64 = replies.iter().flatten().map(|r| r.wire_bytes() as u64).sum();
+        obs.record(span(SpanKind::Broadcast, t0, t1 - t0, down));
+        for (s, f) in frames.iter().enumerate() {
+            obs.record(Span {
+                shard: s as i64,
+                dur_ns: 0,
+                bytes: f.wire_bytes() as u64,
+                ..span(SpanKind::Broadcast, t0, 0, 0)
+            });
+        }
+        obs.record(span(SpanKind::Gather, t1, t2 - t1, up));
+        for (s, lane) in replies.iter().enumerate() {
+            for r in lane {
+                obs.record(Span {
+                    shard: s as i64,
+                    lane: r.worker() as i64,
+                    bytes: r.wire_bytes() as u64,
+                    ..span(SpanKind::Gather, t1, 0, 0)
+                });
+            }
+        }
+        obs.record(span(SpanKind::DecodeApply, t2, t3 - t2, 0));
+        obs.registry.observe_comm(&merged, &[]);
+        for s in 0..nshards {
+            obs.registry.observe_shard(s, self.ps.shard_stats(s));
+        }
+        obs.registry.observe_round(t3 - t0, participation, residual_inf, policy_bits, loss);
+        obs.registry.straggler_evictions.set_cumulative(evictions);
+        if let Some(f) = faults {
+            obs.registry.observe_faults(&f);
         }
     }
 
@@ -342,21 +445,54 @@ impl Trainer {
             if m.rejoined {
                 self.ps.force_resync_all();
             }
-            let replies = {
-                let frames = self.ps.broadcast_at_epoch(m.present, epoch);
-                self.bus.round_sharded(&frames, &mut self.workers)?
-            };
+            // Obs timestamps bracket the phases at this seam — the
+            // clock is only read when obs is on, and never inside the
+            // transport/server calls themselves (INV-DET stays
+            // waiver-free: `ps/` code is untouched by timing).
+            let t0 = self.obs.as_mut().map_or(0, |o| o.now_ns());
+            let frames = self.ps.broadcast_at_epoch(m.present, epoch);
+            let t1 = self.obs.as_mut().map_or(0, |o| o.now_ns());
+            let replies = self.bus.round_sharded(&frames, &mut self.workers)?;
+            let t2 = self.obs.as_mut().map_or(0, |o| o.now_ns());
             let part = self.ps.apply(&replies)?;
+            let t3 = self.obs.as_mut().map_or(0, |o| o.now_ns());
             last_loss = part.mean_loss;
+            if self.obs.is_some() {
+                self.last_round_ns = t3 - t0;
+                self.record_round_obs(t, &frames, &replies, [t0, t1, t2, t3], part.count(), last_loss);
+            }
             let do_eval = self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0;
             if do_eval || t == self.cfg.steps {
-                let acc = self.eval()?;
+                // Inlined eval so the requantize phase (`Q_x` of the
+                // master for the eval/serving view) gets its span.
+                let r0 = self.obs.as_mut().map_or(0, |o| o.now_ns());
+                let w = self.ps.output_weights();
+                if let Some(obs) = &mut self.obs {
+                    let r1 = obs.now_ns();
+                    obs.record(Span {
+                        round: t,
+                        shard: -1,
+                        lane: -1,
+                        kind: SpanKind::Requantize,
+                        start_ns: r0,
+                        dur_ns: r1 - r0,
+                        bytes: 0,
+                    });
+                }
+                let acc = self.model.accuracy(&w, self.data.as_ref(), self.cfg.eval_batches)?;
+                if let Some(obs) = &self.obs {
+                    obs.registry.test_acc.set(acc as f64);
+                }
                 self.log_rows(t, epoch, last_loss, acc, part.count());
                 eprintln!(
                     "[{}] t={t} epoch={epoch} loss={last_loss:.4} acc={:.2}%",
                     self.log.label,
                     100.0 * acc
                 );
+            }
+            if let Some(obs) = &mut self.obs {
+                // per-round flush: a live `qadam top` tails whole lines
+                obs.end_round();
             }
         }
         if start > self.cfg.steps && self.restored {

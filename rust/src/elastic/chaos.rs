@@ -445,6 +445,14 @@ impl Transport for ChaosTransport {
     fn shutdown(&mut self) -> Result<()> {
         self.inner.shutdown()
     }
+
+    fn fault_stats(&self) -> Option<FaultStats> {
+        Some(self.stats)
+    }
+
+    fn straggler_evictions(&self) -> u64 {
+        self.inner.straggler_evictions()
+    }
 }
 
 impl ChaosTransport {

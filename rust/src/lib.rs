@@ -29,6 +29,11 @@
 //!   the deterministic `ChaosPlan`/`ChaosTransport` fault injector.
 //! * [`coordinator`] — experiment configs, the synchronous training
 //!   driver, metrics/CSV logging.
+//! * [`obs`] — observability: round-lifecycle span tracing behind an
+//!   injected clock, the atomic metrics registry, and the exporters
+//!   (`/metrics` Prometheus text, JSONL traces, `qadam top`). Timing
+//!   happens only at the coordinator seam — never inside [`ps`] /
+//!   [`quant`] — and the disabled path is a branch on a `None`.
 //! * [`sim`] — synthetic stochastic nonconvex problems for the
 //!   convergence-theory checks (Theorems 3.1–3.3).
 //! * [`analysis`] — the `qadam lint` static analyzer: a dependency-free
@@ -45,6 +50,7 @@ pub mod coordinator;
 pub mod data;
 pub mod elastic;
 pub mod models;
+pub mod obs;
 pub mod optim;
 pub mod ps;
 pub mod quant;

@@ -8,6 +8,8 @@
 //!   info    binary-compatibility capabilities (JSON) + artifacts/manifest.json
 //!   lint    static invariant analyzer over rust/src/ (the registry in
 //!           `qadam::analysis`; nonzero exit on any finding)
+//!   top     tail a `--trace-out` JSONL trace and render the per-shard
+//!           round-time/bytes table (refreshing, or --once / --check)
 //!
 //! Examples:
 //!   qadam train --model vgg_sim --dataset cifar10_sim --kg 2 --steps 200
@@ -36,7 +38,7 @@ const SIM_POLICY_TENSORS: usize = 4;
 const USAGE: &str = "\
 qadam — Quantized Adam with Error Feedback (paper reproduction)
 
-USAGE: qadam <train|eval|serve|worker|info|lint|bench-diff> [flags]
+USAGE: qadam <train|eval|serve|worker|info|lint|bench-diff|top> [flags]
 
 train flags:
   --model NAME          manifest model (default vgg_sim)
@@ -82,6 +84,12 @@ train flags:
   --csv PATH            write the metrics curve CSV
   --save-ckpt PATH      write a checkpoint at the end of training
   --resume PATH         resume from a checkpoint
+  --trace-out PATH      write a JSONL round-lifecycle span trace (tail it
+                        live with `qadam top --trace PATH`); also fills
+                        the CSV round_ms column. Off by default: the
+                        disabled path reads no clock and records nothing
+  --metrics-addr A      serve GET /metrics (Prometheus text format) from
+                        a dedicated listener, e.g. 127.0.0.1:9184
 
 eval flags:
   --ckpt PATH --model NAME --dataset NAME [--post-kx K] [--eval-batches N]
@@ -92,6 +100,11 @@ serve flags:  --addr A --workers N --dim D --steps N [--kx K] [--kg K]
               [--codec-policy P]  (applies to the delta downlink)
               [--shard-id i/N]  (this process serves shard i of N;
               listens on base addr port + i; default 0/1 = unsharded)
+              [--trace-out PATH]  (per-shard span trace: a serve process
+              owns one shard, so its spans are real per-shard timings)
+              [--metrics-addr A]  (GET /metrics listener — separate from
+              --addr: the worker listener treats any connection as a
+              rejoining worker, so never scrape that port)
 worker flags: --addr A --id I --dim D --method M [--kg K] [--alpha A]
               [--downlink D] [--codec-policy P] [--shards N]
               (match the server fleet; --shards N connects to the N
@@ -108,13 +121,23 @@ lint flags:   [--root PATH]  repo root (default: walk up from the cwd to
               waivers, then findings; nonzero exit on any finding.
 
 bench-diff flags: --baseline PATH --fresh PATH [--threshold PCT]
+              [--require-measured]
               compare two bench JSONs (benches/ emit them; the committed
               BENCH_*.json are the baselines). Entries present in both
               with measured medians are compared; a fresh median more
               than PCT percent slower (default 25) fails the command.
               Baseline entries with null medians count as unmeasured and
               never fail — `scripts/bench_diff.sh --refresh` measures
-              them.
+              them. --require-measured instead fails loudly when the
+              baseline carries any unmeasured placeholder, so a \"pass\"
+              can never be vacuous.
+
+top flags:    --trace PATH  the JSONL file a run writes via --trace-out
+              [--once]         render one table and exit
+              [--check]        parse + assert the trace covers the full
+                               round lifecycle (CI smoke; nonzero exit
+                               when a span kind is missing)
+              [--interval-ms N]  refresh cadence (default 1000)
 ";
 
 fn parse_method(a: &Args) -> Result<(Method, Option<u32>, Engine)> {
@@ -295,8 +318,26 @@ fn cmd_train(a: &Args) -> Result<()> {
     let csv: Option<String> = a.opt("csv")?;
     let save_ckpt: Option<String> = a.opt("save_ckpt")?;
     let resume: Option<String> = a.opt("resume")?;
+    let obs_cfg = qadam::coordinator::ObsConfig {
+        trace_out: a.opt::<String>("trace_out")?.map(std::path::PathBuf::from),
+        metrics_addr: a.opt("metrics_addr")?,
+    };
     a.reject_unknown()?;
+    let nshards = cfg.shards;
     let mut tr = Trainer::new(cfg)?;
+    if obs_cfg.enabled() {
+        let mut obs = qadam::obs::RoundObs::new(Box::new(qadam::obs::MonoClock::new()), nshards);
+        if let Some(p) = &obs_cfg.trace_out {
+            obs = obs.with_trace_out(p)?;
+            println!("tracing round lifecycle to {}", p.display());
+        }
+        tr.enable_obs(obs);
+        if let Some(addr) = &obs_cfg.metrics_addr {
+            let reg = tr.obs_registry().expect("obs just enabled");
+            let srv = qadam::obs::MetricsServer::spawn(addr, reg)?;
+            println!("serving /metrics on http://{}/metrics", srv.addr());
+        }
+    }
     if let Some(p) = resume {
         let ckpt = qadam::coordinator::Checkpoint::load(std::path::Path::new(&p))?;
         tr.restore(&ckpt)?;
@@ -339,7 +380,31 @@ fn cmd_serve(a: &Args) -> Result<()> {
     // function of (dim, shards, policy), so both ends agree on it.
     let plan = sim_plan(dim, nshards, &codec_policy)?;
     let (start, len) = plan.range(shard_id);
+    let trace_out: Option<String> = a.opt("trace_out")?;
+    let metrics_addr: Option<String> = a.opt("metrics_addr")?;
     a.reject_unknown()?;
+    // One serve process owns exactly one shard, so its spans carry this
+    // shard's id with *real* durations — the per-shard timing view the
+    // in-process trainer cannot produce. The registry is merged-only
+    // (`MetricsRegistry::new(1)`): it describes this process. The
+    // metrics listener binds before the worker accept loop below so the
+    // endpoint is scrapeable while the fleet is still assembling (and
+    // it must be a separate port: the worker listener treats any
+    // connection as a rejoining worker).
+    let mut obs = if trace_out.is_some() || metrics_addr.is_some() {
+        let mut o = qadam::obs::RoundObs::new(Box::new(qadam::obs::MonoClock::new()), 1);
+        if let Some(p) = &trace_out {
+            o = o.with_trace_out(std::path::Path::new(p))?;
+            println!("tracing round lifecycle to {p}");
+        }
+        if let Some(addr) = &metrics_addr {
+            let srv = qadam::obs::MetricsServer::spawn(addr, o.registry.clone())?;
+            println!("serving /metrics on http://{}/metrics", srv.addr());
+        }
+        Some(o)
+    } else {
+        None
+    };
     // Chaos (if any) wraps the TCP transport: reply-level faults apply
     // to the gathered frames. Crash windows act on the in-process
     // worker set, which a TCP server does not have — membership and
@@ -398,11 +463,45 @@ fn cmd_serve(a: &Args) -> Result<()> {
         if m.rejoined {
             ps.force_resync();
         }
-        let replies = {
-            let (b, _) = ps.broadcast(m.present);
-            bus.round(&b, &mut [])?
-        };
+        let t0 = obs.as_mut().map_or(0, |o| o.now_ns());
+        let (b, _) = ps.broadcast(m.present);
+        let t1 = obs.as_mut().map_or(0, |o| o.now_ns());
+        let replies = bus.round(&b, &mut [])?;
+        let t2 = obs.as_mut().map_or(0, |o| o.now_ns());
         let part = ps.apply(&replies)?;
+        if let Some(o) = &mut obs {
+            use qadam::obs::{Span, SpanKind};
+            let t3 = o.now_ns();
+            let sh = shard_id as i64;
+            let span = |kind, start_ns, dur_ns, bytes| Span {
+                round: t,
+                shard: sh,
+                lane: -1,
+                kind,
+                start_ns,
+                dur_ns,
+                bytes,
+            };
+            o.record(span(SpanKind::Broadcast, t0, t1 - t0, b.wire_bytes() as u64));
+            o.record(span(SpanKind::Gather, t1, t2 - t1, 0));
+            for r in &replies {
+                o.record(Span {
+                    lane: r.worker() as i64,
+                    bytes: r.wire_bytes() as u64,
+                    ..span(SpanKind::Gather, t1, 0, 0)
+                });
+            }
+            o.record(span(SpanKind::DecodeApply, t2, t3 - t2, 0));
+            o.registry.observe_comm(&ps.stats, &[]);
+            // A serve process cannot see worker-side EF residuals or
+            // the fleet-level codec policy; those gauges stay 0 here.
+            o.registry.observe_round(t3 - t0, part.count(), 0.0, 0.0, part.mean_loss);
+            o.registry.straggler_evictions.set_cumulative(bus.straggler_evictions());
+            if let Some(f) = bus.fault_stats() {
+                o.registry.observe_faults(&f);
+            }
+            o.end_round();
+        }
         if t % 50 == 0 || t == steps {
             if nshards == 1 {
                 println!(
@@ -573,6 +672,21 @@ fn cmd_info() -> Result<()> {
     println!("    \"snap_to_tensor_boundaries\": \"when a non-static codec policy is active\",");
     println!("    \"sharded_checkpoint_version\": 3");
     println!("  }},");
+    // Observability capability set: which exporters this binary ships,
+    // the trace schema it writes, and the exact metric series a scrape
+    // config can rely on. All sourced from the `qadam::obs` constants —
+    // a unit test asserts they match the real exposition.
+    println!("  \"obs\": {{");
+    let quoted = |xs: &[&str]| {
+        xs.iter().map(|x| format!("\"{x}\"")).collect::<Vec<_>>().join(", ")
+    };
+    println!("    \"exporters\": [{}],", quoted(&qadam::obs::EXPORTERS));
+    println!("    \"trace_schema_version\": {},", qadam::obs::TRACE_SCHEMA_VERSION);
+    let kinds: Vec<&str> = qadam::obs::SpanKind::ALL.iter().map(|k| k.name()).collect();
+    println!("    \"span_kinds\": [{}],", quoted(&kinds));
+    println!("    \"metrics_content_type\": \"{}\",", qadam::obs::CONTENT_TYPE);
+    println!("    \"metric_names\": [{}]", quoted(&qadam::obs::METRIC_NAMES));
+    println!("  }},");
     // Which invariant rule set this binary's `qadam lint` enforces —
     // CI and bench-diff-style probes assert on it.
     println!("  \"invariant_registry\": {{");
@@ -672,11 +786,21 @@ fn cmd_bench_diff(a: &Args) -> Result<()> {
     let baseline = a.get_str("baseline", "");
     let fresh = a.get_str("fresh", "");
     let threshold: f64 = a.get("threshold", 25.0)?;
+    let require_measured = a.flag("require_measured");
     a.reject_unknown()?;
     if baseline.is_empty() || fresh.is_empty() {
         bail!("bench-diff needs --baseline and --fresh JSON paths\n{USAGE}");
     }
     let (base_tag, base, base_unmeasured) = load_bench(&baseline)?;
+    if require_measured && base_unmeasured > 0 {
+        // Unmeasured placeholders silently shrink the comparison set; a
+        // gate that must mean something (bench_diff.sh --refresh
+        // self-check) opts into failing instead.
+        bail!(
+            "--require-measured: baseline {baseline} carries {base_unmeasured} unmeasured \
+             (null-median) entries — run scripts/bench_diff.sh --refresh to record them"
+        );
+    }
     let (fresh_tag, new, _) = load_bench(&fresh)?;
     if base_tag != fresh_tag {
         bail!("bench mismatch: baseline is '{base_tag}', fresh run is '{fresh_tag}'");
@@ -715,6 +839,61 @@ fn cmd_bench_diff(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `qadam top`: tail a `--trace-out` JSONL trace and render the
+/// per-shard round-time/bytes table. `--once` renders a single frame;
+/// `--check` is the CI smoke gate — parse the trace and fail unless it
+/// covers the full round lifecycle.
+fn cmd_top(a: &Args) -> Result<()> {
+    let trace = a.get_str("trace", "");
+    let once = a.flag("once");
+    let check = a.flag("check");
+    let interval_ms: u64 = a.get("interval_ms", 1000)?;
+    a.reject_unknown()?;
+    if trace.is_empty() {
+        bail!("top needs --trace PATH (the file a run writes via --trace-out)\n{USAGE}");
+    }
+    let path = std::path::PathBuf::from(&trace);
+    if check {
+        let tf = qadam::obs::read_trace(&path)?;
+        let covered = tf.covered_kinds();
+        println!(
+            "trace {}: schema v{}, clock {}, {} spans, covers [{}]",
+            trace,
+            tf.schema_version,
+            tf.clock,
+            tf.spans.len(),
+            covered.join(", ")
+        );
+        if !tf.covers_lifecycle() {
+            bail!(
+                "trace covers only [{}] of the round lifecycle — expected all of \
+                 broadcast/gather/decode_apply/requantize (did the run eval at least once?)",
+                covered.join(", ")
+            );
+        }
+        return Ok(());
+    }
+    loop {
+        let table = match qadam::obs::read_trace(&path) {
+            Ok(tf) => qadam::obs::render_table(&tf),
+            // A live run may not have written the header yet — keep
+            // polling instead of dying under `qadam top` started first.
+            Err(e) if !once => format!("waiting for {trace}: {e}\n"),
+            Err(e) => return Err(e),
+        };
+        if once {
+            print!("{table}");
+            return Ok(());
+        }
+        // ANSI clear + home, like watch(1); main.rs is outside the
+        // INV-DET scope, so sleeping here needs no waiver.
+        print!("\x1b[2J\x1b[H{table}");
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(100)));
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::parse_env()?;
     match args.subcommand.as_deref() {
@@ -725,6 +904,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(),
         Some("lint") => cmd_lint(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
+        Some("top") => cmd_top(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())

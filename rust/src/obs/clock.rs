@@ -1,0 +1,115 @@
+//! The injected clock behind every observability timestamp.
+//!
+//! Timing is the one thing the round path must never do itself: the
+//! INV-DET invariant bans wall-clock reads from `ps/`, `quant/` and
+//! `elastic/` so fixed-seed runs stay bit-reproducible. The span layer
+//! therefore reads time only through this trait, only from the
+//! coordinator seam (`obs/` and `coordinator/` are outside the
+//! INV-DET scope — see DESIGN.md §Observability), and only when
+//! tracing is enabled:
+//!
+//! * [`MonoClock`] — monotonic wall clock for real runs. Lives here,
+//!   not in `ps/`, precisely so it needs no lint waiver.
+//! * [`TickClock`] — a deterministic counter for tests and golden
+//!   fixtures: every read advances by a fixed tick, so span durations
+//!   are exact, reproducible numbers.
+//!
+//! Timestamps are nanoseconds since an arbitrary per-clock origin
+//! (process start for [`MonoClock`], zero for [`TickClock`]); only
+//! differences are meaningful.
+
+use std::time::Instant;
+
+/// Nanosecond time source for spans and the `round_ms` CSV column.
+/// `Send` so a clock can accompany a trainer onto a worker thread.
+pub trait Clock: Send {
+    /// Monotonic nanoseconds since this clock's origin. Takes `&mut
+    /// self` so deterministic clocks can advance without interior
+    /// mutability.
+    fn now_ns(&mut self) -> u64;
+    /// Short name for the trace header (`mono` | `tick`).
+    fn name(&self) -> &'static str;
+}
+
+/// Real monotonic time ([`Instant`]-based) for live runs.
+pub struct MonoClock {
+    origin: Instant,
+}
+
+impl MonoClock {
+    pub fn new() -> Self {
+        Self { origin: Instant::now() }
+    }
+}
+
+impl Default for MonoClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonoClock {
+    fn now_ns(&mut self) -> u64 {
+        // u64 nanoseconds overflow after ~584 years of process uptime.
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "mono"
+    }
+}
+
+/// Deterministic test clock: every read returns the previous value
+/// plus a fixed tick, starting at the tick itself. Two observed
+/// instants are therefore always exactly one tick apart, which makes
+/// span durations (and the `round_ms` column) exact golden numbers.
+pub struct TickClock {
+    now: u64,
+    tick: u64,
+}
+
+impl TickClock {
+    /// A clock advancing `tick_ns` nanoseconds per read.
+    pub fn new(tick_ns: u64) -> Self {
+        Self { now: 0, tick: tick_ns }
+    }
+
+    /// The default test clock: 1 ms per read.
+    pub fn millis() -> Self {
+        Self::new(1_000_000)
+    }
+}
+
+impl Clock for TickClock {
+    fn now_ns(&mut self) -> u64 {
+        self.now += self.tick;
+        self.now
+    }
+
+    fn name(&self) -> &'static str {
+        "tick"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_clock_is_deterministic() {
+        let mut c = TickClock::new(10);
+        assert_eq!(c.now_ns(), 10);
+        assert_eq!(c.now_ns(), 20);
+        assert_eq!(c.now_ns(), 30);
+        assert_eq!(c.name(), "tick");
+    }
+
+    #[test]
+    fn mono_clock_is_monotonic() {
+        let mut c = MonoClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+        assert_eq!(c.name(), "mono");
+    }
+}

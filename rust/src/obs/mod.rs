@@ -1,0 +1,185 @@
+//! Observability: round-lifecycle tracing, the metrics registry, and
+//! exporters — with a zero-overhead-off guarantee.
+//!
+//! Layering (see DESIGN.md §Observability):
+//!
+//! * [`clock`] — the injected [`Clock`] trait. The *only* place the
+//!   wall clock is read for telemetry; lives here (outside the
+//!   INV-DET lint scope) so the seam needs no waivers.
+//! * [`trace`] — [`RoundTrace`] span ring + [`TraceWriter`] JSONL
+//!   output (`--trace-out`).
+//! * [`registry`] — [`MetricsRegistry`]: atomic counters / gauges /
+//!   fixed-bucket histograms fed from values the round already
+//!   produces.
+//! * [`prometheus`] — text exposition + the `--metrics-addr`
+//!   `GET /metrics` listener.
+//! * [`top`] — trace reader and the `qadam top` per-shard table.
+//!
+//! The whole subsystem hangs off one `Option<RoundObs>` in the
+//! trainer (and one in `serve`). `None` — the default — means no
+//! clock is read, no span recorded, no registry constructed: the
+//! disabled path is a branch on a `None`, which is how tracing-off
+//! runs stay bit-identical *and* allocation-identical to builds that
+//! never heard of obs (`rust/tests/obs.rs`,
+//! `rust/tests/alloc_regression.rs`). When enabled, every update is a
+//! store into preallocated storage, and timing happens strictly at the
+//! coordinator/transport seam — never inside `ps/` / `quant/` hot
+//! paths.
+
+pub mod clock;
+pub mod prometheus;
+pub mod registry;
+pub mod top;
+pub mod trace;
+
+pub use clock::{Clock, MonoClock, TickClock};
+pub use prometheus::{render, MetricsServer, CONTENT_TYPE};
+pub use registry::MetricsRegistry;
+pub use top::{read_trace, render_table, TraceFile};
+pub use trace::{RoundTrace, Span, SpanKind, TraceWriter, TRACE_SCHEMA_VERSION};
+
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Exporters this build ships, for the `qadam info` capability set.
+pub const EXPORTERS: [&str; 2] = ["prometheus", "jsonl_trace"];
+
+/// Every metric series the registry exports, for `qadam info`.
+pub const METRIC_NAMES: [&str; 13] = [
+    "qadam_rounds_total",
+    "qadam_up_bytes_total",
+    "qadam_down_bytes_total",
+    "qadam_resyncs_total",
+    "qadam_straggler_evictions_total",
+    "qadam_chaos_faults_total",
+    "qadam_participation",
+    "qadam_ef_residual_inf_norm",
+    "qadam_policy_bits",
+    "qadam_train_loss",
+    "qadam_test_acc",
+    "qadam_round_latency_ms",
+    "qadam_frame_bytes",
+];
+
+/// Spans retained in-memory: enough for the merged + per-shard +
+/// per-lane spans of the last few dozen rounds at smoke scale.
+const TRACE_RING_CAPACITY: usize = 1024;
+
+/// Everything one observed run carries: the injected clock, the span
+/// ring, the optional JSONL writer, and the shared registry (shared so
+/// a detached [`MetricsServer`] can read it).
+pub struct RoundObs {
+    clock: Box<dyn Clock>,
+    pub trace: RoundTrace,
+    writer: Option<TraceWriter>,
+    pub registry: Arc<MetricsRegistry>,
+}
+
+impl RoundObs {
+    pub fn new(clock: Box<dyn Clock>, nshards: usize) -> Self {
+        Self {
+            clock,
+            trace: RoundTrace::new(TRACE_RING_CAPACITY),
+            writer: None,
+            registry: Arc::new(MetricsRegistry::new(nshards)),
+        }
+    }
+
+    /// Attach a JSONL trace writer (creates/truncates `path`, writes
+    /// the schema header).
+    pub fn with_trace_out(mut self, path: &Path) -> Result<Self> {
+        self.writer = Some(TraceWriter::create(path, self.clock.name())?);
+        Ok(self)
+    }
+
+    pub fn clock_name(&self) -> &'static str {
+        self.clock.name()
+    }
+
+    pub fn now_ns(&mut self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Record a span: ring store, optional JSONL line, and frame-size
+    /// histogram for byte-carrying spans. No allocation.
+    ///
+    /// Only per-shard spans (`shard >= 0`) feed the byte histogram:
+    /// they are the actual wire frames. Merged (`shard = -1`) spans
+    /// carry byte *totals* for the trace and would double-count.
+    pub fn record(&mut self, span: Span) {
+        self.trace.record(span);
+        if span.bytes > 0 && span.shard >= 0 {
+            self.registry.frame_bytes.observe(span.bytes);
+        }
+        if let Some(w) = &mut self.writer {
+            // Trace IO failures must not kill training; the writer
+            // reports once per flush instead (see end_round).
+            let _ = w.write_span(&span);
+        }
+    }
+
+    /// End-of-round: flush the trace so a live `qadam top` sees whole
+    /// lines. IO errors surface here, once, as a warning.
+    pub fn end_round(&mut self) {
+        if let Some(w) = &mut self.writer {
+            if let Err(e) = w.flush() {
+                eprintln!("[obs] trace flush failed: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_feeds_ring_histogram_and_jsonl() {
+        let dir = std::env::temp_dir().join("qadam_obs_mod_test");
+        let p = dir.join("t.jsonl");
+        let mut obs = RoundObs::new(Box::new(TickClock::millis()), 2);
+        obs = obs.with_trace_out(&p).unwrap();
+        assert_eq!(obs.clock_name(), "tick");
+        let t0 = obs.now_ns();
+        let t1 = obs.now_ns();
+        obs.record(Span {
+            round: 0,
+            shard: -1,
+            lane: -1,
+            kind: SpanKind::Broadcast,
+            start_ns: t0,
+            dur_ns: t1 - t0,
+            bytes: 128,
+        });
+        obs.record(Span {
+            round: 0,
+            shard: 0,
+            lane: -1,
+            kind: SpanKind::Broadcast,
+            start_ns: t0,
+            dur_ns: 0,
+            bytes: 128,
+        });
+        obs.end_round();
+        assert_eq!(obs.trace.len(), 2);
+        // only the per-shard span feeds the byte histogram — the
+        // merged total would double-count
+        assert_eq!(obs.registry.frame_bytes.count(), 1);
+        assert_eq!(obs.registry.frame_bytes.sum(), 128);
+        let tf = read_trace(&p).unwrap();
+        assert_eq!(tf.clock, "tick");
+        assert_eq!(tf.spans.len(), 2);
+        assert_eq!(tf.spans[0].dur_ns, 1_000_000, "tick clock: exactly one tick");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn capability_constants_match_the_exposition() {
+        let reg = MetricsRegistry::new(2);
+        let text = render(&reg);
+        for name in METRIC_NAMES {
+            assert!(text.contains(name), "{name} missing from exposition");
+        }
+    }
+}

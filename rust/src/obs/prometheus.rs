@@ -1,0 +1,268 @@
+//! Prometheus text-format exposition for the [`MetricsRegistry`], plus
+//! a tiny embedded HTTP listener (`GET /metrics`).
+//!
+//! The exporter is deliberately not mounted on the parameter server's
+//! worker listener: `TcpServer::membership` treats *any* pending
+//! connection as a rejoining worker, so an HTTP scrape on that port
+//! would be admitted into the round. The metrics endpoint therefore
+//! binds its own address (`--metrics-addr`) and serves from a detached
+//! thread that only ever *reads* the shared registry atomics — it can
+//! never perturb the round path, which is half of the zero-overhead
+//! story (the other half: with obs off, the registry never exists).
+
+use super::registry::{MetricsRegistry, FAULT_KINDS};
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// The exposition content type (Prometheus text format 0.0.4).
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+fn f64_str(v: f64) -> String {
+    // `{}` prints 2.0 as "2" and 2.75 as "2.75" — both valid exposition.
+    format!("{v}")
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn sharded_counter(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    reg: &MetricsRegistry,
+    get: impl Fn(&super::registry::ShardComm) -> u64,
+) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name}{{shard=\"-1\"}} {}", get(&reg.merged));
+    for i in 0..reg.nshards() {
+        let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {}", get(reg.shard(i)));
+    }
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {}", f64_str(v));
+}
+
+/// Render a histogram whose raw `u64` observations are scaled by
+/// `1/scale` on the way out (`scale = 1e6` turns stored nanoseconds
+/// into exported milliseconds; `scale = 1.0` exports raw).
+fn histogram(out: &mut String, name: &str, help: &str, h: &super::registry::Histogram, scale: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (bound, cum) in h.cumulative() {
+        if bound == u64::MAX {
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        } else {
+            let le = f64_str(bound as f64 / scale);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_sum {}", f64_str(h.sum() as f64 / scale));
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+/// Render the full registry in Prometheus text format 0.0.4.
+pub fn render(reg: &MetricsRegistry) -> String {
+    let mut out = String::with_capacity(4096);
+    counter(&mut out, "qadam_rounds_total", "Training rounds completed.", reg.rounds.get());
+    sharded_counter(
+        &mut out,
+        "qadam_up_bytes_total",
+        "Uplink wire bytes (workers to server).",
+        reg,
+        |s| s.up_bytes.get(),
+    );
+    sharded_counter(
+        &mut out,
+        "qadam_down_bytes_total",
+        "Downlink wire bytes (server to workers).",
+        reg,
+        |s| s.down_bytes.get(),
+    );
+    sharded_counter(
+        &mut out,
+        "qadam_resyncs_total",
+        "Full-precision resync broadcasts.",
+        reg,
+        |s| s.resyncs.get(),
+    );
+    counter(
+        &mut out,
+        "qadam_straggler_evictions_total",
+        "Worker lanes evicted by the straggler deadline.",
+        reg.straggler_evictions.get(),
+    );
+    let _ =
+        writeln!(out, "# HELP qadam_chaos_faults_total Faults injected by the chaos plan, by kind.");
+    let _ = writeln!(out, "# TYPE qadam_chaos_faults_total counter");
+    for (i, kind) in FAULT_KINDS.iter().enumerate() {
+        let v = reg.chaos_faults[i].get();
+        let _ = writeln!(out, "qadam_chaos_faults_total{{kind=\"{kind}\"}} {v}");
+    }
+    gauge(
+        &mut out,
+        "qadam_participation",
+        "Workers present in the last round.",
+        reg.participation.get(),
+    );
+    gauge(
+        &mut out,
+        "qadam_ef_residual_inf_norm",
+        "Infinity norm of the error-feedback residual (worker 0).",
+        reg.ef_residual_inf_norm.get(),
+    );
+    gauge(
+        &mut out,
+        "qadam_policy_bits",
+        "Mean per-tensor codec-policy bits chosen in the last round.",
+        reg.policy_bits.get(),
+    );
+    gauge(&mut out, "qadam_train_loss", "Last observed training loss.", reg.train_loss.get());
+    gauge(&mut out, "qadam_test_acc", "Last observed test accuracy.", reg.test_acc.get());
+    histogram(
+        &mut out,
+        "qadam_round_latency_ms",
+        "End-to-end round latency, milliseconds.",
+        &reg.round_latency_ns,
+        1e6,
+    );
+    histogram(&mut out, "qadam_frame_bytes", "Wire frame sizes, bytes.", &reg.frame_bytes, 1.0);
+    out
+}
+
+/// A detached `/metrics` listener. Holds no join handle on purpose:
+/// the thread only reads atomics and dies with the process.
+pub struct MetricsServer {
+    addr: SocketAddr,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`, port `0` for ephemeral) and
+    /// serve `GET /metrics` from a background thread.
+    pub fn spawn(addr: &str, registry: Arc<MetricsRegistry>) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics addr {addr}"))?;
+        let local = listener.local_addr()?;
+        std::thread::spawn(move || {
+            for s in listener.incoming().flatten() {
+                let _ = handle(s, &registry);
+            }
+        });
+        Ok(Self { addr: local })
+    }
+
+    /// The bound address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+fn handle(mut stream: TcpStream, registry: &MetricsRegistry) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    // Read the request line; scrapes are tiny, one read suffices for
+    // well-formed clients and anything else gets a 400/404.
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let parts: Vec<&str> =
+        req.lines().next().map(|l| l.split_whitespace().collect()).unwrap_or_default();
+    let (status, ctype, body) = match parts.as_slice() {
+        ["GET", "/metrics", ..] => ("200 OK", CONTENT_TYPE, render(registry)),
+        ["GET", ..] if parts.len() >= 2 => {
+            ("404 Not Found", "text/plain", "only /metrics lives here\n".to_string())
+        }
+        _ => ("400 Bad Request", "text/plain", "bad request\n".to_string()),
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::protocol::CommStats;
+
+    /// Golden exposition fixture: a registry with known values renders
+    /// byte-exactly. Guards series names, label scheme, and bucket
+    /// scaling against silent drift (dashboards parse this text).
+    #[test]
+    fn golden_exposition_two_shards() {
+        let reg = MetricsRegistry::new(2);
+        let a = CommStats { down_bytes: 100, up_bytes: 40, rounds: 3, resyncs: 1 };
+        let b = CommStats { down_bytes: 60, up_bytes: 20, rounds: 3, resyncs: 1 };
+        let merged = CommStats { down_bytes: 160, up_bytes: 60, rounds: 3, resyncs: 2 };
+        reg.observe_comm(&merged, &[&a, &b]);
+        reg.observe_round(2_000_000, 4, 0.5, 2.75, 0.125);
+        reg.test_acc.set(0.75);
+        reg.frame_bytes.observe(100);
+        let text = render(&reg);
+        for want in [
+            "# TYPE qadam_rounds_total counter\nqadam_rounds_total 3\n",
+            "qadam_up_bytes_total{shard=\"-1\"} 60\n",
+            "qadam_up_bytes_total{shard=\"0\"} 40\n",
+            "qadam_up_bytes_total{shard=\"1\"} 20\n",
+            "qadam_down_bytes_total{shard=\"-1\"} 160\n",
+            "qadam_resyncs_total{shard=\"-1\"} 2\nqadam_resyncs_total{shard=\"0\"} 1\n",
+            "qadam_straggler_evictions_total 0\n",
+            "qadam_chaos_faults_total{kind=\"drop\"} 0\n",
+            "qadam_chaos_faults_total{kind=\"crash\"} 0\n",
+            "# TYPE qadam_participation gauge\nqadam_participation 4\n",
+            "qadam_ef_residual_inf_norm 0.5\n",
+            "qadam_policy_bits 2.75\n",
+            "qadam_train_loss 0.125\n",
+            "qadam_test_acc 0.75\n",
+            // 2ms observation: le="1" misses it, le="2" catches it.
+            "qadam_round_latency_ms_bucket{le=\"1\"} 0\n",
+            "qadam_round_latency_ms_bucket{le=\"2\"} 1\n",
+            "qadam_round_latency_ms_bucket{le=\"+Inf\"} 1\n",
+            "qadam_round_latency_ms_sum 2\nqadam_round_latency_ms_count 1\n",
+            "qadam_frame_bytes_bucket{le=\"256\"} 1\n",
+            "qadam_frame_bytes_sum 100\nqadam_frame_bytes_count 1\n",
+        ] {
+            assert!(text.contains(want), "missing exposition fragment:\n{want}\nin:\n{text}");
+        }
+    }
+
+    #[test]
+    fn single_shard_renders_only_the_merged_series() {
+        let reg = MetricsRegistry::new(1);
+        reg.observe_comm(&CommStats { down_bytes: 8, up_bytes: 4, rounds: 1, resyncs: 1 }, &[]);
+        let text = render(&reg);
+        assert!(text.contains("qadam_up_bytes_total{shard=\"-1\"} 4\n"));
+        assert!(!text.contains("shard=\"0\""));
+    }
+
+    #[test]
+    fn serves_metrics_over_a_real_socket() {
+        let reg = Arc::new(MetricsRegistry::new(1));
+        reg.rounds.set_cumulative(7);
+        let srv = MetricsServer::spawn("127.0.0.1:0", reg).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains(&format!("Content-Type: {CONTENT_TYPE}\r\n")), "{resp}");
+        assert!(resp.contains("qadam_rounds_total 7\n"), "{resp}");
+
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        write!(s, "GET /else HTTP/1.1\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+    }
+}

@@ -1,0 +1,325 @@
+//! The metrics registry: a fixed set of counters, gauges and
+//! fixed-bucket histograms, updated from values the round already
+//! produces ([`CommStats`], [`Participation`][crate::elastic::Participation],
+//! [`FaultStats`], codec-policy bits) — never from inside `ps/` /
+//! `quant/` hot paths.
+//!
+//! Everything is atomics over preallocated storage: updating a metric
+//! is a handful of relaxed stores, recording allocates nothing (the
+//! counting-allocator suite asserts this), and the Prometheus exporter
+//! thread reads the same registry through an `Arc` without locks.
+//! Cumulative counters are fed *snapshots* (`CommStats` is already
+//! cumulative) through [`Counter::set_cumulative`], which only moves
+//! forward — so exposition stays monotonic even across forced resyncs
+//! and retried rounds.
+//!
+//! Naming scheme (see DESIGN.md §Observability): every series is
+//! prefixed `qadam_`, cumulative series end in `_total`, and the
+//! `shard` label uses the metrics-CSV convention — `-1` is the merged
+//! fleet view, `0..N` are per-shard series (emitted only by
+//! multi-shard registries, like the CSV's per-shard rows).
+
+use crate::elastic::FaultStats;
+use crate::ps::protocol::CommStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    /// Add a per-event increment.
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Feed a cumulative snapshot: the counter only ever moves
+    /// forward, so re-feeding an old snapshot can never make the
+    /// exposition non-monotonic.
+    pub fn set_cumulative(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge (f64 stored as bits).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram over integer observations (nanoseconds,
+/// bytes). Buckets are preallocated at construction; observing is a
+/// linear scan plus three atomic adds.
+pub struct Histogram {
+    /// Upper bounds (inclusive), ascending; an implicit `+Inf` bucket
+    /// follows the last bound.
+    bounds: Vec<u64>,
+    /// `bounds.len() + 1` per-bucket (non-cumulative) counts.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[u64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Self {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// `(upper_bound, cumulative_count)` per bucket, the `+Inf` bucket
+    /// last (bound = `u64::MAX` stands in for `+Inf`).
+    pub fn cumulative(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        let mut acc = 0u64;
+        self.buckets.iter().enumerate().map(move |(i, b)| {
+            acc += b.load(Ordering::Relaxed);
+            (self.bounds.get(i).copied().unwrap_or(u64::MAX), acc)
+        })
+    }
+}
+
+/// Round-latency bucket bounds, nanoseconds (1 ms … 1 s, then +Inf).
+pub const ROUND_LATENCY_BOUNDS_NS: [u64; 10] = [
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+    20_000_000,
+    50_000_000,
+    100_000_000,
+    200_000_000,
+    500_000_000,
+    1_000_000_000,
+];
+
+/// Wire-frame size bucket bounds, bytes (256 B … 4 MB, then +Inf).
+pub const FRAME_BYTES_BOUNDS: [u64; 8] =
+    [256, 1_024, 4_096, 16_384, 65_536, 262_144, 1_048_576, 4_194_304];
+
+/// Chaos-fault kind label values, in [`FaultStats`] field order.
+pub const FAULT_KINDS: [&str; 5] = ["drop", "delay", "duplicate", "corrupt", "crash"];
+
+/// Per-shard cumulative byte/round accounting.
+pub struct ShardComm {
+    pub up_bytes: Counter,
+    pub down_bytes: Counter,
+    pub resyncs: Counter,
+}
+
+impl ShardComm {
+    fn new() -> Self {
+        Self { up_bytes: Counter::new(), down_bytes: Counter::new(), resyncs: Counter::new() }
+    }
+
+    fn feed(&self, s: &CommStats) {
+        self.up_bytes.set_cumulative(s.up_bytes);
+        self.down_bytes.set_cumulative(s.down_bytes);
+        self.resyncs.set_cumulative(s.resyncs);
+    }
+}
+
+/// The fixed metric set one run exports. Constructed once per run
+/// (with the shard count), then updated lock-free from the round loop.
+pub struct MetricsRegistry {
+    /// Per-shard series (`shard` label `0..N`); empty for single-shard
+    /// runs, which export only the merged view — the CSV convention.
+    shards: Vec<ShardComm>,
+    /// Merged (`shard = -1`) accounting.
+    pub merged: ShardComm,
+    pub rounds: Counter,
+    pub straggler_evictions: Counter,
+    /// Indexed like [`FAULT_KINDS`].
+    pub chaos_faults: [Counter; 5],
+    pub participation: Gauge,
+    pub ef_residual_inf_norm: Gauge,
+    pub policy_bits: Gauge,
+    pub train_loss: Gauge,
+    pub test_acc: Gauge,
+    pub round_latency_ns: Histogram,
+    pub frame_bytes: Histogram,
+}
+
+impl MetricsRegistry {
+    pub fn new(nshards: usize) -> Self {
+        Self {
+            shards: if nshards > 1 {
+                (0..nshards).map(|_| ShardComm::new()).collect()
+            } else {
+                Vec::new()
+            },
+            merged: ShardComm::new(),
+            rounds: Counter::new(),
+            straggler_evictions: Counter::new(),
+            chaos_faults: std::array::from_fn(|_| Counter::new()),
+            participation: Gauge::new(),
+            ef_residual_inf_norm: Gauge::new(),
+            policy_bits: Gauge::new(),
+            train_loss: Gauge::new(),
+            test_acc: Gauge::new(),
+            round_latency_ns: Histogram::new(&ROUND_LATENCY_BOUNDS_NS),
+            frame_bytes: Histogram::new(&FRAME_BYTES_BOUNDS),
+        }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &ShardComm {
+        &self.shards[i]
+    }
+
+    /// Feed the cumulative comm snapshots: the merged view plus (in
+    /// multi-shard runs) each shard's own [`CommStats`].
+    pub fn observe_comm(&self, merged: &CommStats, per_shard: &[&CommStats]) {
+        self.merged.feed(merged);
+        self.rounds.set_cumulative(merged.rounds);
+        for (reg, s) in self.shards.iter().zip(per_shard) {
+            reg.feed(s);
+        }
+    }
+
+    /// Feed one shard's cumulative [`CommStats`] without building a
+    /// slice (the round loop's zero-alloc path). No-op for shard
+    /// indices a single-shard registry doesn't carry.
+    pub fn observe_shard(&self, i: usize, s: &CommStats) {
+        if let Some(reg) = self.shards.get(i) {
+            reg.feed(s);
+        }
+    }
+
+    /// Feed a round's scalar outcomes.
+    pub fn observe_round(
+        &self,
+        round_ns: u64,
+        participation: usize,
+        residual_inf_norm: f32,
+        policy_bits: f64,
+        train_loss: f32,
+    ) {
+        if round_ns > 0 {
+            self.round_latency_ns.observe(round_ns);
+        }
+        self.participation.set(participation as f64);
+        self.ef_residual_inf_norm.set(residual_inf_norm as f64);
+        self.policy_bits.set(policy_bits);
+        if train_loss.is_finite() {
+            self.train_loss.set(train_loss as f64);
+        }
+    }
+
+    /// Feed the chaos injector's cumulative fault counters.
+    pub fn observe_faults(&self, f: &FaultStats) {
+        for (c, v) in self
+            .chaos_faults
+            .iter()
+            .zip([f.dropped, f.delayed, f.duplicated, f.corrupted, f.crashed])
+        {
+            c.set_cumulative(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_cumulative_feed_is_monotonic() {
+        let c = Counter::new();
+        c.set_cumulative(10);
+        c.set_cumulative(7); // stale snapshot: ignored
+        assert_eq!(c.get(), 10);
+        c.set_cumulative(12);
+        assert_eq!(c.get(), 12);
+        c.add(3);
+        assert_eq!(c.get(), 15);
+    }
+
+    #[test]
+    fn gauge_roundtrips_f64() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(2.75);
+        assert_eq!(g.get(), 2.75);
+        g.set(-1.5);
+        assert_eq!(g.get(), -1.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_cumulative() {
+        let h = Histogram::new(&[10, 100]);
+        h.observe(5);
+        h.observe(10); // bounds are inclusive
+        h.observe(50);
+        h.observe(1000); // +Inf bucket
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1065);
+        let buckets: Vec<(u64, u64)> = h.cumulative().collect();
+        assert_eq!(buckets, vec![(10, 2), (100, 3), (u64::MAX, 4)]);
+    }
+
+    #[test]
+    fn registry_shard_series_follow_the_csv_convention() {
+        assert_eq!(MetricsRegistry::new(1).nshards(), 0, "single-shard: merged view only");
+        let reg = MetricsRegistry::new(2);
+        assert_eq!(reg.nshards(), 2);
+        let a = CommStats { down_bytes: 100, up_bytes: 40, rounds: 2, resyncs: 1 };
+        let b = CommStats { down_bytes: 60, up_bytes: 20, rounds: 2, resyncs: 1 };
+        let merged = CommStats { down_bytes: 160, up_bytes: 60, rounds: 2, resyncs: 2 };
+        reg.observe_comm(&merged, &[&a, &b]);
+        assert_eq!(reg.merged.down_bytes.get(), 160);
+        assert_eq!(reg.rounds.get(), 2);
+        assert_eq!(reg.shard(0).down_bytes.get(), 100);
+        assert_eq!(reg.shard(1).up_bytes.get(), 20);
+    }
+
+    #[test]
+    fn fault_feed_maps_kinds_in_order() {
+        let reg = MetricsRegistry::new(1);
+        let f = FaultStats { dropped: 1, delayed: 2, duplicated: 3, corrupted: 4, crashed: 5 };
+        reg.observe_faults(&f);
+        for (i, want) in [1u64, 2, 3, 4, 5].into_iter().enumerate() {
+            assert_eq!(reg.chaos_faults[i].get(), want, "{}", FAULT_KINDS[i]);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Reader side of the JSONL trace: parse a (possibly still-growing)
+//! trace file and render the per-shard round-time/bytes table behind
+//! `qadam top`.
+//!
+//! The reader re-reads the whole file per refresh — traces are a few
+//! KB per round at smoke scale and `qadam top` refreshes once a
+//! second, so simplicity wins over an incremental tail. A partial
+//! final line (the writer flushes per round, but a refresh can race a
+//! flush) is skipped rather than treated as corruption.
+
+use super::trace::{Span, SpanKind, TRACE_SCHEMA_VERSION};
+use crate::util::json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A parsed trace: header fields plus every span that parsed cleanly.
+pub struct TraceFile {
+    pub schema_version: u32,
+    pub clock: String,
+    pub spans: Vec<Span>,
+}
+
+impl TraceFile {
+    /// Span kinds present, in lifecycle order.
+    pub fn covered_kinds(&self) -> Vec<&'static str> {
+        SpanKind::ALL
+            .into_iter()
+            .filter(|k| self.spans.iter().any(|s| s.kind == *k))
+            .map(|k| k.name())
+            .collect()
+    }
+
+    /// True when every lifecycle phase appears at least once — the CI
+    /// smoke gate (`qadam top --check`).
+    pub fn covers_lifecycle(&self) -> bool {
+        self.covered_kinds().len() == SpanKind::ALL.len()
+    }
+}
+
+fn parse_span(v: &json::Value) -> Result<Span> {
+    let kind = v.get("span")?.as_str()?;
+    let kind = SpanKind::parse(kind).with_context(|| format!("unknown span kind '{kind}'"))?;
+    Ok(Span {
+        round: v.get("round")?.as_i64()? as u64,
+        shard: v.get("shard")?.as_i64()?,
+        lane: v.get("lane")?.as_i64()?,
+        kind,
+        start_ns: v.get("start_ns")?.as_i64()? as u64,
+        dur_ns: v.get("dur_ns")?.as_i64()? as u64,
+        bytes: v.get("bytes")?.as_i64()? as u64,
+    })
+}
+
+/// Read a trace file. The header line must parse and carry a schema
+/// version this reader understands; span lines that fail to parse are
+/// skipped (a live writer may be mid-flush).
+pub fn read_trace(path: &Path) -> Result<TraceFile> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty trace: no header line")?;
+    let header = json::parse(header).context("trace header is not JSON")?;
+    let schema_version = header.get("trace_schema_version")?.as_usize()? as u32;
+    if schema_version != TRACE_SCHEMA_VERSION {
+        bail!("trace schema v{schema_version}, this reader understands v{TRACE_SCHEMA_VERSION}");
+    }
+    let clock = header.get("clock")?.as_str()?.to_string();
+    let spans = lines
+        .filter_map(|l| json::parse(l).ok())
+        .filter_map(|v| parse_span(&v).ok())
+        .collect();
+    Ok(TraceFile { schema_version, clock, spans })
+}
+
+#[derive(Default)]
+struct ShardAgg {
+    first_round: u64,
+    last_round: u64,
+    rounds: u64,
+    /// Per-[`SpanKind`] (in `ALL` order): summed duration and span count.
+    dur_ns: [u64; 4],
+    spans: [u64; 4],
+    down_bytes: u64,
+    up_bytes: u64,
+}
+
+fn aggregate(spans: &[Span]) -> BTreeMap<i64, ShardAgg> {
+    let mut by_shard: BTreeMap<i64, ShardAgg> = BTreeMap::new();
+    for s in spans {
+        let a = by_shard.entry(s.shard).or_default();
+        if a.rounds == 0 || s.round < a.first_round {
+            a.first_round = s.round;
+        }
+        if s.round + 1 > a.last_round {
+            a.last_round = s.round + 1;
+        }
+        a.rounds = a.last_round - a.first_round;
+        let k = SpanKind::ALL.iter().position(|k| *k == s.kind).unwrap_or(0);
+        a.dur_ns[k] += s.dur_ns;
+        // Only timed spans count toward the mean: byte-attribution
+        // spans (dur 0) on the same shard — e.g. a serve process's
+        // per-lane gather spans — must not dilute it.
+        if s.dur_ns > 0 {
+            a.spans[k] += 1;
+        }
+        match s.kind {
+            SpanKind::Broadcast => a.down_bytes += s.bytes,
+            SpanKind::Gather => a.up_bytes += s.bytes,
+            _ => {}
+        }
+    }
+    by_shard
+}
+
+fn mean_ms(dur_ns: u64, n: u64) -> String {
+    // All-zero durations mean byte-attribution-only spans (an
+    // in-process trainer can't see inside `round_sharded`): show "-",
+    // not a fake 0.00.
+    if n == 0 || dur_ns == 0 {
+        "-".to_string()
+    } else {
+        format!("{:.2}", dur_ns as f64 / n as f64 / 1e6)
+    }
+}
+
+/// Render the per-shard table: mean phase times (ms) and wire bytes
+/// per round. Shard `-1` is the merged whole-round view.
+pub fn render_table(tf: &TraceFile) -> String {
+    let by_shard = aggregate(&tf.spans);
+    let rounds = by_shard.values().map(|a| a.rounds).max().unwrap_or(0);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace schema v{}  clock={}  spans={}  rounds={}",
+        tf.schema_version,
+        tf.clock,
+        tf.spans.len(),
+        rounds
+    );
+    let _ = writeln!(
+        out,
+        "{:>5} {:>7} {:>9} {:>9} {:>9} {:>10} {:>10} {:>10}",
+        "shard", "rounds", "bcast_ms", "gathr_ms", "apply_ms", "requant_ms", "down_B/r", "up_B/r"
+    );
+    for (shard, a) in &by_shard {
+        let r = a.rounds.max(1);
+        let _ = writeln!(
+            out,
+            "{:>5} {:>7} {:>9} {:>9} {:>9} {:>10} {:>10} {:>10}",
+            shard,
+            a.rounds,
+            mean_ms(a.dur_ns[0], a.spans[0]),
+            mean_ms(a.dur_ns[1], a.spans[1]),
+            mean_ms(a.dur_ns[2], a.spans[2]),
+            mean_ms(a.dur_ns[3], a.spans[3]),
+            a.down_bytes / r,
+            a.up_bytes / r,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceWriter;
+
+    fn write_demo(path: &Path) {
+        let mut w = TraceWriter::create(path, "tick").unwrap();
+        for round in 0..2u64 {
+            let t0 = round * 4_000_000;
+            for (i, kind) in SpanKind::ALL.into_iter().enumerate() {
+                w.write_span(&Span {
+                    round,
+                    shard: -1,
+                    lane: -1,
+                    kind,
+                    start_ns: t0 + i as u64 * 1_000_000,
+                    dur_ns: 1_000_000,
+                    bytes: if kind == SpanKind::Broadcast { 200 } else { 0 },
+                })
+                .unwrap();
+            }
+            for shard in 0..2i64 {
+                w.write_span(&Span {
+                    round,
+                    shard,
+                    lane: -1,
+                    kind: SpanKind::Broadcast,
+                    start_ns: t0,
+                    dur_ns: 0,
+                    bytes: 100,
+                })
+                .unwrap();
+                w.write_span(&Span {
+                    round,
+                    shard,
+                    lane: 0,
+                    kind: SpanKind::Gather,
+                    start_ns: t0,
+                    dur_ns: 0,
+                    bytes: 40,
+                })
+                .unwrap();
+            }
+        }
+        w.flush().unwrap();
+    }
+
+    #[test]
+    fn reads_back_what_the_writer_wrote() {
+        let dir = std::env::temp_dir().join("qadam_top_test_rt");
+        let p = dir.join("t.jsonl");
+        write_demo(&p);
+        let tf = read_trace(&p).unwrap();
+        assert_eq!(tf.schema_version, TRACE_SCHEMA_VERSION);
+        assert_eq!(tf.clock, "tick");
+        assert_eq!(tf.spans.len(), 2 * (4 + 4));
+        assert!(tf.covers_lifecycle());
+        assert_eq!(tf.covered_kinds(), vec!["broadcast", "gather", "decode_apply", "requantize"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partial_last_line_is_skipped_not_fatal() {
+        let dir = std::env::temp_dir().join("qadam_top_test_partial");
+        let p = dir.join("t.jsonl");
+        write_demo(&p);
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+        write!(f, "{{\"round\": 9, \"sh").unwrap(); // a refresh racing a flush
+        let tf = read_trace(&p).unwrap();
+        assert_eq!(tf.spans.len(), 16);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_aggregates_per_shard_bytes_and_merged_times() {
+        let dir = std::env::temp_dir().join("qadam_top_test_table");
+        let p = dir.join("t.jsonl");
+        write_demo(&p);
+        let tf = read_trace(&p).unwrap();
+        let table = render_table(&tf);
+        let merged = table.lines().find(|l| l.trim_start().starts_with("-1")).unwrap();
+        // 1 ms mean per phase; 200 downlink bytes per round on the merged row.
+        assert!(merged.contains("1.00"), "{table}");
+        assert!(merged.contains("200"), "{table}");
+        let shard0 = table.lines().find(|l| l.trim_start().starts_with("0 ")).unwrap();
+        // Byte-attribution spans: dashes for times, real per-shard bytes.
+        assert!(shard0.contains('-'), "{table}");
+        assert!(shard0.contains("100"), "{table}");
+        assert!(shard0.contains("40"), "{table}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn schema_mismatch_is_an_error() {
+        let dir = std::env::temp_dir().join("qadam_top_test_schema");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.jsonl");
+        std::fs::write(&p, "{\"trace_schema_version\": 99, \"clock\": \"mono\"}\n").unwrap();
+        assert!(read_trace(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,244 @@
+//! The span layer: round-lifecycle spans in a preallocated ring
+//! buffer, with an optional JSONL writer a live `qadam top` can tail.
+//!
+//! A *span* is one timed (or byte-attributed) slice of a round:
+//!
+//! * `broadcast` — encoding the downlink frames (resync or delta).
+//! * `gather` — the transport round: frames out, worker compute,
+//!   replies in. Over TCP this is dominated by the slowest lane.
+//! * `decode_apply` — the server's fused decode→sum→apply traversal.
+//! * `requantize` — re-quantizing the master at `k_x` for an eval /
+//!   serving view (`output_weights`).
+//!
+//! The merged row of a round (`shard = -1`, `lane = -1`) carries the
+//! real phase durations, measured at the coordinator seam. Per-shard
+//! and per-lane spans (`shard = s`, `lane = worker`) carry *byte
+//! attribution* with `dur_ns = 0` when the process cannot see inside
+//! the phase (an in-process trainer drives all lanes through one
+//! `round_sharded` call); a `serve` process owns exactly one shard, so
+//! its spans are per-shard timings by construction. See DESIGN.md
+//! §Observability for why per-lane clocks never live inside `ps/`.
+//!
+//! The ring buffer is preallocated at construction: recording a span
+//! is a copy into a fixed slot, never an allocation — asserted by the
+//! counting-allocator suite (`rust/tests/alloc_regression.rs`).
+
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Version stamp of the JSONL trace format; bumped when span fields or
+/// semantics change. Consumers (`qadam top`, CI assertions) check it
+/// from the header line.
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// What a span measures. `ALL` is the full round lifecycle, in order —
+/// the CI smoke asserts a traced run covers every kind.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SpanKind {
+    #[default]
+    Broadcast,
+    Gather,
+    DecodeApply,
+    Requantize,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 4] =
+        [SpanKind::Broadcast, SpanKind::Gather, SpanKind::DecodeApply, SpanKind::Requantize];
+
+    /// The wire name (JSONL `span` field, Prometheus label value).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Broadcast => "broadcast",
+            SpanKind::Gather => "gather",
+            SpanKind::DecodeApply => "decode_apply",
+            SpanKind::Requantize => "requantize",
+        }
+    }
+
+    /// Inverse of [`SpanKind::name`] (trace readers).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// One recorded slice of a round. `Copy` so ring-buffer writes are
+/// plain stores.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Span {
+    pub round: u64,
+    /// Parameter-server shard, `-1` = the merged (whole-round) view —
+    /// the same convention as the metrics CSV `shard` column.
+    pub shard: i64,
+    /// Worker lane, `-1` = not lane-specific.
+    pub lane: i64,
+    pub kind: SpanKind,
+    /// Clock timestamp at span start (ns since the clock origin).
+    pub start_ns: u64,
+    /// Span duration; `0` on pure byte-attribution spans.
+    pub dur_ns: u64,
+    /// Wire bytes this span accounts for (frame/reply sizes), `0` for
+    /// phases with no wire traffic of their own.
+    pub bytes: u64,
+}
+
+/// Fixed-capacity ring of the most recent spans. Preallocated once;
+/// recording overwrites the oldest entry when full.
+pub struct RoundTrace {
+    buf: Vec<Span>,
+    /// Next write slot.
+    head: usize,
+    len: usize,
+}
+
+impl RoundTrace {
+    pub fn new(capacity: usize) -> Self {
+        Self { buf: vec![Span::default(); capacity.max(1)], head: 0, len: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Record a span: a store into the preallocated ring, never an
+    /// allocation.
+    pub fn record(&mut self, span: Span) {
+        self.buf[self.head] = span;
+        self.head = (self.head + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    /// The retained spans, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &Span> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(move |i| &self.buf[(start + i) % cap])
+    }
+}
+
+/// Append-only JSONL trace file: one header line (schema version +
+/// clock name), then one JSON object per span. Flushed per round so a
+/// live `qadam top` (or `tail -f`) sees complete lines.
+pub struct TraceWriter {
+    out: BufWriter<std::fs::File>,
+}
+
+impl TraceWriter {
+    /// Create `path` (truncating) and write the header line.
+    pub fn create(path: &Path, clock_name: &str) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating trace {}", path.display()))?;
+        let mut w = Self { out: BufWriter::new(f) };
+        writeln!(
+            w.out,
+            "{{\"trace_schema_version\": {TRACE_SCHEMA_VERSION}, \"clock\": \"{clock_name}\"}}"
+        )?;
+        Ok(w)
+    }
+
+    pub fn write_span(&mut self, s: &Span) -> Result<()> {
+        writeln!(
+            self.out,
+            "{{\"round\": {}, \"shard\": {}, \"lane\": {}, \"span\": \"{}\", \
+             \"start_ns\": {}, \"dur_ns\": {}, \"bytes\": {}}}",
+            s.round,
+            s.shard,
+            s.lane,
+            s.kind.name(),
+            s.start_ns,
+            s.dur_ns,
+            s.bytes
+        )?;
+        Ok(())
+    }
+
+    /// Flush buffered lines to disk (end of round).
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(round: u64, kind: SpanKind) -> Span {
+        Span { round, kind, ..Span::default() }
+    }
+
+    #[test]
+    fn ring_keeps_the_most_recent_spans() {
+        let mut tr = RoundTrace::new(3);
+        assert!(tr.is_empty());
+        for t in 1..=5 {
+            tr.record(span(t, SpanKind::Gather));
+        }
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.capacity(), 3);
+        let rounds: Vec<u64> = tr.iter().map(|s| s.round).collect();
+        assert_eq!(rounds, vec![3, 4, 5], "oldest first, overwritten from the front");
+    }
+
+    #[test]
+    fn ring_partial_fill_iterates_in_order() {
+        let mut tr = RoundTrace::new(8);
+        tr.record(span(1, SpanKind::Broadcast));
+        tr.record(span(1, SpanKind::Gather));
+        let kinds: Vec<&str> = tr.iter().map(|s| s.kind.name()).collect();
+        assert_eq!(kinds, vec!["broadcast", "gather"]);
+    }
+
+    #[test]
+    fn span_kind_names_roundtrip() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SpanKind::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_with_the_repo_json_reader() {
+        let dir = std::env::temp_dir().join("qadam_trace_test");
+        let p = dir.join("t.jsonl");
+        let mut w = TraceWriter::create(&p, "tick").unwrap();
+        w.write_span(&Span {
+            round: 3,
+            shard: -1,
+            lane: -1,
+            kind: SpanKind::DecodeApply,
+            start_ns: 1000,
+            dur_ns: 250,
+            bytes: 64,
+        })
+        .unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let mut lines = text.lines();
+        let header = crate::util::json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(
+            header.get("trace_schema_version").unwrap().as_usize().unwrap(),
+            TRACE_SCHEMA_VERSION as usize
+        );
+        assert_eq!(header.get("clock").unwrap().as_str().unwrap(), "tick");
+        let s = crate::util::json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(s.get("span").unwrap().as_str().unwrap(), "decode_apply");
+        assert_eq!(s.get("round").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(s.get("dur_ns").unwrap().as_usize().unwrap(), 250);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

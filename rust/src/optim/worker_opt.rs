@@ -58,6 +58,11 @@ pub trait WorkerOpt: Send {
     fn residual_norm(&self) -> f32 {
         0.0
     }
+    /// Residual ∞-norm (0 when EF is off) — the obs-layer
+    /// `qadam_ef_residual_inf_norm` gauge.
+    fn residual_inf_norm(&self) -> f32 {
+        0.0
+    }
     /// Mean code bits/element the codec policy currently chooses (None
     /// on the static path).
     fn policy_bits(&self) -> Option<f64> {
@@ -302,6 +307,10 @@ impl WorkerOpt for QAdamEf {
         self.ef.residual_norm()
     }
 
+    fn residual_inf_norm(&self) -> f32 {
+        self.ef.residual_inf_norm()
+    }
+
     fn policy_bits(&self) -> Option<f64> {
         self.policy.as_ref().map(|p| p.mean_code_bits())
     }
@@ -456,6 +465,10 @@ impl WorkerOpt for BlockwiseSgdEf {
 
     fn residual_norm(&self) -> f32 {
         self.ef.residual_norm()
+    }
+
+    fn residual_inf_norm(&self) -> f32 {
+        self.ef.residual_inf_norm()
     }
 }
 

@@ -345,6 +345,19 @@ impl CommStats {
         }
         self.down_bytes as f64 / self.rounds as f64 / workers as f64 / 1e6
     }
+
+    /// Per-window accounting tap: the delta accumulated since an
+    /// `earlier` snapshot of the same counter set. Saturating, so a
+    /// stale/foreign snapshot yields zeros instead of wrap-around
+    /// garbage — the obs layer feeds windows, never trusts ordering.
+    pub fn since(&self, earlier: &CommStats) -> CommStats {
+        CommStats {
+            down_bytes: self.down_bytes.saturating_sub(earlier.down_bytes),
+            up_bytes: self.up_bytes.saturating_sub(earlier.up_bytes),
+            rounds: self.rounds.saturating_sub(earlier.rounds),
+            resyncs: self.resyncs.saturating_sub(earlier.resyncs),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -538,5 +551,17 @@ mod tests {
         let s = CommStats { down_bytes: 16_000_000, up_bytes: 8_000_000, rounds: 10, resyncs: 0 };
         assert!((s.up_mb_per_round_per_worker(8) - 0.1).abs() < 1e-9);
         assert!((s.down_mb_per_round_per_worker(8) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_stats_since_windows_and_saturates() {
+        let early = CommStats { down_bytes: 100, up_bytes: 40, rounds: 2, resyncs: 1 };
+        let late = CommStats { down_bytes: 260, up_bytes: 90, rounds: 5, resyncs: 1 };
+        assert_eq!(
+            late.since(&early),
+            CommStats { down_bytes: 160, up_bytes: 50, rounds: 3, resyncs: 0 }
+        );
+        // a snapshot from the wrong epoch must not wrap
+        assert_eq!(early.since(&late), CommStats::default());
     }
 }

@@ -129,6 +129,17 @@ pub trait Transport {
     fn shutdown(&mut self) -> Result<()> {
         Ok(())
     }
+    /// Cumulative injected-fault counters, for the obs layer. `None`
+    /// for engines without a fault injector; the chaos wrapper
+    /// overrides. Read-only: calling this never perturbs the round.
+    fn fault_stats(&self) -> Option<crate::elastic::FaultStats> {
+        None
+    }
+    /// Cumulative count of lanes evicted by a straggler deadline, for
+    /// the obs layer. Engines without deadlines report 0.
+    fn straggler_evictions(&self) -> u64 {
+        0
+    }
 }
 
 /// The worker id a reply claims (sort key of the deterministic gather).
@@ -342,6 +353,9 @@ pub struct TcpServer {
     deadline: Option<Duration>,
     policy: StragglerPolicy,
     min_participation: usize,
+    /// Cumulative connections evicted (dead at broadcast, or past the
+    /// straggler deadline at gather) — the obs accounting tap.
+    evicted: u64,
 }
 
 impl TcpServer {
@@ -364,6 +378,7 @@ impl TcpServer {
             deadline: None,
             policy: StragglerPolicy::Wait,
             min_participation: 1,
+            evicted: 0,
         })
     }
 
@@ -443,6 +458,7 @@ impl TcpServer {
                     if write_frame(&mut s, &payload).is_ok() {
                         live.push(s);
                     } else {
+                        self.evicted += 1;
                         eprintln!("[server] dropping dead connection at broadcast");
                     }
                 }
@@ -479,7 +495,10 @@ impl TcpServer {
                             replies.push(r);
                             self.streams.push(s);
                         }
-                        Err(e) => eprintln!("[server] dropping straggler/dead connection: {e}"),
+                        Err(e) => {
+                            self.evicted += 1;
+                            eprintln!("[server] dropping straggler/dead connection: {e}");
+                        }
                     }
                 }
                 replies
@@ -509,6 +528,11 @@ impl TcpServer {
             write_frame(s, &payload)?;
         }
         Ok(())
+    }
+
+    /// Cumulative evicted-connection count (see the `evicted` field).
+    pub fn evictions(&self) -> u64 {
+        self.evicted
     }
 }
 
@@ -590,6 +614,10 @@ impl Transport for TcpServer {
 
     fn shutdown(&mut self) -> Result<()> {
         TcpServer::shutdown(self)
+    }
+
+    fn straggler_evictions(&self) -> u64 {
+        self.evicted
     }
 }
 
@@ -697,6 +725,10 @@ impl Transport for TcpShardGroup {
 
     fn shutdown(&mut self) -> Result<()> {
         TcpShardGroup::shutdown(self)
+    }
+
+    fn straggler_evictions(&self) -> u64 {
+        self.servers.iter().map(|s| s.evicted).sum()
     }
 }
 

@@ -144,6 +144,11 @@ impl Worker {
         self.opt.residual_norm()
     }
 
+    /// Residual ∞-norm (0 when EF is off) — the obs-layer gauge.
+    pub fn residual_inf_norm(&self) -> f32 {
+        self.opt.residual_inf_norm()
+    }
+
     /// Mean code bits/element the uplink codec policy currently
     /// chooses (None on the static path) — for the metrics CSV.
     pub fn policy_bits(&self) -> Option<f64> {

@@ -54,6 +54,13 @@ impl ErrorFeedback {
         self.e.iter().map(|x| x * x).sum::<f32>().sqrt()
     }
 
+    /// ∞-norm of the residual — the scale the ∞-norm-scaled codecs
+    /// actually quantize against, exported as the
+    /// `qadam_ef_residual_inf_norm` metric.
+    pub fn residual_inf_norm(&self) -> f32 {
+        self.e.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
     /// One EF-compressed step: returns the wire message for
     /// `Q(direction + e)` and updates `e`.
     pub fn compress(
@@ -179,9 +186,13 @@ mod tests {
         lq.decompress(&msg, &mut dec);
         assert_eq!(q, dec, "compress_q values must equal the wire decode");
         assert!(ef.residual_norm() > 0.0);
+        let inf = ef.residual_inf_norm();
+        assert!(inf > 0.0 && inf <= ef.residual_norm(), "∞-norm bounded by L2");
+        assert_eq!(inf, ef.residual().iter().fold(0.0f32, |m, x| m.max(x.abs())));
         ef.reset();
         assert!(ef.residual().iter().all(|&x| x == 0.0));
         assert_eq!(ef.residual_norm(), 0.0);
+        assert_eq!(ef.residual_inf_norm(), 0.0);
     }
 
     /// Per-range compression composes to the per-tensor semantics: each

@@ -52,6 +52,20 @@ impl Value {
         }
     }
 
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Num(n) => Ok(*n as i64),
+            _ => bail!("not a number"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("not a number"),
+        }
+    }
+
     pub fn usize_arr(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
@@ -238,6 +252,8 @@ mod tests {
     fn scalars_and_literals() {
         assert_eq!(parse("3.5").unwrap(), Value::Num(3.5));
         assert_eq!(parse("-2e3").unwrap(), Value::Num(-2000.0));
+        assert_eq!(parse("-1").unwrap().as_i64().unwrap(), -1);
+        assert_eq!(parse("2.75").unwrap().as_f64().unwrap(), 2.75);
         assert_eq!(parse("true").unwrap(), Value::Bool(true));
         assert_eq!(parse("null").unwrap(), Value::Null);
         assert_eq!(parse("\"a\\nb\"").unwrap(), Value::Str("a\nb".into()));

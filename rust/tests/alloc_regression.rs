@@ -137,6 +137,48 @@ fn decode_paths_allocate_nothing() {
     }
 }
 
+/// The observability hot path is store-only: recording spans into the
+/// preallocated ring and feeding every registry series (counters,
+/// gauges, both histograms, per-shard comm, faults) performs zero
+/// allocations. Together with the round tests below — which run the
+/// exact code an obs-off round runs — this pins the tentpole's
+/// overhead contract from both sides: off is unchanged, on is
+/// alloc-free stores.
+#[test]
+fn obs_record_and_registry_feed_allocate_nothing() {
+    use qadam::elastic::FaultStats;
+    use qadam::obs::{MetricsRegistry, RoundTrace, Span, SpanKind};
+    use qadam::ps::protocol::CommStats;
+    let mut ring = RoundTrace::new(256);
+    let reg = MetricsRegistry::new(2);
+    let span = Span {
+        round: 1,
+        shard: 0,
+        lane: 2,
+        kind: SpanKind::Gather,
+        start_ns: 5,
+        dur_ns: 7,
+        bytes: 640,
+    };
+    let stats = CommStats { down_bytes: 10, up_bytes: 4, rounds: 1, resyncs: 0 };
+    let faults = FaultStats { dropped: 1, delayed: 0, duplicated: 0, corrupted: 0, crashed: 0 };
+    let (allocs, bytes, ()) = measure(|| {
+        for i in 0..64 {
+            ring.record(span);
+            reg.frame_bytes.observe(64 + i);
+            reg.round_latency_ns.observe(1_000_000 + i);
+        }
+        reg.observe_comm(&stats, &[]);
+        reg.observe_shard(0, &stats);
+        reg.observe_shard(1, &stats);
+        reg.observe_round(2_000_000, 4, 0.5, 3.0, 1.25);
+        reg.straggler_evictions.set_cumulative(2);
+        reg.observe_faults(&faults);
+    });
+    assert_eq!(allocs, 0, "obs recording must never allocate");
+    assert_eq!(bytes, 0);
+}
+
 fn delta_replies(t: u64, dim: usize, workers: u32) -> Vec<ToServer> {
     let mut rng = seeded_rng(11, t);
     let mut q = vec![0.0f32; dim];

@@ -1,0 +1,209 @@
+//! Integration: the observability layer end-to-end through the
+//! Trainer — and, above all, the zero-overhead-off guarantee: a traced
+//! run takes the *bit-identical* trajectory of an untraced one, on
+//! every bus engine. Spans and metrics are derived from values the
+//! round already produces; if enabling them ever perturbed a loss,
+//! a byte count or an RNG draw, these tests pin it.
+
+use qadam::coordinator::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
+use qadam::coordinator::Trainer;
+use qadam::elastic::StragglerPolicy;
+use qadam::models::artifacts_dir;
+use qadam::obs::{read_trace, RoundObs, SpanKind, TickClock};
+use qadam::optim::LrSchedule;
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        model: "mlp".into(),
+        dataset: "vector".into(),
+        method: Method::QAdam { kg: Some(2), error_feedback: true },
+        kx: None,
+        workers: 4,
+        batch: 16,
+        steps: 20,
+        steps_per_epoch: 10,
+        lr: LrSchedule::Const { alpha: 2e-3 },
+        engine: Engine::Native,
+        bus: BusKind::Sequential,
+        downlink: Downlink::Full,
+        resync_every: 64,
+        chaos: None,
+        codec_policy: qadam::quant::PolicySpec::Static,
+        shards: 1,
+        straggler: StragglerPolicy::Wait,
+        min_participation: 1,
+        seed: 0,
+        eval_every: 10,
+        eval_batches: 2,
+    }
+}
+
+/// The deterministic slice of a metrics row — everything except
+/// `round_ms`, which is wall-clock telemetry and *supposed* to differ
+/// between a traced and an untraced run.
+fn row_key(r: &qadam::coordinator::Row) -> (u64, u64, f32, f32, f64, f64, f32, usize, u64, f64, i64)
+{
+    (
+        r.t,
+        r.epoch,
+        r.train_loss,
+        r.test_acc,
+        r.up_mb_per_round,
+        r.down_mb_per_round,
+        r.residual_norm,
+        r.participation,
+        r.resyncs,
+        r.policy_bits,
+        r.shard,
+    )
+}
+
+fn run_traced(cfg: ExperimentConfig, trace: Option<&std::path::Path>) -> Trainer {
+    let nshards = cfg.shards;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let mut obs = RoundObs::new(Box::new(TickClock::millis()), nshards);
+    if let Some(p) = trace {
+        obs = obs.with_trace_out(p).unwrap();
+    }
+    tr.enable_obs(obs);
+    tr.run().unwrap();
+    tr
+}
+
+/// Tracing on vs off: bit-identical losses, accuracies, byte
+/// accounting and metrics rows, across the sequential and threaded
+/// engines and across shard counts.
+#[test]
+fn tracing_on_is_bit_identical_to_tracing_off() {
+    if !have_artifacts() {
+        return;
+    }
+    for bus in [BusKind::Sequential, BusKind::Threaded] {
+        for shards in [1usize, 2] {
+            let mut cfg = base_cfg();
+            cfg.bus = bus;
+            cfg.shards = shards;
+            let mut plain = Trainer::new(cfg.clone()).unwrap();
+            let off = plain.run().unwrap();
+            let traced = run_traced(cfg, None);
+            let sum = traced.log.rows.last().unwrap();
+            let plain_sum = plain.log.rows.last().unwrap();
+            assert_eq!(
+                plain_sum.train_loss, sum.train_loss,
+                "bus={bus:?} shards={shards}: tracing changed the trajectory"
+            );
+            assert_eq!(off.final_acc, traced.log.last_acc().unwrap());
+            let a: Vec<_> = plain.log.rows.iter().map(row_key).collect();
+            let b: Vec<_> = traced.log.rows.iter().map(row_key).collect();
+            assert_eq!(a, b, "bus={bus:?} shards={shards}: metrics rows diverged");
+            // ...and the traced run's merged rows actually carry time
+            // (TickClock advances every read), while the untraced run's
+            // round_ms column stays 0 — the "0 when tracing off" contract.
+            assert!(traced.log.rows.iter().filter(|r| r.shard == -1).all(|r| r.round_ms > 0.0));
+            assert!(plain.log.rows.iter().all(|r| r.round_ms == 0.0));
+        }
+    }
+}
+
+/// A traced multi-shard run writes a schema-versioned JSONL trace that
+/// covers the full round lifecycle, with the shard/lane attribution
+/// conventions the readers rely on.
+#[test]
+fn traced_run_writes_lifecycle_covering_jsonl() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("qadam_obs_itest_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.jsonl");
+    let mut cfg = base_cfg();
+    cfg.shards = 2;
+    let tr = run_traced(cfg, Some(&path));
+    let tf = read_trace(&path).unwrap();
+    assert_eq!(tf.clock, "tick");
+    assert!(
+        tf.covers_lifecycle(),
+        "expected broadcast/gather/decode_apply/requantize, got {:?}",
+        tf.covered_kinds()
+    );
+    // Merged spans carry real (tick) durations; per-shard spans carry
+    // byte attribution for both shards; gather spans name worker lanes.
+    assert!(tf.spans.iter().any(|s| s.shard == -1 && s.dur_ns > 0));
+    for shard in 0..2i64 {
+        assert!(
+            tf.spans
+                .iter()
+                .any(|s| s.shard == shard && s.kind == SpanKind::Broadcast && s.bytes > 0),
+            "no frame bytes attributed to shard {shard}"
+        );
+    }
+    assert!(tf.spans.iter().any(|s| s.kind == SpanKind::Gather && s.lane >= 0 && s.bytes > 0));
+    // The registry rode along with the trace.
+    assert!(tr.obs_registry().is_some());
+    let table = qadam::obs::render_table(&tf);
+    assert!(table.contains("-1"), "merged row missing from the top table:\n{table}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The registry exposed over `/metrics` reflects the run (rounds,
+/// bytes, loss) and its counters are monotonic: re-feeding a stale
+/// cumulative snapshot can never move the exposition backwards.
+#[test]
+fn registry_reflects_the_run_and_counters_stay_monotonic() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.shards = 2;
+    let tr = run_traced(cfg, None);
+    let reg = tr.obs_registry().unwrap();
+    assert_eq!(reg.rounds.get(), 20);
+    assert!(reg.merged.up_bytes.get() > 0);
+    assert!(reg.merged.down_bytes.get() > 0);
+    // per-shard series: present for both shards, summing below merged
+    // (headers are per-lane; shard streams split one fleet's bytes)
+    let per_shard_up: u64 = (0..2).map(|s| reg.shard(s).up_bytes.get()).sum();
+    assert!(per_shard_up > 0 && per_shard_up <= reg.merged.up_bytes.get());
+    assert!(reg.train_loss.get().is_finite());
+    assert!(reg.test_acc.get() > 0.0, "eval ran at t=10,20: the gauge must be fed");
+    assert!(reg.round_latency_ns.count() == 20);
+    assert!(reg.frame_bytes.count() > 0);
+    let before = reg.merged.up_bytes.get();
+    // A stale snapshot (e.g. a lagging scrape racing a resync) is a
+    // no-op, not a decrease.
+    reg.merged.up_bytes.set_cumulative(1);
+    assert_eq!(reg.merged.up_bytes.get(), before);
+    let text = qadam::obs::render(&reg);
+    assert!(text.contains("qadam_rounds_total 20"));
+    assert!(text.contains("qadam_up_bytes_total{shard=\"-1\"}"));
+    assert!(text.contains("qadam_up_bytes_total{shard=\"0\"}"));
+}
+
+/// End-to-end scrape: a `MetricsServer` mounted on a live trainer's
+/// registry serves the exposition over a real socket with the
+/// Prometheus content type.
+#[test]
+fn metrics_endpoint_scrapes_a_trained_registry() {
+    if !have_artifacts() {
+        return;
+    }
+    let tr = run_traced(base_cfg(), None);
+    let reg = tr.obs_registry().unwrap();
+    let srv = qadam::obs::MetricsServer::spawn("127.0.0.1:0", reg).unwrap();
+    use std::io::{Read as _, Write as _};
+    let mut conn = std::net::TcpStream::connect(srv.addr()).unwrap();
+    conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+    assert!(resp.contains(&format!("Content-Type: {}", qadam::obs::CONTENT_TYPE)), "{resp}");
+    assert!(resp.contains("qadam_rounds_total 20"), "{resp}");
+}

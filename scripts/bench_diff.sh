@@ -17,6 +17,8 @@
 # Baselines whose medians are null (the committed placeholders) are
 # reported as unmeasured and never fail — run `--refresh` (full size,
 # quiet machine) once to pin real numbers, then commit the JSONs.
+# `--refresh` self-checks its output with `bench-diff
+# --require-measured`, which fails loudly on any remaining null median.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -55,6 +57,14 @@ if [ "$REFRESH" = 1 ]; then
     fi
     cp "$FRESH_Q" BENCH_quant_micro.json
     cp "$FRESH_W" BENCH_worker_step.json
+    # Self-check the refreshed baselines: compared against themselves
+    # (0% diff by construction) with --require-measured, so a refresh
+    # that still leaves null-median placeholders fails loudly here
+    # instead of silently shrinking every future comparison.
+    target/release/qadam bench-diff --baseline BENCH_quant_micro.json \
+        --fresh BENCH_quant_micro.json --require-measured
+    target/release/qadam bench-diff --baseline BENCH_worker_step.json \
+        --fresh BENCH_worker_step.json --require-measured
     echo "baselines refreshed — commit BENCH_quant_micro.json BENCH_worker_step.json"
     exit 0
 fi
