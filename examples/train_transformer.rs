@@ -59,6 +59,11 @@ fn main() -> anyhow::Result<()> {
         shards: 1,
         straggler: qadam::elastic::StragglerPolicy::Wait,
         min_participation: 1,
+        async_rounds: false,
+        staleness: 0,
+        staleness_down_weight: false,
+        cohort: None,
+        registry: 100_000,
         seed: 0,
         eval_every: (steps / 12).max(25),
         eval_batches: 2,

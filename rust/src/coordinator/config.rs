@@ -175,6 +175,29 @@ pub struct ExperimentConfig {
     /// Quorum under `straggler = Drop`: a round with fewer replies
     /// fails the run.
     pub min_participation: usize,
+    /// Async bounded-staleness rounds (`--async-rounds`): the server
+    /// applies deltas tagged with the round they were computed against,
+    /// admitting any with age `now − t ≤ staleness` and refunding the
+    /// rest into the sender's EF residual. `false` (the default) keeps
+    /// the synchronous path byte-identical to pre-async builds.
+    pub async_rounds: bool,
+    /// Staleness bound τ in rounds (`--staleness`). Only read with
+    /// `async_rounds = true`; `0` admits only fresh deltas.
+    pub staleness: u64,
+    /// Down-weight admitted deltas by `1/(1+age)` and refund the
+    /// remaining `age/(1+age)` mass into the sender's EF residual
+    /// (`--stale-down-weight`). Off = every admitted delta at full
+    /// weight, matching the sync averaging rule exactly at age 0.
+    pub staleness_down_weight: bool,
+    /// Client sampling (`--cohort K`): draw K logical workers from a
+    /// [`crate::elastic::WorkerRegistry`] of `registry` ids each round
+    /// on a seeded per-round rng stream. `None` = every worker slot
+    /// participates every round (the seed behavior).
+    pub cohort: Option<usize>,
+    /// Logical-worker registry size for `--cohort` sampling
+    /// (`--registry`, default 100_000). Per-round cost is independent
+    /// of this number.
+    pub registry: u64,
     pub seed: u64,
     /// Evaluate every this many steps (0 = only at the end).
     pub eval_every: u64,
@@ -204,6 +227,11 @@ impl ExperimentConfig {
             shards: 1,
             straggler: StragglerPolicy::default(),
             min_participation: 1,
+            async_rounds: false,
+            staleness: 0,
+            staleness_down_weight: false,
+            cohort: None,
+            registry: 100_000,
             seed: 0,
             eval_every: 64,
             eval_batches: 4,
@@ -238,7 +266,16 @@ impl ExperimentConfig {
             format!("-{}", self.codec_policy.label())
         };
         let sh = if self.shards > 1 { format!("-s{}", self.shards) } else { String::new() };
-        format!("{}-{}{}{}{}{}", self.model, self.method.label(), kx, down, pol, sh)
+        let asy = if self.async_rounds {
+            format!("-async{}", self.staleness)
+        } else {
+            String::new()
+        };
+        let co = match self.cohort {
+            Some(k) => format!("-c{k}"),
+            None => String::new(),
+        };
+        format!("{}-{}{}{}{}{}{}{}", self.model, self.method.label(), kx, down, pol, sh, asy, co)
     }
 
     /// Cross-field sanity, run by `Trainer::new` before anything is
@@ -285,6 +322,23 @@ impl ExperimentConfig {
                 "--shards > 1 is native-engine only (the AOT kernel emits one fused \
                  whole-vector message and cannot split its payload per shard)"
             );
+        }
+        if !self.async_rounds && (self.staleness != 0 || self.staleness_down_weight) {
+            bail!("--staleness / --stale-down-weight need --async-rounds");
+        }
+        if let Some(k) = self.cohort {
+            if k == 0 {
+                bail!("--cohort must be at least 1");
+            }
+            if (k as u64) > self.registry {
+                bail!(
+                    "--cohort {k} exceeds the registry size {} (raise --registry)",
+                    self.registry
+                );
+            }
+        }
+        if self.registry == 0 {
+            bail!("--registry must be at least 1");
         }
         Ok(())
     }
@@ -381,6 +435,38 @@ mod tests {
         assert_eq!(c.straggler, StragglerPolicy::Wait);
         assert_eq!(c.min_participation, 1);
         assert_eq!(c.shards, 1, "the default is the unsharded (seed) engine");
+        assert!(!c.async_rounds, "sync rounds are the seed behavior");
+        assert!(c.cohort.is_none(), "no client sampling by default");
+    }
+
+    #[test]
+    fn async_and_cohort_validate_and_label() {
+        let mut c = ExperimentConfig::table3_default();
+        c.async_rounds = true;
+        c.staleness = 3;
+        c.validate().unwrap();
+        assert_eq!(c.run_label(), "vgg_sim-qadam-kg2-async3");
+        c.cohort = Some(4);
+        c.validate().unwrap();
+        assert_eq!(c.run_label(), "vgg_sim-qadam-kg2-async3-c4");
+        // staleness knobs without the mode are a config error, not a
+        // silent no-op
+        c.async_rounds = false;
+        assert!(c.validate().is_err());
+        c.staleness = 0;
+        c.staleness_down_weight = true;
+        assert!(c.validate().is_err());
+        c.staleness_down_weight = false;
+        c.validate().unwrap();
+        // cohort must fit inside the registry
+        c.registry = 3;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("registry"), "{err}");
+        c.registry = 0;
+        assert!(c.validate().is_err());
+        c.registry = 100_000;
+        c.cohort = Some(0);
+        assert!(c.validate().is_err());
     }
 
     #[test]

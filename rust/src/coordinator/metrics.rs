@@ -32,6 +32,13 @@ pub struct Row {
     /// obs clock at the coordinator seam — `0` when tracing is off
     /// (the clock is never read on the disabled path).
     pub round_ms: f64,
+    /// Median staleness (rounds of age) across the deltas this round
+    /// admitted — `-1` for sync rounds, where every delta is fresh by
+    /// construction and the column would read as a misleading 0.
+    pub staleness_p50: i64,
+    /// Sampled cohort size this round (`--cohort`); `-1` when client
+    /// sampling is off and the full worker fleet participates.
+    pub cohort: i64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -68,16 +75,17 @@ impl MetricsLog {
         }
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
-        // `round_ms` is appended at the end so positional consumers of
-        // the pre-obs columns keep parsing.
+        // New columns are appended at the end (`round_ms`, then the
+        // async pair `staleness_p50,cohort`) so positional consumers of
+        // the earlier columns keep parsing.
         writeln!(
             f,
-            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs,policy_bits,shard,round_ms"
+            "t,epoch,train_loss,test_acc,up_mb_per_round,down_mb_per_round,residual_norm,participation,resyncs,policy_bits,shard,round_ms,staleness_p50,cohort"
         )?;
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{},{},{},{:.3},{},{:.3}",
+                "{},{},{},{},{:.6},{:.6},{},{},{},{:.3},{},{:.3},{},{}",
                 r.t,
                 r.epoch,
                 r.train_loss,
@@ -89,7 +97,9 @@ impl MetricsLog {
                 r.resyncs,
                 r.policy_bits,
                 r.shard,
-                r.round_ms
+                r.round_ms,
+                r.staleness_p50,
+                r.cohort
             )?;
         }
         Ok(())
@@ -114,6 +124,8 @@ mod tests {
             policy_bits: 3.0,
             shard,
             round_ms: 0.0,
+            staleness_p50: -1,
+            cohort: -1,
         }
     }
 
@@ -133,6 +145,8 @@ mod tests {
             policy_bits: 2.75,
             shard: -1,
             round_ms: 12.5,
+            staleness_p50: 1,
+            cohort: 32,
         });
         let dir = std::env::temp_dir().join("qadam_metrics_test");
         let p = dir.join("m.csv");
@@ -140,9 +154,10 @@ mod tests {
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("t,epoch,"));
         let header = s.lines().next().unwrap();
-        assert!(header.ends_with("participation,resyncs,policy_bits,shard,round_ms"));
+        assert!(header
+            .ends_with("participation,resyncs,policy_bits,shard,round_ms,staleness_p50,cohort"));
         assert_eq!(s.lines().count(), 2);
-        assert!(s.lines().nth(1).unwrap().ends_with(",7,2,2.750,-1,12.500"));
+        assert!(s.lines().nth(1).unwrap().ends_with(",7,2,2.750,-1,12.500,1,32"));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -193,7 +208,7 @@ mod tests {
         let shard_of = |line: &str| -> i64 {
             let cols: Vec<&str> = line.split(',').collect();
             assert_eq!(cols.len(), ncols, "ragged row: {line}");
-            cols[ncols - 2].parse().unwrap() // shard is second-to-last, before round_ms
+            cols[ncols - 4].parse().unwrap() // shard precedes round_ms,staleness_p50,cohort
         };
         let shards: Vec<i64> = rows.iter().map(|l| shard_of(l)).collect();
         assert_eq!(shards, vec![-1, 0, 1, -1, 0, 1], "merged row leads each log point");

@@ -91,6 +91,11 @@ pub fn run_table(which: &str, steps: u64, workers: usize, outdir: &str) -> Resul
             shards: 1,
             straggler: crate::elastic::StragglerPolicy::Wait,
             min_participation: 1,
+            async_rounds: false,
+            staleness: 0,
+            staleness_down_weight: false,
+            cohort: None,
+            registry: 100_000,
             seed: 0,
             eval_every: if curves { 32 } else { 0 },
             eval_batches: if curves { 2 } else { 4 },

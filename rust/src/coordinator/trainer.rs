@@ -4,7 +4,7 @@
 use super::config::{BusKind, Downlink, Engine, ExperimentConfig, Method};
 use super::metrics::{MetricsLog, Row};
 use crate::data::{Dataset, SyntheticText, SyntheticVector, SyntheticVision};
-use crate::elastic::{ChaosTransport, StragglerPolicy};
+use crate::elastic::{ChaosTransport, StalenessPolicy, StragglerPolicy, WorkerRegistry};
 use crate::models::{artifacts_dir, Manifest};
 use crate::obs::{RoundObs, Span, SpanKind};
 use crate::optim::{BlockwiseSgdEf, LrSchedule, QAdamEf, TernGradSgd, WorkerOpt};
@@ -74,6 +74,17 @@ pub struct Trainer {
     /// Duration of the last observed round in ns (0 with obs off) —
     /// the `round_ms` CSV column.
     last_round_ns: u64,
+    /// Client-sampling registry (`--cohort`): `Some` makes the worker
+    /// slots impersonate a fresh cohort of logical ids each round;
+    /// `None` keeps the fixed worker fleet (the seed behavior).
+    registry: Option<WorkerRegistry>,
+    /// Median admitted-delta age of the last async round (`-1` in sync
+    /// mode or when a round admitted nothing) — the `staleness_p50`
+    /// CSV column.
+    last_staleness_p50: i64,
+    /// Cumulative deltas rejected as too stale (async mode), fed to the
+    /// obs registry's `qadam_stale_rejected_total` counter.
+    stale_rejected: u64,
 }
 
 fn make_dataset(cfg: &ExperimentConfig, seq: usize, vocab: usize) -> Result<Arc<dyn Dataset>> {
@@ -222,7 +233,8 @@ impl Trainer {
         if cfg.chaos.is_some() || cfg.straggler != StragglerPolicy::Wait {
             bus = Box::new(
                 ChaosTransport::new(bus, cfg.chaos.clone().unwrap_or_default())
-                    .with_policy(cfg.straggler, cfg.min_participation),
+                    .with_policy(cfg.straggler, cfg.min_participation)
+                    .with_async(cfg.async_rounds),
             );
         }
         // The named parameter blocks of the flat vector — the
@@ -262,8 +274,16 @@ impl Trainer {
                 }
             }
         }
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for i in 0..cfg.workers {
+        // Under client sampling the process holds one worker *slot* per
+        // cohort seat, not one per logical worker: a 100k-id registry
+        // costs K slots of memory, and each round re-points the slots
+        // at that round's sampled ids (`Worker::id` drives both data
+        // sampling and the wire identity). Without sampling, slots and
+        // logical workers coincide (the seed behavior).
+        let nslots = cfg.cohort.unwrap_or(cfg.workers);
+        let registry = cfg.cohort.map(|_| WorkerRegistry::new(cfg.registry, cfg.seed));
+        let mut workers = Vec::with_capacity(nslots);
+        for i in 0..nslots {
             let opt = make_opt(&cfg, dim, kernel.as_ref(), make_policy(&cfg, &layout)?)?;
             let src = ModelGradSource { model: model.clone(), data: data.clone(), batch: cfg.batch };
             let mut w = Worker::new(i as u32, opt, Box::new(src), cfg.seed ^ 0x5a5a);
@@ -282,6 +302,9 @@ impl Trainer {
             log,
             obs: None,
             last_round_ns: 0,
+            registry,
+            last_staleness_p50: -1,
+            stale_rejected: 0,
         })
     }
 
@@ -323,6 +346,7 @@ impl Trainer {
         let nworkers = self.workers.len();
         let merged = self.ps.stats();
         let policy_bits = self.row_policy_bits();
+        let cohort = self.cfg.cohort.map_or(-1, |k| k as i64);
         self.log.push(Row {
             t,
             epoch,
@@ -336,6 +360,8 @@ impl Trainer {
             policy_bits,
             shard: -1,
             round_ms: self.last_round_ns as f64 / 1e6,
+            staleness_p50: self.last_staleness_p50,
+            cohort,
         });
         if self.ps.nshards() > 1 {
             for s in 0..self.ps.nshards() {
@@ -359,6 +385,8 @@ impl Trainer {
                     // through one round call, so per-shard time is not
                     // observable here — 0, like byte-attribution spans
                     round_ms: 0.0,
+                    staleness_p50: self.last_staleness_p50,
+                    cohort,
                 });
             }
         }
@@ -432,11 +460,106 @@ impl Trainer {
         }
     }
 
+    /// Post-apply bookkeeping of one async round: refund every rejected
+    /// delta at full scale — and the un-applied `1 − w(age)` fraction
+    /// of every down-weighted admitted one — into its sender's EF
+    /// residual, then update the staleness summary (the CSV p50 and the
+    /// cumulative reject count the obs registry exports).
+    fn settle_async(
+        &mut self,
+        replies: &[Vec<crate::ps::protocol::ToServer>],
+        ar: &crate::ps::AsyncRound,
+        policy: &StalenessPolicy,
+    ) -> Result<()> {
+        let mut admitted_ages: Vec<u64> = Vec::new();
+        for (lane, lane_replies) in replies.iter().enumerate() {
+            for (idx, r) in lane_replies.iter().enumerate() {
+                let age = ar.ages[lane][idx];
+                // `rejected` is built lane-major in index order, so
+                // membership is a binary search
+                let scale = if ar.rejected.binary_search(&(lane, idx)).is_ok() {
+                    1.0
+                } else {
+                    admitted_ages.push(age);
+                    1.0 - policy.weight(age)
+                };
+                if scale > 0.0 {
+                    self.refund(lane, r, scale)?;
+                }
+            }
+        }
+        self.stale_rejected += ar.rejected.len() as u64;
+        admitted_ages.sort_unstable();
+        self.last_staleness_p50 = match admitted_ages.len() {
+            0 => -1, // a quiet/all-rejected tick has no admitted ages
+            n => admitted_ages[n / 2] as i64,
+        };
+        if let Some(obs) = &self.obs {
+            for &a in &admitted_ages {
+                obs.registry.staleness_rounds.observe(a);
+            }
+            obs.registry.stale_rejected.set_cumulative(self.stale_rejected);
+        }
+        Ok(())
+    }
+
+    /// Fold `scale ×` a reply's decoded payload back into the EF
+    /// residual of the slot that sent it. Under client sampling the
+    /// sending slot is recovered by redrawing the cohort of the round
+    /// the reply was computed against (the draw is pure in
+    /// `(seed, t)`); the slot — possibly already re-pointed at a newer
+    /// logical id — briefly re-assumes the reply's id for the absorb.
+    fn refund(
+        &mut self,
+        lane: usize,
+        reply: &crate::ps::protocol::ToServer,
+        scale: f32,
+    ) -> Result<()> {
+        let slot = match &self.registry {
+            Some(reg) => {
+                match reg.cohort(reply.round(), self.workers.len()).binary_search(&reply.worker())
+                {
+                    Ok(slot) => slot,
+                    // not in that round's cohort: a forged or corrupt
+                    // id — drop the refund rather than crediting the
+                    // wrong slot
+                    Err(_) => return Ok(()),
+                }
+            }
+            None => {
+                let slot = reply.worker() as usize;
+                if slot >= self.workers.len() {
+                    return Ok(());
+                }
+                slot
+            }
+        };
+        let w = &mut self.workers[slot];
+        if !w.has_error_feedback() {
+            return Ok(()); // no residual to fold into (e.g. TernGrad)
+        }
+        let cur = w.id;
+        w.id = reply.worker();
+        let res = w.absorb_rejected(lane, reply, scale);
+        w.id = cur;
+        res
+    }
+
     pub fn run(&mut self) -> Result<RunSummary> {
         let mut last_loss = f32::NAN;
         let start = self.ps.step() + 1; // continues after a restore
         for t in start..=self.cfg.steps {
             let epoch = self.cfg.epoch_of(t);
+            // Client sampling: re-point the worker slots at round t's
+            // cohort before anything reads a worker id (the id drives
+            // both the data draw and the wire identity). The draw runs
+            // on its own rng stream, so with sampling off this branch
+            // never executes and the round is byte-identical to seed.
+            if let Some(reg) = &self.registry {
+                for (slot, lid) in reg.cohort(t, self.workers.len()).into_iter().enumerate() {
+                    self.workers[slot].id = lid;
+                }
+            }
             // Downlink membership first: who receives (and is charged
             // for) this round's broadcast, and whether a rejoin forces
             // a full-weights resync — on every shard: the rejoined
@@ -454,7 +577,18 @@ impl Trainer {
             let t1 = self.obs.as_mut().map_or(0, |o| o.now_ns());
             let replies = self.bus.round_sharded(&frames, &mut self.workers)?;
             let t2 = self.obs.as_mut().map_or(0, |o| o.now_ns());
-            let part = self.ps.apply(&replies)?;
+            let part = if self.cfg.async_rounds {
+                // Bounded-staleness apply: admit by age, then refund
+                // every rejected delta (and the un-applied fraction of
+                // each down-weighted one) into its sender's residual.
+                let policy =
+                    StalenessPolicy::new(self.cfg.staleness, self.cfg.staleness_down_weight);
+                let ar = self.ps.apply_async(&replies, &policy)?;
+                self.settle_async(&replies, &ar, &policy)?;
+                ar.part
+            } else {
+                self.ps.apply(&replies)?
+            };
             let t3 = self.obs.as_mut().map_or(0, |o| o.now_ns());
             last_loss = part.mean_loss;
             if self.obs.is_some() {

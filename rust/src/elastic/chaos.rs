@@ -17,7 +17,11 @@
 //! * **drop** — the worker's reply is lost on the wire.
 //! * **delay** — the reply arrives after the round deadline: delivered
 //!   under [`StragglerPolicy::Wait`] (the round waits it out), dropped
-//!   under [`StragglerPolicy::Drop`].
+//!   under [`StragglerPolicy::Drop`]. Under **async rounds**
+//!   ([`ChaosTransport::with_async`]) a delayed reply is neither: it is
+//!   *held* for `1 + lag` rounds and then re-injected verbatim, still
+//!   tagged with its original round — genuine staleness for the
+//!   bounded-staleness apply path to admit or refund.
 //! * **duplicate** — the reply is retransmitted. Under `Wait` the extra
 //!   copy is passed through so the server's duplicate rejection fires
 //!   (the protocol-violation path); under `Drop` the elastic gather
@@ -88,6 +92,11 @@ pub struct ChaosPlan {
     pub dup_p: f32,
     /// Per-reply frame-corruption probability.
     pub corrupt_p: f32,
+    /// Extra rounds of lag for a delayed reply under **async** rounds
+    /// ([`ChaosTransport::with_async`]): a delay fault holds the reply
+    /// until round `t + 1 + lag` instead of dropping it. Ignored in
+    /// sync mode, where a delay means "missed the deadline".
+    pub lag: u64,
     /// Crash/restart windows.
     pub crashes: Vec<CrashWindow>,
     /// Explicitly scheduled one-off faults.
@@ -121,7 +130,8 @@ impl ChaosPlan {
     ///
     /// `drop`/`delay`/`dup`/`corrupt` are probabilities in `[0, 1]`;
     /// `crash=W@A..B` (repeatable) takes worker `W` down for rounds
-    /// `[A, B)`.
+    /// `[A, B)`; `lag=N` adds `N` extra rounds to every delayed reply
+    /// under async rounds (no effect in sync mode).
     pub fn parse(spec: &str) -> Result<Self> {
         let mut plan = ChaosPlan::default();
         for tok in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -137,10 +147,13 @@ impl ChaosPlan {
                 "delay" => plan.delay_p = parse_prob(k, v)?,
                 "dup" => plan.dup_p = parse_prob(k, v)?,
                 "corrupt" => plan.corrupt_p = parse_prob(k, v)?,
+                "lag" => {
+                    plan.lag = v.parse().map_err(|e| anyhow!("bad chaos lag '{v}': {e}"))?;
+                }
                 "crash" => plan.crashes.push(parse_crash(v)?),
                 other => {
                     return Err(anyhow!(
-                        "unknown chaos key '{other}' (seed|drop|delay|dup|corrupt|crash)"
+                        "unknown chaos key '{other}' (seed|drop|delay|dup|corrupt|lag|crash)"
                     ))
                 }
             }
@@ -250,6 +263,15 @@ pub struct ChaosTransport {
     plan: ChaosPlan,
     policy: StragglerPolicy,
     min_participation: usize,
+    /// Async (bounded-staleness) mode: a delay fault *holds* the reply
+    /// in `held` and re-injects it — verbatim, without re-rolling any
+    /// fault — once the round counter reaches its release round,
+    /// instead of delivering late (Wait) or dropping (Drop). Quorum is
+    /// not enforced: an empty async round is legal.
+    async_mode: bool,
+    /// Held delayed replies: `(release round, lane, reply)`, in
+    /// deterministic insertion order.
+    held: Vec<(u64, usize, ToServer)>,
     pub stats: FaultStats,
 }
 
@@ -260,6 +282,8 @@ impl ChaosTransport {
             plan,
             policy: StragglerPolicy::Wait,
             min_participation: 1,
+            async_mode: false,
+            held: Vec::new(),
             stats: FaultStats::default(),
         }
     }
@@ -271,14 +295,34 @@ impl ChaosTransport {
         self
     }
 
+    /// Switch to async (bounded-staleness) rounds: delay faults hold
+    /// the reply for `1 + plan.lag` rounds and then re-inject it with
+    /// its **original round tag**, modeling a slow worker whose delta
+    /// arrives late instead of never — the input
+    /// `ShardedServer::apply_async` admits it within `τ` or rejects it
+    /// into the sender's error-feedback refund path. Sync mode
+    /// (`with_async(false)`, the default) is byte-identical to the
+    /// seed behavior.
+    pub fn with_async(mut self, on: bool) -> Self {
+        self.async_mode = on;
+        self
+    }
+
+    /// Replies currently held by async delay faults (release round,
+    /// lane, reply) — test/driver introspection, never mutating.
+    pub fn held_replies(&self) -> &[(u64, usize, ToServer)] {
+        &self.held
+    }
+
     pub fn plan(&self) -> &ChaosPlan {
         &self.plan
     }
 
     /// Apply the plan's reply-level faults to one lane's gathered
     /// replies, in the deterministic gather order — the shared tail of
-    /// the unsharded round and of each sharded lane.
-    fn apply_reply_faults(&mut self, replies: Vec<ToServer>) -> Vec<ToServer> {
+    /// the unsharded round and of each sharded lane. `lane` routes
+    /// async-held delayed replies back to the lane they came from.
+    fn apply_reply_faults(&mut self, lane: usize, replies: Vec<ToServer>) -> Vec<ToServer> {
         let mut out = Vec::with_capacity(replies.len());
         for reply in replies {
             let (rt, rw) = (reply.round(), reply.worker());
@@ -288,6 +332,13 @@ impl ChaosTransport {
             }
             if self.plan.delays(rt, rw) {
                 self.stats.delayed += 1;
+                if self.async_mode {
+                    // Held verbatim (no fault re-roll at release): the
+                    // reply arrives `1 + lag` rounds late, still tagged
+                    // with the round it was computed against.
+                    self.held.push((rt + 1 + self.plan.lag, lane, reply));
+                    continue;
+                }
                 if self.policy == StragglerPolicy::Drop {
                     continue; // missed the deadline
                 }
@@ -314,6 +365,26 @@ impl ChaosTransport {
                 }
             }
         }
+        out
+    }
+
+    /// Release every held reply whose round has come for `lane`,
+    /// prepending them (in their deterministic insertion order) ahead
+    /// of the round's fresh replies — the oldest mass lands first.
+    fn release_held(&mut self, t: u64, lane: usize, fresh: Vec<ToServer>) -> Vec<ToServer> {
+        if self.held.is_empty() {
+            return fresh;
+        }
+        let taken = std::mem::take(&mut self.held);
+        let mut out = Vec::with_capacity(taken.len() + fresh.len());
+        for (release, l, r) in taken {
+            if l == lane && release <= t {
+                out.push(r);
+            } else {
+                self.held.push((release, l, r));
+            }
+        }
+        out.extend(fresh);
         out
     }
 
@@ -373,7 +444,8 @@ impl Transport for ChaosTransport {
             r?
         };
 
-        let out = self.apply_reply_faults(replies);
+        let out = self.apply_reply_faults(0, replies);
+        let out = self.release_held(t, 0, out);
         self.check_quorum(t, out)
     }
 
@@ -418,8 +490,10 @@ impl Transport for ChaosTransport {
         };
         lanes
             .into_iter()
-            .map(|lane| {
-                let out = self.apply_reply_faults(lane);
+            .enumerate()
+            .map(|(li, lane)| {
+                let out = self.apply_reply_faults(li, lane);
+                let out = self.release_held(t, li, out);
                 self.check_quorum(t, out)
             })
             .collect()
@@ -457,6 +531,11 @@ impl Transport for ChaosTransport {
 
 impl ChaosTransport {
     fn check_quorum(&self, t: u64, replies: Vec<ToServer>) -> Result<Vec<ToServer>> {
+        if self.async_mode {
+            // Async rounds have no quorum: an empty harvest is a legal
+            // (weight-preserving) round.
+            return Ok(replies);
+        }
         if self.policy == StragglerPolicy::Drop && replies.len() < self.min_participation {
             return Err(anyhow!(
                 "round {t} below quorum: {} replies, need {}",
@@ -501,6 +580,11 @@ mod tests {
         let p = ChaosPlan::parse("crash=0@2..4,crash=1@5..6").unwrap();
         assert_eq!(p.crashes.len(), 2);
         assert!(ChaosPlan::parse("").unwrap().is_empty());
+        // lag only shapes async delay release; alone it injects nothing
+        let p = ChaosPlan::parse("lag=2,delay=0.1").unwrap();
+        assert_eq!(p.lag, 2);
+        assert!(ChaosPlan::parse("lag=2").unwrap().is_empty());
+        assert!(ChaosPlan::parse("lag=x").is_err());
         assert!(ChaosPlan::parse("drop=1.5").is_err()); // outside [0,1]
         assert!(ChaosPlan::parse("frobnicate=1").is_err());
         assert!(ChaosPlan::parse("drop").is_err()); // not key=value
@@ -845,6 +929,43 @@ mod tests {
         assert_eq!(stats_a, stats_b);
         assert_eq!(x_a, x_b, "corrupted trajectories must be reproducible");
         assert_eq!(stats_a.corrupted, 18, "every reply of every round is hit");
+    }
+
+    /// Async mode: a delay fault holds the reply and re-injects it
+    /// verbatim `1 + lag` rounds later, still carrying its original
+    /// round tag; nothing is dropped and no quorum fires on the
+    /// thinned round.
+    #[test]
+    fn async_mode_holds_delayed_replies_and_reinjects_with_original_tag() {
+        let dim = 8;
+        let plan = ChaosPlan {
+            lag: 1,
+            scheduled: vec![ScheduledFault { kind: FaultKind::Delay, t: 1, worker: 0 }],
+            ..Default::default()
+        };
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut workers: Vec<Worker> = (0..2).map(|i| mk_worker(i, dim)).collect();
+        let mut bus = ChaosTransport::new(Box::new(LocalBus::default()), plan)
+            .with_policy(StragglerPolicy::Drop, 2)
+            .with_async(true);
+        let mut seen: Vec<Vec<(u32, u64)>> = Vec::new();
+        for _ in 1u64..=3 {
+            let (b, _) = ps.broadcast(2);
+            let replies = bus.round(&b, &mut workers).unwrap();
+            seen.push(replies.iter().map(|r| (r.worker(), r.round())).collect());
+        }
+        // round 1: worker 0's reply is held (not dropped) — and the
+        // 2-worker quorum does NOT fail the thinned async round
+        assert_eq!(seen[0], vec![(1, 1)]);
+        assert_eq!(bus.held_replies().len(), 1);
+        assert_eq!(bus.held_replies()[0].0, 3, "release = t + 1 + lag");
+        // round 2: fresh replies only, the hold is still pending
+        assert_eq!(seen[1], vec![(0, 2), (1, 2)]);
+        // round 3: the held reply lands first, original tag intact
+        assert_eq!(seen[2], vec![(0, 1), (0, 3), (1, 3)]);
+        assert!(bus.held_replies().is_empty());
+        assert_eq!(bus.stats.delayed, 1);
+        assert_eq!(bus.stats.dropped, 0);
     }
 
     /// Below the configured quorum the round fails loudly.

@@ -19,6 +19,12 @@
 //!   [`Membership`] (who receives the next broadcast, the set
 //!   `down_bytes` is charged for, plus the rejoin signal that forces a
 //!   full-weights resync so delta-downlink replicas never diverge).
+//! * [`sampling`] — client sampling and bounded staleness:
+//!   [`WorkerRegistry`] (a 100k+-scale registry of logical workers
+//!   with a per-round deterministic cohort draw on its own rng stream)
+//!   and [`StalenessPolicy`] (the async-round admission rule: apply a
+//!   delta while `now − t ≤ τ`, refund rejected mass into the sender's
+//!   EF residual).
 //! * [`chaos`] — a deterministic fault injector: [`ChaosPlan`] decides
 //!   drop / delay / duplicate / corrupt-frame and crash/restart faults
 //!   purely from `(seed, t, worker)` — no wall clock in the in-process
@@ -45,6 +51,8 @@
 
 pub mod chaos;
 pub mod membership;
+pub mod sampling;
 
 pub use chaos::{ChaosPlan, ChaosTransport, CrashWindow, FaultKind, FaultStats, ScheduledFault};
 pub use membership::{Membership, Participation, StragglerPolicy};
+pub use sampling::{StalenessPolicy, WorkerRegistry};

@@ -1,0 +1,214 @@
+//! Client sampling and bounded staleness: the policy types behind
+//! `--cohort` / `--registry` and `--async-rounds --staleness τ`.
+//!
+//! **Why sampling.** The ROADMAP's federated target is a registry of
+//! 100k+ *logical* workers, of which only a small cohort contributes
+//! each round — the regime every cross-device federated system runs in.
+//! The paper's convergence argument is per-received-delta (the mean in
+//! Alg. 2 runs over whoever reported), so a sampled cohort is already
+//! inside the analysis: it only changes *which* workers' stochastic
+//! gradients the round averages, exactly like partial participation.
+//!
+//! **Determinism contract.** The cohort of round `t` is a pure function
+//! of `(registry seed, t)` drawn on its **own** rng stream
+//! ([`COHORT_SALT`]) — it never consumes from the worker/chaos/server
+//! streams, so enabling sampling cannot perturb a fixed-seed sync run,
+//! and both ends of any wire (or a restarted run resuming at round `t`)
+//! recompute the identical cohort independently. Per-round cost is
+//! `O(K log K)` in the cohort size `K` and **independent of the
+//! registry size** (Floyd's sampling draws exactly `K` variates).
+//!
+//! **Why bounded staleness composes with error feedback.** In async
+//! mode a delta computed against round `t` may arrive when the server
+//! is already at `now > t`. [`StalenessPolicy`] admits it while
+//! `now − t ≤ τ` (optionally down-weighted by age); anything staler is
+//! rejected, and the *rejected mass is folded back into that worker's
+//! EF residual* — the same mechanism that absorbs quantization error
+//! absorbs rejection (ECQ-SGD, Wu et al. 2018): the residual carries
+//! the un-applied update into the worker's next reply, so no gradient
+//! mass is silently lost. Efficient-Adam (Chen et al. 2022) analyzes
+//! the two-way-compressed regime this extends.
+
+use crate::quant::seeded_rng;
+
+/// The dedicated rng stream salt for cohort draws. Sampling must never
+/// consume from any other stream (worker, chaos, server downlink): a
+/// fixed-seed sync run with sampling off is byte-identical to one where
+/// sampling code merely exists.
+pub const COHORT_SALT: u64 = 0xc047_5eed;
+
+/// A registry of `size` logical workers (ids `0..size`), from which a
+/// deterministic cohort is drawn per round. Purely virtual: the
+/// registry stores no per-worker state — `O(1)` memory at any size.
+#[derive(Clone, Debug)]
+pub struct WorkerRegistry {
+    size: u32,
+    seed: u64,
+}
+
+impl WorkerRegistry {
+    /// A registry of `size` logical workers. Ids travel the wire as
+    /// `u32` (the `ToServer` worker field), which caps the registry at
+    /// `u32::MAX` — comfortably past the 100k+ target.
+    pub fn new(size: u64, seed: u64) -> Self {
+        assert!(size > 0, "registry needs at least one logical worker");
+        assert!(size <= u32::MAX as u64, "registry size exceeds the u32 wire id space");
+        Self { size: size as u32, seed }
+    }
+
+    pub fn size(&self) -> u64 {
+        self.size as u64
+    }
+
+    /// Round `t`'s cohort: `k` distinct logical worker ids, sorted
+    /// ascending, drawn by Floyd's algorithm on the dedicated
+    /// [`COHORT_SALT`] stream. Pure in `(seed, t, k)`: any process can
+    /// recompute any round's cohort at any time (the trainer uses this
+    /// to route a stale delta's refund to the slot that sent it).
+    /// `k >= size` returns everyone.
+    pub fn cohort(&self, t: u64, k: usize) -> Vec<u32> {
+        let n = self.size as u64;
+        if k as u64 >= n {
+            return (0..self.size).collect();
+        }
+        let k = k as u64;
+        let mut rng = seeded_rng(self.seed ^ COHORT_SALT, t);
+        // Floyd's distinct sampling: k draws total, membership kept in
+        // a sorted vec (INV-DET bans hash collections here; k is small).
+        let mut chosen: Vec<u32> = Vec::with_capacity(k as usize);
+        for j in (n - k)..n {
+            let r = (rng.next_u64() % (j + 1)) as u32;
+            let candidate = match chosen.binary_search(&r) {
+                Ok(_) => j as u32, // r already chosen → take j (j > all prior draws)
+                Err(_) => r,
+            };
+            match chosen.binary_search(&candidate) {
+                Ok(_) => unreachable!("Floyd's invariant: j is never chosen twice"),
+                Err(pos) => chosen.insert(pos, candidate),
+            }
+        }
+        chosen
+    }
+}
+
+/// The bounded-staleness admission rule of async rounds: a delta
+/// computed against round `t`, arriving with the server at `now`, has
+/// age `now − t`; it is applied while `age ≤ tau` and rejected past
+/// that (the reject path refunds the decoded mass into the sender's EF
+/// residual — see [`crate::quant::ErrorFeedback::absorb_range`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StalenessPolicy {
+    /// Maximum admitted age in rounds (0 = only same-round deltas).
+    pub tau: u64,
+    /// Down-weight admitted deltas by age (`1/(1+age)`) instead of
+    /// applying them at full weight. The un-applied fraction
+    /// `(1−w)·δ` is refunded into the sender's residual, so mass is
+    /// conserved either way.
+    pub down_weight: bool,
+}
+
+impl StalenessPolicy {
+    pub fn new(tau: u64, down_weight: bool) -> Self {
+        Self { tau, down_weight }
+    }
+
+    /// Age of a delta tagged `t` at server round `now`. `t > now` can
+    /// only come from a corrupt or hostile frame; treat it as maximally
+    /// stale rather than wrapping.
+    pub fn age(now: u64, t: u64) -> u64 {
+        now.checked_sub(t).unwrap_or(u64::MAX)
+    }
+
+    /// Is a delta of this age applied (true) or rejected into the
+    /// sender's EF residual (false)?
+    pub fn admits(&self, age: u64) -> bool {
+        age <= self.tau
+    }
+
+    /// The apply weight for an admitted delta of this age: 1 when
+    /// down-weighting is off (age-0 deltas are always weight 1, so sync
+    /// rounds are untouched), else `1/(1+age)`.
+    pub fn weight(&self, age: u64) -> f32 {
+        if self.down_weight {
+            1.0 / (1.0 + age as f32)
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cohort_is_distinct_sorted_and_in_range() {
+        let reg = WorkerRegistry::new(1000, 7);
+        for t in 1u64..=50 {
+            let c = reg.cohort(t, 32);
+            assert_eq!(c.len(), 32, "t={t}");
+            assert!(c.windows(2).all(|p| p[0] < p[1]), "t={t}: not strictly ascending");
+            assert!(c.iter().all(|&id| (id as u64) < reg.size()), "t={t}");
+        }
+    }
+
+    #[test]
+    fn cohort_is_deterministic_and_varies_by_round() {
+        let reg = WorkerRegistry::new(100_000, 42);
+        let a = reg.cohort(3, 32);
+        let b = WorkerRegistry::new(100_000, 42).cohort(3, 32);
+        assert_eq!(a, b, "same (seed, t, k) must redraw identically");
+        let c = reg.cohort(4, 32);
+        assert_ne!(a, c, "different rounds should draw different cohorts");
+        let d = WorkerRegistry::new(100_000, 43).cohort(3, 32);
+        assert_ne!(a, d, "different seeds should draw different cohorts");
+    }
+
+    #[test]
+    fn cohort_covers_the_registry_over_time() {
+        // With 8 logical workers and cohorts of 2, every id should be
+        // drawn within a modest number of rounds — the draw is not
+        // stuck on a subset.
+        let reg = WorkerRegistry::new(8, 1);
+        let mut seen = vec![false; 8];
+        for t in 1u64..=200 {
+            for id in reg.cohort(t, 2) {
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some logical worker never sampled: {seen:?}");
+    }
+
+    #[test]
+    fn oversized_cohort_returns_everyone() {
+        let reg = WorkerRegistry::new(5, 9);
+        assert_eq!(reg.cohort(1, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(reg.cohort(1, 50), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cohort_cost_is_independent_of_registry_size() {
+        // Structural proxy for the acceptance criterion (the example
+        // measures wall-clock): the draw consumes exactly k rng
+        // variates regardless of registry size, so two registries that
+        // disagree only in size do identical work per draw.
+        let small = WorkerRegistry::new(1_000, 5).cohort(7, 32);
+        let large = WorkerRegistry::new(1_000_000_000, 5).cohort(7, 32);
+        assert_eq!(small.len(), large.len());
+    }
+
+    #[test]
+    fn staleness_policy_admits_and_weights_by_age() {
+        let p = StalenessPolicy::new(2, false);
+        assert!(p.admits(0) && p.admits(2));
+        assert!(!p.admits(3));
+        assert_eq!(p.weight(2), 1.0, "no down-weighting by default");
+        let dw = StalenessPolicy::new(4, true);
+        assert_eq!(dw.weight(0), 1.0, "age-0 deltas are never down-weighted");
+        assert_eq!(dw.weight(1), 0.5);
+        assert_eq!(dw.weight(3), 0.25);
+        // a from-the-future tag is maximally stale, never admitted
+        assert_eq!(StalenessPolicy::age(3, 9), u64::MAX);
+        assert!(!p.admits(StalenessPolicy::age(3, 9)));
+    }
+}

@@ -69,6 +69,23 @@ train flags:
   --straggler P         wait | drop (default wait; drop = proceed at
                         quorum, stragglers count as dropped replies)
   --min-participation N quorum under --straggler drop (default 1)
+  --async-rounds        bounded-staleness rounds: a delta tagged with
+                        the round it was computed against is applied
+                        while its age (now − t) is <= --staleness; any
+                        staler delta is rejected and its mass refunded
+                        into the sender's EF residual. Off (default) =
+                        the sync engine, byte-identical to prior builds
+  --staleness N         max admitted delta age in rounds under
+                        --async-rounds (default 0 = fresh only)
+  --stale-down-weight   weight admitted deltas by 1/(1+age) and refund
+                        the un-applied fraction into the sender's
+                        residual (mass is conserved either way)
+  --cohort K            client sampling: each round draws a cohort of K
+                        logical workers from a registry of --registry
+                        ids on a dedicated seeded rng stream; per-round
+                        cost is independent of the registry size
+  --registry N          logical-worker registry size for --cohort
+                        (default 100000)
   --shards N            parameter-server shards: the flat vector splits
                         into N contiguous ranges, each with its own
                         server state (EF residual, replica, resync,
@@ -97,6 +114,10 @@ eval flags:
 serve flags:  --addr A --workers N --dim D --steps N [--kx K] [--kg K]
               [--downlink D] [--resync-every N] [--round-deadline-ms MS]
               [--straggler P] [--min-participation N] [--chaos SPEC]
+              [--async-rounds] [--staleness N]  (non-barrier gather:
+              apply whatever replies are queued, admit by age <= N;
+              remote workers keep their own EF state, so rejected-delta
+              refunds happen worker-side on the next round)
               [--codec-policy P]  (applies to the delta downlink)
               [--shard-id i/N]  (this process serves shard i of N;
               listens on base addr port + i; default 0/1 = unsharded)
@@ -311,6 +332,11 @@ fn cmd_train(a: &Args) -> Result<()> {
         shards: a.get("shards", 1usize)?,
         straggler,
         min_participation,
+        async_rounds: a.flag("async_rounds"),
+        staleness: a.get("staleness", 0u64)?,
+        staleness_down_weight: a.flag("stale_down_weight"),
+        cohort: a.opt("cohort")?,
+        registry: a.get("registry", 100_000u64)?,
         seed: a.get("seed", 0u64)?,
         eval_every: a.get("eval_every", 50u64)?,
         eval_batches: a.get("eval_batches", 4usize)?,
@@ -372,6 +398,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let (chaos, straggler, min_participation) = parse_elastic(a)?;
     let codec_policy = parse_policy(a)?;
     let deadline_ms: Option<u64> = a.opt("round_deadline_ms")?;
+    let async_rounds = a.flag("async_rounds");
+    let staleness = a.get("staleness", 0u64)?;
+    if staleness != 0 && !async_rounds {
+        bail!("--staleness needs --async-rounds");
+    }
+    let staleness_policy = qadam::elastic::StalenessPolicy::new(staleness, false);
     let (shard_id, nshards) = parse_shard_id(a)?;
     let addr = shard_addr(&base_addr, shard_id)?;
     // This process owns shard `shard_id`'s contiguous range of the
@@ -420,10 +452,16 @@ fn cmd_serve(a: &Args) -> Result<()> {
     }
     let mut srv = TcpServer::bind_and_accept(&addr, workers)?;
     srv.set_elastic(deadline_ms, straggler, min_participation);
+    // Async mode turns the gather into a non-barrier poll: the round
+    // applies whatever replies are already queued (however old their
+    // round tags) instead of waiting for every lane.
+    srv.set_async(async_rounds);
     let mut bus: Box<dyn Transport> = Box::new(srv);
     if let Some(chaos_plan) = chaos {
         bus = Box::new(
-            ChaosTransport::new(bus, chaos_plan).with_policy(straggler, min_participation),
+            ChaosTransport::new(bus, chaos_plan)
+                .with_policy(straggler, min_participation)
+                .with_async(async_rounds),
         );
     }
     let problem = qadam::sim::StochasticProblem::new(dim, 0.05, 1);
@@ -458,6 +496,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
             codec_policy.label()
         );
     }
+    let mut stale_rejected = 0u64;
     for t in 1..=steps {
         let m = bus.membership(t, workers);
         if m.rejoined {
@@ -468,7 +507,25 @@ fn cmd_serve(a: &Args) -> Result<()> {
         let t1 = obs.as_mut().map_or(0, |o| o.now_ns());
         let replies = bus.round(&b, &mut [])?;
         let t2 = obs.as_mut().map_or(0, |o| o.now_ns());
-        let part = ps.apply(&replies)?;
+        let part = if async_rounds {
+            // Bounded-staleness apply. A rejected delta's refund is
+            // worker-side state this process cannot reach over TCP (the
+            // worker folds its own residual on the next round); the
+            // server's job is to admit by age and account the rejects.
+            let ar = ps.apply_async(&replies, &staleness_policy)?;
+            stale_rejected += ar.rejected.len() as u64;
+            if let Some(o) = &obs {
+                for (i, &age) in ar.ages.iter().enumerate() {
+                    if ar.rejected.binary_search(&i).is_err() {
+                        o.registry.staleness_rounds.observe(age);
+                    }
+                }
+                o.registry.stale_rejected.set_cumulative(stale_rejected);
+            }
+            ar.part
+        } else {
+            ps.apply(&replies)?
+        };
         if let Some(o) = &mut obs {
             use qadam::obs::{Span, SpanKind};
             let t3 = o.now_ns();
@@ -604,6 +661,11 @@ fn cmd_eval(a: &Args) -> Result<()> {
         shards: 1,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
+        async_rounds: false,
+        staleness: 0,
+        staleness_down_weight: false,
+        cohort: None,
+        registry: 100_000,
         seed: a.get("seed", 0u64)?,
         eval_every: 0,
         eval_batches: a.get("eval_batches", 4usize)?,

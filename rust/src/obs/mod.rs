@@ -46,7 +46,7 @@ use std::sync::Arc;
 pub const EXPORTERS: [&str; 2] = ["prometheus", "jsonl_trace"];
 
 /// Every metric series the registry exports, for `qadam info`.
-pub const METRIC_NAMES: [&str; 13] = [
+pub const METRIC_NAMES: [&str; 15] = [
     "qadam_rounds_total",
     "qadam_up_bytes_total",
     "qadam_down_bytes_total",
@@ -60,6 +60,8 @@ pub const METRIC_NAMES: [&str; 13] = [
     "qadam_test_acc",
     "qadam_round_latency_ms",
     "qadam_frame_bytes",
+    "qadam_staleness_rounds",
+    "qadam_stale_rejected_total",
 ];
 
 /// Spans retained in-memory: enough for the merged + per-shard +

@@ -136,6 +136,19 @@ pub fn render(reg: &MetricsRegistry) -> String {
         1e6,
     );
     histogram(&mut out, "qadam_frame_bytes", "Wire frame sizes, bytes.", &reg.frame_bytes, 1.0);
+    histogram(
+        &mut out,
+        "qadam_staleness_rounds",
+        "Age in rounds of admitted deltas (async mode).",
+        &reg.staleness_rounds,
+        1.0,
+    );
+    counter(
+        &mut out,
+        "qadam_stale_rejected_total",
+        "Deltas rejected as beyond the staleness bound and refunded into EF residuals.",
+        reg.stale_rejected.get(),
+    );
     out
 }
 
@@ -209,6 +222,8 @@ mod tests {
         reg.observe_round(2_000_000, 4, 0.5, 2.75, 0.125);
         reg.test_acc.set(0.75);
         reg.frame_bytes.observe(100);
+        reg.staleness_rounds.observe(1);
+        reg.stale_rejected.set_cumulative(2);
         let text = render(&reg);
         for want in [
             "# TYPE qadam_rounds_total counter\nqadam_rounds_total 3\n",
@@ -232,6 +247,11 @@ mod tests {
             "qadam_round_latency_ms_sum 2\nqadam_round_latency_ms_count 1\n",
             "qadam_frame_bytes_bucket{le=\"256\"} 1\n",
             "qadam_frame_bytes_sum 100\nqadam_frame_bytes_count 1\n",
+            // an age-1 observation: le="0" misses it, le="1" catches it
+            "qadam_staleness_rounds_bucket{le=\"0\"} 0\n",
+            "qadam_staleness_rounds_bucket{le=\"1\"} 1\n",
+            "qadam_staleness_rounds_count 1\n",
+            "qadam_stale_rejected_total 2\n",
         ] {
             assert!(text.contains(want), "missing exposition fragment:\n{want}\nin:\n{text}");
         }

@@ -135,6 +135,11 @@ pub const ROUND_LATENCY_BOUNDS_NS: [u64; 10] = [
 pub const FRAME_BYTES_BOUNDS: [u64; 8] =
     [256, 1_024, 4_096, 16_384, 65_536, 262_144, 1_048_576, 4_194_304];
 
+/// Admitted-delta staleness bucket bounds, rounds of age (async mode;
+/// 0 = fresh). Powers of two up to 64, then +Inf — τ in practice is
+/// single digits, so the low buckets carry the signal.
+pub const STALENESS_BOUNDS_ROUNDS: [u64; 8] = [0, 1, 2, 4, 8, 16, 32, 64];
+
 /// Chaos-fault kind label values, in [`FaultStats`] field order.
 pub const FAULT_KINDS: [&str; 5] = ["drop", "delay", "duplicate", "corrupt", "crash"];
 
@@ -176,6 +181,12 @@ pub struct MetricsRegistry {
     pub test_acc: Gauge,
     pub round_latency_ns: Histogram,
     pub frame_bytes: Histogram,
+    /// Age (rounds) of every delta an async round admitted; empty in
+    /// sync mode, where every delta is fresh by construction.
+    pub staleness_rounds: Histogram,
+    /// Cumulative deltas rejected as beyond the staleness bound τ (and
+    /// refunded into their senders' EF residuals).
+    pub stale_rejected: Counter,
 }
 
 impl MetricsRegistry {
@@ -197,6 +208,8 @@ impl MetricsRegistry {
             test_acc: Gauge::new(),
             round_latency_ns: Histogram::new(&ROUND_LATENCY_BOUNDS_NS),
             frame_bytes: Histogram::new(&FRAME_BYTES_BOUNDS),
+            staleness_rounds: Histogram::new(&STALENESS_BOUNDS_ROUNDS),
+            stale_rejected: Counter::new(),
         }
     }
 
@@ -311,6 +324,21 @@ mod tests {
         assert_eq!(reg.rounds.get(), 2);
         assert_eq!(reg.shard(0).down_bytes.get(), 100);
         assert_eq!(reg.shard(1).up_bytes.get(), 20);
+    }
+
+    #[test]
+    fn staleness_series_bucket_fresh_and_aged_deltas() {
+        let reg = MetricsRegistry::new(1);
+        reg.staleness_rounds.observe(0);
+        reg.staleness_rounds.observe(1);
+        reg.staleness_rounds.observe(3);
+        assert_eq!(reg.staleness_rounds.count(), 3);
+        let c: Vec<(u64, u64)> = reg.staleness_rounds.cumulative().collect();
+        assert_eq!(c[0], (0, 1), "age-0 deltas land in the first bucket");
+        assert_eq!(c[1], (1, 2));
+        assert_eq!(c[3], (4, 3), "age 3 rolls into the <=4 bucket");
+        reg.stale_rejected.set_cumulative(5);
+        assert_eq!(reg.stale_rejected.get(), 5);
     }
 
     #[test]

@@ -75,6 +75,18 @@ pub trait WorkerOpt: Send {
     fn chosen_bits(&self) -> Option<&[u32]> {
         None
     }
+    /// Does this optimizer carry an error-feedback residual? Async
+    /// rounds require one: a rejected (too-stale) delta's mass is
+    /// refunded into the residual, and without EF there is nowhere to
+    /// carry it — config validation rejects the combination.
+    fn has_error_feedback(&self) -> bool {
+        false
+    }
+    /// Fold un-applied update mass back into the EF residual over
+    /// `[start, start + vals.len())`: `e[start + i] += scale * vals[i]`
+    /// — the async-round refund path ([`crate::quant::ErrorFeedback::absorb_range`]).
+    /// Default no-op for optimizers without a residual.
+    fn absorb_residual(&mut self, _start: usize, _vals: &[f32], _scale: f32) {}
     /// Checkpointable optimizer state (m, v, e), when the optimizer has
     /// one (QAdam family). Baselines return None (cold resume).
     /// Borrowed views — the checkpoint writer owns the one copy.
@@ -319,6 +331,14 @@ impl WorkerOpt for QAdamEf {
         self.policy.as_ref().map(|p| p.bits())
     }
 
+    fn has_error_feedback(&self) -> bool {
+        self.ef.enabled()
+    }
+
+    fn absorb_residual(&mut self, start: usize, vals: &[f32], scale: f32) {
+        self.ef.absorb_range(start, vals, scale);
+    }
+
     fn state(&self) -> Option<(&[f32], &[f32], &[f32])> {
         Some((&self.state.m, &self.state.v, self.ef.residual()))
     }
@@ -469,6 +489,14 @@ impl WorkerOpt for BlockwiseSgdEf {
 
     fn residual_inf_norm(&self) -> f32 {
         self.ef.residual_inf_norm()
+    }
+
+    fn has_error_feedback(&self) -> bool {
+        self.ef.enabled()
+    }
+
+    fn absorb_residual(&mut self, start: usize, vals: &[f32], scale: f32) {
+        self.ef.absorb_range(start, vals, scale);
     }
 }
 

@@ -41,7 +41,7 @@ pub mod transport;
 pub mod worker;
 
 pub use protocol::{CommStats, ToServer, ToWorker};
-pub use server::ParameterServer;
-pub use shard::{ShardPlan, ShardedServer};
+pub use server::{AsyncApply, ParameterServer};
+pub use shard::{AsyncRound, ShardPlan, ShardedServer};
 pub use transport::{LocalBus, ThreadedBus, Transport};
 pub use worker::{GradSource, SimGradSource, Worker};

@@ -42,7 +42,7 @@
 //! code and stays bit-identical to the seed behavior.
 
 use super::protocol::{CommStats, ToServer, ToWorker};
-use crate::elastic::Participation;
+use crate::elastic::{Participation, StalenessPolicy};
 use crate::quant::{CodecPolicy, Compressor, ErrorFeedback, Identity, LogQuant, WQuant, WireMsg};
 use crate::util::par::par_tasks;
 use anyhow::{anyhow, Result};
@@ -467,6 +467,139 @@ impl ParameterServer {
         self.stats.rounds += 1;
         Ok(Participation { round: self.t, mean_loss, reporters: ids })
     }
+
+    /// Gather + apply one **asynchronous** round under a bounded-staleness
+    /// admission rule.
+    ///
+    /// Unlike [`ParameterServer::apply`] — which demands every delta carry
+    /// the current round tag — this path accepts any delta whose age
+    /// `self.t − d.round()` the [`StalenessPolicy`] admits (`age ≤ τ`),
+    /// optionally down-weighting it by age, and *rejects* the rest instead
+    /// of failing the round. The caller is responsible for folding each
+    /// rejected delta (and the `1 − w(age)` remainder of each
+    /// down-weighted one) back into the sender's error-feedback residual
+    /// (`Worker::absorb_rejected`) so no gradient mass is silently lost —
+    /// the same residual-composition argument that makes straggler drops
+    /// safe (ECQ-SGD, Wu et al. 2018; two-way compression in
+    /// Efficient-Adam, Chen et al. 2022) covers bounded staleness: a
+    /// rejected delta re-ships through the residual within τ rounds of
+    /// retries or is carried indefinitely, but never vanishes.
+    ///
+    /// Invariants:
+    /// * The admit/reject decision is a pure function of
+    ///   `(d.round(), self.t, policy)` — no clock, no rng — so every
+    ///   shard of a [`super::ShardedServer`] makes the identical call for
+    ///   the same logical delta.
+    /// * A delta tagged *ahead* of the server (`d.round() > self.t`) is
+    ///   treated as maximally stale and rejected, never applied.
+    /// * An all-rejected (or empty) round is legal: the weights do not
+    ///   move, `mean_loss` is 0.0 (never NaN — the mean runs over the
+    ///   *admitted* set, which may be empty), and the round still counts
+    ///   in [`CommStats::rounds`].
+    /// * With every age 0 and no down-weighting this computes the
+    ///   identical per-block f32 operations as [`ParameterServer::apply`]
+    ///   (asserted in tests), so turning async mode on does not perturb a
+    ///   worker set that happens to stay fresh.
+    ///
+    /// The weighted decode path allocates a block-sized scratch: this is
+    /// the async round path, not the sync hot loop, and clarity wins.
+    pub fn apply_async(
+        &mut self,
+        deltas: &[ToServer],
+        policy: &StalenessPolicy,
+    ) -> Result<AsyncApply> {
+        // Validate first: a rejected *round* (malformed input) is fully
+        // side-effect-free. Staleness is not an error — it is the point.
+        for d in deltas {
+            if d.payload_n() != self.x.len() {
+                return Err(anyhow!(
+                    "delta dim {} != model dim {}",
+                    d.payload_n(),
+                    self.x.len()
+                ));
+            }
+        }
+        // Duplicates are per (worker, origin round): one worker may
+        // legitimately have two in-flight deltas from different rounds,
+        // but the same (worker, round) pair twice is a transport bug.
+        let mut keys: Vec<(u32, u64)> =
+            deltas.iter().map(|d| (d.worker(), d.round())).collect();
+        keys.sort_unstable();
+        if let Some(dup) = keys.windows(2).find(|p| p[0] == p[1]) {
+            return Err(anyhow!(
+                "duplicate delta from worker {} for round {}",
+                dup[0].0,
+                dup[0].1
+            ));
+        }
+        let ages: Vec<u64> =
+            deltas.iter().map(|d| StalenessPolicy::age(self.t, d.round())).collect();
+        let admitted: Vec<usize> =
+            (0..deltas.len()).filter(|&i| policy.admits(ages[i])).collect();
+        let rejected: Vec<usize> =
+            (0..deltas.len()).filter(|&i| !policy.admits(ages[i])).collect();
+        for d in deltas {
+            self.stats.up_bytes += d.wire_bytes() as u64;
+        }
+        let mut mean_loss = 0.0f32;
+        let mut reporters: Vec<u32> = Vec::with_capacity(admitted.len());
+        if !admitted.is_empty() {
+            let n = admitted.len() as f32;
+            for &i in &admitted {
+                mean_loss += deltas[i].loss() / n;
+                reporters.push(deltas[i].worker());
+            }
+            reporters.sort_unstable();
+            reporters.dedup();
+            let inv = 1.0 / n;
+            let block = self.block;
+            let mut tmp = vec![0.0f32; block.min(self.x.len())];
+            for (bi, (xc, ac)) in
+                self.x.chunks_mut(block).zip(self.acc.chunks_mut(block)).enumerate()
+            {
+                let start = bi * block;
+                ac.fill(0.0);
+                for &i in &admitted {
+                    let w = policy.weight(ages[i]);
+                    if w == 1.0 {
+                        // Same accumulation the sync fused kernel performs.
+                        deltas[i].decode_range_add(start, ac);
+                    } else {
+                        let t = &mut tmp[..ac.len()];
+                        deltas[i].decode_range(start, t);
+                        for (a, &v) in ac.iter_mut().zip(t.iter()) {
+                            *a += w * v;
+                        }
+                    }
+                }
+                for (xi, &a) in xc.iter_mut().zip(ac.iter()) {
+                    *xi -= inv * a;
+                }
+            }
+        }
+        self.stats.rounds += 1;
+        Ok(AsyncApply {
+            part: Participation { round: self.t, mean_loss, reporters },
+            ages,
+            rejected,
+        })
+    }
+}
+
+/// Outcome of one [`ParameterServer::apply_async`] call.
+///
+/// `ages` is aligned with the input slice (one entry per delta, admitted
+/// or not) so the caller can compute the `1 − w(age)` refund share for
+/// down-weighted deltas; `rejected` indexes the deltas whose full mass
+/// must flow back into the sender's error-feedback residual.
+#[derive(Debug, Clone)]
+pub struct AsyncApply {
+    /// Who the (possibly empty) admitted mean ran over, and its loss.
+    pub part: Participation,
+    /// Staleness `server_t − delta_t` per input delta, in input order.
+    pub ages: Vec<u64>,
+    /// Indices (into the input slice) rejected as beyond `τ`.
+    pub rejected: Vec<usize>,
 }
 
 /// One block of the fused decode→sum→apply traversal behind
@@ -963,5 +1096,106 @@ mod tests {
         let stale = ToServer::Delta { t: 7, worker: 1, loss: 0.0, msg: delta_msg(&[0.5; 32], 2) };
         assert!(ps.apply(&[good, stale]).is_err());
         assert_eq!(ps.master(), &[1.0; 32][..]);
+    }
+
+    /// With every delta fresh (age 0) and no down-weighting, the async
+    /// path performs the identical per-block f32 operations as the sync
+    /// fused kernel — byte-for-byte equal weights.
+    #[test]
+    fn async_apply_with_fresh_deltas_matches_sync_apply_bitwise() {
+        let x0: Vec<f32> = (0..64).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
+        let deltas: Vec<ToServer> = (0..3)
+            .map(|w| {
+                let u: Vec<f32> = (0..64).map(|i| 0.01 * ((i + w) as f32).cos()).collect();
+                ToServer::Delta { t: 1, worker: w as u32, loss: 1.0, msg: delta_msg(&u, 4) }
+            })
+            .collect();
+        let mut sync = ParameterServer::with_shards(x0.clone(), None, 16, 1);
+        sync.broadcast(3);
+        let part = sync.apply(&deltas).unwrap();
+        let mut asyn = ParameterServer::with_shards(x0, None, 16, 1);
+        asyn.broadcast(3);
+        let rep = asyn.apply_async(&deltas, &StalenessPolicy::new(2, false)).unwrap();
+        assert_eq!(sync.master(), asyn.master(), "fresh async round must equal sync apply");
+        assert_eq!(rep.part.mean_loss, part.mean_loss);
+        assert_eq!(rep.part.reporters, part.reporters);
+        assert_eq!(rep.ages, vec![0, 0, 0]);
+        assert!(rep.rejected.is_empty());
+    }
+
+    /// Bounded staleness: an in-window delta is applied, an over-window
+    /// one is rejected (reported, weights unmoved by it), and a delta
+    /// tagged ahead of the server counts as maximally stale.
+    #[test]
+    fn async_apply_admits_within_tau_and_rejects_beyond() {
+        let mut ps = ParameterServer::new(vec![1.0; 4], None);
+        for _ in 0..3 {
+            ps.broadcast(2);
+        } // server now at t = 3
+        assert_eq!(ps.step(), 3);
+        let fresh = ToServer::Delta { t: 3, worker: 0, loss: 1.0, msg: delta_msg(&[0.5; 4], 2) };
+        let stale_ok =
+            ToServer::Delta { t: 2, worker: 1, loss: 3.0, msg: delta_msg(&[1.0; 4], 2) };
+        let too_old =
+            ToServer::Delta { t: 0, worker: 2, loss: 9.0, msg: delta_msg(&[8.0; 4], 2) };
+        let future =
+            ToServer::Delta { t: 9, worker: 3, loss: 9.0, msg: delta_msg(&[8.0; 4], 2) };
+        let rep = ps
+            .apply_async(&[fresh, stale_ok, too_old, future], &StalenessPolicy::new(1, false))
+            .unwrap();
+        assert_eq!(rep.ages, vec![0, 1, 3, u64::MAX]);
+        assert_eq!(rep.rejected, vec![2, 3]);
+        assert_eq!(rep.part.reporters, vec![0, 1]);
+        assert_eq!(rep.part.mean_loss, 2.0, "mean over the admitted set only");
+        // mean of the two admitted deltas: (0.5 + 1.0) / 2 = 0.75 off each coord
+        for v in ps.master() {
+            assert!((v - 0.25).abs() < 1e-6, "{v}");
+        }
+    }
+
+    /// An all-rejected round is legal: weights hold still, the loss is
+    /// 0.0 (not NaN), and the same (worker, round) pair twice errors
+    /// while the same worker at two different rounds does not.
+    #[test]
+    fn async_apply_survives_empty_admission_and_checks_dup_pairs() {
+        let mut ps = ParameterServer::new(vec![1.0; 4], None);
+        for _ in 0..4 {
+            ps.broadcast(1);
+        }
+        let old = |t, worker| ToServer::Delta {
+            t,
+            worker,
+            loss: 5.0,
+            msg: delta_msg(&[1.0; 4], 2),
+        };
+        let rep = ps.apply_async(&[old(0, 0), old(1, 0)], &StalenessPolicy::new(0, false)).unwrap();
+        assert!(rep.part.reporters.is_empty());
+        assert_eq!(rep.rejected, vec![0, 1]);
+        assert_eq!(rep.part.mean_loss, 0.0, "empty admission must not produce NaN");
+        assert!(rep.part.mean_loss.is_finite());
+        assert_eq!(ps.master(), &[1.0; 4][..]);
+        // Same worker, same round, twice: transport bug, hard error.
+        assert!(ps.apply_async(&[old(1, 0), old(1, 0)], &StalenessPolicy::new(0, false)).is_err());
+        // Empty gather (no replies arrived this tick) is fine too.
+        let rep = ps.apply_async(&[], &StalenessPolicy::new(0, false)).unwrap();
+        assert!(rep.part.reporters.is_empty() && rep.ages.is_empty());
+    }
+
+    /// Age-down-weighting scales a stale delta by `1/(1+age)`; the
+    /// remainder is reported via `ages` so the trainer can refund
+    /// `(1 − w)` of the mass into the sender's residual.
+    #[test]
+    fn async_apply_down_weights_by_age() {
+        let mut ps = ParameterServer::new(vec![1.0; 4], None);
+        ps.broadcast(1);
+        ps.broadcast(1); // t = 2
+        let fresh = ToServer::Delta { t: 2, worker: 0, loss: 0.0, msg: delta_msg(&[1.0; 4], 2) };
+        let old = ToServer::Delta { t: 1, worker: 1, loss: 0.0, msg: delta_msg(&[1.0; 4], 2) };
+        let rep = ps.apply_async(&[fresh, old], &StalenessPolicy::new(2, true)).unwrap();
+        assert!(rep.rejected.is_empty());
+        // mean of [1.0·1.0, 0.5·1.0] = 0.75 pulled off each coordinate
+        for v in ps.master() {
+            assert!((v - 0.25).abs() < 1e-6, "{v}");
+        }
     }
 }

@@ -51,8 +51,8 @@
 //! never crosses the wire.
 
 use super::protocol::{CommStats, ToServer, ToWorker};
-use super::server::ParameterServer;
-use crate::elastic::Participation;
+use super::server::{AsyncApply, ParameterServer};
+use crate::elastic::{Participation, StalenessPolicy};
 use crate::quant::{CodecPolicy, PolicySpec, TensorLayout};
 use anyhow::{anyhow, bail, Result};
 
@@ -431,6 +431,80 @@ impl ShardedServer {
         reporters.dedup();
         Ok(Participation { round, mean_loss, reporters })
     }
+
+    /// Apply one **asynchronous** lockstep round under bounded staleness:
+    /// `replies[s]` are shard `s`'s gathered replies, each admitted or
+    /// rejected by `policy` independently per lane
+    /// ([`ParameterServer::apply_async`]). Because the admit/reject rule
+    /// is a pure function of `(delta round, server round, policy)` and
+    /// every shard sits at the same lockstep `t`, the *same logical
+    /// delta* gets the same verdict on every lane — but the lanes'
+    /// reply sets themselves may differ (over TCP each lane's stream
+    /// drains independently), so rejections are reported per
+    /// `(lane, index)`.
+    ///
+    /// The merged `mean_loss` averages only the shards that admitted at
+    /// least one reply: an all-rejected lane contributes no loss signal,
+    /// and an all-rejected *round* yields 0.0, never NaN (the
+    /// zero-reporters guard — a sync drop-all round errors at quorum
+    /// before reaching here, but an async quiet tick is routine).
+    pub fn apply_async(
+        &mut self,
+        replies: &[Vec<ToServer>],
+        policy: &StalenessPolicy,
+    ) -> Result<AsyncRound> {
+        if replies.len() != self.shards.len() {
+            return Err(anyhow!(
+                "reply lanes {} != shards {}",
+                replies.len(),
+                self.shards.len()
+            ));
+        }
+        let mut lanes: Vec<AsyncApply> = Vec::with_capacity(self.shards.len());
+        for (sh, r) in self.shards.iter_mut().zip(replies) {
+            lanes.push(sh.apply_async(r, policy)?);
+        }
+        let round = lanes[0].part.round;
+        let reporting: Vec<&AsyncApply> =
+            lanes.iter().filter(|l| !l.part.reporters.is_empty()).collect();
+        let mean_loss = if reporting.is_empty() {
+            0.0
+        } else {
+            reporting.iter().map(|l| l.part.mean_loss).sum::<f32>() / reporting.len() as f32
+        };
+        let mut reporters: Vec<u32> =
+            lanes.iter().flat_map(|l| l.part.reporters.iter().copied()).collect();
+        reporters.sort_unstable();
+        reporters.dedup();
+        let ages = lanes.iter().map(|l| l.ages.clone()).collect();
+        let rejected = lanes
+            .iter()
+            .enumerate()
+            .flat_map(|(lane, l)| l.rejected.iter().map(move |&i| (lane, i)))
+            .collect();
+        Ok(AsyncRound {
+            part: Participation { round, mean_loss, reporters },
+            ages,
+            rejected,
+        })
+    }
+}
+
+/// Outcome of one [`ShardedServer::apply_async`] round.
+///
+/// `ages[lane]` is aligned with the input `replies[lane]` (one entry
+/// per reply, admitted or rejected); `rejected` lists `(lane, index)`
+/// pairs whose full mass the driver must refund into the sending
+/// worker's error-feedback residual.
+#[derive(Debug, Clone)]
+pub struct AsyncRound {
+    /// Merged participation: union of per-lane admitted reporters, mean
+    /// of the reporting lanes' mean losses (0.0 when none reported).
+    pub part: Participation,
+    /// Per-lane staleness, aligned with the input reply vectors.
+    pub ages: Vec<Vec<u64>>,
+    /// `(lane, index into that lane's replies)` of rejected deltas.
+    pub rejected: Vec<(usize, usize)>,
 }
 
 #[cfg(test)]
@@ -580,5 +654,50 @@ mod tests {
         assert_eq!(states[2].0, &[4.0, 5.0]);
         assert!(states.iter().all(|(_, e)| e == &[0.125, 0.125]));
         assert!(srv.restore_downlink_full(&replica[..4], &residual).is_err());
+    }
+
+    /// Async sharded round: lanes may hold different reply sets; the
+    /// admission verdict for a given (worker, round) is identical on
+    /// every lane; rejects come back as (lane, index) and a fully quiet
+    /// round reports loss 0.0, not NaN.
+    #[test]
+    fn sharded_async_apply_merges_lanes_and_guards_empty_rounds() {
+        let dim = 8;
+        let plan = ShardPlan::uniform(dim, 2);
+        let mut srv = ShardedServer::new(vec![1.0; dim], None, plan, 4, 1);
+        srv.broadcast(2);
+        srv.broadcast(2); // t = 2
+        let lane = |t: u64, w: u32, d: f32| ToServer::Delta {
+            t,
+            worker: w,
+            loss: 4.0,
+            msg: delta_msg(&[d; 4], 2),
+        };
+        // lane 0: worker 0 fresh + worker 1 too stale; lane 1: only
+        // worker 1's stale delta arrived this tick.
+        let rep = srv
+            .apply_async(
+                &[vec![lane(2, 0, 0.5), lane(0, 1, 8.0)], vec![lane(0, 1, 8.0)]],
+                &StalenessPolicy::new(1, false),
+            )
+            .unwrap();
+        assert_eq!(rep.part.round, 2);
+        assert_eq!(rep.part.reporters, vec![0]);
+        assert_eq!(rep.part.mean_loss, 4.0, "only the reporting lane contributes loss");
+        assert_eq!(rep.ages, vec![vec![0, 2], vec![2]]);
+        assert_eq!(rep.rejected, vec![(0, 1), (1, 0)]);
+        let x = srv.master();
+        for (i, v) in x.iter().enumerate() {
+            let want = if i < 4 { 0.5 } else { 1.0 };
+            assert!((v - want).abs() < 1e-6, "x[{i}] = {v}");
+        }
+        // a fully quiet tick: no lane admitted anything, loss stays finite
+        let rep = srv
+            .apply_async(&[vec![], vec![]], &StalenessPolicy::new(1, false))
+            .unwrap();
+        assert!(rep.part.reporters.is_empty());
+        assert_eq!(rep.part.mean_loss, 0.0);
+        assert!(rep.part.mean_loss.is_finite());
+        assert_eq!(srv.master(), x, "quiet round must not move the weights");
     }
 }

@@ -348,11 +348,22 @@ impl Transport for ThreadedBus {
 pub struct TcpServer {
     listener: TcpListener,
     streams: Vec<TcpStream>,
+    /// The worker id each connection last claimed, aligned with
+    /// `streams` (`None` until the connection's first reply — a
+    /// connection identifies itself by replying, not by connecting).
+    /// This is what lets a shard group intersect per-lane worker sets
+    /// instead of guessing from connection counts.
+    ids: Vec<Option<u32>>,
     /// Worker slots the deployment was sized for (the rejoin cap).
     capacity: usize,
     deadline: Option<Duration>,
     policy: StragglerPolicy,
     min_participation: usize,
+    /// Async (bounded-staleness) rounds: the gather harvests only the
+    /// replies already on the wire and leaves quiet connections
+    /// untouched — their replies surface in later rounds as stale
+    /// deltas for `ParameterServer::apply_async`.
+    async_gather: bool,
     /// Cumulative connections evicted (dead at broadcast, or past the
     /// straggler deadline at gather) — the obs accounting tap.
     evicted: u64,
@@ -371,13 +382,16 @@ impl TcpServer {
         }
         // Rejoin polling must never block the round loop.
         listener.set_nonblocking(true)?;
+        let ids = vec![None; streams.len()];
         Ok(Self {
             listener,
             streams,
+            ids,
             capacity: nworkers,
             deadline: None,
             policy: StragglerPolicy::Wait,
             min_participation: 1,
+            async_gather: false,
             evicted: 0,
         })
     }
@@ -398,6 +412,26 @@ impl TcpServer {
         self.min_participation = min_participation.max(1);
     }
 
+    /// Switch the gather to **async (bounded-staleness) rounds**: it
+    /// harvests one reply from every connection that already has bytes
+    /// queued (or produces them within the poll window) and leaves
+    /// quiet connections alone — no eviction, no quorum; an empty
+    /// harvest is a legal round. A slow worker's reply stays in its
+    /// stream and surfaces on a later tick carrying its original round
+    /// tag, for `ParameterServer::apply_async` to admit (within `τ`) or
+    /// reject. Only a genuinely dead connection (EOF / hard error) is
+    /// evicted. The straggler deadline, when set, doubles as the poll
+    /// window.
+    pub fn set_async(&mut self, on: bool) {
+        self.async_gather = on;
+    }
+
+    /// The worker id each live connection last claimed, aligned with
+    /// the connection order (`None` = no reply seen yet).
+    pub fn lane_ids(&self) -> &[Option<u32>] {
+        &self.ids
+    }
+
     pub fn nworkers(&self) -> usize {
         self.streams.len()
     }
@@ -414,6 +448,7 @@ impl TcpServer {
                     let _ = s.set_nodelay(true);
                     eprintln!("[server] worker rejoined from {peer}");
                     self.streams.push(s);
+                    self.ids.push(None); // identifies itself at its first reply
                     rejoined = true;
                 }
                 Err(_) => break, // WouldBlock: nobody waiting
@@ -452,20 +487,37 @@ impl TcpServer {
             }
             StragglerPolicy::Drop => {
                 let mut live = Vec::with_capacity(self.streams.len());
-                for mut s in std::mem::take(&mut self.streams) {
+                let mut live_ids = Vec::with_capacity(self.ids.len());
+                let taken = std::mem::take(&mut self.streams);
+                let taken_ids = std::mem::take(&mut self.ids);
+                for (mut s, id) in taken.into_iter().zip(taken_ids) {
                     // A connection we cannot even send to is dead: evict
                     // it and treat its reply as dropped.
                     if write_frame(&mut s, &payload).is_ok() {
                         live.push(s);
+                        live_ids.push(id);
                     } else {
                         self.evicted += 1;
                         eprintln!("[server] dropping dead connection at broadcast");
                     }
                 }
                 self.streams = live;
+                self.ids = live_ids;
             }
         }
         Ok(())
+    }
+
+    /// Arm this round's straggler budget: `(gather start, deadline)`,
+    /// or `None` when no deadline is configured. This is the **only**
+    /// clock read in the transport — [`Self::gather`] arms its own
+    /// budget, and [`TcpShardGroup::round_sharded`] arms **one** budget
+    /// and shares it across every lane's gather, so a sharded round's
+    /// worst case is one deadline total, not one per lane.
+    // lint: allow(INV-DET) the straggler deadline is wall-clock by design; what
+    // a round computes from the replies it keeps stays deterministic
+    fn arm_deadline(&self) -> Option<(Instant, Duration)> {
+        self.deadline.map(|d| (Instant::now(), d))
     }
 
     /// The gather half of a round (sorted, duplicate-checked, quorum-
@@ -473,35 +525,51 @@ impl TcpServer {
     /// armed when the gather starts; a straggler past it — or a dead
     /// connection — is evicted (its socket closes with the drop, so a
     /// late reply can never desync the frame stream; the worker
-    /// reconnects and rejoins through the resync path).
+    /// reconnects and rejoins through the resync path). In async mode
+    /// ([`Self::set_async`]) the gather is non-evicting: see
+    /// [`Self::gather_available`].
     pub fn gather(&mut self) -> Result<Vec<ToServer>> {
-        let mut replies = match self.policy {
-            StragglerPolicy::Wait => {
-                let mut replies = Vec::with_capacity(self.streams.len());
-                for s in &mut self.streams {
-                    let buf = read_frame(s)?;
-                    replies.push(ToServer::from_bytes(&buf)?);
+        let budget = self.arm_deadline();
+        self.gather_with(budget)
+    }
+
+    /// [`Self::gather`] against a caller-supplied straggler budget —
+    /// the shard-group entry point, so N lanes can draw down one shared
+    /// `(start, deadline)` pair instead of arming N consecutive ones.
+    fn gather_with(&mut self, budget: Option<(Instant, Duration)>) -> Result<Vec<ToServer>> {
+        let mut replies = if self.async_gather {
+            self.gather_available(budget)?
+        } else {
+            match self.policy {
+                StragglerPolicy::Wait => {
+                    let mut replies = Vec::with_capacity(self.streams.len());
+                    for (i, s) in self.streams.iter_mut().enumerate() {
+                        let buf = read_frame(s)?;
+                        let r = ToServer::from_bytes(&buf)?;
+                        self.ids[i] = Some(r.worker());
+                        replies.push(r);
+                    }
+                    replies
                 }
-                replies
-            }
-            StragglerPolicy::Drop => {
-                // lint: allow(INV-DET) the straggler deadline is wall-clock by design; what
-                // a round computes from the replies it keeps stays deterministic
-                let start = Instant::now();
-                let mut replies = Vec::with_capacity(self.streams.len());
-                for mut s in std::mem::take(&mut self.streams) {
-                    match read_reply(&mut s, self.deadline.map(|d| (start, d))) {
-                        Ok(r) => {
-                            replies.push(r);
-                            self.streams.push(s);
-                        }
-                        Err(e) => {
-                            self.evicted += 1;
-                            eprintln!("[server] dropping straggler/dead connection: {e}");
+                StragglerPolicy::Drop => {
+                    let mut replies = Vec::with_capacity(self.streams.len());
+                    let taken = std::mem::take(&mut self.streams);
+                    let taken_ids = std::mem::take(&mut self.ids);
+                    for (mut s, _id) in taken.into_iter().zip(taken_ids) {
+                        match read_reply(&mut s, budget) {
+                            Ok(r) => {
+                                self.ids.push(Some(r.worker()));
+                                replies.push(r);
+                                self.streams.push(s);
+                            }
+                            Err(e) => {
+                                self.evicted += 1;
+                                eprintln!("[server] dropping straggler/dead connection: {e}");
+                            }
                         }
                     }
+                    replies
                 }
-                replies
             }
         };
         replies.sort_by_key(worker_id);
@@ -511,13 +579,80 @@ impl TcpServer {
                 worker_id(&pair[0])
             ));
         }
-        if self.policy == StragglerPolicy::Drop && replies.len() < self.min_participation {
+        if !self.async_gather
+            && self.policy == StragglerPolicy::Drop
+            && replies.len() < self.min_participation
+        {
             return Err(anyhow!(
                 "round below quorum: {} of {} replies, need {}",
                 replies.len(),
                 self.capacity,
                 self.min_participation
             ));
+        }
+        Ok(replies)
+    }
+
+    /// The async harvest: one reply from every connection with bytes
+    /// already queued (or arriving within the poll window); quiet
+    /// connections keep their socket and their in-flight reply — it
+    /// surfaces on a later tick as a stale delta. Eviction is reserved
+    /// for genuinely dead connections (EOF / hard error), never for
+    /// slowness: the bounded-staleness admission rule, not the
+    /// transport, decides what a late reply is worth.
+    fn gather_available(
+        &mut self,
+        budget: Option<(Instant, Duration)>,
+    ) -> Result<Vec<ToServer>> {
+        // The deadline (remaining budget, for shard groups) doubles as
+        // the poll window; without one, a short fixed window keeps the
+        // driver loop from spinning hot on a quiet fleet.
+        let window = match budget {
+            Some((start, d)) => {
+                let left = d.saturating_sub(start.elapsed());
+                if left.is_zero() { Duration::from_millis(1) } else { left }
+            }
+            None => Duration::from_millis(5),
+        };
+        let mut replies = Vec::with_capacity(self.streams.len());
+        let taken = std::mem::take(&mut self.streams);
+        let taken_ids = std::mem::take(&mut self.ids);
+        for (mut s, id) in taken.into_iter().zip(taken_ids) {
+            s.set_read_timeout(Some(window))?;
+            let mut first = [0u8; 1];
+            match s.peek(&mut first) {
+                Ok(0) => {
+                    self.evicted += 1;
+                    eprintln!("[server] dropping dead connection (EOF) in async gather");
+                }
+                Ok(_) => {
+                    // Bytes are queued: commit to the whole frame.
+                    match read_reply(&mut s, budget) {
+                        Ok(r) => {
+                            self.ids.push(Some(r.worker()));
+                            replies.push(r);
+                            self.streams.push(s);
+                        }
+                        Err(e) => {
+                            self.evicted += 1;
+                            eprintln!("[server] dropping connection mid-frame in async gather: {e}");
+                        }
+                    }
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // Quiet this tick: keep the connection and whatever
+                    // it knows about its id.
+                    self.streams.push(s);
+                    self.ids.push(id);
+                }
+                Err(e) => {
+                    self.evicted += 1;
+                    eprintln!("[server] dropping dead connection in async gather: {e}");
+                }
+            }
         }
         Ok(replies)
     }
@@ -543,7 +678,9 @@ impl TcpServer {
 /// **every** recv: each syscall's timeout is the *remaining* wall-clock
 /// budget, so a peer trickling one byte per timeout window cannot hold
 /// the round open past the deadline — the total wait is bounded by the
-/// deadline itself, not by `deadline × reads`.
+/// deadline (plus a 1 ms drain grace per recv once exhausted, which
+/// only ever extends the wait while bytes are actually arriving), not
+/// by `deadline × reads`.
 fn read_reply(s: &mut TcpStream, budget: Option<(Instant, Duration)>) -> Result<ToServer> {
     let (start, d) = match budget {
         Some(b) => b,
@@ -555,10 +692,15 @@ fn read_reply(s: &mut TcpStream, budget: Option<(Instant, Duration)>) -> Result<
     };
     let arm = |s: &mut TcpStream| -> Result<()> {
         let remaining = d.saturating_sub(start.elapsed());
-        if remaining.is_zero() {
-            return Err(anyhow!("round deadline exhausted"));
-        }
-        s.set_read_timeout(Some(remaining))?;
+        // An exhausted budget still grants a minimal drain window: a
+        // reply already sitting in the socket buffer (e.g. on a later
+        // lane of a shared-budget sharded gather) is harvested instead
+        // of thrown away, while a peer with nothing queued times out
+        // within the grace tick — the total stays bounded by the
+        // deadline plus epsilon per connection, not deadline × lanes.
+        let window =
+            if remaining.is_zero() { Duration::from_millis(1) } else { remaining };
+        s.set_read_timeout(Some(window))?;
         Ok(())
     };
     let mut len = [0u8; 4];
@@ -656,8 +798,22 @@ impl TcpShardGroup {
         self.servers.iter_mut().map(|s| s.membership()).collect()
     }
 
+    /// Switch every lane to async (bounded-staleness) gathers — see
+    /// [`TcpServer::set_async`].
+    pub fn set_async(&mut self, on: bool) {
+        for srv in &mut self.servers {
+            srv.set_async(on);
+        }
+    }
+
     /// One lockstep sharded round: broadcast on every lane, then gather
-    /// every lane.
+    /// every lane — against **one** shared straggler budget. The budget
+    /// `(start, deadline)` is armed once, before the first gather, and
+    /// every lane's reads draw down the same remaining wall-clock: a
+    /// straggler that exhausts it on lane 0 has nothing left to stall
+    /// lanes 1..N with, so the whole sharded round is bounded by one
+    /// deadline, not by `nshards × deadline` (each lane arming its own
+    /// budget was exactly that worst case).
     pub fn round_sharded(&mut self, broadcasts: &[ToWorker]) -> Result<Vec<Vec<ToServer>>> {
         if broadcasts.len() != self.servers.len() {
             return Err(anyhow!(
@@ -669,9 +825,10 @@ impl TcpShardGroup {
         for (srv, b) in self.servers.iter_mut().zip(broadcasts) {
             srv.send_broadcast(b)?;
         }
+        let budget = self.servers[0].arm_deadline();
         let mut lanes = Vec::with_capacity(self.servers.len());
         for srv in &mut self.servers {
-            lanes.push(srv.gather()?);
+            lanes.push(srv.gather_with(budget)?);
         }
         Ok(lanes)
     }
@@ -710,15 +867,38 @@ impl Transport for TcpShardGroup {
     }
 
     /// Merged membership: a worker must be present on *every* lane to
-    /// serve the round (`present` is the minimum across lanes), and any
-    /// lane's rejoin raises the resync signal. Drivers wanting
-    /// per-shard resyncs use [`TcpShardGroup::shard_memberships`]
-    /// directly.
+    /// serve the round, so `present` is the size of the **intersection
+    /// of the per-lane worker-id sets** — not the minimum of the lane
+    /// counts, which silently miscounts when evictions are asymmetric
+    /// (lane 0 keeping worker {0} and lane 1 keeping worker {1} has
+    /// min-count 1 but zero workers able to serve a full round).
+    /// Connections that have not identified themselves yet (no reply
+    /// seen — a fresh accept or a pre-round fleet) cannot be
+    /// attributed, so they fall back to the count rule: the minimum
+    /// across lanes of each lane's unidentified-connection count is
+    /// added on top. Any lane's rejoin raises the resync signal.
+    /// Drivers wanting per-shard resyncs use
+    /// [`TcpShardGroup::shard_memberships`] directly.
     fn membership(&mut self, _next_t: u64, _total: usize) -> Membership {
         let per_lane = self.shard_memberships();
+        let mut known: Option<Vec<u32>> = None;
+        let mut min_unknown = usize::MAX;
+        for srv in &self.servers {
+            let mut ids: Vec<u32> = srv.lane_ids().iter().filter_map(|&id| id).collect();
+            ids.sort_unstable();
+            min_unknown = min_unknown.min(srv.lane_ids().len() - ids.len());
+            known = Some(match known {
+                None => ids,
+                Some(prev) => {
+                    prev.into_iter().filter(|id| ids.binary_search(id).is_ok()).collect()
+                }
+            });
+        }
+        let present = known.map_or(0, |k| k.len())
+            + if min_unknown == usize::MAX { 0 } else { min_unknown };
         Membership {
             expected: per_lane.iter().map(|m| m.expected).min().unwrap_or(0),
-            present: per_lane.iter().map(|m| m.present).min().unwrap_or(0),
+            present,
             rejoined: per_lane.iter().any(|m| m.rejoined),
         }
     }
@@ -1323,5 +1503,215 @@ mod tests {
         assert_eq!(h0.join().unwrap(), 8);
         assert_eq!(h1.join().unwrap(), 2);
         assert_eq!(h2.unwrap().join().unwrap(), 4, "rejoined worker serves rounds 5..=8");
+    }
+
+    /// Build a lane whose connections claim the given worker ids
+    /// (`None` = not yet identified), plus the client-side sockets that
+    /// keep the connections alive.
+    fn lane_with_ids(ids: Vec<Option<u32>>, capacity: usize) -> (TcpServer, Vec<TcpStream>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut clients = Vec::new();
+        let mut streams = Vec::new();
+        for _ in &ids {
+            clients.push(TcpStream::connect(addr).unwrap());
+            let (s, _) = listener.accept().unwrap();
+            streams.push(s);
+        }
+        listener.set_nonblocking(true).unwrap();
+        let srv = TcpServer {
+            listener,
+            streams,
+            ids,
+            capacity,
+            deadline: None,
+            policy: StragglerPolicy::Drop,
+            min_participation: 1,
+            async_gather: false,
+            evicted: 0,
+        };
+        (srv, clients)
+    }
+
+    /// Regression (satellite): merged shard-group membership must
+    /// intersect the per-lane worker-id sets. With asymmetric eviction
+    /// — lane 0 keeps only worker 0, lane 1 keeps only worker 1 — the
+    /// old min-over-counts rule reported `present = 1`, but **zero**
+    /// workers can serve a full sharded round.
+    #[test]
+    fn tcp_sharded_membership_intersects_per_lane_worker_sets() {
+        let (s0, _c0) = lane_with_ids(vec![Some(0)], 2);
+        let (s1, _c1) = lane_with_ids(vec![Some(1)], 2);
+        let mut group = TcpShardGroup::new(vec![s0, s1]);
+        let m = Transport::membership(&mut group, 1, 2);
+        assert_eq!(m.expected, 2);
+        assert_eq!(m.present, 0, "disjoint per-lane survivor sets share no worker");
+        assert!(!m.rejoined);
+
+        // Overlapping sets count exactly the common workers.
+        let (s0, _c0) = lane_with_ids(vec![Some(0), Some(1)], 2);
+        let (s1, _c1) = lane_with_ids(vec![Some(1)], 2);
+        let mut group = TcpShardGroup::new(vec![s0, s1]);
+        assert_eq!(Transport::membership(&mut group, 1, 2).present, 1);
+
+        // Unidentified connections (no reply seen yet) fall back to the
+        // min-count rule — a pre-round fleet is still fully present.
+        let (s0, _c0) = lane_with_ids(vec![None, None], 2);
+        let (s1, _c1) = lane_with_ids(vec![None, None], 2);
+        let mut group = TcpShardGroup::new(vec![s0, s1]);
+        assert_eq!(Transport::membership(&mut group, 1, 2).present, 2);
+
+        // Mixed: one known shared worker plus one unidentified slot on
+        // each lane.
+        let (s0, _c0) = lane_with_ids(vec![Some(0), None], 2);
+        let (s1, _c1) = lane_with_ids(vec![Some(0), None], 2);
+        let mut group = TcpShardGroup::new(vec![s0, s1]);
+        assert_eq!(Transport::membership(&mut group, 1, 2).present, 2);
+    }
+
+    /// A scripted client for deadline/async tests: serves canned Delta
+    /// replies (worker `id`, round tags from `ts`) after reading each
+    /// broadcast; a `None` entry reads the frame but never replies that
+    /// round.
+    fn scripted_client(
+        addr: String,
+        id: u32,
+        dim: usize,
+        script: Vec<Option<u64>>,
+        hold_ms: u64,
+    ) -> std::thread::JoinHandle<()> {
+        use crate::quant::{seeded_rng, Compressor, LogQuant};
+        std::thread::spawn(move || {
+            let mut s = loop {
+                match TcpStream::connect(&addr) {
+                    Ok(s) => break s,
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            };
+            s.set_nodelay(true).unwrap();
+            for step in script {
+                let _ = read_frame(&mut s).expect("broadcast frame");
+                if let Some(t) = step {
+                    let zeros = vec![0.0f32; dim];
+                    let mut q = vec![0.0; dim];
+                    let msg =
+                        LogQuant::new(2).compress_into(&zeros, &mut q, &mut seeded_rng(0, 0));
+                    let reply = ToServer::Delta { t, worker: id, loss: 0.0, msg };
+                    write_frame(&mut s, &reply.to_bytes()).unwrap();
+                }
+            }
+            std::thread::sleep(Duration::from_millis(hold_ms));
+        })
+    }
+
+    /// Regression (satellite): a sharded round shares **one** straggler
+    /// budget across its lanes. With a silent worker on both lanes the
+    /// round must finish in ~one deadline — the per-lane arming it
+    /// replaces took `nshards × deadline`.
+    #[test]
+    fn tcp_sharded_round_shares_one_deadline_across_lanes() {
+        let dim = 4;
+        let mut addrs = Vec::new();
+        for _ in 0..2 {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(l.local_addr().unwrap().to_string());
+            drop(l);
+        }
+        // Worker 0 answers instantly on both lanes; worker 1 reads the
+        // frames and stays silent past the deadline.
+        let mut handles = Vec::new();
+        for a in &addrs {
+            handles.push(scripted_client(a.clone(), 0, dim, vec![Some(1)], 1500));
+            handles.push(scripted_client(a.clone(), 1, dim, vec![None], 1500));
+        }
+        let mut lanes = Vec::new();
+        for a in &addrs {
+            let mut srv = TcpServer::bind_and_accept(a, 2).unwrap();
+            srv.set_elastic(Some(400), StragglerPolicy::Drop, 1);
+            lanes.push(srv);
+        }
+        let mut group = TcpShardGroup::new(lanes);
+        let frames: Vec<ToWorker> = (0..2)
+            .map(|_| {
+                let mut ps = ParameterServer::new(vec![1.0; dim], None);
+                let (b, _) = ps.broadcast(2);
+                b
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let lanes = group.round_sharded(&frames).unwrap();
+        let elapsed = t0.elapsed();
+        for lane in &lanes {
+            assert_eq!(lane.len(), 1, "only the live worker replies");
+            assert_eq!(lane[0].worker(), 0);
+        }
+        assert_eq!(group.straggler_evictions(), 2, "the silent worker is evicted per lane");
+        assert!(
+            elapsed < Duration::from_millis(700),
+            "2 lanes must share one 400ms deadline, took {elapsed:?}"
+        );
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// Async gathers harvest what is on the wire and never evict a
+    /// quiet connection: a worker replying one round late stays
+    /// connected and its reply surfaces on the next tick still carrying
+    /// its original round tag — the input `apply_async` admits within
+    /// `τ` or refunds into error feedback.
+    #[test]
+    fn tcp_async_gather_leaves_quiet_streams_connected() {
+        let dim = 4;
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        // Worker 0 answers every round on time. Worker 1 reads rounds 1
+        // and 2, then sends its round-1 and round-2 replies back to
+        // back — so its round-1 reply arrives during the round-2 gather
+        // and its round-2 reply during the round-3 gather.
+        let h0 = scripted_client(addr.clone(), 0, dim, vec![Some(1), Some(2), Some(3)], 500);
+        let a1 = addr.clone();
+        let h1 = std::thread::spawn(move || {
+            use crate::quant::{seeded_rng, Compressor, LogQuant};
+            let mut s = loop {
+                match TcpStream::connect(&a1) {
+                    Ok(s) => break s,
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            };
+            s.set_nodelay(true).unwrap();
+            let reply = |t: u64| {
+                let zeros = vec![0.0f32; dim];
+                let mut q = vec![0.0; dim];
+                let msg = LogQuant::new(2).compress_into(&zeros, &mut q, &mut seeded_rng(0, 0));
+                ToServer::Delta { t, worker: 1, loss: 0.0, msg }
+            };
+            let _ = read_frame(&mut s).unwrap(); // round 1 frame, no reply yet
+            let _ = read_frame(&mut s).unwrap(); // round 2 frame
+            write_frame(&mut s, &reply(1).to_bytes()).unwrap();
+            write_frame(&mut s, &reply(2).to_bytes()).unwrap();
+            let _ = read_frame(&mut s).unwrap(); // round 3 frame
+            std::thread::sleep(Duration::from_millis(500));
+        });
+        let mut srv = TcpServer::bind_and_accept(&addr, 2).unwrap();
+        srv.set_elastic(Some(300), StragglerPolicy::Drop, 1);
+        srv.set_async(true);
+        let mut ps = ParameterServer::new(vec![1.0; dim], None);
+        let mut per_round = Vec::new();
+        for _ in 1..=3u64 {
+            let (b, _) = ps.broadcast(2);
+            let replies = srv.round(&b).unwrap();
+            per_round.push(
+                replies.iter().map(|r| (r.worker(), r.round())).collect::<Vec<_>>(),
+            );
+            assert_eq!(srv.nworkers(), 2, "a quiet stream must stay connected");
+        }
+        assert_eq!(per_round[0], vec![(0, 1)], "round 1: only the prompt worker");
+        assert_eq!(per_round[1], vec![(0, 2), (1, 1)], "round 2: late round-1 reply surfaces");
+        assert_eq!(per_round[2], vec![(0, 3), (1, 2)], "round 3: the next late reply");
+        assert_eq!(srv.evictions(), 0, "async gathers never evict for slowness");
+        h0.join().unwrap();
+        h1.join().unwrap();
     }
 }

@@ -172,6 +172,41 @@ impl Worker {
         self.opt.restore(m, v, e);
     }
 
+    /// Does this worker's optimizer carry an EF residual (required by
+    /// the async-round refund path)?
+    pub fn has_error_feedback(&self) -> bool {
+        self.opt.has_error_feedback()
+    }
+
+    /// Async-round refund: fold `scale ×` the decoded payload of
+    /// `reply` — one of this worker's own per-lane replies the server
+    /// rejected as too stale (`scale = 1`), or the un-applied fraction
+    /// of a down-weighted apply (`scale = 1 − w`) — back into the EF
+    /// residual over lane `lane`'s shard range. The residual then
+    /// re-ships that mass compressed into the worker's next reply, so
+    /// rejection loses no gradient mass (the ECQ-SGD argument; see
+    /// [`crate::quant::ErrorFeedback::absorb_range`]).
+    pub fn absorb_rejected(&mut self, lane: usize, reply: &ToServer, scale: f32) -> Result<()> {
+        if reply.worker() != self.id {
+            return Err(anyhow!(
+                "refund for worker {} routed to worker {}",
+                reply.worker(),
+                self.id
+            ));
+        }
+        let (start, len) = self.plan.range(lane);
+        if reply.payload_n() != len {
+            return Err(anyhow!(
+                "refund payload dim {} != lane {lane} width {len}",
+                reply.payload_n()
+            ));
+        }
+        reply.decode_range(0, &mut self.scratch[start..start + len]);
+        let vals = &self.scratch[start..start + len];
+        self.opt.absorb_residual(start, vals, scale);
+        Ok(())
+    }
+
     /// Process one broadcast; returns the delta reply.
     pub fn handle(&mut self, msg: &ToWorker) -> Result<Option<ToServer>> {
         match msg {
@@ -497,6 +532,69 @@ mod tests {
         w.restore_weights(&[0.5; 4]);
         assert!(w.handle(&delta_msg(&[0.1; 4], 1)).unwrap().is_some());
         assert_eq!(w.weights(), &[0.6f32; 4][..]);
+    }
+
+    /// The async refund path: absorbing a worker's own rejected reply
+    /// raises its EF residual by exactly the decoded payload over the
+    /// rejected lane's range, and misrouted refunds are rejected.
+    #[test]
+    fn absorb_rejected_refunds_the_lane_range() {
+        use crate::ps::shard::ShardPlan;
+        let dim = 8;
+        let src = SimGradSource { problem: crate::sim::StochasticProblem::new(dim, 0.1, 1) };
+        let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 });
+        let mut w = Worker::new(0, Box::new(opt), Box::new(src), 42);
+        assert!(w.has_error_feedback());
+        w.set_shards(ShardPlan::uniform(dim, 2));
+        let full = |x: f32, t: u64| ToWorker::Weights {
+            t,
+            epoch: 0,
+            msg: Identity.compress_into(
+                &[x; 4],
+                &mut [0.0; 4],
+                &mut crate::quant::seeded_rng(0, 0),
+            ),
+        };
+        let replies = w.handle_sharded(&[full(1.0, 1), full(2.0, 1)]).unwrap().unwrap();
+        let (_, _, e_before) = w.opt_state().unwrap();
+        let e_before = e_before.to_vec();
+        // decode what lane 1's reply carries, then refund it in full
+        let mut dec = vec![0.0f32; 4];
+        replies[1].decode_range(0, &mut dec);
+        w.absorb_rejected(1, &replies[1], 1.0).unwrap();
+        let (_, _, e_after) = w.opt_state().unwrap();
+        assert_eq!(&e_after[..4], &e_before[..4], "lane 0's residual range is untouched");
+        for i in 0..4 {
+            let want = e_before[4 + i] + dec[i];
+            assert!((e_after[4 + i] - want).abs() < 1e-6, "i={i}");
+        }
+        // a refund claiming another worker's reply is refused
+        let foreign = match &replies[0] {
+            ToServer::Delta { t, loss, msg, .. } => {
+                ToServer::Delta { t: *t, worker: 9, loss: *loss, msg: msg.clone() }
+            }
+            other => panic!("{other:?}"),
+        };
+        assert!(w.absorb_rejected(0, &foreign, 1.0).is_err());
+        // a payload that does not match the lane width is refused
+        assert!(w.absorb_rejected(0, &replies[1], 1.0).is_ok());
+        let err = {
+            let bad = match &replies[0] {
+                ToServer::Delta { t, loss, msg, .. } => ToServer::Delta {
+                    t: *t,
+                    worker: 0,
+                    loss: *loss,
+                    msg: {
+                        let mut m = msg.clone();
+                        m.n = 3;
+                        m
+                    },
+                },
+                other => panic!("{other:?}"),
+            };
+            w.absorb_rejected(0, &bad, 1.0).unwrap_err()
+        };
+        assert!(err.to_string().contains("width"), "{err}");
     }
 
     #[test]

@@ -132,6 +132,32 @@ impl ErrorFeedback {
         (msg, &self.q[start..end])
     }
 
+    /// Fold external mass back into the residual over
+    /// `[start, start + len)`: `e[start + i] += scale * vals[i]`.
+    ///
+    /// The async-round refund path: when the server rejects a delta as
+    /// too stale (or applies it down-weighted, leaving a `(1 − w)`
+    /// fraction un-applied), the un-applied decoded values are absorbed
+    /// here so the next compressed step re-ships them — the same
+    /// mechanism that carries quantization error carries rejection
+    /// (ECQ-SGD, Wu et al. 2018). A no-op when EF is disabled: without
+    /// a residual there is nowhere to carry mass, which the async
+    /// trainer rejects at config time.
+    pub fn absorb_range(&mut self, start: usize, vals: &[f32], scale: f32) {
+        assert!(
+            start + vals.len() <= self.e.len(),
+            "range {start}+{} out of {}",
+            vals.len(),
+            self.e.len()
+        );
+        if !self.enabled || scale == 0.0 {
+            return;
+        }
+        for (ei, &v) in self.e[start..start + vals.len()].iter_mut().zip(vals) {
+            *ei += scale * v;
+        }
+    }
+
     /// Zero the residual. Used when a resync frame just transmitted the
     /// full state: there is no compression error left to compensate.
     pub fn reset(&mut self) {
@@ -220,6 +246,40 @@ mod tests {
             assert_eq!(&whole.residual()[..split], lo.residual(), "t={t}");
             assert_eq!(&whole.residual()[split..], hi.residual(), "t={t}");
         }
+    }
+
+    /// The refund identity behind async rounds: rejecting a compressed
+    /// delta and absorbing its decoded values restores `u = d + e`
+    /// exactly — as if the step had never been quantized away.
+    #[test]
+    fn absorb_range_refunds_rejected_mass_exactly() {
+        let lq = LogQuant::new(2);
+        let dim = 16;
+        let mut ef = ErrorFeedback::new(dim, true);
+        let mut rng = seeded_rng(4, 0);
+        let d: Vec<f32> = (0..dim).map(|i| 0.2 * (i as f32 * 0.9).cos()).collect();
+        let (msg, q) = ef.compress_q(&d, &lq, &mut rng);
+        let q = q.to_vec();
+        let mut dec = vec![0.0; dim];
+        lq.decompress(&msg, &mut dec);
+        // full rejection: e' = (u − q) + q = u = d (e started at 0)
+        ef.absorb_range(0, &dec, 1.0);
+        for (ei, di) in ef.residual().iter().zip(&d) {
+            assert!((ei - di).abs() < 1e-6, "{ei} vs {di}");
+        }
+        // partial refund (down-weighted apply at w): e gains (1−w)·q
+        let before = ef.residual().to_vec();
+        ef.absorb_range(0, &dec, 0.5);
+        for ((ei, bi), qi) in ef.residual().iter().zip(&before).zip(&q) {
+            assert!((ei - (bi + 0.5 * qi)).abs() < 1e-6);
+        }
+        // scale 0 and disabled EF are exact no-ops
+        let snap = ef.residual().to_vec();
+        ef.absorb_range(0, &dec, 0.0);
+        assert_eq!(ef.residual(), snap.as_slice());
+        let mut off = ErrorFeedback::new(dim, false);
+        off.absorb_range(0, &dec, 1.0);
+        assert!(off.residual().iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Async bounded-staleness acceptance suite (no artifacts needed —
+//! sim workers over the real engines):
+//!
+//! * Sync mode stays pinned: with the async machinery compiled in but
+//!   a τ = 0 policy and no faults, `apply_async` walks the exact same
+//!   trajectory as the sync `apply` engine — frames, participation and
+//!   masters byte-identical round by round.
+//! * The chaos property: under seeded drop/delay faults in async mode,
+//!   every delta that survives the wire is either **admitted** within
+//!   the staleness bound or **rejected and refunded** into its
+//!   sender's EF residual — no gradient mass is silently lost — and
+//!   the whole run is bit-reproducible across the sequential and
+//!   threaded engines.
+
+use qadam::elastic::{ChaosPlan, ChaosTransport, StalenessPolicy};
+use qadam::optim::{LrSchedule, QAdamEf};
+use qadam::ps::worker::{SimGradSource, Worker};
+use qadam::ps::{LocalBus, ShardPlan, ShardedServer, ThreadedBus, Transport};
+use qadam::quant::{PolicySpec, TensorLayout};
+
+const BLOCK: usize = 1 << 16;
+
+fn x0(dim: usize) -> Vec<f32> {
+    (0..dim).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect()
+}
+
+fn mk_worker(id: u32, dim: usize, plan: &ShardPlan) -> Worker {
+    let src = SimGradSource { problem: qadam::sim::StochasticProblem::new(dim, 0.05, 9) };
+    let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.02 });
+    let mut w = Worker::new(id, Box::new(opt), Box::new(src), 1);
+    w.set_shards(plan.clone());
+    w
+}
+
+fn mk_plan(dim: usize, shards: usize) -> ShardPlan {
+    ShardPlan::build(dim, shards, &PolicySpec::Static, &TensorLayout::uniform(dim, 4)).unwrap()
+}
+
+/// Acceptance (the sync-parity pin): with every delta fresh, the async
+/// apply is the sync engine bit for bit — same broadcasts, same
+/// participation, same masters, nothing rejected. This is what keeps
+/// `--async-rounds` off the hook for the seed trajectory: the sync
+/// path is untouched, and the async path degenerates to it at age 0.
+#[test]
+fn async_apply_at_age_zero_matches_the_sync_engine_bitwise() {
+    let dim = 64;
+    let nw = 3usize;
+    let plan = mk_plan(dim, 2);
+    let mut sync_srv = ShardedServer::new(x0(dim), Some(4), plan.clone(), BLOCK, 1);
+    let mut async_srv = ShardedServer::new(x0(dim), Some(4), plan.clone(), BLOCK, 1);
+    let mut ws_sync: Vec<Worker> = (0..nw as u32).map(|i| mk_worker(i, dim, &plan)).collect();
+    let mut ws_async: Vec<Worker> = (0..nw as u32).map(|i| mk_worker(i, dim, &plan)).collect();
+    let mut bus_sync: Box<dyn Transport> = Box::new(LocalBus::default());
+    let mut bus_async: Box<dyn Transport> = Box::new(LocalBus::default());
+    let policy = StalenessPolicy::new(0, false);
+    for t in 1u64..=12 {
+        let fa = sync_srv.broadcast(nw);
+        let fb = async_srv.broadcast(nw);
+        for (a, b) in fa.iter().zip(&fb) {
+            assert_eq!(a.to_bytes(), b.to_bytes(), "t={t}: broadcast frame diverged");
+        }
+        let ra = bus_sync.round_sharded(&fa, &mut ws_sync).unwrap();
+        let rb = bus_async.round_sharded(&fb, &mut ws_async).unwrap();
+        let pa = sync_srv.apply(&ra).unwrap();
+        let ar = async_srv.apply_async(&rb, &policy).unwrap();
+        assert!(ar.rejected.is_empty(), "t={t}: fresh deltas must all be admitted");
+        assert!(ar.ages.iter().flatten().all(|&a| a == 0), "t={t}: all ages fresh");
+        assert_eq!(ar.part, pa, "t={t}: participation diverged");
+        assert_eq!(async_srv.master(), sync_srv.master(), "t={t}: masters diverged");
+    }
+}
+
+/// Acceptance (the zero-reporters guard): a drop-everything chaos
+/// plan in async mode yields quiet rounds — no reporters, weights
+/// pinned — and `mean_loss` is exactly 0.0, never the 0/0 NaN that
+/// would otherwise poison the CSV rows and the obs loss gauge
+/// downstream. (The sync path can't reach this state: `apply` rejects
+/// an empty round and the quorum check fires first.)
+#[test]
+fn drop_all_chaos_rounds_report_finite_zero_loss() {
+    let dim = 32;
+    let nw = 2u32;
+    let plan = mk_plan(dim, 2);
+    let mut srv = ShardedServer::new(x0(dim), None, plan.clone(), BLOCK, 1);
+    let mut workers: Vec<Worker> = (0..nw).map(|i| mk_worker(i, dim, &plan)).collect();
+    let chaos = ChaosPlan::parse("seed=5,drop=1.0").unwrap();
+    let inner: Box<dyn Transport> = Box::new(LocalBus::default());
+    let mut bus = ChaosTransport::new(inner, chaos).with_async(true);
+    let policy = StalenessPolicy::new(0, false);
+    let before = srv.master();
+    for t in 1u64..=4 {
+        let frames = srv.broadcast(nw as usize);
+        let lanes = bus.round_sharded(&frames, &mut workers).unwrap();
+        assert!(lanes.iter().all(|l| l.is_empty()), "t={t}: drop=1.0 must drop every reply");
+        let ar = srv.apply_async(&lanes, &policy).unwrap();
+        assert!(ar.part.reporters.is_empty(), "t={t}: a quiet round has no reporters");
+        assert!(ar.part.mean_loss.is_finite(), "t={t}: quiet round must not produce NaN");
+        assert_eq!(ar.part.mean_loss, 0.0);
+    }
+    assert_eq!(srv.master(), before, "no admitted mass may move the weights");
+}
+
+/// One full chaos-async run; returns (per-round masters, final worker
+/// residual norms, surfaced replies, rejected replies, refunds).
+fn chaos_async_run(threaded: bool, rounds: u64) -> (Vec<Vec<f32>>, Vec<f32>, u64, u64, u64) {
+    let dim = 48;
+    let nw = 3u32;
+    let shards = 2usize;
+    let tau = 1u64;
+    let plan = mk_plan(dim, shards);
+    let mut srv = ShardedServer::new(x0(dim), None, plan.clone(), BLOCK, 1);
+    let mut workers: Vec<Worker> = (0..nw).map(|i| mk_worker(i, dim, &plan)).collect();
+    let inner: Box<dyn Transport> =
+        if threaded { Box::new(ThreadedBus::new()) } else { Box::new(LocalBus::default()) };
+    // lag=1 makes every delayed reply resurface at age 2 — strictly
+    // past τ=1 — so each one must take the reject+refund path.
+    let chaos = ChaosPlan::parse("seed=11,drop=0.15,delay=0.35,lag=1").unwrap();
+    let mut bus = ChaosTransport::new(inner, chaos).with_async(true);
+    let policy = StalenessPolicy::new(tau, false);
+    let mut masters = Vec::new();
+    let (mut surfaced, mut rejected_total, mut refunds) = (0u64, 0u64, 0u64);
+    for t in 1u64..=rounds {
+        let frames = srv.broadcast(nw as usize);
+        let lanes = bus.round_sharded(&frames, &mut workers).unwrap();
+        surfaced += lanes.iter().map(|l| l.len() as u64).sum::<u64>();
+        let ar = srv.apply_async(&lanes, &policy).unwrap();
+        for (lane, lane_ages) in ar.ages.iter().enumerate() {
+            for (i, &age) in lane_ages.iter().enumerate() {
+                if ar.rejected.binary_search(&(lane, i)).is_ok() {
+                    // the no-lost-mass half of the property: every
+                    // rejected delta folds into its sender's residual
+                    let wid = lanes[lane][i].worker() as usize;
+                    workers[wid].absorb_rejected(lane, &lanes[lane][i], 1.0).unwrap();
+                    refunds += 1;
+                    assert!(age > tau, "t={t}: rejected a delta inside the bound (age {age})");
+                } else {
+                    assert!(age <= tau, "t={t}: admitted a delta beyond the bound (age {age})");
+                }
+            }
+        }
+        rejected_total += ar.rejected.len() as u64;
+        masters.push(srv.master());
+    }
+    // Wire accounting: every reply a worker sent either surfaced in
+    // some round's gather, was dropped by the chaos plan, or is still
+    // held past the horizon — nothing vanishes without a ledger entry.
+    let stats = bus.fault_stats().unwrap();
+    let held_at_end = bus.held_replies().len() as u64;
+    let sent = rounds * nw as u64 * shards as u64;
+    assert_eq!(
+        surfaced + stats.dropped + held_at_end,
+        sent,
+        "reply ledger does not balance: {surfaced} surfaced + {} dropped + {held_at_end} held != {sent} sent",
+        stats.dropped
+    );
+    assert!(stats.delayed > 0, "the plan should actually delay something");
+    assert!(rejected_total > 0, "the lagged delays should actually get rejected");
+    let residuals = workers.iter().map(|w| w.residual_norm()).collect();
+    (masters, residuals, surfaced, rejected_total, refunds)
+}
+
+/// Acceptance (the chaos property): under seeded drop/delay faults,
+/// every surfaced delta is admitted within τ or refunded into its
+/// sender's EF residual, the reply ledger balances exactly, and the
+/// whole trajectory — masters per round *and* worker residuals — is
+/// bit-reproducible across the sequential and threaded engines.
+#[test]
+fn chaos_async_rounds_conserve_delta_mass_and_reproduce_bitwise() {
+    let rounds = 10u64;
+    let (m_seq, r_seq, surfaced_seq, rej_seq, refunds_seq) = chaos_async_run(false, rounds);
+    let (m_thr, r_thr, surfaced_thr, rej_thr, refunds_thr) = chaos_async_run(true, rounds);
+    assert_eq!(rej_seq, refunds_seq, "every rejected delta must be refunded exactly once");
+    assert_eq!(surfaced_seq, surfaced_thr, "engines gathered different reply streams");
+    assert_eq!(rej_seq, rej_thr);
+    assert_eq!(refunds_seq, refunds_thr);
+    for (t, (a, b)) in m_seq.iter().zip(&m_thr).enumerate() {
+        assert_eq!(a, b, "t={}: masters diverged across engines", t + 1);
+    }
+    assert_eq!(r_seq, r_thr, "worker EF residuals diverged across engines");
+}

@@ -248,6 +248,11 @@ fn pjrt_engine_with_delta_downlink_trains_and_cuts_down_bytes() {
         shards: 1,
         straggler: qadam::elastic::StragglerPolicy::Wait,
         min_participation: 1,
+        async_rounds: false,
+        staleness: 0,
+        staleness_down_weight: false,
+        cohort: None,
+        registry: 100_000,
         seed: 0,
         eval_every: 0,
         eval_batches: 2,

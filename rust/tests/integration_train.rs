@@ -35,6 +35,11 @@ fn base_cfg() -> ExperimentConfig {
         shards: 1,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
+        async_rounds: false,
+        staleness: 0,
+        staleness_down_weight: false,
+        cohort: None,
+        registry: 100_000,
         seed: 0,
         eval_every: 0,
         eval_batches: 2,
@@ -160,6 +165,11 @@ fn lm_model_trains_and_loss_drops() {
         shards: 1,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
+        async_rounds: false,
+        staleness: 0,
+        staleness_down_weight: false,
+        cohort: None,
+        registry: 100_000,
         seed: 0,
         eval_every: 0,
         eval_batches: 1,

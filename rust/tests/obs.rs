@@ -40,6 +40,11 @@ fn base_cfg() -> ExperimentConfig {
         shards: 1,
         straggler: StragglerPolicy::Wait,
         min_participation: 1,
+        async_rounds: false,
+        staleness: 0,
+        staleness_down_weight: false,
+        cohort: None,
+        registry: 100_000,
         seed: 0,
         eval_every: 10,
         eval_batches: 2,

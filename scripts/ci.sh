@@ -64,6 +64,12 @@ cargo test -q --release --test wire_golden
 step "example smoke: fedlearn_edge (lossy chaos, tiny budget)"
 cargo run --release --example fedlearn_edge -- --devices 2 --steps 40 --dim 512
 
+# The client-sampling walkthrough: 10k/100k/1M logical-worker
+# registries at the same cohort size must cost the same per round (the
+# example itself fails past a 3x spread).
+step "example smoke: federated_cohort (sampled cohorts, flat cost)"
+cargo run --release --example federated_cohort
+
 # One-round smoke of the codec-policy sweep: catches bench rot and the
 # adaptive plumbing (parts frames end to end) without paying for the
 # full equal-budget comparison.
@@ -166,6 +172,35 @@ grep -q '"span": "gather"' /tmp/qadam_serve_trace.jsonl
 grep -q '"span": "decode_apply"' /tmp/qadam_serve_trace.jsonl
 target/release/qadam top --trace /tmp/qadam_serve_trace.jsonl --once | grep -q 'bcast_ms'
 
+# Async bounded-staleness smoke (no artifacts): a serve process in
+# --async-rounds mode gathers without a barrier and exports the
+# staleness histogram + rejected counter. The round deadline gives each
+# gather a real window, so on a quiet loopback the fleet stays fresh
+# and the run drains cleanly. The scrape runs while the fleet is still
+# assembling — all series exist from the first render, counts and all.
+step "async smoke: serve --async-rounds + staleness metrics scrape"
+target/release/qadam serve --addr 127.0.0.1:17921 --workers 2 --dim 64 --steps 5 \
+    --kg 2 --async-rounds --staleness 2 --round-deadline-ms 500 \
+    --metrics-addr 127.0.0.1:17931 &
+SRV=$!
+METRICS=""
+for _ in $(seq 1 50); do
+    if METRICS="$( (exec 3<>/dev/tcp/127.0.0.1/17931 \
+            && printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3 && cat <&3) 2>/dev/null)" \
+        && [ -n "$METRICS" ]; then
+        break
+    fi
+    sleep 0.1
+done
+echo "$METRICS" | grep -q '200 OK'
+echo "$METRICS" | grep -q 'qadam_staleness_rounds_bucket{le="0"}'
+echo "$METRICS" | grep -q '^qadam_stale_rejected_total'
+target/release/qadam worker --addr 127.0.0.1:17921 --id 0 --dim 64 --kg 2 &
+W0=$!
+target/release/qadam worker --addr 127.0.0.1:17921 --id 1 --dim 64 --kg 2
+wait "$W0"
+wait "$SRV"
+
 if [ -f "${QADAM_ARTIFACTS:-artifacts}/manifest.json" ]; then
     # Observability smoke, trainer half: a traced 2-shard LocalBus
     # train must write a lifecycle-covering JSONL trace (`top --check`
@@ -175,9 +210,20 @@ if [ -f "${QADAM_ARTIFACTS:-artifacts}/manifest.json" ]; then
         --shards 2 --kg 2 --eval-every 10 \
         --trace-out /tmp/qadam_train_trace.jsonl --csv /tmp/qadam_train_metrics.csv
     target/release/qadam top --trace /tmp/qadam_train_trace.jsonl --check
-    head -1 /tmp/qadam_train_metrics.csv | grep -q ',shard,round_ms$'
-    awk -F, 'NR > 1 && $(NF-1) == -1 && $NF + 0 > 0 { found = 1 } END { exit !found }' \
+    head -1 /tmp/qadam_train_metrics.csv | grep -q ',shard,round_ms,staleness_p50,cohort$'
+    awk -F, 'NR > 1 && $(NF-3) == -1 && $(NF-2) + 0 > 0 { found = 1 } END { exit !found }' \
         /tmp/qadam_train_metrics.csv
+
+    # Async + cohort trainer smoke: a sampled-cohort bounded-staleness
+    # train must fill the trailing staleness_p50/cohort CSV pair — the
+    # in-process bus keeps every delta fresh, so merged rows carry
+    # p50 = 0 and the cohort size K, not the -1 sync sentinels.
+    step "async smoke: train --async-rounds --cohort + staleness CSV columns"
+    target/release/qadam train --model mlp --dataset vector --steps 12 --workers 2 \
+        --async-rounds --staleness 2 --cohort 4 --registry 100000 --kg 2 \
+        --eval-every 6 --csv /tmp/qadam_async_metrics.csv
+    awk -F, 'NR > 1 && $(NF-1) + 0 == 0 && $NF + 0 == 4 { found = 1 } END { exit !found }' \
+        /tmp/qadam_async_metrics.csv
 
     step "example smoke: quickstart"
     cargo run --release --example quickstart
