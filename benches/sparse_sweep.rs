@@ -1,0 +1,213 @@
+//! Sparse-vs-dense codec sweep at **equal total (uplink + downlink)
+//! byte budgets** on the MoE workload — the gradient-sparsity regime
+//! the sparse codecs are built for.
+//!
+//! The workload routes each (worker, t) microbatch top-1 to one expert,
+//! so a worker's gradient is dense on the small router block and on
+//! exactly one expert slice, and exactly zero elsewhere
+//! ([`qadam::models::moe`]). A dense codec spends its bits on every
+//! coordinate of that mostly-zero vector; a sparse codec ships the few
+//! live coordinates at full precision and lets error feedback carry the
+//! rest. The reference run (dense `kg=2`, the paper's 3-bit row) fixes
+//! the byte budget; every other row spends the same up+down total and
+//! the table reports where each trajectory got.
+//!
+//!   cargo bench --bench sparse_sweep
+//!   cargo bench --bench sparse_sweep -- --rounds 2 --experts 4 \
+//!       --expert-dim 64 --json /tmp/s.json               # CI smoke
+//!
+//! Flags: --rounds N (reference-run rounds; default 150), --experts E
+//! (default 16), --expert-dim D (default 512), --router-dim R (default
+//! 64), --workers W (default 8), --density F (top-k kept fraction for
+//! the per-layer row; default 0.05), --json PATH (default
+//! BENCH_sparse_sweep.json; machine-readable trajectory, compared with
+//! `qadam bench-diff`).
+
+use qadam::models::moe::{MoeGradSource, MoeProblem};
+use qadam::optim::{LrSchedule, QAdamEf};
+use qadam::ps::transport::LocalBus;
+use qadam::ps::worker::Worker;
+use qadam::ps::ParameterServer;
+use qadam::quant::{CodecPolicy, LogQuant, PolicySpec};
+use qadam::util::Args;
+use std::time::Instant;
+
+struct Cfg {
+    experts: usize,
+    expert_dim: usize,
+    router_dim: usize,
+    workers: usize,
+}
+
+fn mk_workers(cfg: &Cfg, spec: Option<&PolicySpec>, kg: u32) -> Vec<Worker> {
+    (0..cfg.workers as u32)
+        .map(|i| {
+            let problem =
+                MoeProblem::new(cfg.experts, cfg.expert_dim, cfg.router_dim, 0.05, 3);
+            let layout = problem.layout();
+            let dim = problem.dim();
+            let src = MoeGradSource { problem };
+            let mut opt = QAdamEf::paper_default(dim, kg, LrSchedule::InvSqrt { alpha: 0.05 });
+            if let Some(s) = spec {
+                opt = opt.with_policy(CodecPolicy::new(s.clone(), layout, kg).unwrap());
+            }
+            Worker::new(i, Box::new(opt), Box::new(src), 7)
+        })
+        .collect()
+}
+
+struct SweepResult {
+    label: String,
+    rounds: u64,
+    total_bytes: u64,
+    loss: f32,
+    grad_norm_sq: f32,
+    mean_bits: f64,
+    secs: f64,
+}
+
+/// Run until `budget` total (up + down) bytes are spent (or
+/// `max_rounds`), then report where the trajectory got. Every row uses
+/// a compressed delta downlink (`kg=2`, resync only at round 1); rows
+/// with a policy install it on **both** directions — worker uplinks and
+/// the server's delta downlink — so the byte comparison is the whole
+/// round trip.
+fn run_budget(
+    label: &str,
+    cfg: &Cfg,
+    spec: Option<&PolicySpec>,
+    kg: u32,
+    budget: Option<u64>,
+    max_rounds: u64,
+) -> SweepResult {
+    let problem = MoeProblem::new(cfg.experts, cfg.expert_dim, cfg.router_dim, 0.05, 3);
+    let mut ps = ParameterServer::new(problem.x0(), None);
+    ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 0);
+    if let Some(s) = spec {
+        let policy = CodecPolicy::new(s.clone(), problem.layout(), 2).unwrap();
+        ps.set_downlink_policy(policy);
+    }
+    let mut workers = mk_workers(cfg, spec, kg);
+    let bus = LocalBus::default();
+    let start = Instant::now();
+    let mut rounds = 0u64;
+    let spent = |ps: &ParameterServer| ps.stats.up_bytes + ps.stats.down_bytes;
+    while rounds < max_rounds && budget.map(|b| spent(&ps) < b).unwrap_or(true) {
+        let replies = {
+            let (b, _) = ps.broadcast(cfg.workers);
+            bus.round(&b, &mut workers).unwrap()
+        };
+        ps.apply(&replies).unwrap();
+        rounds += 1;
+    }
+    let mean_bits = workers[0].policy_bits().unwrap_or_else(|| workers[0].bits_per_element());
+    SweepResult {
+        label: label.into(),
+        rounds,
+        total_bytes: spent(&ps),
+        loss: problem.mean_loss(ps.master()),
+        grad_norm_sq: problem.full_grad_norm_sq(ps.master()),
+        mean_bits,
+        secs: start.elapsed().as_secs_f64(),
+    }
+}
+
+fn main() {
+    let a = Args::parse_env().expect("args");
+    let rounds = a.get("rounds", 150u64).expect("--rounds");
+    let experts = a.get("experts", 16usize).expect("--experts");
+    let expert_dim = a.get("expert_dim", 512usize).expect("--expert-dim");
+    let router_dim = a.get("router_dim", 64usize).expect("--router-dim");
+    let workers = a.get("workers", 8usize).expect("--workers");
+    let density: f64 = a.get("density", 0.05f64).expect("--density");
+    let json_path = a.get_str("json", "BENCH_sparse_sweep.json");
+    a.reject_unknown().expect("flags");
+    let cfg = Cfg { experts, expert_dim, router_dim, workers };
+    let dim = router_dim + experts * expert_dim;
+    let live = (router_dim + expert_dim) as f64 / dim as f64;
+    println!(
+        "== sparse_sweep == dim={dim} ({experts} experts x {expert_dim} + router {router_dim}) \
+         workers={workers} live-density={live:.3} reference-rounds={rounds}"
+    );
+
+    // Reference spend: dense kg=2 for --rounds fixes the up+down budget.
+    let static2 = run_budget("dense kg=2", &cfg, None, 2, None, rounds);
+    let budget = static2.total_bytes;
+
+    let static0 = run_budget("dense kg=0", &cfg, None, 0, Some(budget), rounds * 4);
+    let topk_spec = PolicySpec::parse(&format!(
+        "per-layer:expert*=topk@{density},router=2"
+    ))
+    .expect("per-layer topk spec");
+    let topk = run_budget(
+        "per-layer topk",
+        &cfg,
+        Some(&topk_spec),
+        2,
+        Some(budget),
+        rounds * 4,
+    );
+    let adaptive_spec =
+        PolicySpec::parse("adaptive-topk:0.01..0.25").expect("adaptive-topk spec");
+    let adaptive = run_budget(
+        "adaptive-topk",
+        &cfg,
+        Some(&adaptive_spec),
+        2,
+        Some(budget),
+        rounds * 4,
+    );
+
+    println!(
+        "{:<16} {:>7} {:>12} {:>11} {:>12} {:>10} {:>8}",
+        "codec", "rounds", "up+down MB", "loss", "|grad|^2", "bits/elem", "secs"
+    );
+    let rows = [static2, static0, topk, adaptive];
+    for r in &rows {
+        println!(
+            "{:<16} {:>7} {:>12.3} {:>11.5} {:>12.6} {:>10.2} {:>8.2}",
+            r.label,
+            r.rounds,
+            r.total_bytes as f64 / 1e6,
+            r.loss,
+            r.grad_norm_sq,
+            r.mean_bits,
+            r.secs
+        );
+    }
+    let best_dense = rows[0].loss.min(rows[1].loss);
+    let best_sparse = rows[2].loss.min(rows[3].loss);
+    println!(
+        "(equal-budget comparison: every row spends ~the dense kg=2 up+down bytes; \
+         best sparse loss {best_sparse:.5} vs best dense {best_dense:.5} -> {})",
+        if best_sparse < best_dense { "sparse wins" } else { "dense wins" }
+    );
+
+    // Machine-readable trajectory point (same shape the other benches
+    // emit; `qadam bench-diff` compares the median_ns entries and CI
+    // self-compares a smoke run at 0% diff).
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"sparse_sweep\",\n");
+    json.push_str(&format!(
+        "  \"dim\": {dim},\n  \"workers\": {workers},\n  \"budget_bytes\": {budget},\n"
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{} dim={dim}\", \"median_ns\": {:.1}, \"rounds\": {}, \
+             \"total_bytes\": {}, \"loss\": {:.6}, \"grad_norm_sq\": {:.8}, \
+             \"bits_per_elem\": {:.3}}}{}\n",
+            r.label,
+            r.secs * 1e9 / r.rounds.max(1) as f64,
+            r.rounds,
+            r.total_bytes,
+            r.loss,
+            r.grad_norm_sq,
+            r.mean_bits,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&json_path, json).expect("writing the bench JSON");
+    println!("wrote {json_path}");
+}

@@ -63,6 +63,12 @@ train flags:
                           exact names, prefix* globs, * catch-all)
                         | adaptive:<lo>..<hi> (bits tuned per tensor and
                           round from the EF residual / gradient ratio)
+                        per-layer values may also be sparse codecs:
+                          name=topk@D (keep density D, 0<D<=1, global
+                          magnitude top-k) | name=sblock@BxK (keep K of
+                          every B coordinates, sign * per-block scale)
+                        | adaptive-topk:<lo>..<hi> (kept density tuned
+                          per tensor and round, same EF-residual signal)
   --chaos SPEC          deterministic fault injection, e.g.
                         \"seed=7,drop=0.1,delay=0.05,crash=3@40..80\"
                         (keys: seed|drop|delay|dup|corrupt|crash)
@@ -223,9 +229,17 @@ fn sim_policy_over(
     let kg = match m {
         Method::QAdam { kg: Some(k), error_feedback } => {
             // the adaptive controller reads the EF residual; without EF
-            // it sees zero debt forever and collapses to the band floor
-            if !error_feedback && matches!(spec, PolicySpec::Adaptive { .. }) {
-                bail!("--codec-policy adaptive needs error feedback (drop --no-ef)");
+            // it sees zero debt forever and collapses to the band floor.
+            // Sparse codecs are one step stricter: the dropped
+            // coordinates ARE the residual, so without EF they are
+            // simply lost mass and convergence quietly breaks.
+            if !error_feedback
+                && (matches!(spec, PolicySpec::Adaptive { .. }) || spec.is_sparse())
+            {
+                bail!(
+                    "--codec-policy {} needs error feedback (drop --no-ef)",
+                    spec.label()
+                );
             }
             k
         }
@@ -718,13 +732,22 @@ fn cmd_info() -> Result<()> {
         tag::TO_WORKER_WEIGHTS_DELTA_PARTS
     );
     println!(
-        "    \"to_server\": {{\"delta\": {}, \"delta_parts\": {}}}",
+        "    \"to_server\": {{\"delta\": {}, \"delta_parts\": {}}},",
         tag::TO_SERVER_DELTA,
         tag::TO_SERVER_DELTA_PARTS
     );
+    // Codec ids ride the existing frame kinds (WireMsg byte 0) — pinned
+    // here so a fleet can check sparse-codec support before enabling a
+    // sparse policy on the wire.
+    println!(
+        "    \"codec_ids\": {{\"topk\": {}, \"sparse_block\": {}}}",
+        tag::CODEC_TOPK,
+        tag::CODEC_SPARSE_BLOCK
+    );
     println!("  }},");
     println!(
-        "  \"codecs\": [\"identity\", \"logquant\", \"wquant\", \"terngrad\", \"blockwise\", \"qsgd\"],"
+        "  \"codecs\": [\"identity\", \"logquant\", \"wquant\", \"terngrad\", \"blockwise\", \
+         \"qsgd\", \"topk\", \"sparse_block\"],"
     );
     println!("  \"max_kg\": {},", qadam::quant::MAX_KG);
     println!("  \"max_kx\": {},", qadam::quant::MAX_KX);

@@ -6,6 +6,8 @@
 //! scalar order). This module parses it and provides the flat ⇄
 //! per-parameter layout used everywhere on the Rust side.
 
+pub mod moe;
+
 use crate::util::json::{parse, Value};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;

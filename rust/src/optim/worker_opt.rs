@@ -201,8 +201,8 @@ impl WorkerOpt for QAdamEf {
                 policy.decide(t, &dir, self.ef.residual());
                 let mut parts = Vec::with_capacity(policy.layout().tensors().len());
                 for (i, ts) in policy.layout().tensors().iter().enumerate() {
-                    let comp = LogQuant::new(policy.bits()[i]);
-                    parts.push(self.ef.compress_range(&dir, ts.start, ts.len, &comp, rng));
+                    let comp = policy.codec_at(i);
+                    parts.push(self.ef.compress_range(&dir, ts.start, ts.len, comp.as_dyn(), rng));
                 }
                 DeltaMsg::Parts(parts)
             }
@@ -280,8 +280,8 @@ impl WorkerOpt for QAdamEf {
                     let mut covered = 0usize;
                     while covered < len {
                         let ts = &policy.layout().tensors()[ti];
-                        let comp = LogQuant::new(policy.bits()[ti]);
-                        parts.push(self.ef.compress_range(&dir, ts.start, ts.len, &comp, rng));
+                        let comp = policy.codec_at(ti);
+                        parts.push(self.ef.compress_range(&dir, ts.start, ts.len, comp.as_dyn(), rng));
                         covered += ts.len;
                         ti += 1;
                     }

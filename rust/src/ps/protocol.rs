@@ -39,6 +39,13 @@ pub mod tag {
     pub const TO_SERVER_DELTA: u8 = 0;
     /// [`super::ToServer::DeltaParts`] — per-tensor worker reply.
     pub const TO_SERVER_DELTA_PARTS: u8 = 1;
+    /// `CodecId::TopK`'s wire id — sparse payloads ride the existing
+    /// delta/parts frame kinds (no new frame layout, no version bump),
+    /// but a new codec id is still a wire-surface change, so it is
+    /// registered and fixture-pinned like a frame tag.
+    pub const CODEC_TOPK: u8 = 6;
+    /// `CodecId::SparseBlock`'s wire id — see [`CODEC_TOPK`].
+    pub const CODEC_SPARSE_BLOCK: u8 = 7;
 }
 
 /// Accounting charge for a parts frame's own structure: its tag byte +

@@ -43,7 +43,7 @@
 
 use super::protocol::{CommStats, ToServer, ToWorker};
 use crate::elastic::{Participation, StalenessPolicy};
-use crate::quant::{CodecPolicy, Compressor, ErrorFeedback, Identity, LogQuant, WQuant, WireMsg};
+use crate::quant::{CodecPolicy, Compressor, ErrorFeedback, Identity, WQuant, WireMsg};
 use crate::util::par::par_tasks;
 use anyhow::{anyhow, Result};
 
@@ -329,9 +329,9 @@ impl ParameterServer {
             policy.decide(self.t, &down.dir, down.ef.residual());
             let mut parts = Vec::with_capacity(policy.layout().tensors().len());
             for (i, ts) in policy.layout().tensors().iter().enumerate() {
-                let comp = LogQuant::new(policy.bits()[i]);
+                let comp = policy.codec_at(i);
                 let (msg, q) =
-                    down.ef.compress_range_q(&down.dir, ts.start, ts.len, &comp, &mut rng);
+                    down.ef.compress_range_q(&down.dir, ts.start, ts.len, comp.as_dyn(), &mut rng);
                 // x̂ ← x̂ + decode(msg) over this tensor's range,
                 // block-parallel like the static path (per-coordinate
                 // adds: identical bytes for any (block, threads)).

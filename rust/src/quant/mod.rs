@@ -12,6 +12,9 @@
 //! * [`blockwise::Blockwise`] — Zheng et al. [44]: per-block
 //!   sign·mean(|block|) (the biased baseline in Tables 2–3).
 //! * [`Identity`] — full precision (the fp32 rows).
+//! * [`sparse::TopK`] / [`sparse::SparseBlock`] — sparsifiers (global
+//!   magnitude top-k, blockwise top-k with per-block scale) whose
+//!   dropped mass rides the error-feedback residual.
 //!
 //! [`WireMsg`] is the byte-accurate message each worker sends to the
 //! parameter server; `wire_bytes()` is what the Comm columns of
@@ -24,6 +27,7 @@ pub mod pack;
 pub mod policy;
 #[doc(hidden)]
 pub mod reference;
+pub mod sparse;
 pub mod stochastic;
 pub mod terngrad;
 pub mod wquant;
@@ -32,6 +36,7 @@ pub use blockwise::Blockwise;
 pub use error_feedback::ErrorFeedback;
 pub use logquant::LogQuant;
 pub use policy::{CodecPolicy, PolicySpec, TensorLayout};
+pub use sparse::{SparseBlock, TopK};
 pub use stochastic::{Qsgd, StochasticLogQuant};
 pub use terngrad::TernGrad;
 pub use wquant::WQuant;
@@ -78,6 +83,8 @@ pub enum CodecId {
     TernGrad = 3,
     Blockwise = 4,
     Qsgd = 5,
+    TopK = 6,
+    SparseBlock = 7,
 }
 
 impl CodecId {
@@ -89,6 +96,8 @@ impl CodecId {
             3 => Some(Self::TernGrad),
             4 => Some(Self::Blockwise),
             5 => Some(Self::Qsgd),
+            6 => Some(Self::TopK),
+            7 => Some(Self::SparseBlock),
             _ => None,
         }
     }
@@ -96,15 +105,17 @@ impl CodecId {
 
 /// A compressed tensor as it crosses the network.
 ///
-/// Exactly one payload representation is populated:
-/// packed `codes` + `scales` for real quantizers, `raw` for
-/// [`Identity`]. `wire_bytes()` charges the header, the scales and the
-/// packed payload — nothing else.
+/// Dense codecs populate exactly one payload representation: packed
+/// `codes` + `scales` for real quantizers, `raw` for [`Identity`].
+/// [`sparse::TopK`] is the one codec carrying both — packed positions
+/// in `codes`, kept values in `raw`. `wire_bytes()` charges the
+/// header, the scales and both payloads — nothing else.
 #[derive(Clone, Debug)]
 pub struct WireMsg {
     pub codec: CodecId,
     /// Codec parameter needed to decode: `k_g` for LogQuant, `k_x` for
-    /// WQuant, block size for Blockwise, 0 otherwise.
+    /// WQuant, block size for Blockwise, kept count `k` for TopK,
+    /// `block | kb << 16` for SparseBlock, 0 otherwise.
     pub param: u32,
     /// Element count of the original tensor.
     pub n: usize,
@@ -112,7 +123,7 @@ pub struct WireMsg {
     pub scales: Vec<f32>,
     /// Packed codes (empty for Identity).
     pub codes: Option<pack::Packed>,
-    /// Raw f32 payload (Identity only).
+    /// Raw f32 payload (Identity, and TopK's kept values).
     pub raw: Vec<f32>,
 }
 
@@ -123,11 +134,11 @@ impl WireMsg {
     /// Bytes this message occupies on the wire — the quantity the
     /// paper's Comm column measures (we also charge the tiny header).
     pub fn wire_bytes(&self) -> usize {
-        let payload = match &self.codes {
-            Some(p) => p.payload_bytes(),
-            None => self.raw.len() * 4,
-        };
-        WIRE_HEADER_BYTES + self.scales.len() * 4 + payload
+        // Charging `codes` and `raw` independently keeps every dense
+        // codec's count identical (they populate exactly one of the
+        // two) while charging TopK's positions + kept values honestly.
+        let codes = self.codes.as_ref().map_or(0, |p| p.payload_bytes());
+        WIRE_HEADER_BYTES + self.scales.len() * 4 + codes + self.raw.len() * 4
     }
 
     /// Serialize for the TCP transport (length-prefix added by caller).
@@ -204,7 +215,15 @@ impl WireMsg {
                     return Err(anyhow!("blockwise block size must be positive"));
                 }
             }
-            CodecId::Identity | CodecId::TernGrad => {}
+            CodecId::SparseBlock => {
+                let (blk, kb) = (param & 0xffff, param >> 16);
+                if blk == 0 || kb == 0 || kb > blk {
+                    return Err(anyhow!("sparse-block param {param:#x} out of range"));
+                }
+            }
+            // TopK's param is the kept count, bounded by n in the
+            // layout check below.
+            CodecId::Identity | CodecId::TernGrad | CodecId::TopK => {}
         }
         let need = 22 + nscales * 4 + nwords * 8 + nraw * 4;
         if b.len() != need {
@@ -225,9 +244,15 @@ impl WireMsg {
             }
         };
         let code_words = (n * bits as usize).div_ceil(64);
-        match codec {
+        // `Packed::n` counts *codes*, which the sparse codecs decouple
+        // from the element count: a TopK index payload carries k codes
+        // and a SparseBlock payload carries Σ_b min(kb, len_b). Every
+        // dense codec keeps code count == element count, so each arm
+        // yields the code count the reconstructed payload must claim.
+        let packed_n = match codec {
             CodecId::Identity => {
                 expect(bits == 0 && nwords == 0 && nscales == 0 && nraw == n, "identity layout")?;
+                n
             }
             CodecId::LogQuant => {
                 let want_bits = pack::bits_for_symbols(2 * ((param & 0xff) + 1) + 1);
@@ -241,6 +266,7 @@ impl WireMsg {
                         "logquant scale count",
                     )?;
                 }
+                n
             }
             CodecId::WQuant => {
                 let want_bits = pack::bits_for_symbols(2 * (1u32 << param) + 1);
@@ -248,12 +274,14 @@ impl WireMsg {
                     bits == want_bits && nscales == 0 && nraw == 0 && nwords == code_words,
                     "wquant layout",
                 )?;
+                n
             }
             CodecId::TernGrad => {
                 expect(
                     bits == 2 && nscales == 1 && nraw == 0 && nwords == code_words,
                     "terngrad layout",
                 )?;
+                n
             }
             CodecId::Blockwise => {
                 expect(
@@ -263,6 +291,7 @@ impl WireMsg {
                         && nwords == code_words,
                     "blockwise layout",
                 )?;
+                n
             }
             CodecId::Qsgd => {
                 let want_bits = pack::bits_for_symbols(2 * param + 1);
@@ -270,20 +299,76 @@ impl WireMsg {
                     bits == want_bits && nscales == 1 && nraw == 0 && nwords == code_words,
                     "qsgd layout",
                 )?;
+                n
             }
-        }
+            CodecId::TopK => {
+                let k = param as usize;
+                expect(k <= n && nscales == 0 && nraw == k, "topk layout")?;
+                if k == 0 {
+                    expect(bits == 0 && nwords == 0, "topk empty layout")?;
+                    0
+                } else if sparse::TopK::index_mode(n, k) {
+                    let ib = pack::bits_for_symbols(n as u32);
+                    expect(
+                        bits == ib && nwords == (k * ib as usize).div_ceil(64),
+                        "topk index layout",
+                    )?;
+                    k
+                } else {
+                    expect(bits == 1 && nwords == n.div_ceil(64), "topk bitmap layout")?;
+                    n
+                }
+            }
+            CodecId::SparseBlock => {
+                let sb = sparse::SparseBlock::from_param(param); // domain vetted above
+                let total = sb.code_count(n);
+                expect(
+                    nscales == n.div_ceil((param & 0xffff) as usize) && nraw == 0,
+                    "sparse-block layout",
+                )?;
+                if total == 0 {
+                    expect(bits == 0 && nwords == 0, "sparse-block empty layout")?;
+                } else {
+                    let cb = sb.code_bits();
+                    expect(
+                        bits == cb && nwords == (total * cb as usize).div_ceil(64),
+                        "sparse-block layout",
+                    )?;
+                }
+                total
+            }
+        };
         // `need == b.len()` makes these reads infallible, but the
         // bounds-checked readers keep that a local fact, not a
         // load-bearing assumption
         let short = || anyhow!("wire msg len {} != expected {}", b.len(), need);
         let scales = rd.f32s(nscales).ok_or_else(short)?;
-        let codes = if nwords > 0 || (bits > 0 && n > 0) {
-            Some(pack::Packed { bits, n, words: rd.u64s(nwords).ok_or_else(short)? })
+        let codes = if nwords > 0 || (bits > 0 && packed_n > 0) {
+            Some(pack::Packed { bits, n: packed_n, words: rd.u64s(nwords).ok_or_else(short)? })
         } else {
             None
         };
         let raw = rd.f32s(nraw).ok_or_else(short)?;
-        Ok(WireMsg { codec, param, n, scales, codes, raw })
+        let msg = WireMsg { codec, param, n, scales, codes, raw };
+        // Sparse payload *content* can lie even when every count checks
+        // out (duplicate indices, bitmap popcount ≠ k, tail-block
+        // positions past the ragged length) and the range decodes
+        // scatter by position — validate here so an accepted frame is
+        // always decodable without a panic.
+        match codec {
+            CodecId::TopK => {
+                if !sparse::topk_content_ok(&msg) {
+                    return Err(anyhow!("inconsistent topk payload (n={n}, k={param})"));
+                }
+            }
+            CodecId::SparseBlock => {
+                if !sparse::sparse_block_content_ok(&msg) {
+                    return Err(anyhow!("inconsistent sparse-block payload (n={n}, param={param:#x})"));
+                }
+            }
+            _ => {}
+        }
+        Ok(msg)
     }
 }
 
@@ -356,6 +441,8 @@ pub fn decode_msg(msg: &WireMsg, out: &mut [f32]) {
         CodecId::TernGrad => TernGrad.decompress(msg, out),
         CodecId::Blockwise => Blockwise::new(msg.param as usize).decompress(msg, out),
         CodecId::Qsgd => Qsgd::new(msg.param).decompress(msg, out),
+        CodecId::TopK => TopK::decoder().decompress(msg, out),
+        CodecId::SparseBlock => SparseBlock::from_param(msg.param).decompress(msg, out),
     }
 }
 
@@ -371,6 +458,8 @@ pub fn decode_msg_range(msg: &WireMsg, start: usize, out: &mut [f32]) {
         CodecId::TernGrad => TernGrad.decompress_range(msg, start, out),
         CodecId::Blockwise => Blockwise::new(msg.param as usize).decompress_range(msg, start, out),
         CodecId::Qsgd => Qsgd::new(msg.param).decompress_range(msg, start, out),
+        CodecId::TopK => TopK::decoder().decompress_range(msg, start, out),
+        CodecId::SparseBlock => SparseBlock::from_param(msg.param).decompress_range(msg, start, out),
     }
 }
 
@@ -395,6 +484,10 @@ pub fn decode_msg_range_add(msg: &WireMsg, start: usize, out: &mut [f32]) {
             Blockwise::new(msg.param as usize).decompress_range_add(msg, start, out)
         }
         CodecId::Qsgd => Qsgd::new(msg.param).decompress_range_add(msg, start, out),
+        CodecId::TopK => TopK::decoder().decompress_range_add(msg, start, out),
+        CodecId::SparseBlock => {
+            SparseBlock::from_param(msg.param).decompress_range_add(msg, start, out)
+        }
     }
 }
 
@@ -558,6 +651,9 @@ mod tests {
             Box::new(Blockwise::new(7)), // non-dividing block: ragged scales
             Box::new(Qsgd::new(4)),
             Box::new(StochasticLogQuant::new(3)),
+            Box::new(TopK::new(400)),        // index mode at n=300
+            Box::new(TopK::new(5000)),       // bitmap mode
+            Box::new(SparseBlock::new(7, 2)), // ragged tail block
         ];
         for comp in &comps {
             let mut q = vec![0.0; n];
@@ -591,6 +687,9 @@ mod tests {
             Box::new(Blockwise::new(7)),
             Box::new(Qsgd::new(4)),
             Box::new(StochasticLogQuant::new(3)),
+            Box::new(TopK::new(400)),
+            Box::new(TopK::new(5000)),
+            Box::new(SparseBlock::new(7, 2)),
         ];
         for comp in &comps {
             let mut q = vec![0.0; n];
@@ -700,6 +799,20 @@ mod tests {
         let bw = encode(&Blockwise::new(7));
         assert!(WireMsg::from_bytes(&bw).is_ok());
         assert!(WireMsg::from_bytes(&patch_param(bw.clone(), 0)).is_err());
+        // sparse codecs: a kept count past n, a kb past the block
+        let tk = encode(&TopK::new(2000));
+        assert!(WireMsg::from_bytes(&tk).is_ok());
+        assert!(WireMsg::from_bytes(&patch_param(tk.clone(), 21)).is_err(), "topk k > n");
+        assert!(
+            WireMsg::from_bytes(&patch_param(tk, 3)).is_err(),
+            "topk k disagreeing with the raw count"
+        );
+        let sb = encode(&SparseBlock::new(8, 2));
+        assert!(WireMsg::from_bytes(&sb).is_ok());
+        assert!(
+            WireMsg::from_bytes(&patch_param(sb, 8 | (9 << 16))).is_err(),
+            "sparse-block kb > block"
+        );
         // structural inconsistencies a panic used to hide behind:
         // a bits byte (offset 1) the codec never emits…
         let mut wild_bits = lq.clone();
@@ -751,7 +864,7 @@ mod fuzz_tests {
             if trial % 4 == 0 {
                 let mut b = bytes.clone();
                 if !b.is_empty() {
-                    b[0] %= 6; // valid codec ids
+                    b[0] %= 8; // valid codec ids
                 }
                 let _ = WireMsg::from_bytes(&b);
             }

@@ -55,7 +55,8 @@
 //! below).
 
 use super::logquant::LogQuant;
-use super::MAX_KG;
+use super::sparse::{SparseBlock, TopK, DENSITY_UNIT};
+use super::{pack, Compressor, MAX_KG};
 use anyhow::{anyhow, bail, Result};
 
 /// One named parameter block of the flat model vector.
@@ -175,6 +176,58 @@ pub enum PolicySpec {
     PerLayer(Vec<(String, u32)>),
     /// The error-feedback-driven controller, confined to `lo..=hi`.
     Adaptive { lo: u32, hi: u32 },
+    /// [`Self::PerLayer`] generalized to mixed codec families — what a
+    /// `per-layer:` spelling with at least one sparse value (`topk@d`,
+    /// `sblock@BxK`) parses to. All-dense spellings keep parsing to
+    /// `PerLayer`, so existing configs bind byte-identically.
+    PerLayerCodec(Vec<(String, RuleCodec)>),
+    /// The adaptive controller steering a [`TopK`] *density* instead of
+    /// a LogQuant level: same residual-ratio band rule, multiplicative
+    /// steps (densities span decades, where ±1 never would), band in
+    /// 1/10000ths kept.
+    AdaptiveTopK { lo: u32, hi: u32 },
+}
+
+/// One per-tensor codec rule of a [`PolicySpec::PerLayerCodec`] spec,
+/// as a `per-layer:` value spells it: a dense LogQuant level (`=4`), a
+/// TopK density (`=topk@0.05`), or a blockwise top-k shape
+/// (`=sblock@64x4`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleCodec {
+    Log(u32),
+    /// Kept density in 1/10000ths.
+    TopK(u32),
+    SparseBlock { block: u32, kb: u32 },
+}
+
+/// Parse a `per-layer:` rule value into its codec family.
+fn parse_rule_value(v: &str) -> Result<RuleCodec> {
+    if let Some(d) = v.strip_prefix("topk@") {
+        Ok(RuleCodec::TopK(parse_density(d)?))
+    } else if let Some(shape) = v.strip_prefix("sblock@") {
+        let (b, kb) = shape
+            .split_once('x')
+            .ok_or_else(|| anyhow!("sparse-block shape '{shape}' is not BLOCKxK"))?;
+        let b: u32 = b.parse().map_err(|e| anyhow!("bad sparse-block size '{b}': {e}"))?;
+        let kb: u32 = kb.parse().map_err(|e| anyhow!("bad sparse-block keep '{kb}': {e}"))?;
+        if b == 0 || b > 0xffff || kb == 0 || kb > b {
+            bail!("sparse-block shape {b}x{kb} invalid (need 1 <= K <= BLOCK <= 65535)");
+        }
+        Ok(RuleCodec::SparseBlock { block: b, kb })
+    } else {
+        let k: u32 = v.parse().map_err(|e| anyhow!("bad per-layer level '{v}': {e}"))?;
+        Ok(RuleCodec::Log(k))
+    }
+}
+
+/// A kept-density fraction (`0 < d <= 1`) to integer 1/10000ths,
+/// rounded, floored at 1 so any accepted density ships something.
+fn parse_density(d: &str) -> Result<u32> {
+    let x: f64 = d.parse().map_err(|e| anyhow!("bad topk density '{d}': {e}"))?;
+    if !(x > 0.0 && x <= 1.0) {
+        bail!("topk density {d} out of range (0 < d <= 1)");
+    }
+    Ok((x * DENSITY_UNIT as f64).round().clamp(1.0, DENSITY_UNIT as f64) as u32)
 }
 
 impl PolicySpec {
@@ -183,7 +236,9 @@ impl PolicySpec {
     /// ```text
     ///   static
     ///   per-layer:dense1=4,conv*=3,*=2
+    ///   per-layer:expert*=topk@0.05,router=sblock@64x4,*=2
     ///   adaptive:0..4
+    ///   adaptive-topk:0.01..0.25
     /// ```
     pub fn parse(s: &str) -> Result<Self> {
         let spec = if s == "static" {
@@ -191,14 +246,31 @@ impl PolicySpec {
         } else if let Some(body) = s.strip_prefix("per-layer:") {
             let mut rules = Vec::new();
             for tok in body.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-                let (pat, k) = tok
+                let (pat, v) = tok
                     .split_once('=')
                     .ok_or_else(|| anyhow!("per-layer rule '{tok}' is not name=k"))?;
-                let k: u32 =
-                    k.parse().map_err(|e| anyhow!("bad per-layer level '{k}': {e}"))?;
-                rules.push((pat.to_string(), k));
+                rules.push((pat.to_string(), parse_rule_value(v)?));
             }
-            Self::PerLayer(rules)
+            if rules.iter().all(|(_, c)| matches!(c, RuleCodec::Log(_))) {
+                // All-dense spellings keep the original variant so
+                // existing configs compare (and bind) exactly as before.
+                Self::PerLayer(
+                    rules
+                        .into_iter()
+                        .map(|(pat, c)| match c {
+                            RuleCodec::Log(k) => (pat, k),
+                            _ => unreachable!("checked all-dense above"),
+                        })
+                        .collect(),
+                )
+            } else {
+                Self::PerLayerCodec(rules)
+            }
+        } else if let Some(band) = s.strip_prefix("adaptive-topk:") {
+            let (lo, hi) = band
+                .split_once("..")
+                .ok_or_else(|| anyhow!("adaptive-topk band '{band}' is not LO..HI"))?;
+            Self::AdaptiveTopK { lo: parse_density(lo)?, hi: parse_density(hi)? }
         } else if let Some(band) = s.strip_prefix("adaptive:") {
             let (lo, hi) = band
                 .split_once("..")
@@ -208,7 +280,8 @@ impl PolicySpec {
             Self::Adaptive { lo, hi }
         } else {
             return Err(anyhow!(
-                "unknown codec policy '{s}' (static | per-layer:<name=k,…> | adaptive:<lo>..<hi>)"
+                "unknown codec policy '{s}' (static | per-layer:<name=k|topk@d|sblock@BxK,…> \
+                 | adaptive:<lo>..<hi> | adaptive-topk:<lo>..<hi>)"
             ));
         };
         spec.validate()?;
@@ -236,6 +309,38 @@ impl PolicySpec {
                     bail!("adaptive band {lo}..{hi} invalid (need lo <= hi <= {MAX_KG})");
                 }
             }
+            Self::PerLayerCodec(rules) => {
+                if rules.is_empty() {
+                    bail!("per-layer policy has no rules");
+                }
+                for (_, c) in rules {
+                    match c {
+                        RuleCodec::Log(k) => {
+                            if *k > MAX_KG {
+                                bail!("per-layer level {k} out of range (k_g <= {MAX_KG})");
+                            }
+                        }
+                        RuleCodec::TopK(d) => {
+                            if *d == 0 || *d > DENSITY_UNIT {
+                                bail!("topk density {d} out of range (1..={DENSITY_UNIT} of {DENSITY_UNIT})");
+                            }
+                        }
+                        RuleCodec::SparseBlock { block, kb } => {
+                            if *block == 0 || *block > 0xffff || *kb == 0 || kb > block {
+                                bail!("sparse-block shape {block}x{kb} invalid (need 1 <= K <= BLOCK <= 65535)");
+                            }
+                        }
+                    }
+                }
+            }
+            Self::AdaptiveTopK { lo, hi } => {
+                if *lo == 0 || lo > hi || *hi > DENSITY_UNIT {
+                    bail!(
+                        "adaptive-topk band {lo}..{hi} invalid \
+                         (need 1 <= lo <= hi <= {DENSITY_UNIT}, in 1/{DENSITY_UNIT}ths kept)"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -244,18 +349,33 @@ impl PolicySpec {
         matches!(self, Self::Static)
     }
 
+    /// True when the spec binds any tensor to a sparse codec — sparse
+    /// shipping drops mass by design, so these specs require error
+    /// feedback (the CLI rejects them under `--no-ef`, like `adaptive`).
+    pub fn is_sparse(&self) -> bool {
+        match self {
+            Self::AdaptiveTopK { .. } => true,
+            Self::PerLayerCodec(rules) => {
+                rules.iter().any(|(_, c)| !matches!(c, RuleCodec::Log(_)))
+            }
+            _ => false,
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             Self::Static => "static".into(),
             Self::PerLayer(_) => "per-layer".into(),
             Self::Adaptive { lo, hi } => format!("adaptive{lo}..{hi}"),
+            Self::PerLayerCodec(_) => "per-layer+sparse".into(),
+            Self::AdaptiveTopK { lo, hi } => format!("adaptive-topk{lo}..{hi}bp"),
         }
     }
 }
 
 /// First matching rule wins; `prefix*` globs and the `*` catch-all are
 /// supported; `None` when nothing matches.
-fn match_rule(rules: &[(String, u32)], name: &str) -> Option<u32> {
+fn match_rule<T: Copy>(rules: &[(String, T)], name: &str) -> Option<T> {
     rules
         .iter()
         .find(|(pat, _)| {
@@ -263,7 +383,7 @@ fn match_rule(rules: &[(String, u32)], name: &str) -> Option<u32> {
                 || pat == name
                 || pat.strip_suffix('*').is_some_and(|prefix| name.starts_with(prefix))
         })
-        .map(|&(_, k)| k)
+        .map(|(_, k)| *k)
 }
 
 /// A bound policy: the per-tensor `k_g` decision state of one endpoint
@@ -274,10 +394,44 @@ fn match_rule(rules: &[(String, u32)], name: &str) -> Option<u32> {
 pub struct CodecPolicy {
     spec: PolicySpec,
     layout: TensorLayout,
-    /// Current `k_g` per tensor.
+    /// The codec family bound to each tensor; fixes the *meaning* of
+    /// the paired [`Self::bits`] level (`k_g` for Log, kept density in
+    /// 1/10000ths for TopK; SparseBlock carries its shape in the kind
+    /// and its level is informational).
+    kinds: Vec<CodecKind>,
+    /// Current level per tensor (see [`Self::kinds`]).
     bits: Vec<u32>,
     /// Per-tensor freeze countdown after a level change.
     hold: Vec<u32>,
+}
+
+/// The codec family bound to one tensor of a [`CodecPolicy`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecKind {
+    Log,
+    TopK,
+    SparseBlock { block: u32, kb: u32 },
+}
+
+/// A stack-constructed compressor bound to one tensor — what
+/// [`CodecPolicy::codec_at`] hands the per-round compression sites, so
+/// the hot path keeps the zero-alloc shape of the `LogQuant::new` call
+/// it generalizes.
+#[derive(Clone, Copy, Debug)]
+pub enum BoundCodec {
+    Log(LogQuant),
+    TopK(TopK),
+    Block(SparseBlock),
+}
+
+impl BoundCodec {
+    pub fn as_dyn(&self) -> &dyn Compressor {
+        match self {
+            Self::Log(c) => c,
+            Self::TopK(c) => c,
+            Self::Block(c) => c,
+        }
+    }
 }
 
 impl CodecPolicy {
@@ -298,8 +452,38 @@ impl CodecPolicy {
                 .map(|ts| match_rule(rules, &ts.name).unwrap_or(base_kg))
                 .collect(),
             PolicySpec::Adaptive { lo, hi } => vec![base_kg.clamp(*lo, *hi); n],
+            PolicySpec::PerLayerCodec(rules) => layout
+                .tensors()
+                .iter()
+                .map(|ts| match match_rule(rules, &ts.name) {
+                    Some(RuleCodec::Log(k)) => k,
+                    Some(RuleCodec::TopK(d)) => d,
+                    Some(RuleCodec::SparseBlock { kb, .. }) => kb,
+                    None => base_kg,
+                })
+                .collect(),
+            // The controller starts at the band's dense edge and works
+            // down: overshipping early rounds costs bytes, undershipping
+            // costs convergence, and only one of those self-corrects
+            // before the residual signal arrives.
+            PolicySpec::AdaptiveTopK { hi, .. } => vec![*hi; n],
         };
-        Ok(Self { spec, layout, bits, hold: vec![0; n] })
+        let kinds = match &spec {
+            PolicySpec::PerLayerCodec(rules) => layout
+                .tensors()
+                .iter()
+                .map(|ts| match match_rule(rules, &ts.name) {
+                    Some(RuleCodec::TopK(_)) => CodecKind::TopK,
+                    Some(RuleCodec::SparseBlock { block, kb }) => {
+                        CodecKind::SparseBlock { block, kb }
+                    }
+                    Some(RuleCodec::Log(_)) | None => CodecKind::Log,
+                })
+                .collect(),
+            PolicySpec::AdaptiveTopK { .. } => vec![CodecKind::TopK; n],
+            _ => vec![CodecKind::Log; n],
+        };
+        Ok(Self { spec, layout, kinds, bits, hold: vec![0; n] })
     }
 
     pub fn spec(&self) -> &PolicySpec {
@@ -316,16 +500,36 @@ impl CodecPolicy {
         &self.bits
     }
 
+    /// The codec family bound to each tensor.
+    pub fn kinds(&self) -> &[CodecKind] {
+        &self.kinds
+    }
+
+    /// The compressor tensor `i`'s next compression must use at the
+    /// current level — `LogQuant::new(policy.bits()[i])` generalized to
+    /// the bound codec family, still constructed on the stack.
+    pub fn codec_at(&self, i: usize) -> BoundCodec {
+        match self.kinds[i] {
+            CodecKind::Log => BoundCodec::Log(LogQuant::new(self.bits[i])),
+            CodecKind::TopK => BoundCodec::TopK(TopK::new(self.bits[i])),
+            CodecKind::SparseBlock { block, kb } => {
+                BoundCodec::Block(SparseBlock::new(block as usize, kb as usize))
+            }
+        }
+    }
+
     /// Mean *code* bits per element at the current levels, weighted by
     /// tensor size — the analytic uplink cost the Comm column and the
-    /// metrics CSV report.
+    /// metrics CSV report. Log tensors keep the exact
+    /// `LogQuant::code_bits` accounting; sparse tensors charge 32 value
+    /// bits per kept element plus their position payload.
     pub fn mean_code_bits(&self) -> f64 {
         let total = self.layout.dim() as f64;
         self.layout
             .tensors()
             .iter()
-            .zip(&self.bits)
-            .map(|(ts, &k)| LogQuant::new(k).code_bits() as f64 * ts.len as f64)
+            .zip(self.bits.iter().zip(&self.kinds))
+            .map(|(ts, (&level, &kind))| per_element_bits(kind, level, ts.len) * ts.len as f64)
             .sum::<f64>()
             / total
     }
@@ -336,8 +540,12 @@ impl CodecPolicy {
     /// no rng, no clock — the reproducibility contract of the module
     /// docs. No-op for static/per-layer specs.
     pub fn decide(&mut self, _t: u64, dir: &[f32], residual: &[f32]) {
-        let (lo, hi) = match &self.spec {
-            PolicySpec::Adaptive { lo, hi } => (*lo, *hi),
+        // The sparse controller moves the TopK density multiplicatively
+        // (densities span decades; ±1/10000th steps never would), the
+        // dense one moves k_g by ±1 — same band, same hysteresis.
+        let (lo, hi, sparse) = match &self.spec {
+            PolicySpec::Adaptive { lo, hi } => (*lo, *hi, false),
+            PolicySpec::AdaptiveTopK { lo, hi } => (*lo, *hi, true),
             _ => return,
         };
         debug_assert_eq!(dir.len(), self.layout.dim());
@@ -353,12 +561,29 @@ impl CodecPolicy {
             }
             let r = l2(&residual[ts.start..ts.start + ts.len]) / g;
             if r > RATIO_GROW && self.bits[i] < hi {
-                self.bits[i] += 1;
+                self.bits[i] = if sparse { (self.bits[i] * 2).min(hi) } else { self.bits[i] + 1 };
                 self.hold[i] = HOLD_ROUNDS;
             } else if r < RATIO_SHRINK && self.bits[i] > lo {
-                self.bits[i] -= 1;
+                self.bits[i] = if sparse { (self.bits[i] / 2).max(lo) } else { self.bits[i] - 1 };
                 self.hold[i] = HOLD_ROUNDS;
             }
+        }
+    }
+}
+
+/// Analytic code bits per element for one bound tensor (the sparse
+/// terms mirror `Compressor::bits_per_element`, with TopK's position
+/// term sharpened by the tensor length the policy knows).
+fn per_element_bits(kind: CodecKind, level: u32, len: usize) -> f64 {
+    match kind {
+        CodecKind::Log => LogQuant::new(level).code_bits() as f64,
+        CodecKind::TopK => {
+            let d = level as f64 / DENSITY_UNIT as f64;
+            d * 32.0 + (d * pack::bits_for_symbols(len.max(1) as u32) as f64).min(1.0)
+        }
+        CodecKind::SparseBlock { block, kb } => {
+            let cb = pack::bits_for_symbols(block) as f64 + 1.0;
+            (kb as f64 * cb + 32.0) / block as f64
         }
     }
 }
@@ -558,5 +783,98 @@ mod tests {
             2
         )
         .is_err());
+    }
+
+    #[test]
+    fn sparse_spec_parse_and_errors() {
+        let spec = PolicySpec::parse("per-layer:expert*=topk@0.05,router=sblock@64x4,*=2")
+            .unwrap();
+        assert_eq!(
+            spec,
+            PolicySpec::PerLayerCodec(vec![
+                ("expert*".into(), RuleCodec::TopK(500)),
+                ("router".into(), RuleCodec::SparseBlock { block: 64, kb: 4 }),
+                ("*".into(), RuleCodec::Log(2)),
+            ])
+        );
+        assert!(spec.is_sparse());
+        assert!(!spec.is_static());
+        assert_eq!(spec.label(), "per-layer+sparse");
+        // All-dense spellings keep parsing to the original variant.
+        assert_eq!(
+            PolicySpec::parse("per-layer:dense1=4,*=2").unwrap(),
+            PolicySpec::PerLayer(vec![("dense1".into(), 4), ("*".into(), 2)])
+        );
+        assert!(!PolicySpec::parse("per-layer:dense1=4").unwrap().is_sparse());
+        assert_eq!(
+            PolicySpec::parse("adaptive-topk:0.01..0.25").unwrap(),
+            PolicySpec::AdaptiveTopK { lo: 100, hi: 2500 }
+        );
+        assert!(PolicySpec::AdaptiveTopK { lo: 100, hi: 2500 }.is_sparse());
+        assert!(PolicySpec::parse("per-layer:a=topk@0").is_err(), "zero density");
+        assert!(PolicySpec::parse("per-layer:a=topk@1.5").is_err(), "density above 1");
+        assert!(PolicySpec::parse("per-layer:a=topk@x").is_err(), "non-numeric density");
+        assert!(PolicySpec::parse("per-layer:a=sblock@4x5").is_err(), "keep above block");
+        assert!(PolicySpec::parse("per-layer:a=sblock@0x1").is_err(), "zero block");
+        assert!(PolicySpec::parse("per-layer:a=sblock@8").is_err(), "missing keep");
+        assert!(PolicySpec::parse("adaptive-topk:0.25..0.01").is_err(), "inverted band");
+        assert!(PolicySpec::parse("adaptive-topk:0..0.25").is_err(), "zero band low");
+    }
+
+    #[test]
+    fn sparse_binding_sets_kinds_levels_and_codecs() {
+        let spec =
+            PolicySpec::parse("per-layer:dense1=topk@0.05,dense2=sblock@8x2,*=3").unwrap();
+        let p = CodecPolicy::new(spec, layout3(), 2).unwrap();
+        assert_eq!(p.bits(), &[500, 2, 3]);
+        assert_eq!(
+            p.kinds(),
+            &[CodecKind::TopK, CodecKind::SparseBlock { block: 8, kb: 2 }, CodecKind::Log]
+        );
+        assert_eq!(p.codec_at(0).as_dyn().codec(), crate::quant::CodecId::TopK);
+        assert_eq!(p.codec_at(1).as_dyn().codec(), crate::quant::CodecId::SparseBlock);
+        assert_eq!(p.codec_at(2).as_dyn().codec(), crate::quant::CodecId::LogQuant);
+        // dense specs bind every tensor to Log — the pre-sparse shape
+        let dense = CodecPolicy::new(PolicySpec::Static, layout3(), 2).unwrap();
+        assert!(dense.kinds().iter().all(|k| *k == CodecKind::Log));
+    }
+
+    #[test]
+    fn adaptive_topk_moves_density_multiplicatively_in_band() {
+        let spec = PolicySpec::AdaptiveTopK { lo: 100, hi: 2500 };
+        let mut p = CodecPolicy::new(spec, layout3(), 2).unwrap();
+        assert_eq!(p.bits(), &[2500, 2500, 2500], "starts at the dense edge");
+        assert!(p.kinds().iter().all(|k| *k == CodecKind::TopK));
+        let dim = p.layout().dim();
+        let ones = vec![1.0f32; dim];
+        let zeros = vec![0.0f32; dim];
+        // No residual debt: halve (then hold) toward the band floor.
+        p.decide(1, &ones, &zeros);
+        assert_eq!(p.bits(), &[1250, 1250, 1250]);
+        p.decide(2, &ones, &zeros);
+        assert_eq!(p.bits(), &[1250, 1250, 1250], "hold must damp flapping");
+        for t in 3..=40 {
+            p.decide(t, &ones, &zeros);
+            assert!(p.bits().iter().all(|&b| (100..=2500).contains(&b)), "t={t}");
+        }
+        assert_eq!(p.bits(), &[100, 100, 100], "clamps at the band floor");
+        // Saturated debt: double back up to the band ceiling.
+        for t in 41..=80 {
+            p.decide(t, &ones, &ones);
+            assert!(p.bits().iter().all(|&b| (100..=2500).contains(&b)), "t={t}");
+        }
+        assert_eq!(p.bits(), &[2500, 2500, 2500]);
+    }
+
+    #[test]
+    fn sparse_mean_code_bits_charges_positions_and_values() {
+        let spec =
+            PolicySpec::parse("per-layer:dense1=topk@0.25,dense2=sblock@8x2,head=2").unwrap();
+        let p = CodecPolicy::new(spec, layout3(), 2).unwrap();
+        // dense1 (len 8, d=0.25): 0.25·32 + min(0.25·3, 1) = 8.75
+        // dense2 (8x2): (2·4 + 32) / 8 = 5.0
+        // head (kg=2): 3 code bits
+        let want = (8.75 * 8.0 + 5.0 * 16.0 + 3.0 * 4.0) / 28.0;
+        assert!((p.mean_code_bits() - want).abs() < 1e-12, "{}", p.mean_code_bits());
     }
 }

@@ -1,0 +1,697 @@
+//! Sparse compressors: ship the few coordinates that matter, feed the
+//! rest through error feedback.
+//!
+//! The paper's EF analysis is codec-agnostic: any contractive
+//! compressor whose dropped mass flows into the residual inherits the
+//! convergence guarantee (Assumption 2 only asks `‖u − Q(u)‖ ≤
+//! (1 − δ)‖u‖`). ECQ-SGD (Wu et al., arXiv:1806.08054) and blockwise
+//! momentum SGD with EF (Zheng et al., arXiv:1905.10936) instantiate it
+//! with sparsification; this module adds both shapes behind the same
+//! [`Compressor`] trait the dense codecs use:
+//!
+//! * [`TopK`] — global magnitude top-k. The kept values ship as exact
+//!   f32 (`WireMsg::raw`), so on kept coordinates the decode identity is
+//!   `q_i = u_i` *bitwise* and the EF residual is exactly 0; on dropped
+//!   coordinates `q_i = 0` and the residual carries `u_i` exactly. The
+//!   per-coordinate conservation `q + e == u` therefore holds in f32
+//!   with no rounding at all — the property `rust/tests/sparse_codec.rs`
+//!   pins.
+//! * [`SparseBlock`] — blockwise top-k with a per-block scale, the
+//!   1905.10936 shape composed with sparsification: within each block
+//!   of `block` elements keep the `kb` largest magnitudes, ship one
+//!   scale `s_b = mean(|kept|)` and a `(position, sign)` code per kept
+//!   element; kept coordinates decode to `±s_b`.
+//!
+//! # Position encoding (TopK)
+//!
+//! Two encodings, chosen by whichever is smaller for the density —
+//! deterministically, from `(n, k)` alone, so the decoder re-derives
+//! the mode without a flag byte:
+//!
+//! * **index mode** when `k·⌈log₂ n⌉ < n` bits: the k kept indices,
+//!   sorted ascending, packed at `bits_for_symbols(n)` bits each.
+//! * **bitmap mode** otherwise: one bit per element (ties go to the
+//!   bitmap).
+//!
+//! # Wire layout
+//!
+//! Both codecs reuse the [`WireMsg`] grammar unchanged (wire v2, same
+//! 22-byte serialized header): `param` carries `k` (TopK) or
+//! `block | kb << 16` (SparseBlock); positions ride in `codes`; TopK's
+//! kept values ride in `raw`; SparseBlock's per-block scales ride in
+//! `scales`. `WireMsg::from_bytes` re-derives every count from
+//! `(codec, param, n)` and additionally validates payload *content*
+//! (index monotonicity, bitmap popcount) — see `topk_content_ok` /
+//! `sparse_block_content_ok` — so an accepted frame can always be
+//! range-decoded without panicking, hostile or not.
+
+use super::{pack, CodecId, Compressor, WireMsg};
+use crate::util::DetRng;
+
+/// Density granularity: [`TopK`] densities are expressed in 1/10000ths
+/// of kept coordinates (integer, for bit-reproducible policy state).
+pub const DENSITY_UNIT: u32 = 10_000;
+
+/// Global magnitude top-k sparsifier at a fixed density.
+///
+/// `k = ceil(n · density / 10000)` per compressed range, so any
+/// positive density keeps at least one coordinate of a non-empty
+/// tensor; density 0 ships nothing (the EF residual carries it all).
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    /// Kept density in 1/10000ths (`0..=10000`).
+    density_bp: u32,
+}
+
+impl TopK {
+    pub fn new(density_bp: u32) -> Self {
+        assert!(density_bp <= DENSITY_UNIT, "topk density {density_bp} > {DENSITY_UNIT}");
+        Self { density_bp }
+    }
+
+    /// A decode-only instance: every decode below is driven entirely by
+    /// the message header (`param` = k), never by the density.
+    pub fn decoder() -> Self {
+        Self { density_bp: 0 }
+    }
+
+    /// Kept-coordinate count for an `n`-element range.
+    pub fn k_for(&self, n: usize) -> usize {
+        (n * self.density_bp as usize).div_ceil(DENSITY_UNIT as usize)
+    }
+
+    /// The encoding-mode rule, shared verbatim by the encoder and
+    /// `WireMsg::from_bytes`: index mode iff the packed sorted indices
+    /// are strictly smaller than the n-bit bitmap.
+    pub fn index_mode(n: usize, k: usize) -> bool {
+        k > 0 && k * pack::bits_for_symbols(n as u32) as usize < n
+    }
+
+    /// Fused decode→accumulate (`out[i] += decoded[start + i]`) — the
+    /// server's arena traversal calls this via `decode_msg_range_add`.
+    pub fn decompress_range_add(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<true>(msg, start, out);
+    }
+
+    // qadam: hotpath
+    fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let end = start + out.len();
+        assert!(end <= msg.n, "range {start}+{} out of {}", out.len(), msg.n);
+        if !ADD {
+            out.fill(0.0);
+        }
+        if out.is_empty() || msg.param == 0 {
+            return;
+        }
+        let p = msg.codes.as_ref().expect("topk msg has codes");
+        if p.bits == 1 {
+            // Bitmap mode: the value of bit i is raw[rank(i)] where
+            // rank = ones in [0, i). Seed the rank by popcounting whole
+            // words up to `start`, then walk the range.
+            let mut rank = rank1(p, start);
+            pack::for_each_chunk(p, start, end - start, |o, chunk| {
+                for (j, &b) in chunk.iter().enumerate() {
+                    if b != 0 {
+                        let v = msg.raw[rank];
+                        if ADD {
+                            out[o + j] += v;
+                        } else {
+                            out[o + j] = v;
+                        }
+                        rank += 1;
+                    }
+                }
+            });
+        } else {
+            // Index mode: indices are sorted, so the ranks touching
+            // [start, end) are a contiguous run found by binary search.
+            let lo = lower_bound(p, start as u32);
+            let hi = lower_bound(p, end as u32);
+            if hi > lo {
+                pack::for_each_chunk(p, lo, hi - lo, |o, chunk| {
+                    for (j, &gi) in chunk.iter().enumerate() {
+                        let v = msg.raw[lo + o + j];
+                        if ADD {
+                            out[gi as usize - start] += v;
+                        } else {
+                            out[gi as usize - start] = v;
+                        }
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// Ones among the first `upto` bits of a 1-bit-per-code payload.
+// qadam: hotpath
+fn rank1(p: &pack::Packed, upto: usize) -> usize {
+    let full = upto >> 6;
+    let mut r = 0usize;
+    for w in &p.words[..full] {
+        r += w.count_ones() as usize;
+    }
+    let rem = upto & 63;
+    if rem > 0 {
+        r += (p.words[full] & ((1u64 << rem) - 1)).count_ones() as usize;
+    }
+    r
+}
+
+/// Code `i` of a packed payload (two word reads at most) — the probe
+/// the index-mode binary search uses without unpacking the payload.
+// qadam: hotpath
+#[inline]
+fn code_at(p: &pack::Packed, i: usize) -> u32 {
+    let b = p.bits as usize;
+    let mask = if p.bits == 32 { u32::MAX } else { (1u32 << p.bits) - 1 };
+    let bit = i * b;
+    let w = bit >> 6;
+    let off = bit & 63;
+    let lo = p.words[w] >> off;
+    let v = if off + b <= 64 { lo } else { lo | (p.words[w + 1] << (64 - off)) };
+    (v as u32) & mask
+}
+
+/// First rank whose (sorted) code is `>= target`.
+// qadam: hotpath
+fn lower_bound(p: &pack::Packed, target: u32) -> usize {
+    let (mut lo, mut hi) = (0usize, p.n);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if code_at(p, mid) < target {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn codec(&self) -> CodecId {
+        CodecId::TopK
+    }
+
+    fn compress_into(&self, u: &[f32], q: &mut [f32], _rng: &mut DetRng) -> WireMsg {
+        debug_assert_eq!(u.len(), q.len());
+        let n = u.len();
+        let k = self.k_for(n);
+        q.fill(0.0);
+        if k == 0 {
+            return WireMsg {
+                codec: CodecId::TopK,
+                param: 0,
+                n,
+                scales: vec![],
+                codes: None,
+                raw: vec![],
+            };
+        }
+        // Select the k largest magnitudes; ties keep the lower index —
+        // a total order, so the selection is deterministic.
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        if k < n {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                let (ma, mb) = (u[a as usize].abs(), u[b as usize].abs());
+                mb.total_cmp(&ma).then(a.cmp(&b))
+            });
+            idx.truncate(k);
+        }
+        idx.sort_unstable();
+        let mut raw = Vec::with_capacity(k);
+        for &i in &idx {
+            raw.push(u[i as usize]);
+            q[i as usize] = u[i as usize];
+        }
+        let ib = pack::bits_for_symbols(n as u32);
+        let codes = if Self::index_mode(n, k) {
+            pack::pack(&idx, ib)
+        } else {
+            let mut words = vec![0u64; n.div_ceil(64)];
+            for &i in &idx {
+                words[(i as usize) >> 6] |= 1u64 << (i & 63);
+            }
+            pack::Packed { bits: 1, n, words }
+        };
+        WireMsg { codec: CodecId::TopK, param: k as u32, n, scales: vec![], codes: Some(codes), raw }
+    }
+
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
+        assert_eq!(out.len(), msg.n);
+        self.decode_range_impl::<false>(msg, 0, out);
+    }
+
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<false>(msg, start, out);
+    }
+
+    /// Analytic cost: 32 value bits per kept element plus the position
+    /// payload, bounded by the bitmap's 1 bit/element.
+    fn bits_per_element(&self) -> f64 {
+        let d = self.density_bp as f64 / DENSITY_UNIT as f64;
+        d * 32.0 + (d * 32.0).min(1.0)
+    }
+}
+
+/// Blockwise top-k with a per-block scale (arXiv:1905.10936 composed
+/// with sparsification): per `block`-element block, keep the `kb`
+/// largest magnitudes, ship `s_b = mean(|kept|)` and one
+/// `(position << 1) | sign` code per kept element. Kept coordinates
+/// decode to `±s_b`; dropped ones to 0 (their mass rides the EF
+/// residual exactly).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseBlock {
+    block: usize,
+    kb: usize,
+}
+
+impl SparseBlock {
+    pub fn new(block: usize, kb: usize) -> Self {
+        assert!(
+            (1..=0xffff).contains(&block),
+            "sparse-block block {block} out of range (1..=65535)"
+        );
+        assert!((1..=block).contains(&kb), "sparse-block kb {kb} out of range (1..={block})");
+        Self { block, kb }
+    }
+
+    /// Rebuild from the wire `param` (`block | kb << 16`), the decode
+    /// dispatcher's constructor. `WireMsg::from_bytes` vets the domain.
+    pub fn from_param(param: u32) -> Self {
+        Self::new((param & 0xffff) as usize, (param >> 16) as usize)
+    }
+
+    pub fn param(&self) -> u32 {
+        self.block as u32 | (self.kb as u32) << 16
+    }
+
+    /// Code count of an `n`-element message: every full block carries
+    /// `kb` codes, a ragged tail carries `min(kb, tail)`.
+    pub fn code_count(&self, n: usize) -> usize {
+        let full = n / self.block;
+        let tail = n % self.block;
+        full * self.kb + if tail > 0 { self.kb.min(tail) } else { 0 }
+    }
+
+    /// Bits per packed code: block-local position plus a sign bit.
+    pub fn code_bits(&self) -> u8 {
+        pack::bits_for_symbols(self.block as u32) + 1
+    }
+
+    /// Fused decode→accumulate — the server-side arena traversal entry.
+    pub fn decompress_range_add(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<true>(msg, start, out);
+    }
+
+    // qadam: hotpath
+    fn decode_range_impl<const ADD: bool>(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        let end = start + out.len();
+        assert!(end <= msg.n, "range {start}+{} out of {}", out.len(), msg.n);
+        if !ADD {
+            out.fill(0.0);
+        }
+        if out.is_empty() {
+            return;
+        }
+        let p = msg.codes.as_ref().expect("sparse-block msg has codes");
+        let (b0, b1) = (start / self.block, (end - 1) / self.block);
+        for bi in b0..=b1 {
+            let bs = bi * self.block;
+            let len_b = (msg.n - bs).min(self.block);
+            let cnt = self.kb.min(len_b);
+            // Only the last block can be short, so every earlier block
+            // contributes exactly kb codes: rank(bi) = bi · kb.
+            let rank = bi * self.kb;
+            let scale = msg.scales[bi];
+            pack::for_each_chunk(p, rank, cnt, |_, chunk| {
+                for &c in chunk {
+                    let gi = bs + (c >> 1) as usize;
+                    if gi >= start && gi < end {
+                        let v = if c & 1 == 1 { scale } else { -scale };
+                        if ADD {
+                            out[gi - start] += v;
+                        } else {
+                            out[gi - start] = v;
+                        }
+                    }
+                }
+            });
+        }
+    }
+}
+
+impl Compressor for SparseBlock {
+    fn name(&self) -> &'static str {
+        "sparse_block"
+    }
+
+    fn codec(&self) -> CodecId {
+        CodecId::SparseBlock
+    }
+
+    fn compress_into(&self, u: &[f32], q: &mut [f32], _rng: &mut DetRng) -> WireMsg {
+        debug_assert_eq!(u.len(), q.len());
+        let n = u.len();
+        q.fill(0.0);
+        let nblocks = n.div_ceil(self.block);
+        let total = self.code_count(n);
+        if total == 0 {
+            return WireMsg {
+                codec: CodecId::SparseBlock,
+                param: self.param(),
+                n,
+                scales: vec![],
+                codes: None,
+                raw: vec![],
+            };
+        }
+        let cb = self.code_bits();
+        let mut scales = Vec::with_capacity(nblocks);
+        let mut words = vec![0u64; (total * cb as usize).div_ceil(64)];
+        let mut wtr = pack::BitWriter::new(&mut words, cb);
+        let mut order: Vec<u32> = Vec::with_capacity(self.block.min(n));
+        for bi in 0..nblocks {
+            let bs = bi * self.block;
+            let len_b = (n - bs).min(self.block);
+            let cnt = self.kb.min(len_b);
+            order.clear();
+            order.extend(0..len_b as u32);
+            if cnt < len_b {
+                order.select_nth_unstable_by(cnt - 1, |&a, &b| {
+                    let (ma, mb) = (u[bs + a as usize].abs(), u[bs + b as usize].abs());
+                    mb.total_cmp(&ma).then(a.cmp(&b))
+                });
+                order.truncate(cnt);
+            }
+            order.sort_unstable();
+            let mut acc = 0.0f32;
+            for &pos in &order {
+                acc += u[bs + pos as usize].abs();
+            }
+            let scale = acc / cnt as f32;
+            scales.push(scale);
+            for &pos in &order {
+                let sign = (u[bs + pos as usize] >= 0.0) as u32;
+                wtr.push(pos << 1 | sign);
+                q[bs + pos as usize] = if sign == 1 { scale } else { -scale };
+            }
+        }
+        wtr.finish();
+        WireMsg {
+            codec: CodecId::SparseBlock,
+            param: self.param(),
+            n,
+            scales,
+            codes: Some(pack::Packed { bits: cb, n: total, words }),
+            raw: vec![],
+        }
+    }
+
+    fn decompress(&self, msg: &WireMsg, out: &mut [f32]) {
+        assert_eq!(out.len(), msg.n);
+        self.decode_range_impl::<false>(msg, 0, out);
+    }
+
+    fn decompress_range(&self, msg: &WireMsg, start: usize, out: &mut [f32]) {
+        self.decode_range_impl::<false>(msg, start, out);
+    }
+
+    fn bits_per_element(&self) -> f64 {
+        (self.kb as f64 * self.code_bits() as f64 + 32.0) / self.block as f64
+    }
+}
+
+/// Payload-content check `WireMsg::from_bytes` runs on a structurally
+/// consistent TopK frame: the decode scatters `raw[rank]` by position,
+/// so an accepted frame must carry exactly `k` set bits with a clean
+/// tail word (bitmap mode) or `k` strictly increasing in-bounds indices
+/// (index mode) — anything else would index past the value payload.
+pub(crate) fn topk_content_ok(msg: &WireMsg) -> bool {
+    let k = msg.param as usize;
+    let p = match &msg.codes {
+        Some(p) => p,
+        None => return k == 0,
+    };
+    if p.bits == 1 {
+        let mut ones = 0usize;
+        for &w in &p.words {
+            ones += w.count_ones() as usize;
+        }
+        let tail = msg.n & 63;
+        if tail > 0 {
+            match p.words.last() {
+                Some(&last) if last & !((1u64 << tail) - 1) != 0 => return false,
+                Some(_) => {}
+                None => return false,
+            }
+        }
+        ones == k
+    } else {
+        let mut ok = p.n == k;
+        let mut prev: i64 = -1;
+        pack::for_each_chunk(p, 0, p.n, |_, chunk| {
+            for &c in chunk {
+                if c as i64 <= prev || c as usize >= msg.n {
+                    ok = false;
+                }
+                prev = c as i64;
+            }
+        });
+        ok
+    }
+}
+
+/// Payload-content check for a structurally consistent SparseBlock
+/// frame: per block, positions strictly increasing and inside the
+/// block's (possibly ragged) length — the bound that keeps the range
+/// decode's scatter in `out`'s bounds on hostile frames.
+pub(crate) fn sparse_block_content_ok(msg: &WireMsg) -> bool {
+    let blk = (msg.param & 0xffff) as usize;
+    let kb = (msg.param >> 16) as usize;
+    let p = match &msg.codes {
+        Some(p) => p,
+        None => return msg.n == 0,
+    };
+    let blen = |b: usize| (msg.n - (b * blk).min(msg.n)).min(blk);
+    let mut ok = true;
+    let mut bi = 0usize;
+    let mut left = kb.min(blen(0));
+    let mut prev: i64 = -1;
+    pack::for_each_chunk(p, 0, p.n, |_, chunk| {
+        for &c in chunk {
+            if !ok {
+                return;
+            }
+            while left == 0 && (bi + 1) * blk < msg.n {
+                bi += 1;
+                left = kb.min(blen(bi));
+                prev = -1;
+            }
+            if left == 0 {
+                ok = false;
+                return;
+            }
+            let pos = (c >> 1) as i64;
+            if pos <= prev || pos >= blen(bi) as i64 {
+                ok = false;
+            }
+            prev = pos;
+            left -= 1;
+        }
+    });
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{decode_msg, decode_msg_range, seeded_rng};
+
+    fn wave(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32) * 0.61).sin() * (1.0 + (i % 13) as f32)).collect()
+    }
+
+    #[test]
+    fn topk_keeps_the_largest_and_zeroes_the_rest() {
+        let u = [1.0f32, -5.0, 0.25, 3.0, -0.5, 0.0];
+        let mut q = [0.0f32; 6];
+        let mut rng = seeded_rng(0, 0);
+        let msg = TopK::new(DENSITY_UNIT / 3).compress_into(&u, &mut q, &mut rng); // k = 2
+        assert_eq!(msg.param, 2);
+        assert_eq!(q, [0.0, -5.0, 0.0, 3.0, 0.0, 0.0]);
+        assert_eq!(msg.raw, vec![-5.0, 3.0], "raw values in ascending index order");
+        let mut out = [9.0f32; 6];
+        TopK::decoder().decompress(&msg, &mut out);
+        assert_eq!(out, q, "decode identity");
+    }
+
+    #[test]
+    fn topk_mode_choice_follows_the_size_rule() {
+        // n=64 (ib=6): k=2 → 12 bits < 64 → index mode (bits = 6).
+        let u = wave(64);
+        let mut q = vec![0.0; 64];
+        let mut rng = seeded_rng(1, 1);
+        let m = TopK::new(313).compress_into(&u, &mut q, &mut rng); // k = ceil(64*313/1e4) = 3
+        assert_eq!(m.codes.as_ref().unwrap().bits, 6, "sparse density → packed indices");
+        // k large → bitmap: k=32 → 32*6=192 ≥ 64.
+        let m2 = TopK::new(DENSITY_UNIT / 2).compress_into(&u, &mut q, &mut rng);
+        assert_eq!(m2.param, 32);
+        assert_eq!(m2.codes.as_ref().unwrap().bits, 1, "dense density → bitmap");
+        assert!(m.wire_bytes() < m2.wire_bytes());
+    }
+
+    #[test]
+    fn topk_degenerate_densities_are_legal() {
+        let u = wave(33);
+        let mut q = vec![0.0; 33];
+        let mut rng = seeded_rng(2, 2);
+        let m0 = TopK::new(0).compress_into(&u, &mut q, &mut rng);
+        assert_eq!((m0.param, m0.codes.is_none(), m0.raw.len()), (0, true, 0));
+        assert!(q.iter().all(|&x| x == 0.0));
+        let mut out = vec![1.0f32; 33];
+        TopK::decoder().decompress(&m0, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0), "k=0 decodes to all zeros");
+        let m1 = TopK::new(DENSITY_UNIT).compress_into(&u, &mut q, &mut rng);
+        assert_eq!(m1.param, 33);
+        assert_eq!(q, u, "k=len is the identity");
+        TopK::decoder().decompress(&m1, &mut out);
+        assert_eq!(out, u);
+    }
+
+    #[test]
+    fn topk_range_decode_matches_full_decode_both_modes() {
+        for density in [150u32, 5000] {
+            // 150bp on n=301 → k=5 (index mode); 5000bp → k=151 (bitmap)
+            let n = 301;
+            let u = wave(n);
+            let mut q = vec![0.0; n];
+            let mut rng = seeded_rng(3, 3);
+            let msg = TopK::new(density).compress_into(&u, &mut q, &mut rng);
+            let mut full = vec![0.0; n];
+            decode_msg(&msg, &mut full);
+            assert_eq!(full, q);
+            for &(start, len) in &[(0usize, n), (1, 5), (7, 100), (n - 1, 1), (64, 64), (10, 0)] {
+                let mut part = vec![7.0; len];
+                decode_msg_range(&msg, start, &mut part);
+                assert_eq!(part, full[start..start + len], "density={density} start={start}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_wire_roundtrip_and_content_rejection() {
+        let n = 90;
+        let u = wave(n);
+        let mut q = vec![0.0; n];
+        let mut rng = seeded_rng(4, 4);
+        for density in [0u32, 400, 5000, DENSITY_UNIT] {
+            let msg = TopK::new(density).compress_into(&u, &mut q, &mut rng);
+            let b = msg.to_bytes();
+            let back = WireMsg::from_bytes(&b).unwrap();
+            assert_eq!(back.to_bytes(), b, "roundtrip density={density}");
+            assert!(topk_content_ok(&back));
+        }
+        // Hostile content: an index payload with a duplicate index has
+        // consistent counts but must still be rejected.
+        let msg = TopK::new(400).compress_into(&u, &mut q, &mut rng); // index mode
+        let mut dup = msg.clone();
+        let p = dup.codes.as_mut().unwrap();
+        let first = code_at(p, 0);
+        let two = pack::pack(&[first, first, code_at(p, 2), code_at(p, 3)], p.bits);
+        p.words = two.words;
+        assert!(!topk_content_ok(&dup), "duplicate index must fail content validation");
+        assert!(WireMsg::from_bytes(&dup.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn sparse_block_keeps_per_block_topk_with_scale() {
+        // blocks of 4, keep 1: block 0 keeps |−8| → s=8, block 1 (ragged
+        // tail of 2) keeps |3| → s=3
+        let u = [1.0f32, -8.0, 2.0, 0.5, 3.0, -1.0];
+        let mut q = [0.0f32; 6];
+        let mut rng = seeded_rng(5, 5);
+        let sb = SparseBlock::new(4, 1);
+        let msg = sb.compress_into(&u, &mut q, &mut rng);
+        assert_eq!(msg.scales, vec![8.0, 3.0]);
+        assert_eq!(q, [0.0, -8.0, 0.0, 0.0, 3.0, 0.0]);
+        let mut out = [9.0f32; 6];
+        SparseBlock::from_param(msg.param).decompress(&msg, &mut out);
+        assert_eq!(out, q, "decode identity");
+        assert_eq!(sb.code_count(6), 2);
+        assert!(sparse_block_content_ok(&msg));
+    }
+
+    #[test]
+    fn sparse_block_range_decode_matches_full_decode() {
+        let n = 301;
+        let u = wave(n);
+        let mut q = vec![0.0; n];
+        let mut rng = seeded_rng(6, 6);
+        let sb = SparseBlock::new(7, 2); // ragged tail block
+        let msg = sb.compress_into(&u, &mut q, &mut rng);
+        let mut full = vec![0.0; n];
+        decode_msg(&msg, &mut full);
+        assert_eq!(full, q);
+        for &(start, len) in &[(0usize, n), (1, 5), (7, 100), (n - 1, 1), (64, 64)] {
+            let mut part = vec![7.0; len];
+            decode_msg_range(&msg, start, &mut part);
+            assert_eq!(part, full[start..start + len], "start={start}");
+        }
+        let b = msg.to_bytes();
+        assert_eq!(WireMsg::from_bytes(&b).unwrap().to_bytes(), b);
+    }
+
+    #[test]
+    fn sparse_block_full_block_keep_is_blockwise_sign_scale() {
+        // kb = block degenerates to the dense blockwise sign·mean shape
+        let u = [1.0f32, -2.0, 4.0, -1.0];
+        let mut q = [0.0f32; 4];
+        let mut rng = seeded_rng(7, 7);
+        let msg = SparseBlock::new(4, 4).compress_into(&u, &mut q, &mut rng);
+        assert_eq!(msg.scales, vec![2.0]);
+        assert_eq!(q, [2.0, -2.0, 2.0, -2.0]);
+    }
+
+    #[test]
+    fn sparse_block_hostile_positions_rejected() {
+        let u = wave(20);
+        let mut q = vec![0.0; 20];
+        let mut rng = seeded_rng(8, 8);
+        let sb = SparseBlock::new(8, 2);
+        let msg = sb.compress_into(&u, &mut q, &mut rng);
+        // Out-of-block position in the ragged tail (block 2 has len 4):
+        // rewrite the last code to position 7.
+        let mut bad = msg.clone();
+        let p = bad.codes.as_mut().unwrap();
+        let mut codes = pack::unpack(p);
+        *codes.last_mut().unwrap() = 7 << 1;
+        p.words = pack::pack(&codes, p.bits).words;
+        assert!(!sparse_block_content_ok(&bad), "tail position past the ragged length");
+        assert!(WireMsg::from_bytes(&bad.to_bytes()).is_err());
+        // Non-increasing positions within a block are rejected too.
+        let mut dup = msg.clone();
+        let p = dup.codes.as_mut().unwrap();
+        let mut codes = pack::unpack(p);
+        codes[1] = codes[0];
+        p.words = pack::pack(&codes, p.bits).words;
+        assert!(!sparse_block_content_ok(&dup));
+    }
+
+    #[test]
+    fn rank_and_probe_helpers() {
+        let p = pack::pack(&[1, 0, 1, 1, 0, 0, 1, 0], 1);
+        assert_eq!(rank1(&p, 0), 0);
+        assert_eq!(rank1(&p, 4), 3);
+        assert_eq!(rank1(&p, 8), 4);
+        let idx = pack::pack(&[2, 5, 9, 40], 6);
+        assert_eq!(code_at(&idx, 2), 9);
+        assert_eq!(lower_bound(&idx, 0), 0);
+        assert_eq!(lower_bound(&idx, 6), 2);
+        assert_eq!(lower_bound(&idx, 41), 4);
+    }
+}

@@ -22,8 +22,9 @@ use std::cell::Cell;
 use qadam::optim::{LrSchedule, QAdamEf};
 use qadam::ps::{LocalBus, ParameterServer, SimGradSource, ToServer, Worker};
 use qadam::quant::{
-    decode_msg_range_add, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd,
-    StochasticLogQuant, TernGrad, WQuant, WireMsg,
+    decode_msg_range_add, seeded_rng, Blockwise, CodecPolicy, Compressor, Identity, LogQuant,
+    PolicySpec, Qsgd, SparseBlock, StochasticLogQuant, TensorLayout, TernGrad, TopK, WQuant,
+    WireMsg,
 };
 use qadam::sim::StochasticProblem;
 
@@ -134,6 +135,106 @@ fn decode_paths_allocate_nothing() {
         assert_eq!(a, 0, "{name}: decompress_range must not allocate");
         let (a, _, ()) = measure(|| decode_msg_range_add(&msg, 100, &mut out[..1000]));
         assert_eq!(a, 0, "{name}: decode_msg_range_add must not allocate");
+    }
+}
+
+/// The sparse decode hot paths are allocation-free too — both TopK
+/// encodings (the bitmap rank walk and the index binary search) and the
+/// SparseBlock block walk, on the plain, ranged and fused-accumulate
+/// entries. The range decodes deliberately slice mid-payload so the
+/// rank/binary-search seeding runs, not just the trivial prefix.
+#[test]
+fn sparse_decode_paths_allocate_nothing() {
+    let n = 4096;
+    let u = randv(n, 6);
+    let mut q = vec![0.0f32; n];
+    let cases: Vec<(&str, Box<dyn Compressor>)> = vec![
+        ("topk-index", Box::new(TopK::new(400))),
+        ("topk-bitmap", Box::new(TopK::new(5000))),
+        ("sparse-block", Box::new(SparseBlock::new(512, 16))),
+    ];
+    let mut out = vec![0.0f32; n];
+    for (name, comp) in &cases {
+        let mut rng = seeded_rng(5, 5);
+        let msg: WireMsg = comp.compress_into(&u, &mut q, &mut rng);
+        let (a, _, ()) = measure(|| comp.decompress(&msg, &mut out));
+        assert_eq!(a, 0, "{name}: decompress must not allocate");
+        let (a, _, ()) = measure(|| comp.decompress_range(&msg, 100, &mut out[..1000]));
+        assert_eq!(a, 0, "{name}: decompress_range must not allocate");
+        let (a, _, ()) = measure(|| decode_msg_range_add(&msg, 100, &mut out[..1000]));
+        assert_eq!(a, 0, "{name}: decode_msg_range_add must not allocate");
+    }
+}
+
+/// Sparse compression allocates exactly its wire payload plus the one
+/// selection scratch — TopK: the index scratch, the raw value Vec and
+/// the packed positions (3); an empty keep set allocates nothing;
+/// SparseBlock: the scales Vec, the packed codes and the per-block
+/// order scratch (3). Never an O(4n) float copy.
+#[test]
+fn sparse_compress_allocation_is_pinned() {
+    let n = 4096;
+    let u = randv(n, 4);
+    let mut q = vec![0.0f32; n];
+    let cases: Vec<(&str, Box<dyn Compressor>, u64)> = vec![
+        ("topk-index", Box::new(TopK::new(400)), 3),
+        ("topk-bitmap", Box::new(TopK::new(5000)), 3),
+        ("topk-empty", Box::new(TopK::new(0)), 0),
+        ("sparse-block", Box::new(SparseBlock::new(512, 16)), 3),
+    ];
+    for (name, comp, want) in &cases {
+        let mut rng = seeded_rng(3, 3);
+        let _warm = comp.compress_into(&u, &mut q, &mut rng);
+        let (allocs, bytes, _msg) = measure(|| comp.compress_into(&u, &mut q, &mut rng));
+        assert_eq!(allocs, *want, "{name}: selection scratch + payload Vecs only");
+        // the u32 selection scratch is the biggest piece; everything
+        // stays well under two dense float copies of the input
+        assert!(bytes < (8 * n) as u64, "{name}: allocated {bytes} bytes for n={n}");
+    }
+}
+
+/// Steady-state rounds under a mixed **sparse** per-layer policy (topk
+/// + sblock + dense tensors, on both directions) have a flat allocation
+/// profile: fixed densities mean fixed payload shapes, so after warmup
+/// every round performs the identical allocation count and byte total —
+/// the parts-frame uplink and the sparse decode paths introduce nothing
+/// that grows per round.
+#[test]
+fn steady_state_sparse_policy_round_allocation_is_flat() {
+    let dim = 4096;
+    let nw = 2usize;
+    let spec = PolicySpec::parse("per-layer:b0=topk@0.05,b1=sblock@64x4,*=2").unwrap();
+    let layout = TensorLayout::uniform(dim, 4);
+    let mut ps = ParameterServer::new(randv(dim, 22), None);
+    ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 50);
+    ps.set_downlink_policy(CodecPolicy::new(spec.clone(), layout.clone(), 2).unwrap());
+    let mut workers: Vec<Worker> = (0..nw)
+        .map(|i| {
+            let src = SimGradSource { problem: StochasticProblem::new(dim, 0.1, 7) };
+            let opt = QAdamEf::paper_default(dim, 2, LrSchedule::Const { alpha: 0.01 })
+                .with_policy(CodecPolicy::new(spec.clone(), layout.clone(), 2).unwrap());
+            Worker::new(i as u32, Box::new(opt), Box::new(src), 42)
+        })
+        .collect();
+    let bus = LocalBus;
+    let mut run_round = |ps: &mut ParameterServer, workers: &mut [Worker]| -> (u64, u64, u64, u64) {
+        let (ba, bb, tw) = measure(|| ps.broadcast(nw).0);
+        let (ha, hb, replies) = measure(|| bus.round(&tw, workers).unwrap());
+        let (aa, ab, res) = measure(|| ps.apply(&replies));
+        res.unwrap();
+        (ba + aa, bb + ab, ha, hb)
+    };
+    for _ in 0..3 {
+        run_round(&mut ps, &mut workers);
+    }
+    let profile: Vec<(u64, u64, u64, u64)> =
+        (0..4).map(|_| run_round(&mut ps, &mut workers)).collect();
+    for (i, p) in profile.iter().enumerate().skip(1) {
+        assert_eq!(
+            p, &profile[0],
+            "sparse-policy round {} changed the allocation profile",
+            i + 1
+        );
     }
 }
 

@@ -15,8 +15,8 @@
 
 use qadam::quant::pack::{pack, unpack, unpack_range_into};
 use qadam::quant::{
-    decode_msg, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd, TernGrad, WQuant,
-    WireMsg,
+    decode_msg, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd, SparseBlock,
+    TernGrad, TopK, WQuant, WireMsg,
 };
 
 #[test]
@@ -55,6 +55,11 @@ fn sample_frames() -> Vec<(String, Vec<u8>)> {
         ("wquant", Box::new(WQuant::new(6))),
         ("qsgd", Box::new(Qsgd::new(4))),
         ("identity", Box::new(Identity)),
+        // both TopK encodings: low density packs an index list, high
+        // density a bitmap (n = 150 puts the crossover near d = 1/8)
+        ("topk-index", Box::new(TopK::new(400))),
+        ("topk-bitmap", Box::new(TopK::new(5000))),
+        ("sparse-block", Box::new(SparseBlock::new(16, 3))),
     ];
     comps
         .iter()
@@ -154,4 +159,75 @@ fn inconsistent_layout_counts_are_rejected() {
     let mut b = good.clone();
     b[0] = 99; // unknown codec id
     assert!(WireMsg::from_bytes(&b).is_err(), "unknown codec must be rejected");
+}
+
+/// Hostile *sparse* content: frames whose layout counts are fine but
+/// whose payload lies — duplicate/unsorted/out-of-range indices,
+/// bitmap popcount disagreeing with the header `k`, per-block
+/// positions out of the block — must be rejected at the wire boundary
+/// (the range-decode kernels binary-search sorted indices and trust
+/// the rank arithmetic; unsorted content would make them scatter out
+/// of the accepted window).
+#[test]
+fn hostile_sparse_frames_are_rejected_without_panic() {
+    let n = 150usize;
+    let mut rng = seeded_rng(13, 13);
+    let u: Vec<f32> = (0..n).map(|_| 0.2 * (rng.gen_f32() - 0.5)).collect();
+    let mut q = vec![0.0f32; n];
+    let set_u32 = |b: &mut Vec<u8>, off: usize, v: u32| {
+        b[off..off + 4].copy_from_slice(&v.to_le_bytes());
+    };
+
+    // ---- TopK, index mode (k=6 sorted 8-bit indices at offset 22) ----
+    let good = TopK::new(400).compress_into(&u, &mut q, &mut seeded_rng(1, 1)).to_bytes();
+    assert!(WireMsg::from_bytes(&good).is_ok(), "baseline index frame parses");
+    let mut b = good.clone();
+    b[22] = b[23]; // duplicate index
+    assert!(WireMsg::from_bytes(&b).is_err(), "duplicate topk index must be rejected");
+    let mut b = good.clone();
+    b[22] = 0xFF; // 255 >= n, and >= the next index: unsorted AND out of range
+    assert!(WireMsg::from_bytes(&b).is_err(), "out-of-range topk index must be rejected");
+    let mut b = good.clone();
+    b.swap(22, 23); // still unique, no longer ascending
+    assert!(WireMsg::from_bytes(&b).is_err(), "unsorted topk indices must be rejected");
+    // header k disagreeing with the shipped value/position counts: the
+    // parser re-derives both payload sizes from (codec, param, n), so
+    // the frame's actual length no longer fits
+    let mut b = good.clone();
+    set_u32(&mut b, 2, 7);
+    assert!(WireMsg::from_bytes(&b).is_err(), "k != payload count must be rejected");
+    let mut b = good.clone();
+    set_u32(&mut b, 2, n as u32 + 1);
+    assert!(WireMsg::from_bytes(&b).is_err(), "k > n must be rejected");
+
+    // ---- TopK, bitmap mode (k=75 over 3 bitmap words) ----
+    let good = TopK::new(5000).compress_into(&u, &mut q, &mut seeded_rng(1, 1)).to_bytes();
+    assert!(WireMsg::from_bytes(&good).is_ok(), "baseline bitmap frame parses");
+    let mut b = good.clone();
+    for byte in b.iter_mut().skip(22).take(24) {
+        *byte = 0xFF; // popcount != k, and the tail bits past n are set
+    }
+    assert!(WireMsg::from_bytes(&b).is_err(), "lying bitmap must be rejected");
+
+    // ---- SparseBlock 3-of-16 (10 scales, then 30 5-bit codes) ----
+    let good = SparseBlock::new(16, 3).compress_into(&u, &mut q, &mut seeded_rng(1, 1)).to_bytes();
+    assert!(WireMsg::from_bytes(&good).is_ok(), "baseline sparse-block frame parses");
+    let words_off = 22 + 10 * 4;
+    let mut b = good.clone();
+    for byte in b.iter_mut().skip(words_off).take(24) {
+        *byte = 0xFF; // every position = 15: never strictly increasing
+    }
+    assert!(
+        WireMsg::from_bytes(&b).is_err(),
+        "repeated in-block positions must be rejected"
+    );
+    let mut b = good.clone();
+    set_u32(&mut b, 2, 16 | (17 << 16)); // kb > block
+    assert!(WireMsg::from_bytes(&b).is_err(), "kb > block must be rejected");
+    let mut b = good.clone();
+    set_u32(&mut b, 2, 17 << 16); // block = 0
+    assert!(WireMsg::from_bytes(&b).is_err(), "block = 0 must be rejected");
+
+    // And the generic sweeps cover these codecs too (sample_frames now
+    // includes them) — this test is the targeted content layer.
 }

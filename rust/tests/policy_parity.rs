@@ -26,6 +26,17 @@ fn adaptive_spec() -> PolicySpec {
     PolicySpec::Adaptive { lo: 0, hi: 4 }
 }
 
+/// Mixed sparse per-layer spec over the uniform `b0,b1,b2` layout: a
+/// global top-k tensor, a blockwise top-k tensor and a dense LogQuant
+/// tensor in one frame stream.
+fn mixed_sparse_spec() -> PolicySpec {
+    PolicySpec::parse("per-layer:b0=topk@0.05,b1=sblock@16x2,b2=2").unwrap()
+}
+
+fn adaptive_topk_spec() -> PolicySpec {
+    PolicySpec::parse("adaptive-topk:0.01..0.25").unwrap()
+}
+
 fn mk_policy(spec: PolicySpec) -> CodecPolicy {
     CodecPolicy::new(spec, TensorLayout::uniform(DIM, TENSORS), 2).unwrap()
 }
@@ -41,12 +52,16 @@ fn mk_worker(id: u32, spec: Option<PolicySpec>) -> Worker {
     Worker::new(id, Box::new(opt), Box::new(src), 1)
 }
 
-fn mk_ps_with_policy() -> ParameterServer {
+fn mk_ps_with(spec: PolicySpec) -> ParameterServer {
     let x0: Vec<f32> = (0..DIM).map(|i| 0.3 + 0.01 * (i as f32).sin()).collect();
     let mut ps = ParameterServer::new(x0, Some(4));
     ps.enable_delta_downlink(Box::new(LogQuant::new(2)), 5);
-    ps.set_downlink_policy(mk_policy(adaptive_spec()));
+    ps.set_downlink_policy(mk_policy(spec));
     ps
+}
+
+fn mk_ps_with_policy() -> ParameterServer {
+    mk_ps_with(adaptive_spec())
 }
 
 fn reply_bytes(replies: &[ToServer]) -> Vec<Vec<u8>> {
@@ -171,6 +186,195 @@ fn adaptive_run_bit_identical_over_tcp() {
     srv.shutdown().unwrap();
     assert_eq!(h0.join().unwrap(), rounds);
     assert_eq!(h1.join().unwrap(), rounds);
+}
+
+/// Sparse specs get the same cross-engine guarantee as the dense
+/// adaptive policy: a fixed-seed run with sparse codecs on **both**
+/// directions — mixed `topk`/`sblock`/dense per-layer rules, and the
+/// adaptive-topk density controller — is bit-identical between the
+/// sequential and threaded engines, down to the frames, the chosen
+/// densities and the byte accounting.
+#[test]
+fn sparse_policy_run_bit_identical_sequential_vs_threaded() {
+    let nw = 4usize;
+    for spec in [mixed_sparse_spec(), adaptive_topk_spec()] {
+        let mut ps_seq = mk_ps_with(spec.clone());
+        let mut ws_seq: Vec<Worker> =
+            (0..nw as u32).map(|i| mk_worker(i, Some(spec.clone()))).collect();
+        let seq = LocalBus::default();
+        let mut ps_thr = mk_ps_with(spec.clone());
+        let mut ws_thr: Vec<Worker> =
+            (0..nw as u32).map(|i| mk_worker(i, Some(spec.clone()))).collect();
+        let thr = ThreadedBus::new();
+        let label = spec.label();
+        for t in 1u64..=16 {
+            let (b_seq, _) = ps_seq.broadcast(nw);
+            let (b_thr, _) = ps_thr.broadcast(nw);
+            assert_eq!(
+                b_seq.to_bytes(),
+                b_thr.to_bytes(),
+                "{label}: broadcast diverged at round {t}"
+            );
+            let r_seq = seq.round(&b_seq, &mut ws_seq).unwrap();
+            let r_thr = thr.round(&b_thr, &mut ws_thr).unwrap();
+            assert_eq!(
+                reply_bytes(&r_seq),
+                reply_bytes(&r_thr),
+                "{label}: uplink frames diverged at round {t}"
+            );
+            ps_seq.apply(&r_seq).unwrap();
+            ps_thr.apply(&r_thr).unwrap();
+            assert_eq!(ps_seq.master(), ps_thr.master(), "{label}: masters diverged at round {t}");
+            assert_eq!(
+                ps_seq.downlink_state().unwrap().0,
+                ps_thr.downlink_state().unwrap().0,
+                "{label}: replicas diverged at round {t}"
+            );
+            for (a, b) in ws_seq.iter().zip(&ws_thr) {
+                assert_eq!(
+                    a.chosen_bits().expect("sparse policy reports levels"),
+                    b.chosen_bits().unwrap(),
+                    "{label}: worker {} levels diverged at round {t}",
+                    a.id
+                );
+            }
+            assert_eq!(
+                ps_seq.downlink_chosen_bits().unwrap(),
+                ps_thr.downlink_chosen_bits().unwrap(),
+                "{label}: downlink levels diverged at round {t}"
+            );
+        }
+        assert_eq!(ps_seq.stats, ps_thr.stats, "{label}: CommStats diverged");
+    }
+    // The per-layer rules bind as spelled: topk@0.05 = 500/10000 kept
+    // on b0, kb=2 on b1, dense level 2 on b2.
+    let w = mk_worker(0, Some(mixed_sparse_spec()));
+    assert_eq!(w.chosen_bits().unwrap(), [500, 2, 2]);
+}
+
+/// The TCP engine replays a fixed-seed **sparse-policy** trajectory
+/// bit-for-bit against the in-process reference — mixed per-layer
+/// topk/sblock/dense rules on both directions.
+#[test]
+fn sparse_policy_run_bit_identical_over_tcp() {
+    let rounds = 10u64;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+
+    let spawn_worker = |addr: String, id: u32| {
+        std::thread::spawn(move || {
+            let mut w = mk_worker(id, Some(mixed_sparse_spec()));
+            for _ in 0..100 {
+                match tcp_worker_loop(&addr, &mut w) {
+                    Ok(r) => return r,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            }
+            panic!("worker {id} never connected");
+        })
+    };
+    let h0 = spawn_worker(addr.clone(), 0);
+    let h1 = spawn_worker(addr.clone(), 1);
+
+    let mut srv = TcpServer::bind_and_accept(&addr, 2).unwrap();
+    let mut ps_tcp = mk_ps_with(mixed_sparse_spec());
+    let mut ps_ref = mk_ps_with(mixed_sparse_spec());
+    let mut ws_ref: Vec<Worker> =
+        (0..2).map(|i| mk_worker(i, Some(mixed_sparse_spec()))).collect();
+    let bus = LocalBus::default();
+    for t in 1..=rounds {
+        let replies = {
+            let (b, _) = ps_tcp.broadcast(2);
+            srv.round(&b).unwrap()
+        };
+        let r_ref = {
+            let (b, _) = ps_ref.broadcast(2);
+            bus.round(&b, &mut ws_ref).unwrap()
+        };
+        assert_eq!(
+            reply_bytes(&replies),
+            reply_bytes(&r_ref),
+            "tcp sparse uplink frames diverged at round {t}"
+        );
+        ps_tcp.apply(&replies).unwrap();
+        ps_ref.apply(&r_ref).unwrap();
+        assert_eq!(ps_tcp.master(), ps_ref.master(), "tcp sparse master diverged at round {t}");
+        assert_eq!(
+            ps_tcp.downlink_state().unwrap().0,
+            ps_ref.downlink_state().unwrap().0,
+            "tcp sparse replica diverged at round {t}"
+        );
+    }
+    assert_eq!(ps_tcp.stats, ps_ref.stats, "CommStats diverged over TCP");
+    srv.shutdown().unwrap();
+    assert_eq!(h0.join().unwrap(), rounds);
+    assert_eq!(h1.join().unwrap(), rounds);
+}
+
+/// Chaos crash/rejoin under the adaptive-topk density controller: the
+/// forced rejoin resync re-anchors the returning worker, the
+/// controller's per-tensor densities stay inside their band and agree
+/// across engines, and the whole chaotic run is bit-reproducible.
+#[test]
+fn sparse_chaos_crash_rejoin_parity() {
+    let nw = 3usize;
+    let plan = ChaosPlan::parse("seed=5,crash=1@4..8").unwrap();
+    let mk_stack = |inner: Box<dyn Transport>| -> (ParameterServer, Vec<Worker>, ChaosTransport) {
+        let ps = mk_ps_with(adaptive_topk_spec());
+        let ws: Vec<Worker> =
+            (0..nw as u32).map(|i| mk_worker(i, Some(adaptive_topk_spec()))).collect();
+        let bus = ChaosTransport::new(inner, plan.clone()).with_policy(StragglerPolicy::Drop, 1);
+        (ps, ws, bus)
+    };
+    let (mut ps_a, mut ws_a, mut bus_a) = mk_stack(Box::new(LocalBus::default()));
+    let (mut ps_b, mut ws_b, mut bus_b) = mk_stack(Box::new(ThreadedBus::new()));
+    for t in 1u64..=12 {
+        let m_a = bus_a.membership(t, nw);
+        let m_b = bus_b.membership(t, nw);
+        assert_eq!(m_a, m_b, "membership diverged at round {t}");
+        if m_a.rejoined {
+            ps_a.force_resync();
+            ps_b.force_resync();
+        }
+        let r_a = {
+            let (b, _) = ps_a.broadcast(m_a.present);
+            if t == 8 {
+                assert!(matches!(b, ToWorker::Weights { .. }), "rejoin round must resync");
+            }
+            bus_a.round(&b, &mut ws_a).unwrap()
+        };
+        let r_b = {
+            let (b, _) = ps_b.broadcast(m_b.present);
+            bus_b.round(&b, &mut ws_b).unwrap()
+        };
+        assert_eq!(reply_bytes(&r_a), reply_bytes(&r_b), "gather diverged at round {t}");
+        let p_a = ps_a.apply(&r_a).unwrap();
+        let p_b = ps_b.apply(&r_b).unwrap();
+        assert_eq!(p_a, p_b, "participation diverged at round {t}");
+        assert_eq!(ps_a.master(), ps_b.master(), "masters diverged at round {t}");
+        let (replica, _) = ps_a.downlink_state().unwrap();
+        assert_eq!(replica, ps_b.downlink_state().unwrap().0, "replicas diverged at round {t}");
+        // chosen densities agree and never leave the 0.01..0.25 band
+        for (a, b) in ws_a.iter().zip(&ws_b) {
+            let d_a = a.chosen_bits().expect("adaptive-topk reports densities");
+            assert_eq!(d_a, b.chosen_bits().unwrap(), "worker {} densities, round {t}", a.id);
+            assert!(
+                d_a.iter().all(|&d| (100..=2500).contains(&d)),
+                "worker {} densities left the band at round {t}: {d_a:?}",
+                a.id
+            );
+        }
+        for w in &ws_a {
+            if w.id == 1 && (4..8).contains(&t) {
+                continue;
+            }
+            assert_eq!(w.weights(), replica, "worker {} != replica at round {t}", w.id);
+        }
+    }
+    assert_eq!(bus_a.stats, bus_b.stats, "fault patterns diverged");
+    assert_eq!(ps_a.stats, ps_b.stats);
+    assert!(ps_a.stats.resyncs >= 2, "round 1 + the forced rejoin resync");
 }
 
 /// Acceptance: a fixed-seed adaptive run survives a chaos crash/rejoin

@@ -211,6 +211,111 @@ fn n_shard_fixed_seed_bit_parity_across_all_three_transports() {
     }
 }
 
+/// A 2-shard fixed-seed run under a **mixed sparse** per-layer policy —
+/// `topk` on one tensor, `sblock` on another, dense LogQuant on the
+/// rest, on both directions — is bit-reproducible across LocalBus,
+/// ThreadedBus and the TCP shard group: masters, per-shard CommStats,
+/// downlink replicas and the chosen per-tensor densities all match
+/// round by round. (The plan snaps to tensor boundaries exactly as the
+/// dense adaptive policy's does, so every shard sees whole tensors.)
+#[test]
+fn sparse_policy_2_shard_bit_parity_across_all_three_transports() {
+    let dim = 96;
+    let nw = 2usize;
+    let rounds = 10u64;
+    let spec = PolicySpec::parse("per-layer:b0=topk@0.05,b2=sblock@8x2,*=2").unwrap();
+    let layout = TensorLayout::uniform(dim, 4);
+    let plan = ShardPlan::build(dim, 2, &spec, &layout).unwrap();
+    assert_eq!(plan.count(), 2);
+    let mk_srv = || {
+        let mut srv = ShardedServer::new(x0(dim), None, plan.clone(), BLOCK, 1);
+        srv.enable_delta_downlink(Some(2), 5);
+        srv.set_downlink_policy(&spec, &layout, 2).unwrap();
+        srv
+    };
+    let mk_ws = |plan: &ShardPlan| -> Vec<Worker> {
+        (0..nw as u32)
+            .map(|i| {
+                let mut w = mk_worker(i, dim, Some((spec.clone(), layout.clone())));
+                w.set_shards(plan.clone());
+                w
+            })
+            .collect()
+    };
+
+    let ephemeral = || {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        addr
+    };
+    let addr0 = ephemeral();
+    let addr1 = ephemeral();
+    let handles: Vec<_> = (0..nw as u32)
+        .map(|id| {
+            let addrs = vec![addr0.clone(), addr1.clone()];
+            let plan = plan.clone();
+            let spec = spec.clone();
+            let layout = layout.clone();
+            std::thread::spawn(move || {
+                let mut w = mk_worker(id, dim, Some((spec, layout)));
+                w.set_shards(plan);
+                tcp_sharded_worker_loop(&addrs, &mut w).unwrap()
+            })
+        })
+        .collect();
+    let srv0 = TcpServer::bind_and_accept(&addr0, nw).unwrap();
+    let srv1 = TcpServer::bind_and_accept(&addr1, nw).unwrap();
+    let mut group = TcpShardGroup::new(vec![srv0, srv1]);
+
+    let mut ps_local = mk_srv();
+    let mut ws_local = mk_ws(&plan);
+    let mut local: Box<dyn Transport> = Box::new(LocalBus::default());
+    let mut ps_thr = mk_srv();
+    let mut ws_thr = mk_ws(&plan);
+    let mut thr: Box<dyn Transport> = Box::new(ThreadedBus::new());
+    let mut ps_tcp = mk_srv();
+
+    // the rules bind as spelled: 500/10000 kept on b0, kb=2 on b2,
+    // dense level 2 elsewhere
+    assert_eq!(ws_local[0].chosen_bits().unwrap(), [500, 2, 2, 2]);
+
+    for t in 1..=rounds {
+        let (frames_l, part_l) = drive_round(&mut ps_local, local.as_mut(), &mut ws_local);
+        let (frames_t, part_t) = drive_round(&mut ps_thr, thr.as_mut(), &mut ws_thr);
+        let frames_tcp = ps_tcp.broadcast(nw);
+        let lanes_tcp = group.round_sharded(&frames_tcp).unwrap();
+        let part_tcp = ps_tcp.apply(&lanes_tcp).unwrap();
+
+        let bytes = |fs: &[ToWorker]| fs.iter().map(|f| f.to_bytes()).collect::<Vec<_>>();
+        assert_eq!(bytes(&frames_l), bytes(&frames_t), "t={t}: frames local vs threaded");
+        assert_eq!(bytes(&frames_l), bytes(&frames_tcp), "t={t}: frames local vs tcp");
+        assert_eq!(part_l, part_t, "t={t}");
+        assert_eq!(part_l, part_tcp, "t={t}");
+        assert_eq!(ps_local.master(), ps_thr.master(), "t={t}");
+        assert_eq!(ps_local.master(), ps_tcp.master(), "t={t}");
+        for s in 0..2 {
+            assert_eq!(ps_local.shard_stats(s), ps_thr.shard_stats(s), "t={t} shard {s}");
+            assert_eq!(ps_local.shard_stats(s), ps_tcp.shard_stats(s), "t={t} shard {s}");
+        }
+        assert_eq!(
+            ps_local.downlink_chosen_bits(),
+            ps_tcp.downlink_chosen_bits(),
+            "t={t}: downlink policy bits"
+        );
+        let rl = ps_local.downlink_states().unwrap();
+        let rt = ps_tcp.downlink_states().unwrap();
+        for s in 0..2 {
+            assert_eq!(rl[s].0, rt[s].0, "t={t} shard {s}: replica");
+        }
+        assert_eq!(ws_local[0].chosen_bits(), ws_thr[0].chosen_bits(), "t={t}");
+    }
+    group.shutdown().unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), rounds);
+    }
+}
+
 /// Acceptance: chaos crash/rejoin on a 2-shard fleet — the rejoin
 /// forces a full-weights resync on *every* shard (the worker missed
 /// frames on every lane), replicas re-anchor, and the whole chaotic

@@ -1,0 +1,277 @@
+//! Conservation properties of the sparse codecs composed with error
+//! feedback (the tier-1 sparse wall, DESIGN.md §Sparse codecs & EF
+//! composition).
+//!
+//! The load-bearing claim: sparsification drops coordinates, and every
+//! dropped coordinate's mass lands **bit-exactly** in the EF residual —
+//! `decoded + residual == input`, per coordinate, as f32 bit patterns.
+//! For [`TopK`] the kept coordinates ship verbatim, so the identity is
+//! exact everywhere; for [`SparseBlock`] the kept coordinates are
+//! sign·scale approximations (checked within the f32-subtraction
+//! tolerance) while the dropped ones stay bit-exact.
+
+use qadam::quant::{
+    decode_msg_range_add, pack, seeded_rng, Compressor, ErrorFeedback, SparseBlock, TopK,
+    WireMsg,
+};
+
+/// Deterministic ragged-value vector mixing signs, magnitudes spanning
+/// many decades, exact zeros, subnormals and f32 extremes.
+fn hostile_values(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = seeded_rng(seed, 42);
+    (0..n)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE / 2.0, // subnormal
+            3 => f32::MAX * (rng.gen_f32() - 0.5) * 1e-3,
+            4 => -(rng.gen_f32() + 0.5) * 1e-30,
+            _ => (rng.gen_f32() * 2.0 - 1.0) * 10f32.powi((i % 9) as i32 - 4),
+        })
+        .collect()
+}
+
+const RAGGED_LENGTHS: &[usize] = &[1, 2, 3, 7, 31, 64, 65, 129, 257, 1000];
+const DENSITIES_BP: &[u32] = &[1, 100, 1250, 2500, 5000, 9999, 10000];
+
+#[test]
+fn topk_conservation_is_bit_exact_per_coordinate() {
+    for &n in RAGGED_LENGTHS {
+        for &bp in DENSITIES_BP {
+            let u = hostile_values(n, n as u64 ^ u64::from(bp));
+            let comp = TopK::new(bp);
+            let mut q = vec![0.0f32; n];
+            let msg = comp.compress_into(&u, &mut q, &mut seeded_rng(1, 1));
+            for (i, (&ui, &qi)) in u.iter().zip(&q).enumerate() {
+                // Every coordinate is either kept — shipped verbatim,
+                // residual exactly +0.0 — or dropped to 0.0 with the
+                // residual reproducing the input bit for bit. Both
+                // cases make `decoded + residual == input` exact.
+                let kept_exact = qi.to_bits() == ui.to_bits();
+                let dropped_exact = qi == 0.0 && (ui - qi).to_bits() == ui.to_bits();
+                assert!(
+                    kept_exact || dropped_exact,
+                    "n={n} bp={bp} i={i}: u={ui:?} decoded to q={qi:?} — conservation broken"
+                );
+            }
+            // no more nonzero decoded coords than the header claims
+            assert!(
+                q.iter().filter(|&&v| v != 0.0).count() <= msg.param as usize,
+                "n={n} bp={bp}: more shipped coords than k"
+            );
+            // the decoded message reproduces q bit-for-bit
+            let mut out = vec![0.0f32; n];
+            comp.decompress(&msg, &mut out);
+            for (i, (&qi, &oi)) in q.iter().zip(&out).enumerate() {
+                assert_eq!(qi.to_bits(), oi.to_bits(), "n={n} bp={bp} i={i}: decode mismatch");
+            }
+        }
+    }
+}
+
+#[test]
+fn topk_indices_are_sorted_and_duplicate_free() {
+    for &n in RAGGED_LENGTHS {
+        for &bp in &[1u32, 400, 2500, 9999] {
+            let u = hostile_values(n, 7 ^ n as u64);
+            let comp = TopK::new(bp);
+            let mut q = vec![0.0f32; n];
+            let msg = comp.compress_into(&u, &mut q, &mut seeded_rng(2, 2));
+            let k = msg.param as usize;
+            let Some(p) = msg.codes.as_ref() else {
+                assert_eq!(k, 0);
+                continue;
+            };
+            let codes = pack::unpack(p);
+            if p.bits == 1 {
+                // bitmap: n lanes, popcount == k
+                assert_eq!(codes.len(), n, "bitmap must cover every coordinate");
+                assert_eq!(
+                    codes.iter().filter(|&&c| c == 1).count(),
+                    k,
+                    "n={n} bp={bp}: bitmap popcount != k"
+                );
+            } else {
+                // index list: k entries, strictly increasing => sorted
+                // AND duplicate-free in one check
+                assert_eq!(codes.len(), k);
+                for w in codes.windows(2) {
+                    assert!(w[0] < w[1], "n={n} bp={bp}: indices not strictly increasing");
+                }
+                assert!(codes.iter().all(|&c| (c as usize) < n));
+            }
+        }
+    }
+}
+
+#[test]
+fn topk_degenerate_keep_counts_are_legal() {
+    // k == len: density 1.0 keeps everything — the identity codec with
+    // a bitmap, bit-exact round trip.
+    let u = hostile_values(65, 9);
+    let comp = TopK::new(10_000);
+    let mut q = vec![0.0f32; 65];
+    let msg = comp.compress_into(&u, &mut q, &mut seeded_rng(3, 3));
+    assert_eq!(msg.param as usize, 65);
+    for (&ui, &qi) in u.iter().zip(&q) {
+        assert_eq!(ui.to_bits(), qi.to_bits());
+    }
+    let bytes = msg.to_bytes();
+    let rt = WireMsg::from_bytes(&bytes).expect("k = n frame round-trips");
+    assert_eq!(rt.to_bytes(), bytes);
+
+    // k == 0: never emitted by the encoder (density is floored at
+    // 1/10000 and k = ceil) but legal on the wire; decodes to zeros.
+    let mut zero = msg.clone();
+    zero.param = 0;
+    zero.raw.clear();
+    zero.codes = None;
+    let bytes = zero.to_bytes();
+    let rt = WireMsg::from_bytes(&bytes).expect("k = 0 frame is legal");
+    let mut out = vec![1.0f32; 65];
+    TopK::decoder().decompress(&rt, &mut out);
+    assert!(out.iter().all(|&v| v == 0.0), "k = 0 decodes to all-zero");
+
+    // k = 1 on n = 1 (the smallest ragged edge)
+    let comp = TopK::new(1);
+    let mut q1 = [0.0f32];
+    let msg = comp.compress_into(&[-3.5], &mut q1, &mut seeded_rng(4, 4));
+    assert_eq!(q1[0], -3.5);
+    assert_eq!(msg.param, 1);
+}
+
+#[test]
+fn sparse_block_dropped_coordinates_conserve_bit_exactly() {
+    for &(block, kb) in &[(2usize, 1usize), (7, 2), (32, 4), (64, 64)] {
+        for &n in RAGGED_LENGTHS {
+            let u = hostile_values(n, (block * 1000 + kb) as u64 ^ n as u64);
+            let comp = SparseBlock::new(block, kb);
+            let mut q = vec![0.0f32; n];
+            let msg = comp.compress_into(&u, &mut q, &mut seeded_rng(5, 5));
+            for (i, (&ui, &qi)) in u.iter().zip(&q).enumerate() {
+                if qi == 0.0 && qi.to_bits() != ui.to_bits() {
+                    assert_eq!(
+                        (ui - qi).to_bits(),
+                        ui.to_bits(),
+                        "block={block} kb={kb} n={n} i={i}: dropped coord must conserve"
+                    );
+                } else if qi != 0.0 {
+                    // kept: sign·scale, conservation up to the two f32
+                    // roundings of `e = u - q` and `q + e` (each within
+                    // an ulp of a value no larger than |u| + |q|)
+                    let e = ui - qi;
+                    let back = qi + e;
+                    assert!(
+                        (back - ui).abs() <= (ui.abs() + qi.abs()) * f32::EPSILON * 2.0,
+                        "block={block} kb={kb} n={n} i={i}: kept coord residual off"
+                    );
+                }
+            }
+            // full decode == q bit-for-bit, and range decode agrees
+            let mut out = vec![0.0f32; n];
+            comp.decompress(&msg, &mut out);
+            for (&qi, &oi) in q.iter().zip(&out) {
+                assert_eq!(qi.to_bits(), oi.to_bits());
+            }
+            if n > 2 {
+                let mut acc = vec![1.0f32; n - 2];
+                decode_msg_range_add(&msg, 1, &mut acc);
+                for (j, &a) in acc.iter().enumerate() {
+                    assert_eq!(a, 1.0 + q[j + 1], "range-add decode must match q");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_block_positions_sorted_within_every_block() {
+    for &(block, kb) in &[(7usize, 3usize), (16, 2), (32, 8)] {
+        let n = 129;
+        let u = hostile_values(n, 77);
+        let comp = SparseBlock::new(block, kb);
+        let mut q = vec![0.0f32; n];
+        let msg = comp.compress_into(&u, &mut q, &mut seeded_rng(6, 6));
+        let p = msg.codes.as_ref().expect("sparse-block frames carry codes");
+        let codes = pack::unpack(p);
+        let nblocks = n.div_ceil(block);
+        assert_eq!(msg.scales.len(), nblocks);
+        let mut it = codes.iter();
+        for bi in 0..nblocks {
+            let len_b = block.min(n - bi * block);
+            let kk = kb.min(len_b);
+            let mut prev: i64 = -1;
+            for _ in 0..kk {
+                let c = *it.next().expect("code count == sum of per-block keeps");
+                let pos = (c >> 1) as i64;
+                assert!(pos > prev, "block {bi}: positions must be strictly increasing");
+                assert!((pos as usize) < len_b, "block {bi}: position out of block");
+                prev = pos;
+            }
+        }
+        assert!(it.next().is_none(), "no trailing codes");
+    }
+}
+
+/// Error feedback composed with a sparse codec stays bounded: the
+/// dropped mass is re-offered every round, and because top-k ships the
+/// largest magnitudes first the residual contracts by at least the
+/// kept-density factor — it cannot grow without bound (the Assumption 2
+/// δ-contraction argument, measured).
+#[test]
+fn ef_residual_stays_bounded_under_repeated_sparse_compression() {
+    let n = 256;
+    let dir: Vec<f32> = (0..n).map(|i| ((i as f32 * 0.7).sin()) / (n as f32).sqrt()).collect();
+    let g_norm = dir.iter().map(|v| v * v).sum::<f32>().sqrt();
+
+    // TopK at 5% kept: steady-state ||e|| <= sqrt(1-d)/(1-sqrt(1-d)) ||g||
+    // ~ 38.5 ||g|| for d = 0.05; assert a ceiling above it.
+    let comp = TopK::new(500);
+    let mut ef = ErrorFeedback::new(n, true);
+    let mut rng = seeded_rng(11, 0);
+    let mut peak = 0.0f32;
+    for _ in 0..500 {
+        let _ = ef.compress(&dir, &comp, &mut rng);
+        peak = peak.max(ef.residual_norm());
+    }
+    let bound = 3.0 / 0.05 * g_norm;
+    assert!(
+        peak <= bound,
+        "topk EF residual grew past the contraction bound: peak {peak} > {bound}"
+    );
+
+    // SparseBlock 4-of-32: weaker per-round contraction (kept values
+    // are sign*scale, not verbatim) but still a contraction.
+    let comp = SparseBlock::new(32, 4);
+    let mut ef = ErrorFeedback::new(n, true);
+    let mut peak = 0.0f32;
+    for _ in 0..500 {
+        let _ = ef.compress(&dir, &comp, &mut rng);
+        peak = peak.max(ef.residual_norm());
+    }
+    assert!(
+        peak <= 100.0 * g_norm,
+        "sparse-block EF residual grew without bound: peak {peak}"
+    );
+
+    // And on the *sparse* gradient shape the codecs are for: a vector
+    // that is zero outside one live slice. The residual can never
+    // exceed the un-shipped fraction of what was ever offered.
+    let mut sparse_dir = vec![0.0f32; n];
+    for (i, v) in sparse_dir.iter_mut().enumerate().take(32) {
+        *v = ((i as f32) * 0.3).cos() * 0.1;
+    }
+    let comp = TopK::new(1250); // 12.5% of n = 32 coords = the live slice
+    let mut ef = ErrorFeedback::new(n, true);
+    for _ in 0..50 {
+        let (_, q) = ef.compress_q(&sparse_dir, &comp, &mut rng);
+        // everything shipped lands inside the live slice
+        assert!(q[32..].iter().all(|&v| v == 0.0), "shipped mass leaked outside the live slice");
+    }
+    // k (= 32) covers the live slice, so the residual drains to ~0
+    assert!(
+        ef.residual_norm() <= 1e-6,
+        "top-k covering the live slice must drain the residual, got {}",
+        ef.residual_norm()
+    );
+}

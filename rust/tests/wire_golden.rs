@@ -17,8 +17,8 @@
 
 use qadam::ps::protocol::{tag, ToServer, ToWorker, WIRE_VERSION};
 use qadam::quant::{
-    decode_msg, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd, TernGrad, WQuant,
-    WireMsg,
+    decode_msg, seeded_rng, Blockwise, Compressor, Identity, LogQuant, Qsgd, SparseBlock,
+    TernGrad, TopK, WQuant, WireMsg,
 };
 
 fn hex(bytes: &[u8]) -> String {
@@ -138,6 +138,72 @@ fn fixtures() -> Vec<Fixture> {
             )
             .into(),
             wire_bytes: 14 + 8 + 1,
+        },
+        // The sparse family is rng-free by construction (magnitude
+        // selection + verbatim values), so any input pins it.
+        Fixture {
+            // density 0.5 on n=4 keeps k=2; 2 indices at 2 bits would
+            // not undercut a 4-bit bitmap, so the size rule picks the
+            // bitmap encoding (bits=1, one lane per coordinate).
+            name: "topk d=0.5 (bitmap mode)",
+            comp: Box::new(TopK::new(5000)),
+            u: vec![1.0, -3.0, 0.5, 2.0],
+            q: vec![0.0, -3.0, 0.0, 2.0],
+            hex: concat!(
+                "0601",             // codec=6 bits=1 (bitmap)
+                "02000000",         // param = k = 2
+                "04000000",         // n=4
+                "00000000",         // nscales=0 (values ship verbatim)
+                "01000000",         // nwords=1
+                "02000000",         // nraw = k = 2
+                "0a00000000000000", // bitmap 0b1010: coords {1, 3} kept
+                "000040c0",         // kept value -3.0 (ascending index)
+                "00000040",         // kept value 2.0
+            )
+            .into(),
+            wire_bytes: 14 + 1 + 8, // header + bitmap byte + 2 raw f32
+        },
+        Fixture {
+            // density 0.125 on n=8 keeps k=1; one 3-bit index beats an
+            // 8-bit bitmap, so the size rule picks the index list.
+            name: "topk d=0.125 (index mode)",
+            comp: Box::new(TopK::new(1250)),
+            u: vec![0.0, 0.0, 0.0, 0.0, 0.0, -4.0, 0.0, 0.0],
+            q: vec![0.0, 0.0, 0.0, 0.0, 0.0, -4.0, 0.0, 0.0],
+            hex: concat!(
+                "0603",             // codec=6 bits=3 (index width for n=8)
+                "01000000",         // param = k = 1
+                "08000000",         // n=8
+                "00000000",         // nscales=0
+                "01000000",         // nwords=1
+                "01000000",         // nraw = k = 1
+                "0500000000000000", // sorted indices [5] @3b
+                "000080c0",         // kept value -4.0
+            )
+            .into(),
+            wire_bytes: 14 + 1 + 4, // header + ceil(1*3/8) + 1 raw f32
+        },
+        Fixture {
+            // 1-of-2 blockwise top-k: per block, the kept position and
+            // sign pack into (pos<<1)|sign codes, the magnitude is the
+            // per-block scale (mean |kept|).
+            name: "sparse-block 1-of-2",
+            comp: Box::new(SparseBlock::new(2, 1)),
+            u: vec![1.0, -3.0, 0.5, 0.5],
+            q: vec![0.0, -3.0, 0.5, 0.0],
+            hex: concat!(
+                "0702",             // codec=7 bits=2 (1 pos bit + 1 sign bit)
+                "02000100",         // param = block=2 | kb=1 << 16
+                "04000000",         // n=4
+                "02000000",         // nscales = 2 blocks
+                "01000000",         // nwords=1
+                "00000000",         // nraw=0
+                "00004040",         // block 0 scale 3.0
+                "0000003f",         // block 1 scale 0.5
+                "0600000000000000", // codes [pos1|neg, pos0|pos] @2b
+            )
+            .into(),
+            wire_bytes: 14 + 8 + 1, // header + 2 scales + ceil(2*2/8)
         },
         Fixture {
             name: "qsgd L=4",
@@ -273,6 +339,19 @@ fn frame_tag_registry_is_pinned() {
     assert_eq!(tag::TO_WORKER_WEIGHTS_DELTA_PARTS, 3, "WeightsDeltaParts tag moved — {BUMP}");
     assert_eq!(tag::TO_SERVER_DELTA, 0, "Delta tag moved — {BUMP}");
     assert_eq!(tag::TO_SERVER_DELTA_PARTS, 1, "DeltaParts tag moved — {BUMP}");
+    // The sparse codec ids ride the existing frame kinds as WireMsg
+    // byte 0 — pinned like the frame tags, with the registry constant
+    // checked against a real encode.
+    assert_eq!(tag::CODEC_TOPK, 6, "TopK codec id moved — {BUMP}");
+    assert_eq!(tag::CODEC_SPARSE_BLOCK, 7, "SparseBlock codec id moved — {BUMP}");
+    assert_eq!(
+        compress(&TopK::new(5000), &[1.0, -3.0, 0.5, 2.0]).1.to_bytes()[0],
+        tag::CODEC_TOPK
+    );
+    assert_eq!(
+        compress(&SparseBlock::new(2, 1), &[1.0, -3.0, 0.5, 0.5]).1.to_bytes()[0],
+        tag::CODEC_SPARSE_BLOCK
+    );
 
     let msg = logquant_fixture_msg;
     assert_eq!(ToWorker::Shutdown.to_bytes()[0], tag::TO_WORKER_SHUTDOWN);

@@ -57,6 +57,16 @@ cargo test -q --test wire_golden
 step "golden wire fixtures (--release)"
 cargo test -q --release --test wire_golden
 
+# The sparse-codec conservation wall runs in both builds for the same
+# reason: the per-coordinate `q + e == u` properties are bit-exact, so
+# an optimization-dependent float divergence in the top-k selection or
+# scale math would surface as a release-only failure here.
+step "sparse codec conservation suite (debug)"
+cargo test -q --test sparse_codec
+
+step "sparse codec conservation suite (--release)"
+cargo test -q --release --test sparse_codec
+
 # Smoke-run the examples so example rot fails CI, not a user's first
 # ten minutes. fedlearn_edge needs no artifacts (sim problem over real
 # TCP, lossy chaos plan on); quickstart needs the PJRT artifacts and is
@@ -69,6 +79,17 @@ cargo run --release --example fedlearn_edge -- --devices 2 --steps 40 --dim 512
 # example itself fails past a 3x spread).
 step "example smoke: federated_cohort (sampled cohorts, flat cost)"
 cargo run --release --example federated_cohort
+
+# The MoE sparse-codec walkthrough at a tiny size: sparse policies on
+# both directions end to end, with the example's own assertions (sparse
+# runs train; topk undercuts dense bytes in both directions at equal
+# rounds; adaptive densities stay in band).
+# (expert-dim stays >= 128 here: below that, the per-part codec
+# headers dominate the sparse payloads and the example's
+# bytes-undercut assertion is no longer the regime it documents.)
+step "example smoke: moe_sparse (sparse codecs + EF, tiny MoE)"
+cargo run --release --example moe_sparse -- --experts 4 --expert-dim 128 \
+    --rounds 20 --workers 2
 
 # One-round smoke of the codec-policy sweep: catches bench rot and the
 # adaptive plumbing (parts frames end to end) without paying for the
@@ -103,6 +124,16 @@ target/release/qadam bench-diff --baseline BENCH_quant_micro.json \
 target/release/qadam bench-diff --baseline BENCH_worker_step.json \
     --fresh /tmp/BENCH_worker_step_smoke.json
 
+# Equal-budget sparse-vs-dense sweep, smoke-sized: the MoE workload +
+# sparse policy rows end to end, the JSON emitter, and the bench-diff
+# math over its entries (self-compare must hold at 0% diff).
+step "bench smoke: sparse_sweep (2 rounds) + bench-diff self-compare"
+cargo bench --bench sparse_sweep -- --rounds 2 --experts 4 --expert-dim 64 \
+    --workers 2 --json /tmp/BENCH_sparse_sweep_smoke.json
+grep -q '"bench": "sparse_sweep"' /tmp/BENCH_sparse_sweep_smoke.json
+target/release/qadam bench-diff --baseline /tmp/BENCH_sparse_sweep_smoke.json \
+    --fresh /tmp/BENCH_sparse_sweep_smoke.json
+
 # Binary-compatibility probe: `qadam info` must print its capability
 # JSON (wire version, frame tags, codecs, shard conventions, invariant
 # registry) without needing artifacts.
@@ -114,6 +145,10 @@ echo "$INFO_JSON" | grep -q '"invariant_registry"'
 echo "$INFO_JSON" | grep -q '"obs"'
 echo "$INFO_JSON" | grep -q '"trace_schema_version": 1'
 echo "$INFO_JSON" | grep -q 'qadam_rounds_total'
+# the sparse codec family: ids in the frame-tag registry, names in the
+# codec list
+echo "$INFO_JSON" | grep -q '"codec_ids"'
+echo "$INFO_JSON" | grep -q '"sparse_block"'
 
 # The README operator runbook, executed as written: two shard servers
 # (one listener each, base port + shard id), two workers fanning their
